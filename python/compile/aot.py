@@ -1,0 +1,115 @@
+"""AOT lowering: L2 model graphs -> HLO *text* artifacts + manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: the image's
+xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+Emits one ``<name>.hlo.txt`` per (variant, n, s) bucket plus
+``manifest.txt`` with one ``key=value ...`` line per artifact (hand-rolled
+format so the Rust side needs no JSON dependency).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The artifact buckets the coordinator serves. s = 16 n (the paper's
+# default). R/H match the Rust-side defaults.
+SPAR_BUCKETS = [32, 64, 128]
+EGW_BUCKETS = [32, 64]
+COSTS = ["l2", "l1"]
+R_ITERS = 20
+H_ITERS = 50
+EPS = 0.01
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spar_gw(n: int, s: int, cost: str, reg: str):
+    fn = model.make_spar_gw(n, s, cost=cost, reg=reg,
+                            r_iters=R_ITERS, h_iters=H_ITERS, eps=EPS)
+    f32 = jnp.float32
+    i32 = jnp.int32
+    specs = (
+        jax.ShapeDtypeStruct((n, n), f32),  # cx
+        jax.ShapeDtypeStruct((n, n), f32),  # cy
+        jax.ShapeDtypeStruct((n,), f32),    # a
+        jax.ShapeDtypeStruct((n,), f32),    # b
+        jax.ShapeDtypeStruct((s,), i32),    # idx_i
+        jax.ShapeDtypeStruct((s,), i32),    # idx_j
+        jax.ShapeDtypeStruct((s,), f32),    # inv_w
+    )
+    return jax.jit(fn).lower(*specs)
+
+
+def lower_egw(n: int, cost: str, reg: str):
+    fn = model.make_egw(n, cost=cost, reg=reg,
+                        r_iters=R_ITERS, h_iters=H_ITERS, eps=EPS)
+    f32 = jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((n, n), f32),
+        jax.ShapeDtypeStruct((n, n), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+    )
+    return jax.jit(fn).lower(*specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the smallest bucket (CI smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    spar_buckets = SPAR_BUCKETS[:1] if args.quick else SPAR_BUCKETS
+    egw_buckets = EGW_BUCKETS[:1] if args.quick else EGW_BUCKETS
+
+    for n in spar_buckets:
+        s = 16 * n
+        for cost in COSTS:
+            name = f"spar_gw_{cost}_n{n}"
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            text = to_hlo_text(lower_spar_gw(n, s, cost, "prox"))
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(
+                f"kind=spar_gw cost={cost} reg=prox n={n} s={s} "
+                f"R={R_ITERS} H={H_ITERS} eps={EPS} file={name}.hlo.txt"
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    for n in egw_buckets:
+        name = f"egw_l2_n{n}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lower_egw(n, "l2", "ent"))
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            f"kind=egw cost=l2 reg=ent n={n} s=0 "
+            f"R={R_ITERS} H={H_ITERS} eps={EPS} file={name}.hlo.txt"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

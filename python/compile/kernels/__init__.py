@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels for the Spar-GW stack.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode lowers them to plain HLO ops that the
+Rust runtime's CPU client can run. TPU performance is *estimated* from the
+BlockSpec working sets (DESIGN.md §Hardware-Adaptation), not measured.
+"""
+
+from .spar_cost import cost_block, spar_cost, spar_cost_from_block
+from .dense_cost import dense_cost_decomposable
+from .matmul import matmul
+from .sinkhorn_step import sinkhorn_step
+
+__all__ = [
+    "cost_block",
+    "spar_cost",
+    "spar_cost_from_block",
+    "dense_cost_decomposable",
+    "matmul",
+    "sinkhorn_step",
+]

@@ -1,0 +1,54 @@
+"""Fused dense Sinkhorn sweep as a Pallas kernel: one u/v update
+
+    u = a ⊘ (K v),   v = b ⊘ (Kᵀ u)
+
+with 0/0 := 0 (padded coordinates). The two matvecs dominate; each grid
+step holds a row-block of K plus the full u/v vectors in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _u_kernel(k_ref, v_ref, a_ref, u_ref):
+    kv = k_ref[...] @ v_ref[...]
+    a = a_ref[...]
+    u_ref[...] = jnp.where(a > 0.0, a / jnp.maximum(kv, 1e-300), 0.0)
+
+
+def _divisor_block(n: int, target: int = 256) -> int:
+    if n <= target:
+        return n
+    for b in range(target, 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def _matvec_scale(k, v, a):
+    """u = a / (K v) with zero-safe division, tiled over rows of K."""
+    m, n = k.shape
+    block = _divisor_block(m)
+    return pl.pallas_call(
+        _u_kernel,
+        grid=(m // block,),
+        in_specs=[
+            pl.BlockSpec((block, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), k.dtype),
+        interpret=True,
+    )(k, v, a)
+
+
+@jax.jit
+def sinkhorn_step(k, a, b, v):
+    """One full Sinkhorn sweep; returns (u, v_next)."""
+    u = _matvec_scale(k, v, a)
+    v_next = _matvec_scale(k.T, u, b)
+    return u, v_next

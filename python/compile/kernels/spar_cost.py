@@ -1,0 +1,133 @@
+"""The O(s²) sparse-cost Pallas kernel — Algorithm 2, step 6a.
+
+Given the gathered relation blocks ``cxg[l, l'] = Cx[i_l, i_{l'}]`` and
+``cyg[l, l'] = Cy[j_l, j_{l'}]`` and sparse plan values ``t``, compute
+
+    c[l] = Σ_{l'} L(cxg[l, l'], cyg[l, l']) · t[l']
+
+for an arbitrary elementwise ground cost L. This is the paper's key
+generality claim: for indecomposable costs (ℓ1) no matmul factorization
+exists, so the kernel is a tiled elementwise-transform + row reduction.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles rows in
+blocks of ``block_rows``; each grid step holds a ``block_rows × s`` tile
+of cxg and cyg plus the full ``t`` vector in VMEM
+(2·block_rows·s·4 B + s·4 B). With block_rows = 256 and s = 4096 that is
+≈8.4 MB — inside the 16 MB VMEM budget. ℓ1/KL run on the VPU; for ℓ2 the
+decomposed matmul path (``dense_cost.py``) targets the MXU instead.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cost_transform(x, y, cost: str):
+    if cost == "l1":
+        return jnp.abs(x - y)
+    if cost == "l2":
+        d = x - y
+        return d * d
+    if cost == "kl":
+        safe_x = jnp.maximum(x, 1e-30)
+        safe_y = jnp.maximum(y, 1e-30)
+        return jnp.where(x > 0.0, x * jnp.log(safe_x / safe_y) - x + y, y)
+    raise ValueError(f"unknown cost {cost!r}")
+
+
+def _kernel(cxg_ref, cyg_ref, t_ref, o_ref, *, cost: str):
+    x = cxg_ref[...]
+    y = cyg_ref[...]
+    t = t_ref[...]
+    l_vals = _cost_transform(x, y, cost)
+    o_ref[...] = l_vals @ t
+
+
+def _pick_block(s: int, target: int = 256) -> int:
+    """Largest divisor of s that is ≤ target (keeps the grid exact)."""
+    if s <= target:
+        return s
+    for b in range(target, 0, -1):
+        if s % b == 0:
+            return b
+    return s
+
+
+@functools.partial(jax.jit, static_argnames=("cost", "block_rows"))
+def cost_block(cxg, cyg, *, cost: str = "l2", block_rows: int = 0):
+    """Precompute the elementwise cost block ``lg[l, l'] = L(cxg, cyg)``.
+
+    §Perf L2 iteration: the gathered relations are loop-invariant, so the
+    transform is hoisted out of the R outer iterations; each iteration
+    then runs only the matvec (``spar_cost_from_block``). Mirrors the L3
+    SparseCostContext optimization (EXPERIMENTS.md §Perf).
+    """
+    s = cxg.shape[0]
+    assert cxg.shape == (s, s) and cyg.shape == (s, s)
+    block = block_rows or _pick_block(s)
+    assert s % block == 0, f"block {block} must divide s {s}"
+
+    def kernel(cxg_ref, cyg_ref, o_ref):
+        o_ref[...] = _cost_transform(cxg_ref[...], cyg_ref[...], cost)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(s // block,),
+        in_specs=[
+            pl.BlockSpec((block, s), lambda i: (i, 0)),
+            pl.BlockSpec((block, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, s), cxg.dtype),
+        interpret=True,
+    )(cxg, cyg)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def spar_cost_from_block(lg, t, *, block_rows: int = 0):
+    """Per-iteration sparse cost product over a precomputed block:
+    ``c[l] = Σ_{l'} lg[l, l'] t[l']`` — a tiled matvec (MXU-friendly)."""
+    s = t.shape[0]
+    assert lg.shape == (s, s)
+    block = block_rows or _pick_block(s)
+    assert s % block == 0
+
+    def kernel(lg_ref, t_ref, o_ref):
+        o_ref[...] = lg_ref[...] @ t_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(s // block,),
+        in_specs=[
+            pl.BlockSpec((block, s), lambda i: (i, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((s,), lg.dtype),
+        interpret=True,
+    )(lg, t)
+
+
+@functools.partial(jax.jit, static_argnames=("cost", "block_rows"))
+def spar_cost(cxg, cyg, t, *, cost: str = "l2", block_rows: int = 0):
+    """Tiled sparse-cost product (fused single-pass form).
+    cxg, cyg: (s, s); t: (s,) → (s,)."""
+    s = t.shape[0]
+    assert cxg.shape == (s, s) and cyg.shape == (s, s)
+    block = block_rows or _pick_block(s)
+    assert s % block == 0, f"block {block} must divide s {s}"
+    grid = (s // block,)
+    return pl.pallas_call(
+        functools.partial(_kernel, cost=cost),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, s), lambda i: (i, 0)),
+            pl.BlockSpec((block, s), lambda i: (i, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((s,), cxg.dtype),
+        interpret=True,
+    )(cxg, cyg, t)

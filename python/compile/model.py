@@ -1,0 +1,141 @@
+"""Layer-2 JAX model: the Spar-GW iteration (Algorithm 2) and the dense
+entropic-GW iteration (Algorithm 1) as fixed-shape computations, ready for
+AOT lowering to HLO text (see aot.py).
+
+Semantics match the Rust native solvers bit-for-bit in structure:
+* sparse cost via the Pallas kernel ``spar_cost`` on gathered s x s blocks;
+* row/col-min stabilization of the kernel exponent (balanced Sinkhorn is
+  invariant to rank-one cost shifts);
+* proximal (KL) or entropic kernels;
+* fixed R outer / H inner iterations (no early stopping: shapes static).
+
+Inputs of the spar_gw model (all static shapes for a given (n, s) bucket):
+    cx (n, n) f32, cy (n, n) f32 : relation matrices (zero-padded)
+    a (n,), b (n,) f32           : marginals (zero-padded)
+    idx_i (s,), idx_j (s,) i32   : the sampled index set S
+    inv_w (s,) f32               : importance weights 1 / min(1, s p_ij)
+Outputs: (t_vals (s,), gw_hat scalar).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cost_block, dense_cost_decomposable, spar_cost_from_block
+from .kernels.ref import cost_transform_ref
+
+
+def _segment_min(vals, segment_ids, num_segments):
+    """Per-segment minimum with +inf identity."""
+    return jax.ops.segment_min(vals, segment_ids, num_segments=num_segments)
+
+
+def _sparse_sinkhorn(k_vals, idx_i, idx_j, a, b, n, h_iters):
+    """H sweeps of sparse Sinkhorn over the COO pattern (O(H s))."""
+
+    def sweep(_, uv):
+        u, v = uv
+        kv = jax.ops.segment_sum(
+            k_vals * v[idx_j], idx_i, num_segments=n
+        )
+        u = jnp.where((a > 0.0) & (kv > 0.0), a / jnp.maximum(kv, 1e-300), 0.0)
+        ktu = jax.ops.segment_sum(
+            k_vals * u[idx_i], idx_j, num_segments=n
+        )
+        v = jnp.where((b > 0.0) & (ktu > 0.0), b / jnp.maximum(ktu, 1e-300), 0.0)
+        return (u, v)
+
+    u0 = jnp.ones_like(a)
+    v0 = jnp.ones_like(b)
+    u, v = jax.lax.fori_loop(0, h_iters, sweep, (u0, v0))
+    return k_vals * u[idx_i] * v[idx_j]
+
+
+def spar_gw_fn(cx, cy, a, b, idx_i, idx_j, inv_w, *, cost: str, reg: str,
+               r_iters: int, h_iters: int, eps: float):
+    """Algorithm 2 as a single jittable function."""
+    n = a.shape[0]
+    s = idx_i.shape[0]
+    # Gather the s x s relation blocks once (O(s^2) memory, static shape)
+    # and apply the elementwise ground cost ONCE — the blocks are
+    # loop-invariant, so hoisting the transform out of the R outer
+    # iterations leaves only a matvec per iteration (§Perf, L2).
+    cxg = cx[idx_i][:, idx_i]
+    cyg = cy[idx_j][:, idx_j]
+    lg = cost_block(cxg, cyg, cost=cost)
+    t0 = a[idx_i] * b[idx_j]
+
+    def outer(_, t_vals):
+        c_vals = spar_cost_from_block(lg, t_vals)
+        # Stabilization: subtract per-row/col pattern minima.
+        row_min = _segment_min(c_vals, idx_i, n)
+        c1 = c_vals - row_min[idx_i]
+        col_min = _segment_min(c1, idx_j, n)
+        c_red = c1 - col_min[idx_j]
+        e = jnp.exp(-c_red / eps)
+        if reg == "prox":
+            k_vals = e * t_vals * inv_w
+        else:  # entropic
+            k_vals = e * inv_w
+        return _sparse_sinkhorn(k_vals, idx_i, idx_j, a, b, n, h_iters)
+
+    t_final = jax.lax.fori_loop(0, r_iters, outer, t0)
+    c_final = spar_cost_from_block(lg, t_final)
+    gw_hat = jnp.dot(c_final, t_final)
+    return t_final, gw_hat
+
+
+def egw_fn(cx, cy, a, b, *, cost: str, reg: str, r_iters: int, h_iters: int,
+           eps: float):
+    """Algorithm 1 (dense) for decomposable costs, via the Pallas matmuls."""
+    n = a.shape[0]
+    t0 = jnp.outer(a, b)
+
+    def sinkhorn(k, a, b):
+        def sweep(_, uv):
+            u, v = uv
+            kv = k @ v
+            u = jnp.where((a > 0.0) & (kv > 0.0), a / jnp.maximum(kv, 1e-300), 0.0)
+            ktu = k.T @ u
+            v = jnp.where((b > 0.0) & (ktu > 0.0), b / jnp.maximum(ktu, 1e-300), 0.0)
+            return (u, v)
+
+        u, v = jax.lax.fori_loop(0, h_iters, sweep,
+                                 (jnp.ones_like(a), jnp.ones_like(b)))
+        return k * u[:, None] * v[None, :]
+
+    def outer(_, t):
+        if cost in ("l2", "kl"):
+            c = dense_cost_decomposable(cx, cy, t, cost=cost)
+        else:
+            lv = cost_transform_ref(cx[:, None, :, None], cy[None, :, None, :], cost)
+            c = jnp.einsum("ijkl,kl->ij", lv, t)
+        # Row/col-min stabilization.
+        c = c - jnp.min(c, axis=1, keepdims=True)
+        c = c - jnp.min(c, axis=0, keepdims=True)
+        e = jnp.exp(-c / eps)
+        k = e * t if reg == "prox" else e
+        return sinkhorn(k, a, b)
+
+    t_final = jax.lax.fori_loop(0, r_iters, outer, t0)
+    if cost in ("l2", "kl"):
+        c_final = dense_cost_decomposable(cx, cy, t_final, cost=cost)
+    else:
+        lv = cost_transform_ref(cx[:, None, :, None], cy[None, :, None, :], cost)
+        c_final = jnp.einsum("ijkl,kl->ij", lv, t_final)
+    gw = jnp.sum(c_final * t_final)
+    return t_final, gw
+
+
+def make_spar_gw(n: int, s: int, *, cost: str = "l2", reg: str = "prox",
+                 r_iters: int = 20, h_iters: int = 50, eps: float = 0.01):
+    """Bind the static parameters; returns a jittable f(cx,cy,a,b,ii,jj,w)."""
+    return functools.partial(spar_gw_fn, cost=cost, reg=reg,
+                             r_iters=r_iters, h_iters=h_iters, eps=eps)
+
+
+def make_egw(n: int, *, cost: str = "l2", reg: str = "ent",
+             r_iters: int = 20, h_iters: int = 50, eps: float = 0.01):
+    return functools.partial(egw_fn, cost=cost, reg=reg,
+                             r_iters=r_iters, h_iters=h_iters, eps=eps)

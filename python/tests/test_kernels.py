@@ -1,0 +1,151 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles, with
+hypothesis sweeps over shapes, dtypes-compatible ranges, and costs."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import spar_cost, matmul, dense_cost_decomposable, sinkhorn_step
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape, scale=1.0, offset=0.0):
+    return jnp.asarray(offset + scale * RNG.random(shape), dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("cost", ["l1", "l2", "kl"])
+@pytest.mark.parametrize("s", [4, 16, 48])
+def test_spar_cost_matches_ref(cost, s):
+    cxg = rand(s, s, offset=0.1)
+    cyg = rand(s, s, offset=0.1)
+    t = rand(s)
+    got = spar_cost(cxg, cyg, t, cost=cost)
+    want = ref.spar_cost_ref(cxg, cyg, t, cost=cost)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.integers(min_value=1, max_value=40),
+    cost=st.sampled_from(["l1", "l2", "kl"]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_spar_cost_hypothesis(s, cost, seed):
+    rng = np.random.default_rng(seed)
+    cxg = jnp.asarray(0.05 + rng.random((s, s)), dtype=jnp.float32)
+    cyg = jnp.asarray(0.05 + rng.random((s, s)), dtype=jnp.float32)
+    t = jnp.asarray(rng.random(s), dtype=jnp.float32)
+    got = spar_cost(cxg, cyg, t, cost=cost)
+    want = ref.spar_cost_ref(cxg, cyg, t, cost=cost)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(4, 4, 4), (16, 8, 12), (32, 32, 32), (5, 7, 3)])
+def test_matmul_matches_ref(shape):
+    m, k, n = shape
+    a = rand(m, k)
+    b = rand(k, n)
+    np.testing.assert_allclose(matmul(a, b), ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 33), k=st.integers(1, 33), n=st.integers(1, 33),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, k)), dtype=jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype=jnp.float32)
+    np.testing.assert_allclose(matmul(a, b), a @ b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("cost", ["l2", "kl"])
+@pytest.mark.parametrize("n", [4, 12])
+def test_dense_cost_matches_tensor_product(cost, n):
+    cx = rand(n, n, offset=0.1)
+    cy = rand(n, n, offset=0.1)
+    t = rand(n, n)
+    t = t / jnp.sum(t)
+    fast = dense_cost_decomposable(cx, cy, t, cost=cost)
+    slow = ref.tensor_product_ref(cx, cy, t, cost=cost)
+    np.testing.assert_allclose(fast, slow, rtol=1e-4, atol=1e-5)
+
+
+def test_l1_tensor_product_ref_self_consistent():
+    # The generic oracle at T = outer(a, b) reduces to an expectation.
+    n = 6
+    cx = rand(n, n)
+    cy = rand(n, n)
+    a = jnp.ones(n) / n
+    t = jnp.outer(a, a)
+    c = ref.tensor_product_ref(cx, cy, t, cost="l1")
+    # Entry (0,0): mean over (i', j') of |cx[0,i'] - cy[0,j']| / n^2 weights
+    want = jnp.mean(jnp.abs(cx[0][:, None] - cy[0][None, :]))
+    np.testing.assert_allclose(c[0, 0], want, rtol=1e-5)
+
+
+def test_sinkhorn_step_matches_ref():
+    m, n = 12, 8
+    k = rand(m, n, offset=0.05)
+    a = jnp.ones(m) / m
+    b = jnp.ones(n) / n
+    v = rand(n, offset=0.5)
+    u1, v1 = sinkhorn_step(k, a, b, v)
+    u2, v2 = ref.sinkhorn_step_ref(k, a, b, v)
+    np.testing.assert_allclose(u1, u2, rtol=1e-5)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5)
+
+
+def test_sinkhorn_step_zero_mass_rows():
+    # Padded coordinates: a[2] = 0 must give u[2] = 0, no NaN/inf.
+    m, n = 4, 4
+    k = rand(m, n, offset=0.1)
+    a = jnp.asarray([0.5, 0.5, 0.0, 0.0], dtype=jnp.float32)
+    b = jnp.ones(n, dtype=jnp.float32) / n
+    v = jnp.ones(n, dtype=jnp.float32)
+    u1, v1 = sinkhorn_step(k, a, b, v)
+    assert np.isfinite(np.asarray(u1)).all()
+    assert u1[2] == 0.0 and u1[3] == 0.0
+
+
+@pytest.mark.parametrize("cost", ["l1", "l2", "kl"])
+def test_cost_block_plus_matvec_matches_fused(cost):
+    # The hoisted two-kernel form (§Perf L2) must equal the fused kernel.
+    from compile.kernels import cost_block, spar_cost_from_block
+
+    s = 24
+    cxg = rand(s, s, offset=0.1)
+    cyg = rand(s, s, offset=0.1)
+    t = rand(s)
+    lg = cost_block(cxg, cyg, cost=cost)
+    got = spar_cost_from_block(lg, t)
+    want = spar_cost(cxg, cyg, t, cost=cost)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # And the block itself equals the elementwise oracle. KL suffers f32
+    # cancellation when x ~= y, so the absolute floor matters here.
+    np.testing.assert_allclose(
+        lg, ref.cost_transform_ref(cxg, cyg, cost), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s=st.integers(min_value=1, max_value=32),
+    cost=st.sampled_from(["l1", "l2", "kl"]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_cost_block_hypothesis(s, cost, seed):
+    from compile.kernels import cost_block, spar_cost_from_block
+
+    rng = np.random.default_rng(seed)
+    cxg = jnp.asarray(0.05 + rng.random((s, s)), dtype=jnp.float32)
+    cyg = jnp.asarray(0.05 + rng.random((s, s)), dtype=jnp.float32)
+    t = jnp.asarray(rng.random(s), dtype=jnp.float32)
+    lg = cost_block(cxg, cyg, cost=cost)
+    got = spar_cost_from_block(lg, t)
+    want = ref.spar_cost_ref(cxg, cyg, t, cost=cost)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

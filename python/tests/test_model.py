@@ -1,0 +1,129 @@
+"""L2 model correctness: the spar_gw / egw iteration graphs."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_problem(n, seed=0):
+    rng = np.random.default_rng(seed)
+    pts1 = rng.random((n, 2))
+    pts2 = rng.random((n, 2))
+    cx = np.linalg.norm(pts1[:, None] - pts1[None, :], axis=-1)
+    cy = np.linalg.norm(pts2[:, None] - pts2[None, :], axis=-1)
+    a = np.ones(n) / n
+    b = np.ones(n) / n
+    return (jnp.asarray(cx, jnp.float32), jnp.asarray(cy, jnp.float32),
+            jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32))
+
+
+def full_grid_set(n):
+    ii, jj = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    idx_i = jnp.asarray(ii.ravel(), jnp.int32)
+    idx_j = jnp.asarray(jj.ravel(), jnp.int32)
+    inv_w = jnp.ones(n * n, jnp.float32)  # full grid: weights 1
+    return idx_i, idx_j, inv_w
+
+
+@pytest.mark.parametrize("cost", ["l1", "l2"])
+def test_spar_gw_full_grid_matches_dense(cost):
+    """With S = the full grid and unit weights, Algorithm 2 must coincide
+    with the dense proximal iteration."""
+    n = 8
+    cx, cy, a, b = make_problem(n)
+    idx_i, idx_j, inv_w = full_grid_set(n)
+    fn = model.make_spar_gw(n, n * n, cost=cost, reg="prox",
+                            r_iters=8, h_iters=30, eps=0.05)
+    t_vals, gw_sparse = fn(cx, cy, a, b, idx_i, idx_j, inv_w)
+    # Dense reference (same stabilization, same iterations).
+    t = jnp.outer(a, b)
+    for _ in range(8):
+        c = ref.tensor_product_ref(cx, cy, t, cost=cost)
+        c = c - jnp.min(c, axis=1, keepdims=True)
+        c = c - jnp.min(c, axis=0, keepdims=True)
+        k = jnp.exp(-c / 0.05) * t
+        u = jnp.ones(n)
+        v = jnp.ones(n)
+        for _ in range(30):
+            u = a / jnp.maximum(k @ v, 1e-300)
+            v = b / jnp.maximum(k.T @ u, 1e-300)
+        t = k * u[:, None] * v[None, :]
+    gw_dense = jnp.sum(ref.tensor_product_ref(cx, cy, t, cost=cost) * t)
+    np.testing.assert_allclose(gw_sparse, gw_dense, rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(t_vals).reshape(n, n), t, rtol=1e-3, atol=1e-6
+    )
+
+
+def test_spar_gw_identical_spaces_near_zero():
+    n = 12
+    cx, cy, a, b = make_problem(n)
+    idx_i, idx_j, inv_w = full_grid_set(n)
+    fn = model.make_spar_gw(n, n * n, cost="l2", reg="prox",
+                            r_iters=15, h_iters=40, eps=0.01)
+    _, gw = fn(cx, cx, a, a, idx_i, idx_j, inv_w)
+    assert float(gw) < 1e-2
+
+
+def test_spar_gw_subsampled_support():
+    """Sparse run with a random subset: finite, non-negative, plan on S."""
+    n = 16
+    s = 8 * n
+    cx, cy, a, b = make_problem(n, seed=3)
+    rng = np.random.default_rng(4)
+    idx_i = jnp.asarray(rng.integers(0, n, s), jnp.int32)
+    idx_j = jnp.asarray(rng.integers(0, n, s), jnp.int32)
+    p = 1.0 / (n * n)
+    inv_w = jnp.full((s,), 1.0 / min(1.0, s * p), jnp.float32)
+    fn = model.make_spar_gw(n, s, cost="l1", reg="prox",
+                            r_iters=10, h_iters=30, eps=0.05)
+    t_vals, gw = fn(cx, cy, a, b, idx_i, idx_j, inv_w)
+    assert np.isfinite(np.asarray(t_vals)).all()
+    assert (np.asarray(t_vals) >= 0).all()
+    assert np.isfinite(float(gw)) and float(gw) >= -1e-9
+
+
+def test_egw_model_runs_and_projects():
+    n = 10
+    cx, cy, a, b = make_problem(n, seed=5)
+    fn = model.make_egw(n, cost="l2", reg="ent", r_iters=10, h_iters=60, eps=0.05)
+    t, gw = fn(cx, cy, a, b)
+    t = np.asarray(t)
+    np.testing.assert_allclose(t.sum(axis=1), np.asarray(a), atol=1e-3)
+    np.testing.assert_allclose(t.sum(axis=0), np.asarray(b), atol=1e-3)
+    assert float(gw) >= -1e-9
+
+
+def test_padded_bucket_equivalence():
+    """Zero-padding (the coordinator's bucket trick) must not change the
+    estimate: solve at n and at n_pad > n with padded inputs."""
+    n, n_pad = 10, 16
+    cx, cy, a, b = make_problem(n, seed=6)
+    # Build a sampled set within the real n x n block.
+    rng = np.random.default_rng(7)
+    s = 6 * n
+    idx_i = rng.integers(0, n, s)
+    idx_j = rng.integers(0, n, s)
+    keys = sorted(set(zip(idx_i.tolist(), idx_j.tolist())))
+    idx_i = np.array([k[0] for k in keys], np.int32)
+    idx_j = np.array([k[1] for k in keys], np.int32)
+    s_eff = len(keys)
+    inv_w = np.ones(s_eff, np.float32)
+
+    fn_small = model.make_spar_gw(n, s_eff, cost="l2", reg="prox",
+                                  r_iters=8, h_iters=30, eps=0.05)
+    _, gw_small = fn_small(cx, cy, a, b,
+                           jnp.asarray(idx_i), jnp.asarray(idx_j),
+                           jnp.asarray(inv_w))
+
+    pad = lambda m: jnp.pad(m, ((0, n_pad - n), (0, n_pad - n)))
+    padv = lambda v: jnp.pad(v, (0, n_pad - n))
+    fn_big = model.make_spar_gw(n_pad, s_eff, cost="l2", reg="prox",
+                                r_iters=8, h_iters=30, eps=0.05)
+    _, gw_big = fn_big(pad(cx), pad(cy), padv(a), padv(b),
+                       jnp.asarray(idx_i), jnp.asarray(idx_j),
+                       jnp.asarray(inv_w))
+    np.testing.assert_allclose(float(gw_small), float(gw_big), rtol=1e-5)

@@ -1,0 +1,128 @@
+//! **Figure 3** — UGW estimation error (vs the PGA-UGW benchmark) and
+//! CPU time on Moon and Graph, ℓ1 and ℓ2 costs, unit total masses,
+//! λ = 1.
+//!
+//! Methods: Naive (T = abᵀ/√(m(a)m(b))), EUGW, PGA-UGW, SaGroW (adapted
+//! to unbalanced problems), Spar-UGW.
+//!
+//! Output: stdout series + `results/fig3_<ds>_<cost>.csv`.
+
+use spargw::bench::workloads::{n_sweep, reps, Workload};
+use spargw::bench::{repeat_timed, select_epsilon, EPS_GRID};
+use spargw::gw::sagrow::{matched_s_prime, sagrow_ugw};
+use spargw::gw::spar_ugw::{spar_ugw, SparUgwConfig};
+use spargw::gw::ugw::{eugw, naive_ugw, pga_ugw, UgwConfig};
+use spargw::gw::{GroundCost, GwProblem};
+use spargw::rng::{derive_seed, Xoshiro256};
+use spargw::util::csv::CsvWriter;
+
+const LAMBDA: f64 = 1.0;
+
+#[derive(Clone, Copy, PartialEq)]
+enum UMethod {
+    Naive,
+    Eugw,
+    PgaUgw,
+    SagrowU,
+    SparUgw,
+}
+
+impl UMethod {
+    fn name(self) -> &'static str {
+        match self {
+            UMethod::Naive => "Naive",
+            UMethod::Eugw => "EUGW",
+            UMethod::PgaUgw => "PGA-UGW",
+            UMethod::SagrowU => "SaGroW",
+            UMethod::SparUgw => "Spar-UGW",
+        }
+    }
+
+    fn is_sampled(self) -> bool {
+        matches!(self, UMethod::SagrowU | UMethod::SparUgw)
+    }
+
+    fn run(self, p: &GwProblem, cost: GroundCost, eps: f64, outer: usize, seed: u64) -> f64 {
+        let cfg =
+            UgwConfig { lambda: LAMBDA, epsilon: eps, outer_iters: outer, ..Default::default() };
+        let n = p.n().max(p.m());
+        let mut rng = Xoshiro256::new(seed);
+        match self {
+            UMethod::Naive => naive_ugw(p, cost, LAMBDA),
+            UMethod::Eugw => eugw(p, cost, &cfg).value,
+            UMethod::PgaUgw => pga_ugw(p, cost, &cfg).value,
+            UMethod::SagrowU => {
+                let sp = matched_s_prime(16 * n, p.m(), p.n());
+                sagrow_ugw(p, cost, sp, &cfg, &mut rng).value
+            }
+            UMethod::SparUgw => {
+                let scfg = SparUgwConfig { ugw: cfg, sample_size: 16 * n, shrink: 0.0 };
+                spar_ugw(p, cost, &scfg, &mut rng).value
+            }
+        }
+    }
+}
+
+fn main() {
+    let ns = n_sweep();
+    let reps = reps();
+    let methods =
+        [UMethod::Naive, UMethod::Eugw, UMethod::PgaUgw, UMethod::SagrowU, UMethod::SparUgw];
+    println!("Figure 3: UGW error + CPU time (λ = {LAMBDA}, reps = {reps}, n in {ns:?})");
+
+    for workload in [Workload::Moon, Workload::Graph] {
+        for cost in [GroundCost::L1, GroundCost::L2] {
+            let tag = format!("fig3_{}_{}", workload.name().to_lowercase(), cost.name());
+            let mut csv = CsvWriter::create(
+                format!("results/{tag}.csv"),
+                &["method", "n", "error_mean", "error_sd", "time_mean", "eps"],
+            )
+            .expect("csv");
+            println!("\n== {} / {} ==", workload.name(), cost.name());
+            println!(
+                "{:<9} {:>5} {:>12} {:>12} {:>10} {:>9}",
+                "method", "n", "err_mean", "err_sd", "time[s]", "eps"
+            );
+
+            for (ni, &n) in ns.iter().enumerate() {
+                let mut grng = Xoshiro256::new(derive_seed(0xF163, (ni * 4) as u64));
+                let inst = workload.make(n, &mut grng);
+                let p = inst.problem();
+
+                let benchmark = UMethod::PgaUgw.run(&p, cost, 0.001, 20, 1);
+
+                for &method in &methods {
+                    let n_reps = if method.is_sampled() { reps } else { 1 };
+                    // Cheap pilot (R = 6) for the ε grid, full run after.
+                    let (_, eps, _) = select_epsilon(&EPS_GRID, |e| {
+                        (method.run(&p, cost, e, 6, derive_seed(5, e.to_bits())), 0.0)
+                    });
+                    let stats = repeat_timed(n_reps, |r| {
+                        method.run(&p, cost, eps, 20, derive_seed(13, r as u64))
+                    });
+                    let err = (stats.value_mean - benchmark).abs();
+                    println!(
+                        "{:<9} {:>5} {:>12.4e} {:>12.4e} {:>10.4} {:>9}",
+                        method.name(),
+                        n,
+                        err,
+                        stats.value_sd,
+                        stats.time_mean,
+                        eps
+                    );
+                    csv.row(&[
+                        method.name().into(),
+                        n.to_string(),
+                        format!("{err:.6e}"),
+                        format!("{:.6e}", stats.value_sd),
+                        format!("{:.6e}", stats.time_mean),
+                        eps.to_string(),
+                    ])
+                    .unwrap();
+                }
+            }
+            csv.flush().unwrap();
+            println!("wrote results/{tag}.csv");
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! **Figure 4** — sensitivity of Spar-GW to the subsample size s and the
+//! regularization parameter ε: heat maps of the estimated GW distance
+//! (panel a) and CPU time (panel b) over
+//! `s ∈ {2¹, …, 2⁵}·n × ε ∈ {5⁰, …, 5⁻⁴}` at fixed n = 200,
+//! averaged over ten runs.
+//!
+//! Output: both heat maps on stdout + `results/fig4_<ds>.csv`.
+
+use spargw::bench::workloads::{reps, Workload};
+use spargw::bench::repeat_timed;
+use spargw::gw::spar_gw::{spar_gw, SparGwConfig};
+use spargw::gw::GroundCost;
+use spargw::rng::{derive_seed, Xoshiro256};
+use spargw::util::csv::CsvWriter;
+
+fn main() {
+    let n = 200;
+    let reps = reps().max(5);
+    let s_mults: Vec<usize> = vec![2, 4, 8, 16, 32];
+    let eps_grid: Vec<f64> = (0..5).map(|k| 5f64.powi(-k)).collect();
+    println!("Figure 4: Spar-GW sensitivity (n = {n}, reps = {reps})");
+
+    for workload in [Workload::Moon, Workload::Graph] {
+        let mut grng = Xoshiro256::new(0xF164);
+        let inst = workload.make(n, &mut grng);
+        let p = inst.problem();
+
+        let tag = format!("fig4_{}", workload.name().to_lowercase());
+        let mut csv = CsvWriter::create(
+            format!("results/{tag}.csv"),
+            &["s_mult", "eps", "gw_mean", "gw_sd", "time_mean"],
+        )
+        .expect("csv");
+
+        let mut val_grid = vec![vec![0.0; eps_grid.len()]; s_mults.len()];
+        let mut time_grid = vec![vec![0.0; eps_grid.len()]; s_mults.len()];
+        for (si, &sm) in s_mults.iter().enumerate() {
+            for (ei, &eps) in eps_grid.iter().enumerate() {
+                let cfg = SparGwConfig {
+                    epsilon: eps,
+                    sample_size: sm * n,
+                    ..Default::default()
+                };
+                let stats = repeat_timed(reps, |r| {
+                    let mut rng = Xoshiro256::new(derive_seed(17, (r * 64 + si * 8 + ei) as u64));
+                    spar_gw(&p, GroundCost::L2, &cfg, &mut rng).value
+                });
+                val_grid[si][ei] = stats.value_mean;
+                time_grid[si][ei] = stats.time_mean;
+                csv.row(&[
+                    sm.to_string(),
+                    eps.to_string(),
+                    format!("{:.6e}", stats.value_mean),
+                    format!("{:.6e}", stats.value_sd),
+                    format!("{:.6e}", stats.time_mean),
+                ])
+                .unwrap();
+            }
+        }
+        csv.flush().unwrap();
+
+        for (label, grid) in
+            [("(a) estimated GW", &val_grid), ("(b) CPU time [s]", &time_grid)]
+        {
+            println!("\n== {} — {label} ==", workload.name());
+            print!("{:>8}", "s\\eps");
+            for &eps in &eps_grid {
+                print!(" {eps:>10.4}");
+            }
+            println!();
+            for (si, &sm) in s_mults.iter().enumerate() {
+                print!("{:>7}n", sm);
+                for ei in 0..eps_grid.len() {
+                    print!(" {:>10.3e}", grid[si][ei]);
+                }
+                println!();
+            }
+        }
+        println!("wrote results/{tag}.csv");
+    }
+}

@@ -1,0 +1,130 @@
+//! **§Perf micro-benchmarks** — the hot paths of the L3 coordinator and
+//! the native Spar-GW solver, individually timed so the optimization log
+//! in EXPERIMENTS.md §Perf has stable before/after numbers:
+//!
+//! * alias-table construction + s categorical draws (sampling S);
+//! * the O(s²) sparse cost product `C̃(T̃)` (the paper's bottleneck);
+//! * one sparse Sinkhorn scaling pass (O(Hs));
+//! * dense decomposable vs generic tensor product (the baseline cost);
+//! * end-to-end Spar-GW solve latency.
+//!
+//! Output: stdout rows + `results/perf_micro.csv`.
+
+use std::time::Instant;
+
+use spargw::bench::workloads::Workload;
+use spargw::gw::sampling::GwSampler;
+use spargw::gw::spar_gw::{spar_gw, SparGwConfig};
+use spargw::gw::tensor::{
+    tensor_product_decomposable, tensor_product_generic, SparseCostContext,
+};
+use spargw::gw::GroundCost;
+use spargw::linalg::Mat;
+use spargw::ot::sparse_sinkhorn;
+use spargw::rng::{ProductAlias, Xoshiro256};
+use spargw::sparse::Coo;
+use spargw::util::csv::CsvWriter;
+
+/// Median-of-`reps` wall time of `f` (seconds), with a warmup call.
+fn bench(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut ts: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts[ts.len() / 2]
+}
+
+fn main() {
+    let n = 200;
+    let s = 16 * n;
+    let reps = 5;
+    let mut rng = Xoshiro256::new(0x9E4F);
+    let inst = Workload::Moon.make(n, &mut rng);
+    let p = inst.problem();
+    let mut csv =
+        CsvWriter::create("results/perf_micro.csv", &["bench", "n", "s", "seconds"]).expect("csv");
+    let mut emit = |name: &str, secs: f64| {
+        println!("{name:<34} {secs:>12.6}s");
+        csv.row(&[name.into(), n.to_string(), s.to_string(), format!("{secs:.6e}")]).unwrap();
+    };
+    println!("perf_micro: n = {n}, s = {s} (median of {reps})\n");
+
+    // 1. Sampling S: product-alias build + s draws.
+    let t = bench(reps, || {
+        let mut alias = ProductAlias::new(p.a, p.b);
+        let mut r = Xoshiro256::new(1);
+        std::hint::black_box(alias.sample_many(&mut r, s));
+    });
+    emit("alias_build_plus_draws", t);
+
+    // 2. Importance sampler end-to-end (probabilities + dedup + weights).
+    let t = bench(reps, || {
+        let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+        let mut r = Xoshiro256::new(2);
+        std::hint::black_box(sampler.sample_iid(&mut r, s));
+    });
+    emit("gw_sampler_sample_iid", t);
+
+    // Shared sampled set for the kernel benches.
+    let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+    let mut r = Xoshiro256::new(3);
+    let set = sampler.sample_iid(&mut r, s);
+    let s_eff = set.len();
+    let t_vals: Vec<f64> =
+        set.rows.iter().zip(&set.cols).map(|(&i, &j)| p.a[i] * p.b[j]).collect();
+
+    // 3. SparseCostContext construction (gathers the s×s relation values).
+    let t = bench(reps, || {
+        std::hint::black_box(SparseCostContext::new(
+            p.cx, p.cy, &set.rows, &set.cols, GroundCost::L1,
+        ));
+    });
+    emit("sparse_ctx_build_l1", t);
+
+    // 4. The O(s²) sparse cost product — the paper's inner-loop bottleneck.
+    let ctx_l1 = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, GroundCost::L1);
+    let t = bench(reps, || {
+        std::hint::black_box(ctx_l1.cost_values(&t_vals));
+    });
+    emit("sparse_cost_product_l1", t);
+    let ctx_l2 = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, GroundCost::L2);
+    let t = bench(reps, || {
+        std::hint::black_box(ctx_l2.cost_values(&t_vals));
+    });
+    emit("sparse_cost_product_l2", t);
+
+    // 5. Sparse Sinkhorn pass (H = 50).
+    let k = Coo::from_triplets(n, n, &set.rows, &set.cols, &t_vals);
+    let t = bench(reps, || {
+        std::hint::black_box(sparse_sinkhorn(p.a, p.b, &k, 50, 0.0));
+    });
+    emit("sparse_sinkhorn_h50", t);
+
+    // 6. Dense tensor products at the same n (the baselines' inner loop).
+    let tplan = Mat::outer(p.a, p.b);
+    let t = bench(reps, || {
+        std::hint::black_box(tensor_product_decomposable(p.cx, p.cy, &tplan, GroundCost::L2));
+    });
+    emit("dense_tensor_decomposable_l2", t);
+    let t = bench(3, || {
+        std::hint::black_box(tensor_product_generic(p.cx, p.cy, &tplan, GroundCost::L1));
+    });
+    emit("dense_tensor_generic_l1", t);
+
+    // 7. End-to-end Spar-GW solve (R = 20, H = 50).
+    let cfg = SparGwConfig { sample_size: s, ..Default::default() };
+    let t = bench(reps, || {
+        let mut r = Xoshiro256::new(4);
+        std::hint::black_box(spar_gw(&p, GroundCost::L1, &cfg, &mut r));
+    });
+    emit("spar_gw_end_to_end_l1", t);
+
+    println!("\n(effective support |S| = {s_eff} of s = {s})");
+    csv.flush().unwrap();
+    println!("wrote results/perf_micro.csv");
+}

@@ -1,0 +1,95 @@
+//! **Table 1** — empirical time-complexity check: run each method over a
+//! geometric n-sweep, fit the log-log slope of CPU time vs n, and print
+//! it next to the complexity exponent the paper's Table 1 claims.
+//!
+//! Methods are run in the regime their Table-1 row assumes (decomposable
+//! ℓ2 for EGW/LR-GW/S-GWL; Spar-GW is additionally measured under the
+//! indecomposable ℓ1 cost, where its advantage is the whole point).
+//!
+//! Output: the fitted table on stdout + `results/table1.csv`.
+
+use spargw::bench::workloads::{full_mode, Workload};
+use spargw::bench::{Method, RunSettings};
+use spargw::gw::GroundCost;
+use spargw::rng::{derive_seed, Xoshiro256};
+use spargw::util::csv::CsvWriter;
+
+/// Least-squares slope of log(time) against log(n).
+fn loglog_slope(ns: &[usize], ts: &[f64]) -> f64 {
+    let xs: Vec<f64> = ns.iter().map(|&n| (n as f64).ln()).collect();
+    let ys: Vec<f64> = ts.iter().map(|&t| t.max(1e-9).ln()).collect();
+    let mx = xs.iter().sum::<f64>() / xs.len() as f64;
+    let my = ys.iter().sum::<f64>() / ys.len() as f64;
+    let num: f64 = xs.iter().zip(&ys).map(|(&x, &y)| (x - mx) * (y - my)).sum();
+    let den: f64 = xs.iter().map(|&x| (x - mx) * (x - mx)).sum();
+    num / den
+}
+
+fn main() {
+    let ns: Vec<usize> =
+        if full_mode() { vec![64, 128, 256, 512] } else { vec![64, 128, 256] };
+    println!("Table 1: empirical scaling exponents (n in {ns:?}, Moon workload)\n");
+    println!(
+        "{:<10} {:<5} {:>10} {:>22}   {}",
+        "method", "cost", "slope", "time/n (s)", "paper claim"
+    );
+
+    let rows: Vec<(Method, GroundCost, &str)> = vec![
+        (Method::Egw, GroundCost::L2, "n^3 (decomposable)"),
+        (Method::PgaGw, GroundCost::L2, "n^3 (decomposable)"),
+        (Method::EmdGw, GroundCost::L2, "n^3 log n (LP inner)"),
+        (Method::Sgwl, GroundCost::L2, "n^2 log n"),
+        (Method::LrGw, GroundCost::L2, "r(r+r)n (low-rank)"),
+        (Method::Anchor, GroundCost::L2, "n^2 log(n^2)"),
+        (Method::Sagrow, GroundCost::L2, "n^2 (s'+log n)"),
+        (Method::SparGw, GroundCost::L2, "n^2 + s^2, s = 16n"),
+        (Method::SparGw, GroundCost::L1, "n^2 + s^2 (arbitrary L)"),
+        (Method::Egw, GroundCost::L1, "n^4 (no decomposition)"),
+    ];
+
+    let mut csv =
+        CsvWriter::create("results/table1.csv", &["method", "cost", "n", "seconds", "slope"])
+            .expect("csv");
+
+    for (method, cost, claim) in rows {
+        // The generic-tensor dense path is O(n^4): cap its sweep so the
+        // bench terminates (slope fits on the smaller prefix).
+        let ns_m: Vec<usize> = if method == Method::Egw && cost == GroundCost::L1 {
+            ns.iter().copied().filter(|&n| n <= 128).collect()
+        } else {
+            ns.clone()
+        };
+        let mut times = Vec::new();
+        for (ni, &n) in ns_m.iter().enumerate() {
+            let mut grng = Xoshiro256::new(derive_seed(0x7AB1, ni as u64));
+            let inst = Workload::Moon.make(n, &mut grng);
+            let p = inst.problem();
+            let st = RunSettings::default();
+            let mut rng = Xoshiro256::new(derive_seed(29, n as u64));
+            let out = method.run(&p, None, cost, &st, &mut rng).unwrap();
+            times.push(out.seconds);
+        }
+        let slope = loglog_slope(&ns_m, &times);
+        let times_str: Vec<String> = times.iter().map(|t| format!("{t:.3}")).collect();
+        println!(
+            "{:<10} {:<5} {:>10.2} {:>22}   {}",
+            method.name(),
+            cost.name(),
+            slope,
+            times_str.join("/"),
+            claim
+        );
+        for (i, &n) in ns_m.iter().enumerate() {
+            csv.row(&[
+                method.name().into(),
+                cost.name().into(),
+                n.to_string(),
+                format!("{:.6e}", times[i]),
+                format!("{slope:.3}"),
+            ])
+            .unwrap();
+        }
+    }
+    csv.flush().unwrap();
+    println!("\nwrote results/table1.csv");
+}

@@ -1,0 +1,96 @@
+//! Benchmark infrastructure shared by the CLI, the `rust/benches/*`
+//! harnesses and the examples: a uniform [`Method`] dispatcher over every
+//! solver the paper evaluates, the ε-grid selection rule of §6.1, repeated
+//! timing helpers, and a counting global allocator for the Fig. 5 memory
+//! column (criterion is unavailable offline; these substitute).
+
+pub mod alloc;
+pub mod pairwise;
+pub mod suite;
+pub mod workloads;
+
+pub use alloc::{peak_bytes_during, CountingAllocator};
+pub use pairwise::pairwise_distances;
+pub use suite::{Method, MethodOutput, RunSettings};
+pub use workloads::Workload;
+
+use crate::util::{mean, std_dev};
+
+/// Summary statistics of repeated runs of one (method, workload) cell.
+#[derive(Clone, Debug)]
+pub struct CellStats {
+    /// Mean estimated distance over repetitions.
+    pub value_mean: f64,
+    /// Std-dev of the estimate (0 for deterministic methods).
+    pub value_sd: f64,
+    /// Mean wall-clock seconds.
+    pub time_mean: f64,
+    /// Std-dev of wall-clock seconds.
+    pub time_sd: f64,
+}
+
+/// Run `f` `reps` times and summarize (value, seconds) pairs.
+pub fn repeat_timed(reps: usize, mut f: impl FnMut(usize) -> f64) -> CellStats {
+    let mut values = Vec::with_capacity(reps);
+    let mut times = Vec::with_capacity(reps);
+    for r in 0..reps {
+        let t0 = std::time::Instant::now();
+        let v = f(r);
+        times.push(t0.elapsed().as_secs_f64());
+        values.push(v);
+    }
+    CellStats {
+        value_mean: mean(&values),
+        value_sd: std_dev(&values),
+        time_mean: mean(&times),
+        time_sd: std_dev(&times),
+    }
+}
+
+/// The paper's ε selection rule (§6.1): run over the grid
+/// `{1, 1e-1, 1e-2, 1e-3}` and keep the run with the smallest estimated
+/// distance. Returns (best_value, eps_used, total_seconds_of_best).
+pub fn select_epsilon(
+    grid: &[f64],
+    mut run: impl FnMut(f64) -> (f64, f64),
+) -> (f64, f64, f64) {
+    let mut best = (f64::INFINITY, grid[0], 0.0);
+    for &eps in grid {
+        let (v, t) = run(eps);
+        if v.is_finite() && v < best.0 {
+            best = (v, eps, t);
+        }
+    }
+    best
+}
+
+/// The default ε grid of §6.1.
+pub const EPS_GRID: [f64; 4] = [1.0, 0.1, 0.01, 0.001];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeat_timed_stats() {
+        let st = repeat_timed(4, |r| r as f64);
+        assert!((st.value_mean - 1.5).abs() < 1e-12);
+        assert!(st.value_sd > 0.0);
+        assert!(st.time_mean >= 0.0);
+    }
+
+    #[test]
+    fn select_epsilon_picks_min() {
+        let (v, eps, _) = select_epsilon(&EPS_GRID, |e| (e * 2.0, 0.0));
+        assert_eq!(eps, 0.001);
+        assert!((v - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn select_epsilon_skips_nan() {
+        let (v, eps, _) =
+            select_epsilon(&EPS_GRID, |e| (if e < 0.01 { f64::NAN } else { e }, 0.0));
+        assert_eq!(eps, 0.01);
+        assert_eq!(v, 0.01);
+    }
+}

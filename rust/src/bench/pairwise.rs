@@ -1,0 +1,83 @@
+//! Pairwise distance matrices for *arbitrary* methods over graph
+//! datasets — the Tables 2–3 protocol. (The production coordinator in
+//! `coordinator::service` serves the Spar-GW path; this helper exists so
+//! the benchmark harness can run every *comparator* through the same
+//! pipeline.)
+
+use super::suite::{Method, RunSettings};
+use crate::coordinator::scheduler::run_jobs;
+use crate::datasets::graphsets::{attribute_distance, GraphDataset};
+use crate::gw::{GroundCost, GwProblem};
+use crate::linalg::Mat;
+use crate::rng::{derive_seed, Xoshiro256};
+
+/// Compute the symmetric N×N (F)GW distance matrix of `dataset` under
+/// `method`. Attributed datasets use the fused objective when the method
+/// supports it (α from `settings`); structure-only methods fall back to
+/// plain GW. Deterministic per-pair RNG streams keyed on `seed`.
+pub fn pairwise_distances(
+    dataset: &GraphDataset,
+    method: Method,
+    cost: GroundCost,
+    settings: &RunSettings,
+    workers: usize,
+    seed: u64,
+) -> Mat {
+    let n_items = dataset.len();
+    let marginals: Vec<Vec<f64>> = dataset.graphs.iter().map(|g| g.marginal()).collect();
+    let pairs: Vec<(usize, usize)> =
+        (0..n_items).flat_map(|i| ((i + 1)..n_items).map(move |j| (i, j))).collect();
+
+    let vals = run_jobs(pairs.len(), workers, |k| {
+        let (i, j) = pairs[k];
+        let gi = &dataset.graphs[i];
+        let gj = &dataset.graphs[j];
+        let p = GwProblem::new(&gi.adj, &gj.adj, &marginals[i], &marginals[j]);
+        let feat = if method.supports_fused() { attribute_distance(gi, gj) } else { None };
+        let mut rng = Xoshiro256::new(derive_seed(seed, k as u64));
+        method
+            .run(&p, feat.as_ref(), cost, settings, &mut rng)
+            .map(|o| o.value.max(0.0))
+            .unwrap_or(f64::NAN)
+    });
+
+    let mut d = Mat::zeros(n_items, n_items);
+    for (k, &(i, j)) in pairs.iter().enumerate() {
+        d[(i, j)] = vals[k];
+        d[(j, i)] = vals[k];
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::graphsets::imdb_b;
+
+    #[test]
+    fn distance_matrix_symmetric_nonneg() {
+        let mut ds = imdb_b(3);
+        ds.graphs.truncate(6);
+        let st = RunSettings { outer_iters: 5, inner_iters: 10, ..Default::default() };
+        let d = pairwise_distances(&ds, Method::SparGw, GroundCost::L2, &st, 2, 0);
+        for i in 0..6 {
+            assert_eq!(d[(i, i)], 0.0);
+            for j in 0..6 {
+                assert_eq!(d[(i, j)], d[(j, i)]);
+                assert!(d[(i, j)] >= 0.0 && d[(i, j)].is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut ds = imdb_b(4);
+        ds.graphs.truncate(4);
+        let st = RunSettings { outer_iters: 3, inner_iters: 8, ..Default::default() };
+        let d1 = pairwise_distances(&ds, Method::SparGw, GroundCost::L1, &st, 3, 9);
+        let d2 = pairwise_distances(&ds, Method::SparGw, GroundCost::L1, &st, 1, 9);
+        for (x, y) in d1.data().iter().zip(d2.data()) {
+            assert_eq!(x, y, "worker count must not change results");
+        }
+    }
+}

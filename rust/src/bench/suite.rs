@@ -1,0 +1,362 @@
+//! A uniform dispatcher over every solver the paper evaluates, so the
+//! benches, the CLI and the pairwise tables can iterate "for each method"
+//! without duplicating per-solver glue.
+
+use std::time::Instant;
+
+use crate::gw::anchor::{anchor_energy, AnchorConfig};
+use crate::gw::fgw::{egw_fgw, emd_fgw, naive_fgw, pga_fgw, FgwProblem};
+use crate::gw::lr_gw::{lr_gw, LrGwConfig};
+use crate::gw::sagrow::{matched_s_prime, sagrow, sagrow_fgw, SagrowConfig};
+use crate::gw::sgwl::{sgwl, SgwlConfig};
+use crate::gw::spar_fgw::spar_fgw;
+use crate::gw::spar_gw::{spar_gw, SparGwConfig};
+use crate::gw::tensor::gw_energy;
+use crate::gw::{egw, emd_gw, pga_gw, Alg1Config, GroundCost, GwProblem, Regularizer};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Every method of §6.1's balanced-GW comparison (Fig. 2 / Fig. 5 / Fig. 6
+/// / Tables 2–3), including the paper's proposed Spar-GW.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Naive plan `T = a bᵀ` (Fig. 3 / Fig. 6 baseline).
+    Naive,
+    /// Entropic GW, Algorithm 1 with `R(T) = H(T)` (Peyré et al. 2016).
+    Egw,
+    /// Proximal-gradient GW (Xu et al. 2019b) — the accuracy benchmark.
+    PgaGw,
+    /// EGW with ε = 0 and an exact inner OT solver.
+    EmdGw,
+    /// Scalable GW Learning (Xu et al. 2019a), arbitrary-cost adaptation.
+    Sgwl,
+    /// Low-rank GW (Scetbon et al. 2022) — ℓ2 only.
+    LrGw,
+    /// Anchor-Energy (Sato et al. 2020).
+    Anchor,
+    /// Sampled GW (Kerdoncuff et al. 2021), budget-matched `s′ = s²/n²`.
+    Sagrow,
+    /// **Spar-GW (Algorithm 2), the paper's contribution.**
+    SparGw,
+}
+
+impl Method {
+    /// All methods in the paper's presentation order.
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::Naive,
+            Method::Egw,
+            Method::PgaGw,
+            Method::EmdGw,
+            Method::Sgwl,
+            Method::LrGw,
+            Method::Anchor,
+            Method::Sagrow,
+            Method::SparGw,
+        ]
+    }
+
+    /// The Fig. 2 / Fig. 5 line-up (Naive and Anchor are not plotted there).
+    pub fn fig2_lineup() -> &'static [Method] {
+        &[
+            Method::Egw,
+            Method::PgaGw,
+            Method::EmdGw,
+            Method::Sgwl,
+            Method::LrGw,
+            Method::Sagrow,
+            Method::SparGw,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Naive => "Naive",
+            Method::Egw => "EGW",
+            Method::PgaGw => "PGA-GW",
+            Method::EmdGw => "EMD-GW",
+            Method::Sgwl => "S-GWL",
+            Method::LrGw => "LR-GW",
+            Method::Anchor => "AE",
+            Method::Sagrow => "SaGroW",
+            Method::SparGw => "Spar-GW",
+        }
+    }
+
+    /// Parse a method name (case-insensitive, punctuation-insensitive).
+    pub fn parse(s: &str) -> Option<Method> {
+        let norm: String =
+            s.chars().filter(|c| c.is_ascii_alphanumeric()).collect::<String>().to_lowercase();
+        Method::all().iter().copied().find(|m| {
+            m.name()
+                .chars()
+                .filter(|c| c.is_ascii_alphanumeric())
+                .collect::<String>()
+                .to_lowercase()
+                == norm
+        })
+    }
+
+    /// Randomized methods are averaged over repetitions in the figures.
+    pub fn is_sampled(self) -> bool {
+        matches!(self, Method::Sagrow | Method::SparGw | Method::Sgwl)
+    }
+
+    /// LR-GW's mirror descent requires the ℓ2 decomposition; everything
+    /// else handles arbitrary ground costs.
+    pub fn supports_cost(self, cost: GroundCost) -> bool {
+        match self {
+            Method::LrGw => cost == GroundCost::L2,
+            _ => true,
+        }
+    }
+
+    /// Whether the method extends to the fused objective (Appendix A /
+    /// §6.2: EGW, PGA-GW, EMD-GW, SaGroW, Spar-GW extend; S-GWL, LR-GW and
+    /// AE are structure-only).
+    pub fn supports_fused(self) -> bool {
+        matches!(
+            self,
+            Method::Naive
+                | Method::Egw
+                | Method::PgaGw
+                | Method::EmdGw
+                | Method::Sagrow
+                | Method::SparGw
+        )
+    }
+}
+
+/// Shared run parameters; per-method configs derive from these.
+#[derive(Clone, Copy, Debug)]
+pub struct RunSettings {
+    /// Regularization weight ε.
+    pub epsilon: f64,
+    /// Spar-GW sample budget s (0 → 16·max(m,n)); SaGroW gets the
+    /// budget-matched `s′ = s²/(mn)`.
+    pub sample_size: usize,
+    /// Outer iterations R.
+    pub outer_iters: usize,
+    /// Inner Sinkhorn iterations H.
+    pub inner_iters: usize,
+    /// Regularizer for Alg. 1/2-style methods (paper default: proximal).
+    pub reg: Regularizer,
+    /// FGW trade-off α (used only when features are supplied).
+    pub alpha: f64,
+}
+
+impl Default for RunSettings {
+    fn default() -> Self {
+        RunSettings {
+            epsilon: 0.01,
+            sample_size: 0,
+            outer_iters: 20,
+            inner_iters: 50,
+            reg: Regularizer::Proximal,
+            alpha: 0.6,
+        }
+    }
+}
+
+impl RunSettings {
+    fn alg1(&self) -> Alg1Config {
+        Alg1Config {
+            epsilon: self.epsilon,
+            outer_iters: self.outer_iters,
+            inner_iters: self.inner_iters,
+            tol: 1e-9,
+        }
+    }
+
+    fn spar(&self) -> SparGwConfig {
+        SparGwConfig {
+            epsilon: self.epsilon,
+            sample_size: self.sample_size,
+            outer_iters: self.outer_iters,
+            inner_iters: self.inner_iters,
+            reg: self.reg,
+            shrink: 0.0,
+            tol: 1e-9,
+        }
+    }
+
+    fn sagrow_cfg(&self, m: usize, n: usize) -> SagrowConfig {
+        let s = if self.sample_size == 0 { 16 * m.max(n) } else { self.sample_size };
+        SagrowConfig {
+            epsilon: self.epsilon,
+            s_prime: matched_s_prime(s, m, n),
+            outer_iters: self.outer_iters,
+            inner_iters: self.inner_iters,
+            reg: self.reg,
+            tol: 1e-9,
+        }
+    }
+}
+
+/// Output of one dispatched run.
+#[derive(Clone, Copy, Debug)]
+pub struct MethodOutput {
+    /// Estimated (F)GW value.
+    pub value: f64,
+    /// Wall-clock seconds for the solve (excludes problem construction).
+    pub seconds: f64,
+}
+
+impl Method {
+    /// Run this method on a balanced GW problem, optionally fused with a
+    /// feature distance matrix (`feat`, trade-off `settings.alpha`).
+    /// Structure-only methods ignore `feat`. Returns `None` when the
+    /// method cannot handle `cost` (LR-GW on ℓ1).
+    pub fn run(
+        self,
+        p: &GwProblem,
+        feat: Option<&Mat>,
+        cost: GroundCost,
+        settings: &RunSettings,
+        rng: &mut Rng,
+    ) -> Option<MethodOutput> {
+        if !self.supports_cost(cost) {
+            return None;
+        }
+        let t0 = Instant::now();
+        let value = match (self, feat) {
+            // --- fused paths -------------------------------------------
+            (m, Some(feat)) if m.supports_fused() => {
+                let fp = FgwProblem::new(*p, feat, settings.alpha);
+                match m {
+                    Method::Naive => naive_fgw(&fp, cost),
+                    Method::Egw => egw_fgw(&fp, cost, &settings.alg1()).value,
+                    Method::PgaGw => pga_fgw(&fp, cost, &settings.alg1()).value,
+                    Method::EmdGw => emd_fgw(&fp, cost, &settings.alg1()).value,
+                    Method::Sagrow => {
+                        sagrow_fgw(&fp, cost, &settings.sagrow_cfg(p.m(), p.n()), rng).value
+                    }
+                    Method::SparGw => spar_fgw(&fp, cost, &settings.spar(), rng).value,
+                    _ => unreachable!(),
+                }
+            }
+            // --- structure-only paths ----------------------------------
+            (Method::Naive, _) => gw_energy(p.cx, p.cy, &Mat::outer(p.a, p.b), cost),
+            (Method::Egw, _) => egw(p, cost, &settings.alg1()).value,
+            (Method::PgaGw, _) => pga_gw(p, cost, &settings.alg1()).value,
+            (Method::EmdGw, _) => emd_gw(p, cost, &settings.alg1()).value,
+            (Method::Sgwl, _) => {
+                let cfg = SgwlConfig {
+                    inner: Alg1Config {
+                        epsilon: settings.epsilon,
+                        outer_iters: settings.outer_iters.min(15),
+                        inner_iters: settings.inner_iters.min(40),
+                        tol: 1e-8,
+                    },
+                    ..Default::default()
+                };
+                sgwl(p, cost, &cfg, rng).value
+            }
+            (Method::LrGw, _) => lr_gw(p, cost, &LrGwConfig::default()).value,
+            (Method::Anchor, _) => anchor_energy(p, cost, &AnchorConfig::default()),
+            (Method::Sagrow, _) => {
+                sagrow(p, cost, &settings.sagrow_cfg(p.m(), p.n()), rng).value
+            }
+            (Method::SparGw, _) => spar_gw(p, cost, &settings.spar(), rng).value,
+        };
+        Some(MethodOutput { value, seconds: t0.elapsed().as_secs_f64() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::util::uniform;
+
+    fn relation(n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        let pts: Vec<[f64; 2]> = (0..n).map(|_| [rng.f64(), rng.f64()]).collect();
+        Mat::from_fn(n, n, |i, j| crate::linalg::sqdist(&pts[i], &pts[j]).sqrt())
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for &m in Method::all() {
+            assert_eq!(Method::parse(m.name()), Some(m), "{}", m.name());
+        }
+        assert_eq!(Method::parse("spar-gw"), Some(Method::SparGw));
+        assert_eq!(Method::parse("PGA_GW"), Some(Method::PgaGw));
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn all_methods_run_l2() {
+        let n = 10;
+        let c1 = relation(n, 1);
+        let c2 = relation(n, 2);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let st = RunSettings { outer_iters: 5, inner_iters: 10, ..Default::default() };
+        let mut rng = Xoshiro256::new(3);
+        for &m in Method::all() {
+            let out = m.run(&p, None, GroundCost::L2, &st, &mut rng).unwrap();
+            assert!(
+                out.value.is_finite() && out.value >= -1e-9,
+                "{}: {}",
+                m.name(),
+                out.value
+            );
+        }
+    }
+
+    #[test]
+    fn lr_gw_declines_l1() {
+        let n = 8;
+        let c1 = relation(n, 4);
+        let c2 = relation(n, 5);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let st = RunSettings::default();
+        let mut rng = Xoshiro256::new(6);
+        assert!(Method::LrGw.run(&p, None, GroundCost::L1, &st, &mut rng).is_none());
+        // Everyone else accepts ℓ1.
+        for &m in Method::all() {
+            if m == Method::LrGw {
+                continue;
+            }
+            let st = RunSettings { outer_iters: 3, inner_iters: 8, ..st };
+            assert!(m.run(&p, None, GroundCost::L1, &st, &mut rng).is_some(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn fused_paths_run() {
+        let n = 9;
+        let c1 = relation(n, 7);
+        let c2 = relation(n, 8);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let feat = relation(n, 9);
+        let st = RunSettings { outer_iters: 4, inner_iters: 10, ..Default::default() };
+        let mut rng = Xoshiro256::new(10);
+        for &m in Method::all() {
+            if !m.supports_fused() {
+                continue;
+            }
+            let out = m.run(&p, Some(&feat), GroundCost::L2, &st, &mut rng).unwrap();
+            assert!(out.value.is_finite(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn fused_interpolates_between_w_and_gw() {
+        // α→1 recovers GW, α→0 recovers W for the dense PGA path.
+        let n = 8;
+        let c1 = relation(n, 11);
+        let c2 = relation(n, 12);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let feat = relation(n, 13);
+        let mut rng = Xoshiro256::new(14);
+        let st1 = RunSettings { alpha: 1.0, outer_iters: 8, ..Default::default() };
+        let gw_only = Method::PgaGw.run(&p, None, GroundCost::L2, &st1, &mut rng).unwrap();
+        let fused1 = Method::PgaGw.run(&p, Some(&feat), GroundCost::L2, &st1, &mut rng).unwrap();
+        assert!((gw_only.value - fused1.value).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,176 @@
+//! Named synthetic workloads for the benchmark harness — the four
+//! datasets of §6.1 / Appendix C plus the Fig. 6 feature attachment.
+
+use crate::datasets::{gaussian, graph, moon, spiral, Instance};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// The synthetic workloads of the paper's evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// Two interleaving half-circles in R² (§6.1, Séjourné/Muzellec refs).
+    Moon,
+    /// Power-law graph + 0.2-noise copy, degree marginals (§6.1, Xu refs).
+    Graph,
+    /// Gaussian mixtures in R⁵ vs R¹⁰ (Appendix C.1).
+    Gaussian,
+    /// Noisy spiral vs rotated copy in R² (Appendix C.1).
+    Spiral,
+}
+
+impl Workload {
+    pub fn all() -> &'static [Workload] {
+        &[Workload::Moon, Workload::Graph, Workload::Gaussian, Workload::Spiral]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::Moon => "Moon",
+            Workload::Graph => "Graph",
+            Workload::Gaussian => "Gaussian",
+            Workload::Spiral => "Spiral",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Workload> {
+        match s.to_ascii_lowercase().as_str() {
+            "moon" => Some(Workload::Moon),
+            "graph" => Some(Workload::Graph),
+            "gaussian" => Some(Workload::Gaussian),
+            "spiral" => Some(Workload::Spiral),
+            _ => None,
+        }
+    }
+
+    /// Generate an instance of size n.
+    pub fn make(self, n: usize, rng: &mut Rng) -> Instance {
+        let mut inst = match self {
+            Workload::Moon => moon::moon(n, rng),
+            Workload::Graph => graph::graph_pair(n, rng),
+            Workload::Gaussian => gaussian::gaussian(n, rng),
+            Workload::Spiral => spiral::spiral(n, rng),
+        };
+        // Spiral/Gaussian raw coordinates produce large relation values;
+        // normalize by a common scale (GW-invariant) so one ε grid serves
+        // every workload.
+        if matches!(self, Workload::Spiral | Workload::Gaussian) {
+            let scale = inst.cx.max_abs().max(inst.cy.max_abs());
+            if scale > 0.0 {
+                inst.cx.scale(1.0 / scale);
+                inst.cy.scale(1.0 / scale);
+            }
+        }
+        inst
+    }
+}
+
+/// Attach the Fig. 6 feature structure to an instance: source attributes
+/// from N(0·1₅, 10·I₅), target attributes from N(5·1₅, 10·I₅), feature
+/// distance matrix M = pairwise Euclidean in R⁵ (normalized to unit max
+/// so the α trade-off is scale-commensurate with the structural term).
+pub fn attach_features(inst: &mut Instance, rng: &mut Rng) {
+    let m = inst.a.len();
+    let n = inst.b.len();
+    let dim = 5;
+    let sd = 10f64.sqrt();
+    let src: Vec<Vec<f64>> =
+        (0..m).map(|_| (0..dim).map(|_| rng.normal_ms(0.0, sd)).collect()).collect();
+    let tgt: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..dim).map(|_| rng.normal_ms(5.0, sd)).collect()).collect();
+    let mut feat = Mat::from_fn(m, n, |i, j| {
+        let mut d2 = 0.0;
+        for k in 0..dim {
+            let d = src[i][k] - tgt[j][k];
+            d2 += d * d;
+        }
+        d2.sqrt()
+    });
+    let scale = feat.max_abs();
+    if scale > 0.0 {
+        feat.scale(1.0 / scale);
+    }
+    inst.feat = Some(feat);
+}
+
+/// True when the harness should run the paper-scale sweep (slow); default
+/// is a scaled-down sweep that finishes on the CI budget.
+pub fn full_mode() -> bool {
+    std::env::var("SPARGW_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// True when the harness should run a minimal smoke sweep (fast sanity
+/// pass; `SPARGW_BENCH_SMOKE=1`).
+pub fn smoke_mode() -> bool {
+    std::env::var("SPARGW_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The Fig. 2/3/5/6 sample-size sweep under the current mode.
+pub fn n_sweep() -> Vec<usize> {
+    if smoke_mode() {
+        vec![40, 80]
+    } else if full_mode() {
+        vec![50, 100, 200, 300, 400, 500]
+    } else {
+        vec![50, 100, 150]
+    }
+}
+
+/// Repetitions for sampling-based methods under the current mode
+/// (paper: 10).
+pub fn reps() -> usize {
+    if smoke_mode() {
+        2
+    } else if full_mode() {
+        10
+    } else {
+        3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn all_workloads_generate() {
+        let mut rng = Xoshiro256::new(1);
+        for &w in Workload::all() {
+            let inst = w.make(30, &mut rng);
+            assert_eq!(inst.cx.rows(), 30, "{}", w.name());
+            assert_eq!(inst.cy.rows(), 30);
+            assert!((inst.a.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!((inst.b.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(inst.cx.max_abs().is_finite());
+        }
+    }
+
+    #[test]
+    fn normalized_workloads_unit_scale() {
+        let mut rng = Xoshiro256::new(2);
+        for w in [Workload::Spiral, Workload::Gaussian] {
+            let inst = w.make(25, &mut rng);
+            assert!(inst.cx.max_abs() <= 1.0 + 1e-12);
+            assert!(inst.cy.max_abs() <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn features_attach() {
+        let mut rng = Xoshiro256::new(3);
+        let mut inst = Workload::Moon.make(20, &mut rng);
+        attach_features(&mut inst, &mut rng);
+        let feat = inst.feat.as_ref().unwrap();
+        assert_eq!(feat.shape(), (20, 20));
+        assert!(feat.max_abs() <= 1.0 + 1e-12);
+        assert!(feat.data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for &w in Workload::all() {
+            assert_eq!(Workload::parse(w.name()), Some(w));
+        }
+        assert_eq!(Workload::parse("nope"), None);
+    }
+}

@@ -1,0 +1,132 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, and positional arguments, with typed
+//! accessors and a collected error message on malformed input.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order plus `--key [value]` options.
+pub struct Args {
+    positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv(0)).
+    ///
+    /// A `--key` followed by a token that does not start with `--` is an
+    /// option; a `--key` followed by another `--` token (or end of input)
+    /// is a boolean flag.
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Args {
+        let raw: Vec<String> = raw.into_iter().collect();
+        let mut positional = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(key) = tok.strip_prefix("--") {
+                // `--key=value` form.
+                if let Some((k, v)) = key.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    options.insert(key.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.push(key.to_string());
+                }
+            } else {
+                positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Args { positional, options, flags }
+    }
+
+    /// Parse from the process environment (skipping argv(0)).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(|s| s.as_str())
+    }
+
+    pub fn n_positional(&self) -> usize {
+        self.positional.len()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt_str(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.opt_str(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.opt_str(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.opt_str(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = args(&["solve", "--n", "200", "--cost", "l1", "--verbose"]);
+        assert_eq!(a.positional(0), Some("solve"));
+        assert_eq!(a.usize_or("n", 0), 200);
+        assert_eq!(a.str_or("cost", "l2"), "l1");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = args(&["--eps=0.5", "--s=64"]);
+        assert_eq!(a.f64_or("eps", 0.0), 0.5);
+        assert_eq!(a.usize_or("s", 0), 64);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&[]);
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.f64_or("eps", 0.25), 0.25);
+        assert_eq!(a.str_or("cost", "l2"), "l2");
+        assert_eq!(a.positional(0), None);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = args(&["--pjrt", "run"]);
+        // `--pjrt run` binds "run" as the option value by the grammar; use
+        // `--pjrt` last or `--pjrt=1`. Document via this test.
+        assert_eq!(a.opt_str("pjrt"), Some("run"));
+    }
+}

@@ -1,0 +1,94 @@
+//! Size-class bucketing: padding problems up to compiled artifact shapes.
+//!
+//! Zero-padding is *exact* for balanced GW: padded coordinates carry zero
+//! marginal mass, so the Sinkhorn scalings zero them out and they
+//! contribute nothing to the estimate (verified by
+//! `python/tests/test_model.py::test_padded_bucket_equivalence` on the L2
+//! side and `rust/tests/runtime_integration.rs` end-to-end).
+
+use crate::linalg::Mat;
+
+/// Pad a relation matrix with zeros to `n_pad × n_pad`.
+pub fn pad_relation(c: &Mat, n_pad: usize) -> Mat {
+    assert!(c.rows() <= n_pad && c.cols() <= n_pad);
+    let mut out = Mat::zeros(n_pad, n_pad);
+    for i in 0..c.rows() {
+        let src = c.row(i);
+        out.row_mut(i)[..c.cols()].copy_from_slice(src);
+    }
+    out
+}
+
+/// Pad a marginal with zeros.
+pub fn pad_marginal(a: &[f64], n_pad: usize) -> Vec<f64> {
+    assert!(a.len() <= n_pad);
+    let mut out = vec![0.0; n_pad];
+    out[..a.len()].copy_from_slice(a);
+    out
+}
+
+/// Choose the smallest bucket ≥ n from an ascending list.
+pub fn choose_bucket(n: usize, buckets: &[usize]) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= n)
+}
+
+/// Group pair sizes into bucket classes; returns (bucket, count) stats —
+/// used by the service to report batching efficiency.
+pub fn bucket_histogram(sizes: &[usize], buckets: &[usize]) -> Vec<(usize, usize)> {
+    let mut hist: Vec<(usize, usize)> = buckets.iter().map(|&b| (b, 0)).collect();
+    let mut overflow = 0usize;
+    for &n in sizes {
+        match choose_bucket(n, buckets) {
+            Some(b) => {
+                if let Some(h) = hist.iter_mut().find(|(bb, _)| *bb == b) {
+                    h.1 += 1;
+                }
+            }
+            None => overflow += 1,
+        }
+    }
+    if overflow > 0 {
+        hist.push((usize::MAX, overflow));
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_preserves_block() {
+        let c = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        let p = pad_relation(&c, 5);
+        assert_eq!(p.shape(), (5, 5));
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(p[(i, j)], c[(i, j)]);
+            }
+        }
+        for i in 0..5 {
+            assert_eq!(p[(i, 4)], 0.0);
+            assert_eq!(p[(4, i)], 0.0);
+        }
+        let a = pad_marginal(&[0.5, 0.5], 4);
+        assert_eq!(a, vec![0.5, 0.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn bucket_choice() {
+        let buckets = [32, 64, 128];
+        assert_eq!(choose_bucket(10, &buckets), Some(32));
+        assert_eq!(choose_bucket(32, &buckets), Some(32));
+        assert_eq!(choose_bucket(33, &buckets), Some(64));
+        assert_eq!(choose_bucket(200, &buckets), None);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let hist = bucket_histogram(&[10, 20, 40, 50, 130], &[32, 64]);
+        assert_eq!(hist[0], (32, 2));
+        assert_eq!(hist[1], (64, 2));
+        assert_eq!(hist[2], (usize::MAX, 1));
+    }
+}

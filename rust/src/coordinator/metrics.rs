@@ -1,0 +1,97 @@
+//! Latency/throughput metrics for the pairwise service.
+
+/// Collects per-job latencies and summarizes them.
+#[derive(Default)]
+pub struct MetricsRecorder {
+    latencies: Vec<f64>,
+    total_wall: f64,
+}
+
+impl MetricsRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.latencies.push(seconds);
+    }
+
+    pub fn record_batch(&mut self, latencies: &[f64], wall: f64) {
+        self.latencies.extend_from_slice(latencies);
+        self.total_wall += wall;
+    }
+
+    pub fn count(&self) -> usize {
+        self.latencies.len()
+    }
+
+    /// Latency percentile in seconds (q ∈ [0, 1]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = (q.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
+        v[pos]
+    }
+
+    /// Jobs per second of wall-clock (when batch wall time was recorded).
+    pub fn throughput(&self) -> f64 {
+        if self.total_wall <= 0.0 {
+            return 0.0;
+        }
+        self.latencies.len() as f64 / self.total_wall
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> f64 {
+        crate::util::mean(&self.latencies)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s",
+            self.count(),
+            self.mean(),
+            self.percentile(0.5),
+            self.percentile(0.9),
+            self.percentile(0.99),
+            self.throughput()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut m = MetricsRecorder::new();
+        for i in 1..=100 {
+            m.record(i as f64);
+        }
+        assert_eq!(m.count(), 100);
+        assert!((m.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((m.percentile(1.0) - 100.0).abs() < 1e-9);
+        assert!((m.percentile(0.5) - 50.0).abs() < 2.0);
+        assert!((m.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_from_batch() {
+        let mut m = MetricsRecorder::new();
+        m.record_batch(&[0.1, 0.1, 0.1, 0.1], 2.0);
+        assert!((m.throughput() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_recorder_safe() {
+        let m = MetricsRecorder::new();
+        assert_eq!(m.percentile(0.5), 0.0);
+        assert_eq!(m.throughput(), 0.0);
+        assert!(!m.summary().is_empty());
+    }
+}

@@ -1,0 +1,25 @@
+//! The L3 coordinator — the serving layer for pairwise-GW workloads.
+//!
+//! The paper's real-world evaluation (§6.2) computes an `N×N` GW distance
+//! matrix over a dataset of graphs and feeds it to clustering /
+//! classification. That workload is what this module serves:
+//!
+//! * [`bucket`] — size-class analysis: pairs are padded up to the next
+//!   compiled artifact bucket so one PJRT executable is reused across
+//!   every pair in the class (compile-once, execute-many);
+//! * [`scheduler`] — a work-queue worker pool (std threads; tokio is
+//!   unavailable offline) with deterministic per-job RNG streams;
+//! * [`service`] — [`service::PairwiseGw`]: dataset in, distance matrix +
+//!   latency/throughput metrics out, with per-pair execution-plan choice
+//!   (PJRT artifact vs native solver);
+//! * [`metrics`] — latency recorder (p50/p90/p99, throughput).
+
+pub mod bucket;
+pub mod metrics;
+pub mod scheduler;
+pub mod service;
+
+pub use bucket::pad_relation;
+pub use metrics::MetricsRecorder;
+pub use scheduler::run_jobs;
+pub use service::{ExecutionPath, PairwiseConfig, PairwiseGw, PairwiseResult};

@@ -1,0 +1,332 @@
+//! The pairwise-GW service: dataset → distance matrix.
+//!
+//! For every unordered pair (i, j) of dataset items the service samples
+//! the index set `S` in Rust (alias method over the Eq. (5) probabilities),
+//! chooses an execution path — the AOT/PJRT artifact when a compiled
+//! bucket fits, the native Rust solver otherwise — executes, and fills the
+//! symmetric distance matrix. Attribute-carrying datasets go through
+//! Spar-FGW with the paper's α.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::MetricsRecorder;
+use super::scheduler::run_jobs;
+use crate::datasets::graphsets::{attribute_distance, GraphDataset};
+use crate::gw::fgw::FgwProblem;
+use crate::gw::sampling::GwSampler;
+use crate::gw::spar_fgw::spar_fgw_with_set;
+use crate::gw::spar_gw::{spar_gw_with_set, SparGwConfig};
+use crate::gw::{GroundCost, GwProblem};
+use crate::linalg::Mat;
+use crate::rng::{derive_seed, Rng};
+use crate::runtime::Runtime;
+
+/// Which engine executed a pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutionPath {
+    /// AOT-compiled artifact via PJRT.
+    Pjrt,
+    /// Native Rust solver.
+    Native,
+}
+
+/// Service configuration.
+#[derive(Clone, Copy)]
+pub struct PairwiseConfig {
+    /// Ground cost for the structural term.
+    pub cost: GroundCost,
+    /// Spar-GW parameters (sample_size = 0 → 16·n per pair).
+    pub spar: SparGwConfig,
+    /// FGW trade-off α when the dataset has attributes (paper: 0.6).
+    pub alpha: f64,
+    /// Worker threads for the native path.
+    pub workers: usize,
+    /// Base RNG seed; every pair gets an independent derived stream.
+    pub seed: u64,
+    /// Prefer the PJRT path when an artifact bucket fits.
+    pub use_pjrt: bool,
+}
+
+impl Default for PairwiseConfig {
+    fn default() -> Self {
+        PairwiseConfig {
+            cost: GroundCost::L2,
+            spar: SparGwConfig::default(),
+            alpha: 0.6,
+            workers: 1,
+            seed: 0,
+            use_pjrt: false,
+        }
+    }
+}
+
+/// Output of a pairwise run.
+pub struct PairwiseResult {
+    /// Symmetric N×N distance matrix.
+    pub distances: Mat,
+    /// Latency metrics over the pair jobs.
+    pub metrics: MetricsRecorder,
+    /// How many pairs ran on each path.
+    pub pjrt_pairs: usize,
+    pub native_pairs: usize,
+}
+
+/// The pairwise-GW service.
+pub struct PairwiseGw {
+    cfg: PairwiseConfig,
+    runtime: Option<Runtime>,
+}
+
+impl PairwiseGw {
+    /// Native-only service.
+    pub fn new(cfg: PairwiseConfig) -> Self {
+        PairwiseGw { cfg, runtime: None }
+    }
+
+    /// Service with a PJRT runtime over an artifact directory.
+    pub fn with_runtime(mut cfg: PairwiseConfig, artifact_dir: &str) -> Result<Self> {
+        cfg.use_pjrt = true;
+        let runtime = Runtime::new(artifact_dir)?;
+        Ok(PairwiseGw { cfg, runtime: Some(runtime) })
+    }
+
+    /// Runtime statistics, if a PJRT runtime is attached.
+    pub fn runtime_stats(&self) -> Option<(usize, usize, usize)> {
+        self.runtime.as_ref().map(|r| r.stats())
+    }
+
+    /// Compute the pairwise distance matrix of a graph dataset.
+    ///
+    /// Attributed datasets (per `dataset.attr_kind`) use Spar-FGW with
+    /// `alpha`; plain datasets use Spar-GW. The native path parallelizes
+    /// across `workers` threads with deterministic per-pair RNG streams;
+    /// the PJRT path runs pairs sequentially on the runtime thread
+    /// (executables are not Sync) but reuses one compiled executable per
+    /// bucket.
+    pub fn pairwise(&mut self, dataset: &GraphDataset) -> Result<PairwiseResult> {
+        let n_items = dataset.len();
+        let marginals: Vec<Vec<f64>> =
+            dataset.graphs.iter().map(|g| g.marginal()).collect();
+        // All unordered pairs.
+        let pairs: Vec<(usize, usize)> = (0..n_items)
+            .flat_map(|i| ((i + 1)..n_items).map(move |j| (i, j)))
+            .collect();
+
+        let mut distances = Mat::zeros(n_items, n_items);
+        let mut metrics = MetricsRecorder::new();
+        let mut pjrt_pairs = 0usize;
+        let mut native_pairs = 0usize;
+        let wall_start = Instant::now();
+
+        // Decide per pair whether PJRT can serve it (both sides fit one
+        // bucket and the dataset is unattributed — the FGW artifact is not
+        // compiled in this bundle).
+        let use_pjrt = self.cfg.use_pjrt && self.runtime.is_some();
+        let has_attrs = dataset
+            .graphs
+            .first()
+            .map(|g| !g.attrs.is_empty())
+            .unwrap_or(false);
+
+        if use_pjrt && !has_attrs {
+            let runtime = self.runtime.as_mut().unwrap();
+            let mut lats = Vec::with_capacity(pairs.len());
+            for &(i, j) in &pairs {
+                let t0 = Instant::now();
+                let gi = &dataset.graphs[i];
+                let gj = &dataset.graphs[j];
+                let (a, b) = (&marginals[i], &marginals[j]);
+                let n_pair = gi.n_nodes().max(gj.n_nodes());
+                let value = match runtime.spar_gw_bucket(self.cfg.cost, n_pair) {
+                    Some((_bn, bs)) => {
+                        // Sample S in Rust with the bucket's budget.
+                        let budget = if self.cfg.spar.sample_size == 0 {
+                            (16 * n_pair).min(bs)
+                        } else {
+                            self.cfg.spar.sample_size.min(bs)
+                        };
+                        let mut rng = Rng::new(derive_seed(
+                            self.cfg.seed,
+                            (i * n_items + j) as u64,
+                        ));
+                        let mut sampler =
+                            GwSampler::new(a, b, self.cfg.spar.shrink);
+                        let set = sampler.sample_iid(&mut rng, budget);
+                        let out = runtime.run_spar_gw(
+                            self.cfg.cost,
+                            &gi.adj,
+                            &gj.adj,
+                            a,
+                            b,
+                            &set,
+                        )?;
+                        pjrt_pairs += 1;
+                        out.gw
+                    }
+                    None => {
+                        // No bucket fits: native fallback.
+                        let p = GwProblem::new(&gi.adj, &gj.adj, a, b);
+                        let mut rng = Rng::new(derive_seed(
+                            self.cfg.seed,
+                            (i * n_items + j) as u64,
+                        ));
+                        let mut sampler =
+                            GwSampler::new(a, b, self.cfg.spar.shrink);
+                        let budget = if self.cfg.spar.sample_size == 0 {
+                            16 * n_pair
+                        } else {
+                            self.cfg.spar.sample_size
+                        };
+                        let set = sampler.sample_iid(&mut rng, budget);
+                        native_pairs += 1;
+                        spar_gw_with_set(&p, self.cfg.cost, &self.cfg.spar, &set).value
+                    }
+                };
+                distances[(i, j)] = value;
+                distances[(j, i)] = value;
+                lats.push(t0.elapsed().as_secs_f64());
+            }
+            metrics.record_batch(&lats, wall_start.elapsed().as_secs_f64());
+        } else {
+            // Native path: parallel worker pool, deterministic per-pair RNG.
+            let cfg = self.cfg;
+            let results: Vec<(f64, f64)> = run_jobs(pairs.len(), cfg.workers, |k| {
+                let (i, j) = pairs[k];
+                let t0 = Instant::now();
+                let gi = &dataset.graphs[i];
+                let gj = &dataset.graphs[j];
+                let (a, b) = (&marginals[i], &marginals[j]);
+                let p = GwProblem::new(&gi.adj, &gj.adj, a, b);
+                let mut rng =
+                    Rng::new(derive_seed(cfg.seed, (i * n_items + j) as u64));
+                let n_pair = gi.n_nodes().max(gj.n_nodes());
+                let budget = if cfg.spar.sample_size == 0 {
+                    16 * n_pair
+                } else {
+                    cfg.spar.sample_size
+                };
+                let mut sampler = GwSampler::new(a, b, cfg.spar.shrink);
+                let set = sampler.sample_iid(&mut rng, budget);
+                let value = match attribute_distance(gi, gj) {
+                    Some(feat) => {
+                        let fp = FgwProblem::new(p, &feat, cfg.alpha);
+                        spar_fgw_with_set(&fp, cfg.cost, &cfg.spar, &set).value
+                    }
+                    None => spar_gw_with_set(&p, cfg.cost, &cfg.spar, &set).value,
+                };
+                (value, t0.elapsed().as_secs_f64())
+            });
+            let mut lats = Vec::with_capacity(results.len());
+            for (k, (value, lat)) in results.into_iter().enumerate() {
+                let (i, j) = pairs[k];
+                distances[(i, j)] = value;
+                distances[(j, i)] = value;
+                lats.push(lat);
+                native_pairs += 1;
+            }
+            metrics.record_batch(&lats, wall_start.elapsed().as_secs_f64());
+        }
+
+        Ok(PairwiseResult { distances, metrics, pjrt_pairs, native_pairs })
+    }
+}
+
+/// Similarity matrix `S = exp(−D/γ)` (Table 2/3 pipeline).
+pub fn similarity_from_distances(d: &Mat, gamma: f64) -> Mat {
+    d.map(|v| (-v / gamma).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::graphsets::imdb_b;
+
+    fn tiny_dataset() -> GraphDataset {
+        // Shrink IMDB-B to 8 graphs for fast tests.
+        let mut ds = imdb_b(3);
+        ds.graphs.truncate(8);
+        ds
+    }
+
+    #[test]
+    fn distance_matrix_symmetric_zero_diag() {
+        let ds = tiny_dataset();
+        let mut svc = PairwiseGw::new(PairwiseConfig {
+            spar: SparGwConfig { sample_size: 64, outer_iters: 5, inner_iters: 10, ..Default::default() },
+            ..Default::default()
+        });
+        let out = svc.pairwise(&ds).unwrap();
+        let n = ds.len();
+        assert_eq!(out.distances.shape(), (n, n));
+        for i in 0..n {
+            assert_eq!(out.distances[(i, i)], 0.0);
+            for j in 0..n {
+                assert_eq!(out.distances[(i, j)], out.distances[(j, i)]);
+                assert!(out.distances[(i, j)].is_finite());
+            }
+        }
+        assert_eq!(out.native_pairs, n * (n - 1) / 2);
+        assert_eq!(out.metrics.count(), n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let ds = tiny_dataset();
+        let mk = |workers| {
+            let mut svc = PairwiseGw::new(PairwiseConfig {
+                workers,
+                seed: 11,
+                spar: SparGwConfig { sample_size: 64, outer_iters: 4, inner_iters: 8, ..Default::default() },
+                ..Default::default()
+            });
+            svc.pairwise(&ds).unwrap().distances
+        };
+        let d1 = mk(1);
+        let d2 = mk(4);
+        for (x, y) in d1.data().iter().zip(d2.data()) {
+            assert_eq!(x, y, "worker count changed results");
+        }
+    }
+
+    #[test]
+    fn same_class_closer_than_cross_class() {
+        // The service output must carry class signal: mean intra-class
+        // distance < mean inter-class distance on IMDB-like data.
+        let mut ds = imdb_b(5);
+        ds.graphs.truncate(16);
+        let mut svc = PairwiseGw::new(PairwiseConfig {
+            seed: 7,
+            spar: SparGwConfig { sample_size: 0, outer_iters: 10, inner_iters: 20, ..Default::default() },
+            ..Default::default()
+        });
+        let out = svc.pairwise(&ds).unwrap();
+        let labels = ds.labels();
+        let (mut intra, mut inter) = (Vec::new(), Vec::new());
+        for i in 0..ds.len() {
+            for j in (i + 1)..ds.len() {
+                if labels[i] == labels[j] {
+                    intra.push(out.distances[(i, j)]);
+                } else {
+                    inter.push(out.distances[(i, j)]);
+                }
+            }
+        }
+        let mi = crate::util::mean(&intra);
+        let mx = crate::util::mean(&inter);
+        assert!(mi < mx, "intra {mi} !< inter {mx}");
+    }
+
+    #[test]
+    fn similarity_matrix_in_unit_range() {
+        let d = Mat::from_fn(3, 3, |i, j| ((i as f64) - (j as f64)).abs());
+        let s = similarity_from_distances(&d, 2.0);
+        for i in 0..3 {
+            assert_eq!(s[(i, i)], 1.0);
+            for j in 0..3 {
+                assert!(s[(i, j)] > 0.0 && s[(i, j)] <= 1.0);
+            }
+        }
+    }
+}

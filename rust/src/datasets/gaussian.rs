@@ -1,0 +1,122 @@
+//! The **Gaussian** dataset (Appendix C.1, following Kerdoncuff et al.
+//! 2021; Scetbon et al. 2022): heterogeneous spaces — the source is a
+//! 3-component Gaussian mixture in R⁵, the target a 2-component mixture in
+//! R¹⁰; relations are pairwise Euclidean distances, marginals the same
+//! truncated Gaussians as Moon.
+
+use super::{gaussian_marginal, pairwise_euclidean, Instance};
+use crate::rng::Rng;
+
+/// Sample the source mixture: N(μ₁,Σ), N(μ₂,Σ), N(μ₃,Σ) in R⁵ with
+/// (Σ)_{ij} = 0.6^{|i−j|} (sampled via its Cholesky factor).
+pub fn gaussian_source(n: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    let d = 5usize;
+    let mus: [[f64; 5]; 3] = [
+        [0.0; 5],
+        [1.0; 5],
+        [0.0, 2.0, 2.0, 0.0, 0.0],
+    ];
+    // Cholesky of the AR(1)-like covariance 0.6^{|i-j|}.
+    let rho: f64 = 0.6;
+    let mut chol = vec![vec![0.0f64; d]; d];
+    {
+        // Direct Cholesky on sigma[i][j] = rho^{|i-j|}.
+        let sigma = |i: usize, j: usize| rho.powi((i as i32 - j as i32).abs());
+        for i in 0..d {
+            for j in 0..=i {
+                let mut sum = sigma(i, j);
+                for k in 0..j {
+                    sum -= chol[i][k] * chol[j][k];
+                }
+                if i == j {
+                    chol[i][j] = sum.max(1e-12).sqrt();
+                } else {
+                    chol[i][j] = sum / chol[j][j];
+                }
+            }
+        }
+    }
+    (0..n)
+        .map(|_| {
+            let comp = rng.usize(3);
+            let z: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            (0..d)
+                .map(|i| {
+                    let mut x = mus[comp][i];
+                    for k in 0..=i {
+                        x += chol[i][k] * z[k];
+                    }
+                    x
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Sample the target mixture: N(0.5·1, I), N(2·1, I) in R¹⁰.
+pub fn gaussian_target(n: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    let d = 10usize;
+    (0..n)
+        .map(|_| {
+            let mu = if rng.bool(0.5) { 0.5 } else { 2.0 };
+            (0..d).map(|_| mu + rng.normal()).collect()
+        })
+        .collect()
+}
+
+/// Full Gaussian instance (heterogeneous R⁵ → R¹⁰).
+pub fn gaussian(n: usize, rng: &mut Rng) -> Instance {
+    let src = gaussian_source(n, rng);
+    let tgt = gaussian_target(n, rng);
+    let cx = pairwise_euclidean(&src);
+    let cy = pairwise_euclidean(&tgt);
+    let a = gaussian_marginal(n, n as f64 / 3.0, n as f64 / 20.0);
+    let b = gaussian_marginal(n, n as f64 / 2.0, n as f64 / 20.0);
+    Instance { cx, cy, a, b, feat: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn dimensions() {
+        let mut rng = Xoshiro256::new(1);
+        let src = gaussian_source(30, &mut rng);
+        let tgt = gaussian_target(30, &mut rng);
+        assert!(src.iter().all(|p| p.len() == 5));
+        assert!(tgt.iter().all(|p| p.len() == 10));
+    }
+
+    #[test]
+    fn source_covariance_structure() {
+        // Adjacent coordinates correlate (~0.6) within a component.
+        let mut rng = Xoshiro256::new(2);
+        let pts = gaussian_source(4000, &mut rng);
+        // Use only component near mu=0 (filter by norm) to avoid mixture
+        // effects: estimate correlation of coords 0 and 1 across all (the
+        // mixture inflates it, so just check positivity and magnitude).
+        let m0 = crate::util::mean(&pts.iter().map(|p| p[0]).collect::<Vec<_>>());
+        let m1 = crate::util::mean(&pts.iter().map(|p| p[1]).collect::<Vec<_>>());
+        let mut cov = 0.0;
+        let mut v0 = 0.0;
+        let mut v1 = 0.0;
+        for p in &pts {
+            cov += (p[0] - m0) * (p[1] - m1);
+            v0 += (p[0] - m0) * (p[0] - m0);
+            v1 += (p[1] - m1) * (p[1] - m1);
+        }
+        let corr = cov / (v0.sqrt() * v1.sqrt());
+        assert!(corr > 0.3, "corr {corr}");
+    }
+
+    #[test]
+    fn instance_well_formed() {
+        let mut rng = Xoshiro256::new(3);
+        let inst = gaussian(25, &mut rng);
+        assert_eq!(inst.cx.shape(), (25, 25));
+        assert_eq!(inst.cy.shape(), (25, 25));
+        assert!((inst.a.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,155 @@
+//! The **Graph** dataset (§6.1, following Xu et al. 2019b,a): a power-law
+//! graph (Barabási–Albert preferential attachment, NetworkX-equivalent)
+//! and a noisy copy with extra random edges (p = 0.2); marginals are the
+//! normalized degree distributions and relations are adjacency matrices.
+
+use super::Instance;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Barabási–Albert preferential-attachment graph: n nodes, each new node
+/// attaches to `m_attach` existing nodes. Returns the adjacency matrix.
+pub fn barabasi_albert(n: usize, m_attach: usize, rng: &mut Rng) -> Mat {
+    assert!(n >= 2);
+    let m_attach = m_attach.clamp(1, n - 1);
+    let mut adj = Mat::zeros(n, n);
+    // Repeated-nodes list for preferential attachment.
+    let mut targets: Vec<usize> = Vec::new();
+    // Seed: a small clique of m_attach+1 nodes.
+    let seed = m_attach + 1;
+    for i in 0..seed.min(n) {
+        for j in (i + 1)..seed.min(n) {
+            adj[(i, j)] = 1.0;
+            adj[(j, i)] = 1.0;
+            targets.push(i);
+            targets.push(j);
+        }
+    }
+    for v in seed..n {
+        let mut chosen: Vec<usize> = Vec::with_capacity(m_attach);
+        let mut guard = 0;
+        while chosen.len() < m_attach && guard < 50 * m_attach {
+            guard += 1;
+            let t = if targets.is_empty() {
+                rng.usize(v)
+            } else {
+                targets[rng.usize(targets.len())]
+            };
+            if t != v && !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        for &t in &chosen {
+            adj[(v, t)] = 1.0;
+            adj[(t, v)] = 1.0;
+            targets.push(v);
+            targets.push(t);
+        }
+    }
+    adj
+}
+
+/// Add each missing edge independently with probability `p`.
+pub fn perturb_edges(adj: &Mat, p: f64, rng: &mut Rng) -> Mat {
+    let n = adj.rows();
+    let mut out = adj.clone();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if out[(i, j)] == 0.0 && rng.bool(p) {
+                out[(i, j)] = 1.0;
+                out[(j, i)] = 1.0;
+            }
+        }
+    }
+    out
+}
+
+/// Normalized degree distribution of an adjacency matrix.
+pub fn degree_marginal(adj: &Mat) -> Vec<f64> {
+    let mut deg = adj.row_sums();
+    // Isolated nodes get a tiny floor so the marginal stays positive.
+    for d in &mut deg {
+        if *d <= 0.0 {
+            *d = 0.5;
+        }
+    }
+    crate::util::normalize(&mut deg);
+    deg
+}
+
+/// Full Graph instance: BA graph + 0.2-noised copy, degree marginals,
+/// adjacency relations.
+pub fn graph_pair(n: usize, rng: &mut Rng) -> Instance {
+    let cx = barabasi_albert(n, 2, rng);
+    let cy = perturb_edges(&cx, 0.2, rng);
+    let a = degree_marginal(&cx);
+    let b = degree_marginal(&cy);
+    Instance { cx, cy, a, b, feat: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn ba_graph_is_connected_symmetric() {
+        let mut rng = Xoshiro256::new(1);
+        let adj = barabasi_albert(30, 2, &mut rng);
+        // Symmetric 0/1.
+        for i in 0..30 {
+            assert_eq!(adj[(i, i)], 0.0);
+            for j in 0..30 {
+                assert_eq!(adj[(i, j)], adj[(j, i)]);
+                assert!(adj[(i, j)] == 0.0 || adj[(i, j)] == 1.0);
+            }
+        }
+        // Connected: BFS reaches everyone.
+        let mut seen = vec![false; 30];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(v) = stack.pop() {
+            for j in 0..30 {
+                if adj[(v, j)] > 0.0 && !seen[j] {
+                    seen[j] = true;
+                    stack.push(j);
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "graph disconnected");
+    }
+
+    #[test]
+    fn power_law_ish_degrees() {
+        // Preferential attachment: max degree well above the median.
+        let mut rng = Xoshiro256::new(2);
+        let adj = barabasi_albert(100, 2, &mut rng);
+        let mut deg = adj.row_sums();
+        deg.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = deg[50];
+        let max = deg[99];
+        assert!(max >= 3.0 * median, "max {max} vs median {median}");
+    }
+
+    #[test]
+    fn perturbation_only_adds() {
+        let mut rng = Xoshiro256::new(3);
+        let adj = barabasi_albert(20, 2, &mut rng);
+        let noisy = perturb_edges(&adj, 0.2, &mut rng);
+        for i in 0..20 {
+            for j in 0..20 {
+                assert!(noisy[(i, j)] >= adj[(i, j)]);
+            }
+        }
+        assert!(noisy.sum() > adj.sum());
+    }
+
+    #[test]
+    fn instance_marginals_normalized() {
+        let mut rng = Xoshiro256::new(4);
+        let inst = graph_pair(25, &mut rng);
+        assert!((inst.a.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((inst.b.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(inst.a.iter().all(|&x| x > 0.0));
+    }
+}

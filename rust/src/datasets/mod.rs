@@ -1,0 +1,69 @@
+//! Dataset generators reproducing the paper's evaluation workloads (§6,
+//! Appendix C) plus the synthetic stand-ins for the TU graph benchmarks
+//! (see DESIGN.md §4 for the substitution rationale).
+
+pub mod gaussian;
+pub mod graph;
+pub mod graphsets;
+pub mod moon;
+pub mod relation;
+pub mod spiral;
+
+pub use relation::{euclidean_relation, pairwise_euclidean};
+
+use crate::linalg::Mat;
+
+/// A GW problem instance produced by a generator: a pair of
+/// metric-measure spaces.
+pub struct Instance {
+    /// Source relation matrix.
+    pub cx: Mat,
+    /// Target relation matrix.
+    pub cy: Mat,
+    /// Source marginal.
+    pub a: Vec<f64>,
+    /// Target marginal.
+    pub b: Vec<f64>,
+    /// Optional feature distance matrix (for FGW experiments).
+    pub feat: Option<Mat>,
+}
+
+impl Instance {
+    /// Borrow as a `GwProblem`.
+    pub fn problem(&self) -> crate::gw::GwProblem<'_> {
+        crate::gw::GwProblem::new(&self.cx, &self.cy, &self.a, &self.b)
+    }
+}
+
+/// Truncated-Gaussian marginal on n support points, as in the Moon/Graph
+/// setups: weights ∝ N(center, sd) evaluated on indices 0..n, normalized.
+pub fn gaussian_marginal(n: usize, center: f64, sd: f64) -> Vec<f64> {
+    let mut w: Vec<f64> = (0..n)
+        .map(|i| {
+            let z = (i as f64 - center) / sd;
+            (-0.5 * z * z).exp()
+        })
+        .collect();
+    // Guard against total underflow far from the center.
+    if w.iter().sum::<f64>() <= 0.0 {
+        w = vec![1.0; n];
+    }
+    crate::util::normalize(&mut w);
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_marginal_is_distribution() {
+        let a = gaussian_marginal(50, 50.0 / 3.0, 50.0 / 20.0);
+        assert_eq!(a.len(), 50);
+        assert!((a.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(a.iter().all(|&x| x >= 0.0));
+        // Mass concentrates near the center.
+        let peak = (50.0f64 / 3.0).round() as usize;
+        assert!(a[peak] > a[40]);
+    }
+}

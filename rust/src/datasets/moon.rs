@@ -1,0 +1,81 @@
+//! The **Moon** dataset (§6.1, following Séjourné et al. 2021; Muzellec et
+//! al. 2020): source and target support points on two interleaving half
+//! circles (sklearn's `make_moons` geometry), marginals truncated
+//! Gaussians N(n/3, n/20) and N(n/2, n/20) on the point indices, relations
+//! = pairwise Euclidean distances in R².
+
+use super::{gaussian_marginal, pairwise_euclidean, Instance};
+use crate::rng::Rng;
+
+/// Generate the two half-circle point sets with Gaussian coordinate noise.
+pub fn moon_points(n: usize, noise: f64, rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    use std::f64::consts::PI;
+    let outer: Vec<Vec<f64>> = (0..n)
+        .map(|i| {
+            let t = PI * i as f64 / (n.max(2) - 1) as f64;
+            vec![t.cos() + noise * rng.normal(), t.sin() + noise * rng.normal()]
+        })
+        .collect();
+    let inner: Vec<Vec<f64>> = (0..n)
+        .map(|i| {
+            let t = PI * i as f64 / (n.max(2) - 1) as f64;
+            vec![
+                1.0 - t.cos() + noise * rng.normal(),
+                0.5 - t.sin() + noise * rng.normal(),
+            ]
+        })
+        .collect();
+    (outer, inner)
+}
+
+/// Full Moon instance: points + Gaussian marginals + Euclidean relations.
+pub fn moon(n: usize, rng: &mut Rng) -> Instance {
+    let (src, tgt) = moon_points(n, 0.05, rng);
+    let cx = pairwise_euclidean(&src);
+    let cy = pairwise_euclidean(&tgt);
+    let a = gaussian_marginal(n, n as f64 / 3.0, n as f64 / 20.0);
+    let b = gaussian_marginal(n, n as f64 / 2.0, n as f64 / 20.0);
+    Instance { cx, cy, a, b, feat: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn shapes_and_marginals() {
+        let mut rng = Xoshiro256::new(1);
+        let inst = moon(40, &mut rng);
+        assert_eq!(inst.cx.shape(), (40, 40));
+        assert_eq!(inst.cy.shape(), (40, 40));
+        assert!((inst.a.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((inst.b.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn half_circles_interleave() {
+        let mut rng = Xoshiro256::new(2);
+        let (outer, inner) = moon_points(50, 0.0, &mut rng);
+        // Outer moon spans y >= 0; inner spans y <= 0.5.
+        assert!(outer.iter().all(|p| p[1] >= -0.01));
+        assert!(inner.iter().all(|p| p[1] <= 0.51));
+        // They overlap horizontally (interleaving).
+        let omax = outer.iter().map(|p| p[0]).fold(f64::MIN, f64::max);
+        let imin = inner.iter().map(|p| p[0]).fold(f64::MAX, f64::min);
+        assert!(imin < omax);
+    }
+
+    #[test]
+    fn relations_symmetric_nonneg() {
+        let mut rng = Xoshiro256::new(3);
+        let inst = moon(20, &mut rng);
+        for i in 0..20 {
+            assert_eq!(inst.cx[(i, i)], 0.0);
+            for j in 0..20 {
+                assert!(inst.cx[(i, j)] >= 0.0);
+                assert_eq!(inst.cx[(i, j)], inst.cx[(j, i)]);
+            }
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Relation-matrix builders shared by the dataset generators.
+
+use crate::linalg::{sqdist, Mat};
+
+/// Pairwise Euclidean distance matrix of a point set.
+pub fn pairwise_euclidean(points: &[Vec<f64>]) -> Mat {
+    let n = points.len();
+    Mat::from_fn(n, n, |i, j| sqdist(&points[i], &points[j]).sqrt())
+}
+
+/// Euclidean relation matrix between two *different* point sets (used as
+/// the FGW feature matrix M).
+pub fn euclidean_relation(xs: &[Vec<f64>], ys: &[Vec<f64>]) -> Mat {
+    Mat::from_fn(xs.len(), ys.len(), |i, j| sqdist(&xs[i], &ys[j]).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn euclidean_properties() {
+        let pts = vec![vec![0.0, 0.0], vec![3.0, 4.0], vec![0.0, 1.0]];
+        let d = pairwise_euclidean(&pts);
+        assert_eq!(d[(0, 1)], 5.0);
+        assert_eq!(d[(0, 0)], 0.0);
+        assert_eq!(d[(0, 2)], 1.0);
+        // Symmetry
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(d[(i, j)], d[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_relation_shape() {
+        let xs = vec![vec![0.0], vec![1.0]];
+        let ys = vec![vec![0.5], vec![1.5], vec![2.5]];
+        let m = euclidean_relation(&xs, &ys);
+        assert_eq!(m.shape(), (2, 3));
+        assert!((m[(1, 2)] - 1.5).abs() < 1e-12);
+    }
+}

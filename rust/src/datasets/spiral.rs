@@ -1,0 +1,89 @@
+//! The **Spiral** dataset (Appendix C.1, following Titouan et al. 2019b;
+//! Weitkamp et al. 2020): source points on a noisy spiral in R², target =
+//! rotated (π/4) and translated copy.
+
+use super::{gaussian_marginal, pairwise_euclidean, Instance};
+use crate::rng::Rng;
+
+/// Source spiral: μ_s = (−3π√r·cos(3π√r) + u, 3π√r·sin(3π√r) + u′) − μ₀
+/// with r, u, u′ ~ U(0,1) i.i.d. and μ₀ = (10, 10).
+pub fn spiral_source(n: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    use std::f64::consts::PI;
+    (0..n)
+        .map(|_| {
+            let r = rng.f64();
+            let u = rng.f64();
+            let up = rng.f64();
+            let t = 3.0 * PI * r.sqrt();
+            vec![-t * t.cos() + u - 10.0, t * t.sin() + up - 10.0]
+        })
+        .collect()
+}
+
+/// Target: R·μ_s + 2μ₀ with R the π/4 rotation.
+pub fn spiral_target(source: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    use std::f64::consts::FRAC_PI_4;
+    let (c, s) = (FRAC_PI_4.cos(), FRAC_PI_4.sin());
+    source
+        .iter()
+        .map(|p| vec![c * p[0] - s * p[1] + 20.0, s * p[0] + c * p[1] + 20.0])
+        .collect()
+}
+
+/// Full Spiral instance.
+pub fn spiral(n: usize, rng: &mut Rng) -> Instance {
+    let src = spiral_source(n, rng);
+    let tgt = spiral_target(&src);
+    let cx = pairwise_euclidean(&src);
+    let cy = pairwise_euclidean(&tgt);
+    let a = gaussian_marginal(n, n as f64 / 3.0, n as f64 / 20.0);
+    let b = gaussian_marginal(n, n as f64 / 2.0, n as f64 / 20.0);
+    Instance { cx, cy, a, b, feat: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn rotation_preserves_distances() {
+        // The target is an isometry of the source: relation matrices are
+        // (numerically) identical ⇒ GW should be ~0 with equal marginals.
+        let mut rng = Xoshiro256::new(1);
+        let src = spiral_source(20, &mut rng);
+        let tgt = spiral_target(&src);
+        let cx = pairwise_euclidean(&src);
+        let cy = pairwise_euclidean(&tgt);
+        for i in 0..20 {
+            for j in 0..20 {
+                assert!(
+                    (cx[(i, j)] - cy[(i, j)]).abs() < 1e-9,
+                    "distance mismatch at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn instance_well_formed() {
+        let mut rng = Xoshiro256::new(2);
+        let inst = spiral(30, &mut rng);
+        assert_eq!(inst.cx.shape(), (30, 30));
+        assert!((inst.b.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spiral_spans_growing_radius() {
+        let mut rng = Xoshiro256::new(3);
+        let src = spiral_source(200, &mut rng);
+        // Radii (relative to the −μ₀ offset center) spread over a wide range.
+        let radii: Vec<f64> = src
+            .iter()
+            .map(|p| ((p[0] + 10.0).powi(2) + (p[1] + 10.0).powi(2)).sqrt())
+            .collect();
+        let max = radii.iter().cloned().fold(f64::MIN, f64::max);
+        let min = radii.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max > 5.0 * (min + 0.1), "radius range [{min}, {max}]");
+    }
+}

@@ -1,0 +1,256 @@
+//! Algorithm 1 — the dense iterative scheme for (entropic / proximal) GW,
+//! plus the EMD-GW baseline (ε = 0 with an exact inner OT solver).
+
+use super::cost::GroundCost;
+use super::tensor::tensor_product;
+use super::{DenseGwResult, GwProblem, Regularizer};
+use crate::linalg::Mat;
+use crate::ot::{emd, sinkhorn};
+
+/// Configuration for the dense Algorithm-1 solvers.
+#[derive(Clone, Copy, Debug)]
+pub struct Alg1Config {
+    /// Regularization weight ε of subproblem (4).
+    pub epsilon: f64,
+    /// Outer iterations R.
+    pub outer_iters: usize,
+    /// Inner Sinkhorn iterations H.
+    pub inner_iters: usize,
+    /// Outer stopping tolerance on ‖T⁽ʳ⁺¹⁾ − T⁽ʳ⁾‖_F (0 disables).
+    pub tol: f64,
+}
+
+impl Default for Alg1Config {
+    fn default() -> Self {
+        Alg1Config { epsilon: 0.01, outer_iters: 20, inner_iters: 50, tol: 1e-9 }
+    }
+}
+
+/// Build the Sinkhorn kernel `exp(−C/ε)` (optionally ⊙ T for the proximal
+/// variant) with a row/column min reduction first: balanced Sinkhorn
+/// projections are invariant to `C_ij ← C_ij − r_i − c_j` (the shifts are
+/// absorbed by the scaling vectors), and the reduction keeps the exponent
+/// small so the kernel does not underflow when the cost scale ≫ ε.
+pub(crate) fn stabilized_kernel(c: &Mat, t: Option<&Mat>, eps: f64) -> Mat {
+    let (m, n) = c.shape();
+    // Row mins.
+    let row_min: Vec<f64> = (0..m)
+        .map(|i| c.row(i).iter().cloned().fold(f64::INFINITY, f64::min))
+        .collect();
+    // Column mins of the row-reduced matrix.
+    let mut col_min = vec![f64::INFINITY; n];
+    for i in 0..m {
+        let crow = c.row(i);
+        for j in 0..n {
+            let v = crow[j] - row_min[i];
+            if v < col_min[j] {
+                col_min[j] = v;
+            }
+        }
+    }
+    let mut k = Mat::zeros(m, n);
+    for i in 0..m {
+        let crow = c.row(i);
+        let krow = k.row_mut(i);
+        for j in 0..n {
+            let e = (-(crow[j] - row_min[i] - col_min[j]) / eps).exp();
+            krow[j] = match t {
+                Some(t) => e * t[(i, j)],
+                None => e,
+            };
+        }
+    }
+    k
+}
+
+/// One shared implementation of Algorithm 1 for both regularizers.
+fn alg1(p: &GwProblem, cost: GroundCost, reg: Regularizer, cfg: &Alg1Config) -> DenseGwResult {
+    let mut t = Mat::outer(p.a, p.b); // T⁽⁰⁾ = a bᵀ
+    let mut converged = false;
+    let mut outer = 0;
+    for _r in 0..cfg.outer_iters {
+        // Step 4a: cost matrix C(T⁽ʳ⁾).
+        let c = tensor_product(p.cx, p.cy, &t, cost);
+        // Step 4b: kernel matrix (stabilized; see `stabilized_kernel`).
+        let k = match reg {
+            Regularizer::Proximal => stabilized_kernel(&c, Some(&t), cfg.epsilon),
+            Regularizer::Entropy => stabilized_kernel(&c, None, cfg.epsilon),
+        };
+        // Step 5: Sinkhorn projection.
+        let res = sinkhorn(p.a, p.b, &k, cfg.inner_iters, 0.0);
+        let t_next = res.plan;
+        outer += 1;
+        if cfg.tol > 0.0 {
+            let mut diff = 0.0;
+            for (x, y) in t_next.data().iter().zip(t.data()) {
+                let d = x - y;
+                diff += d * d;
+            }
+            if diff.sqrt() < cfg.tol {
+                t = t_next;
+                converged = true;
+                break;
+            }
+        }
+        t = t_next;
+    }
+    // Output: GW = ⟨C(T⁽ᴿ⁾), T⁽ᴿ⁾⟩.
+    let c_final = tensor_product(p.cx, p.cy, &t, cost);
+    let value = c_final.frob_inner(&t);
+    DenseGwResult { value, plan: t, outer_iters: outer, converged }
+}
+
+/// Entropic GW (Peyré et al. 2016): Algorithm 1 with `R(T) = H(T)`.
+pub fn egw(p: &GwProblem, cost: GroundCost, cfg: &Alg1Config) -> DenseGwResult {
+    alg1(p, cost, Regularizer::Entropy, cfg)
+}
+
+/// Proximal-gradient GW (Xu et al. 2019b): `R(T) = KL(T ‖ T⁽ʳ⁾)`.
+/// This is the paper's accuracy benchmark in Figures 2/5/6.
+pub fn pga_gw(p: &GwProblem, cost: GroundCost, cfg: &Alg1Config) -> DenseGwResult {
+    alg1(p, cost, Regularizer::Proximal, cfg)
+}
+
+/// EMD-GW: ε = 0 — each subproblem is the unregularized LP
+/// `min ⟨C(T⁽ʳ⁾), T⟩` solved exactly by the transportation simplex
+/// (conditional gradient with unit step, per §6.1(iii)).
+pub fn emd_gw(p: &GwProblem, cost: GroundCost, cfg: &Alg1Config) -> DenseGwResult {
+    let mut t = Mat::outer(p.a, p.b);
+    let mut converged = false;
+    let mut outer = 0;
+    for _r in 0..cfg.outer_iters {
+        let c = tensor_product(p.cx, p.cy, &t, cost);
+        let res = emd(p.a, p.b, &c);
+        let t_next = res.plan;
+        outer += 1;
+        if cfg.tol > 0.0 {
+            let mut diff = 0.0;
+            for (x, y) in t_next.data().iter().zip(t.data()) {
+                let d = x - y;
+                diff += d * d;
+            }
+            if diff.sqrt() < cfg.tol {
+                t = t_next;
+                converged = true;
+                break;
+            }
+        }
+        t = t_next;
+    }
+    let c_final = tensor_product(p.cx, p.cy, &t, cost);
+    let value = c_final.frob_inner(&t);
+    DenseGwResult { value, plan: t, outer_iters: outer, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::util::uniform;
+
+    /// Euclidean distance matrix of random 2-D points.
+    fn point_cloud_relation(n: usize, seed: u64, shift: f64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        let pts: Vec<[f64; 2]> = (0..n)
+            .map(|_| [rng.f64() + shift, rng.f64() * 2.0])
+            .collect();
+        Mat::from_fn(n, n, |i, j| {
+            let dx = pts[i][0] - pts[j][0];
+            let dy = pts[i][1] - pts[j][1];
+            (dx * dx + dy * dy).sqrt()
+        })
+    }
+
+    #[test]
+    fn identical_spaces_give_zero() {
+        let n = 8;
+        let c = point_cloud_relation(n, 42, 0.0);
+        let a = uniform(n);
+        let p = GwProblem::new(&c, &c, &a, &a);
+        let cfg = Alg1Config { epsilon: 0.005, outer_iters: 50, inner_iters: 100, tol: 1e-10 };
+        for cost in [GroundCost::L1, GroundCost::L2] {
+            let r = pga_gw(&p, cost, &cfg);
+            assert!(r.value < 5e-3, "{cost:?}: GW = {}", r.value);
+        }
+    }
+
+    #[test]
+    fn invariant_to_permutation() {
+        // GW between a space and a permuted copy is ~0.
+        let n = 7;
+        let c = point_cloud_relation(n, 3, 0.0);
+        let perm: Vec<usize> = vec![3, 1, 4, 0, 6, 2, 5];
+        let cp = Mat::from_fn(n, n, |i, j| c[(perm[i], perm[j])]);
+        let a = uniform(n);
+        let p = GwProblem::new(&c, &cp, &a, &a);
+        let cfg = Alg1Config { epsilon: 0.005, outer_iters: 60, inner_iters: 100, tol: 1e-10 };
+        let r = pga_gw(&p, GroundCost::L2, &cfg);
+        assert!(r.value < 5e-3, "GW = {}", r.value);
+    }
+
+    #[test]
+    fn distinct_spaces_give_positive() {
+        let c1 = point_cloud_relation(8, 1, 0.0);
+        let mut c2 = point_cloud_relation(8, 2, 0.0);
+        c2.scale(3.0); // different scale ⇒ genuinely different geometry
+        let a = uniform(8);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let cfg = Alg1Config::default();
+        let r = pga_gw(&p, GroundCost::L2, &cfg);
+        assert!(r.value > 0.01, "GW = {}", r.value);
+    }
+
+    #[test]
+    fn plan_is_feasible() {
+        let c1 = point_cloud_relation(6, 5, 0.0);
+        let c2 = point_cloud_relation(9, 6, 1.0);
+        let a = uniform(6);
+        let b = uniform(9);
+        let p = GwProblem::new(&c1, &c2, &a, &b);
+        let cfg = Alg1Config { inner_iters: 300, ..Default::default() };
+        let r = egw(&p, GroundCost::L2, &cfg);
+        let rows = r.plan.row_sums();
+        let cols = r.plan.col_sums();
+        for (x, y) in rows.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-3, "row marginal {x} vs {y}");
+        }
+        for (x, y) in cols.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3, "col marginal {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn emd_gw_runs_and_is_feasible() {
+        let c1 = point_cloud_relation(6, 7, 0.0);
+        let c2 = point_cloud_relation(6, 8, 0.5);
+        let a = uniform(6);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let cfg = Alg1Config { epsilon: 0.0, outer_iters: 15, inner_iters: 0, tol: 1e-10 };
+        let r = emd_gw(&p, GroundCost::L2, &cfg);
+        assert!(r.value >= -1e-10);
+        let rows = r.plan.row_sums();
+        for (x, y) in rows.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn egw_and_pga_agree_roughly() {
+        // Both approximate the same objective; values should be in the same
+        // ballpark on an easy instance.
+        let c1 = point_cloud_relation(8, 9, 0.0);
+        let c2 = point_cloud_relation(8, 10, 0.3);
+        let a = uniform(8);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let cfg = Alg1Config { epsilon: 0.01, outer_iters: 40, inner_iters: 80, tol: 1e-10 };
+        let r1 = egw(&p, GroundCost::L2, &cfg);
+        let r2 = pga_gw(&p, GroundCost::L2, &cfg);
+        let denom = r1.value.abs().max(r2.value.abs()).max(1e-6);
+        assert!(
+            (r1.value - r2.value).abs() / denom < 0.5,
+            "egw {} vs pga {}",
+            r1.value,
+            r2.value
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! Ground cost functions `L : R × R → R` for the GW objective.
+//!
+//! The paper's key generality claim is that Spar-GW handles *arbitrary*
+//! ground costs, whereas the decomposable-only baselines (EGW with the
+//! Peyré trick, LR-GW, …) require
+//! `L(x, y) = f1(x) + f2(y) − h1(x) h2(y)`.
+//! ℓ2 and KL admit such decompositions; ℓ1 does not.
+
+/// Ground cost selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GroundCost {
+    /// ℓ1 loss `|x − y|` — indecomposable; the stress case of the paper.
+    L1,
+    /// Squared ℓ2 loss `(x − y)²` — decomposable.
+    L2,
+    /// KL divergence `x log(x/y) − x + y` (x, y > 0) — decomposable.
+    Kl,
+}
+
+/// Decomposition `L(x,y) = f1(x) + f2(y) − h1(x)·h2(y)` (Peyré et al. 2016).
+pub struct Decomposition {
+    pub f1: fn(f64) -> f64,
+    pub f2: fn(f64) -> f64,
+    pub h1: fn(f64) -> f64,
+    pub h2: fn(f64) -> f64,
+}
+
+impl GroundCost {
+    /// Evaluate the cost on a pair of relation values.
+    #[inline]
+    pub fn eval(self, x: f64, y: f64) -> f64 {
+        match self {
+            GroundCost::L1 => (x - y).abs(),
+            GroundCost::L2 => {
+                let d = x - y;
+                d * d
+            }
+            GroundCost::Kl => {
+                // 0 log 0 := 0; guard y for padded zeros.
+                if x <= 0.0 {
+                    y
+                } else {
+                    x * (x / y.max(1e-300)).ln() - x + y
+                }
+            }
+        }
+    }
+
+    /// The `(f1,f2,h1,h2)` decomposition if one exists.
+    pub fn decomposition(self) -> Option<Decomposition> {
+        match self {
+            GroundCost::L1 => None,
+            GroundCost::L2 => Some(Decomposition {
+                // (x−y)² = x² + y² − (x)(2y)
+                f1: |x| x * x,
+                f2: |y| y * y,
+                h1: |x| x,
+                h2: |y| 2.0 * y,
+            }),
+            GroundCost::Kl => Some(Decomposition {
+                // x log x − x + y − x·log y
+                f1: |x| if x > 0.0 { x * x.ln() - x } else { 0.0 },
+                f2: |y| y,
+                h1: |x| x,
+                h2: |y| y.max(1e-300).ln(),
+            }),
+        }
+    }
+
+    /// True if a decomposition exists (drives the fast dense path).
+    pub fn is_decomposable(self) -> bool {
+        !matches!(self, GroundCost::L1)
+    }
+
+    /// Short display name used by the bench harness.
+    pub fn name(self) -> &'static str {
+        match self {
+            GroundCost::L1 => "l1",
+            GroundCost::L2 => "l2",
+            GroundCost::Kl => "kl",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_basics() {
+        assert_eq!(GroundCost::L1.eval(3.0, 1.0), 2.0);
+        assert_eq!(GroundCost::L2.eval(3.0, 1.0), 4.0);
+        assert!(GroundCost::Kl.eval(1.0, 1.0).abs() < 1e-12);
+        assert!(GroundCost::Kl.eval(2.0, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn decompositions_reconstruct_cost() {
+        for cost in [GroundCost::L2, GroundCost::Kl] {
+            let d = cost.decomposition().unwrap();
+            for &x in &[0.3, 1.0, 2.5] {
+                for &y in &[0.2, 1.0, 3.0] {
+                    let direct = cost.eval(x, y);
+                    let via = (d.f1)(x) + (d.f2)(y) - (d.h1)(x) * (d.h2)(y);
+                    assert!(
+                        (direct - via).abs() < 1e-12,
+                        "{cost:?} at ({x},{y}): {direct} vs {via}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn l1_not_decomposable() {
+        assert!(GroundCost::L1.decomposition().is_none());
+        assert!(!GroundCost::L1.is_decomposable());
+        assert!(GroundCost::L2.is_decomposable());
+    }
+
+    #[test]
+    fn costs_nonnegative() {
+        for cost in [GroundCost::L1, GroundCost::L2, GroundCost::Kl] {
+            for &x in &[0.1, 0.9, 4.0] {
+                for &y in &[0.1, 1.1, 5.0] {
+                    assert!(cost.eval(x, y) >= -1e-12, "{cost:?}({x},{y})");
+                }
+            }
+        }
+    }
+}

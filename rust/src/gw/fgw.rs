@@ -1,0 +1,220 @@
+//! Fused Gromov-Wasserstein distance (Titouan et al. 2019a; Vayer et al.
+//! 2020) — Appendix A of the paper.
+//!
+//! `FGW = min_T α⟨L(Cx,Cy) ⊗ T, T⟩ + (1−α)⟨M, T⟩`
+//!
+//! where `M` is the feature distance matrix. Algorithm 1 applies verbatim
+//! with the fused cost `C_fu(T) = α·L(Cx,Cy)⊗T + (1−α)·M`.
+
+use super::alg1::Alg1Config;
+use super::cost::GroundCost;
+use super::tensor::tensor_product;
+use super::{DenseGwResult, GwProblem, Regularizer};
+use crate::linalg::Mat;
+use crate::ot::{emd, sinkhorn};
+
+/// A fused GW problem: structure (relation matrices) + features (M).
+#[derive(Clone, Copy)]
+pub struct FgwProblem<'a> {
+    /// The structural part.
+    pub gw: GwProblem<'a>,
+    /// Feature distance matrix, m × n.
+    pub feat: &'a Mat,
+    /// Trade-off α in \[0,1\]: 1 → pure GW, 0 → pure Wasserstein.
+    pub alpha: f64,
+}
+
+impl<'a> FgwProblem<'a> {
+    pub fn new(gw: GwProblem<'a>, feat: &'a Mat, alpha: f64) -> Self {
+        assert_eq!(feat.shape(), (gw.m(), gw.n()), "feature matrix shape");
+        assert!((0.0..=1.0).contains(&alpha), "alpha in [0,1]");
+        FgwProblem { gw, feat, alpha }
+    }
+
+    /// Fused cost `C_fu(T)`.
+    pub fn fused_cost(&self, t: &Mat, cost: GroundCost) -> Mat {
+        let mut c = tensor_product(self.gw.cx, self.gw.cy, t, cost);
+        c.scale(self.alpha);
+        c.axpy(1.0 - self.alpha, self.feat);
+        c
+    }
+
+    /// Fused objective at `T`.
+    pub fn objective(&self, t: &Mat, cost: GroundCost) -> f64 {
+        let gw_term = tensor_product(self.gw.cx, self.gw.cy, t, cost).frob_inner(t);
+        self.alpha * gw_term + (1.0 - self.alpha) * self.feat.frob_inner(t)
+    }
+}
+
+/// Dense Algorithm-1 loop with the fused cost.
+fn fgw_alg1(
+    p: &FgwProblem,
+    cost: GroundCost,
+    reg: Regularizer,
+    cfg: &Alg1Config,
+) -> DenseGwResult {
+    let mut t = Mat::outer(p.gw.a, p.gw.b);
+    let mut converged = false;
+    let mut outer = 0;
+    for _ in 0..cfg.outer_iters {
+        let c = p.fused_cost(&t, cost);
+        let k = match reg {
+            Regularizer::Proximal => super::alg1::stabilized_kernel(&c, Some(&t), cfg.epsilon),
+            Regularizer::Entropy => super::alg1::stabilized_kernel(&c, None, cfg.epsilon),
+        };
+        let res = sinkhorn(p.gw.a, p.gw.b, &k, cfg.inner_iters, 0.0);
+        outer += 1;
+        if cfg.tol > 0.0 {
+            let mut diff = 0.0;
+            for (x, y) in res.plan.data().iter().zip(t.data()) {
+                let d = x - y;
+                diff += d * d;
+            }
+            t = res.plan;
+            if diff.sqrt() < cfg.tol {
+                converged = true;
+                break;
+            }
+        } else {
+            t = res.plan;
+        }
+    }
+    let value = p.objective(&t, cost);
+    DenseGwResult { value, plan: t, outer_iters: outer, converged }
+}
+
+/// Entropic fused GW.
+pub fn egw_fgw(p: &FgwProblem, cost: GroundCost, cfg: &Alg1Config) -> DenseGwResult {
+    fgw_alg1(p, cost, Regularizer::Entropy, cfg)
+}
+
+/// Proximal fused GW — the FGW accuracy benchmark.
+pub fn pga_fgw(p: &FgwProblem, cost: GroundCost, cfg: &Alg1Config) -> DenseGwResult {
+    fgw_alg1(p, cost, Regularizer::Proximal, cfg)
+}
+
+/// EMD-FGW: exact inner OT, ε = 0.
+pub fn emd_fgw(p: &FgwProblem, cost: GroundCost, cfg: &Alg1Config) -> DenseGwResult {
+    let mut t = Mat::outer(p.gw.a, p.gw.b);
+    let mut outer = 0;
+    let mut converged = false;
+    for _ in 0..cfg.outer_iters {
+        let c = p.fused_cost(&t, cost);
+        let res = emd(p.gw.a, p.gw.b, &c);
+        outer += 1;
+        if cfg.tol > 0.0 {
+            let mut diff = 0.0;
+            for (x, y) in res.plan.data().iter().zip(t.data()) {
+                let d = x - y;
+                diff += d * d;
+            }
+            t = res.plan;
+            if diff.sqrt() < cfg.tol {
+                converged = true;
+                break;
+            }
+        } else {
+            t = res.plan;
+        }
+    }
+    let value = p.objective(&t, cost);
+    DenseGwResult { value, plan: t, outer_iters: outer, converged }
+}
+
+/// The naive baseline `T = a bᵀ` evaluated on the fused objective.
+pub fn naive_fgw(p: &FgwProblem, cost: GroundCost) -> f64 {
+    let t = Mat::outer(p.gw.a, p.gw.b);
+    p.objective(&t, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::util::uniform;
+
+    fn relation(n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        let pts: Vec<[f64; 2]> = (0..n).map(|_| [rng.f64(), rng.f64()]).collect();
+        Mat::from_fn(n, n, |i, j| {
+            crate::linalg::sqdist(&pts[i], &pts[j]).sqrt()
+        })
+    }
+
+    #[test]
+    fn alpha_one_recovers_gw() {
+        let n = 8;
+        let c1 = relation(n, 1);
+        let c2 = relation(n, 2);
+        let a = uniform(n);
+        let feat = Mat::full(n, n, 5.0);
+        let gw = GwProblem::new(&c1, &c2, &a, &a);
+        let p = FgwProblem::new(gw, &feat, 1.0);
+        let cfg = Alg1Config::default();
+        let fused = pga_fgw(&p, GroundCost::L2, &cfg);
+        let plain = super::super::alg1::pga_gw(&gw, GroundCost::L2, &cfg);
+        assert!(
+            (fused.value - plain.value).abs() < 1e-9,
+            "fgw(α=1) {} vs gw {}",
+            fused.value,
+            plain.value
+        );
+    }
+
+    #[test]
+    fn alpha_zero_recovers_wasserstein() {
+        // α = 0: objective is ⟨M, T⟩ minimized over the polytope — compare
+        // against the exact OT cost.
+        let n = 6;
+        let c1 = relation(n, 3);
+        let c2 = relation(n, 4);
+        let a = uniform(n);
+        let feat = Mat::from_fn(n, n, |i, j| ((i as f64) - (j as f64)).powi(2));
+        let gw = GwProblem::new(&c1, &c2, &a, &a);
+        let p = FgwProblem::new(gw, &feat, 0.0);
+        let cfg = Alg1Config { epsilon: 1e-3, outer_iters: 5, inner_iters: 2000, tol: 0.0 };
+        let fused = egw_fgw(&p, GroundCost::L2, &cfg);
+        let exact = emd(&a, &a, &feat);
+        assert!(
+            (fused.value - exact.cost).abs() < 0.05 * (1.0 + exact.cost),
+            "fgw(α=0) {} vs W {}",
+            fused.value,
+            exact.cost
+        );
+    }
+
+    #[test]
+    fn objective_interpolates() {
+        // Naive plan: objective is exactly the α-interpolation of the parts.
+        let n = 5;
+        let c1 = relation(n, 5);
+        let c2 = relation(n, 6);
+        let a = uniform(n);
+        let feat = Mat::from_fn(n, n, |i, j| (i + j) as f64 * 0.1);
+        let gw = GwProblem::new(&c1, &c2, &a, &a);
+        let t = Mat::outer(&a, &a);
+        let gw_part = tensor_product(&c1, &c2, &t, GroundCost::L2).frob_inner(&t);
+        let w_part = feat.frob_inner(&t);
+        for &alpha in &[0.0, 0.3, 0.6, 1.0] {
+            let p = FgwProblem::new(gw, &feat, alpha);
+            let v = p.objective(&t, GroundCost::L2);
+            let expect = alpha * gw_part + (1.0 - alpha) * w_part;
+            assert!((v - expect).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fused_beats_naive() {
+        let n = 8;
+        let c1 = relation(n, 7);
+        let c2 = relation(n, 8);
+        let a = uniform(n);
+        let feat = Mat::from_fn(n, n, |i, j| ((i as f64 * 0.9) - j as f64).abs());
+        let gw = GwProblem::new(&c1, &c2, &a, &a);
+        let p = FgwProblem::new(gw, &feat, 0.6);
+        let cfg = Alg1Config { epsilon: 0.01, outer_iters: 40, inner_iters: 80, tol: 1e-10 };
+        let opt = pga_fgw(&p, GroundCost::L2, &cfg);
+        let naive = naive_fgw(&p, GroundCost::L2);
+        assert!(opt.value <= naive + 1e-9, "opt {} vs naive {naive}", opt.value);
+    }
+}

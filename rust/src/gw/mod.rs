@@ -1,0 +1,93 @@
+//! Core Gromov-Wasserstein library — the paper's contribution and the
+//! complete family of solvers it is evaluated against.
+//!
+//! * [`cost`] — ground cost functions `L` (ℓ1 / ℓ2 / KL) and their
+//!   decomposable `(f1, f2, h1, h2)` forms.
+//! * [`tensor`] — the tensor-matrix product `L(Cx,Cy) ⊗ T`: generic
+//!   O(m²n²), decomposable O(n²m + m²n), and the gathered s×s sparse form.
+//! * [`alg1`] — Algorithm 1: EGW (entropic), PGA-GW (proximal) and the
+//!   EMD-GW (ε = 0, exact inner OT) baseline.
+//! * [`sampling`] — importance sparsification: the probability matrix of
+//!   Eq. (5)/(9), shrinkage (H.4), i.i.d. and Poisson subsampling.
+//! * [`spar_gw`](spar_gw()) — **Algorithm 2**, the paper's main contribution.
+//! * [`fgw`] / [`spar_fgw`] — fused GW, dense and **Algorithm 4**.
+//! * [`ugw`] / [`spar_ugw`] — unbalanced GW, dense and **Algorithm 3**.
+//! * [`sagrow`], [`lr_gw`], [`sgwl`], [`anchor`] — reimplemented
+//!   comparators (Table 1 rows).
+//! * [`stationarity`] — the gap `G(T)` of §4 (theory validation).
+
+pub mod alg1;
+pub mod anchor;
+pub mod cost;
+pub mod fgw;
+pub mod lr_gw;
+pub mod sagrow;
+pub mod sampling;
+pub mod sgwl;
+pub mod spar_fgw;
+pub mod spar_gw;
+pub mod spar_ugw;
+pub mod stationarity;
+pub mod tensor;
+pub mod ugw;
+
+pub use alg1::{egw, emd_gw, pga_gw, Alg1Config};
+pub use cost::GroundCost;
+pub use spar_gw::{spar_gw, SparGwConfig, SparGwResult};
+
+use crate::linalg::Mat;
+
+/// A (balanced) GW problem instance: two metric-measure spaces given by
+/// relation matrices and marginal distributions.
+#[derive(Clone, Copy)]
+pub struct GwProblem<'a> {
+    /// Source relation matrix (m × m): distances, kernels or adjacency.
+    pub cx: &'a Mat,
+    /// Target relation matrix (n × n).
+    pub cy: &'a Mat,
+    /// Source distribution (length m, on the simplex for balanced GW).
+    pub a: &'a [f64],
+    /// Target distribution (length n).
+    pub b: &'a [f64],
+}
+
+impl<'a> GwProblem<'a> {
+    pub fn new(cx: &'a Mat, cy: &'a Mat, a: &'a [f64], b: &'a [f64]) -> Self {
+        assert_eq!(cx.rows(), cx.cols(), "Cx must be square");
+        assert_eq!(cy.rows(), cy.cols(), "Cy must be square");
+        assert_eq!(cx.rows(), a.len(), "Cx/a size mismatch");
+        assert_eq!(cy.rows(), b.len(), "Cy/b size mismatch");
+        GwProblem { cx, cy, a, b }
+    }
+
+    pub fn m(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.b.len()
+    }
+}
+
+/// Which regularizer `R(T)` Algorithm 1/2 uses in the subproblem (4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regularizer {
+    /// Negative entropy `H(T)` — yields entropic GW (Peyré et al. 2016).
+    Entropy,
+    /// Bregman proximal term `KL(T ‖ T⁽ʳ⁾)` — proximal gradient
+    /// (Xu et al. 2019b). The paper's default for Spar-GW and SaGroW.
+    Proximal,
+}
+
+/// Result of a dense GW solve.
+pub struct DenseGwResult {
+    /// Estimated GW value `⟨C(T), T⟩` (entropic variants do NOT include the
+    /// ε·H(T) term; it is reported separately).
+    pub value: f64,
+    /// Final coupling.
+    pub plan: Mat,
+    /// Outer iterations performed.
+    pub outer_iters: usize,
+    /// True if `‖T⁽ʳ⁺¹⁾ − T⁽ʳ⁾‖_F` fell below tolerance before the cap.
+    pub converged: bool,
+}

@@ -1,0 +1,300 @@
+//! SaGroW — Sampled Gromov-Wasserstein (Kerdoncuff, Emonet & Sebban 2021),
+//! the closest prior-art comparator in Table 1 (O(n²(s′ + log n))).
+//!
+//! Where Spar-GW sparsifies the *coupling*, SaGroW keeps the coupling dense
+//! and instead estimates the gradient / cost matrix stochastically: at each
+//! outer iteration it samples `s′` index pairs `(i′, j′) ∼ T⁽ʳ⁾` and
+//! averages the corresponding slices of the loss tensor,
+//!   `Ĉ[i,j] = (1/s′) Σ_k L(Cx[i, i′_k], Cy[j, j′_k])`,
+//! an unbiased estimate of `L ⊗ T̄` (T̄ = T normalized to total mass 1),
+//! then performs the same KL-proximal Sinkhorn step as PGA-GW. For a fair
+//! comparison the paper sets `s′ = s²/n²` so both methods touch the same
+//! number of tensor entries per iteration.
+
+use super::cost::GroundCost;
+use super::fgw::FgwProblem;
+use super::tensor::tensor_product;
+use super::ugw::{ugw_objective, unbalanced_cost_shift, UgwConfig, UgwResult};
+use super::{DenseGwResult, GwProblem, Regularizer};
+use crate::linalg::Mat;
+use crate::ot::{sinkhorn, unbalanced_sinkhorn};
+use crate::rng::{AliasTable, Rng};
+
+/// Configuration for SaGroW.
+#[derive(Clone, Copy, Debug)]
+pub struct SagrowConfig {
+    /// Regularization weight ε.
+    pub epsilon: f64,
+    /// Number of sampled tensor slices s′ per iteration.
+    pub s_prime: usize,
+    /// Outer iterations R.
+    pub outer_iters: usize,
+    /// Inner Sinkhorn iterations H.
+    pub inner_iters: usize,
+    /// Regularizer (paper uses KL-proximal for SaGroW, as for Spar-GW).
+    pub reg: Regularizer,
+    /// Outer stopping tolerance (0 disables).
+    pub tol: f64,
+}
+
+impl Default for SagrowConfig {
+    fn default() -> Self {
+        SagrowConfig {
+            epsilon: 0.01,
+            s_prime: 16,
+            outer_iters: 20,
+            inner_iters: 50,
+            reg: Regularizer::Proximal,
+            tol: 1e-9,
+        }
+    }
+}
+
+/// Sample `s′` tensor slices `(i′, j′) ∼ T` (flattened categorical) and
+/// average them into the stochastic cost estimate
+/// `Ĉ[i,j] = (1/s′) Σ_k L(Cx[i, i′_k], Cy[j, j′_k])` — an unbiased
+/// estimate of `L ⊗ T̄` with `T̄ = T / m(T)`.
+fn sampled_cost(
+    p: &GwProblem,
+    t: &Mat,
+    cost: GroundCost,
+    s_prime: usize,
+    rng: &mut Rng,
+) -> Mat {
+    let (m, n) = (p.m(), p.n());
+    let mut alias = AliasTable::new(t.data());
+    let mut c_hat = Mat::zeros(m, n);
+    for _ in 0..s_prime {
+        let key = alias.sample(rng);
+        let (ip, jp) = (key / n, key % n);
+        // Accumulate the (i′,j′) slice: L(Cx[i,i′], Cy[j,j′]).
+        for i in 0..m {
+            let x = p.cx[(i, ip)];
+            let row = c_hat.row_mut(i);
+            for j in 0..n {
+                row[j] += cost.eval(x, p.cy[(j, jp)]);
+            }
+        }
+    }
+    c_hat.scale(1.0 / s_prime as f64);
+    c_hat
+}
+
+/// Run SaGroW on a balanced GW problem.
+pub fn sagrow(p: &GwProblem, cost: GroundCost, cfg: &SagrowConfig, rng: &mut Rng) -> DenseGwResult {
+    sagrow_inner(p, None, cost, cfg, rng)
+}
+
+/// SaGroW adapted to the fused GW objective (Fig. 6 / Tables 2–3 comparator):
+/// the stochastic structural cost is blended with the feature distances,
+/// `Ĉ_fu = α Ĉ + (1−α) M`, exactly as Algorithm 4 fuses the sparse cost.
+pub fn sagrow_fgw(
+    p: &FgwProblem,
+    cost: GroundCost,
+    cfg: &SagrowConfig,
+    rng: &mut Rng,
+) -> DenseGwResult {
+    sagrow_inner(&p.gw, Some((p.feat, p.alpha)), cost, cfg, rng)
+}
+
+fn sagrow_inner(
+    p: &GwProblem,
+    fused: Option<(&Mat, f64)>,
+    cost: GroundCost,
+    cfg: &SagrowConfig,
+    rng: &mut Rng,
+) -> DenseGwResult {
+    let s_prime = cfg.s_prime.max(1);
+    let mut t = Mat::outer(p.a, p.b);
+    let mut outer = 0;
+    let mut converged = false;
+
+    for _ in 0..cfg.outer_iters {
+        let mut c_hat = sampled_cost(p, &t, cost, s_prime, rng);
+        if let Some((feat, alpha)) = fused {
+            // Ĉ_fu = α Ĉ + (1−α) M.
+            c_hat.scale(alpha);
+            c_hat.axpy(1.0 - alpha, feat);
+        }
+
+        // KL-proximal (or entropic) Sinkhorn step (stabilized kernel).
+        let k = match cfg.reg {
+            Regularizer::Proximal => {
+                super::alg1::stabilized_kernel(&c_hat, Some(&t), cfg.epsilon)
+            }
+            Regularizer::Entropy => super::alg1::stabilized_kernel(&c_hat, None, cfg.epsilon),
+        };
+        let res = sinkhorn(p.a, p.b, &k, cfg.inner_iters, 0.0);
+        outer += 1;
+        if cfg.tol > 0.0 {
+            let mut diff = 0.0;
+            for (x, y) in res.plan.data().iter().zip(t.data()) {
+                let d = x - y;
+                diff += d * d;
+            }
+            t = res.plan;
+            if diff.sqrt() < cfg.tol {
+                converged = true;
+                break;
+            }
+        } else {
+            t = res.plan;
+        }
+    }
+
+    // Final value: exact energy at the final plan (same convention as the
+    // other dense methods so Fig. 2 error comparisons are apples-to-apples).
+    let mut value = tensor_product(p.cx, p.cy, &t, cost).frob_inner(&t);
+    if let Some((feat, alpha)) = fused {
+        value = alpha * value + (1.0 - alpha) * feat.frob_inner(&t);
+    }
+    DenseGwResult { value, plan: t, outer_iters: outer, converged }
+}
+
+/// SaGroW adapted for unbalanced problems (the Fig. 3 comparator):
+/// the dense PGA-UGW loop of §5.2 with the full tensor product replaced by
+/// the stochastic slice estimate. Slices are drawn from `T⁽ʳ⁾/m(T⁽ʳ⁾)` and
+/// the estimate rescaled by `m(T⁽ʳ⁾)` so it matches `L ⊗ T` in expectation.
+pub fn sagrow_ugw(
+    p: &GwProblem,
+    cost: GroundCost,
+    s_prime: usize,
+    cfg: &UgwConfig,
+    rng: &mut Rng,
+) -> UgwResult {
+    let (m, n) = (p.m(), p.n());
+    let s_prime = s_prime.max(1);
+    let ma: f64 = p.a.iter().sum();
+    let mb: f64 = p.b.iter().sum();
+    // T⁽⁰⁾ = a bᵀ / √(m(a)m(b)), as in the dense loop.
+    let mut t = Mat::outer(p.a, p.b);
+    t.scale(1.0 / (ma * mb).sqrt());
+    let mut outer = 0;
+    for _ in 0..cfg.outer_iters {
+        let mass = t.sum();
+        if mass <= 0.0 || !mass.is_finite() {
+            break;
+        }
+        let eps_bar = cfg.epsilon * mass;
+        let lam_bar = cfg.lambda * mass;
+        // Ĉ ≈ L⊗T̄; L⊗T = m(T)·(L⊗T̄).
+        let mut c_hat = sampled_cost(p, &t, cost, s_prime, rng);
+        c_hat.scale(mass);
+        let shift = unbalanced_cost_shift(&t.row_sums(), &t.col_sums(), p.a, p.b, cfg.lambda);
+        // Proximal kernel K = exp(−C_un/ε̄) ⊙ T.
+        let mut k = Mat::zeros(m, n);
+        for i in 0..m {
+            let crow = c_hat.row(i);
+            let trow = t.row(i);
+            let krow = k.row_mut(i);
+            for j in 0..n {
+                krow[j] = (-(crow[j] + shift) / eps_bar).exp() * trow[j];
+            }
+        }
+        let mut t_next = unbalanced_sinkhorn(p.a, p.b, &k, lam_bar, eps_bar, cfg.inner_iters);
+        let next_mass = t_next.sum();
+        if !next_mass.is_finite() || next_mass <= 0.0 {
+            // Kernel over/underflow (extreme λ/ε): keep the last good plan.
+            break;
+        }
+        t_next.scale((mass / next_mass).sqrt());
+        outer += 1;
+        if cfg.tol > 0.0 {
+            let mut diff = 0.0;
+            for (x, y) in t_next.data().iter().zip(t.data()) {
+                let d = x - y;
+                diff += d * d;
+            }
+            t = t_next;
+            if diff.sqrt() < cfg.tol {
+                break;
+            }
+        } else {
+            t = t_next;
+        }
+    }
+    let value = ugw_objective(p, &t, cost, cfg.lambda);
+    UgwResult { value, plan: t, outer_iters: outer }
+}
+
+/// The paper's sampling-budget match: `s′ = s²/n²` (so SaGroW touches the
+/// same number of tensor elements as Spar-GW with `s` samples).
+pub fn matched_s_prime(s: usize, m: usize, n: usize) -> usize {
+    ((s * s) as f64 / (m * n) as f64).round().max(1.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gw::alg1::{pga_gw, Alg1Config};
+    use crate::rng::Xoshiro256;
+    use crate::util::uniform;
+
+    fn relation(n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        let pts: Vec<[f64; 2]> = (0..n).map(|_| [rng.f64(), rng.f64()]).collect();
+        Mat::from_fn(n, n, |i, j| crate::linalg::sqdist(&pts[i], &pts[j]).sqrt())
+    }
+
+    #[test]
+    fn matched_budget_formula() {
+        // s = 16n on an n×n problem: s′ = 256.
+        assert_eq!(matched_s_prime(16 * 50, 50, 50), 256);
+        assert_eq!(matched_s_prime(10, 100, 100), 1);
+    }
+
+    #[test]
+    fn identical_spaces_near_zero() {
+        let n = 12;
+        let c = relation(n, 1);
+        let a = uniform(n);
+        let p = GwProblem::new(&c, &c, &a, &a);
+        let mut rng = Xoshiro256::new(2);
+        let cfg = SagrowConfig { s_prime: 64, outer_iters: 30, ..Default::default() };
+        let r = sagrow(&p, GroundCost::L2, &cfg, &mut rng);
+        // Stochastic gradients leave residual noise around the optimum.
+        assert!(r.value < 0.1, "value {}", r.value);
+    }
+
+    #[test]
+    fn approximates_pga_gw() {
+        let n = 16;
+        let c1 = relation(n, 3);
+        let c2 = relation(n, 4);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let bench = pga_gw(
+            &p,
+            GroundCost::L2,
+            &Alg1Config { epsilon: 0.01, outer_iters: 30, inner_iters: 60, tol: 1e-10 },
+        );
+        let mut rng = Xoshiro256::new(5);
+        let cfg = SagrowConfig {
+            epsilon: 0.01,
+            s_prime: 256,
+            outer_iters: 30,
+            inner_iters: 60,
+            ..Default::default()
+        };
+        let mut vals = Vec::new();
+        for _ in 0..4 {
+            vals.push(sagrow(&p, GroundCost::L2, &cfg, &mut rng).value);
+        }
+        let est = crate::util::mean(&vals);
+        let rel = (est - bench.value).abs() / bench.value.max(1e-9);
+        assert!(rel < 0.5, "sagrow {est} vs pga {} (rel {rel})", bench.value);
+    }
+
+    #[test]
+    fn l1_cost_supported() {
+        let n = 10;
+        let c1 = relation(n, 6);
+        let c2 = relation(n, 7);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let mut rng = Xoshiro256::new(8);
+        let cfg = SagrowConfig { s_prime: 32, ..Default::default() };
+        let r = sagrow(&p, GroundCost::L1, &cfg, &mut rng);
+        assert!(r.value.is_finite() && r.value >= -1e-9);
+    }
+}

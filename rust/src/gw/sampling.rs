@@ -1,0 +1,270 @@
+//! Importance sparsification — §3.1 of the paper.
+//!
+//! The sampling probability (Eq. 5) is the product form
+//! `p_ij ∝ √(a_i b_j)`, derived from `T*_ij C*_ij ≤ c₀ √(a_i b_j)`.
+//! Condition (H.4) requires `p_ij ≥ c₃/n²`, achieved by linear shrinkage
+//! toward the uniform distribution (the standard subsampling trick the
+//! paper cites).
+//!
+//! Two subsampling schemes are provided:
+//! * [`GwSampler::sample_iid`] — `s` i.i.d. draws with replacement (Algorithm 2,
+//!   step 3), de-duplicated into a unique index set with the
+//!   `min(1, s·p_ij)` importance weights of the Poisson analysis
+//!   (Appendix B) — the factor that makes `E[K̃] = K`.
+//! * `sample_poisson` — element-wise independent selection with
+//!   probability `min(1, s·p_ij)` (Braverman et al. 2021), used by the
+//!   theory-validation benches.
+
+use crate::rng::{ProductAlias, Rng};
+
+/// The sampled sparsity pattern `S` plus its importance weights.
+#[derive(Clone, Debug)]
+pub struct SampledSet {
+    /// Row index of each selected element.
+    pub rows: Vec<usize>,
+    /// Column index of each selected element.
+    pub cols: Vec<usize>,
+    /// Inclusion weight `p*_ij = min(1, s·p_ij)` per selected element —
+    /// divide kernel entries by this to keep the estimator unbiased.
+    pub weights: Vec<f64>,
+    /// Nominal sample budget s used to build the weights.
+    pub budget: usize,
+}
+
+impl SampledSet {
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Importance sampling probabilities for balanced GW:
+/// row factors `√a_i` and column factors `√b_j`, optionally shrunk toward
+/// uniform: `p ← (1−θ)·p + θ/(mn)` (condition H.4, with c₃ = θ).
+/// `shrink` in \[0,1\].
+pub struct GwSampler {
+    alias: ProductAlias,
+    shrink: f64,
+    m: usize,
+    n: usize,
+}
+
+impl GwSampler {
+    pub fn new(a: &[f64], b: &[f64], shrink: f64) -> Self {
+        assert!((0.0..=1.0).contains(&shrink), "shrink must be in [0,1]");
+        // The Eq. (5) part stays in product form (two-table alias, O(1)
+        // draws); the uniform component of the mixture is drawn by a
+        // Bernoulli(θ) branch, so sampling stays O(1) and the *exact*
+        // mixture probability p_ij = (1−θ)·p⁽⁵⁾_ij + θ/(mn) ≥ θ/(mn)
+        // satisfies (H.4) with c₃ = θ.
+        let u: Vec<f64> = a.iter().map(|&x| x.max(0.0).sqrt()).collect();
+        let v: Vec<f64> = b.iter().map(|&x| x.max(0.0).sqrt()).collect();
+        GwSampler {
+            alias: ProductAlias::new(&u, &v),
+            shrink,
+            m: a.len(),
+            n: b.len(),
+        }
+    }
+
+    /// Normalized inclusion probability of pair (i, j).
+    pub fn prob_of(&self, i: usize, j: usize) -> f64 {
+        (1.0 - self.shrink) * self.alias.prob_of(i, j)
+            + self.shrink / (self.m * self.n) as f64
+    }
+
+    /// Algorithm 2, step 3: draw `s` i.i.d. pairs, de-duplicate, and attach
+    /// the `min(1, s·p_ij)` importance weights.
+    pub fn sample_iid(&mut self, rng: &mut Rng, s: usize) -> SampledSet {
+        let draws: Vec<(usize, usize)> = (0..s)
+            .map(|_| {
+                if self.shrink > 0.0 && rng.f64() < self.shrink {
+                    // Uniform component of the (H.4) mixture.
+                    (rng.usize(self.m), rng.usize(self.n))
+                } else {
+                    self.alias.sample(rng)
+                }
+            })
+            .collect();
+        // De-duplicate via sort on the flattened key.
+        let mut keys: Vec<(usize, usize)> = draws;
+        keys.sort_unstable();
+        keys.dedup();
+        let mut rows = Vec::with_capacity(keys.len());
+        let mut cols = Vec::with_capacity(keys.len());
+        let mut weights = Vec::with_capacity(keys.len());
+        for (i, j) in keys {
+            rows.push(i);
+            cols.push(j);
+            weights.push((s as f64 * self.prob_of(i, j)).min(1.0));
+        }
+        SampledSet { rows, cols, weights, budget: s }
+    }
+}
+
+/// Poisson subsampling (Appendix B): select each of the m·n elements
+/// independently with probability `min(1, s·p_ij)`. Expected size ≤ s.
+/// O(mn) — used for theory validation, not the production path.
+pub fn sample_poisson(
+    rng: &mut Rng,
+    a: &[f64],
+    b: &[f64],
+    shrink: f64,
+    s: usize,
+) -> SampledSet {
+    let sampler = GwSampler::new(a, b, shrink);
+    let (m, n) = (a.len(), b.len());
+    let mut rows = Vec::new();
+    let mut cols = Vec::new();
+    let mut weights = Vec::new();
+    for i in 0..m {
+        for j in 0..n {
+            let p_star = (s as f64 * sampler.prob_of(i, j)).min(1.0);
+            if rng.f64() < p_star {
+                rows.push(i);
+                cols.push(j);
+                weights.push(p_star);
+            }
+        }
+    }
+    SampledSet { rows, cols, weights, budget: s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::uniform;
+
+    #[test]
+    fn probabilities_normalized() {
+        let a = vec![0.1, 0.2, 0.7];
+        let b = vec![0.5, 0.5];
+        let s = GwSampler::new(&a, &b, 0.0);
+        let mut total = 0.0;
+        for i in 0..3 {
+            for j in 0..2 {
+                total += s.prob_of(i, j);
+            }
+        }
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_eq5_without_shrinkage() {
+        // p_ij ∝ √(a_i b_j)
+        let a = [0.25f64, 0.75];
+        let b = [0.4f64, 0.6];
+        let s = GwSampler::new(&a, &b, 0.0);
+        let mut z = 0.0f64;
+        for i in 0..2 {
+            for j in 0..2 {
+                z += (a[i] * b[j]).sqrt();
+            }
+        }
+        for i in 0..2 {
+            for j in 0..2 {
+                let expect = (a[i] * b[j]).sqrt() / z;
+                assert!(
+                    (s.prob_of(i, j) - expect).abs() < 1e-12,
+                    "p({i},{j}) = {} vs {expect}",
+                    s.prob_of(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shrinkage_lower_bounds_probability() {
+        // With shrink θ, p_ij ≥ θ²/(mn) — condition (H.4).
+        let mut a = vec![1e-9, 1.0 - 1e-9];
+        let b = vec![0.5, 0.5];
+        crate::util::normalize(&mut a);
+        let theta = 0.3;
+        let s = GwSampler::new(&a, &b, theta);
+        let bound = theta * theta / 4.0;
+        for i in 0..2 {
+            for j in 0..2 {
+                assert!(
+                    s.prob_of(i, j) >= bound * (1.0 - 1e-9),
+                    "p({i},{j}) = {} < {bound}",
+                    s.prob_of(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn iid_sample_dedup_and_weights() {
+        let a = uniform(10);
+        let b = uniform(10);
+        let mut s = GwSampler::new(&a, &b, 0.0);
+        let mut rng = Rng::new(21);
+        let set = s.sample_iid(&mut rng, 160);
+        assert!(!set.is_empty());
+        assert!(set.len() <= 160);
+        // Unique pairs.
+        let mut seen: Vec<(usize, usize)> =
+            set.rows.iter().cloned().zip(set.cols.iter().cloned()).collect();
+        seen.sort_unstable();
+        let before = seen.len();
+        seen.dedup();
+        assert_eq!(before, seen.len(), "duplicates remained");
+        // Weights in (0, 1].
+        for &w in &set.weights {
+            assert!(w > 0.0 && w <= 1.0);
+        }
+    }
+
+    #[test]
+    fn poisson_expected_size() {
+        let n = 30;
+        let a = uniform(n);
+        let b = uniform(n);
+        let mut rng = Rng::new(31);
+        let s = 5 * n;
+        let mut sizes = Vec::new();
+        for _ in 0..20 {
+            sizes.push(sample_poisson(&mut rng, &a, &b, 0.0, s).len() as f64);
+        }
+        let mean = crate::util::mean(&sizes);
+        // E|S| = Σ min(1, s·p) = s when s·p ≤ 1 everywhere (uniform case).
+        assert!(
+            (mean - s as f64).abs() < 0.15 * s as f64,
+            "mean size {mean} vs budget {s}"
+        );
+    }
+
+    #[test]
+    fn unbiased_sum_estimate() {
+        // Σ_ij X_ij estimated by Σ_{S} X_ij / p*_ij is unbiased under
+        // Poisson sampling: check the Monte-Carlo average is close.
+        let n = 12;
+        let a = uniform(n);
+        let b = uniform(n);
+        let x = |i: usize, j: usize| ((i * n + j) as f64 * 0.37).sin().abs() + 0.1;
+        let truth: f64 = (0..n)
+            .flat_map(|i| (0..n).map(move |j| x(i, j)))
+            .sum();
+        let mut rng = Rng::new(41);
+        let mut estimates = Vec::new();
+        for _ in 0..200 {
+            let set = sample_poisson(&mut rng, &a, &b, 0.0, 4 * n);
+            let est: f64 = set
+                .rows
+                .iter()
+                .zip(&set.cols)
+                .zip(&set.weights)
+                .map(|((&i, &j), &w)| x(i, j) / w)
+                .sum();
+            estimates.push(est);
+        }
+        let mean = crate::util::mean(&estimates);
+        assert!(
+            (mean - truth).abs() < 0.05 * truth,
+            "estimator mean {mean} vs truth {truth}"
+        );
+    }
+}

@@ -1,0 +1,209 @@
+//! **Algorithm 4 — Spar-FGW**: importance sparsification for the fused GW
+//! distance (Appendix A of the paper).
+//!
+//! Identical to Algorithm 2 except the sparse cost gains the feature term:
+//! `C̃_fu(T̃) = α Σ_S L̃ T̃ + (1−α) M̃` with `M̃` the feature distances at the
+//! sampled positions, and the output adds `(1−α) Σ_S M_ij T̃_ij`.
+
+use super::cost::GroundCost;
+use super::fgw::FgwProblem;
+use super::sampling::{GwSampler, SampledSet};
+use super::spar_gw::{SparGwConfig, SparGwResult};
+use super::tensor::SparseCostContext;
+use super::Regularizer;
+use crate::rng::Rng;
+use crate::sparse::Coo;
+
+/// Run Algorithm 4 on a fused GW problem.
+pub fn spar_fgw(
+    p: &FgwProblem,
+    cost: GroundCost,
+    cfg: &SparGwConfig,
+    rng: &mut Rng,
+) -> SparGwResult {
+    let s_budget = if cfg.sample_size == 0 {
+        16 * p.gw.m().max(p.gw.n())
+    } else {
+        cfg.sample_size
+    };
+    let mut sampler = GwSampler::new(p.gw.a, p.gw.b, cfg.shrink);
+    let set = sampler.sample_iid(rng, s_budget);
+    spar_fgw_with_set(p, cost, cfg, &set)
+}
+
+/// Algorithm 4 with an externally supplied index set.
+pub fn spar_fgw_with_set(
+    p: &FgwProblem,
+    cost: GroundCost,
+    cfg: &SparGwConfig,
+    set: &SampledSet,
+) -> SparGwResult {
+    let (m, n) = (p.gw.m(), p.gw.n());
+    let s = set.len();
+    assert!(s > 0, "empty sampled set");
+    let alpha = p.alpha;
+
+    let ctx = SparseCostContext::new(p.gw.cx, p.gw.cy, &set.rows, &set.cols, cost);
+    // M̃: feature distances at the sampled positions.
+    let m_vals: Vec<f64> = set
+        .rows
+        .iter()
+        .zip(&set.cols)
+        .map(|(&i, &j)| p.feat[(i, j)])
+        .collect();
+
+    let mut t_vals: Vec<f64> = set
+        .rows
+        .iter()
+        .zip(&set.cols)
+        .map(|(&i, &j)| p.gw.a[i] * p.gw.b[j])
+        .collect();
+    let inv_w: Vec<f64> = set.weights.iter().map(|&w| 1.0 / w).collect();
+
+    let mut outer = 0;
+    let mut converged = false;
+    let mut k_vals = vec![0.0f64; s];
+    let mut c_fu = vec![0.0f64; s];
+    for _ in 0..cfg.outer_iters {
+        // Step 6a: fused sparse cost.
+        let c_gw = ctx.cost_values(&t_vals);
+        for l in 0..s {
+            c_fu[l] = alpha * c_gw[l] + (1.0 - alpha) * m_vals[l];
+        }
+        // Stabilization by pattern row/col mins (cf. spar_gw).
+        let mut row_min = vec![f64::INFINITY; m];
+        for l in 0..s {
+            let i = set.rows[l];
+            if c_fu[l] < row_min[i] {
+                row_min[i] = c_fu[l];
+            }
+        }
+        let mut col_min = vec![f64::INFINITY; n];
+        for l in 0..s {
+            let v = c_fu[l] - row_min[set.rows[l]];
+            let j = set.cols[l];
+            if v < col_min[j] {
+                col_min[j] = v;
+            }
+        }
+        // Step 6b.
+        for l in 0..s {
+            let c_red = c_fu[l] - row_min[set.rows[l]] - col_min[set.cols[l]];
+            let e = (-c_red / cfg.epsilon).exp();
+            k_vals[l] = match cfg.reg {
+                Regularizer::Proximal => e * t_vals[l] * inv_w[l],
+                Regularizer::Entropy => e * inv_w[l],
+            };
+        }
+        let k = Coo::from_triplets(m, n, &set.rows, &set.cols, &k_vals);
+        let (plan, _) = crate::ot::sparse_sinkhorn(p.gw.a, p.gw.b, &k, cfg.inner_iters, 0.0);
+        let new_vals = plan.vals().to_vec();
+        outer += 1;
+        if cfg.tol > 0.0 {
+            let mut diff = 0.0;
+            for (x, y) in new_vals.iter().zip(&t_vals) {
+                let d = x - y;
+                diff += d * d;
+            }
+            if diff.sqrt() < cfg.tol {
+                t_vals = new_vals;
+                converged = true;
+                break;
+            }
+        }
+        t_vals = new_vals;
+    }
+
+    // Step 8: F̂GW = α Σ L T̃T̃ + (1−α) Σ M T̃.
+    let gw_term = ctx.energy(&t_vals);
+    let w_term: f64 = m_vals.iter().zip(&t_vals).map(|(m, t)| m * t).sum();
+    let value = alpha * gw_term + (1.0 - alpha) * w_term;
+    let plan = Coo::from_triplets(m, n, &set.rows, &set.cols, &t_vals);
+    SparGwResult { value, plan, outer_iters: outer, converged, support: s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gw::alg1::Alg1Config;
+    use crate::gw::fgw::pga_fgw;
+    use crate::gw::spar_gw::spar_gw;
+    use crate::gw::GwProblem;
+    use crate::linalg::Mat;
+    use crate::rng::Xoshiro256;
+    use crate::util::uniform;
+
+    fn relation(n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        let pts: Vec<[f64; 2]> = (0..n).map(|_| [rng.f64(), rng.f64()]).collect();
+        Mat::from_fn(n, n, |i, j| crate::linalg::sqdist(&pts[i], &pts[j]).sqrt())
+    }
+
+    #[test]
+    fn alpha_one_matches_spar_gw() {
+        let n = 15;
+        let c1 = relation(n, 1);
+        let c2 = relation(n, 2);
+        let a = uniform(n);
+        let feat = Mat::full(n, n, 3.0);
+        let gw = GwProblem::new(&c1, &c2, &a, &a);
+        let p = FgwProblem::new(gw, &feat, 1.0);
+        let cfg = SparGwConfig { sample_size: 12 * n, ..Default::default() };
+        // Same seed ⇒ same sampled set ⇒ identical trajectories.
+        let mut rng1 = Xoshiro256::new(5);
+        let mut rng2 = Xoshiro256::new(5);
+        let rf = spar_fgw(&p, GroundCost::L2, &cfg, &mut rng1);
+        let rg = spar_gw(&gw, GroundCost::L2, &cfg, &mut rng2);
+        assert!(
+            (rf.value - rg.value).abs() < 1e-10,
+            "spar-fgw(α=1) {} vs spar-gw {}",
+            rf.value,
+            rg.value
+        );
+    }
+
+    #[test]
+    fn approximates_dense_fgw() {
+        let n = 20;
+        let c1 = relation(n, 3);
+        let c2 = relation(n, 4);
+        let a = uniform(n);
+        let mut rngf = Xoshiro256::new(6);
+        let feat = Mat::from_fn(n, n, |_, _| rngf.f64());
+        let gw = GwProblem::new(&c1, &c2, &a, &a);
+        let p = FgwProblem::new(gw, &feat, 0.6);
+        let dense_cfg = Alg1Config { epsilon: 0.01, outer_iters: 30, inner_iters: 60, tol: 1e-10 };
+        let bench = pga_fgw(&p, GroundCost::L2, &dense_cfg);
+
+        let cfg = SparGwConfig {
+            epsilon: 0.01,
+            sample_size: 16 * n,
+            outer_iters: 30,
+            inner_iters: 60,
+            ..Default::default()
+        };
+        let mut rng = Xoshiro256::new(7);
+        let mut vals = Vec::new();
+        for _ in 0..5 {
+            vals.push(spar_fgw(&p, GroundCost::L2, &cfg, &mut rng).value);
+        }
+        let est = crate::util::mean(&vals);
+        let rel = (est - bench.value).abs() / bench.value.max(1e-9);
+        assert!(rel < 0.5, "spar-fgw {est} vs dense {} (rel {rel})", bench.value);
+    }
+
+    #[test]
+    fn l1_cost_supported() {
+        let n = 12;
+        let c1 = relation(n, 8);
+        let c2 = relation(n, 9);
+        let a = uniform(n);
+        let feat = Mat::from_fn(n, n, |i, j| ((i + j) % 3) as f64 * 0.2);
+        let gw = GwProblem::new(&c1, &c2, &a, &a);
+        let p = FgwProblem::new(gw, &feat, 0.6);
+        let mut rng = Xoshiro256::new(10);
+        let cfg = SparGwConfig { sample_size: 10 * n, ..Default::default() };
+        let r = spar_fgw(&p, GroundCost::L1, &cfg, &mut rng);
+        assert!(r.value.is_finite() && r.value >= -1e-9);
+    }
+}

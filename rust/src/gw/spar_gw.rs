@@ -1,0 +1,340 @@
+//! **Algorithm 2 — Spar-GW**: the paper's main contribution.
+//!
+//! Instead of the dense O(m²n²) tensor product of Algorithm 1, the coupling
+//! and kernel matrices are restricted to a sampled index set `S` of size
+//! `s = O(n^{1+δ})`, giving O(mn + s²) total time:
+//!
+//! 1. build `P` with `p_ij ∝ √(a_i b_j)` (Eq. 5), sample `S` (step 3);
+//! 2. per outer iteration, compute the sparse cost
+//!    `C̃(T̃)[l] = Σ_{l'∈S} L(Cx, Cy) T̃[l']` in O(s²) (step 6a);
+//! 3. exponentiate into the sparse kernel `K̃` with the `1/(s·p_ij)`
+//!    importance correction (step 6b);
+//! 4. run sparse Sinkhorn in O(Hs) (step 7);
+//! 5. output `ĜW = Σ_{S×S} L·T̃·T̃` in O(s²) (step 8).
+
+use super::cost::GroundCost;
+use super::sampling::{GwSampler, SampledSet};
+use super::tensor::SparseCostContext;
+use super::{GwProblem, Regularizer};
+use crate::rng::Rng;
+use crate::sparse::Coo;
+
+/// Configuration for Spar-GW (Algorithm 2).
+#[derive(Clone, Copy, Debug)]
+pub struct SparGwConfig {
+    /// Regularization weight ε.
+    pub epsilon: f64,
+    /// Number of sampled elements s (the paper uses s = 16n by default).
+    pub sample_size: usize,
+    /// Outer iterations R.
+    pub outer_iters: usize,
+    /// Inner Sinkhorn iterations H.
+    pub inner_iters: usize,
+    /// Regularizer (paper default: proximal).
+    pub reg: Regularizer,
+    /// Shrinkage θ toward uniform sampling (condition H.4). 0 = pure Eq. (5).
+    pub shrink: f64,
+    /// Outer stopping tolerance on ‖T̃⁽ʳ⁺¹⁾ − T̃⁽ʳ⁾‖_F (0 disables).
+    pub tol: f64,
+}
+
+impl Default for SparGwConfig {
+    fn default() -> Self {
+        SparGwConfig {
+            epsilon: 0.01,
+            sample_size: 0, // 0 -> auto: 16·max(m,n)
+            outer_iters: 20,
+            inner_iters: 50,
+            reg: Regularizer::Proximal,
+            shrink: 0.0,
+            tol: 1e-9,
+        }
+    }
+}
+
+/// Result of a Spar-GW solve.
+pub struct SparGwResult {
+    /// The estimate ĜW (step 8).
+    pub value: f64,
+    /// Sparse coupling on the sampled pattern.
+    pub plan: Coo,
+    /// Outer iterations performed.
+    pub outer_iters: usize,
+    /// True if the ‖ΔT̃‖_F tolerance was reached before the iteration cap.
+    pub converged: bool,
+    /// Number of unique sampled elements |S| (after de-duplication).
+    pub support: usize,
+}
+
+/// Run Algorithm 2 on a balanced GW problem.
+pub fn spar_gw(p: &GwProblem, cost: GroundCost, cfg: &SparGwConfig, rng: &mut Rng) -> SparGwResult {
+    let s_budget = if cfg.sample_size == 0 { 16 * p.m().max(p.n()) } else { cfg.sample_size };
+    // Steps 2–3: sampling probabilities and index set.
+    let mut sampler = GwSampler::new(p.a, p.b, cfg.shrink);
+    let set = sampler.sample_iid(rng, s_budget);
+    spar_gw_with_set(p, cost, cfg, &set)
+}
+
+/// Algorithm 2 with an externally supplied index set (used by the
+/// coordinator, which samples in Rust and feeds the PJRT artifacts, and by
+/// the Poisson-sampling theory benches).
+pub fn spar_gw_with_set(
+    p: &GwProblem,
+    cost: GroundCost,
+    cfg: &SparGwConfig,
+    set: &SampledSet,
+) -> SparGwResult {
+    let (m, n) = (p.m(), p.n());
+    let s = set.len();
+    assert!(s > 0, "empty sampled set");
+
+    // Pre-gather the relation values touched by S (O(s²), once).
+    let ctx = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, cost);
+
+    // Step 4: T̃⁽⁰⁾ = a_i b_j on S.
+    let mut t_vals: Vec<f64> = set
+        .rows
+        .iter()
+        .zip(&set.cols)
+        .map(|(&i, &j)| p.a[i] * p.b[j])
+        .collect();
+
+    let inv_w: Vec<f64> = set.weights.iter().map(|&w| 1.0 / w).collect();
+    let mut outer = 0;
+    let mut converged = false;
+    let mut k_vals = vec![0.0f64; s];
+
+    let mut c_red = vec![0.0f64; s];
+    for _r in 0..cfg.outer_iters {
+        // Step 6a: sparse cost values on S.
+        let c_vals = ctx.cost_values(&t_vals);
+        // Stabilization: balanced Sinkhorn is invariant to rank-one cost
+        // shifts C_ij ← C_ij − r_i − c_j, so reduce by per-row/col mins over
+        // the stored pattern to keep exp() in range (cf. `stabilized_kernel`).
+        let mut row_min = vec![f64::INFINITY; m];
+        for l in 0..s {
+            let i = set.rows[l];
+            if c_vals[l] < row_min[i] {
+                row_min[i] = c_vals[l];
+            }
+        }
+        let mut col_min = vec![f64::INFINITY; n];
+        for l in 0..s {
+            let v = c_vals[l] - row_min[set.rows[l]];
+            let j = set.cols[l];
+            if v < col_min[j] {
+                col_min[j] = v;
+            }
+        }
+        for l in 0..s {
+            c_red[l] = c_vals[l] - row_min[set.rows[l]] - col_min[set.cols[l]];
+        }
+        // Step 6b: sparse kernel with the importance correction.
+        // Paper: "replace its 0's at S with ∞'s" — a zero cost entry means
+        // no sampled mass informed it; exp(−∞/ε) = 0 removes it from the
+        // kernel for this round rather than giving it the maximal weight.
+        match cfg.reg {
+            Regularizer::Proximal => {
+                for l in 0..s {
+                    k_vals[l] = if c_vals[l] == 0.0 && t_vals[l] == 0.0 {
+                        0.0
+                    } else {
+                        (-c_red[l] / cfg.epsilon).exp() * t_vals[l] * inv_w[l]
+                    };
+                }
+            }
+            Regularizer::Entropy => {
+                for l in 0..s {
+                    k_vals[l] = (-c_red[l] / cfg.epsilon).exp() * inv_w[l];
+                }
+            }
+        }
+        let k = Coo::from_triplets(m, n, &set.rows, &set.cols, &k_vals);
+        // Step 7: sparse Sinkhorn, O(Hs).
+        let (plan, _) = crate::ot::sparse_sinkhorn(p.a, p.b, &k, cfg.inner_iters, 0.0);
+        let new_vals = plan.vals().to_vec();
+        if !new_vals.iter().all(|v| v.is_finite()) {
+            // Degenerate kernel (e.g. a severely under-informative sample
+            // set): keep the last good plan instead of propagating NaNs.
+            break;
+        }
+        outer += 1;
+        if cfg.tol > 0.0 {
+            let mut diff = 0.0;
+            for (x, y) in new_vals.iter().zip(&t_vals) {
+                let d = x - y;
+                diff += d * d;
+            }
+            if diff.sqrt() < cfg.tol {
+                t_vals = new_vals;
+                converged = true;
+                break;
+            }
+        }
+        t_vals = new_vals;
+    }
+
+    // Step 8: ĜW on the sampled support.
+    let value = ctx.energy(&t_vals);
+    let plan = Coo::from_triplets(m, n, &set.rows, &set.cols, &t_vals);
+    SparGwResult { value, plan, outer_iters: outer, converged, support: s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gw::alg1::{pga_gw, Alg1Config};
+    use crate::linalg::Mat;
+    use crate::rng::Xoshiro256;
+    use crate::util::uniform;
+
+    fn point_cloud_relation(n: usize, seed: u64, spread: f64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        let pts: Vec<[f64; 2]> = (0..n)
+            .map(|_| [rng.f64() * spread, rng.f64() * spread])
+            .collect();
+        Mat::from_fn(n, n, |i, j| {
+            let dx = pts[i][0] - pts[j][0];
+            let dy = pts[i][1] - pts[j][1];
+            (dx * dx + dy * dy).sqrt()
+        })
+    }
+
+    #[test]
+    fn zero_for_identical_spaces() {
+        let n = 20;
+        let c = point_cloud_relation(n, 1, 1.0);
+        let a = uniform(n);
+        let p = GwProblem::new(&c, &c, &a, &a);
+        let mut rng = Xoshiro256::new(7);
+        let cfg = SparGwConfig { sample_size: 16 * n, ..Default::default() };
+        let r = spar_gw(&p, GroundCost::L2, &cfg, &mut rng);
+        // The sampled support misses some diagonal cells, so a small
+        // positive bias remains even for identical spaces.
+        assert!(r.value < 5e-2, "ĜW = {}", r.value);
+    }
+
+    #[test]
+    fn plan_lives_on_sampled_support() {
+        let n = 15;
+        let c1 = point_cloud_relation(n, 2, 1.0);
+        let c2 = point_cloud_relation(n, 3, 2.0);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let mut rng = Xoshiro256::new(8);
+        let cfg = SparGwConfig { sample_size: 8 * n, ..Default::default() };
+        let r = spar_gw(&p, GroundCost::L1, &cfg, &mut rng);
+        assert_eq!(r.plan.nnz(), r.support);
+        assert!(r.support <= 8 * n);
+        // All stored values finite and non-negative.
+        assert!(r.plan.vals().iter().all(|&v| v.is_finite() && v >= 0.0));
+    }
+
+    #[test]
+    fn approximates_dense_pga_gw() {
+        // The headline property (Fig. 2): with s = 16n the estimate lands
+        // near the dense PGA-GW benchmark.
+        let n = 30;
+        let c1 = point_cloud_relation(n, 4, 1.0);
+        let c2 = point_cloud_relation(n, 5, 1.5);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let dense_cfg = Alg1Config { epsilon: 0.01, outer_iters: 30, inner_iters: 60, tol: 1e-10 };
+        let bench = pga_gw(&p, GroundCost::L2, &dense_cfg);
+
+        let mut rng = Xoshiro256::new(9);
+        let cfg = SparGwConfig {
+            epsilon: 0.01,
+            sample_size: 16 * n,
+            outer_iters: 30,
+            inner_iters: 60,
+            ..Default::default()
+        };
+        // Average over several runs (sampled estimator).
+        let mut vals = Vec::new();
+        for _ in 0..5 {
+            vals.push(spar_gw(&p, GroundCost::L2, &cfg, &mut rng).value);
+        }
+        let est = crate::util::mean(&vals);
+        let rel = (est - bench.value).abs() / bench.value.max(1e-9);
+        assert!(
+            rel < 0.5,
+            "Spar-GW {est} vs PGA-GW {} (rel err {rel})",
+            bench.value
+        );
+    }
+
+    #[test]
+    fn error_decreases_with_sample_size() {
+        // Fig. 4 behaviour: larger s ⇒ estimate closer to the dense value.
+        let n = 25;
+        let c1 = point_cloud_relation(n, 11, 1.0);
+        let c2 = point_cloud_relation(n, 12, 1.8);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let dense_cfg = Alg1Config { epsilon: 0.01, outer_iters: 30, inner_iters: 60, tol: 1e-10 };
+        let bench = pga_gw(&p, GroundCost::L2, &dense_cfg).value;
+
+        let err_for = |s_mult: usize| {
+            let cfg = SparGwConfig {
+                epsilon: 0.01,
+                sample_size: s_mult * n,
+                outer_iters: 30,
+                inner_iters: 60,
+                ..Default::default()
+            };
+            let mut rng = Xoshiro256::new(100 + s_mult as u64);
+            let mut errs = Vec::new();
+            for _ in 0..6 {
+                let v = spar_gw(&p, GroundCost::L2, &cfg, &mut rng).value;
+                errs.push((v - bench).abs());
+            }
+            crate::util::mean(&errs)
+        };
+        let e_small = err_for(2);
+        let e_large = err_for(24);
+        assert!(
+            e_large < e_small + 1e-9,
+            "err(s=2n) = {e_small}, err(s=24n) = {e_large}"
+        );
+    }
+
+    #[test]
+    fn entropy_variant_runs() {
+        let n = 12;
+        let c1 = point_cloud_relation(n, 13, 1.0);
+        let c2 = point_cloud_relation(n, 14, 1.0);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let mut rng = Xoshiro256::new(15);
+        let cfg = SparGwConfig {
+            reg: Regularizer::Entropy,
+            sample_size: 10 * n,
+            ..Default::default()
+        };
+        let r = spar_gw(&p, GroundCost::L2, &cfg, &mut rng);
+        assert!(r.value.is_finite() && r.value >= -1e-9);
+    }
+
+    #[test]
+    fn nonuniform_marginals_feasible_on_support() {
+        let n = 18;
+        let c1 = point_cloud_relation(n, 16, 1.0);
+        let c2 = point_cloud_relation(n, 17, 1.0);
+        let mut rng0 = Xoshiro256::new(18);
+        let mut a: Vec<f64> = (0..n).map(|_| rng0.f64() + 0.1).collect();
+        crate::util::normalize(&mut a);
+        let b = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &b);
+        let mut rng = Xoshiro256::new(19);
+        let cfg = SparGwConfig { sample_size: 20 * n, shrink: 0.1, ..Default::default() };
+        let r = spar_gw(&p, GroundCost::L2, &cfg, &mut rng);
+        // Marginals approximately honored on rows with support.
+        let rows = r.plan.row_sums();
+        let mut total_err = 0.0;
+        for i in 0..n {
+            total_err += (rows[i] - a[i]).abs();
+        }
+        assert!(total_err < 0.35, "L1 marginal error {total_err}");
+    }
+}

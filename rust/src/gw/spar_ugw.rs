@@ -1,0 +1,285 @@
+//! **Algorithm 3 — Spar-UGW**: importance sparsification for the
+//! unbalanced GW distance (§5.2).
+//!
+//! Differences from Algorithm 2:
+//! * sampling probability (9):
+//!   `p_ij ∝ (a_i b_j)^{λ/(2λ+ε)} · K_ij^{ε/(2λ+ε)}`, with `K` built once
+//!   from the initial plan `T̃⁽⁰⁾ = a bᵀ/√(m(a)m(b))` — O(mn) when `L` is
+//!   decomposable (T⁽⁰⁾ is rank one), O(m²n²) otherwise;
+//! * the cost gains the scalar shift `E(T̃)` and the inner solver is the
+//!   *unbalanced* sparse Sinkhorn with exponent λ̄/(λ̄+ε̄);
+//! * the mass-rescaling step 10.
+
+use super::cost::GroundCost;
+use super::sampling::SampledSet;
+use super::tensor::{tensor_product, SparseCostContext};
+use super::ugw::{kl_otimes, unbalanced_cost_shift, UgwConfig};
+use super::GwProblem;
+use crate::linalg::Mat;
+use crate::ot::sparse_unbalanced_sinkhorn;
+use crate::rng::{AliasTable, Rng};
+use crate::sparse::Coo;
+
+/// Configuration for Spar-UGW.
+#[derive(Clone, Copy, Debug)]
+pub struct SparUgwConfig {
+    /// The shared UGW parameters (λ, ε, R, H, tol).
+    pub ugw: UgwConfig,
+    /// Number of sampled elements s (0 → 16·max(m,n)).
+    pub sample_size: usize,
+    /// Shrinkage toward uniform sampling (condition H.4 analogue).
+    pub shrink: f64,
+}
+
+impl Default for SparUgwConfig {
+    fn default() -> Self {
+        SparUgwConfig { ugw: UgwConfig::default(), sample_size: 0, shrink: 0.0 }
+    }
+}
+
+/// Result of a Spar-UGW solve.
+pub struct SparUgwResult {
+    /// The estimate ÛGW (step 11).
+    pub value: f64,
+    /// Sparse coupling on the sampled pattern.
+    pub plan: Coo,
+    /// Outer iterations performed.
+    pub outer_iters: usize,
+    /// Support size |S|.
+    pub support: usize,
+}
+
+/// Build the sampling probabilities of Eq. (9) and draw the index set.
+/// Steps 2–5 of Algorithm 3.
+fn sample_ugw_set(
+    p: &GwProblem,
+    cost: GroundCost,
+    cfg: &SparUgwConfig,
+    rng: &mut Rng,
+) -> SampledSet {
+    let (m, n) = (p.m(), p.n());
+    let s = if cfg.sample_size == 0 { 16 * m.max(n) } else { cfg.sample_size };
+    let ma: f64 = p.a.iter().sum();
+    let mb: f64 = p.b.iter().sum();
+    // T̃⁽⁰⁾ and its kernel (step 3).
+    let mut t0 = Mat::outer(p.a, p.b);
+    t0.scale(1.0 / (ma * mb).sqrt());
+    let mass0 = t0.sum();
+    let eps_bar = cfg.ugw.epsilon * mass0;
+    let c0 = tensor_product(p.cx, p.cy, &t0, cost);
+    let shift = unbalanced_cost_shift(&t0.row_sums(), &t0.col_sums(), p.a, p.b, cfg.ugw.lambda);
+
+    // Probability weights (9): (a_i b_j)^{λ/(2λ+ε)} K_ij^{ε/(2λ+ε)}.
+    let lam = cfg.ugw.lambda;
+    let eps = cfg.ugw.epsilon;
+    let e1 = lam / (2.0 * lam + eps);
+    let e2 = eps / (2.0 * lam + eps);
+    let mut weights = Vec::with_capacity(m * n);
+    for i in 0..m {
+        let c_row = c0.row(i);
+        let t_row = t0.row(i);
+        for j in 0..n {
+            let k_ij = (-(c_row[j] + shift) / eps_bar).exp() * t_row[j];
+            let w = (p.a[i] * p.b[j]).max(0.0).powf(e1) * k_ij.max(0.0).powf(e2);
+            weights.push(w);
+        }
+    }
+    // Shrinkage toward uniform keeps all probabilities bounded below.
+    if cfg.shrink > 0.0 {
+        let total: f64 = weights.iter().sum();
+        let unif = total / (m * n) as f64;
+        for w in &mut weights {
+            *w = (1.0 - cfg.shrink) * *w + cfg.shrink * unif;
+        }
+    }
+    // Degenerate fallback: all-zero weights ⇒ uniform.
+    if weights.iter().sum::<f64>() <= 0.0 {
+        weights.iter_mut().for_each(|w| *w = 1.0);
+    }
+
+    let mut alias = AliasTable::new(&weights);
+    let draws = alias.sample_many(rng, s);
+    let mut keys: Vec<usize> = draws;
+    keys.sort_unstable();
+    keys.dedup();
+    let mut rows = Vec::with_capacity(keys.len());
+    let mut cols = Vec::with_capacity(keys.len());
+    let mut wts = Vec::with_capacity(keys.len());
+    for key in keys {
+        let (i, j) = (key / n, key % n);
+        rows.push(i);
+        cols.push(j);
+        wts.push((s as f64 * alias.prob_of(key)).min(1.0));
+    }
+    SampledSet { rows, cols, weights: wts, budget: s }
+}
+
+/// Run Algorithm 3.
+pub fn spar_ugw(
+    p: &GwProblem,
+    cost: GroundCost,
+    cfg: &SparUgwConfig,
+    rng: &mut Rng,
+) -> SparUgwResult {
+    let set = sample_ugw_set(p, cost, cfg, rng);
+    spar_ugw_with_set(p, cost, cfg, &set)
+}
+
+/// Algorithm 3 with an externally supplied index set.
+pub fn spar_ugw_with_set(
+    p: &GwProblem,
+    cost: GroundCost,
+    cfg: &SparUgwConfig,
+    set: &SampledSet,
+) -> SparUgwResult {
+    let (m, n) = (p.m(), p.n());
+    let s = set.len();
+    assert!(s > 0, "empty sampled set");
+    let lam = cfg.ugw.lambda;
+    let ma: f64 = p.a.iter().sum();
+    let mb: f64 = p.b.iter().sum();
+
+    let ctx = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, cost);
+    // T̃⁽⁰⁾ on the pattern.
+    let norm0 = 1.0 / (ma * mb).sqrt();
+    let mut t = Coo::with_pattern(m, n, &set.rows, &set.cols);
+    for (l, (&i, &j)) in set.rows.iter().zip(&set.cols).enumerate() {
+        t.vals_mut()[l] = p.a[i] * p.b[j] * norm0;
+    }
+    let inv_w: Vec<f64> = set.weights.iter().map(|&w| 1.0 / w).collect();
+
+    let mut outer = 0;
+    let mut k_vals = vec![0.0f64; s];
+    for _ in 0..cfg.ugw.outer_iters {
+        let mass = t.sum();
+        if mass <= 0.0 || !mass.is_finite() {
+            break;
+        }
+        let eps_bar = cfg.ugw.epsilon * mass;
+        let lam_bar = lam * mass;
+        // Step 8a: sparse unbalanced cost = sparse product + E(T̃) shift.
+        let c_vals = ctx.cost_values(t.vals());
+        let shift = unbalanced_cost_shift(&t.row_sums(), &t.col_sums(), p.a, p.b, lam);
+        // Step 8b: K̃ = exp(−C̃_un/ε̄) ⊙ T̃ ⊘ (sP).
+        for l in 0..s {
+            k_vals[l] = (-(c_vals[l] + shift) / eps_bar).exp() * t.vals()[l] * inv_w[l];
+        }
+        let k = Coo::from_triplets(m, n, &set.rows, &set.cols, &k_vals);
+        // Step 9: unbalanced sparse Sinkhorn.
+        let mut t_next =
+            sparse_unbalanced_sinkhorn(p.a, p.b, &k, lam_bar, eps_bar, cfg.ugw.inner_iters);
+        // Step 10: mass rescaling.
+        let next_mass = t_next.sum();
+        if !next_mass.is_finite() || next_mass <= 0.0 {
+            // Kernel over/underflow (extreme λ/ε): keep the last good plan.
+            break;
+        }
+        let scale = (mass / next_mass).sqrt();
+        t_next.map_inplace(|v| v * scale);
+        outer += 1;
+        if cfg.ugw.tol > 0.0 {
+            let diff = t.pattern_sqdist(&t_next).sqrt();
+            t = t_next;
+            if diff < cfg.ugw.tol {
+                break;
+            }
+        } else {
+            t = t_next;
+        }
+    }
+
+    // Step 11: ÛGW = quadratic term (on support) + λ KL⊗ penalties.
+    let quad = ctx.energy(t.vals());
+    let r = t.row_sums();
+    let c = t.col_sums();
+    let value = quad + lam * kl_otimes(&r, p.a) + lam * kl_otimes(&c, p.b);
+    SparUgwResult { value, plan: t, outer_iters: outer, support: s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gw::ugw::{naive_ugw, pga_ugw};
+    use crate::rng::Xoshiro256;
+    use crate::util::uniform;
+
+    fn relation(n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        let pts: Vec<[f64; 2]> = (0..n).map(|_| [rng.f64(), rng.f64()]).collect();
+        Mat::from_fn(n, n, |i, j| crate::linalg::sqdist(&pts[i], &pts[j]).sqrt())
+    }
+
+    #[test]
+    fn runs_and_is_finite() {
+        let n = 15;
+        let c1 = relation(n, 1);
+        let c2 = relation(n, 2);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let mut rng = Xoshiro256::new(3);
+        let cfg = SparUgwConfig { sample_size: 16 * n, ..Default::default() };
+        let r = spar_ugw(&p, GroundCost::L2, &cfg, &mut rng);
+        assert!(r.value.is_finite() && r.value >= -1e-9, "value {}", r.value);
+        assert!(r.plan.sum() > 0.0);
+    }
+
+    #[test]
+    fn close_to_dense_pga_ugw() {
+        // Fig. 3 behaviour: the sparse estimate tracks the dense benchmark.
+        let n = 20;
+        let c1 = relation(n, 4);
+        let c2 = relation(n, 5);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let cfg_dense = UgwConfig { lambda: 1.0, epsilon: 0.01, outer_iters: 30, inner_iters: 60, tol: 1e-10 };
+        let bench = pga_ugw(&p, GroundCost::L2, &cfg_dense);
+        let naive = naive_ugw(&p, GroundCost::L2, 1.0);
+
+        let cfg = SparUgwConfig {
+            ugw: cfg_dense,
+            sample_size: 20 * n,
+            shrink: 0.1,
+        };
+        let mut rng = Xoshiro256::new(6);
+        let mut vals = Vec::new();
+        for _ in 0..5 {
+            vals.push(spar_ugw(&p, GroundCost::L2, &cfg, &mut rng).value);
+        }
+        let est = crate::util::mean(&vals);
+        // Closer to the benchmark than the naive baseline is.
+        let err_spar = (est - bench.value).abs();
+        let err_naive = (naive - bench.value).abs();
+        assert!(
+            err_spar < err_naive,
+            "spar err {err_spar} vs naive err {err_naive} (est {est}, bench {})",
+            bench.value
+        );
+    }
+
+    #[test]
+    fn unbalanced_masses_supported() {
+        let n = 12;
+        let c1 = relation(n, 7);
+        let c2 = relation(n, 8);
+        let a = uniform(n); // mass 1
+        let b = vec![2.0 / n as f64; n]; // mass 2
+        let p = GwProblem::new(&c1, &c2, &a, &b);
+        let mut rng = Xoshiro256::new(9);
+        let cfg = SparUgwConfig { sample_size: 12 * n, ..Default::default() };
+        let r = spar_ugw(&p, GroundCost::L1, &cfg, &mut rng);
+        assert!(r.value.is_finite());
+    }
+
+    #[test]
+    fn l1_cost_supported() {
+        let n = 10;
+        let c1 = relation(n, 10);
+        let c2 = relation(n, 11);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let mut rng = Xoshiro256::new(12);
+        let cfg = SparUgwConfig { sample_size: 12 * n, ..Default::default() };
+        let r = spar_ugw(&p, GroundCost::L1, &cfg, &mut rng);
+        assert!(r.value.is_finite() && r.value >= -1e-9);
+    }
+}

@@ -1,0 +1,80 @@
+//! The stationarity gap `G(T)` of §4:
+//!
+//!   `G(T) = E(T, T) − min_{T' ∈ Π(a,b)} E(T, T')`
+//!
+//! where `E(T, T') = Σ L(Cx,Cy) T T'` and `T` is a stationary point of the
+//! GW energy iff `G(T) = 0` (Reddi et al. 2016). The inner minimum is a
+//! plain (linear) OT problem with cost `∇E(T)/2 = L(Cx,Cy) ⊗ T`, solved
+//! exactly by the transportation simplex. Used by the theory-validation
+//! bench for Theorem 1 / Corollary 1.
+
+use super::cost::GroundCost;
+use super::tensor::tensor_product;
+use super::GwProblem;
+use crate::linalg::Mat;
+use crate::ot::emd;
+
+/// Compute `G(T)` exactly (up to the LP solver's tolerance).
+pub fn stationarity_gap(p: &GwProblem, t: &Mat, cost: GroundCost) -> f64 {
+    let c = tensor_product(p.cx, p.cy, t, cost);
+    let e_tt = c.frob_inner(t);
+    let best = emd(p.a, p.b, &c);
+    e_tt - best.cost
+}
+
+/// Convenience: gap for a sparse plan (densified first).
+pub fn stationarity_gap_sparse(
+    p: &GwProblem,
+    t: &crate::sparse::Coo,
+    cost: GroundCost,
+) -> f64 {
+    stationarity_gap(p, &t.to_dense(), cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gw::alg1::{pga_gw, Alg1Config};
+    use crate::rng::Xoshiro256;
+    use crate::util::uniform;
+
+    fn relation(n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        let pts: Vec<[f64; 2]> = (0..n).map(|_| [rng.f64(), rng.f64()]).collect();
+        Mat::from_fn(n, n, |i, j| {
+            let dx = pts[i][0] - pts[j][0];
+            let dy = pts[i][1] - pts[j][1];
+            (dx * dx + dy * dy).sqrt()
+        })
+    }
+
+    #[test]
+    fn gap_nonnegative() {
+        let n = 8;
+        let c1 = relation(n, 1);
+        let c2 = relation(n, 2);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let t = Mat::outer(&a, &a);
+        let g = stationarity_gap(&p, &t, GroundCost::L2);
+        assert!(g >= -1e-9, "gap {g}");
+    }
+
+    #[test]
+    fn gap_shrinks_after_optimization() {
+        let n = 10;
+        let c1 = relation(n, 3);
+        let c2 = relation(n, 4);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let t0 = Mat::outer(&a, &a);
+        let g0 = stationarity_gap(&p, &t0, GroundCost::L2);
+        let cfg = Alg1Config { epsilon: 0.005, outer_iters: 60, inner_iters: 100, tol: 1e-11 };
+        let r = pga_gw(&p, GroundCost::L2, &cfg);
+        let g1 = stationarity_gap(&p, &r.plan, GroundCost::L2);
+        assert!(
+            g1 < g0 * 0.5,
+            "gap did not shrink: initial {g0}, after optimization {g1}"
+        );
+    }
+}

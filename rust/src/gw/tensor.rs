@@ -1,0 +1,311 @@
+//! The tensor-matrix product `C(T) = L(Cx, Cy) ⊗ T` — the computational
+//! bottleneck of Algorithm 1 (§2.3) — in three regimes:
+//!
+//! * [`tensor_product_generic`] — arbitrary cost, O(m²n²). This is what
+//!   makes dense GW with ℓ1 cost intractable and motivates the paper.
+//! * [`tensor_product_decomposable`] — the Peyré et al. (2016) fast path,
+//!   O(n²m + m²n), only for decomposable costs.
+//! * [`SparseCostContext`] — the gathered s×s form used by Spar-GW: after
+//!   sampling the index set `S`, only the s·s ground-cost values
+//!   `L(Cx[i_l, i_{l'}], Cy[j_l, j_{l'}])` ever enter the computation.
+//!
+//! `SparseCostContext` pre-gathers the `n×s` column slices `Cx[:, idx_i]`
+//! and `Cy[:, idx_j]` once per solve so each outer iteration streams
+//! contiguous rows (a §Perf optimization over per-element gathers).
+
+use super::cost::GroundCost;
+use crate::linalg::Mat;
+
+/// Generic tensor product: `C(T)[i,j] = Σ_{i',j'} L(Cx[i,i'], Cy[j,j']) T[i',j']`.
+/// O(m²n²) time — use only for validation and the dense ℓ1 baselines.
+pub fn tensor_product_generic(cx: &Mat, cy: &Mat, t: &Mat, cost: GroundCost) -> Mat {
+    let m = cx.rows();
+    let n = cy.rows();
+    assert_eq!(t.shape(), (m, n));
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        let cx_row = cx.row(i);
+        for j in 0..n {
+            let cy_row = cy.row(j);
+            let mut acc = 0.0;
+            for ip in 0..m {
+                let x = cx_row[ip];
+                let t_row = t.row(ip);
+                // Inner loop over j' — contiguous in both t and cy_row.
+                let mut s = 0.0;
+                for jp in 0..n {
+                    s += cost.eval(x, cy_row[jp]) * t_row[jp];
+                }
+                acc += s;
+            }
+            out[(i, j)] = acc;
+        }
+    }
+    out
+}
+
+/// Decomposable fast path (Prop. 1 of Peyré et al. 2016):
+/// `C(T) = f1(Cx)·r·1ᵀ + 1·(f2(Cy)·c)ᵀ − h1(Cx)·T·h2(Cy)ᵀ`
+/// with `r = T1`, `c = Tᵀ1`. O(n²m + m²n).
+pub fn tensor_product_decomposable(cx: &Mat, cy: &Mat, t: &Mat, cost: GroundCost) -> Mat {
+    let d = cost
+        .decomposition()
+        .expect("cost is not decomposable; use tensor_product_generic");
+    let m = cx.rows();
+    let n = cy.rows();
+    assert_eq!(t.shape(), (m, n));
+    let r = t.row_sums();
+    let c = t.col_sums();
+
+    // term1[i] = Σ_{i'} f1(Cx[i,i']) r[i']
+    let f1cx = cx.map(d.f1);
+    let term1 = f1cx.matvec(&r);
+    // term2[j] = Σ_{j'} f2(Cy[j,j']) c[j']
+    let f2cy = cy.map(d.f2);
+    let term2 = f2cy.matvec(&c);
+    // term3 = h1(Cx) · T · h2(Cy)ᵀ
+    let h1cx = cx.map(d.h1);
+    let h2cy = cy.map(d.h2);
+    let term3 = h1cx.matmul(t).matmul(&h2cy.transpose());
+
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        let t1 = term1[i];
+        let row = out.row_mut(i);
+        let t3row = term3.row(i);
+        for j in 0..n {
+            row[j] = t1 + term2[j] - t3row[j];
+        }
+    }
+    out
+}
+
+/// Dispatch: decomposable fast path when available, generic otherwise.
+pub fn tensor_product(cx: &Mat, cy: &Mat, t: &Mat, cost: GroundCost) -> Mat {
+    if cost.is_decomposable() {
+        tensor_product_decomposable(cx, cy, t, cost)
+    } else {
+        tensor_product_generic(cx, cy, t, cost)
+    }
+}
+
+/// GW energy `E(T) = ⟨L(Cx,Cy) ⊗ T, T⟩`.
+pub fn gw_energy(cx: &Mat, cy: &Mat, t: &Mat, cost: GroundCost) -> f64 {
+    tensor_product(cx, cy, t, cost).frob_inner(t)
+}
+
+/// Pre-gathered context for the O(s²) sparse cost products of Algorithm 2.
+///
+/// The gathered relation values are constant across outer iterations, so
+/// the elementwise ground cost is applied ONCE at construction:
+/// `l_g[l, l'] = L(Cx[i_l, i_{l'}], Cy[j_l, j_{l'}])`. Every iteration's
+/// step 6a then reduces to the plain matvec `c = l_g · t` — one contiguous
+/// s×s stream instead of two plus a transform (≈2× less memory traffic on
+/// this memory-bound loop; see EXPERIMENTS.md §Perf iteration 1).
+pub struct SparseCostContext {
+    /// Precomputed elementwise costs on S×S, s×s row-major, stored as f32:
+    /// the loop is memory-bandwidth-bound, so halving the element width is
+    /// ~2× per-iteration throughput; accumulation stays in f64 so the
+    /// reduction loses only the f32 rounding of the *inputs* (≈1e-7
+    /// relative — far below the sampling noise of the estimator).
+    l_g: Vec<f32>,
+    s: usize,
+}
+
+impl SparseCostContext {
+    /// Gather the relation values touched by the index set `S` and apply
+    /// the ground cost. O(s²) time and memory — the same order as one
+    /// sparse cost product.
+    pub fn new(cx: &Mat, cy: &Mat, idx_i: &[usize], idx_j: &[usize], cost: GroundCost) -> Self {
+        assert_eq!(idx_i.len(), idx_j.len());
+        let s = idx_i.len();
+        let mut l_g = vec![0f32; s * s];
+        for l in 0..s {
+            let cx_row = cx.row(idx_i[l]);
+            let cy_row = cy.row(idx_j[l]);
+            let out = &mut l_g[l * s..(l + 1) * s];
+            // Branch-free specializations vectorize; the generic path
+            // calls through eval().
+            match cost {
+                GroundCost::L1 => {
+                    for lp in 0..s {
+                        out[lp] = (cx_row[idx_i[lp]] - cy_row[idx_j[lp]]).abs() as f32;
+                    }
+                }
+                GroundCost::L2 => {
+                    for lp in 0..s {
+                        let d = cx_row[idx_i[lp]] - cy_row[idx_j[lp]];
+                        out[lp] = (d * d) as f32;
+                    }
+                }
+                cost => {
+                    for lp in 0..s {
+                        out[lp] = cost.eval(cx_row[idx_i[lp]], cy_row[idx_j[lp]]) as f32;
+                    }
+                }
+            }
+        }
+        SparseCostContext { l_g, s }
+    }
+
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    /// Sparse cost product: `c[l] = Σ_{l'} L(cx_g[l,l'], cy_g[l,l']) · t[l']`.
+    /// O(s²), the per-iteration hot loop of Algorithm 2 (step 6a) — a
+    /// single matvec over the precomputed f32 cost block, accumulated in
+    /// f64 with four independent partial sums (hides the FMA latency
+    /// chain; the loop is otherwise bandwidth-bound).
+    pub fn cost_values(&self, t_vals: &[f64]) -> Vec<f64> {
+        assert_eq!(t_vals.len(), self.s);
+        let s = self.s;
+        let mut out = vec![0.0f64; s];
+        for (l, o) in out.iter_mut().enumerate() {
+            let row = &self.l_g[l * s..(l + 1) * s];
+            let mut acc = [0.0f64; 4];
+            let chunks = s / 4;
+            for c in 0..chunks {
+                let base = c * 4;
+                acc[0] += row[base] as f64 * t_vals[base];
+                acc[1] += row[base + 1] as f64 * t_vals[base + 1];
+                acc[2] += row[base + 2] as f64 * t_vals[base + 2];
+                acc[3] += row[base + 3] as f64 * t_vals[base + 3];
+            }
+            let mut tail = 0.0;
+            for lp in chunks * 4..s {
+                tail += row[lp] as f64 * t_vals[lp];
+            }
+            *o = acc[0] + acc[1] + acc[2] + acc[3] + tail;
+        }
+        out
+    }
+
+    /// The sparse GW estimate of Algorithm 2 step 8:
+    /// `ĜW = Σ_{l,l'} L(cx_g[l,l'], cy_g[l,l']) t[l] t[l']`.
+    pub fn energy(&self, t_vals: &[f64]) -> f64 {
+        let c = self.cost_values(t_vals);
+        c.iter().zip(t_vals).map(|(ci, ti)| ci * ti).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn random_sym(n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.f64() + 0.05;
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        m
+    }
+
+    fn random_plan(m: usize, n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        let mut t = Mat::from_fn(m, n, |_, _| rng.f64());
+        let total = t.sum();
+        t.scale(1.0 / total);
+        t
+    }
+
+    #[test]
+    fn decomposable_matches_generic_l2() {
+        let cx = random_sym(6, 1);
+        let cy = random_sym(5, 2);
+        let t = random_plan(6, 5, 3);
+        let g = tensor_product_generic(&cx, &cy, &t, GroundCost::L2);
+        let d = tensor_product_decomposable(&cx, &cy, &t, GroundCost::L2);
+        for i in 0..6 {
+            for j in 0..5 {
+                assert!(
+                    (g[(i, j)] - d[(i, j)]).abs() < 1e-10,
+                    "mismatch at ({i},{j}): {} vs {}",
+                    g[(i, j)],
+                    d[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decomposable_matches_generic_kl() {
+        let cx = random_sym(4, 4);
+        let cy = random_sym(4, 5);
+        let t = random_plan(4, 4, 6);
+        let g = tensor_product_generic(&cx, &cy, &t, GroundCost::Kl);
+        let d = tensor_product_decomposable(&cx, &cy, &t, GroundCost::Kl);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((g[(i, j)] - d[(i, j)]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn energy_zero_for_identical_spaces() {
+        // Cx == Cy and T = identity/ n ⇒ every L(Cx[i,i'],Cy[j,j']) picked
+        // by the plan pairs identical entries ⇒ E = 0.
+        let c = random_sym(5, 7);
+        let n = 5;
+        let mut t = Mat::zeros(n, n);
+        for i in 0..n {
+            t[(i, i)] = 1.0 / n as f64;
+        }
+        for cost in [GroundCost::L1, GroundCost::L2] {
+            let e = gw_energy(&c, &c, &t, cost);
+            assert!(e.abs() < 1e-12, "{cost:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn sparse_context_matches_dense_on_full_grid() {
+        // With S = the full index grid, the sparse product equals the dense
+        // tensor product read off at the grid points.
+        let m = 4;
+        let n = 3;
+        let cx = random_sym(m, 8);
+        let cy = random_sym(n, 9);
+        let t = random_plan(m, n, 10);
+        // Full grid in row-major order.
+        let mut idx_i = Vec::new();
+        let mut idx_j = Vec::new();
+        let mut t_vals = Vec::new();
+        for i in 0..m {
+            for j in 0..n {
+                idx_i.push(i);
+                idx_j.push(j);
+                t_vals.push(t[(i, j)]);
+            }
+        }
+        for cost in [GroundCost::L1, GroundCost::L2, GroundCost::Kl] {
+            let ctx = SparseCostContext::new(&cx, &cy, &idx_i, &idx_j, cost);
+            let c_sparse = ctx.cost_values(&t_vals);
+            let c_dense = tensor_product_generic(&cx, &cy, &t, cost);
+            for (l, (&i, &j)) in idx_i.iter().zip(&idx_j).enumerate() {
+                // f32 storage of the gathered cost block: inputs round
+                // at ~1e-7 relative; the f64 accumulation adds nothing.
+                let tol = 3e-6 * c_dense[(i, j)].abs().max(1.0);
+                assert!(
+                    (c_sparse[l] - c_dense[(i, j)]).abs() < tol,
+                    "{cost:?} at l={l}: {} vs {}",
+                    c_sparse[l],
+                    c_dense[(i, j)]
+                );
+            }
+            // Energy agrees too (f32-input rounding tolerance).
+            let e_sparse = ctx.energy(&t_vals);
+            let e_dense = c_dense.frob_inner(&t);
+            assert!(
+                (e_sparse - e_dense).abs() < 3e-6 * e_dense.abs().max(1.0),
+                "{cost:?}: energy {e_sparse} vs {e_dense}"
+            );
+        }
+    }
+}

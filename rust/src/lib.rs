@@ -1,0 +1,31 @@
+//! # spargw — Importance Sparsification for Gromov-Wasserstein Distance
+//!
+//! Production-quality reproduction of *"Efficient Approximation of
+//! Gromov-Wasserstein Distance Using Importance Sparsification"*
+//! (Li, Yu, Xu, Meng; 2022): the Spar-GW / Spar-FGW / Spar-UGW algorithm
+//! family, all the baselines it is evaluated against, and a coordinator
+//! that serves pairwise-GW workloads over datasets of graphs.
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — coordinator, native solvers, substrates.
+//! * **L2 (`python/compile/model.py`)** — JAX iteration graphs, AOT-lowered
+//!   to HLO text in `artifacts/`.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the O(s²)
+//!   sparse-cost hot spot, lowered inside the L2 graphs.
+//!
+//! Python never runs on the request path: the `runtime` module loads the
+//! HLO artifacts via PJRT (`xla` crate) and executes them natively.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod datasets;
+pub mod gw;
+pub mod linalg;
+pub mod ml;
+pub mod ot;
+pub mod rng;
+pub mod runtime;
+pub mod sparse;
+pub mod testutil;
+pub mod util;

@@ -1,0 +1,184 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Used by spectral clustering (Tables 2–3), the S-GWL partitioner, and the
+//! low-rank GW baseline. Jacobi is O(n³) per sweep with quadratic
+//! convergence once nearly diagonal; for the n ≤ ~1000 similarity matrices
+//! in the experiment harness it converges in 6–12 sweeps.
+
+use super::Mat;
+
+/// Result of a symmetric eigendecomposition `A = V diag(λ) Vᵀ`.
+pub struct EigenDecomposition {
+    /// Eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Eigenvectors as columns of an n×n matrix, same order as `values`.
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi eigensolver for a symmetric matrix.
+///
+/// `a` must be symmetric (only the upper triangle is trusted). Tolerance is
+/// on the off-diagonal Frobenius norm relative to the total norm.
+pub fn symmetric_eigen(a: &Mat, max_sweeps: usize) -> EigenDecomposition {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "symmetric_eigen needs a square matrix");
+    let mut m = a.clone();
+    // Symmetrize defensively: (A + Aᵀ)/2.
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = avg;
+            m[(j, i)] = avg;
+        }
+    }
+    let mut v = Mat::eye(n);
+    let total_norm = m.frob_norm().max(1e-300);
+    let tol = 1e-12 * total_norm;
+
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += 2.0 * m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Rotation angle.
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // Apply rotation to rows/cols p and q.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract, sort ascending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|&(l, _)| l).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
+        for k in 0..n {
+            vectors[(k, new_col)] = v[(k, old_col)];
+        }
+    }
+    EigenDecomposition { values, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reconstruct(e: &EigenDecomposition) -> Mat {
+        let n = e.values.len();
+        let mut lam = Mat::zeros(n, n);
+        for i in 0..n {
+            lam[(i, i)] = e.values[i];
+        }
+        e.vectors.matmul(&lam).matmul(&e.vectors.transpose())
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = -1.0;
+        a[(2, 2)] = 2.0;
+        let e = symmetric_eigen(&a, 30);
+        assert!((e.values[0] + 1.0).abs() < 1e-10);
+        assert!((e.values[1] - 2.0).abs() < 1e-10);
+        assert!((e.values[2] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = symmetric_eigen(&a, 30);
+        assert!((e.values[0] - 1.0).abs() < 1e-10);
+        assert!((e.values[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstruction_random() {
+        use crate::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(77);
+        let n = 20;
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let x = rng.normal();
+                a[(i, j)] = x;
+                a[(j, i)] = x;
+            }
+        }
+        let e = symmetric_eigen(&a, 50);
+        let r = reconstruct(&e);
+        let mut err = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                err = err.max((r[(i, j)] - a[(i, j)]).abs());
+            }
+        }
+        assert!(err < 1e-8, "reconstruction error {err}");
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        use crate::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(78);
+        let n = 12;
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let x = rng.f64();
+                a[(i, j)] = x;
+                a[(j, i)] = x;
+            }
+        }
+        let e = symmetric_eigen(&a, 50);
+        let vtv = e.vectors.transpose().matmul(&e.vectors);
+        for i in 0..n {
+            for j in 0..n {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv[(i, j)] - expect).abs() < 1e-9);
+            }
+        }
+    }
+}

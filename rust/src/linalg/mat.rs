@@ -1,0 +1,372 @@
+//! Row-major dense matrix with the operations the GW stack needs.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major `rows × cols` matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Constant-filled matrix.
+    pub fn full(rows: usize, cols: usize, v: f64) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a flat row-major vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a generator f(i, j).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Outer product a bᵀ.
+    pub fn outer(a: &[f64], b: &[f64]) -> Self {
+        let mut m = Mat::zeros(a.len(), b.len());
+        for (i, &ai) in a.iter().enumerate() {
+            let row = m.row_mut(i);
+            for (j, &bj) in b.iter().enumerate() {
+                row[j] = ai * bj;
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Matrix product `self * other` (cache-blocked ikj loop).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        // ikj ordering: streams rows of `other`, writes rows of `out`.
+        const BK: usize = 64;
+        for kb in (0..k).step_by(BK) {
+            let kend = (kb + BK).min(k);
+            for i in 0..m {
+                let arow = self.row(i);
+                for kk in kb..kend {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = other.row(kk);
+                    let orow = &mut out.data[i * n..(i + 1) * n];
+                    for (o, &b) in orow.iter_mut().zip(brow) {
+                        *o += aik * b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "matvec shape mismatch");
+        (0..self.rows).map(|i| super::dot(self.row(i), x)).collect()
+    }
+
+    /// Transposed matrix-vector product `selfᵀ x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len(), "matvec_t shape mismatch");
+        let mut out = vec![0.0; self.cols];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            for (o, &a) in out.iter_mut().zip(self.row(i)) {
+                *o += xi * a;
+            }
+        }
+        out
+    }
+
+    /// Frobenius inner product ⟨self, other⟩.
+    pub fn frob_inner(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        super::dot(&self.data, &other.data)
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        super::norm2(&self.data)
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Row sums (length `rows`).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows).map(|i| self.row(i).iter().sum()).collect()
+    }
+
+    /// Column sums (length `cols`).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (o, &v) in out.iter_mut().zip(self.row(i)) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Elementwise map (new matrix).
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Elementwise map in place.
+    pub fn map_inplace(&mut self, f: impl Fn(f64) -> f64) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Elementwise binary zip (new matrix).
+    pub fn zip(&self, other: &Mat, f: impl Fn(f64, f64) -> f64) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    /// self + alpha * other, in place.
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale all entries in place.
+    pub fn scale(&mut self, alpha: f64) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    /// `diag(u) * self * diag(v)` — the Sinkhorn plan recovery.
+    pub fn diag_scale(&self, u: &[f64], v: &[f64]) -> Mat {
+        assert_eq!(u.len(), self.rows);
+        assert_eq!(v.len(), self.cols);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let ui = u[i];
+            for (o, &vj) in out.row_mut(i).iter_mut().zip(v) {
+                *o *= ui * vj;
+            }
+        }
+        out
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, &v| m.max(v.abs()))
+    }
+
+    /// Extract a sub-matrix by row and column index lists.
+    pub fn gather(&self, rows: &[usize], cols: &[usize]) -> Mat {
+        let mut out = Mat::zeros(rows.len(), cols.len());
+        for (oi, &i) in rows.iter().enumerate() {
+            let src = self.row(i);
+            let dst = out.row_mut(oi);
+            for (oj, &j) in cols.iter().enumerate() {
+                dst[oj] = src[j];
+            }
+        }
+        out
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "..." } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = Mat::from_fn(5, 7, |i, j| (i * 7 + j) as f64 * 0.1);
+        let b = Mat::from_fn(7, 4, |i, j| ((i + 1) * (j + 2)) as f64 * 0.01);
+        let c = a.matmul(&b);
+        for i in 0..5 {
+            for j in 0..4 {
+                let mut s = 0.0;
+                for k in 0..7 {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                assert!((c[(i, j)] - s).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let a = Mat::from_fn(3, 4, |i, j| (i + j) as f64);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = a.matvec(&x);
+        let yt = a.transpose().matvec_t(&x);
+        // aᵀᵀ x along rows == a x
+        assert_eq!(y.len(), 3);
+        assert_eq!(yt.len(), 3);
+        for (u, v) in y.iter().zip(&yt) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn diag_scale_matches_manual() {
+        let k = Mat::from_fn(3, 2, |i, j| (i * 2 + j + 1) as f64);
+        let u = vec![2.0, 0.5, 1.0];
+        let v = vec![3.0, 10.0];
+        let t = k.diag_scale(&u, &v);
+        for i in 0..3 {
+            for j in 0..2 {
+                assert!((t[(i, j)] - u[i] * k[(i, j)] * v[j]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sums_and_norms() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.sum(), 10.0);
+        assert_eq!(m.row_sums(), vec![3.0, 7.0]);
+        assert_eq!(m.col_sums(), vec![4.0, 6.0]);
+        assert!((m.frob_norm() - 30.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gather_submatrix() {
+        let m = Mat::from_fn(4, 4, |i, j| (i * 10 + j) as f64);
+        let g = m.gather(&[2, 0], &[3, 1]);
+        assert_eq!(g[(0, 0)], 23.0);
+        assert_eq!(g[(0, 1)], 21.0);
+        assert_eq!(g[(1, 0)], 3.0);
+        assert_eq!(g[(1, 1)], 1.0);
+    }
+
+    #[test]
+    fn outer_product() {
+        let m = Mat::outer(&[1.0, 2.0], &[3.0, 4.0, 5.0]);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m[(1, 2)], 10.0);
+    }
+}

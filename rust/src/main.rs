@@ -1,0 +1,222 @@
+//! `spargw` — the L3 coordinator binary.
+//!
+//! Subcommands:
+//! * `solve`     — one GW solve on a synthetic workload, any method.
+//! * `pairwise`  — the pairwise-GW service over a graph dataset
+//!                 (optionally on the PJRT artifact path).
+//! * `cluster`   — full §6.2 pipeline: pairwise (F)GW → similarity →
+//!                 spectral clustering → Rand index.
+//! * `datasets`  — list the built-in datasets and their statistics.
+//! * `artifacts` — inspect the AOT artifact manifest.
+//!
+//! Run `spargw help` for usage.
+
+use spargw::bench::{Method, RunSettings};
+use spargw::cli::Args;
+use spargw::coordinator::service::{similarity_from_distances, PairwiseConfig, PairwiseGw};
+use spargw::datasets::{self, graphsets};
+use spargw::gw::GroundCost;
+use spargw::ml::{rand_index, spectral_clustering};
+use spargw::rng::Xoshiro256;
+use spargw::runtime::artifacts::Manifest;
+
+const USAGE: &str = "\
+spargw — importance-sparsified Gromov-Wasserstein (Spar-GW) coordinator
+
+USAGE:
+  spargw solve    [--workload moon|graph|gaussian|spiral] [--n 200]
+                  [--method spar-gw|egw|pga-gw|emd-gw|s-gwl|lr-gw|ae|sagrow|naive]
+                  [--cost l1|l2|kl] [--eps 0.01] [--s 0] [--seed 0]
+  spargw pairwise [--dataset synthetic|bzr|cox2|cuneiform|firstmm_db|imdb-b]
+                  [--cost l1|l2] [--workers 4] [--seed 0]
+                  [--artifacts artifacts]        # enable the PJRT path
+  spargw cluster  [--dataset ...] [--cost l1|l2] [--gamma 1.0] [--seed 0]
+  spargw datasets [--seed 0]
+  spargw artifacts [--dir artifacts]
+  spargw help
+";
+
+fn parse_cost(s: &str) -> GroundCost {
+    match s.to_ascii_lowercase().as_str() {
+        "l1" => GroundCost::L1,
+        "l2" => GroundCost::L2,
+        "kl" => GroundCost::Kl,
+        other => {
+            eprintln!("unknown cost {other:?} (expected l1|l2|kl)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn make_workload(name: &str, n: usize, rng: &mut Xoshiro256) -> datasets::Instance {
+    match name {
+        "moon" => datasets::moon::moon(n, rng),
+        "graph" => datasets::graph::graph_pair(n, rng),
+        "gaussian" => datasets::gaussian::gaussian(n, rng),
+        "spiral" => datasets::spiral::spiral(n, rng),
+        other => {
+            eprintln!("unknown workload {other:?} (expected moon|graph|gaussian|spiral)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn load_dataset(name: &str, seed: u64) -> graphsets::GraphDataset {
+    match name.to_ascii_lowercase().replace('-', "_").as_str() {
+        "synthetic" => graphsets::synthetic_ds(seed),
+        "bzr" => graphsets::bzr(seed),
+        "cox2" => graphsets::cox2(seed),
+        "cuneiform" => graphsets::cuneiform(seed),
+        "firstmm_db" => graphsets::firstmm_db(seed),
+        "imdb_b" => graphsets::imdb_b(seed),
+        other => {
+            eprintln!("unknown dataset {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_solve(args: &Args) {
+    let n = args.usize_or("n", 200);
+    let seed = args.u64_or("seed", 0);
+    let cost = parse_cost(args.str_or("cost", "l2"));
+    let method_name = args.str_or("method", "spar-gw");
+    let method = Method::parse(method_name).unwrap_or_else(|| {
+        eprintln!("unknown method {method_name:?}");
+        std::process::exit(2);
+    });
+    let mut rng = Xoshiro256::new(seed);
+    let inst = make_workload(args.str_or("workload", "moon"), n, &mut rng);
+    let settings = RunSettings {
+        epsilon: args.f64_or("eps", 0.01),
+        sample_size: args.usize_or("s", 0),
+        outer_iters: args.usize_or("outer", 20),
+        inner_iters: args.usize_or("inner", 50),
+        ..Default::default()
+    };
+    let p = inst.problem();
+    match method.run(&p, None, cost, &settings, &mut rng) {
+        Some(out) => {
+            println!(
+                "method={} workload={} n={} cost={} eps={} -> value={:.6e}  time={:.3}s",
+                method.name(),
+                args.str_or("workload", "moon"),
+                n,
+                cost.name(),
+                settings.epsilon,
+                out.value,
+                out.seconds
+            );
+        }
+        None => {
+            eprintln!("{} does not support the {} cost", method.name(), cost.name());
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_pairwise(args: &Args) {
+    let seed = args.u64_or("seed", 0);
+    let ds = load_dataset(args.str_or("dataset", "synthetic"), seed);
+    let cfg = PairwiseConfig {
+        cost: parse_cost(args.str_or("cost", "l2")),
+        workers: args.usize_or("workers", 4),
+        seed,
+        ..Default::default()
+    };
+    let mut svc = match args.opt_str("artifacts") {
+        Some(dir) => match PairwiseGw::with_runtime(cfg, dir) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("failed to open artifact runtime at {dir}: {e:#}");
+                std::process::exit(1);
+            }
+        },
+        None => PairwiseGw::new(cfg),
+    };
+    let res = svc.pairwise(&ds).expect("pairwise failed");
+    println!("dataset={} N={} mean_nodes={:.2}", ds.name, ds.len(), ds.mean_nodes());
+    println!(
+        "pairs: pjrt={} native={}  {}",
+        res.pjrt_pairs,
+        res.native_pairs,
+        res.metrics.summary()
+    );
+    if let Some((compiled, cached, execs)) = svc.runtime_stats() {
+        println!("runtime: compiled={compiled} cached={cached} executions={execs}");
+    }
+}
+
+fn cmd_cluster(args: &Args) {
+    let seed = args.u64_or("seed", 0);
+    let ds = load_dataset(args.str_or("dataset", "synthetic"), seed);
+    let cfg = PairwiseConfig {
+        cost: parse_cost(args.str_or("cost", "l2")),
+        workers: args.usize_or("workers", 4),
+        seed,
+        ..Default::default()
+    };
+    let mut svc = PairwiseGw::new(cfg);
+    let res = svc.pairwise(&ds).expect("pairwise failed");
+    let gamma = args.f64_or("gamma", 1.0);
+    let sim = similarity_from_distances(&res.distances, gamma);
+    let mut rng = Xoshiro256::new(seed ^ 0x5eed);
+    let assign = spectral_clustering(&sim, ds.n_classes, &mut rng);
+    let ri = rand_index(&assign, &ds.labels());
+    println!(
+        "dataset={} N={} gamma={} RI={:.2}%  ({} pairs, mean {:.1} ms/pair)",
+        ds.name,
+        ds.len(),
+        gamma,
+        100.0 * ri,
+        res.metrics.count(),
+        1e3 * res.metrics.mean()
+    );
+}
+
+fn cmd_datasets(args: &Args) {
+    let seed = args.u64_or("seed", 0);
+    println!("{:<12} {:>6} {:>12} {:>9} {:>12}", "dataset", "N", "mean_nodes", "classes", "attrs");
+    for ds in graphsets::all_datasets(seed) {
+        println!(
+            "{:<12} {:>6} {:>12.2} {:>9} {:>12}",
+            ds.name,
+            ds.len(),
+            ds.mean_nodes(),
+            ds.n_classes,
+            format!("{:?}", ds.attr_kind)
+        );
+    }
+}
+
+fn cmd_artifacts(args: &Args) {
+    let dir = args.str_or("dir", "artifacts");
+    match Manifest::load(dir) {
+        Ok(m) => {
+            println!("{} artifacts in {dir}:", m.specs.len());
+            for spec in &m.specs {
+                println!("  {spec:?}");
+            }
+        }
+        Err(e) => {
+            eprintln!("cannot load manifest from {dir}: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional(0) {
+        Some("solve") => cmd_solve(&args),
+        Some("pairwise") => cmd_pairwise(&args),
+        Some("cluster") => cmd_cluster(&args),
+        Some("datasets") => cmd_datasets(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("help") | None => print!("{USAGE}"),
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

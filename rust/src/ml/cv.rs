@@ -1,0 +1,93 @@
+//! k-fold cross-validation over precomputed kernel/similarity matrices
+//! (Table 3 protocol: ten-fold CV of a kernel SVM on the GW similarity).
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Shuffle indices and split into k folds of near-equal size.
+pub fn kfold_indices(n: usize, k: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(k >= 2 && k <= n, "need 2 ≤ k ≤ n");
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (pos, &i) in idx.iter().enumerate() {
+        folds[pos % k].push(i);
+    }
+    folds
+}
+
+/// Cross-validated accuracy of a kernel classifier.
+///
+/// `kernel` is the full n×n precomputed kernel; `train_fn` receives the
+/// train×train kernel + labels and returns a predictor from test×train
+/// kernel values to predicted labels.
+pub fn cross_validate<F>(
+    kernel: &Mat,
+    labels: &[usize],
+    k: usize,
+    rng: &mut Rng,
+    train_fn: F,
+) -> f64
+where
+    F: Fn(&Mat, &[usize]) -> Box<dyn Fn(&Mat) -> Vec<usize>>,
+{
+    let n = labels.len();
+    assert_eq!(kernel.shape(), (n, n));
+    let folds = kfold_indices(n, k, rng);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for f in 0..k {
+        let test_idx = &folds[f];
+        let train_idx: Vec<usize> = (0..k)
+            .filter(|&g| g != f)
+            .flat_map(|g| folds[g].iter().copied())
+            .collect();
+        let k_train = kernel.gather(&train_idx, &train_idx);
+        let y_train: Vec<usize> = train_idx.iter().map(|&i| labels[i]).collect();
+        let predictor = train_fn(&k_train, &y_train);
+        let k_test = kernel.gather(test_idx, &train_idx);
+        let pred = predictor(&k_test);
+        for (p, &i) in pred.iter().zip(test_idx) {
+            if *p == labels[i] {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    correct as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::svm::{KernelSvm, SvmConfig};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn folds_partition_everything() {
+        let mut rng = Xoshiro256::new(1);
+        let folds = kfold_indices(23, 5, &mut rng);
+        let mut all: Vec<usize> = folds.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..23).collect::<Vec<_>>());
+        for f in &folds {
+            assert!(f.len() == 4 || f.len() == 5);
+        }
+    }
+
+    #[test]
+    fn cv_accuracy_on_separable_data() {
+        let mut rng = Xoshiro256::new(2);
+        let n = 40;
+        let pts: Vec<f64> = (0..n)
+            .map(|i| if i < n / 2 { rng.normal() * 0.2 } else { 4.0 + rng.normal() * 0.2 })
+            .collect();
+        let labels: Vec<usize> = (0..n).map(|i| usize::from(i >= n / 2)).collect();
+        let kernel = Mat::from_fn(n, n, |i, j| (-(pts[i] - pts[j]).powi(2)).exp());
+        let acc = cross_validate(&kernel, &labels, 5, &mut rng, |k_train, y| {
+            let svm = KernelSvm::train(k_train, y, &SvmConfig::default());
+            Box::new(move |k_test: &Mat| svm.predict(k_test))
+        });
+        assert!(acc > 0.9, "cv accuracy {acc}");
+    }
+}

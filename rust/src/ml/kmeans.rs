@@ -1,0 +1,142 @@
+//! k-means clustering with k-means++ initialization.
+
+use crate::linalg::sqdist;
+use crate::rng::Rng;
+
+/// Cluster `points` (rows) into `k` groups; returns per-point assignments.
+pub fn kmeans(points: &[Vec<f64>], k: usize, max_iter: usize, rng: &mut Rng) -> Vec<usize> {
+    kmeans_with_centers(points, k, max_iter, rng).0
+}
+
+/// k-means returning (assignments, centers).
+pub fn kmeans_with_centers(
+    points: &[Vec<f64>],
+    k: usize,
+    max_iter: usize,
+    rng: &mut Rng,
+) -> (Vec<usize>, Vec<Vec<f64>>) {
+    let n = points.len();
+    assert!(n > 0, "no points");
+    let k = k.min(n).max(1);
+    let dim = points[0].len();
+
+    // --- k-means++ seeding ---
+    let mut centers: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centers.push(points[rng.usize(n)].clone());
+    let mut d2: Vec<f64> = points.iter().map(|p| sqdist(p, &centers[0])).collect();
+    while centers.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            rng.usize(n)
+        } else {
+            // Sample proportional to squared distance.
+            let mut target = rng.f64() * total;
+            let mut idx = n - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                if target < d {
+                    idx = i;
+                    break;
+                }
+                target -= d;
+            }
+            idx
+        };
+        centers.push(points[next].clone());
+        for (i, p) in points.iter().enumerate() {
+            let d = sqdist(p, centers.last().unwrap());
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+
+    // --- Lloyd iterations ---
+    let mut assign = vec![0usize; n];
+    for _ in 0..max_iter {
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let mut best = (f64::INFINITY, 0usize);
+            for (c, center) in centers.iter().enumerate() {
+                let d = sqdist(p, center);
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if assign[i] != best.1 {
+                assign[i] = best.1;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+        // Recompute centers.
+        let mut counts = vec![0usize; k];
+        let mut sums = vec![vec![0.0; dim]; k];
+        for (i, p) in points.iter().enumerate() {
+            counts[assign[i]] += 1;
+            for (s, &x) in sums[assign[i]].iter_mut().zip(p) {
+                *s += x;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for s in &mut sums[c] {
+                    *s /= counts[c] as f64;
+                }
+                centers[c] = sums[c].clone();
+            } else {
+                // Re-seed empty cluster at the farthest point.
+                let far = (0..n)
+                    .max_by(|&i, &j| {
+                        sqdist(&points[i], &centers[assign[i]])
+                            .partial_cmp(&sqdist(&points[j], &centers[assign[j]]))
+                            .unwrap()
+                    })
+                    .unwrap();
+                centers[c] = points[far].clone();
+            }
+        }
+    }
+    (assign, centers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn separates_two_blobs() {
+        let mut rng = Xoshiro256::new(1);
+        let mut pts = Vec::new();
+        for _ in 0..20 {
+            pts.push(vec![rng.normal() * 0.1, rng.normal() * 0.1]);
+        }
+        for _ in 0..20 {
+            pts.push(vec![5.0 + rng.normal() * 0.1, 5.0 + rng.normal() * 0.1]);
+        }
+        let assign = kmeans(&pts, 2, 50, &mut rng);
+        // All of blob 1 in one cluster, blob 2 in the other.
+        let c0 = assign[0];
+        assert!(assign[..20].iter().all(|&c| c == c0));
+        assert!(assign[20..].iter().all(|&c| c != c0));
+    }
+
+    #[test]
+    fn k_larger_than_n_clamped() {
+        let mut rng = Xoshiro256::new(2);
+        let pts = vec![vec![0.0], vec![1.0]];
+        let assign = kmeans(&pts, 10, 10, &mut rng);
+        assert_eq!(assign.len(), 2);
+        assert!(assign.iter().all(|&c| c < 2));
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let pts: Vec<Vec<f64>> = (0..30).map(|i| vec![(i % 7) as f64, (i % 3) as f64]).collect();
+        let a1 = kmeans(&pts, 3, 20, &mut Xoshiro256::new(5));
+        let a2 = kmeans(&pts, 3, 20, &mut Xoshiro256::new(5));
+        assert_eq!(a1, a2);
+    }
+}

@@ -1,0 +1,15 @@
+//! Machine-learning substrate backing the real-world experiments
+//! (Tables 2–3): clustering on GW similarity matrices and kernel-SVM
+//! classification with cross-validation.
+
+pub mod cv;
+pub mod kmeans;
+pub mod rand_index;
+pub mod spectral;
+pub mod svm;
+
+pub use cv::{cross_validate, kfold_indices};
+pub use kmeans::{kmeans, kmeans_with_centers};
+pub use rand_index::rand_index;
+pub use spectral::spectral_clustering;
+pub use svm::{KernelSvm, SvmConfig};

@@ -1,0 +1,52 @@
+//! Rand index (Rand 1971) — the clustering quality metric of Table 2.
+
+/// Rand index between two labelings: fraction of point pairs on which the
+/// two clusterings agree (same-cluster vs different-cluster). In [0, 1].
+pub fn rand_index(labels_a: &[usize], labels_b: &[usize]) -> f64 {
+    assert_eq!(labels_a.len(), labels_b.len());
+    let n = labels_a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let same_a = labels_a[i] == labels_a[j];
+            let same_b = labels_b[i] == labels_b[j];
+            if same_a == same_b {
+                agree += 1;
+            }
+            total += 1;
+        }
+    }
+    agree as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_labelings() {
+        assert_eq!(rand_index(&[0, 0, 1, 1], &[0, 0, 1, 1]), 1.0);
+        // Permuted labels: still identical partition.
+        assert_eq!(rand_index(&[0, 0, 1, 1], &[5, 5, 2, 2]), 1.0);
+    }
+
+    #[test]
+    fn opposite_labelings() {
+        // 4 points: partition {01}{23} vs {02}{13} — agreement on pairs
+        // (0,3),(1,2)? Let's count: pairs same_a: (0,1),(2,3); same_b:
+        // (0,2),(1,3). Agreements: pairs where both "different":
+        // (0,3),(1,2). So RI = 2/6.
+        let ri = rand_index(&[0, 0, 1, 1], &[0, 1, 0, 1]);
+        assert!((ri - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_cluster_vs_singletons() {
+        let ri = rand_index(&[0, 0, 0], &[0, 1, 2]);
+        assert_eq!(ri, 0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Spectral clustering (normalized-cuts style) on a similarity matrix —
+//! the pipeline of Table 2: `S = exp(−D/γ)` → normalized Laplacian →
+//! bottom-k eigenvectors → k-means on the spectral embedding.
+
+use crate::linalg::{symmetric_eigen, Mat};
+use crate::rng::Rng;
+
+/// Cluster using a precomputed similarity matrix (symmetric, non-negative).
+pub fn spectral_clustering(sim: &Mat, k: usize, rng: &mut Rng) -> Vec<usize> {
+    let n = sim.rows();
+    assert_eq!(n, sim.cols(), "similarity must be square");
+    assert!(k >= 1 && k <= n);
+
+    // Normalized Laplacian L = I − D^{-1/2} S D^{-1/2}.
+    let deg: Vec<f64> = sim.row_sums();
+    let dinv_sqrt: Vec<f64> = deg
+        .iter()
+        .map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 })
+        .collect();
+    let mut lap = Mat::from_fn(n, n, |i, j| {
+        let norm = dinv_sqrt[i] * sim[(i, j)] * dinv_sqrt[j];
+        if i == j {
+            1.0 - norm
+        } else {
+            -norm
+        }
+    });
+    // Symmetrize against FP drift.
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let avg = 0.5 * (lap[(i, j)] + lap[(j, i)]);
+            lap[(i, j)] = avg;
+            lap[(j, i)] = avg;
+        }
+    }
+
+    let eig = symmetric_eigen(&lap, 60);
+    // Spectral embedding: bottom-k eigenvectors, row-normalized (Ng-Jordan-
+    // Weiss).
+    let mut emb: Vec<Vec<f64>> = (0..n)
+        .map(|i| (0..k).map(|c| eig.vectors[(i, c)]).collect::<Vec<f64>>())
+        .collect();
+    for row in &mut emb {
+        let norm = crate::linalg::norm2(row);
+        if norm > 1e-12 {
+            for v in row.iter_mut() {
+                *v /= norm;
+            }
+        }
+    }
+    crate::ml::kmeans::kmeans(&emb, k, 60, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn block_similarity_recovers_blocks() {
+        // Two blocks with high intra- and low inter-similarity.
+        let n = 12;
+        let sim = Mat::from_fn(n, n, |i, j| {
+            let same = (i < n / 2) == (j < n / 2);
+            if same {
+                1.0
+            } else {
+                0.01
+            }
+        });
+        let mut rng = Xoshiro256::new(1);
+        let assign = spectral_clustering(&sim, 2, &mut rng);
+        let c0 = assign[0];
+        assert!(assign[..n / 2].iter().all(|&c| c == c0), "{assign:?}");
+        assert!(assign[n / 2..].iter().all(|&c| c != c0), "{assign:?}");
+    }
+
+    #[test]
+    fn three_blocks() {
+        let n = 15;
+        let block = |i: usize| i / 5;
+        let sim = Mat::from_fn(n, n, |i, j| if block(i) == block(j) { 1.0 } else { 0.02 });
+        let mut rng = Xoshiro256::new(2);
+        let assign = spectral_clustering(&sim, 3, &mut rng);
+        for b in 0..3 {
+            let first = assign[b * 5];
+            assert!(assign[b * 5..(b + 1) * 5].iter().all(|&c| c == first));
+        }
+        // Distinct labels across blocks.
+        assert_ne!(assign[0], assign[5]);
+        assert_ne!(assign[5], assign[10]);
+        assert_ne!(assign[0], assign[10]);
+    }
+
+    #[test]
+    fn handles_isolated_node() {
+        // A node with zero similarity everywhere must not produce NaNs.
+        let n = 6;
+        let sim = Mat::from_fn(n, n, |i, j| {
+            if i == 5 || j == 5 {
+                0.0
+            } else if (i < 3) == (j < 3) {
+                1.0
+            } else {
+                0.05
+            }
+        });
+        let mut rng = Xoshiro256::new(3);
+        let assign = spectral_clustering(&sim, 2, &mut rng);
+        assert_eq!(assign.len(), n);
+    }
+}

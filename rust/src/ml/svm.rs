@@ -1,0 +1,262 @@
+//! Kernel SVM with a *precomputed* kernel (the GW similarity matrix),
+//! trained by simplified SMO, one-vs-rest for multiclass — the Table 3
+//! classification pipeline.
+
+use crate::linalg::Mat;
+
+/// SVM hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SvmConfig {
+    /// Soft-margin parameter C.
+    pub c: f64,
+    /// SMO convergence tolerance.
+    pub tol: f64,
+    /// Maximum SMO passes without progress before stopping.
+    pub max_passes: usize,
+    /// Hard cap on SMO iterations.
+    pub max_iters: usize,
+}
+
+impl Default for SvmConfig {
+    fn default() -> Self {
+        SvmConfig { c: 10.0, tol: 1e-3, max_passes: 5, max_iters: 2000 }
+    }
+}
+
+/// A trained one-vs-rest multiclass kernel SVM. Stores per-class dual
+/// coefficients over the *training* indices; prediction needs the kernel
+/// values between test and training items.
+pub struct KernelSvm {
+    /// Distinct class labels in training order.
+    classes: Vec<usize>,
+    /// Per class: (alpha_i * y_i) over training points, plus bias.
+    machines: Vec<(Vec<f64>, f64)>,
+}
+
+/// Binary SMO on a precomputed kernel. `y` in {−1, +1}.
+fn smo_binary(k: &Mat, y: &[f64], cfg: &SvmConfig, rng_state: &mut u64) -> (Vec<f64>, f64) {
+    let n = y.len();
+    let mut alpha = vec![0.0f64; n];
+    let mut b = 0.0f64;
+    let f = |alpha: &[f64], b: f64, i: usize| -> f64 {
+        let mut s = 0.0;
+        for j in 0..n {
+            if alpha[j] != 0.0 {
+                s += alpha[j] * y[j] * k[(j, i)];
+            }
+        }
+        s + b
+    };
+    let mut passes = 0;
+    let mut iters = 0;
+    // Tiny xorshift for index picking (decoupled from the main RNG).
+    let next = move |state: &mut u64, n: usize| {
+        *state ^= *state << 13;
+        *state ^= *state >> 7;
+        *state ^= *state << 17;
+        (*state % n as u64) as usize
+    };
+    while passes < cfg.max_passes && iters < cfg.max_iters {
+        let mut changed = 0;
+        for i in 0..n {
+            iters += 1;
+            let ei = f(&alpha, b, i) - y[i];
+            if (y[i] * ei < -cfg.tol && alpha[i] < cfg.c)
+                || (y[i] * ei > cfg.tol && alpha[i] > 0.0)
+            {
+                // Pick j != i.
+                let mut j = next(rng_state, n);
+                if j == i {
+                    j = (j + 1) % n;
+                }
+                let ej = f(&alpha, b, j) - y[j];
+                let (ai_old, aj_old) = (alpha[i], alpha[j]);
+                let (lo, hi) = if (y[i] - y[j]).abs() > 1e-12 {
+                    ((aj_old - ai_old).max(0.0), (cfg.c + aj_old - ai_old).min(cfg.c))
+                } else {
+                    ((ai_old + aj_old - cfg.c).max(0.0), (ai_old + aj_old).min(cfg.c))
+                };
+                if (hi - lo).abs() < 1e-12 {
+                    continue;
+                }
+                let eta = 2.0 * k[(i, j)] - k[(i, i)] - k[(j, j)];
+                if eta >= 0.0 {
+                    continue;
+                }
+                let mut aj_new = aj_old - y[j] * (ei - ej) / eta;
+                aj_new = aj_new.clamp(lo, hi);
+                if (aj_new - aj_old).abs() < 1e-7 {
+                    continue;
+                }
+                let ai_new = ai_old + y[i] * y[j] * (aj_old - aj_new);
+                alpha[i] = ai_new;
+                alpha[j] = aj_new;
+                let b1 = b - ei
+                    - y[i] * (ai_new - ai_old) * k[(i, i)]
+                    - y[j] * (aj_new - aj_old) * k[(i, j)];
+                let b2 = b - ej
+                    - y[i] * (ai_new - ai_old) * k[(i, j)]
+                    - y[j] * (aj_new - aj_old) * k[(j, j)];
+                b = if ai_new > 0.0 && ai_new < cfg.c {
+                    b1
+                } else if aj_new > 0.0 && aj_new < cfg.c {
+                    b2
+                } else {
+                    0.5 * (b1 + b2)
+                };
+                changed += 1;
+            }
+        }
+        if changed == 0 {
+            passes += 1;
+        } else {
+            passes = 0;
+        }
+    }
+    let coef: Vec<f64> = alpha.iter().zip(y).map(|(&a, &yi)| a * yi).collect();
+    (coef, b)
+}
+
+impl KernelSvm {
+    /// Train on a precomputed train×train kernel and integer labels.
+    pub fn train(kernel: &Mat, labels: &[usize], cfg: &SvmConfig) -> Self {
+        let n = labels.len();
+        assert_eq!(kernel.shape(), (n, n));
+        let mut classes: Vec<usize> = labels.to_vec();
+        classes.sort_unstable();
+        classes.dedup();
+        let mut machines = Vec::with_capacity(classes.len());
+        let mut rng_state = 0x9e3779b97f4a7c15u64;
+        if classes.len() == 2 {
+            // Single binary machine; decision sign separates the classes.
+            let y: Vec<f64> = labels
+                .iter()
+                .map(|&l| if l == classes[1] { 1.0 } else { -1.0 })
+                .collect();
+            let m = smo_binary(kernel, &y, cfg, &mut rng_state);
+            machines.push(m);
+        } else {
+            for &cl in &classes {
+                let y: Vec<f64> = labels
+                    .iter()
+                    .map(|&l| if l == cl { 1.0 } else { -1.0 })
+                    .collect();
+                machines.push(smo_binary(kernel, &y, cfg, &mut rng_state));
+            }
+        }
+        KernelSvm { classes, machines }
+    }
+
+    /// Predict labels for test items given their kernel values against the
+    /// training set: `k_test[(t, i)]` = K(test t, train i).
+    pub fn predict(&self, k_test: &Mat) -> Vec<usize> {
+        let nt = k_test.rows();
+        let n = k_test.cols();
+        let decision = |coef: &Vec<f64>, b: f64, t: usize| -> f64 {
+            let mut s = 0.0;
+            for i in 0..n {
+                if coef[i] != 0.0 {
+                    s += coef[i] * k_test[(t, i)];
+                }
+            }
+            s + b
+        };
+        (0..nt)
+            .map(|t| {
+                if self.classes.len() == 2 {
+                    let (coef, b) = &self.machines[0];
+                    if decision(coef, *b, t) >= 0.0 {
+                        self.classes[1]
+                    } else {
+                        self.classes[0]
+                    }
+                } else {
+                    let mut best = (f64::NEG_INFINITY, 0usize);
+                    for (m, &cl) in self.machines.iter().zip(&self.classes) {
+                        let d = decision(&m.0, m.1, t);
+                        if d > best.0 {
+                            best = (d, cl);
+                        }
+                    }
+                    best.1
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    /// RBF kernel matrix of 1-D points.
+    fn rbf(pts: &[f64], gamma: f64) -> Mat {
+        Mat::from_fn(pts.len(), pts.len(), |i, j| {
+            (-gamma * (pts[i] - pts[j]).powi(2)).exp()
+        })
+    }
+
+    #[test]
+    fn separates_binary_clusters() {
+        let mut rng = Xoshiro256::new(1);
+        let mut pts = Vec::new();
+        let mut labels = Vec::new();
+        for _ in 0..15 {
+            pts.push(rng.normal() * 0.3);
+            labels.push(0usize);
+        }
+        for _ in 0..15 {
+            pts.push(5.0 + rng.normal() * 0.3);
+            labels.push(1usize);
+        }
+        let k = rbf(&pts, 1.0);
+        let svm = KernelSvm::train(&k, &labels, &SvmConfig::default());
+        let pred = svm.predict(&k);
+        let acc = pred
+            .iter()
+            .zip(&labels)
+            .filter(|(p, l)| p == l)
+            .count() as f64
+            / labels.len() as f64;
+        assert!(acc > 0.95, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn multiclass_three_blobs() {
+        let mut rng = Xoshiro256::new(2);
+        let mut pts = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..3usize {
+            for _ in 0..12 {
+                pts.push(c as f64 * 4.0 + rng.normal() * 0.3);
+                labels.push(c);
+            }
+        }
+        let k = rbf(&pts, 1.0);
+        let svm = KernelSvm::train(&k, &labels, &SvmConfig::default());
+        let pred = svm.predict(&k);
+        let acc = pred
+            .iter()
+            .zip(&labels)
+            .filter(|(p, l)| p == l)
+            .count() as f64
+            / labels.len() as f64;
+        assert!(acc > 0.9, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn generalizes_to_test_points() {
+        let mut rng = Xoshiro256::new(3);
+        let train: Vec<f64> = (0..20)
+            .map(|i| if i < 10 { rng.normal() * 0.2 } else { 3.0 + rng.normal() * 0.2 })
+            .collect();
+        let labels: Vec<usize> = (0..20).map(|i| usize::from(i >= 10)).collect();
+        let k = rbf(&train, 2.0);
+        let svm = KernelSvm::train(&k, &labels, &SvmConfig::default());
+        let test = [0.1f64, 2.9, -0.2, 3.2];
+        let k_test = Mat::from_fn(4, 20, |t, i| (-2.0 * (test[t] - train[i]).powi(2)).exp());
+        let pred = svm.predict(&k_test);
+        assert_eq!(pred, vec![0, 1, 0, 1]);
+    }
+}

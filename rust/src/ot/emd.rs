@@ -1,0 +1,396 @@
+//! Exact (unregularized) discrete optimal transport via the transportation
+//! simplex (NW-corner initialization + MODI/u-v optimality + tree pivots).
+//!
+//! Used by the EMD-GW baseline (EGW with ε = 0, per §6.1(iii) of the paper)
+//! and by the stationarity gap `G(T) = E(T) − min_{T'} ⟨∇E(T), T'⟩` that the
+//! theory-validation bench computes (Theorem 1 / Corollary 1).
+//!
+//! Degeneracy is handled with a Charnes-style perturbation of the marginals
+//! (δ per source, m·δ on the last sink), which keeps basic flows strictly
+//! positive; the O(δ) bias is far below the accuracies at play.
+
+use crate::linalg::Mat;
+
+/// Result of an exact OT solve.
+pub struct EmdResult {
+    /// Optimal transport plan (m × n).
+    pub plan: Mat,
+    /// Objective ⟨C, T⟩ at the optimum.
+    pub cost: f64,
+    /// Simplex pivots performed.
+    pub pivots: usize,
+    /// True if the pivot cap was hit before reaching optimality.
+    pub truncated: bool,
+}
+
+/// Solve `min_{T ∈ Π(a,b)} ⟨C, T⟩` exactly.
+///
+/// `a` and `b` must have (numerically) equal positive total mass. Zero
+/// entries in `a`/`b` are allowed.
+pub fn emd(a: &[f64], b: &[f64], cost: &Mat) -> EmdResult {
+    let m = a.len();
+    let n = b.len();
+    assert_eq!(cost.shape(), (m, n), "cost shape mismatch");
+    let sa: f64 = a.iter().sum();
+    let sb: f64 = b.iter().sum();
+    assert!(sa > 0.0 && sb > 0.0, "marginals must have positive mass");
+    assert!(
+        (sa - sb).abs() <= 1e-9 * sa.max(sb),
+        "unbalanced marginals: {sa} vs {sb}"
+    );
+
+    // --- Charnes perturbation (scaled to the problem's mass) ---
+    let delta = 1e-11 * sa / (m + n) as f64;
+    let ap: Vec<f64> = a.iter().map(|&x| x + delta).collect();
+    let mut bp: Vec<f64> = b.to_vec();
+    bp[n - 1] += m as f64 * delta;
+    // Rebalance exactly.
+    let diff: f64 = ap.iter().sum::<f64>() - bp.iter().sum::<f64>();
+    bp[n - 1] += diff;
+
+    // --- North-west corner initial basic feasible solution ---
+    // Exactly m+n-1 basic cells (zero cells inserted on simultaneous
+    // exhaustion, which the perturbation makes rare).
+    let mut basis: Vec<(usize, usize, f64)> = Vec::with_capacity(m + n - 1);
+    {
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut ra = ap.clone();
+        let mut rb = bp.clone();
+        while basis.len() < m + n - 1 {
+            let f = ra[i].min(rb[j]);
+            basis.push((i, j, f));
+            ra[i] -= f;
+            rb[j] -= f;
+            let a_done = ra[i] <= 0.0;
+            let b_done = rb[j] <= 0.0;
+            if basis.len() == m + n - 1 {
+                break;
+            }
+            if a_done && (!b_done || i + 1 < m) && i + 1 < m {
+                i += 1;
+            } else if j + 1 < n {
+                j += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    // Adjacency: row i -> basis indices; col j -> basis indices.
+    let rebuild_adj = |basis: &[(usize, usize, f64)]| {
+        let mut radj: Vec<Vec<usize>> = vec![Vec::new(); m];
+        let mut cadj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (k, &(i, j, _)) in basis.iter().enumerate() {
+            radj[i].push(k);
+            cadj[j].push(k);
+        }
+        (radj, cadj)
+    };
+    let (mut radj, mut cadj) = rebuild_adj(&basis);
+
+    // Duals u (rows), v (cols) from C[i][j] = u[i] + v[j] on basis tree.
+    let mut u = vec![0.0f64; m];
+    let mut v = vec![0.0f64; n];
+    let compute_duals = |basis: &[(usize, usize, f64)],
+                         radj: &[Vec<usize>],
+                         cadj: &[Vec<usize>],
+                         u: &mut [f64],
+                         v: &mut [f64]| {
+        // BFS over the (forest) of basis cells. Roots: each unvisited row.
+        let mut ru = vec![false; m];
+        let mut cu = vec![false; n];
+        let mut queue: Vec<(bool, usize)> = Vec::with_capacity(m + n);
+        for root in 0..m {
+            if ru[root] {
+                continue;
+            }
+            u[root] = 0.0;
+            ru[root] = true;
+            queue.clear();
+            queue.push((true, root));
+            let mut head = 0;
+            while head < queue.len() {
+                let (is_row, node) = queue[head];
+                head += 1;
+                if is_row {
+                    for &k in &radj[node] {
+                        let (_, j, _) = basis[k];
+                        if !cu[j] {
+                            v[j] = cost[(node, j)] - u[node];
+                            cu[j] = true;
+                            queue.push((false, j));
+                        }
+                    }
+                } else {
+                    for &k in &cadj[node] {
+                        let (i, _, _) = basis[k];
+                        if !ru[i] {
+                            u[i] = cost[(i, node)] - v[node];
+                            ru[i] = true;
+                            queue.push((true, i));
+                        }
+                    }
+                }
+            }
+        }
+    };
+
+    let max_pivots = 40 * (m + n) * (m + n).max(16);
+    let tol = 1e-10 * (1.0 + cost.max_abs());
+    let mut pivots = 0;
+    let mut truncated = false;
+
+    loop {
+        compute_duals(&basis, &radj, &cadj, &mut u, &mut v);
+
+        // Entering cell: most negative reduced cost.
+        let mut best = (-tol, usize::MAX, usize::MAX);
+        for i in 0..m {
+            let crow = cost.row(i);
+            let ui = u[i];
+            for j in 0..n {
+                let red = crow[j] - ui - v[j];
+                if red < best.0 {
+                    best = (red, i, j);
+                }
+            }
+        }
+        if best.1 == usize::MAX {
+            break; // optimal
+        }
+        if pivots >= max_pivots {
+            truncated = true;
+            break;
+        }
+        let (ei, ej) = (best.1, best.2);
+
+        // Find the unique path row ei -> col ej through the basis tree (BFS).
+        // parent[node] = (basis idx used, previous node)
+        #[derive(Clone, Copy)]
+        enum Par {
+            None,
+            Edge(usize, bool, usize), // (basis idx, prev_is_row, prev node)
+        }
+        let mut rpar = vec![Par::None; m];
+        let mut cpar = vec![Par::None; n];
+        let mut rvis = vec![false; m];
+        let mut cvis = vec![false; n];
+        rvis[ei] = true;
+        let mut queue: Vec<(bool, usize)> = vec![(true, ei)];
+        let mut head = 0;
+        let mut found = false;
+        while head < queue.len() && !found {
+            let (is_row, node) = queue[head];
+            head += 1;
+            if is_row {
+                for &k in &radj[node] {
+                    let (_, j, _) = basis[k];
+                    if !cvis[j] {
+                        cvis[j] = true;
+                        cpar[j] = Par::Edge(k, true, node);
+                        if j == ej {
+                            found = true;
+                            break;
+                        }
+                        queue.push((false, j));
+                    }
+                }
+            } else {
+                for &k in &cadj[node] {
+                    let (i, _, _) = basis[k];
+                    if !rvis[i] {
+                        rvis[i] = true;
+                        rpar[i] = Par::Edge(k, false, node);
+                        queue.push((true, i));
+                    }
+                }
+            }
+        }
+        assert!(found, "basis tree disconnected — invariant broken");
+
+        // Reconstruct path of basis-cell indices from ej back to ei.
+        let mut path: Vec<usize> = Vec::new();
+        let (mut is_row, mut node) = (false, ej);
+        loop {
+            let p = if is_row { rpar[node] } else { cpar[node] };
+            match p {
+                Par::Edge(k, prev_is_row, prev) => {
+                    path.push(k);
+                    is_row = prev_is_row;
+                    node = prev;
+                    if is_row && node == ei {
+                        break;
+                    }
+                }
+                Par::None => unreachable!("path reconstruction fell off the tree"),
+            }
+        }
+        // Cycle: entering cell (+θ), then path cells alternating −,+,−,…
+        // path[0] is incident to col ej, so it takes −θ.
+        let mut theta = f64::INFINITY;
+        let mut leave_pos = usize::MAX;
+        for (idx, &k) in path.iter().enumerate() {
+            if idx % 2 == 0 {
+                // minus edge
+                if basis[k].2 < theta {
+                    theta = basis[k].2;
+                    leave_pos = idx;
+                }
+            }
+        }
+        let leaving = path[leave_pos];
+
+        // Apply flow change.
+        for (idx, &k) in path.iter().enumerate() {
+            if idx % 2 == 0 {
+                basis[k].2 -= theta;
+            } else {
+                basis[k].2 += theta;
+            }
+        }
+        // Replace leaving cell with entering cell.
+        basis[leaving] = (ei, ej, theta);
+        let (r2, c2) = rebuild_adj(&basis);
+        radj = r2;
+        cadj = c2;
+        pivots += 1;
+    }
+
+    // Assemble plan; clamp perturbation residue.
+    let mut plan = Mat::zeros(m, n);
+    for &(i, j, f) in &basis {
+        plan[(i, j)] += f.max(0.0);
+    }
+    let total_cost = plan.frob_inner(cost);
+    EmdResult { plan, cost: total_cost, pivots, truncated }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::uniform;
+
+    fn marginal_err(plan: &Mat, a: &[f64], b: &[f64]) -> f64 {
+        let r = plan.row_sums();
+        let c = plan.col_sums();
+        let mut e = 0.0f64;
+        for (x, y) in r.iter().zip(a) {
+            e = e.max((x - y).abs());
+        }
+        for (x, y) in c.iter().zip(b) {
+            e = e.max((x - y).abs());
+        }
+        e
+    }
+
+    #[test]
+    fn identity_cost_diagonal_plan() {
+        let n = 5;
+        let a = uniform(n);
+        let b = uniform(n);
+        let cost = Mat::from_fn(n, n, |i, j| if i == j { 0.0 } else { 1.0 });
+        let r = emd(&a, &b, &cost);
+        assert!(!r.truncated);
+        assert!(r.cost.abs() < 1e-8, "cost {}", r.cost);
+        for i in 0..n {
+            assert!((r.plan[(i, i)] - 0.2).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn matches_1d_monotone_rearrangement() {
+        // 1D OT with convex cost: the optimal plan is the monotone coupling,
+        // cost = Σ |sorted_x - sorted_y| for equal uniform weights.
+        let x: [f64; 4] = [0.0, 1.0, 3.0, 7.0];
+        let y: [f64; 4] = [0.5, 2.0, 4.0, 6.0];
+        let n = x.len();
+        let a = uniform(n);
+        let b = uniform(n);
+        let cost = Mat::from_fn(n, n, |i, j| (x[i] - y[j]).powi(2));
+        let r = emd(&a, &b, &cost);
+        let expect: f64 = x
+            .iter()
+            .zip(&y)
+            .map(|(xi, yi)| (xi - yi).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        assert!((r.cost - expect).abs() < 1e-7, "{} vs {expect}", r.cost);
+    }
+
+    #[test]
+    fn feasible_plan() {
+        use crate::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(3);
+        let (m, n) = (7, 9);
+        let mut a: Vec<f64> = (0..m).map(|_| rng.f64() + 0.1).collect();
+        let mut b: Vec<f64> = (0..n).map(|_| rng.f64() + 0.1).collect();
+        crate::util::normalize(&mut a);
+        crate::util::normalize(&mut b);
+        let cost = Mat::from_fn(m, n, |i, j| ((i as f64 * 1.3 - j as f64).abs()).sqrt());
+        let r = emd(&a, &b, &cost);
+        assert!(!r.truncated);
+        assert!(marginal_err(&r.plan, &a, &b) < 1e-8);
+        assert!(r.plan.data().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn beats_or_ties_sinkhorn() {
+        // Exact cost must lower-bound any entropic plan's cost.
+        use crate::ot::sinkhorn::sinkhorn_log;
+        let n = 8;
+        let a = uniform(n);
+        let b = uniform(n);
+        let cost = Mat::from_fn(n, n, |i, j| ((i as f64) - (j as f64 * 1.1)).powi(2));
+        let exact = emd(&a, &b, &cost);
+        let sk = sinkhorn_log(&a, &b, &cost, 0.05, 3000, 1e-12);
+        let sk_cost = sk.plan.frob_inner(&cost);
+        assert!(
+            exact.cost <= sk_cost + 1e-7,
+            "exact {} vs sinkhorn {}",
+            exact.cost,
+            sk_cost
+        );
+        // And they should be close for small eps.
+        assert!((exact.cost - sk_cost).abs() < 0.05 * (1.0 + exact.cost.abs()));
+    }
+
+    #[test]
+    fn degenerate_marginals() {
+        // Highly degenerate: equal masses, many ties.
+        let a = vec![0.25, 0.25, 0.25, 0.25];
+        let b = vec![0.5, 0.5];
+        let cost = Mat::from_fn(4, 2, |i, j| ((i + j) % 2) as f64);
+        let r = emd(&a, &b, &cost);
+        assert!(!r.truncated);
+        assert!(marginal_err(&r.plan, &a, &b) < 1e-8);
+        assert!(r.cost.abs() < 1e-8); // perfect matching exists
+    }
+
+    #[test]
+    fn random_instances_match_bruteforce_lower_bound() {
+        // On random 3x3 instances, compare against brute-force enumeration
+        // of extreme points via all permutation matrices (uniform marginals:
+        // Birkhoff ⇒ optimum is a permutation).
+        use crate::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(11);
+        for trial in 0..20 {
+            let n = 3;
+            let a = uniform(n);
+            let b = uniform(n);
+            let cost = Mat::from_fn(n, n, |_, _| rng.f64());
+            let r = emd(&a, &b, &cost);
+            // brute force over 6 permutations
+            let perms: [[usize; 3]; 6] =
+                [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]];
+            let best = perms
+                .iter()
+                .map(|p| (0..3).map(|i| cost[(i, p[i])]).sum::<f64>() / 3.0)
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                (r.cost - best).abs() < 1e-7,
+                "trial {trial}: emd {} vs brute {best}",
+                r.cost
+            );
+        }
+    }
+}

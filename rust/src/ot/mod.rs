@@ -1,0 +1,21 @@
+//! Optimal-transport substrate: the inner solvers every GW outer loop calls.
+//!
+//! * [`sinkhorn`](sinkhorn()) — dense Sinkhorn scaling (Algorithm 1, step 5), with an
+//!   optional log-domain stabilized variant for small ε.
+//! * [`sparse_sinkhorn`](sparse_sinkhorn()) — Sinkhorn over a fixed-pattern sparse kernel
+//!   (Algorithm 2, step 7): O(H·s) instead of O(H·mn).
+//! * [`unbalanced`] — unbalanced Sinkhorn with the λ/(λ+ε) exponent
+//!   (Algorithm 3, step 9), dense and sparse.
+//! * [`emd`](emd()) — exact (unregularized) OT via the transportation simplex,
+//!   used by the EMD-GW baseline and by the stationarity gap G(T) in the
+//!   theory-validation benches.
+
+pub mod emd;
+pub mod sinkhorn;
+pub mod sparse_sinkhorn;
+pub mod unbalanced;
+
+pub use emd::emd;
+pub use sinkhorn::{sinkhorn, sinkhorn_log, SinkhornResult};
+pub use sparse_sinkhorn::sparse_sinkhorn;
+pub use unbalanced::{sparse_unbalanced_sinkhorn, unbalanced_sinkhorn};

@@ -1,0 +1,276 @@
+//! Dense Sinkhorn scaling (Sinkhorn & Knopp 1967; Cuturi 2013).
+
+use crate::linalg::Mat;
+use crate::util::safe_div;
+
+/// Output of a Sinkhorn run.
+pub struct SinkhornResult {
+    /// The (approximately) projected coupling `diag(u) K diag(v)`.
+    pub plan: Mat,
+    /// Row scaling vector.
+    pub u: Vec<f64>,
+    /// Column scaling vector.
+    pub v: Vec<f64>,
+    /// Inner iterations actually performed.
+    pub iters: usize,
+}
+
+/// Sinkhorn scaling of a positive kernel `K` onto the transport polytope
+/// `Π(a, b)` — paper Algorithm 1, step 5.
+///
+/// Runs at most `max_iter` u/v sweeps, stopping early when the row-marginal
+/// error `‖u ⊙ (K v) − a‖∞` drops below `tol` (set `tol = 0` to force the
+/// full `H` sweeps exactly as in the paper's fixed-iteration description).
+///
+/// Entries of `a`/`b` may be zero (padded coordinates); scalings for those
+/// coordinates are zero and the plan has zero mass there.
+pub fn sinkhorn(a: &[f64], b: &[f64], k: &Mat, max_iter: usize, tol: f64) -> SinkhornResult {
+    let (m, n) = k.shape();
+    assert_eq!(a.len(), m, "a/K shape mismatch");
+    assert_eq!(b.len(), n, "b/K shape mismatch");
+    let mut u = vec![1.0; m];
+    let mut v = vec![1.0; n];
+    let mut iters = 0;
+    for _ in 0..max_iter {
+        // u = a ⊘ (K v); v = b ⊘ (Kᵀ u)
+        let kv = k.matvec(&v);
+        u = safe_div(a, &kv);
+        let ktu = k.matvec_t(&u);
+        v = safe_div(b, &ktu);
+        iters += 1;
+        if tol > 0.0 {
+            // Row-marginal residual.
+            let kv2 = k.matvec(&v);
+            let mut err = 0.0f64;
+            for i in 0..m {
+                err = err.max((u[i] * kv2[i] - a[i]).abs());
+            }
+            if err < tol {
+                break;
+            }
+        }
+    }
+    let plan = k.diag_scale(&u, &v);
+    SinkhornResult { plan, u, v, iters }
+}
+
+/// Log-domain stabilized Sinkhorn for very small ε: works on the cost
+/// matrix directly (`K = exp(-C/ε)` never materialized), using
+/// log-sum-exp reductions. Slower per iteration but immune to under/overflow.
+pub fn sinkhorn_log(
+    a: &[f64],
+    b: &[f64],
+    cost: &Mat,
+    eps: f64,
+    max_iter: usize,
+    tol: f64,
+) -> SinkhornResult {
+    let (m, n) = cost.shape();
+    assert_eq!(a.len(), m);
+    assert_eq!(b.len(), n);
+    // Potentials f, g with T = exp((f_i + g_j - C_ij)/ε).
+    let mut f = vec![0.0; m];
+    let mut g = vec![0.0; n];
+    let log_a: Vec<f64> = a.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    let log_b: Vec<f64> = b.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+
+    let lse_row = |_f: &[f64], g: &[f64], i: usize| -> f64 {
+        // logΣ_j exp((g_j - C_ij)/ε)
+        let row = cost.row(i);
+        let mut mx = f64::NEG_INFINITY;
+        for j in 0..n {
+            let z = (g[j] - row[j]) / eps;
+            if z > mx {
+                mx = z;
+            }
+        }
+        if mx == f64::NEG_INFINITY {
+            return f64::NEG_INFINITY;
+        }
+        let mut s = 0.0;
+        for j in 0..n {
+            s += (((g[j] - row[j]) / eps) - mx).exp();
+        }
+        mx + s.ln()
+    };
+    let mut iters = 0;
+    for _ in 0..max_iter {
+        // f_i = ε(log a_i − logΣ_j exp((g_j − C_ij)/ε))
+        for i in 0..m {
+            f[i] = if log_a[i] == f64::NEG_INFINITY {
+                f64::NEG_INFINITY
+            } else {
+                eps * (log_a[i] - lse_row(&f, &g, i))
+            };
+        }
+        // g_j update needs column LSE.
+        let mut col_mx = vec![f64::NEG_INFINITY; n];
+        for i in 0..m {
+            if f[i] == f64::NEG_INFINITY {
+                continue;
+            }
+            let row = cost.row(i);
+            for j in 0..n {
+                let z = (f[i] - row[j]) / eps;
+                if z > col_mx[j] {
+                    col_mx[j] = z;
+                }
+            }
+        }
+        let mut col_s = vec![0.0f64; n];
+        for i in 0..m {
+            if f[i] == f64::NEG_INFINITY {
+                continue;
+            }
+            let row = cost.row(i);
+            for j in 0..n {
+                if col_mx[j] > f64::NEG_INFINITY {
+                    col_s[j] += (((f[i] - row[j]) / eps) - col_mx[j]).exp();
+                }
+            }
+        }
+        for j in 0..n {
+            g[j] = if log_b[j] == f64::NEG_INFINITY || col_mx[j] == f64::NEG_INFINITY {
+                if log_b[j] == f64::NEG_INFINITY { f64::NEG_INFINITY } else { g[j] }
+            } else {
+                eps * (log_b[j] - (col_mx[j] + col_s[j].ln()))
+            };
+        }
+        iters += 1;
+        if tol > 0.0 {
+            // Row-marginal residual in the primal.
+            let mut err = 0.0f64;
+            for i in 0..m {
+                if f[i] == f64::NEG_INFINITY {
+                    continue;
+                }
+                let row = cost.row(i);
+                let mut ri = 0.0;
+                for j in 0..n {
+                    if g[j] > f64::NEG_INFINITY {
+                        ri += ((f[i] + g[j] - row[j]) / eps).exp();
+                    }
+                }
+                err = err.max((ri - a[i]).abs());
+            }
+            if err < tol {
+                break;
+            }
+        }
+    }
+    // Recover plan and u, v (may under/overflow individually; plan is safe).
+    let mut plan = Mat::zeros(m, n);
+    for i in 0..m {
+        if f[i] == f64::NEG_INFINITY {
+            continue;
+        }
+        let row = cost.row(i);
+        let prow = plan.row_mut(i);
+        for j in 0..n {
+            if g[j] > f64::NEG_INFINITY {
+                prow[j] = ((f[i] + g[j] - row[j]) / eps).exp();
+            }
+        }
+    }
+    let u: Vec<f64> = f.iter().map(|&fi| (fi / eps).exp()).collect();
+    let v: Vec<f64> = g.iter().map(|&gj| (gj / eps).exp()).collect();
+    SinkhornResult { plan, u, v, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::uniform;
+
+    fn marginal_err(plan: &Mat, a: &[f64], b: &[f64]) -> f64 {
+        let r = plan.row_sums();
+        let c = plan.col_sums();
+        let mut e = 0.0f64;
+        for (x, y) in r.iter().zip(a) {
+            e = e.max((x - y).abs());
+        }
+        for (x, y) in c.iter().zip(b) {
+            e = e.max((x - y).abs());
+        }
+        e
+    }
+
+    #[test]
+    fn projects_onto_polytope() {
+        let m = 6;
+        let n = 5;
+        let a = uniform(m);
+        let b = uniform(n);
+        let k = Mat::from_fn(m, n, |i, j| (-((i as f64 - j as f64).powi(2)) / 2.0).exp());
+        let r = sinkhorn(&a, &b, &k, 500, 1e-12);
+        assert!(marginal_err(&r.plan, &a, &b) < 1e-8);
+    }
+
+    #[test]
+    fn respects_zero_mass_rows() {
+        // Padded coordinate: a[2] = 0 -> plan row 2 must be all zero.
+        let a = vec![0.5, 0.5, 0.0];
+        let b = vec![0.25, 0.75];
+        let k = Mat::full(3, 2, 1.0);
+        let r = sinkhorn(&a, &b, &k, 200, 1e-12);
+        for j in 0..2 {
+            assert_eq!(r.plan[(2, j)], 0.0);
+        }
+        assert!(marginal_err(&r.plan, &a, &b) < 1e-9);
+    }
+
+    #[test]
+    fn log_domain_matches_standard() {
+        let m = 5;
+        let n = 5;
+        let a = uniform(m);
+        let b = uniform(n);
+        let cost = Mat::from_fn(m, n, |i, j| ((i as f64) - (j as f64)).abs());
+        let eps = 0.5;
+        let k = cost.map(|c| (-c / eps).exp());
+        let r1 = sinkhorn(&a, &b, &k, 1000, 1e-13);
+        let r2 = sinkhorn_log(&a, &b, &cost, eps, 1000, 1e-13);
+        for i in 0..m {
+            for j in 0..n {
+                assert!(
+                    (r1.plan[(i, j)] - r2.plan[(i, j)]).abs() < 1e-7,
+                    "mismatch at ({i},{j}): {} vs {}",
+                    r1.plan[(i, j)],
+                    r2.plan[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn log_domain_survives_tiny_eps() {
+        let n = 4;
+        let a = uniform(n);
+        let b = uniform(n);
+        let cost = Mat::from_fn(n, n, |i, j| if i == j { 0.0 } else { 1.0 });
+        // eps so small that exp(-1/eps) underflows f64.
+        let r = sinkhorn_log(&a, &b, &cost, 1e-3, 2000, 1e-12);
+        // Optimal plan is the identity/diagonal coupling.
+        for i in 0..n {
+            assert!((r.plan[(i, i)] - 0.25).abs() < 1e-6, "diag {}", r.plan[(i, i)]);
+        }
+    }
+
+    #[test]
+    fn plan_cost_decreases_with_eps() {
+        // Smaller eps => closer to the exact OT cost (monotone in eps).
+        let n = 6;
+        let a = uniform(n);
+        let b = uniform(n);
+        let cost = Mat::from_fn(n, n, |i, j| ((i as f64) - (j as f64)).powi(2));
+        let costs: Vec<f64> = [1.0, 0.3, 0.05]
+            .iter()
+            .map(|&eps| {
+                let r = sinkhorn_log(&a, &b, &cost, eps, 3000, 1e-13);
+                r.plan.frob_inner(&cost)
+            })
+            .collect();
+        assert!(costs[0] >= costs[1] - 1e-9);
+        assert!(costs[1] >= costs[2] - 1e-9);
+    }
+}

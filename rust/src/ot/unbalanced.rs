@@ -1,0 +1,164 @@
+//! Unbalanced Sinkhorn scaling (Chizat et al. 2018; Pham et al. 2020) —
+//! Algorithm 3, step 9.
+//!
+//! The marginal constraints are relaxed by KL penalties of weight λ̄; the
+//! scaling updates become
+//!   u = (a ⊘ K v)^{λ̄/(λ̄+ε̄)},   v = (b ⊘ Kᵀ u)^{λ̄/(λ̄+ε̄)} .
+//! With exponent → 1 (λ̄ → ∞) this degenerates to balanced Sinkhorn.
+
+use crate::linalg::Mat;
+use crate::sparse::Coo;
+
+#[inline]
+fn pow_update(target: &[f64], denom: &[f64], expo: f64) -> Vec<f64> {
+    target
+        .iter()
+        .zip(denom)
+        .map(|(&t, &d)| {
+            if t == 0.0 || d <= 0.0 || !d.is_finite() {
+                0.0
+            } else {
+                (t / d).powf(expo)
+            }
+        })
+        .collect()
+}
+
+/// Dense unbalanced Sinkhorn. Returns `diag(u) K diag(v)` after `max_iter`
+/// sweeps (fixed-iteration, as in Algorithm 3).
+pub fn unbalanced_sinkhorn(
+    a: &[f64],
+    b: &[f64],
+    k: &Mat,
+    lambda: f64,
+    eps: f64,
+    max_iter: usize,
+) -> Mat {
+    let (m, n) = k.shape();
+    assert_eq!(a.len(), m);
+    assert_eq!(b.len(), n);
+    assert!(lambda > 0.0 && eps > 0.0);
+    let expo = lambda / (lambda + eps);
+    let mut u = vec![1.0; m];
+    let mut v = vec![1.0; n];
+    for _ in 0..max_iter {
+        let kv = k.matvec(&v);
+        u = pow_update(a, &kv, expo);
+        let ktu = k.matvec_t(&u);
+        v = pow_update(b, &ktu, expo);
+    }
+    k.diag_scale(&u, &v)
+}
+
+/// Sparse unbalanced Sinkhorn over a fixed pattern; O(H·s).
+pub fn sparse_unbalanced_sinkhorn(
+    a: &[f64],
+    b: &[f64],
+    k: &Coo,
+    lambda: f64,
+    eps: f64,
+    max_iter: usize,
+) -> Coo {
+    assert_eq!(a.len(), k.nrows());
+    assert_eq!(b.len(), k.ncols());
+    assert!(lambda > 0.0 && eps > 0.0);
+    let expo = lambda / (lambda + eps);
+    let mut u = vec![1.0; a.len()];
+    let mut v = vec![1.0; b.len()];
+    for _ in 0..max_iter {
+        let kv = k.matvec(&v);
+        u = pow_update(a, &kv, expo);
+        let ktu = k.matvec_t(&u);
+        v = pow_update(b, &ktu, expo);
+    }
+    let mut plan = k.clone();
+    plan.diag_scale_inplace(&u, &v);
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::uniform;
+
+    #[test]
+    fn large_lambda_approaches_balanced() {
+        let n = 5;
+        let a = uniform(n);
+        let b = uniform(n);
+        let k = Mat::from_fn(n, n, |i, j| (-(((i as f64) - (j as f64)).powi(2)) / 4.0).exp());
+        let plan = unbalanced_sinkhorn(&a, &b, &k, 1e6, 0.1, 500);
+        // Marginals nearly match (λ→∞ recovers the balanced projection).
+        let r = plan.row_sums();
+        for i in 0..n {
+            assert!((r[i] - a[i]).abs() < 1e-3, "row {i}: {} vs {}", r[i], a[i]);
+        }
+    }
+
+    #[test]
+    fn fixed_point_satisfies_optimality() {
+        // At convergence: u_i^{(λ+ε)/λ} (Kv)_i = a_i (paper §5.2).
+        let n = 4;
+        let a = vec![0.3, 0.3, 0.2, 0.2];
+        let b = vec![0.25; 4];
+        let k = Mat::from_fn(n, n, |i, j| (-((i as f64 - j as f64).abs()) / 2.0).exp());
+        let (lambda, eps) = (1.0, 0.2);
+        let expo = lambda / (lambda + eps);
+        // Re-run the iteration manually to extract u, v at fixed point.
+        let mut u = vec![1.0; n];
+        let mut v = vec![1.0; n];
+        for _ in 0..3000 {
+            let kv = k.matvec(&v);
+            u = super::pow_update(&a, &kv, expo);
+            let ktu = k.matvec_t(&u);
+            v = super::pow_update(&b, &ktu, expo);
+        }
+        let kv = k.matvec(&v);
+        for i in 0..n {
+            let lhs = u[i].powf(1.0 / expo) * kv[i];
+            assert!((lhs - a[i]).abs() < 1e-9, "optimality at {i}: {lhs} vs {}", a[i]);
+        }
+    }
+
+    #[test]
+    fn mass_positive_and_bounded() {
+        // Unbalanced plan carries positive finite mass near the marginals'
+        // mass (the entropy term can inflate it slightly above 1).
+        let n = 4;
+        let a = uniform(n);
+        let b = uniform(n);
+        let k = Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.01 });
+        let plan = unbalanced_sinkhorn(&a, &b, &k, 0.5, 0.1, 500);
+        let mass = plan.sum();
+        assert!(mass > 0.1 && mass < 2.0, "mass {mass}");
+        // Stronger penalty pulls mass back toward the balanced value 1.
+        let strict = unbalanced_sinkhorn(&a, &b, &k, 50.0, 0.1, 500).sum();
+        assert!((strict - 1.0).abs() < (mass - 1.0).abs() + 1e-9);
+    }
+
+    #[test]
+    fn sparse_matches_dense_on_full_pattern() {
+        let n = 4;
+        let a = vec![0.4, 0.3, 0.2, 0.1];
+        let b = uniform(n);
+        let dense = Mat::from_fn(n, n, |i, j| ((i * n + j + 1) as f64 * 0.21).sin().abs() + 0.05);
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..n {
+            for j in 0..n {
+                rows.push(i);
+                cols.push(j);
+                vals.push(dense[(i, j)]);
+            }
+        }
+        let coo = Coo::from_triplets(n, n, &rows, &cols, &vals);
+        let dp = unbalanced_sinkhorn(&a, &b, &dense, 2.0, 0.3, 200);
+        let sp = sparse_unbalanced_sinkhorn(&a, &b, &coo, 2.0, 0.3, 200).to_dense();
+        for i in 0..n {
+            for j in 0..n {
+                assert!((dp[(i, j)] - sp[(i, j)]).abs() < 1e-10);
+            }
+        }
+    }
+}

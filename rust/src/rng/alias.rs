@@ -1,0 +1,244 @@
+//! Walker/Vose alias method for O(1) categorical sampling.
+//!
+//! Spar-GW samples `s = O(n^{1+δ})` i.i.d. index pairs from the importance
+//! distribution `P = √(a bᵀ)/Z` over `m·n` categories (paper Eq. (5)); the
+//! alias table makes that an O(mn) build + O(s) draws, matching the paper's
+//! stated O(mn + s) sampling cost.
+//!
+//! For the *product-form* probabilities used by Spar-GW we additionally
+//! expose [`ProductAlias`], which builds two 1-D tables of sizes m and n
+//! instead of one m·n table — an O(m + n) build that exploits
+//! `p_ij ∝ √a_i · √b_j` factorizing. This is one of the §Perf optimizations.
+
+use super::Xoshiro256;
+
+/// Alias table over a finite discrete distribution.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    /// Acceptance probability per bucket (scaled to [0,1]).
+    prob: Vec<f64>,
+    /// Alias index per bucket.
+    alias: Vec<u32>,
+    /// Normalized probabilities (kept for density queries).
+    p: Vec<f64>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights. Weights need not be normalized.
+    /// Panics if all weights are zero or any is negative/NaN.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "empty weight vector");
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && total.is_finite(),
+            "weights must sum to a positive finite value, got {total}"
+        );
+        for (i, &w) in weights.iter().enumerate() {
+            assert!(w >= 0.0 && w.is_finite(), "weight[{i}] = {w} invalid");
+        }
+        let p: Vec<f64> = weights.iter().map(|&w| w / total).collect();
+
+        // Vose's stable construction.
+        let mut prob = vec![0.0f64; n];
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        // Scaled probabilities (mean 1).
+        let mut scaled: Vec<f64> = p.iter().map(|&x| x * n as f64).collect();
+        for (i, &sp) in scaled.iter().enumerate() {
+            if sp < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while !small.is_empty() && !large.is_empty() {
+            let s = small.pop().unwrap();
+            let l = large.pop().unwrap();
+            prob[s as usize] = scaled[s as usize];
+            alias[s as usize] = l;
+            scaled[l as usize] = (scaled[l as usize] + scaled[s as usize]) - 1.0;
+            if scaled[l as usize] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // Leftovers are numerically ~1.
+        for &l in large.iter().chain(small.iter()) {
+            prob[l as usize] = 1.0;
+        }
+        AliasTable { prob, alias, p }
+    }
+
+    /// Number of categories.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// True if the table has no categories (never: construction panics).
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Normalized probability of category `i`.
+    #[inline]
+    pub fn prob_of(&self, i: usize) -> f64 {
+        self.p[i]
+    }
+
+    /// Draw one category in O(1).
+    #[inline]
+    pub fn sample(&mut self, rng: &mut Xoshiro256) -> usize {
+        let i = rng.usize(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+
+    /// Draw `k` i.i.d. categories.
+    pub fn sample_many(&mut self, rng: &mut Xoshiro256, k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.sample(rng)).collect()
+    }
+}
+
+/// Alias sampling for product-form distributions `p_ij ∝ u_i · v_j`
+/// (e.g. Spar-GW's `√a_i √b_j`): two 1-D tables instead of one m·n table.
+#[derive(Clone, Debug)]
+pub struct ProductAlias {
+    rows: AliasTable,
+    cols: AliasTable,
+    /// 1 / (Σu · Σv), for density queries.
+    row_total: f64,
+    col_total: f64,
+    u: Vec<f64>,
+    v: Vec<f64>,
+}
+
+impl ProductAlias {
+    pub fn new(u: &[f64], v: &[f64]) -> Self {
+        let rows = AliasTable::new(u);
+        let cols = AliasTable::new(v);
+        ProductAlias {
+            rows,
+            cols,
+            row_total: u.iter().sum(),
+            col_total: v.iter().sum(),
+            u: u.to_vec(),
+            v: v.to_vec(),
+        }
+    }
+
+    /// Normalized probability of pair (i, j).
+    #[inline]
+    pub fn prob_of(&self, i: usize, j: usize) -> f64 {
+        (self.u[i] / self.row_total) * (self.v[j] / self.col_total)
+    }
+
+    /// Draw one (row, col) pair in O(1).
+    #[inline]
+    pub fn sample(&mut self, rng: &mut Xoshiro256) -> (usize, usize) {
+        (self.rows.sample(rng), self.cols.sample(rng))
+    }
+
+    /// Draw `k` i.i.d. pairs.
+    pub fn sample_many(&mut self, rng: &mut Xoshiro256, k: usize) -> Vec<(usize, usize)> {
+        (0..k).map(|_| self.sample(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chi2_ok(counts: &[usize], probs: &[f64], n: usize) -> bool {
+        // Loose chi-square check: statistic below ~3x dof.
+        let mut stat = 0.0;
+        for (c, p) in counts.iter().zip(probs) {
+            if *p <= 0.0 {
+                assert_eq!(*c, 0, "sampled a zero-probability category");
+                continue;
+            }
+            let e = p * n as f64;
+            stat += (*c as f64 - e).powi(2) / e;
+        }
+        stat < 3.0 * probs.len() as f64
+    }
+
+    #[test]
+    fn matches_distribution() {
+        let w = [0.1, 0.0, 0.4, 0.2, 0.3];
+        let mut t = AliasTable::new(&w);
+        let mut rng = Xoshiro256::new(9);
+        let n = 100_000;
+        let mut counts = vec![0usize; w.len()];
+        for _ in 0..n {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        assert!(chi2_ok(&counts, &w, n), "counts {counts:?}");
+    }
+
+    #[test]
+    fn uniform_weights() {
+        let w = vec![1.0; 16];
+        let mut t = AliasTable::new(&w);
+        let mut rng = Xoshiro256::new(10);
+        let n = 64_000;
+        let mut counts = vec![0usize; 16];
+        for _ in 0..n {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 4000.0).abs() < 500.0, "count {c}");
+        }
+    }
+
+    #[test]
+    fn single_category() {
+        let mut t = AliasTable::new(&[3.0]);
+        let mut rng = Xoshiro256::new(11);
+        for _ in 0..100 {
+            assert_eq!(t.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_all_zero() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn prob_of_normalized() {
+        let t = AliasTable::new(&[2.0, 6.0]);
+        assert!((t.prob_of(0) - 0.25).abs() < 1e-12);
+        assert!((t.prob_of(1) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn product_alias_matches_flat() {
+        let u = [0.2, 0.8];
+        let v = [0.5, 0.3, 0.2];
+        let mut pa = ProductAlias::new(&u, &v);
+        let mut rng = Xoshiro256::new(12);
+        let n = 120_000;
+        let mut counts = vec![0usize; 6];
+        for _ in 0..n {
+            let (i, j) = pa.sample(&mut rng);
+            counts[i * 3 + j] += 1;
+        }
+        let flat: Vec<f64> = (0..2)
+            .flat_map(|i| (0..3).map(move |j| u[i] * v[j]))
+            .collect();
+        assert!(chi2_ok(&counts, &flat, n), "counts {counts:?}");
+        // Density queries agree with the flat product.
+        for i in 0..2 {
+            for j in 0..3 {
+                assert!((pa.prob_of(i, j) - flat[i * 3 + j]).abs() < 1e-12);
+            }
+        }
+    }
+}

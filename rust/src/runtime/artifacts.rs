@@ -1,0 +1,175 @@
+//! The artifact manifest: `artifacts/manifest.txt`, one line per artifact
+//! in a hand-rolled `key=value` format (no serde available offline):
+//!
+//! ```text
+//! kind=spar_gw cost=l2 reg=prox n=64 s=1024 R=20 H=50 eps=0.01 file=spar_gw_l2_n64.hlo.txt
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::gw::GroundCost;
+
+/// Which L2 graph an artifact contains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Algorithm 2 (sparse) — inputs (cx, cy, a, b, idx_i, idx_j, inv_w).
+    SparGw,
+    /// Algorithm 1 (dense, entropic) — inputs (cx, cy, a, b).
+    Egw,
+}
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub kind: ArtifactKind,
+    pub cost: GroundCost,
+    /// "prox" or "ent".
+    pub reg: String,
+    /// Padded problem size (bucket).
+    pub n: usize,
+    /// Sample budget baked into the shapes (0 for dense kinds).
+    pub s: usize,
+    pub r_iters: usize,
+    pub h_iters: usize,
+    pub epsilon: f64,
+    /// Path to the HLO text, relative to the manifest directory.
+    pub file: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub specs: Vec<ArtifactSpec>,
+}
+
+fn parse_cost(s: &str) -> Result<GroundCost> {
+    match s {
+        "l1" => Ok(GroundCost::L1),
+        "l2" => Ok(GroundCost::L2),
+        "kl" => Ok(GroundCost::Kl),
+        other => bail!("unknown cost {other:?} in manifest"),
+    }
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        let mut specs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kv: HashMap<&str, &str> = HashMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("manifest line {}: bad token {tok:?}", lineno + 1))?;
+                kv.insert(k, v);
+            }
+            let get = |k: &str| -> Result<&str> {
+                kv.get(k)
+                    .copied()
+                    .ok_or_else(|| anyhow!("manifest line {}: missing {k}", lineno + 1))
+            };
+            let kind = match get("kind")? {
+                "spar_gw" => ArtifactKind::SparGw,
+                "egw" => ArtifactKind::Egw,
+                other => bail!("unknown artifact kind {other:?}"),
+            };
+            specs.push(ArtifactSpec {
+                kind,
+                cost: parse_cost(get("cost")?)?,
+                reg: get("reg")?.to_string(),
+                n: get("n")?.parse()?,
+                s: get("s")?.parse()?,
+                r_iters: get("R")?.parse()?,
+                h_iters: get("H")?.parse()?,
+                epsilon: get("eps")?.parse()?,
+                file: PathBuf::from(get("file")?),
+            });
+        }
+        if specs.is_empty() {
+            bail!("manifest {path:?} contains no artifacts");
+        }
+        Ok(Manifest { dir, specs })
+    }
+
+    /// Smallest spar_gw bucket that fits a problem of size `n` with the
+    /// given cost.
+    pub fn best_spar_gw(&self, cost: GroundCost, n: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.kind == ArtifactKind::SparGw && s.cost == cost && s.n >= n)
+            .min_by_key(|s| s.n)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Available spar_gw bucket sizes for a cost (ascending).
+    pub fn spar_buckets(&self, cost: GroundCost) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .specs
+            .iter()
+            .filter(|s| s.kind == ArtifactKind::SparGw && s.cost == cost)
+            .map(|s| s.n)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_and_selects_buckets() {
+        let dir = std::env::temp_dir().join("spargw_manifest_test");
+        write_manifest(
+            &dir,
+            "kind=spar_gw cost=l2 reg=prox n=32 s=512 R=20 H=50 eps=0.01 file=a.hlo.txt\n\
+             kind=spar_gw cost=l2 reg=prox n=64 s=1024 R=20 H=50 eps=0.01 file=b.hlo.txt\n\
+             kind=egw cost=l2 reg=ent n=32 s=0 R=20 H=50 eps=0.01 file=c.hlo.txt\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.specs.len(), 3);
+        assert_eq!(m.best_spar_gw(GroundCost::L2, 20).unwrap().n, 32);
+        assert_eq!(m.best_spar_gw(GroundCost::L2, 33).unwrap().n, 64);
+        assert!(m.best_spar_gw(GroundCost::L2, 100).is_none());
+        assert!(m.best_spar_gw(GroundCost::L1, 20).is_none());
+        assert_eq!(m.spar_buckets(GroundCost::L2), vec![32, 64]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        let dir = std::env::temp_dir().join("spargw_manifest_bad");
+        write_manifest(&dir, "kind=spar_gw cost=l2\n");
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_manifest_helpful_error() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime — loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them natively. Python never runs
+//! on this path: the artifacts are plain HLO text, compiled once per
+//! (variant, bucket) by the in-process PJRT CPU client and cached.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactKind, ArtifactSpec, Manifest};
+pub use pjrt::{Runtime, SparGwOutput};

@@ -1,0 +1,235 @@
+//! The PJRT executor: compile-once-per-bucket, execute-per-pair.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. The L2 graphs were lowered with
+//! `return_tuple=True`, so every output is a tuple (here a 2-tuple
+//! `(t_vals, gw)`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use crate::gw::sampling::SampledSet;
+use crate::gw::GroundCost;
+use crate::linalg::Mat;
+
+/// Output of one Spar-GW artifact execution.
+pub struct SparGwOutput {
+    /// Sparse plan values on the input index set.
+    pub t_vals: Vec<f32>,
+    /// The ĜW estimate.
+    pub gw: f64,
+}
+
+/// Compile-cached PJRT runtime over an artifact manifest.
+pub struct Runtime {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed (metrics).
+    pub executions: usize,
+    /// Compilations performed (metrics; should stay ≤ #buckets).
+    pub compilations: usize,
+}
+
+impl Runtime {
+    /// Create a runtime over `artifacts/` (or any manifest directory).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { manifest, client, cache: HashMap::new(), executions: 0, compilations: 0 })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Get (compiling if needed) the executable for a spec.
+    fn executable(&mut self, spec: &ArtifactSpec) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = spec.file.to_string_lossy().to_string();
+        if !self.cache.contains_key(&key) {
+            let path = self.manifest.path_of(spec);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path:?}: {e}"))?;
+            self.compilations += 1;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
+    /// The spar_gw bucket (padded n and baked s) that will serve a problem
+    /// of size `n`, if any.
+    pub fn spar_gw_bucket(&self, cost: GroundCost, n: usize) -> Option<(usize, usize)> {
+        self.manifest.best_spar_gw(cost, n).map(|s| (s.n, s.s))
+    }
+
+    /// Execute the Spar-GW artifact for a (padded) problem.
+    ///
+    /// `p`-side inputs are padded to the bucket size internally; the
+    /// sampled set must have been drawn with the bucket's budget
+    /// (`spec.s` entries after padding — the caller pads the set by
+    /// repeating its first element with weight 1, which is harmless
+    /// because padded duplicates carry zero plan mass... see
+    /// `pad_sampled_set`).
+    pub fn run_spar_gw(
+        &mut self,
+        cost: GroundCost,
+        cx: &Mat,
+        cy: &Mat,
+        a: &[f64],
+        b: &[f64],
+        set: &SampledSet,
+    ) -> Result<SparGwOutput> {
+        let n = a.len();
+        let spec = self
+            .manifest
+            .best_spar_gw(cost, n)
+            .ok_or_else(|| anyhow!("no spar_gw artifact bucket ≥ {n} for {cost:?}"))?
+            .clone();
+        let bucket_n = spec.n;
+        let bucket_s = spec.s;
+        anyhow::ensure!(
+            set.len() <= bucket_s,
+            "sampled set ({}) exceeds bucket budget ({bucket_s})",
+            set.len()
+        );
+
+        // --- Marshal inputs (f32, padded to bucket shapes) ---
+        let pad_mat = |m: &Mat| -> Vec<f32> {
+            let mut out = vec![0f32; bucket_n * bucket_n];
+            for i in 0..m.rows() {
+                let row = m.row(i);
+                for j in 0..m.cols() {
+                    out[i * bucket_n + j] = row[j] as f32;
+                }
+            }
+            out
+        };
+        let pad_vec = |v: &[f64]| -> Vec<f32> {
+            let mut out = vec![0f32; bucket_n];
+            for (o, &x) in out.iter_mut().zip(v) {
+                *o = x as f32;
+            }
+            out
+        };
+        // Pad the index set to exactly bucket_s entries. When the problem
+        // is smaller than the bucket (the common case) we point the pad
+        // entries at the zero-mass padded coordinate (bucket_n−1,
+        // bucket_n−1): a = b = 0 there, so T̃⁽⁰⁾ = 0 and the entries are
+        // inert from the first iteration. If n == bucket_n we fall back to
+        // repeating the first pair with zero importance weight, which
+        // zeroes them from the first Sinkhorn projection onward.
+        let mut idx_i: Vec<i32> = set.rows.iter().map(|&i| i as i32).collect();
+        let mut idx_j: Vec<i32> = set.cols.iter().map(|&j| j as i32).collect();
+        let mut inv_w: Vec<f32> = set.weights.iter().map(|&w| (1.0 / w) as f32).collect();
+        let (pad_i, pad_j, pad_w) = if n < bucket_n {
+            ((bucket_n - 1) as i32, (bucket_n - 1) as i32, 1.0f32)
+        } else {
+            (idx_i[0], idx_j[0], 0.0f32)
+        };
+        while idx_i.len() < bucket_s {
+            idx_i.push(pad_i);
+            idx_j.push(pad_j);
+            inv_w.push(pad_w);
+        }
+
+        let lit_cx = xla::Literal::vec1(&pad_mat(cx))
+            .reshape(&[bucket_n as i64, bucket_n as i64])
+            .map_err(|e| anyhow!("reshape cx: {e}"))?;
+        let lit_cy = xla::Literal::vec1(&pad_mat(cy))
+            .reshape(&[bucket_n as i64, bucket_n as i64])
+            .map_err(|e| anyhow!("reshape cy: {e}"))?;
+        let lit_a = xla::Literal::vec1(&pad_vec(a));
+        let lit_b = xla::Literal::vec1(&pad_vec(b));
+        let lit_ii = xla::Literal::vec1(&idx_i);
+        let lit_jj = xla::Literal::vec1(&idx_j);
+        let lit_w = xla::Literal::vec1(&inv_w);
+
+        let exe = self.executable(&spec)?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit_cx, lit_cy, lit_a, lit_b, lit_ii, lit_jj, lit_w])
+            .map_err(|e| anyhow!("executing spar_gw: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e}"))?;
+        let (t_lit, gw_lit) = out.to_tuple2().map_err(|e| anyhow!("untuple: {e}"))?;
+        let t_all: Vec<f32> = t_lit.to_vec().map_err(|e| anyhow!("t_vals: {e}"))?;
+        let gw: f32 = gw_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("gw scalar: {e}"))?
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty gw output"))?;
+        self.executions += 1;
+        Ok(SparGwOutput { t_vals: t_all[..set.len()].to_vec(), gw: gw as f64 })
+    }
+
+    /// Execute the dense EGW artifact (l2 cost) for a (padded) problem.
+    pub fn run_egw(&mut self, cx: &Mat, cy: &Mat, a: &[f64], b: &[f64]) -> Result<f64> {
+        let n = a.len();
+        let spec = self
+            .manifest
+            .specs
+            .iter()
+            .filter(|s| s.kind == super::ArtifactKind::Egw && s.n >= n)
+            .min_by_key(|s| s.n)
+            .ok_or_else(|| anyhow!("no egw artifact bucket ≥ {n}"))?
+            .clone();
+        let bn = spec.n;
+        let pad_mat = |m: &Mat| -> Vec<f32> {
+            let mut out = vec![0f32; bn * bn];
+            for i in 0..m.rows() {
+                for j in 0..m.cols() {
+                    out[i * bn + j] = m[(i, j)] as f32;
+                }
+            }
+            out
+        };
+        let pad_vec = |v: &[f64]| -> Vec<f32> {
+            let mut out = vec![0f32; bn];
+            for (o, &x) in out.iter_mut().zip(v) {
+                *o = x as f32;
+            }
+            out
+        };
+        let lit_cx = xla::Literal::vec1(&pad_mat(cx))
+            .reshape(&[bn as i64, bn as i64])
+            .map_err(|e| anyhow!("reshape: {e}"))?;
+        let lit_cy = xla::Literal::vec1(&pad_mat(cy))
+            .reshape(&[bn as i64, bn as i64])
+            .map_err(|e| anyhow!("reshape: {e}"))?;
+        let lit_a = xla::Literal::vec1(&pad_vec(a));
+        let lit_b = xla::Literal::vec1(&pad_vec(b));
+        let exe = self.executable(&spec)?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit_cx, lit_cy, lit_a, lit_b])
+            .map_err(|e| anyhow!("executing egw: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        let (_t, gw_lit) = out.to_tuple2().map_err(|e| anyhow!("untuple: {e}"))?;
+        let gw: f32 = gw_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("gw: {e}"))?
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty gw output"))?;
+        self.executions += 1;
+        Ok(gw as f64)
+    }
+
+    /// Compilation-cache statistics: (compiled, cached entries, executed).
+    pub fn stats(&self) -> (usize, usize, usize) {
+        (self.compilations, self.cache.len(), self.executions)
+    }
+}

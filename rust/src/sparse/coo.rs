@@ -1,0 +1,249 @@
+//! COO (coordinate) sparse matrix with a *fixed pattern*.
+
+use crate::linalg::Mat;
+
+/// Coordinate-format sparse matrix.
+///
+/// The pattern (rows/cols) is immutable after construction; values are
+/// mutable. Duplicate coordinates are allowed (they act additively in all
+/// linear operations), matching the i.i.d.-with-replacement sampling of the
+/// index set `S` in Algorithm 2.
+#[derive(Clone, Debug)]
+pub struct Coo {
+    nrows: usize,
+    ncols: usize,
+    rows: Vec<u32>,
+    cols: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+impl Coo {
+    /// Build from triplet slices.
+    pub fn from_triplets(
+        nrows: usize,
+        ncols: usize,
+        rows: &[usize],
+        cols: &[usize],
+        vals: &[f64],
+    ) -> Self {
+        assert_eq!(rows.len(), cols.len());
+        assert_eq!(rows.len(), vals.len());
+        for (&r, &c) in rows.iter().zip(cols) {
+            assert!(r < nrows && c < ncols, "index ({r},{c}) out of bounds");
+        }
+        Coo {
+            nrows,
+            ncols,
+            rows: rows.iter().map(|&r| r as u32).collect(),
+            cols: cols.iter().map(|&c| c as u32).collect(),
+            vals: vals.to_vec(),
+        }
+    }
+
+    /// Build with a pattern and all-zero values.
+    pub fn with_pattern(nrows: usize, ncols: usize, rows: &[usize], cols: &[usize]) -> Self {
+        let vals = vec![0.0; rows.len()];
+        Self::from_triplets(nrows, ncols, rows, cols, &vals)
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Number of stored entries (including duplicates and explicit zeros).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    #[inline]
+    pub fn rows(&self) -> &[u32] {
+        &self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> &[u32] {
+        &self.cols
+    }
+
+    #[inline]
+    pub fn vals(&self) -> &[f64] {
+        &self.vals
+    }
+
+    #[inline]
+    pub fn vals_mut(&mut self) -> &mut [f64] {
+        &mut self.vals
+    }
+
+    /// Replace values (same pattern). Panics on length mismatch.
+    pub fn set_vals(&mut self, vals: &[f64]) {
+        assert_eq!(vals.len(), self.vals.len());
+        self.vals.copy_from_slice(vals);
+    }
+
+    /// y = A x  (sparse mat-vec, O(nnz)).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for k in 0..self.vals.len() {
+            y[self.rows[k] as usize] += self.vals[k] * x[self.cols[k] as usize];
+        }
+        y
+    }
+
+    /// y = Aᵀ x  (O(nnz)).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.nrows);
+        let mut y = vec![0.0; self.ncols];
+        for k in 0..self.vals.len() {
+            y[self.cols[k] as usize] += self.vals[k] * x[self.rows[k] as usize];
+        }
+        y
+    }
+
+    /// Row sums (marginal `T 1`).
+    pub fn row_sums(&self) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows];
+        for k in 0..self.vals.len() {
+            y[self.rows[k] as usize] += self.vals[k];
+        }
+        y
+    }
+
+    /// Column sums (marginal `Tᵀ 1`).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut y = vec![0.0; self.ncols];
+        for k in 0..self.vals.len() {
+            y[self.cols[k] as usize] += self.vals[k];
+        }
+        y
+    }
+
+    /// Total mass Σᵢⱼ.
+    pub fn sum(&self) -> f64 {
+        self.vals.iter().sum()
+    }
+
+    /// In-place `diag(u) · A · diag(v)` (the sparse Sinkhorn plan recovery).
+    pub fn diag_scale_inplace(&mut self, u: &[f64], v: &[f64]) {
+        assert_eq!(u.len(), self.nrows);
+        assert_eq!(v.len(), self.ncols);
+        for k in 0..self.vals.len() {
+            self.vals[k] *= u[self.rows[k] as usize] * v[self.cols[k] as usize];
+        }
+    }
+
+    /// Elementwise map over stored values.
+    pub fn map_inplace(&mut self, f: impl Fn(f64) -> f64) {
+        for v in &mut self.vals {
+            *v = f(*v);
+        }
+    }
+
+    /// Frobenius inner product with a dense matrix (only stored entries).
+    pub fn frob_inner_dense(&self, d: &Mat) -> f64 {
+        assert_eq!((self.nrows, self.ncols), d.shape());
+        let mut s = 0.0;
+        for k in 0..self.vals.len() {
+            s += self.vals[k] * d[(self.rows[k] as usize, self.cols[k] as usize)];
+        }
+        s
+    }
+
+    /// Densify (duplicates accumulate).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.nrows, self.ncols);
+        for k in 0..self.vals.len() {
+            m[(self.rows[k] as usize, self.cols[k] as usize)] += self.vals[k];
+        }
+        m
+    }
+
+    /// Squared Frobenius distance between the *value vectors* of two
+    /// same-pattern matrices — the Algorithm 2 stopping criterion
+    /// ‖T̃⁽ʳ⁺¹⁾ − T̃⁽ʳ⁾‖²_F (valid because both live on the same pattern).
+    pub fn pattern_sqdist(&self, other: &Coo) -> f64 {
+        assert_eq!(self.nnz(), other.nnz(), "pattern mismatch");
+        let mut s = 0.0;
+        for (a, b) in self.vals.iter().zip(&other.vals) {
+            let d = a - b;
+            s += d * d;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        // [[0, 1, 0],
+        //  [2, 0, 3]]
+        Coo::from_triplets(2, 3, &[0, 1, 1], &[1, 0, 2], &[1.0, 2.0, 3.0])
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = sample();
+        let x = vec![1.0, 10.0, 100.0];
+        assert_eq!(a.matvec(&x), vec![10.0, 302.0]);
+        let y = vec![1.0, 10.0];
+        assert_eq!(a.matvec_t(&y), vec![20.0, 1.0, 30.0]);
+    }
+
+    #[test]
+    fn sums() {
+        let a = sample();
+        assert_eq!(a.row_sums(), vec![1.0, 5.0]);
+        assert_eq!(a.col_sums(), vec![2.0, 1.0, 3.0]);
+        assert_eq!(a.sum(), 6.0);
+    }
+
+    #[test]
+    fn diag_scale() {
+        let mut a = sample();
+        a.diag_scale_inplace(&[2.0, 3.0], &[1.0, 5.0, 7.0]);
+        let d = a.to_dense();
+        assert_eq!(d[(0, 1)], 1.0 * 2.0 * 5.0);
+        assert_eq!(d[(1, 0)], 2.0 * 3.0 * 1.0);
+        assert_eq!(d[(1, 2)], 3.0 * 3.0 * 7.0);
+    }
+
+    #[test]
+    fn duplicates_accumulate() {
+        let a = Coo::from_triplets(2, 2, &[0, 0], &[0, 0], &[1.5, 2.5]);
+        let d = a.to_dense();
+        assert_eq!(d[(0, 0)], 4.0);
+        assert_eq!(a.row_sums(), vec![4.0, 0.0]);
+    }
+
+    #[test]
+    fn frob_inner_dense_matches() {
+        let a = sample();
+        let d = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        // entries: (0,1)->1*1, (1,0)->2*3, (1,2)->3*5
+        assert_eq!(a.frob_inner_dense(&d), 1.0 + 6.0 + 15.0);
+    }
+
+    #[test]
+    fn pattern_sqdist_basic() {
+        let a = sample();
+        let mut b = a.clone();
+        b.vals_mut()[0] += 2.0;
+        assert!((a.pattern_sqdist(&b) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_rejected() {
+        Coo::from_triplets(2, 2, &[2], &[0], &[1.0]);
+    }
+}

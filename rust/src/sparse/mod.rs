@@ -1,0 +1,23 @@
+//! Sparse matrix substrate.
+//!
+//! Spar-GW's whole point is that the coupling matrix `T̃` and kernel matrix
+//! `K̃` live on a fixed sparsity pattern `S` of `s ≪ mn` index pairs, so the
+//! Sinkhorn inner loop and the cost products run in O(s) / O(s²) instead of
+//! O(mn) / O(m²n²). [`Coo`] is that fixed-pattern representation: parallel
+//! `(row, col, val)` arrays whose pattern is set once (the sampled `S`) and
+//! whose values are updated in place every outer iteration.
+
+mod coo;
+
+pub use coo::Coo;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_reexports() {
+        let c = Coo::from_triplets(2, 2, &[0, 1], &[1, 0], &[1.0, 2.0]);
+        assert_eq!(c.nnz(), 2);
+    }
+}

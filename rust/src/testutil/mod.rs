@@ -1,0 +1,124 @@
+//! Lightweight property-testing helpers (proptest is unavailable offline).
+//!
+//! [`forall`] runs a property over `cases` randomly generated inputs from a
+//! seeded generator; on failure it reports the case index and seed so the
+//! exact input can be regenerated deterministically.
+
+use crate::linalg::Mat;
+use crate::rng::{derive_seed, Xoshiro256};
+
+/// Run `prop` on `cases` inputs drawn by `gen` from independent seeded RNG
+/// streams. Panics with the failing case index + seed on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Xoshiro256) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let case_seed = derive_seed(seed, case as u64);
+        let mut rng = Xoshiro256::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {case_seed}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Random probability vector on the simplex with strictly positive mass.
+pub fn random_simplex(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..n).map(|_| rng.f64() + 1e-3).collect();
+    let s: f64 = v.iter().sum();
+    for x in &mut v {
+        *x /= s;
+    }
+    v
+}
+
+/// Random symmetric non-negative relation matrix with zero diagonal
+/// (a distance-like matrix built from random points on the unit square).
+pub fn random_relation(rng: &mut Xoshiro256, n: usize) -> Mat {
+    let pts: Vec<[f64; 2]> = (0..n).map(|_| [rng.f64(), rng.f64()]).collect();
+    Mat::from_fn(n, n, |i, j| {
+        let dx = pts[i][0] - pts[j][0];
+        let dy = pts[i][1] - pts[j][1];
+        (dx * dx + dy * dy).sqrt()
+    })
+}
+
+/// Assert `|a − b| ≤ atol + rtol·|b|` with a readable panic message.
+pub fn assert_close(a: f64, b: f64, rtol: f64, atol: f64, what: &str) {
+    let tol = atol + rtol * b.abs();
+    assert!(
+        (a - b).abs() <= tol,
+        "{what}: {a} vs {b} (|Δ| = {} > tol {tol})",
+        (a - b).abs()
+    );
+}
+
+/// Check that a coupling matrix has the prescribed marginals.
+pub fn check_marginals(t: &Mat, a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    let r = t.row_sums();
+    let c = t.col_sums();
+    for (i, (&ri, &ai)) in r.iter().zip(a).enumerate() {
+        if (ri - ai).abs() > tol {
+            return Err(format!("row marginal {i}: {ri} vs {ai}"));
+        }
+    }
+    for (j, (&cj, &bj)) in c.iter().zip(b).enumerate() {
+        if (cj - bj).abs() > tol {
+            return Err(format!("col marginal {j}: {cj} vs {bj}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            "sum-nonneg",
+            1,
+            25,
+            |rng| random_simplex(rng, 8),
+            |v| {
+                if v.iter().all(|&x| x > 0.0) && (v.iter().sum::<f64>() - 1.0).abs() < 1e-12 {
+                    Ok(())
+                } else {
+                    Err("not a simplex point".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failure() {
+        forall("always-fails", 2, 3, |rng| rng.f64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn relation_is_symmetric_zero_diag() {
+        let mut rng = Xoshiro256::new(3);
+        let c = random_relation(&mut rng, 10);
+        for i in 0..10 {
+            assert_eq!(c[(i, i)], 0.0);
+            for j in 0..10 {
+                assert!((c[(i, j)] - c[(j, i)]).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn marginal_checker() {
+        let t = Mat::from_vec(2, 2, vec![0.25, 0.25, 0.25, 0.25]);
+        assert!(check_marginals(&t, &[0.5, 0.5], &[0.5, 0.5], 1e-12).is_ok());
+        assert!(check_marginals(&t, &[0.9, 0.1], &[0.5, 0.5], 1e-12).is_err());
+    }
+}

@@ -1,0 +1,70 @@
+//! Minimal CSV writer for benchmark outputs (serde is unavailable offline).
+
+use std::fs::{self, File};
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    ncols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncating) a CSV file with the given header.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, ncols: header.len() })
+    }
+
+    /// Write one row of string fields. Fields containing commas/quotes are
+    /// quoted per RFC 4180.
+    pub fn row(&mut self, fields: &[String]) -> io::Result<()> {
+        assert_eq!(fields.len(), self.ncols, "csv row arity mismatch");
+        let escaped: Vec<String> = fields
+            .iter()
+            .map(|f| {
+                if f.contains(',') || f.contains('"') || f.contains('\n') {
+                    format!("\"{}\"", f.replace('"', "\"\""))
+                } else {
+                    f.clone()
+                }
+            })
+            .collect();
+        writeln!(self.w, "{}", escaped.join(","))
+    }
+
+    /// Convenience: write a row of mixed displayable values.
+    pub fn row_disp(&mut self, fields: &[&dyn std::fmt::Display]) -> io::Result<()> {
+        let v: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&v)
+    }
+
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("spargw_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "x,y".into()]).unwrap();
+            w.row_disp(&[&2.5, &"z"]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2.5,z\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,102 @@
+//! Small shared utilities: vector helpers, simplex/normalization helpers,
+//! CSV emission, and wall-clock timing.
+
+pub mod csv;
+pub mod timer;
+
+/// Normalize a non-negative vector to the probability simplex.
+/// Panics if the sum is not positive.
+pub fn normalize(v: &mut [f64]) {
+    let s: f64 = v.iter().sum();
+    assert!(s > 0.0 && s.is_finite(), "cannot normalize: sum = {s}");
+    for x in v.iter_mut() {
+        *x /= s;
+    }
+}
+
+/// Uniform distribution on n points.
+pub fn uniform(n: usize) -> Vec<f64> {
+    vec![1.0 / n as f64; n]
+}
+
+/// Elementwise a ⊘ b with 0/0 := 0 (the Sinkhorn-safe division:
+/// zero-mass marginals produce zero scalings rather than NaN).
+pub fn safe_div(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| if x == 0.0 { 0.0 } else { x / y })
+        .collect()
+}
+
+/// Max |a-b| over two slices.
+pub fn linf_diff(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .fold(0.0f64, |m, (&x, &y)| m.max((x - y).abs()))
+}
+
+/// KL divergence Σ pᵢ log(pᵢ/qᵢ) − Σpᵢ + Σqᵢ (generalized, for
+/// unnormalized non-negative vectors; 0 log 0 := 0).
+pub fn kl_div(p: &[f64], q: &[f64]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    let mut s = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi > 0.0 {
+            s += pi * (pi / qi.max(1e-300)).ln() - pi + qi;
+        } else {
+            s += qi;
+        }
+    }
+    s
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_to_simplex() {
+        let mut v = vec![1.0, 3.0];
+        normalize(&mut v);
+        assert_eq!(v, vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn safe_div_zero_over_zero() {
+        assert_eq!(safe_div(&[0.0, 2.0], &[0.0, 4.0]), vec![0.0, 0.5]);
+    }
+
+    #[test]
+    fn kl_zero_when_equal() {
+        let p = vec![0.2, 0.8];
+        assert!(kl_div(&p, &p).abs() < 1e-12);
+        // KL > 0 when different
+        assert!(kl_div(&[0.5, 0.5], &[0.9, 0.1]) > 0.0);
+    }
+
+    #[test]
+    fn stats() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+}

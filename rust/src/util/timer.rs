@@ -1,0 +1,73 @@
+//! Wall-clock timing helpers (criterion is unavailable offline; the bench
+//! harness builds on these).
+
+use std::time::{Duration, Instant};
+
+/// Time a closure once, returning (result, elapsed seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Simple accumulating phase timer for profiling multi-stage algorithms.
+#[derive(Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run a closure under a named phase, accumulating its elapsed time.
+    pub fn phase<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed();
+        if let Some(p) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            p.1 += dt;
+        } else {
+            self.phases.push((name.to_string(), dt));
+        }
+        out
+    }
+
+    /// (name, seconds) pairs in first-seen order.
+    pub fn report(&self) -> Vec<(String, f64)> {
+        self.phases
+            .iter()
+            .map(|(n, d)| (n.clone(), d.as_secs_f64()))
+            .collect()
+    }
+
+    /// Total across phases, seconds.
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, d)| d.as_secs_f64()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_positive() {
+        let (v, t) = time_once(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499500);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let mut pt = PhaseTimer::new();
+        pt.phase("a", || std::thread::sleep(Duration::from_millis(1)));
+        pt.phase("a", || std::thread::sleep(Duration::from_millis(1)));
+        pt.phase("b", || ());
+        let rep = pt.report();
+        assert_eq!(rep.len(), 2);
+        assert!(rep[0].1 >= 0.002);
+        assert!(pt.total() >= rep[0].1);
+    }
+}

@@ -1,0 +1,134 @@
+//! Integration tests for the PJRT runtime: loading the AOT artifacts
+//! (JAX + Pallas lowered to HLO text by `make artifacts`), executing
+//! them from Rust, and cross-checking against the native solver.
+//!
+//! These tests are skipped (with a notice) when `artifacts/` has not been
+//! built — `make artifacts` first.
+
+use spargw::bench::Workload;
+use spargw::gw::sampling::GwSampler;
+use spargw::gw::spar_gw::{spar_gw_with_set, SparGwConfig};
+use spargw::gw::GroundCost;
+use spargw::rng::Xoshiro256;
+use spargw::runtime::artifacts::Manifest;
+use spargw::runtime::Runtime;
+
+fn artifact_dir() -> Option<String> {
+    let dir = std::env::var("SPARGW_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    if Manifest::load(&dir).is_ok() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime test: no artifacts in {dir} (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_describes_buckets() {
+    let Some(dir) = artifact_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert!(!m.specs.is_empty());
+    // Every artifact file referenced by the manifest exists.
+    for spec in &m.specs {
+        let path = m.path_of(spec);
+        assert!(path.exists(), "{path:?} missing");
+    }
+    // Spar-GW buckets exist for both costs.
+    for cost in [GroundCost::L1, GroundCost::L2] {
+        let buckets = m.spar_buckets(cost);
+        assert!(!buckets.is_empty(), "no {cost:?} buckets");
+    }
+}
+
+#[test]
+fn pjrt_spar_gw_matches_native_solver() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+
+    let n = 30;
+    let mut rng = Xoshiro256::new(21);
+    let inst = Workload::Moon.make(n, &mut rng);
+    let p = inst.problem();
+    let (_bucket_n, bucket_s) = rt.spar_gw_bucket(GroundCost::L2, n).expect("bucket");
+
+    // Sample with the bucket's budget so native and PJRT share the set.
+    let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+    let set = sampler.sample_iid(&mut rng, bucket_s);
+
+    let out = rt.run_spar_gw(GroundCost::L2, &inst.cx, &inst.cy, &inst.a, &inst.b, &set).unwrap();
+
+    let cfg = SparGwConfig { sample_size: bucket_s, ..Default::default() };
+    let native = spar_gw_with_set(&p, GroundCost::L2, &cfg, &set);
+
+    // f32 artifact vs f64 native: agreement to a few decimal places.
+    let rel = (out.gw - native.value).abs() / native.value.abs().max(1e-6);
+    assert!(
+        rel < 0.15,
+        "pjrt {} vs native {} (rel {rel})",
+        out.gw,
+        native.value
+    );
+    assert_eq!(out.t_vals.len(), set.len());
+    let mass: f64 = out.t_vals.iter().map(|&v| v as f64).sum();
+    assert!((mass - 1.0).abs() < 0.05, "pjrt plan mass {mass}");
+}
+
+#[test]
+fn pjrt_executable_cache_reuses_compilations() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let n = 24;
+    let mut rng = Xoshiro256::new(22);
+    for _ in 0..3 {
+        let inst = Workload::Graph.make(n, &mut rng);
+        let p = inst.problem();
+        let (_, bucket_s) = rt.spar_gw_bucket(GroundCost::L2, n).unwrap();
+        let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+        let set = sampler.sample_iid(&mut rng, bucket_s);
+        rt.run_spar_gw(GroundCost::L2, &inst.cx, &inst.cy, &inst.a, &inst.b, &set).unwrap();
+    }
+    let (compiled, cached, execs) = rt.stats();
+    assert_eq!(execs, 3);
+    assert_eq!(compiled, 1, "expected one compilation, got {compiled}");
+    assert_eq!(cached, 1);
+}
+
+#[test]
+fn pjrt_l1_artifact_runs() {
+    // The indecomposable-cost artifact is the paper's differentiator; it
+    // must execute, not just the ℓ2 one.
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let n = 28;
+    let mut rng = Xoshiro256::new(23);
+    let inst = Workload::Moon.make(n, &mut rng);
+    let p = inst.problem();
+    let (_, bucket_s) = rt.spar_gw_bucket(GroundCost::L1, n).expect("l1 bucket");
+    let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+    let set = sampler.sample_iid(&mut rng, bucket_s);
+    let out = rt.run_spar_gw(GroundCost::L1, &inst.cx, &inst.cy, &inst.a, &inst.b, &set).unwrap();
+    assert!(out.gw.is_finite() && out.gw >= -1e-6, "l1 gw {}", out.gw);
+}
+
+#[test]
+fn oversized_problem_is_rejected_cleanly() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let max_bucket = m.spar_buckets(GroundCost::L2).into_iter().max().unwrap();
+    let n = max_bucket + 1;
+    assert!(rt.spar_gw_bucket(GroundCost::L2, n).is_none());
+    let mut rng = Xoshiro256::new(24);
+    let inst = Workload::Moon.make(n, &mut rng);
+    let p = inst.problem();
+    let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+    let set = sampler.sample_iid(&mut rng, 8);
+    let res = rt.run_spar_gw(GroundCost::L2, &inst.cx, &inst.cy, &inst.a, &inst.b, &set);
+    let err = match res {
+        Ok(_) => panic!("oversized problem unexpectedly succeeded"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("bucket"), "unexpected error: {err:#}");
+}

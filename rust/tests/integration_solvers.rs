@@ -1,0 +1,193 @@
+//! Cross-module integration tests over the full solver family: every
+//! method on shared instances, degeneracy relations between the GW
+//! variants, and agreement between sparse and dense paths.
+
+use spargw::bench::workloads::{attach_features, Workload};
+use spargw::bench::{Method, RunSettings};
+use spargw::gw::fgw::{naive_fgw, pga_fgw, FgwProblem};
+use spargw::gw::spar_gw::{spar_gw, SparGwConfig};
+use spargw::gw::spar_ugw::{spar_ugw, SparUgwConfig};
+use spargw::gw::ugw::{pga_ugw, UgwConfig};
+use spargw::gw::{pga_gw, Alg1Config, GroundCost, GwProblem};
+use spargw::rng::Xoshiro256;
+use spargw::testutil::assert_close;
+use spargw::util::{mean, uniform};
+
+#[test]
+fn all_methods_agree_on_identical_spaces() {
+    // GW((C, a), (C, a)) = 0: every solver should land near zero (AE and
+    // sampled methods within a loose tolerance).
+    let mut rng = Xoshiro256::new(1);
+    let inst = Workload::Moon.make(24, &mut rng);
+    let p = GwProblem::new(&inst.cx, &inst.cx, &inst.a, &inst.a);
+    let st = RunSettings { outer_iters: 25, inner_iters: 50, ..Default::default() };
+    for &m in Method::all() {
+        if m == Method::Naive {
+            continue; // the naive plan is not optimal by construction
+        }
+        let out = m.run(&p, None, GroundCost::L2, &st, &mut rng).unwrap();
+        assert!(
+            out.value.abs() < 0.05,
+            "{} on identical spaces: {}",
+            m.name(),
+            out.value
+        );
+    }
+}
+
+#[test]
+fn every_method_beats_or_matches_naive() {
+    let mut rng = Xoshiro256::new(2);
+    let inst = Workload::Moon.make(30, &mut rng);
+    let p = inst.problem();
+    let st = RunSettings { outer_iters: 20, ..Default::default() };
+    let naive = Method::Naive.run(&p, None, GroundCost::L2, &st, &mut rng).unwrap().value;
+    for &m in Method::all() {
+        let out = m.run(&p, None, GroundCost::L2, &st, &mut rng).unwrap();
+        assert!(
+            out.value <= naive * 1.10 + 1e-9,
+            "{}: {} vs naive {}",
+            m.name(),
+            out.value,
+            naive
+        );
+    }
+}
+
+#[test]
+fn spar_gw_tracks_dense_benchmark_on_all_workloads() {
+    for (wi, &w) in Workload::all().iter().enumerate() {
+        let mut rng = Xoshiro256::new(100 + wi as u64);
+        let inst = w.make(40, &mut rng);
+        let p = inst.problem();
+        let dense = pga_gw(&p, GroundCost::L2, &Alg1Config::default()).value;
+        let cfg = SparGwConfig { sample_size: 32 * 40, ..Default::default() };
+        let vals: Vec<f64> =
+            (0..3).map(|_| spar_gw(&p, GroundCost::L2, &cfg, &mut rng).value).collect();
+        let est = mean(&vals);
+        // Same order of magnitude + finite (the paper's Fig. 2 claim at
+        // this budget); both can be near zero on easy instances.
+        assert!(est.is_finite() && est >= -1e-9, "{}: {est}", w.name());
+        assert!(
+            (est - dense).abs() <= 0.5 * dense.abs().max(0.05),
+            "{}: spar {est} vs dense {dense}",
+            w.name()
+        );
+    }
+}
+
+#[test]
+fn fgw_alpha_one_equals_gw_and_alpha_zero_equals_w() {
+    let mut rng = Xoshiro256::new(4);
+    let mut inst = Workload::Moon.make(20, &mut rng);
+    attach_features(&mut inst, &mut rng);
+    let p = inst.problem();
+    let feat = inst.feat.as_ref().unwrap();
+    let cfg = Alg1Config::default();
+
+    // α = 1: fused objective equals plain GW.
+    let fp1 = FgwProblem::new(p, feat, 1.0);
+    let gw = pga_gw(&p, GroundCost::L2, &cfg).value;
+    let fgw1 = pga_fgw(&fp1, GroundCost::L2, &cfg).value;
+    assert_close(fgw1, gw, 1e-6, 1e-9, "FGW(α=1) vs GW");
+
+    // α = 0: the structural term vanishes; the objective is ⟨M, T⟩,
+    // minimized by the entropic OT plan — upper-bounded by the naive plan.
+    let fp0 = FgwProblem::new(p, feat, 0.0);
+    let w = pga_fgw(&fp0, GroundCost::L2, &cfg).value;
+    let naive_w = naive_fgw(&fp0, GroundCost::L2);
+    assert!(w <= naive_w + 1e-9, "W {w} vs naive ⟨M, abᵀ⟩ {naive_w}");
+}
+
+#[test]
+fn ugw_with_balanced_masses_and_large_lambda_approaches_gw() {
+    // §5.1: as λ → ∞ with unit masses, UGW degenerates to GW.
+    let mut rng = Xoshiro256::new(5);
+    let inst = Workload::Moon.make(20, &mut rng);
+    let p = inst.problem();
+    let gw = pga_gw(&p, GroundCost::L2, &Alg1Config::default()).value;
+    let cfg = UgwConfig { lambda: 1e4, ..Default::default() };
+    let u = pga_ugw(&p, GroundCost::L2, &cfg);
+    // The KL penalty pins the marginals: quadratic part ≈ GW.
+    let quad = {
+        use spargw::gw::tensor::gw_energy;
+        gw_energy(p.cx, p.cy, &u.plan, GroundCost::L2)
+    };
+    assert_close(quad, gw, 0.25, 5e-3, "UGW(λ→∞) quadratic vs GW");
+    // Marginal defect is tiny.
+    let r = u.plan.row_sums();
+    let defect: f64 =
+        r.iter().zip(p.a).map(|(x, y)| (x - y).abs()).sum::<f64>() / p.a.len() as f64;
+    assert!(defect < 1e-3, "marginal defect {defect}");
+}
+
+#[test]
+fn spar_ugw_degenerates_to_spar_gw_shape() {
+    // m(a) = m(b) = 1 and large λ: Spar-UGW ≈ Spar-GW on the same set.
+    let n = 24;
+    let mut rng = Xoshiro256::new(6);
+    let inst = Workload::Moon.make(n, &mut rng);
+    let p = inst.problem();
+    let ucfg = SparUgwConfig {
+        ugw: UgwConfig { lambda: 1e4, ..Default::default() },
+        sample_size: 32 * n,
+        shrink: 0.0,
+    };
+    let u = spar_ugw(&p, GroundCost::L2, &ucfg, &mut rng);
+    let gcfg = SparGwConfig { sample_size: 32 * n, ..Default::default() };
+    let g = spar_gw(&p, GroundCost::L2, &gcfg, &mut rng);
+    assert!(u.value.is_finite() && g.value.is_finite());
+    // Total plan masses agree (≈ 1).
+    assert_close(u.plan.sum(), 1.0, 0.05, 0.0, "Spar-UGW plan mass");
+    assert_close(g.plan.sum(), 1.0, 0.05, 0.0, "Spar-GW plan mass");
+}
+
+#[test]
+fn l1_and_l2_costs_rank_workload_pairs_consistently() {
+    // Two different workloads: the (Moon, Moon-copy) pair must be closer
+    // than (Moon, Graph) under every cost for the dense benchmark.
+    let n = 24;
+    let mut rng = Xoshiro256::new(7);
+    let a_inst = Workload::Moon.make(n, &mut rng);
+    let b_inst = Workload::Graph.make(n, &mut rng);
+    let cfg = Alg1Config::default();
+    for cost in [GroundCost::L1, GroundCost::L2] {
+        let near = pga_gw(
+            &GwProblem::new(&a_inst.cx, &a_inst.cx, &a_inst.a, &a_inst.a),
+            cost,
+            &cfg,
+        )
+        .value;
+        let far = pga_gw(
+            &GwProblem::new(&a_inst.cx, &b_inst.cy, &a_inst.a, &b_inst.b),
+            cost,
+            &cfg,
+        )
+        .value;
+        assert!(near < far, "{}: near {near} !< far {far}", cost.name());
+    }
+}
+
+#[test]
+fn uniform_marginal_problem_is_symmetric() {
+    // GW((Cx,a),(Cy,b)) = GW((Cy,b),(Cx,a)) for the dense solver.
+    let n = 18;
+    let mut rng = Xoshiro256::new(8);
+    let inst = Workload::Gaussian.make(n, &mut rng);
+    let a = uniform(n);
+    let fwd = pga_gw(
+        &GwProblem::new(&inst.cx, &inst.cy, &a, &a),
+        GroundCost::L2,
+        &Alg1Config::default(),
+    )
+    .value;
+    let bwd = pga_gw(
+        &GwProblem::new(&inst.cy, &inst.cx, &a, &a),
+        GroundCost::L2,
+        &Alg1Config::default(),
+    )
+    .value;
+    // The alternating scheme is not exactly exchange-symmetric (Sinkhorn
+    // updates u before v), so allow a small relative slack.
+    assert_close(fwd, bwd, 1e-2, 1e-9, "GW symmetry");
+}

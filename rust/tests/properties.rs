@@ -1,0 +1,312 @@
+//! Property-based tests over the library's core invariants, driven by the
+//! seeded [`spargw::testutil::forall`] harness.
+
+use spargw::gw::sampling::{sample_poisson, GwSampler};
+use spargw::gw::spar_gw::{spar_gw, SparGwConfig};
+use spargw::gw::tensor::{
+    gw_energy, tensor_product_decomposable, tensor_product_generic, SparseCostContext,
+};
+use spargw::gw::{GroundCost, GwProblem};
+use spargw::linalg::Mat;
+use spargw::ot::{emd, sinkhorn, sparse_sinkhorn};
+use spargw::rng::{AliasTable, Xoshiro256};
+use spargw::sparse::Coo;
+use spargw::testutil::{check_marginals, forall, random_relation, random_simplex};
+
+struct Inst {
+    cx: Mat,
+    cy: Mat,
+    a: Vec<f64>,
+    b: Vec<f64>,
+}
+
+impl std::fmt::Debug for Inst {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Inst(m={}, n={})", self.a.len(), self.b.len())
+    }
+}
+
+fn gen_inst(rng: &mut Xoshiro256) -> Inst {
+    let m = 6 + rng.usize(10);
+    let n = 6 + rng.usize(10);
+    Inst {
+        cx: random_relation(rng, m),
+        cy: random_relation(rng, n),
+        a: random_simplex(rng, m),
+        b: random_simplex(rng, n),
+    }
+}
+
+#[test]
+fn prop_sinkhorn_plan_has_prescribed_marginals() {
+    forall(
+        "sinkhorn-marginals",
+        0xA1,
+        20,
+        gen_inst,
+        |inst| {
+            let k = Mat::from_fn(inst.a.len(), inst.b.len(), |i, j| {
+                (-(inst.cx[(i, i.min(inst.cx.cols() - 1))] + inst.cy[(j, 0)])).exp()
+            });
+            let res = sinkhorn(&inst.a, &inst.b, &k, 500, 1e-12);
+            check_marginals(&res.plan, &inst.a, &inst.b, 1e-6)
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_sinkhorn_marginals_on_support() {
+    forall(
+        "sparse-sinkhorn-marginals",
+        0xA2,
+        20,
+        |rng| {
+            let inst = gen_inst(rng);
+            let s = 8 * inst.a.len().max(inst.b.len());
+            let mut sampler = GwSampler::new(&inst.a, &inst.b, 0.0);
+            let set = sampler.sample_iid(rng, s);
+            (inst, set)
+        },
+        |(inst, set)| {
+            let vals: Vec<f64> = set.rows.iter().map(|_| 1.0).collect();
+            let k = Coo::from_triplets(inst.a.len(), inst.b.len(), &set.rows, &set.cols, &vals);
+            let (plan, _iters) = sparse_sinkhorn(&inst.a, &inst.b, &k, 2000, 1e-13);
+            // The final scaling is the v-update, so *column* marginals are
+            // exact on supported columns; rows converge only as far as the
+            // sparse pattern permits (the restricted polytope may not
+            // contain a exactly). Unsupported rows/cols carry no mass.
+            let c = plan.col_sums();
+            for (j, &cj) in c.iter().enumerate() {
+                let has = set.cols.iter().any(|&y| y == j);
+                if has && (cj - inst.b[j]).abs() > 1e-8 {
+                    return Err(format!("col {j}: {cj} vs {}", inst.b[j]));
+                }
+                if !has && cj != 0.0 {
+                    return Err(format!("unsupported col {j} has mass {cj}"));
+                }
+            }
+            let r = plan.row_sums();
+            for (i, &ri) in r.iter().enumerate() {
+                let has = set.rows.iter().any(|&x| x == i);
+                if has && (ri - inst.a[i]).abs() > 0.05 {
+                    return Err(format!("row {i} far from marginal: {ri} vs {}", inst.a[i]));
+                }
+                if !has && ri != 0.0 {
+                    return Err(format!("unsupported row {i} has mass {ri}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_emd_cost_below_sinkhorn_cost() {
+    // The exact LP optimum lower-bounds any feasible (entropic) plan.
+    forall(
+        "emd-optimality",
+        0xA3,
+        15,
+        gen_inst,
+        |inst| {
+            let cost = Mat::from_fn(inst.a.len(), inst.b.len(), |i, j| {
+                inst.cx[(i, 0)] + inst.cy[(j, 0)] + (i as f64 * 0.7 + j as f64 * 1.3).sin().abs()
+            });
+            let ot = emd(&inst.a, &inst.b, &cost);
+            check_marginals(&ot.plan, &inst.a, &inst.b, 1e-8)?;
+            let k = cost.map(|c| (-c / 0.05).exp());
+            let ent = sinkhorn(&inst.a, &inst.b, &k, 2000, 1e-12);
+            let ent_cost = cost.frob_inner(&ent.plan);
+            if ot.cost <= ent_cost + 1e-8 {
+                Ok(())
+            } else {
+                Err(format!("LP {} > entropic {}", ot.cost, ent_cost))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sampling_probabilities_normalized_and_bounded() {
+    forall(
+        "sampling-probs",
+        0xA4,
+        25,
+        |rng| {
+            let n = 5 + rng.usize(12);
+            let a = random_simplex(rng, n);
+            let b = random_simplex(rng, n);
+            let shrink = rng.f64() * 0.5;
+            (a, b, shrink)
+        },
+        |(a, b, shrink)| {
+            let sampler = GwSampler::new(a, b, *shrink);
+            let n = a.len();
+            let total: f64 =
+                (0..n).flat_map(|i| (0..n).map(move |j| (i, j))).map(|(i, j)| sampler.prob_of(i, j)).sum();
+            if (total - 1.0).abs() > 1e-9 {
+                return Err(format!("probabilities sum to {total}"));
+            }
+            // Shrinkage enforces (H.4): the product-form mixing in
+            // GwSampler guarantees p_ij ≥ θ²/(mn) (c₃ = θ²).
+            if *shrink > 0.0 {
+                let floor = shrink * shrink / (n * n) as f64;
+                for i in 0..n {
+                    for j in 0..n {
+                        if sampler.prob_of(i, j) < floor - 1e-12 {
+                            return Err(format!("p[{i},{j}] below H.4 floor"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_poisson_sample_size_concentrates() {
+    forall(
+        "poisson-size",
+        0xA5,
+        10,
+        |rng| {
+            let n = 20;
+            let a = random_simplex(rng, n);
+            let b = random_simplex(rng, n);
+            let s = 8 * n;
+            let set = sample_poisson(rng, &a, &b, 0.0, s);
+            (set.len(), s)
+        },
+        |(len, s)| {
+            // E[|S|] ≤ s; allow generous concentration slack.
+            if *len <= 2 * s && *len > s / 8 {
+                Ok(())
+            } else {
+                Err(format!("|S| = {len} vs budget {s}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_cost_matches_dense_on_support() {
+    // C̃(T̃) restricted to S equals the dense tensor product when T̃ is the
+    // dense plan masked to S.
+    forall(
+        "sparse-cost-consistency",
+        0xA6,
+        15,
+        |rng| {
+            let inst = gen_inst(rng);
+            let s = 6 * inst.a.len().max(inst.b.len());
+            let mut sampler = GwSampler::new(&inst.a, &inst.b, 0.0);
+            let set = sampler.sample_iid(rng, s);
+            (inst, set)
+        },
+        |(inst, set)| {
+            let cost = GroundCost::L1;
+            let (m, n) = (inst.a.len(), inst.b.len());
+            // T̃: arbitrary values on S, zero elsewhere.
+            let t_vals: Vec<f64> = (0..set.len()).map(|l| 0.1 + 0.01 * l as f64).collect();
+            let mut t_dense = Mat::zeros(m, n);
+            for (l, (&i, &j)) in set.rows.iter().zip(&set.cols).enumerate() {
+                t_dense[(i, j)] += t_vals[l];
+            }
+            let ctx = SparseCostContext::new(&inst.cx, &inst.cy, &set.rows, &set.cols, cost);
+            let sparse_c = ctx.cost_values(&t_vals);
+            let dense_c = tensor_product_generic(&inst.cx, &inst.cy, &t_dense, cost);
+            for (l, (&i, &j)) in set.rows.iter().zip(&set.cols).enumerate() {
+                let d = dense_c[(i, j)];
+                if (sparse_c[l] - d).abs() > 3e-6 * d.abs().max(1.0) {
+                    return Err(format!("S[{l}] = ({i},{j}): sparse {} vs dense {d}", sparse_c[l]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_decomposable_tensor_product_matches_generic() {
+    forall(
+        "peyre-decomposition",
+        0xA7,
+        15,
+        gen_inst,
+        |inst| {
+            let t = Mat::outer(&inst.a, &inst.b);
+            for cost in [GroundCost::L2, GroundCost::Kl] {
+                let fast = tensor_product_decomposable(&inst.cx, &inst.cy, &t, cost);
+                let slow = tensor_product_generic(&inst.cx, &inst.cy, &t, cost);
+                for (x, y) in fast.data().iter().zip(slow.data()) {
+                    if (x - y).abs() > 1e-8 * y.abs().max(1.0) {
+                        return Err(format!("{}: {x} vs {y}", cost.name()));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_spar_gw_plan_is_feasible_and_supported() {
+    forall(
+        "spar-gw-feasibility",
+        0xA8,
+        10,
+        gen_inst,
+        |inst| {
+            let p = GwProblem::new(&inst.cx, &inst.cy, &inst.a, &inst.b);
+            let cfg = SparGwConfig {
+                sample_size: 12 * inst.a.len().max(inst.b.len()),
+                ..Default::default()
+            };
+            let mut rng = Xoshiro256::new(42);
+            let res = spar_gw(&p, GroundCost::L2, &cfg, &mut rng);
+            if !res.value.is_finite() || res.value < -1e-9 {
+                return Err(format!("value {}", res.value));
+            }
+            // Plan mass ≈ 1 and value consistent with the plan's energy.
+            let mass = res.plan.sum();
+            if (mass - 1.0).abs() > 0.05 {
+                return Err(format!("plan mass {mass}"));
+            }
+            let energy = gw_energy(&inst.cx, &inst.cy, &res.plan.to_dense(), GroundCost::L2);
+            if (energy - res.value).abs() > 1e-6 * energy.abs().max(1e-9) {
+                return Err(format!("value {} vs recomputed energy {energy}", res.value));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_alias_table_reproduces_distribution() {
+    forall(
+        "alias-distribution",
+        0xA9,
+        8,
+        |rng| {
+            let n = 4 + rng.usize(8);
+            random_simplex(rng, n)
+        },
+        |w| {
+            let mut alias = AliasTable::new(w);
+            let mut rng = Xoshiro256::new(77);
+            let draws = 200_000;
+            let mut counts = vec![0usize; w.len()];
+            for _ in 0..draws {
+                counts[alias.sample(&mut rng)] += 1;
+            }
+            for (i, (&c, &wi)) in counts.iter().zip(w.iter()).enumerate() {
+                let freq = c as f64 / draws as f64;
+                if (freq - wi).abs() > 0.02 + 3.0 * (wi / draws as f64).sqrt() {
+                    return Err(format!("bin {i}: freq {freq} vs weight {wi}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
