@@ -3,27 +3,42 @@
 //! in EXPERIMENTS.md §Perf has stable before/after numbers:
 //!
 //! * alias-table construction + s categorical draws (sampling S);
-//! * the O(s²) sparse cost product `C̃(T̃)` (the paper's bottleneck);
+//! * the O(s²) sparse cost product `C̃(T̃)` (the paper's bottleneck),
+//!   serial and row-chunked across threads;
 //! * one sparse Sinkhorn scaling pass (O(Hs));
 //! * dense decomposable vs generic tensor product (the baseline cost);
-//! * end-to-end Spar-GW solve latency.
+//! * end-to-end Spar-GW solve latency, cold and with a reused
+//!   `SparCore` workspace.
+//!
+//! This binary also installs the counting allocator and **verifies the
+//! zero-allocations-per-iteration property** of the SparCore inner loop:
+//! a solve at R = 3 and a solve at R = 24 must perform exactly the same
+//! number of allocation events (every allocation happens before the outer
+//! loop). A regression aborts the bench with a non-zero exit.
 //!
 //! Output: stdout rows + `results/perf_micro.csv`.
 
 use std::time::Instant;
 
-use spargw::bench::workloads::Workload;
+use spargw::bench::workloads::{smoke_mode, Workload};
+use spargw::bench::{allocations_during, CountingAllocator};
+use spargw::gw::core::Workspace;
 use spargw::gw::sampling::GwSampler;
-use spargw::gw::spar_gw::{spar_gw, SparGwConfig};
+use spargw::gw::spar_gw::{spar_gw, spar_gw_with_workspace, SparGwConfig};
+use spargw::gw::spar_ugw::{spar_ugw_with_workspace, SparUgwConfig};
 use spargw::gw::tensor::{
     tensor_product_decomposable, tensor_product_generic, SparseCostContext,
 };
+use spargw::gw::ugw::UgwConfig;
 use spargw::gw::GroundCost;
 use spargw::linalg::Mat;
 use spargw::ot::sparse_sinkhorn;
 use spargw::rng::{ProductAlias, Xoshiro256};
 use spargw::sparse::Coo;
 use spargw::util::csv::CsvWriter;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
 
 /// Median-of-`reps` wall time of `f` (seconds), with a warmup call.
 fn bench(reps: usize, mut f: impl FnMut()) -> f64 {
@@ -40,9 +55,10 @@ fn bench(reps: usize, mut f: impl FnMut()) -> f64 {
 }
 
 fn main() {
-    let n = 200;
+    // SPARGW_BENCH_SMOKE=1 shrinks the instance for the CI allocation
+    // audit (the zero-alloc property is size-independent).
+    let (n, reps) = if smoke_mode() { (64, 2) } else { (200, 5) };
     let s = 16 * n;
-    let reps = 5;
     let mut rng = Xoshiro256::new(0x9E4F);
     let inst = Workload::Moon.make(n, &mut rng);
     let p = inst.problem();
@@ -86,15 +102,26 @@ fn main() {
     });
     emit("sparse_ctx_build_l1", t);
 
-    // 4. The O(s²) sparse cost product — the paper's inner-loop bottleneck.
+    // 4. The O(s²) sparse cost product — the paper's inner-loop bottleneck
+    //    — serial, then row-chunked across threads (bit-identical output).
     let ctx_l1 = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, GroundCost::L1);
+    let mut c_out = vec![0.0f64; s_eff];
     let t = bench(reps, || {
-        std::hint::black_box(ctx_l1.cost_values(&t_vals));
+        ctx_l1.cost_values_into(&t_vals, &mut c_out);
+        std::hint::black_box(&c_out);
     });
     emit("sparse_cost_product_l1", t);
+    for threads in [2usize, 4, 8] {
+        let t = bench(reps, || {
+            ctx_l1.cost_values_into_threaded(&t_vals, &mut c_out, threads);
+            std::hint::black_box(&c_out);
+        });
+        emit(&format!("sparse_cost_product_l1_t{threads}"), t);
+    }
     let ctx_l2 = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, GroundCost::L2);
     let t = bench(reps, || {
-        std::hint::black_box(ctx_l2.cost_values(&t_vals));
+        ctx_l2.cost_values_into(&t_vals, &mut c_out);
+        std::hint::black_box(&c_out);
     });
     emit("sparse_cost_product_l2", t);
 
@@ -116,13 +143,69 @@ fn main() {
     });
     emit("dense_tensor_generic_l1", t);
 
-    // 7. End-to-end Spar-GW solve (R = 20, H = 50).
+    // 7. End-to-end Spar-GW solve (R = 20, H = 50): cold (workspace
+    //    allocated per solve) vs the coordinator's reuse pattern.
     let cfg = SparGwConfig { sample_size: s, ..Default::default() };
     let t = bench(reps, || {
         let mut r = Xoshiro256::new(4);
         std::hint::black_box(spar_gw(&p, GroundCost::L1, &cfg, &mut r));
     });
     emit("spar_gw_end_to_end_l1", t);
+    let mut ws = Workspace::new();
+    let t = bench(reps, || {
+        std::hint::black_box(spar_gw_with_workspace(
+            &p,
+            GroundCost::L1,
+            &cfg,
+            &set,
+            &mut ws,
+            1,
+        ));
+    });
+    emit("spar_gw_ws_reuse_l1", t);
+
+    // 8. Allocation audit: the SparCore inner loop must not allocate.
+    //    Compare allocation events at two outer budgets on a warm
+    //    workspace — any per-iteration allocation shows up as a delta.
+    println!();
+    let audit = |label: &str, allocs_lo: usize, allocs_hi: usize, iters_lo: usize, iters_hi: usize| {
+        println!(
+            "alloc_audit {label:<22} R={iters_lo}: {allocs_lo} allocs, R={iters_hi}: {allocs_hi} allocs"
+        );
+        assert_eq!(
+            allocs_lo, allocs_hi,
+            "ALLOCATION REGRESSION in {label}: the inner loop allocated \
+             ({} extra events over {} extra iterations)",
+            allocs_hi as i64 - allocs_lo as i64,
+            iters_hi - iters_lo
+        );
+    };
+
+    // Balanced (Spar-GW). tol = 0 pins the iteration counts.
+    let gw_cfg = |outer| SparGwConfig { sample_size: s, outer_iters: outer, tol: 0.0, ..Default::default() };
+    spar_gw_with_workspace(&p, GroundCost::L1, &gw_cfg(2), &set, &mut ws, 1); // warm buffers
+    let (_, a3) = allocations_during(|| {
+        spar_gw_with_workspace(&p, GroundCost::L1, &gw_cfg(3), &set, &mut ws, 1)
+    });
+    let (_, a24) = allocations_during(|| {
+        spar_gw_with_workspace(&p, GroundCost::L1, &gw_cfg(24), &set, &mut ws, 1)
+    });
+    audit("spar_gw(balanced)", a3, a24, 3, 24);
+
+    // Unbalanced (Spar-UGW): different inner solver, same property.
+    let ucfg = |outer| SparUgwConfig {
+        ugw: UgwConfig { outer_iters: outer, tol: 0.0, ..Default::default() },
+        sample_size: s,
+        shrink: 0.0,
+    };
+    spar_ugw_with_workspace(&p, GroundCost::L1, &ucfg(2), &set, &mut ws, 1);
+    let (_, u3) = allocations_during(|| {
+        spar_ugw_with_workspace(&p, GroundCost::L1, &ucfg(3), &set, &mut ws, 1)
+    });
+    let (_, u24) = allocations_during(|| {
+        spar_ugw_with_workspace(&p, GroundCost::L1, &ucfg(24), &set, &mut ws, 1)
+    });
+    audit("spar_ugw(unbalanced)", u3, u24, 3, 24);
 
     println!("\n(effective support |S| = {s_eff} of s = {s})");
     csv.flush().unwrap();

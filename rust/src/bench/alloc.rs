@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 static LIVE: AtomicUsize = AtomicUsize::new(0);
 static PEAK: AtomicUsize = AtomicUsize::new(0);
+static EVENTS: AtomicUsize = AtomicUsize::new(0);
 
 /// System-allocator wrapper tracking live bytes and the high-water mark.
 pub struct CountingAllocator;
@@ -34,6 +35,13 @@ impl CountingAllocator {
     /// Reset the high-water mark to the current live volume.
     pub fn reset_peak() {
         PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Total allocation *events* (alloc + growing realloc) since process
+    /// start — the counter behind the zero-allocation-per-iteration
+    /// verification of the SparCore inner loop.
+    pub fn events() -> usize {
+        EVENTS.load(Ordering::Relaxed)
     }
 }
 
@@ -54,6 +62,7 @@ unsafe impl GlobalAlloc for CountingAllocator {
         let p = System.alloc(layout);
         if !p.is_null() {
             bump(layout.size());
+            EVENTS.fetch_add(1, Ordering::Relaxed);
         }
         p
     }
@@ -68,6 +77,7 @@ unsafe impl GlobalAlloc for CountingAllocator {
         if !p.is_null() {
             if new_size >= layout.size() {
                 bump(new_size - layout.size());
+                EVENTS.fetch_add(1, Ordering::Relaxed);
             } else {
                 LIVE.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
             }
@@ -85,6 +95,16 @@ pub fn peak_bytes_during<T>(f: impl FnOnce() -> T) -> (T, usize) {
     let out = f();
     let peak = CountingAllocator::peak();
     (out, peak.saturating_sub(before))
+}
+
+/// Count allocation events while running `f`. Only meaningful in a binary
+/// that installs [`CountingAllocator`]; otherwise returns 0. Comparing the
+/// count at two different outer-iteration budgets proves (or refutes) the
+/// zero-allocations-per-iteration property of the SparCore inner loop.
+pub fn allocations_during<T>(f: impl FnOnce() -> T) -> (T, usize) {
+    let before = CountingAllocator::events();
+    let out = f();
+    (out, CountingAllocator::events() - before)
 }
 
 #[cfg(test)]
@@ -105,5 +125,15 @@ mod tests {
     fn peak_during_returns_value() {
         let (v, _peak) = peak_bytes_during(|| vec![0u8; 1 << 16].len());
         assert_eq!(v, 1 << 16);
+    }
+
+    #[test]
+    fn allocations_during_returns_value() {
+        // The test binary does not install the allocator, so the count is
+        // 0 here; the contract (value passthrough, monotone counter) still
+        // holds.
+        let (v, n) = allocations_during(|| 7usize);
+        assert_eq!(v, 7);
+        assert_eq!(n, 0);
     }
 }

@@ -9,7 +9,7 @@ pub mod pairwise;
 pub mod suite;
 pub mod workloads;
 
-pub use alloc::{peak_bytes_during, CountingAllocator};
+pub use alloc::{allocations_during, peak_bytes_during, CountingAllocator};
 pub use pairwise::pairwise_distances;
 pub use suite::{Method, MethodOutput, RunSettings};
 pub use workloads::Workload;

@@ -21,5 +21,5 @@ pub mod service;
 
 pub use bucket::pad_relation;
 pub use metrics::MetricsRecorder;
-pub use scheduler::run_jobs;
+pub use scheduler::{run_jobs, run_jobs_with};
 pub use service::{ExecutionPath, PairwiseConfig, PairwiseGw, PairwiseResult};

@@ -12,19 +12,37 @@ where
     R: Send,
     F: Fn(usize) -> R + Sync,
 {
+    run_jobs_with(n_jobs, workers, || (), |_, i| job(i))
+}
+
+/// [`run_jobs`] with per-worker mutable state: `init()` runs once on each
+/// worker thread and the resulting state is threaded through every job
+/// that worker claims. This is how the pairwise service reuses one solver
+/// [`Workspace`](crate::gw::core::Workspace) per worker across pairs —
+/// buffers are allocated `workers` times per batch instead of once per
+/// pair — without the state ever crossing threads.
+pub fn run_jobs_with<S, R, I, F>(n_jobs: usize, workers: usize, init: I, job: F) -> Vec<R>
+where
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> R + Sync,
+{
     let workers = workers.max(1).min(n_jobs.max(1));
     let next = AtomicUsize::new(0);
     let results: Mutex<Vec<Option<R>>> =
         Mutex::new((0..n_jobs).map(|_| None).collect());
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n_jobs {
-                    break;
+            scope.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_jobs {
+                        break;
+                    }
+                    let r = job(&mut state, i);
+                    results.lock().unwrap()[i] = Some(r);
                 }
-                let r = job(i);
-                results.lock().unwrap()[i] = Some(r);
             });
         }
     });
@@ -64,6 +82,29 @@ mod tests {
             count.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(count.load(Ordering::Relaxed), 57);
+    }
+
+    #[test]
+    fn per_worker_state_persists_within_a_worker() {
+        // Each worker counts the jobs it ran; the counts must sum to the
+        // batch size (state survives across jobs on one worker).
+        let out = run_jobs_with(
+            40,
+            4,
+            || 0usize,
+            |seen, i| {
+                *seen += 1;
+                (*seen, i)
+            },
+        );
+        assert_eq!(out.len(), 40);
+        // Per-worker counters are 1-based and each job observes a strictly
+        // positive counter.
+        assert!(out.iter().all(|&(seen, _)| seen >= 1));
+        // All 40 indices present in order.
+        for (k, &(_, i)) in out.iter().enumerate() {
+            assert_eq!(i, k);
+        }
     }
 
     #[test]

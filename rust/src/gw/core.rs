@@ -1,0 +1,532 @@
+//! **SparCore** — the shared engine behind the Spar-* solver family.
+//!
+//! Algorithms 2 (Spar-GW), 3 (Spar-UGW) and 4 (Spar-FGW) share one
+//! iteration skeleton: sample `S` → O(s²) sparse cost → importance-
+//! corrected kernel → sparse Sinkhorn → plan update. This module owns that
+//! skeleton once; the per-variant physics (initial plan, kernel formula,
+//! inner scaling solver, acceptance rule, objective) is injected through
+//! the small [`Marginals`] strategy trait, so `spar_gw`, `spar_fgw` and
+//! `spar_ugw` are thin adapters over [`Engine::solve`].
+//!
+//! The engine runs on a per-solve [`Workspace`] of preallocated buffers
+//! plus a CSR view of the sampled pattern built once per solve: with the
+//! default serial cost kernel (`threads == 1`) the inner H×R loop
+//! performs **zero heap allocations** (verified by the counting
+//! allocator in `benches/perf_micro.rs`), and the coordinator reuses one
+//! `Workspace` per worker thread across pairs. The O(s²) sparse-cost
+//! kernel can additionally be row-chunked across threads
+//! ([`SparseCostContext::cost_values_into_threaded`]); chunking never
+//! changes results, because each output row is independent, but each
+//! chunked call spawns scoped threads (which allocate) — a throughput
+//! trade worth taking only when s² dominates the spawn cost.
+//!
+//! Numerical contract: every strategy reproduces the pre-refactor solver
+//! loops operation-for-operation, so results are *bit-identical* to the
+//! historical implementations (locked in by `tests/integration_solvers.rs`).
+
+use super::sampling::SampledSet;
+use super::spar_gw::SparGwResult;
+use super::tensor::SparseCostContext;
+use super::ugw::{kl_otimes, unbalanced_cost_shift};
+use super::Regularizer;
+use crate::ot::{sparse_sinkhorn_fixed, sparse_unbalanced_sinkhorn_fixed};
+use crate::sparse::{Coo, Csr};
+
+/// Resize to `len` zeros, keeping capacity (the workspace-reuse primitive).
+fn fit(buf: &mut Vec<f64>, len: usize) {
+    buf.clear();
+    buf.resize(len, 0.0);
+}
+
+/// Preallocated per-solve buffers for the SparCore engine.
+///
+/// Create once ([`Workspace::new`]) and pass to any number of solves —
+/// including solves of different shapes and different Spar-* variants; the
+/// engine re-fits the buffers (retaining capacity) at the start of each
+/// solve. One workspace must not be shared across threads concurrently;
+/// the coordinator keeps one per worker.
+#[derive(Default)]
+pub struct Workspace {
+    /// CSR view of the sampled pattern, rebuilt per solve.
+    csr: Csr,
+    /// Importance corrections 1/p*_l, entry order.
+    inv_w: Vec<f64>,
+    /// Current plan values T̃ on the pattern.
+    t: Vec<f64>,
+    /// Candidate next plan (swapped into `t` on acceptance).
+    t_next: Vec<f64>,
+    /// Sparse cost values C̃(T̃) (also the energy scratch).
+    c_vals: Vec<f64>,
+    /// Stabilized (rank-one-reduced) cost values.
+    c_red: Vec<f64>,
+    /// Kernel values K̃.
+    k_vals: Vec<f64>,
+    /// Per-row pattern minima (stabilization).
+    row_min: Vec<f64>,
+    /// Per-column pattern minima (stabilization).
+    col_min: Vec<f64>,
+    /// Sinkhorn row scalings.
+    u: Vec<f64>,
+    /// Sinkhorn column scalings.
+    v: Vec<f64>,
+    /// Scratch K·v.
+    kv: Vec<f64>,
+    /// Scratch Kᵀ·u.
+    ktu: Vec<f64>,
+    /// Plan row marginals (unbalanced shift / objective).
+    row_sums: Vec<f64>,
+    /// Plan column marginals.
+    col_sums: Vec<f64>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Fit every buffer to an (m, n, s) problem and rebuild the CSR
+    /// pattern. All allocation for the solve happens here, before the
+    /// outer loop.
+    fn prepare(&mut self, m: usize, n: usize, set: &SampledSet) {
+        let s = set.len();
+        fit(&mut self.t, s);
+        fit(&mut self.t_next, s);
+        fit(&mut self.c_vals, s);
+        fit(&mut self.c_red, s);
+        fit(&mut self.k_vals, s);
+        fit(&mut self.row_min, m);
+        fit(&mut self.col_min, n);
+        fit(&mut self.u, m);
+        fit(&mut self.v, n);
+        fit(&mut self.kv, m);
+        fit(&mut self.ktu, n);
+        fit(&mut self.row_sums, m);
+        fit(&mut self.col_sums, n);
+        self.inv_w.clear();
+        self.inv_w.extend(set.weights.iter().map(|&w| 1.0 / w));
+        self.csr.rebuild(m, n, &set.rows, &set.cols);
+    }
+}
+
+/// The shared solve context: problem marginals, the sampled set, the
+/// pre-gathered cost block, and the outer-loop controls.
+pub struct Engine<'a> {
+    /// Source marginal (length m).
+    pub a: &'a [f64],
+    /// Target marginal (length n).
+    pub b: &'a [f64],
+    /// The sampled pattern `S` with importance weights.
+    pub set: &'a SampledSet,
+    /// Pre-gathered s×s ground-cost block.
+    pub ctx: &'a SparseCostContext,
+    /// Outer iteration cap R.
+    pub outer_iters: usize,
+    /// Outer stopping tolerance on ‖ΔT̃‖_F (0 disables).
+    pub tol: f64,
+    /// Threads for the O(s²) cost kernel (1 = serial; the coordinator
+    /// keeps this at 1 when it already parallelizes across pairs).
+    pub threads: usize,
+}
+
+/// The per-variant physics of a Spar-* solver: balanced (Algorithm 2),
+/// fused (Algorithm 4) or unbalanced (Algorithm 3) marginal handling.
+///
+/// Hook order per outer iteration: `begin_iter` → `build_kernel` →
+/// `inner` → `accept`; returning `false` from `begin_iter`/`accept`
+/// stops the loop keeping the last accepted plan (the degenerate-kernel
+/// guards of the original solvers).
+pub trait Marginals {
+    /// Initial plan value at pattern cell (i, j).
+    fn init(&self, a_i: f64, b_j: f64) -> f64;
+
+    /// Start-of-iteration state update (e.g. the unbalanced mass terms).
+    fn begin_iter(&mut self, eng: &Engine, ws: &mut Workspace) -> bool {
+        let _ = (eng, ws);
+        true
+    }
+
+    /// Fill `ws.k_vals` (the importance-corrected kernel) from the current
+    /// plan `ws.t`; responsible for running the sparse cost product.
+    fn build_kernel(&mut self, eng: &Engine, ws: &mut Workspace);
+
+    /// Run the inner scaling solver: `ws.k_vals` → candidate plan
+    /// `ws.t_next`.
+    fn inner(&mut self, eng: &Engine, ws: &mut Workspace);
+
+    /// Validate (and possibly rescale) `ws.t_next`; `false` discards it
+    /// and stops the outer loop.
+    fn accept(&mut self, eng: &Engine, ws: &mut Workspace) -> bool {
+        let _ = (eng, ws);
+        true
+    }
+
+    /// Final objective at the plan `ws.t`.
+    fn value(&self, eng: &Engine, ws: &mut Workspace) -> f64;
+}
+
+impl Engine<'_> {
+    /// Run the shared outer loop with the given marginal strategy on a
+    /// (reusable) workspace.
+    pub fn solve(&self, strategy: &mut dyn Marginals, ws: &mut Workspace) -> SparGwResult {
+        let (m, n) = (self.a.len(), self.b.len());
+        let s = self.set.len();
+        assert!(s > 0, "empty sampled set");
+        assert_eq!(self.ctx.s(), s, "SparseCostContext/sampled-set size mismatch");
+        ws.prepare(m, n, self.set);
+
+        for l in 0..s {
+            ws.t[l] = strategy.init(self.a[self.set.rows[l]], self.b[self.set.cols[l]]);
+        }
+
+        let mut outer = 0;
+        let mut converged = false;
+        for _ in 0..self.outer_iters {
+            if !strategy.begin_iter(self, ws) {
+                break;
+            }
+            strategy.build_kernel(self, ws);
+            strategy.inner(self, ws);
+            if !strategy.accept(self, ws) {
+                break;
+            }
+            outer += 1;
+            if self.tol > 0.0 {
+                let mut diff = 0.0;
+                for (x, y) in ws.t_next.iter().zip(&ws.t) {
+                    let d = x - y;
+                    diff += d * d;
+                }
+                std::mem::swap(&mut ws.t, &mut ws.t_next);
+                if diff.sqrt() < self.tol {
+                    converged = true;
+                    break;
+                }
+            } else {
+                std::mem::swap(&mut ws.t, &mut ws.t_next);
+            }
+        }
+
+        let value = strategy.value(self, ws);
+        let plan = Coo::from_triplets(m, n, &self.set.rows, &self.set.cols, &ws.t);
+        SparGwResult { value, plan, outer_iters: outer, converged, support: s }
+    }
+}
+
+/// Rank-one stabilization shared by the balanced and fused kernels:
+/// balanced Sinkhorn is invariant to cost shifts `C_ij ← C_ij − r_i − c_j`,
+/// so reduce `ws.c_vals` by per-row then per-column minima over the stored
+/// pattern into `ws.c_red`, keeping `exp()` in range.
+fn stabilize(eng: &Engine, ws: &mut Workspace) {
+    let s = ws.c_vals.len();
+    let rows = &eng.set.rows;
+    let cols = &eng.set.cols;
+    ws.row_min.fill(f64::INFINITY);
+    for l in 0..s {
+        let i = rows[l];
+        if ws.c_vals[l] < ws.row_min[i] {
+            ws.row_min[i] = ws.c_vals[l];
+        }
+    }
+    ws.col_min.fill(f64::INFINITY);
+    for l in 0..s {
+        let v = ws.c_vals[l] - ws.row_min[rows[l]];
+        let j = cols[l];
+        if v < ws.col_min[j] {
+            ws.col_min[j] = v;
+        }
+    }
+    for l in 0..s {
+        ws.c_red[l] = ws.c_vals[l] - ws.row_min[rows[l]] - ws.col_min[cols[l]];
+    }
+}
+
+/// The balanced inner solver shared by the [`Balanced`] and [`Fused`]
+/// strategies: H fixed sparse-Sinkhorn sweeps from `ws.k_vals` into
+/// `ws.t_next`, entirely in workspace buffers.
+fn balanced_inner(eng: &Engine, ws: &mut Workspace, inner_iters: usize) {
+    sparse_sinkhorn_fixed(
+        eng.a,
+        eng.b,
+        &ws.csr,
+        &ws.k_vals,
+        inner_iters,
+        &mut ws.u,
+        &mut ws.v,
+        &mut ws.kv,
+        &mut ws.ktu,
+        &mut ws.t_next,
+    );
+}
+
+/// Balanced marginals — Algorithm 2 (Spar-GW).
+pub struct Balanced {
+    /// Regularization weight ε.
+    pub epsilon: f64,
+    /// Proximal or entropic kernel.
+    pub reg: Regularizer,
+    /// Inner Sinkhorn iterations H.
+    pub inner_iters: usize,
+}
+
+impl Marginals for Balanced {
+    fn init(&self, a_i: f64, b_j: f64) -> f64 {
+        a_i * b_j
+    }
+
+    fn build_kernel(&mut self, eng: &Engine, ws: &mut Workspace) {
+        eng.ctx.cost_values_into_threaded(&ws.t, &mut ws.c_vals, eng.threads);
+        stabilize(eng, ws);
+        let s = ws.t.len();
+        // Paper: "replace its 0's at S with ∞'s" — a zero cost entry means
+        // no sampled mass informed it; exp(−∞/ε) = 0 removes it from the
+        // kernel for this round rather than giving it the maximal weight.
+        match self.reg {
+            Regularizer::Proximal => {
+                for l in 0..s {
+                    ws.k_vals[l] = if ws.c_vals[l] == 0.0 && ws.t[l] == 0.0 {
+                        0.0
+                    } else {
+                        (-ws.c_red[l] / self.epsilon).exp() * ws.t[l] * ws.inv_w[l]
+                    };
+                }
+            }
+            Regularizer::Entropy => {
+                for l in 0..s {
+                    ws.k_vals[l] = (-ws.c_red[l] / self.epsilon).exp() * ws.inv_w[l];
+                }
+            }
+        }
+    }
+
+    fn inner(&mut self, eng: &Engine, ws: &mut Workspace) {
+        balanced_inner(eng, ws, self.inner_iters);
+    }
+
+    fn accept(&mut self, _eng: &Engine, ws: &mut Workspace) -> bool {
+        // Degenerate kernel (e.g. a severely under-informative sample
+        // set): keep the last good plan instead of propagating NaNs.
+        ws.t_next.iter().all(|v| v.is_finite())
+    }
+
+    fn value(&self, eng: &Engine, ws: &mut Workspace) -> f64 {
+        eng.ctx.energy_with(&ws.t, &mut ws.c_vals)
+    }
+}
+
+/// Fused marginals — Algorithm 4 (Spar-FGW): the balanced kernel over the
+/// mixed cost `α·C̃(T̃) + (1−α)·M̃`, objective `α·ĜW + (1−α)·⟨M̃, T̃⟩`.
+pub struct Fused<'m> {
+    /// Regularization weight ε.
+    pub epsilon: f64,
+    /// Proximal or entropic kernel.
+    pub reg: Regularizer,
+    /// Inner Sinkhorn iterations H.
+    pub inner_iters: usize,
+    /// Structure/feature trade-off α.
+    pub alpha: f64,
+    /// Feature distances M̃ at the sampled positions (entry order).
+    pub feat_vals: &'m [f64],
+}
+
+impl Marginals for Fused<'_> {
+    fn init(&self, a_i: f64, b_j: f64) -> f64 {
+        a_i * b_j
+    }
+
+    fn build_kernel(&mut self, eng: &Engine, ws: &mut Workspace) {
+        eng.ctx.cost_values_into_threaded(&ws.t, &mut ws.c_vals, eng.threads);
+        let s = ws.t.len();
+        for l in 0..s {
+            ws.c_vals[l] = self.alpha * ws.c_vals[l] + (1.0 - self.alpha) * self.feat_vals[l];
+        }
+        stabilize(eng, ws);
+        for l in 0..s {
+            let e = (-ws.c_red[l] / self.epsilon).exp();
+            ws.k_vals[l] = match self.reg {
+                Regularizer::Proximal => e * ws.t[l] * ws.inv_w[l],
+                Regularizer::Entropy => e * ws.inv_w[l],
+            };
+        }
+    }
+
+    fn inner(&mut self, eng: &Engine, ws: &mut Workspace) {
+        balanced_inner(eng, ws, self.inner_iters);
+    }
+
+    fn value(&self, eng: &Engine, ws: &mut Workspace) -> f64 {
+        let gw_term = eng.ctx.energy_with(&ws.t, &mut ws.c_vals);
+        let w_term: f64 = self.feat_vals.iter().zip(&ws.t).map(|(m, t)| m * t).sum();
+        self.alpha * gw_term + (1.0 - self.alpha) * w_term
+    }
+}
+
+/// Unbalanced marginals — Algorithm 3 (Spar-UGW): mass-dependent ε̄/λ̄, the
+/// scalar `E(T̃)` cost shift, the λ̄/(λ̄+ε̄)-exponent inner solver, the mass
+/// rescaling step, and the KL⊗-penalized objective.
+pub struct Unbalanced {
+    /// Marginal relaxation weight λ.
+    pub lambda: f64,
+    /// Regularization weight ε.
+    pub epsilon: f64,
+    /// Inner unbalanced-Sinkhorn iterations H.
+    pub inner_iters: usize,
+    /// Initial-plan normalizer 1/√(m(a)·m(b)).
+    norm0: f64,
+    /// Plan mass at the top of the current iteration.
+    mass: f64,
+    /// ε̄ = ε·mass for the current iteration.
+    eps_bar: f64,
+    /// λ̄ = λ·mass for the current iteration.
+    lam_bar: f64,
+}
+
+impl Unbalanced {
+    pub fn new(lambda: f64, epsilon: f64, inner_iters: usize, a: &[f64], b: &[f64]) -> Self {
+        let ma: f64 = a.iter().sum();
+        let mb: f64 = b.iter().sum();
+        Unbalanced {
+            lambda,
+            epsilon,
+            inner_iters,
+            norm0: 1.0 / (ma * mb).sqrt(),
+            mass: 0.0,
+            eps_bar: 0.0,
+            lam_bar: 0.0,
+        }
+    }
+}
+
+impl Marginals for Unbalanced {
+    fn init(&self, a_i: f64, b_j: f64) -> f64 {
+        a_i * b_j * self.norm0
+    }
+
+    fn begin_iter(&mut self, _eng: &Engine, ws: &mut Workspace) -> bool {
+        let mass: f64 = ws.t.iter().sum();
+        if mass <= 0.0 || !mass.is_finite() {
+            return false;
+        }
+        self.mass = mass;
+        self.eps_bar = self.epsilon * mass;
+        self.lam_bar = self.lambda * mass;
+        true
+    }
+
+    fn build_kernel(&mut self, eng: &Engine, ws: &mut Workspace) {
+        // Step 8a: sparse unbalanced cost = sparse product + E(T̃) shift.
+        eng.ctx.cost_values_into_threaded(&ws.t, &mut ws.c_vals, eng.threads);
+        ws.csr.row_sums_into(&ws.t, &mut ws.row_sums);
+        ws.csr.col_sums_into(&ws.t, &mut ws.col_sums);
+        let shift =
+            unbalanced_cost_shift(&ws.row_sums, &ws.col_sums, eng.a, eng.b, self.lambda);
+        // Step 8b: K̃ = exp(−C̃_un/ε̄) ⊙ T̃ ⊘ (sP).
+        let s = ws.t.len();
+        for l in 0..s {
+            ws.k_vals[l] =
+                (-(ws.c_vals[l] + shift) / self.eps_bar).exp() * ws.t[l] * ws.inv_w[l];
+        }
+    }
+
+    fn inner(&mut self, eng: &Engine, ws: &mut Workspace) {
+        sparse_unbalanced_sinkhorn_fixed(
+            eng.a,
+            eng.b,
+            &ws.csr,
+            &ws.k_vals,
+            self.lam_bar,
+            self.eps_bar,
+            self.inner_iters,
+            &mut ws.u,
+            &mut ws.v,
+            &mut ws.kv,
+            &mut ws.ktu,
+            &mut ws.t_next,
+        );
+    }
+
+    fn accept(&mut self, _eng: &Engine, ws: &mut Workspace) -> bool {
+        // Step 10: mass rescaling; kernel over/underflow (extreme λ/ε)
+        // keeps the last good plan.
+        let next_mass: f64 = ws.t_next.iter().sum();
+        if !next_mass.is_finite() || next_mass <= 0.0 {
+            return false;
+        }
+        let scale = (self.mass / next_mass).sqrt();
+        for x in ws.t_next.iter_mut() {
+            *x *= scale;
+        }
+        true
+    }
+
+    fn value(&self, eng: &Engine, ws: &mut Workspace) -> f64 {
+        // Step 11: ÛGW = quadratic term (on support) + λ KL⊗ penalties.
+        let quad = eng.ctx.energy_with(&ws.t, &mut ws.c_vals);
+        ws.csr.row_sums_into(&ws.t, &mut ws.row_sums);
+        ws.csr.col_sums_into(&ws.t, &mut ws.col_sums);
+        quad + self.lambda * kl_otimes(&ws.row_sums, eng.a)
+            + self.lambda * kl_otimes(&ws.col_sums, eng.b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gw::cost::GroundCost;
+    use crate::gw::sampling::GwSampler;
+    use crate::gw::spar_gw::{spar_gw_with_set, spar_gw_with_workspace, SparGwConfig};
+    use crate::gw::GwProblem;
+    use crate::linalg::Mat;
+    use crate::rng::Xoshiro256;
+    use crate::util::uniform;
+
+    fn relation(n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        let pts: Vec<[f64; 2]> = (0..n).map(|_| [rng.f64(), rng.f64()]).collect();
+        Mat::from_fn(n, n, |i, j| crate::linalg::sqdist(&pts[i], &pts[j]).sqrt())
+    }
+
+    #[test]
+    fn workspace_reuse_across_shapes_is_deterministic() {
+        // One workspace serving problems of different sizes must give the
+        // same bits as fresh workspaces.
+        let mut ws = Workspace::new();
+        for (n, seed) in [(14usize, 1u64), (22, 2), (9, 3)] {
+            let c1 = relation(n, seed);
+            let c2 = relation(n, seed + 10);
+            let a = uniform(n);
+            let p = GwProblem::new(&c1, &c2, &a, &a);
+            let mut sampler = GwSampler::new(&a, &a, 0.0);
+            let mut rng = Xoshiro256::new(seed + 20);
+            let set = sampler.sample_iid(&mut rng, 8 * n);
+            let cfg = SparGwConfig { sample_size: 8 * n, ..Default::default() };
+            let fresh = spar_gw_with_set(&p, GroundCost::L2, &cfg, &set);
+            let reused = spar_gw_with_workspace(&p, GroundCost::L2, &cfg, &set, &mut ws, 1);
+            assert_eq!(fresh.value.to_bits(), reused.value.to_bits());
+            assert_eq!(fresh.outer_iters, reused.outer_iters);
+            for (x, y) in fresh.plan.vals().iter().zip(reused.plan.vals()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_solve_bit_identical_to_serial() {
+        let n = 26;
+        let c1 = relation(n, 5);
+        let c2 = relation(n, 6);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let mut sampler = GwSampler::new(&a, &a, 0.0);
+        let mut rng = Xoshiro256::new(7);
+        let set = sampler.sample_iid(&mut rng, 16 * n);
+        let cfg = SparGwConfig { sample_size: 16 * n, ..Default::default() };
+        let mut ws1 = Workspace::new();
+        let mut ws4 = Workspace::new();
+        let serial = spar_gw_with_workspace(&p, GroundCost::L1, &cfg, &set, &mut ws1, 1);
+        let threaded = spar_gw_with_workspace(&p, GroundCost::L1, &cfg, &set, &mut ws4, 4);
+        assert_eq!(serial.value.to_bits(), threaded.value.to_bits());
+        for (x, y) in serial.plan.vals().iter().zip(threaded.plan.vals()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

@@ -9,15 +9,22 @@
 //!   EMD-GW (ε = 0, exact inner OT) baseline.
 //! * [`sampling`] — importance sparsification: the probability matrix of
 //!   Eq. (5)/(9), shrinkage (H.4), i.i.d. and Poisson subsampling.
-//! * [`spar_gw`](spar_gw()) — **Algorithm 2**, the paper's main contribution.
-//! * [`fgw`] / [`spar_fgw`] — fused GW, dense and **Algorithm 4**.
-//! * [`ugw`] / [`spar_ugw`] — unbalanced GW, dense and **Algorithm 3**.
+//! * [`core`] — **SparCore**: the one workspace-backed engine behind the
+//!   whole Spar-* family (shared outer loop + [`core::Marginals`]
+//!   strategies + zero-allocation inner loop).
+//! * [`spar_gw`](spar_gw()) — **Algorithm 2**, the paper's main
+//!   contribution (adapter over [`core`]).
+//! * [`fgw`] / [`spar_fgw`] — fused GW, dense and **Algorithm 4**
+//!   (adapter over [`core`]).
+//! * [`ugw`] / [`spar_ugw`] — unbalanced GW, dense and **Algorithm 3**
+//!   (adapter over [`core`]).
 //! * [`sagrow`], [`lr_gw`], [`sgwl`], [`anchor`] — reimplemented
 //!   comparators (Table 1 rows).
 //! * [`stationarity`] — the gap `G(T)` of §4 (theory validation).
 
 pub mod alg1;
 pub mod anchor;
+pub mod core;
 pub mod cost;
 pub mod fgw;
 pub mod lr_gw;

@@ -4,15 +4,18 @@
 //! Identical to Algorithm 2 except the sparse cost gains the feature term:
 //! `C̃_fu(T̃) = α Σ_S L̃ T̃ + (1−α) M̃` with `M̃` the feature distances at the
 //! sampled positions, and the output adds `(1−α) Σ_S M_ij T̃_ij`.
+//!
+//! Since the SparCore refactor this file is a thin adapter over
+//! [`super::core`] with the [`Fused`] marginal strategy; outputs are
+//! bit-identical to the historical standalone implementation.
 
+use super::core::{Engine, Fused, Workspace};
 use super::cost::GroundCost;
 use super::fgw::FgwProblem;
 use super::sampling::{GwSampler, SampledSet};
 use super::spar_gw::{SparGwConfig, SparGwResult};
 use super::tensor::SparseCostContext;
-use super::Regularizer;
 use crate::rng::Rng;
-use crate::sparse::Coo;
 
 /// Run Algorithm 4 on a fused GW problem.
 pub fn spar_fgw(
@@ -31,95 +34,54 @@ pub fn spar_fgw(
     spar_fgw_with_set(p, cost, cfg, &set)
 }
 
-/// Algorithm 4 with an externally supplied index set.
+/// Algorithm 4 with an externally supplied index set. Allocates a fresh
+/// [`Workspace`]; batch callers should use [`spar_fgw_with_workspace`].
 pub fn spar_fgw_with_set(
     p: &FgwProblem,
     cost: GroundCost,
     cfg: &SparGwConfig,
     set: &SampledSet,
 ) -> SparGwResult {
-    let (m, n) = (p.gw.m(), p.gw.n());
-    let s = set.len();
-    assert!(s > 0, "empty sampled set");
-    let alpha = p.alpha;
+    let mut ws = Workspace::new();
+    spar_fgw_with_workspace(p, cost, cfg, set, &mut ws, 1)
+}
 
+/// Algorithm 4 on the shared [`SparCore` engine](super::core): the
+/// [`Engine`] outer loop with the [`Fused`] marginal strategy (the fused
+/// cost `α·C̃ + (1−α)·M̃` and the `α·ĜW + (1−α)·⟨M̃,T̃⟩` objective).
+pub fn spar_fgw_with_workspace(
+    p: &FgwProblem,
+    cost: GroundCost,
+    cfg: &SparGwConfig,
+    set: &SampledSet,
+    ws: &mut Workspace,
+    threads: usize,
+) -> SparGwResult {
     let ctx = SparseCostContext::new(p.gw.cx, p.gw.cy, &set.rows, &set.cols, cost);
     // M̃: feature distances at the sampled positions.
-    let m_vals: Vec<f64> = set
+    let feat_vals: Vec<f64> = set
         .rows
         .iter()
         .zip(&set.cols)
         .map(|(&i, &j)| p.feat[(i, j)])
         .collect();
-
-    let mut t_vals: Vec<f64> = set
-        .rows
-        .iter()
-        .zip(&set.cols)
-        .map(|(&i, &j)| p.gw.a[i] * p.gw.b[j])
-        .collect();
-    let inv_w: Vec<f64> = set.weights.iter().map(|&w| 1.0 / w).collect();
-
-    let mut outer = 0;
-    let mut converged = false;
-    let mut k_vals = vec![0.0f64; s];
-    let mut c_fu = vec![0.0f64; s];
-    for _ in 0..cfg.outer_iters {
-        // Step 6a: fused sparse cost.
-        let c_gw = ctx.cost_values(&t_vals);
-        for l in 0..s {
-            c_fu[l] = alpha * c_gw[l] + (1.0 - alpha) * m_vals[l];
-        }
-        // Stabilization by pattern row/col mins (cf. spar_gw).
-        let mut row_min = vec![f64::INFINITY; m];
-        for l in 0..s {
-            let i = set.rows[l];
-            if c_fu[l] < row_min[i] {
-                row_min[i] = c_fu[l];
-            }
-        }
-        let mut col_min = vec![f64::INFINITY; n];
-        for l in 0..s {
-            let v = c_fu[l] - row_min[set.rows[l]];
-            let j = set.cols[l];
-            if v < col_min[j] {
-                col_min[j] = v;
-            }
-        }
-        // Step 6b.
-        for l in 0..s {
-            let c_red = c_fu[l] - row_min[set.rows[l]] - col_min[set.cols[l]];
-            let e = (-c_red / cfg.epsilon).exp();
-            k_vals[l] = match cfg.reg {
-                Regularizer::Proximal => e * t_vals[l] * inv_w[l],
-                Regularizer::Entropy => e * inv_w[l],
-            };
-        }
-        let k = Coo::from_triplets(m, n, &set.rows, &set.cols, &k_vals);
-        let (plan, _) = crate::ot::sparse_sinkhorn(p.gw.a, p.gw.b, &k, cfg.inner_iters, 0.0);
-        let new_vals = plan.vals().to_vec();
-        outer += 1;
-        if cfg.tol > 0.0 {
-            let mut diff = 0.0;
-            for (x, y) in new_vals.iter().zip(&t_vals) {
-                let d = x - y;
-                diff += d * d;
-            }
-            if diff.sqrt() < cfg.tol {
-                t_vals = new_vals;
-                converged = true;
-                break;
-            }
-        }
-        t_vals = new_vals;
-    }
-
-    // Step 8: F̂GW = α Σ L T̃T̃ + (1−α) Σ M T̃.
-    let gw_term = ctx.energy(&t_vals);
-    let w_term: f64 = m_vals.iter().zip(&t_vals).map(|(m, t)| m * t).sum();
-    let value = alpha * gw_term + (1.0 - alpha) * w_term;
-    let plan = Coo::from_triplets(m, n, &set.rows, &set.cols, &t_vals);
-    SparGwResult { value, plan, outer_iters: outer, converged, support: s }
+    let eng = Engine {
+        a: p.gw.a,
+        b: p.gw.b,
+        set,
+        ctx: &ctx,
+        outer_iters: cfg.outer_iters,
+        tol: cfg.tol,
+        threads,
+    };
+    let mut strategy = Fused {
+        epsilon: cfg.epsilon,
+        reg: cfg.reg,
+        inner_iters: cfg.inner_iters,
+        alpha: p.alpha,
+        feat_vals: &feat_vals,
+    };
+    eng.solve(&mut strategy, ws)
 }
 
 #[cfg(test)]

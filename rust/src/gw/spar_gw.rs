@@ -11,7 +11,13 @@
 //!    importance correction (step 6b);
 //! 4. run sparse Sinkhorn in O(Hs) (step 7);
 //! 5. output `ĜW = Σ_{S×S} L·T̃·T̃` in O(s²) (step 8).
+//!
+//! Since the SparCore refactor this file is a thin adapter: the loop body
+//! lives in [`super::core`] (shared with Spar-FGW/Spar-UGW), driven here
+//! with the [`Balanced`] marginal strategy. Outputs are bit-identical to
+//! the historical standalone implementation.
 
+use super::core::{Balanced, Engine, Workspace};
 use super::cost::GroundCost;
 use super::sampling::{GwSampler, SampledSet};
 use super::tensor::SparseCostContext;
@@ -77,107 +83,45 @@ pub fn spar_gw(p: &GwProblem, cost: GroundCost, cfg: &SparGwConfig, rng: &mut Rn
 
 /// Algorithm 2 with an externally supplied index set (used by the
 /// coordinator, which samples in Rust and feeds the PJRT artifacts, and by
-/// the Poisson-sampling theory benches).
+/// the Poisson-sampling theory benches). Allocates a fresh [`Workspace`];
+/// batch callers should use [`spar_gw_with_workspace`].
 pub fn spar_gw_with_set(
     p: &GwProblem,
     cost: GroundCost,
     cfg: &SparGwConfig,
     set: &SampledSet,
 ) -> SparGwResult {
-    let (m, n) = (p.m(), p.n());
-    let s = set.len();
-    assert!(s > 0, "empty sampled set");
+    let mut ws = Workspace::new();
+    spar_gw_with_workspace(p, cost, cfg, set, &mut ws, 1)
+}
 
+/// Algorithm 2 on the shared [`SparCore` engine](super::core): steps 4–8
+/// are the [`Engine`] outer loop with the [`Balanced`] marginal strategy.
+/// `ws` is reused across calls (the coordinator keeps one per worker);
+/// `threads` row-chunks the O(s²) cost kernel (1 = serial, results are
+/// identical for every thread count).
+pub fn spar_gw_with_workspace(
+    p: &GwProblem,
+    cost: GroundCost,
+    cfg: &SparGwConfig,
+    set: &SampledSet,
+    ws: &mut Workspace,
+    threads: usize,
+) -> SparGwResult {
     // Pre-gather the relation values touched by S (O(s²), once).
     let ctx = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, cost);
-
-    // Step 4: T̃⁽⁰⁾ = a_i b_j on S.
-    let mut t_vals: Vec<f64> = set
-        .rows
-        .iter()
-        .zip(&set.cols)
-        .map(|(&i, &j)| p.a[i] * p.b[j])
-        .collect();
-
-    let inv_w: Vec<f64> = set.weights.iter().map(|&w| 1.0 / w).collect();
-    let mut outer = 0;
-    let mut converged = false;
-    let mut k_vals = vec![0.0f64; s];
-
-    let mut c_red = vec![0.0f64; s];
-    for _r in 0..cfg.outer_iters {
-        // Step 6a: sparse cost values on S.
-        let c_vals = ctx.cost_values(&t_vals);
-        // Stabilization: balanced Sinkhorn is invariant to rank-one cost
-        // shifts C_ij ← C_ij − r_i − c_j, so reduce by per-row/col mins over
-        // the stored pattern to keep exp() in range (cf. `stabilized_kernel`).
-        let mut row_min = vec![f64::INFINITY; m];
-        for l in 0..s {
-            let i = set.rows[l];
-            if c_vals[l] < row_min[i] {
-                row_min[i] = c_vals[l];
-            }
-        }
-        let mut col_min = vec![f64::INFINITY; n];
-        for l in 0..s {
-            let v = c_vals[l] - row_min[set.rows[l]];
-            let j = set.cols[l];
-            if v < col_min[j] {
-                col_min[j] = v;
-            }
-        }
-        for l in 0..s {
-            c_red[l] = c_vals[l] - row_min[set.rows[l]] - col_min[set.cols[l]];
-        }
-        // Step 6b: sparse kernel with the importance correction.
-        // Paper: "replace its 0's at S with ∞'s" — a zero cost entry means
-        // no sampled mass informed it; exp(−∞/ε) = 0 removes it from the
-        // kernel for this round rather than giving it the maximal weight.
-        match cfg.reg {
-            Regularizer::Proximal => {
-                for l in 0..s {
-                    k_vals[l] = if c_vals[l] == 0.0 && t_vals[l] == 0.0 {
-                        0.0
-                    } else {
-                        (-c_red[l] / cfg.epsilon).exp() * t_vals[l] * inv_w[l]
-                    };
-                }
-            }
-            Regularizer::Entropy => {
-                for l in 0..s {
-                    k_vals[l] = (-c_red[l] / cfg.epsilon).exp() * inv_w[l];
-                }
-            }
-        }
-        let k = Coo::from_triplets(m, n, &set.rows, &set.cols, &k_vals);
-        // Step 7: sparse Sinkhorn, O(Hs).
-        let (plan, _) = crate::ot::sparse_sinkhorn(p.a, p.b, &k, cfg.inner_iters, 0.0);
-        let new_vals = plan.vals().to_vec();
-        if !new_vals.iter().all(|v| v.is_finite()) {
-            // Degenerate kernel (e.g. a severely under-informative sample
-            // set): keep the last good plan instead of propagating NaNs.
-            break;
-        }
-        outer += 1;
-        if cfg.tol > 0.0 {
-            let mut diff = 0.0;
-            for (x, y) in new_vals.iter().zip(&t_vals) {
-                let d = x - y;
-                diff += d * d;
-            }
-            if diff.sqrt() < cfg.tol {
-                t_vals = new_vals;
-                converged = true;
-                break;
-            }
-        }
-        t_vals = new_vals;
-    }
-
-    // Step 8: ĜW on the sampled support.
-    let value = ctx.energy(&t_vals);
-    let plan = Coo::from_triplets(m, n, &set.rows, &set.cols, &t_vals);
-    SparGwResult { value, plan, outer_iters: outer, converged, support: s }
+    let eng = Engine {
+        a: p.a,
+        b: p.b,
+        set,
+        ctx: &ctx,
+        outer_iters: cfg.outer_iters,
+        tol: cfg.tol,
+        threads,
+    };
+    let mut strategy =
+        Balanced { epsilon: cfg.epsilon, reg: cfg.reg, inner_iters: cfg.inner_iters };
+    eng.solve(&mut strategy, ws)
 }
 
 #[cfg(test)]

@@ -9,14 +9,18 @@
 //! * the cost gains the scalar shift `E(T̃)` and the inner solver is the
 //!   *unbalanced* sparse Sinkhorn with exponent λ̄/(λ̄+ε̄);
 //! * the mass-rescaling step 10.
+//!
+//! Since the SparCore refactor this file keeps only the Eq. (9) sampler
+//! and thin adapters over [`super::core`] with the [`Unbalanced`] marginal
+//! strategy; outputs are bit-identical to the historical implementation.
 
+use super::core::{Engine, Unbalanced, Workspace};
 use super::cost::GroundCost;
 use super::sampling::SampledSet;
 use super::tensor::{tensor_product, SparseCostContext};
-use super::ugw::{kl_otimes, unbalanced_cost_shift, UgwConfig};
+use super::ugw::{unbalanced_cost_shift, UgwConfig};
 use super::GwProblem;
 use crate::linalg::Mat;
-use crate::ot::sparse_unbalanced_sinkhorn;
 use crate::rng::{AliasTable, Rng};
 use crate::sparse::Coo;
 
@@ -50,8 +54,10 @@ pub struct SparUgwResult {
 }
 
 /// Build the sampling probabilities of Eq. (9) and draw the index set.
-/// Steps 2–5 of Algorithm 3.
-fn sample_ugw_set(
+/// Steps 2–5 of Algorithm 3. Public so external harnesses (tests, the
+/// theory benches) can fix the set and drive [`spar_ugw_with_set`]
+/// deterministically.
+pub fn sample_ugw_set(
     p: &GwProblem,
     cost: GroundCost,
     cfg: &SparUgwConfig,
@@ -125,75 +131,44 @@ pub fn spar_ugw(
     spar_ugw_with_set(p, cost, cfg, &set)
 }
 
-/// Algorithm 3 with an externally supplied index set.
+/// Algorithm 3 with an externally supplied index set. Allocates a fresh
+/// [`Workspace`]; batch callers should use [`spar_ugw_with_workspace`].
 pub fn spar_ugw_with_set(
     p: &GwProblem,
     cost: GroundCost,
     cfg: &SparUgwConfig,
     set: &SampledSet,
 ) -> SparUgwResult {
-    let (m, n) = (p.m(), p.n());
-    let s = set.len();
-    assert!(s > 0, "empty sampled set");
-    let lam = cfg.ugw.lambda;
-    let ma: f64 = p.a.iter().sum();
-    let mb: f64 = p.b.iter().sum();
+    let mut ws = Workspace::new();
+    spar_ugw_with_workspace(p, cost, cfg, set, &mut ws, 1)
+}
 
+/// Algorithm 3 on the shared [`SparCore` engine](super::core): steps 6–11
+/// are the [`Engine`] outer loop with the [`Unbalanced`] marginal strategy
+/// (mass-dependent ε̄/λ̄, the `E(T̃)` cost shift, the λ̄/(λ̄+ε̄) inner solver,
+/// the mass-rescaling step and the KL⊗-penalized objective).
+pub fn spar_ugw_with_workspace(
+    p: &GwProblem,
+    cost: GroundCost,
+    cfg: &SparUgwConfig,
+    set: &SampledSet,
+    ws: &mut Workspace,
+    threads: usize,
+) -> SparUgwResult {
     let ctx = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, cost);
-    // T̃⁽⁰⁾ on the pattern.
-    let norm0 = 1.0 / (ma * mb).sqrt();
-    let mut t = Coo::with_pattern(m, n, &set.rows, &set.cols);
-    for (l, (&i, &j)) in set.rows.iter().zip(&set.cols).enumerate() {
-        t.vals_mut()[l] = p.a[i] * p.b[j] * norm0;
-    }
-    let inv_w: Vec<f64> = set.weights.iter().map(|&w| 1.0 / w).collect();
-
-    let mut outer = 0;
-    let mut k_vals = vec![0.0f64; s];
-    for _ in 0..cfg.ugw.outer_iters {
-        let mass = t.sum();
-        if mass <= 0.0 || !mass.is_finite() {
-            break;
-        }
-        let eps_bar = cfg.ugw.epsilon * mass;
-        let lam_bar = lam * mass;
-        // Step 8a: sparse unbalanced cost = sparse product + E(T̃) shift.
-        let c_vals = ctx.cost_values(t.vals());
-        let shift = unbalanced_cost_shift(&t.row_sums(), &t.col_sums(), p.a, p.b, lam);
-        // Step 8b: K̃ = exp(−C̃_un/ε̄) ⊙ T̃ ⊘ (sP).
-        for l in 0..s {
-            k_vals[l] = (-(c_vals[l] + shift) / eps_bar).exp() * t.vals()[l] * inv_w[l];
-        }
-        let k = Coo::from_triplets(m, n, &set.rows, &set.cols, &k_vals);
-        // Step 9: unbalanced sparse Sinkhorn.
-        let mut t_next =
-            sparse_unbalanced_sinkhorn(p.a, p.b, &k, lam_bar, eps_bar, cfg.ugw.inner_iters);
-        // Step 10: mass rescaling.
-        let next_mass = t_next.sum();
-        if !next_mass.is_finite() || next_mass <= 0.0 {
-            // Kernel over/underflow (extreme λ/ε): keep the last good plan.
-            break;
-        }
-        let scale = (mass / next_mass).sqrt();
-        t_next.map_inplace(|v| v * scale);
-        outer += 1;
-        if cfg.ugw.tol > 0.0 {
-            let diff = t.pattern_sqdist(&t_next).sqrt();
-            t = t_next;
-            if diff < cfg.ugw.tol {
-                break;
-            }
-        } else {
-            t = t_next;
-        }
-    }
-
-    // Step 11: ÛGW = quadratic term (on support) + λ KL⊗ penalties.
-    let quad = ctx.energy(t.vals());
-    let r = t.row_sums();
-    let c = t.col_sums();
-    let value = quad + lam * kl_otimes(&r, p.a) + lam * kl_otimes(&c, p.b);
-    SparUgwResult { value, plan: t, outer_iters: outer, support: s }
+    let eng = Engine {
+        a: p.a,
+        b: p.b,
+        set,
+        ctx: &ctx,
+        outer_iters: cfg.ugw.outer_iters,
+        tol: cfg.ugw.tol,
+        threads,
+    };
+    let mut strategy =
+        Unbalanced::new(cfg.ugw.lambda, cfg.ugw.epsilon, cfg.ugw.inner_iters, p.a, p.b);
+    let r = eng.solve(&mut strategy, ws);
+    SparUgwResult { value: r.value, plan: r.plan, outer_iters: r.outer_iters, support: r.support }
 }
 
 #[cfg(test)]

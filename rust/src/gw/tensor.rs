@@ -152,16 +152,16 @@ impl SparseCostContext {
         self.s
     }
 
-    /// Sparse cost product: `c[l] = Σ_{l'} L(cx_g[l,l'], cy_g[l,l']) · t[l']`.
-    /// O(s²), the per-iteration hot loop of Algorithm 2 (step 6a) — a
-    /// single matvec over the precomputed f32 cost block, accumulated in
-    /// f64 with four independent partial sums (hides the FMA latency
-    /// chain; the loop is otherwise bandwidth-bound).
-    pub fn cost_values(&self, t_vals: &[f64]) -> Vec<f64> {
-        assert_eq!(t_vals.len(), self.s);
+    /// Fill `out[0..len]` with the cost-product rows `base..base+len`.
+    /// The shared kernel behind the serial and row-chunked parallel entry
+    /// points: four independent f64 partial sums over the f32 cost block
+    /// (hides the FMA latency chain; the loop is otherwise
+    /// bandwidth-bound). Each output row is independent, so chunking does
+    /// not change results bit-wise.
+    fn fill_cost_rows(&self, t_vals: &[f64], out: &mut [f64], base: usize) {
         let s = self.s;
-        let mut out = vec![0.0f64; s];
-        for (l, o) in out.iter_mut().enumerate() {
+        for (off, o) in out.iter_mut().enumerate() {
+            let l = base + off;
             let row = &self.l_g[l * s..(l + 1) * s];
             let mut acc = [0.0f64; 4];
             let chunks = s / 4;
@@ -178,6 +178,60 @@ impl SparseCostContext {
             }
             *o = acc[0] + acc[1] + acc[2] + acc[3] + tail;
         }
+    }
+
+    /// Sparse cost product into a caller-provided buffer:
+    /// `out[l] = Σ_{l'} L(cx_g[l,l'], cy_g[l,l']) · t[l']`.
+    /// O(s²), zero allocations — the per-iteration hot loop of
+    /// Algorithm 2 (step 6a) as driven by the [`SparCore`
+    /// engine](crate::gw::core).
+    pub fn cost_values_into(&self, t_vals: &[f64], out: &mut [f64]) {
+        assert_eq!(
+            t_vals.len(),
+            self.s,
+            "SparseCostContext::cost_values_into: t length {} != s {}",
+            t_vals.len(),
+            self.s
+        );
+        assert_eq!(
+            out.len(),
+            self.s,
+            "SparseCostContext::cost_values_into: out length {} != s {}",
+            out.len(),
+            self.s
+        );
+        self.fill_cost_rows(t_vals, out, 0);
+    }
+
+    /// Row-chunked parallel cost product (`std::thread::scope`, same
+    /// pattern as `coordinator/scheduler.rs`). Each thread owns a disjoint
+    /// chunk of output rows over the shared read-only cost block, so the
+    /// result is bit-identical to the serial path for every thread count.
+    /// Falls back to the serial path when `threads ≤ 1` or the problem is
+    /// too small to amortize thread spawn.
+    pub fn cost_values_into_threaded(&self, t_vals: &[f64], out: &mut [f64], threads: usize) {
+        assert_eq!(t_vals.len(), self.s);
+        assert_eq!(out.len(), self.s);
+        // Below ~2^14 gathered entries per thread the spawn cost dominates.
+        const MIN_ROWS_PER_THREAD: usize = 64;
+        let usable = threads.min(self.s / MIN_ROWS_PER_THREAD.max(1));
+        if usable <= 1 {
+            self.fill_cost_rows(t_vals, out, 0);
+            return;
+        }
+        let chunk = self.s.div_ceil(usable);
+        std::thread::scope(|scope| {
+            for (ci, chunk_out) in out.chunks_mut(chunk).enumerate() {
+                scope.spawn(move || self.fill_cost_rows(t_vals, chunk_out, ci * chunk));
+            }
+        });
+    }
+
+    /// Sparse cost product, allocating form (kept for one-shot callers;
+    /// the solver loop uses [`SparseCostContext::cost_values_into`]).
+    pub fn cost_values(&self, t_vals: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.s];
+        self.cost_values_into(t_vals, &mut out);
         out
     }
 
@@ -186,6 +240,13 @@ impl SparseCostContext {
     pub fn energy(&self, t_vals: &[f64]) -> f64 {
         let c = self.cost_values(t_vals);
         c.iter().zip(t_vals).map(|(ci, ti)| ci * ti).sum()
+    }
+
+    /// [`SparseCostContext::energy`] with a caller-provided scratch buffer
+    /// (length s) — allocation-free, bit-identical to the allocating form.
+    pub fn energy_with(&self, t_vals: &[f64], scratch: &mut [f64]) -> f64 {
+        self.cost_values_into(t_vals, scratch);
+        scratch.iter().zip(t_vals).map(|(ci, ti)| ci * ti).sum()
     }
 }
 
@@ -307,5 +368,27 @@ mod tests {
                 "{cost:?}: energy {e_sparse} vs {e_dense}"
             );
         }
+    }
+
+    #[test]
+    fn threaded_cost_product_bit_identical_to_serial() {
+        let n = 40;
+        let cx = random_sym(n, 11);
+        let cy = random_sym(n, 12);
+        let mut rng = Xoshiro256::new(13);
+        let s = 6 * n;
+        let idx_i: Vec<usize> = (0..s).map(|_| rng.usize(n)).collect();
+        let idx_j: Vec<usize> = (0..s).map(|_| rng.usize(n)).collect();
+        let t_vals: Vec<f64> = (0..s).map(|_| rng.f64()).collect();
+        let ctx = SparseCostContext::new(&cx, &cy, &idx_i, &idx_j, GroundCost::L1);
+        let serial = ctx.cost_values(&t_vals);
+        for threads in [1usize, 2, 3, 7] {
+            let mut out = vec![0.0; s];
+            ctx.cost_values_into_threaded(&t_vals, &mut out, threads);
+            assert_eq!(out, serial, "threads = {threads}");
+        }
+        // energy_with matches energy exactly.
+        let mut scratch = vec![0.0; s];
+        assert_eq!(ctx.energy_with(&t_vals, &mut scratch), ctx.energy(&t_vals));
     }
 }

@@ -8,13 +8,25 @@
 //!
 //! Architecture (see DESIGN.md):
 //! * **L3 (this crate)** — coordinator, native solvers, substrates.
+//!   The whole Spar-* family runs on one workspace-backed engine,
+//!   [`gw::core`] (**SparCore**): a shared outer loop parameterized by a
+//!   [`gw::core::Marginals`] strategy (balanced / fused / unbalanced),
+//!   over a CSR sparse substrate ([`sparse::Csr`]) with preallocated
+//!   buffers ([`gw::core::Workspace`]) so the inner H×R loop performs
+//!   zero heap allocations (with the default serial cost kernel);
+//!   `spar_gw`, `spar_fgw` and `spar_ugw` are thin
+//!   adapters over it, bit-identical to the historical standalone
+//!   implementations.
 //! * **L2 (`python/compile/model.py`)** — JAX iteration graphs, AOT-lowered
 //!   to HLO text in `artifacts/`.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the O(s²)
 //!   sparse-cost hot spot, lowered inside the L2 graphs.
 //!
 //! Python never runs on the request path: the `runtime` module loads the
-//! HLO artifacts via PJRT (`xla` crate) and executes them natively.
+//! HLO artifacts via PJRT and executes them natively (compiled under
+//! `--cfg spargw_pjrt`; the default offline build substitutes a
+//! manifest-aware stub and the coordinator falls back to the native
+//! solvers). The crate is dependency-free by design.
 
 pub mod bench;
 pub mod cli;

@@ -28,7 +28,7 @@ USAGE:
                   [--method spar-gw|egw|pga-gw|emd-gw|s-gwl|lr-gw|ae|sagrow|naive]
                   [--cost l1|l2|kl] [--eps 0.01] [--s 0] [--seed 0]
   spargw pairwise [--dataset synthetic|bzr|cox2|cuneiform|firstmm_db|imdb-b]
-                  [--cost l1|l2] [--workers 4] [--seed 0]
+                  [--cost l1|l2] [--workers 4] [--kernel-threads 1] [--seed 0]
                   [--artifacts artifacts]        # enable the PJRT path
   spargw cluster  [--dataset ...] [--cost l1|l2] [--gamma 1.0] [--seed 0]
   spargw datasets [--seed 0]
@@ -121,6 +121,7 @@ fn cmd_pairwise(args: &Args) {
     let cfg = PairwiseConfig {
         cost: parse_cost(args.str_or("cost", "l2")),
         workers: args.usize_or("workers", 4),
+        kernel_threads: args.usize_or("kernel-threads", 1),
         seed,
         ..Default::default()
     };
@@ -153,6 +154,7 @@ fn cmd_cluster(args: &Args) {
     let cfg = PairwiseConfig {
         cost: parse_cost(args.str_or("cost", "l2")),
         workers: args.usize_or("workers", 4),
+        kernel_threads: args.usize_or("kernel-threads", 1),
         seed,
         ..Default::default()
     };

@@ -17,5 +17,7 @@ pub mod unbalanced;
 
 pub use emd::emd;
 pub use sinkhorn::{sinkhorn, sinkhorn_log, SinkhornResult};
-pub use sparse_sinkhorn::sparse_sinkhorn;
-pub use unbalanced::{sparse_unbalanced_sinkhorn, unbalanced_sinkhorn};
+pub use sparse_sinkhorn::{sparse_sinkhorn, sparse_sinkhorn_fixed};
+pub use unbalanced::{
+    sparse_unbalanced_sinkhorn, sparse_unbalanced_sinkhorn_fixed, unbalanced_sinkhorn,
+};

@@ -2,9 +2,75 @@
 //! step 7. Each u/v sweep costs O(s) (two passes over the stored entries)
 //! instead of O(mn), which is where Spar-GW's O(Hs) inner-loop bound
 //! comes from.
+//!
+//! Two entry points: the original allocating [`sparse_sinkhorn`] over a
+//! [`Coo`] kernel, and [`sparse_sinkhorn_fixed`] — the workspace form the
+//! [`SparCore` engine](crate::gw::core) drives, which runs a fixed number
+//! of sweeps over a prebuilt [`Csr`] structure entirely in caller-provided
+//! buffers (zero heap allocations, bit-identical scaling updates).
 
-use crate::sparse::Coo;
+use crate::sparse::{Coo, Csr};
 use crate::util::safe_div;
+
+/// One balanced scaling update into `out`: `out = target ⊘ denom` with the
+/// Sinkhorn-safe conventions `0 ⊘ x := 0` and non-finite ratios (empty
+/// pattern rows/columns) zeroed. Bit-identical to `safe_div` followed by
+/// the finiteness guard in [`sparse_sinkhorn`].
+#[inline]
+fn scaling_update_into(target: &[f64], denom: &[f64], out: &mut [f64]) {
+    for ((&t, &d), o) in target.iter().zip(denom).zip(out.iter_mut()) {
+        let q = if t == 0.0 { 0.0 } else { t / d };
+        *o = if q.is_finite() { q } else { 0.0 };
+    }
+}
+
+/// Fixed-iteration sparse Sinkhorn over a prebuilt CSR structure with
+/// caller-owned buffers — the Algorithm 2 step 7 inner loop as executed by
+/// the `SparCore` engine. `k_vals` are the kernel values in entry order;
+/// `u`/`kv` are row-sized, `v`/`ktu` column-sized, `plan_vals` entry-sized.
+/// On return `plan_vals[l] = k_vals[l] · u[i_l] · v[j_l]` (the scaled
+/// plan). Performs exactly `iters` sweeps and zero heap allocations.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_sinkhorn_fixed(
+    a: &[f64],
+    b: &[f64],
+    csr: &Csr,
+    k_vals: &[f64],
+    iters: usize,
+    u: &mut [f64],
+    v: &mut [f64],
+    kv: &mut [f64],
+    ktu: &mut [f64],
+    plan_vals: &mut [f64],
+) {
+    assert_eq!(a.len(), csr.nrows(), "sparse_sinkhorn_fixed: a/nrows mismatch");
+    assert_eq!(b.len(), csr.ncols(), "sparse_sinkhorn_fixed: b/ncols mismatch");
+    u.fill(1.0);
+    v.fill(1.0);
+    for _ in 0..iters {
+        csr.matvec_into(k_vals, v, kv);
+        scaling_update_into(a, kv, u);
+        csr.matvec_t_into(k_vals, u, ktu);
+        scaling_update_into(b, ktu, v);
+    }
+    scale_plan_into(csr, k_vals, u, v, plan_vals);
+}
+
+/// `plan_vals[l] = k_vals[l] · (u[i_l] · v[j_l])` — the plan recovery of
+/// [`Coo::diag_scale_inplace`] in entry order, without mutating the kernel.
+pub(crate) fn scale_plan_into(
+    csr: &Csr,
+    k_vals: &[f64],
+    u: &[f64],
+    v: &[f64],
+    plan_vals: &mut [f64],
+) {
+    let rows = csr.entry_rows();
+    let cols = csr.entry_cols();
+    for l in 0..k_vals.len() {
+        plan_vals[l] = k_vals[l] * (u[rows[l] as usize] * v[cols[l] as usize]);
+    }
+}
 
 /// Sparse Sinkhorn: scales `k` so that `diag(u) K diag(v)` has marginals
 /// `(a, b)` *restricted to the pattern's support*. Returns the scaled plan
@@ -125,6 +191,31 @@ mod tests {
         assert_eq!(d[(2, 0)], 0.0);
         assert_eq!(d[(2, 1)], 0.0);
         assert!(d.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn fixed_variant_bit_identical_to_coo_path() {
+        use crate::rng::Xoshiro256;
+        use crate::sparse::Csr;
+        let (m, n) = (17, 13);
+        let mut rng = Xoshiro256::new(77);
+        let s = 6 * m;
+        let rows: Vec<usize> = (0..s).map(|_| rng.usize(m)).collect();
+        let cols: Vec<usize> = (0..s).map(|_| rng.usize(n)).collect();
+        let vals: Vec<f64> = (0..s).map(|_| rng.f64() + 0.01).collect();
+        let a = uniform(m);
+        let b = uniform(n);
+        let k = Coo::from_triplets(m, n, &rows, &cols, &vals);
+        let (plan, iters) = sparse_sinkhorn(&a, &b, &k, 40, 0.0);
+        let csr = Csr::from_pattern(m, n, &rows, &cols);
+        let (mut u, mut v) = (vec![0.0; m], vec![0.0; n]);
+        let (mut kv, mut ktu) = (vec![0.0; m], vec![0.0; n]);
+        let mut out = vec![0.0; s];
+        sparse_sinkhorn_fixed(&a, &b, &csr, &vals, 40, &mut u, &mut v, &mut kv, &mut ktu, &mut out);
+        assert_eq!(iters, 40);
+        for (l, (&x, &y)) in out.iter().zip(plan.vals()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "entry {l}: {x} vs {y}");
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! With exponent → 1 (λ̄ → ∞) this degenerates to balanced Sinkhorn.
 
 use crate::linalg::Mat;
-use crate::sparse::Coo;
+use crate::sparse::{Coo, Csr};
 
 #[inline]
 fn pow_update(target: &[f64], denom: &[f64], expo: f64) -> Vec<f64> {
@@ -22,6 +22,49 @@ fn pow_update(target: &[f64], denom: &[f64], expo: f64) -> Vec<f64> {
             }
         })
         .collect()
+}
+
+/// [`pow_update`] into a caller-provided buffer (identical arithmetic).
+#[inline]
+fn pow_update_into(target: &[f64], denom: &[f64], expo: f64, out: &mut [f64]) {
+    for ((&t, &d), o) in target.iter().zip(denom).zip(out.iter_mut()) {
+        *o = if t == 0.0 || d <= 0.0 || !d.is_finite() { 0.0 } else { (t / d).powf(expo) };
+    }
+}
+
+/// Fixed-iteration sparse *unbalanced* Sinkhorn over a prebuilt CSR
+/// structure with caller-owned buffers — Algorithm 3 step 9 as executed by
+/// the `SparCore` engine. Same buffer contract as
+/// [`sparse_sinkhorn_fixed`](crate::ot::sparse_sinkhorn_fixed); performs
+/// exactly `iters` sweeps with exponent λ/(λ+ε) and zero heap allocations.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_unbalanced_sinkhorn_fixed(
+    a: &[f64],
+    b: &[f64],
+    csr: &Csr,
+    k_vals: &[f64],
+    lambda: f64,
+    eps: f64,
+    iters: usize,
+    u: &mut [f64],
+    v: &mut [f64],
+    kv: &mut [f64],
+    ktu: &mut [f64],
+    plan_vals: &mut [f64],
+) {
+    assert_eq!(a.len(), csr.nrows(), "sparse_unbalanced_sinkhorn_fixed: a/nrows mismatch");
+    assert_eq!(b.len(), csr.ncols(), "sparse_unbalanced_sinkhorn_fixed: b/ncols mismatch");
+    assert!(lambda > 0.0 && eps > 0.0);
+    let expo = lambda / (lambda + eps);
+    u.fill(1.0);
+    v.fill(1.0);
+    for _ in 0..iters {
+        csr.matvec_into(k_vals, v, kv);
+        pow_update_into(a, kv, expo, u);
+        csr.matvec_t_into(k_vals, u, ktu);
+        pow_update_into(b, ktu, expo, v);
+    }
+    super::sparse_sinkhorn::scale_plan_into(csr, k_vals, u, v, plan_vals);
 }
 
 /// Dense unbalanced Sinkhorn. Returns `diag(u) K diag(v)` after `max_iter`
@@ -134,6 +177,31 @@ mod tests {
         // Stronger penalty pulls mass back toward the balanced value 1.
         let strict = unbalanced_sinkhorn(&a, &b, &k, 50.0, 0.1, 500).sum();
         assert!((strict - 1.0).abs() < (mass - 1.0).abs() + 1e-9);
+    }
+
+    #[test]
+    fn fixed_variant_bit_identical_to_coo_path() {
+        use crate::rng::Xoshiro256;
+        let (m, n) = (11, 9);
+        let mut rng = Xoshiro256::new(55);
+        let s = 5 * m;
+        let rows: Vec<usize> = (0..s).map(|_| rng.usize(m)).collect();
+        let cols: Vec<usize> = (0..s).map(|_| rng.usize(n)).collect();
+        let vals: Vec<f64> = (0..s).map(|_| rng.f64() + 0.01).collect();
+        let a: Vec<f64> = (0..m).map(|_| rng.f64() + 0.05).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.f64() + 0.05).collect();
+        let coo = Coo::from_triplets(m, n, &rows, &cols, &vals);
+        let plan = sparse_unbalanced_sinkhorn(&a, &b, &coo, 1.3, 0.2, 30);
+        let csr = Csr::from_pattern(m, n, &rows, &cols);
+        let (mut u, mut v) = (vec![0.0; m], vec![0.0; n]);
+        let (mut kv, mut ktu) = (vec![0.0; m], vec![0.0; n]);
+        let mut out = vec![0.0; s];
+        sparse_unbalanced_sinkhorn_fixed(
+            &a, &b, &csr, &vals, 1.3, 0.2, 30, &mut u, &mut v, &mut kv, &mut ktu, &mut out,
+        );
+        for (l, (&x, &y)) in out.iter().zip(plan.vals()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "entry {l}: {x} vs {y}");
+        }
     }
 
     #[test]

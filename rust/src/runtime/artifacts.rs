@@ -8,7 +8,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, format_err};
 
 use crate::gw::GroundCost;
 
@@ -72,13 +73,13 @@ impl Manifest {
             for tok in line.split_whitespace() {
                 let (k, v) = tok
                     .split_once('=')
-                    .ok_or_else(|| anyhow!("manifest line {}: bad token {tok:?}", lineno + 1))?;
+                    .ok_or_else(|| format_err!("manifest line {}: bad token {tok:?}", lineno + 1))?;
                 kv.insert(k, v);
             }
             let get = |k: &str| -> Result<&str> {
                 kv.get(k)
                     .copied()
-                    .ok_or_else(|| anyhow!("manifest line {}: missing {k}", lineno + 1))
+                    .ok_or_else(|| format_err!("manifest line {}: missing {k}", lineno + 1))
             };
             let kind = match get("kind")? {
                 "spar_gw" => ArtifactKind::SparGw,

@@ -5,16 +5,21 @@
 //! `PjRtClient::compile` → `execute`. The L2 graphs were lowered with
 //! `return_tuple=True`, so every output is a tuple (here a 2-tuple
 //! `(t_vals, gw)`).
+//!
+//! The `xla` crate is not vendored in the offline build, so the real
+//! executor is compiled only under `RUSTFLAGS="--cfg spargw_pjrt"`. The
+//! default build gets a stub [`Runtime`] with the same API that still
+//! loads the manifest and resolves buckets (so scheduling decisions and
+//! error paths stay testable) but fails execution with a clear message.
 
-use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
-
 use super::artifacts::{ArtifactSpec, Manifest};
+use crate::format_err;
 use crate::gw::sampling::SampledSet;
 use crate::gw::GroundCost;
 use crate::linalg::Mat;
+use crate::util::error::Result;
 
 /// Output of one Spar-GW artifact execution.
 pub struct SparGwOutput {
@@ -27,8 +32,10 @@ pub struct SparGwOutput {
 /// Compile-cached PJRT runtime over an artifact manifest.
 pub struct Runtime {
     manifest: Manifest,
+    #[cfg(spargw_pjrt)]
     client: xla::PjRtClient,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    #[cfg(spargw_pjrt)]
+    cache: std::collections::HashMap<String, xla::PjRtLoadedExecutable>,
     /// Executions performed (metrics).
     pub executions: usize,
     /// Compilations performed (metrics; should stay ≤ #buckets).
@@ -39,32 +46,19 @@ impl Runtime {
     /// Create a runtime over `artifacts/` (or any manifest directory).
     pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
         let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        Ok(Runtime { manifest, client, cache: HashMap::new(), executions: 0, compilations: 0 })
+        Ok(Runtime {
+            manifest,
+            #[cfg(spargw_pjrt)]
+            client: xla::PjRtClient::cpu().map_err(|e| format_err!("PJRT cpu client: {e}"))?,
+            #[cfg(spargw_pjrt)]
+            cache: std::collections::HashMap::new(),
+            executions: 0,
+            compilations: 0,
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
-    }
-
-    /// Get (compiling if needed) the executable for a spec.
-    fn executable(&mut self, spec: &ArtifactSpec) -> Result<&xla::PjRtLoadedExecutable> {
-        let key = spec.file.to_string_lossy().to_string();
-        if !self.cache.contains_key(&key) {
-            let path = self.manifest.path_of(spec);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {path:?}: {e}"))?;
-            self.compilations += 1;
-            self.cache.insert(key.clone(), exe);
-        }
-        Ok(self.cache.get(&key).unwrap())
     }
 
     /// The spar_gw bucket (padded n and baked s) that will serve a problem
@@ -73,14 +67,103 @@ impl Runtime {
         self.manifest.best_spar_gw(cost, n).map(|s| (s.n, s.s))
     }
 
+    /// Compilation-cache statistics: (compiled, cached entries, executed).
+    pub fn stats(&self) -> (usize, usize, usize) {
+        #[cfg(spargw_pjrt)]
+        let cached = self.cache.len();
+        #[cfg(not(spargw_pjrt))]
+        let cached = 0;
+        (self.compilations, cached, self.executions)
+    }
+
+    /// Resolve the bucket spec serving a Spar-GW problem of size `n`.
+    fn resolve_spar_gw(&self, cost: GroundCost, n: usize, set: &SampledSet) -> Result<ArtifactSpec> {
+        let spec = self
+            .manifest
+            .best_spar_gw(cost, n)
+            .ok_or_else(|| format_err!("no spar_gw artifact bucket ≥ {n} for {cost:?}"))?
+            .clone();
+        crate::ensure!(
+            set.len() <= spec.s,
+            "sampled set ({}) exceeds bucket budget ({})",
+            set.len(),
+            spec.s
+        );
+        Ok(spec)
+    }
+
+    /// Resolve the smallest dense-EGW bucket fitting a problem of size `n`
+    /// (shared by the stub and the real executor so routing and error
+    /// behaviour cannot drift).
+    fn resolve_egw(&self, n: usize) -> Result<ArtifactSpec> {
+        self.manifest
+            .specs
+            .iter()
+            .filter(|s| s.kind == super::ArtifactKind::Egw && s.n >= n)
+            .min_by_key(|s| s.n)
+            .cloned()
+            .ok_or_else(|| format_err!("no egw artifact bucket ≥ {n}"))
+    }
+}
+
+#[cfg(not(spargw_pjrt))]
+impl Runtime {
+    /// Stub executor: resolves the bucket (so callers get the same routing
+    /// and error behaviour as the real runtime) and then reports that the
+    /// binary was built without PJRT support.
+    pub fn run_spar_gw(
+        &mut self,
+        cost: GroundCost,
+        _cx: &Mat,
+        _cy: &Mat,
+        a: &[f64],
+        _b: &[f64],
+        set: &SampledSet,
+    ) -> Result<SparGwOutput> {
+        let _spec = self.resolve_spar_gw(cost, a.len(), set)?;
+        Err(format_err!(
+            "PJRT execution unavailable: built without `--cfg spargw_pjrt` (see DESIGN.md)"
+        ))
+    }
+
+    /// Stub dense-EGW executor (see [`Runtime::run_spar_gw`]).
+    pub fn run_egw(&mut self, _cx: &Mat, _cy: &Mat, a: &[f64], _b: &[f64]) -> Result<f64> {
+        let _spec = self.resolve_egw(a.len())?;
+        Err(format_err!(
+            "PJRT execution unavailable: built without `--cfg spargw_pjrt` (see DESIGN.md)"
+        ))
+    }
+}
+
+#[cfg(spargw_pjrt)]
+impl Runtime {
+    /// Get (compiling if needed) the executable for a spec.
+    fn executable(&mut self, spec: &ArtifactSpec) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = spec.file.to_string_lossy().to_string();
+        if !self.cache.contains_key(&key) {
+            let path = self.manifest.path_of(spec);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| format_err!("non-utf8 path"))?,
+            )
+            .map_err(|e| format_err!("parsing HLO text {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| format_err!("compiling {path:?}: {e}"))?;
+            self.compilations += 1;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
     /// Execute the Spar-GW artifact for a (padded) problem.
     ///
     /// `p`-side inputs are padded to the bucket size internally; the
     /// sampled set must have been drawn with the bucket's budget
     /// (`spec.s` entries after padding — the caller pads the set by
     /// repeating its first element with weight 1, which is harmless
-    /// because padded duplicates carry zero plan mass... see
-    /// `pad_sampled_set`).
+    /// because padded duplicates carry zero plan mass).
     pub fn run_spar_gw(
         &mut self,
         cost: GroundCost,
@@ -91,18 +174,9 @@ impl Runtime {
         set: &SampledSet,
     ) -> Result<SparGwOutput> {
         let n = a.len();
-        let spec = self
-            .manifest
-            .best_spar_gw(cost, n)
-            .ok_or_else(|| anyhow!("no spar_gw artifact bucket ≥ {n} for {cost:?}"))?
-            .clone();
+        let spec = self.resolve_spar_gw(cost, n, set)?;
         let bucket_n = spec.n;
         let bucket_s = spec.s;
-        anyhow::ensure!(
-            set.len() <= bucket_s,
-            "sampled set ({}) exceeds bucket budget ({bucket_s})",
-            set.len()
-        );
 
         // --- Marshal inputs (f32, padded to bucket shapes) ---
         let pad_mat = |m: &Mat| -> Vec<f32> {
@@ -145,10 +219,10 @@ impl Runtime {
 
         let lit_cx = xla::Literal::vec1(&pad_mat(cx))
             .reshape(&[bucket_n as i64, bucket_n as i64])
-            .map_err(|e| anyhow!("reshape cx: {e}"))?;
+            .map_err(|e| format_err!("reshape cx: {e}"))?;
         let lit_cy = xla::Literal::vec1(&pad_mat(cy))
             .reshape(&[bucket_n as i64, bucket_n as i64])
-            .map_err(|e| anyhow!("reshape cy: {e}"))?;
+            .map_err(|e| format_err!("reshape cy: {e}"))?;
         let lit_a = xla::Literal::vec1(&pad_vec(a));
         let lit_b = xla::Literal::vec1(&pad_vec(b));
         let lit_ii = xla::Literal::vec1(&idx_i);
@@ -158,33 +232,25 @@ impl Runtime {
         let exe = self.executable(&spec)?;
         let result = exe
             .execute::<xla::Literal>(&[lit_cx, lit_cy, lit_a, lit_b, lit_ii, lit_jj, lit_w])
-            .map_err(|e| anyhow!("executing spar_gw: {e}"))?;
+            .map_err(|e| format_err!("executing spar_gw: {e}"))?;
         let out = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result: {e}"))?;
-        let (t_lit, gw_lit) = out.to_tuple2().map_err(|e| anyhow!("untuple: {e}"))?;
-        let t_all: Vec<f32> = t_lit.to_vec().map_err(|e| anyhow!("t_vals: {e}"))?;
+            .map_err(|e| format_err!("fetching result: {e}"))?;
+        let (t_lit, gw_lit) = out.to_tuple2().map_err(|e| format_err!("untuple: {e}"))?;
+        let t_all: Vec<f32> = t_lit.to_vec().map_err(|e| format_err!("t_vals: {e}"))?;
         let gw: f32 = gw_lit
             .to_vec::<f32>()
-            .map_err(|e| anyhow!("gw scalar: {e}"))?
+            .map_err(|e| format_err!("gw scalar: {e}"))?
             .first()
             .copied()
-            .ok_or_else(|| anyhow!("empty gw output"))?;
+            .ok_or_else(|| format_err!("empty gw output"))?;
         self.executions += 1;
         Ok(SparGwOutput { t_vals: t_all[..set.len()].to_vec(), gw: gw as f64 })
     }
 
     /// Execute the dense EGW artifact (l2 cost) for a (padded) problem.
     pub fn run_egw(&mut self, cx: &Mat, cy: &Mat, a: &[f64], b: &[f64]) -> Result<f64> {
-        let n = a.len();
-        let spec = self
-            .manifest
-            .specs
-            .iter()
-            .filter(|s| s.kind == super::ArtifactKind::Egw && s.n >= n)
-            .min_by_key(|s| s.n)
-            .ok_or_else(|| anyhow!("no egw artifact bucket ≥ {n}"))?
-            .clone();
+        let spec = self.resolve_egw(a.len())?;
         let bn = spec.n;
         let pad_mat = |m: &Mat| -> Vec<f32> {
             let mut out = vec![0f32; bn * bn];
@@ -204,32 +270,27 @@ impl Runtime {
         };
         let lit_cx = xla::Literal::vec1(&pad_mat(cx))
             .reshape(&[bn as i64, bn as i64])
-            .map_err(|e| anyhow!("reshape: {e}"))?;
+            .map_err(|e| format_err!("reshape: {e}"))?;
         let lit_cy = xla::Literal::vec1(&pad_mat(cy))
             .reshape(&[bn as i64, bn as i64])
-            .map_err(|e| anyhow!("reshape: {e}"))?;
+            .map_err(|e| format_err!("reshape: {e}"))?;
         let lit_a = xla::Literal::vec1(&pad_vec(a));
         let lit_b = xla::Literal::vec1(&pad_vec(b));
         let exe = self.executable(&spec)?;
         let result = exe
             .execute::<xla::Literal>(&[lit_cx, lit_cy, lit_a, lit_b])
-            .map_err(|e| anyhow!("executing egw: {e}"))?;
+            .map_err(|e| format_err!("executing egw: {e}"))?;
         let out = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e}"))?;
-        let (_t, gw_lit) = out.to_tuple2().map_err(|e| anyhow!("untuple: {e}"))?;
+            .map_err(|e| format_err!("fetch: {e}"))?;
+        let (_t, gw_lit) = out.to_tuple2().map_err(|e| format_err!("untuple: {e}"))?;
         let gw: f32 = gw_lit
             .to_vec::<f32>()
-            .map_err(|e| anyhow!("gw: {e}"))?
+            .map_err(|e| format_err!("gw: {e}"))?
             .first()
             .copied()
-            .ok_or_else(|| anyhow!("empty gw output"))?;
+            .ok_or_else(|| format_err!("empty gw output"))?;
         self.executions += 1;
         Ok(gw as f64)
-    }
-
-    /// Compilation-cache statistics: (compiled, cached entries, executed).
-    pub fn stats(&self) -> (usize, usize, usize) {
-        (self.compilations, self.cache.len(), self.executions)
     }
 }

@@ -88,9 +88,18 @@ impl Coo {
         self.vals.copy_from_slice(vals);
     }
 
-    /// y = A x  (sparse mat-vec, O(nnz)).
+    /// y = A x  (sparse mat-vec, O(nnz)). Panics (with the shapes) when
+    /// `x` is not column-compatible — a mis-sized input would otherwise
+    /// read wrong data or die deep inside the loop on an opaque index.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.ncols);
+        assert_eq!(
+            x.len(),
+            self.ncols,
+            "Coo::matvec: x length {} incompatible with {}×{} matrix (need ncols)",
+            x.len(),
+            self.nrows,
+            self.ncols
+        );
         let mut y = vec![0.0; self.nrows];
         for k in 0..self.vals.len() {
             y[self.rows[k] as usize] += self.vals[k] * x[self.cols[k] as usize];
@@ -98,9 +107,18 @@ impl Coo {
         y
     }
 
-    /// y = Aᵀ x  (O(nnz)).
+    /// y = Aᵀ x  (O(nnz)). Panics (with the shapes) when `x` is not
+    /// row-compatible — the transposed use is where silently swapped
+    /// dimensions used to slip through on square-ish problems.
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.nrows);
+        assert_eq!(
+            x.len(),
+            self.nrows,
+            "Coo::matvec_t: x length {} incompatible with {}×{} matrix (need nrows)",
+            x.len(),
+            self.nrows,
+            self.ncols
+        );
         let mut y = vec![0.0; self.ncols];
         for k in 0..self.vals.len() {
             y[self.cols[k] as usize] += self.vals[k] * x[self.rows[k] as usize];
@@ -133,8 +151,20 @@ impl Coo {
 
     /// In-place `diag(u) · A · diag(v)` (the sparse Sinkhorn plan recovery).
     pub fn diag_scale_inplace(&mut self, u: &[f64], v: &[f64]) {
-        assert_eq!(u.len(), self.nrows);
-        assert_eq!(v.len(), self.ncols);
+        assert_eq!(
+            u.len(),
+            self.nrows,
+            "Coo::diag_scale_inplace: u length {} != nrows {}",
+            u.len(),
+            self.nrows
+        );
+        assert_eq!(
+            v.len(),
+            self.ncols,
+            "Coo::diag_scale_inplace: v length {} != ncols {}",
+            v.len(),
+            self.ncols
+        );
         for k in 0..self.vals.len() {
             self.vals[k] *= u[self.rows[k] as usize] * v[self.cols[k] as usize];
         }
@@ -245,5 +275,20 @@ mod tests {
     #[should_panic]
     fn out_of_bounds_rejected() {
         Coo::from_triplets(2, 2, &[2], &[0], &[1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "need ncols")]
+    fn matvec_rejects_mis_sized_input() {
+        // A 2×3 matrix fed a length-2 vector: must fail up front with the
+        // shapes, not by reading wrong data.
+        sample().matvec(&[1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "need nrows")]
+    fn matvec_t_rejects_transposed_input() {
+        // The classic transposed-use bug: passing a column-sized vector.
+        sample().matvec_t(&[1.0, 2.0, 3.0]);
     }
 }

@@ -1,0 +1,247 @@
+//! CSR (compressed sparse row) view of a fixed pattern, built once per
+//! solve and reused across every inner iteration.
+//!
+//! Unlike [`Coo`](super::Coo), the CSR form separates *structure* from
+//! *values*: the caller keeps values in the original entry order (the
+//! order of the sampled set `S`) and passes them to every operation, so
+//! one structure serves the kernel `K̃`, the plan `T̃` and any scratch
+//! array without copies. All operations write into caller-provided
+//! buffers — the Spar-GW inner loop performs zero heap allocations.
+//!
+//! Numerical contract: for every output coordinate, contributions are
+//! accumulated in ascending entry order — exactly the order
+//! [`Coo::matvec`](super::Coo::matvec) and friends use — so CSR and COO
+//! results are bit-identical, not merely close.
+
+/// Compressed-sparse-row pattern with entry-order value indirection.
+#[derive(Clone, Debug, Default)]
+pub struct Csr {
+    nrows: usize,
+    ncols: usize,
+    /// Row start offsets into `slot_col`/`slot_src`; length `nrows + 1`.
+    row_ptr: Vec<u32>,
+    /// Column index per CSR slot.
+    slot_col: Vec<u32>,
+    /// Original entry index per CSR slot (values stay in entry order).
+    slot_src: Vec<u32>,
+    /// Row index per *entry* (original order) — for transposed scatter.
+    rows_e: Vec<u32>,
+    /// Column index per *entry* (original order).
+    cols_e: Vec<u32>,
+    /// Fill cursor scratch for `rebuild` (kept to avoid per-rebuild
+    /// allocation when the structure is reused across solves).
+    cursor: Vec<u32>,
+}
+
+impl Csr {
+    /// Empty structure; populate with [`Csr::rebuild`].
+    pub fn new() -> Self {
+        Csr::default()
+    }
+
+    /// Build from a pattern (convenience over `new` + `rebuild`).
+    pub fn from_pattern(nrows: usize, ncols: usize, rows: &[usize], cols: &[usize]) -> Self {
+        let mut c = Csr::new();
+        c.rebuild(nrows, ncols, rows, cols);
+        c
+    }
+
+    /// Rebuild the structure for a new pattern, reusing buffer capacity.
+    /// O(nnz + nrows); the per-pair cost of workspace reuse.
+    pub fn rebuild(&mut self, nrows: usize, ncols: usize, rows: &[usize], cols: &[usize]) {
+        assert_eq!(
+            rows.len(),
+            cols.len(),
+            "Csr::rebuild: rows/cols length mismatch ({} vs {})",
+            rows.len(),
+            cols.len()
+        );
+        let nnz = rows.len();
+        for (&r, &c) in rows.iter().zip(cols) {
+            assert!(
+                r < nrows && c < ncols,
+                "Csr::rebuild: index ({r},{c}) out of bounds for {nrows}×{ncols}"
+            );
+        }
+        self.nrows = nrows;
+        self.ncols = ncols;
+
+        self.rows_e.clear();
+        self.rows_e.extend(rows.iter().map(|&r| r as u32));
+        self.cols_e.clear();
+        self.cols_e.extend(cols.iter().map(|&c| c as u32));
+
+        // Counting sort by row; within a row, slots keep ascending entry
+        // order (the bit-identity contract).
+        self.row_ptr.clear();
+        self.row_ptr.resize(nrows + 1, 0);
+        for &r in rows {
+            self.row_ptr[r + 1] += 1;
+        }
+        for i in 0..nrows {
+            self.row_ptr[i + 1] += self.row_ptr[i];
+        }
+        self.slot_col.clear();
+        self.slot_col.resize(nnz, 0);
+        self.slot_src.clear();
+        self.slot_src.resize(nnz, 0);
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.row_ptr[..nrows]);
+        for k in 0..nnz {
+            let slot = self.cursor[rows[k]] as usize;
+            self.slot_col[slot] = cols[k] as u32;
+            self.slot_src[slot] = k as u32;
+            self.cursor[rows[k]] += 1;
+        }
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.slot_col.len()
+    }
+
+    /// Row index of each entry, in original entry order.
+    #[inline]
+    pub fn entry_rows(&self) -> &[u32] {
+        &self.rows_e
+    }
+
+    /// Column index of each entry, in original entry order.
+    #[inline]
+    pub fn entry_cols(&self) -> &[u32] {
+        &self.cols_e
+    }
+
+    #[inline]
+    fn check_vals(&self, vals: &[f64], op: &str) {
+        assert_eq!(
+            vals.len(),
+            self.nnz(),
+            "Csr::{op}: vals length {} != nnz {}",
+            vals.len(),
+            self.nnz()
+        );
+    }
+
+    /// `y = A x` where `A`'s values are `vals` in entry order. O(nnz),
+    /// allocation-free, row-local accumulation.
+    pub fn matvec_into(&self, vals: &[f64], x: &[f64], y: &mut [f64]) {
+        self.check_vals(vals, "matvec_into");
+        assert_eq!(x.len(), self.ncols, "Csr::matvec_into: x length {} != ncols {}", x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows, "Csr::matvec_into: y length {} != nrows {}", y.len(), self.nrows);
+        for i in 0..self.nrows {
+            let lo = self.row_ptr[i] as usize;
+            let hi = self.row_ptr[i + 1] as usize;
+            let mut acc = 0.0;
+            for slot in lo..hi {
+                acc += vals[self.slot_src[slot] as usize] * x[self.slot_col[slot] as usize];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// `y = Aᵀ x`. Scatter in entry order (bit-identical to COO). O(nnz).
+    pub fn matvec_t_into(&self, vals: &[f64], x: &[f64], y: &mut [f64]) {
+        self.check_vals(vals, "matvec_t_into");
+        assert_eq!(x.len(), self.nrows, "Csr::matvec_t_into: x length {} != nrows {}", x.len(), self.nrows);
+        assert_eq!(y.len(), self.ncols, "Csr::matvec_t_into: y length {} != ncols {}", y.len(), self.ncols);
+        y.fill(0.0);
+        for k in 0..vals.len() {
+            y[self.cols_e[k] as usize] += vals[k] * x[self.rows_e[k] as usize];
+        }
+    }
+
+    /// Row sums (marginal `T 1`) into `y`. Scatter in entry order.
+    pub fn row_sums_into(&self, vals: &[f64], y: &mut [f64]) {
+        self.check_vals(vals, "row_sums_into");
+        assert_eq!(y.len(), self.nrows, "Csr::row_sums_into: y length {} != nrows {}", y.len(), self.nrows);
+        y.fill(0.0);
+        for k in 0..vals.len() {
+            y[self.rows_e[k] as usize] += vals[k];
+        }
+    }
+
+    /// Column sums (marginal `Tᵀ 1`) into `y`. Scatter in entry order.
+    pub fn col_sums_into(&self, vals: &[f64], y: &mut [f64]) {
+        self.check_vals(vals, "col_sums_into");
+        assert_eq!(y.len(), self.ncols, "Csr::col_sums_into: y length {} != ncols {}", y.len(), self.ncols);
+        y.fill(0.0);
+        for k in 0..vals.len() {
+            y[self.cols_e[k] as usize] += vals[k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_dense() {
+        // [[0, 1, 0],
+        //  [2, 0, 3]]
+        let c = Csr::from_pattern(2, 3, &[0, 1, 1], &[1, 0, 2]);
+        let vals = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 2];
+        c.matvec_into(&vals, &[1.0, 10.0, 100.0], &mut y);
+        assert_eq!(y, [10.0, 302.0]);
+        let mut yt = [0.0; 3];
+        c.matvec_t_into(&vals, &[1.0, 10.0], &mut yt);
+        assert_eq!(yt, [20.0, 1.0, 30.0]);
+    }
+
+    #[test]
+    fn sums_and_rebuild_reuse() {
+        let mut c = Csr::from_pattern(2, 2, &[0, 0], &[0, 0]);
+        let mut r = [0.0; 2];
+        c.row_sums_into(&[1.5, 2.5], &mut r);
+        assert_eq!(r, [4.0, 0.0]);
+        // Rebuild with a different pattern reuses the same object.
+        c.rebuild(3, 2, &[2, 0], &[1, 0]);
+        assert_eq!(c.nrows(), 3);
+        assert_eq!(c.nnz(), 2);
+        let mut y = [0.0; 3];
+        c.matvec_into(&[5.0, 7.0], &[1.0, 2.0], &mut y);
+        assert_eq!(y, [7.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn unsorted_pattern_with_duplicates() {
+        // Entries deliberately out of row order, with a duplicate cell.
+        let rows = [1usize, 0, 1, 0];
+        let cols = [0usize, 1, 0, 0];
+        let vals = [1.0, 2.0, 4.0, 8.0];
+        let c = Csr::from_pattern(2, 2, &rows, &cols);
+        let mut y = [0.0; 2];
+        c.matvec_into(&vals, &[10.0, 100.0], &mut y);
+        // Row 0: 2*100 + 8*10; row 1: (1+4)*10.
+        assert_eq!(y, [280.0, 50.0]);
+        let mut cs = [0.0; 2];
+        c.col_sums_into(&vals, &mut cs);
+        assert_eq!(cs, [13.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_rejected() {
+        Csr::from_pattern(2, 2, &[2], &[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "x length")]
+    fn mis_sized_matvec_input_rejected() {
+        let c = Csr::from_pattern(2, 3, &[0], &[1]);
+        let mut y = [0.0; 2];
+        c.matvec_into(&[1.0], &[1.0, 2.0], &mut y);
+    }
+}

@@ -3,21 +3,73 @@
 //! Spar-GW's whole point is that the coupling matrix `T̃` and kernel matrix
 //! `K̃` live on a fixed sparsity pattern `S` of `s ≪ mn` index pairs, so the
 //! Sinkhorn inner loop and the cost products run in O(s) / O(s²) instead of
-//! O(mn) / O(m²n²). [`Coo`] is that fixed-pattern representation: parallel
-//! `(row, col, val)` arrays whose pattern is set once (the sampled `S`) and
-//! whose values are updated in place every outer iteration.
+//! O(mn) / O(m²n²). Two representations share that pattern:
+//!
+//! * [`Coo`] — parallel `(row, col, val)` arrays; the *exchange* format the
+//!   solvers return (plans) and the simplest thing to construct from a
+//!   sampled set.
+//! * [`Csr`] — compressed rows over the same pattern with values kept in
+//!   entry order, built once per solve by the [`SparCore`
+//!   engine](crate::gw::core) and reused across every inner iteration.
+//!   All its operations write into caller-provided buffers so the H×R
+//!   inner loop of Algorithm 2/3/4 performs zero heap allocations.
+//!
+//! Both accumulate per output coordinate in ascending entry order, so the
+//! two representations produce bit-identical results (tested below).
 
 mod coo;
+mod csr;
 
 pub use coo::Coo;
+pub use csr::Csr;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Xoshiro256;
 
     #[test]
     fn module_reexports() {
         let c = Coo::from_triplets(2, 2, &[0, 1], &[1, 0], &[1.0, 2.0]);
         assert_eq!(c.nnz(), 2);
+        let s = Csr::from_pattern(2, 2, &[0, 1], &[1, 0]);
+        assert_eq!(s.nnz(), 2);
+    }
+
+    /// Property test: on random rectangular patterns (unsorted, with
+    /// duplicates) CSR and COO agree *bit-for-bit* on matvec, transposed
+    /// matvec and both marginal sums.
+    #[test]
+    fn csr_coo_equivalence_property() {
+        let mut rng = Xoshiro256::new(0xC5A);
+        for trial in 0..25 {
+            let m = 1 + rng.usize(12);
+            let n = 1 + rng.usize(12);
+            let nnz = rng.usize(4 * m * n); // densities from empty-ish to >1 (duplicates)
+            let rows: Vec<usize> = (0..nnz).map(|_| rng.usize(m)).collect();
+            let cols: Vec<usize> = (0..nnz).map(|_| rng.usize(n)).collect();
+            let vals: Vec<f64> = (0..nnz).map(|_| rng.f64() * 2.0 - 1.0).collect();
+            let coo = Coo::from_triplets(m, n, &rows, &cols, &vals);
+            let csr = Csr::from_pattern(m, n, &rows, &cols);
+
+            let x: Vec<f64> = (0..n).map(|_| rng.f64() + 0.1).collect();
+            let xt: Vec<f64> = (0..m).map(|_| rng.f64() + 0.1).collect();
+
+            let mut y = vec![0.0; m];
+            csr.matvec_into(&vals, &x, &mut y);
+            assert_eq!(y, coo.matvec(&x), "matvec mismatch (trial {trial})");
+
+            let mut yt = vec![0.0; n];
+            csr.matvec_t_into(&vals, &xt, &mut yt);
+            assert_eq!(yt, coo.matvec_t(&xt), "matvec_t mismatch (trial {trial})");
+
+            let mut rs = vec![0.0; m];
+            csr.row_sums_into(&vals, &mut rs);
+            assert_eq!(rs, coo.row_sums(), "row_sums mismatch (trial {trial})");
+
+            let mut cs = vec![0.0; n];
+            csr.col_sums_into(&vals, &mut cs);
+            assert_eq!(cs, coo.col_sums(), "col_sums mismatch (trial {trial})");
+        }
     }
 }

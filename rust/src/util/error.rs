@@ -1,0 +1,166 @@
+//! Minimal error plumbing standing in for `anyhow` (unavailable offline):
+//! a string-backed [`Error`], a defaulted [`Result`] alias, a [`Context`]
+//! extension trait, and the [`format_err!`](crate::format_err) /
+//! [`bail!`](crate::bail) / [`ensure!`](crate::ensure) macros. Contexts are
+//! prepended `outer: inner` so `{e}` and `{e:#}` both show the full chain.
+
+use std::fmt;
+
+/// A string-backed error carrying the flattened context chain.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+
+    /// Prepend a context layer: `context: self`.
+    pub fn wrap(self, context: impl Into<String>) -> Self {
+        Error { msg: format!("{}: {}", context.into(), self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e:#}` (anyhow's whole-chain form) and `{e}` are equivalent here.
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::new(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::new(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+/// Library-wide result alias (error type defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+
+    /// Wrap the error with a fixed context message.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{}: {e}", f().into())))
+    }
+
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{}: {e}", msg.into())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().into()))
+    }
+
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::new(msg.into()))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from format arguments.
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::new(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::format_err!($($arg)*))
+    };
+}
+
+/// Return early with a formatted error unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{bail, ensure};
+
+    fn parse_two(s: &str) -> Result<usize> {
+        let n: usize = s.parse()?;
+        ensure!(n == 2, "expected 2, got {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_parse_errors() {
+        assert_eq!(parse_two("2").unwrap(), 2);
+        assert!(parse_two("x").is_err());
+        let e = parse_two("3").unwrap_err();
+        assert!(format!("{e:#}").contains("expected 2"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.with_context(|| "reading manifest").unwrap_err();
+        let shown = format!("{e}");
+        assert!(shown.starts_with("reading manifest:"), "{shown}");
+        assert!(shown.contains("gone"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(7u8).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f() -> Result<()> {
+            bail!("bad {}", 42);
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "bad 42");
+    }
+}

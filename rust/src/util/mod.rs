@@ -1,7 +1,8 @@
 //! Small shared utilities: vector helpers, simplex/normalization helpers,
-//! CSV emission, and wall-clock timing.
+//! error plumbing, CSV emission, and wall-clock timing.
 
 pub mod csv;
+pub mod error;
 pub mod timer;
 
 /// Normalize a non-negative vector to the probability simplex.

@@ -168,6 +168,400 @@ fn l1_and_l2_costs_rank_workload_pairs_consistently() {
     }
 }
 
+/// Golden lock for the SparCore refactor: the pre-refactor Spar-GW /
+/// Spar-FGW / Spar-UGW loops, ported verbatim (same operations in the
+/// same order) from the standalone implementations this repository
+/// shipped before the solvers became adapters over `gw::core`. The tests
+/// below assert the refactored solvers are **bit-identical** to these
+/// references on fixed seeds — value, plan entries, iteration counts and
+/// convergence flags all compared via `f64::to_bits`.
+mod golden {
+    use spargw::gw::fgw::FgwProblem;
+    use spargw::gw::sampling::SampledSet;
+    use spargw::gw::spar_gw::SparGwConfig;
+    use spargw::gw::spar_ugw::SparUgwConfig;
+    use spargw::gw::tensor::SparseCostContext;
+    use spargw::gw::ugw::{kl_otimes, unbalanced_cost_shift};
+    use spargw::gw::{GroundCost, GwProblem, Regularizer};
+    use spargw::ot::{sparse_sinkhorn, sparse_unbalanced_sinkhorn};
+    use spargw::sparse::Coo;
+
+    pub struct RefResult {
+        pub value: f64,
+        pub plan_vals: Vec<f64>,
+        pub outer_iters: usize,
+        pub converged: bool,
+    }
+
+    /// Pre-refactor Algorithm 2 (balanced Spar-GW) on a fixed set.
+    pub fn spar_gw_ref(
+        p: &GwProblem,
+        cost: GroundCost,
+        cfg: &SparGwConfig,
+        set: &SampledSet,
+    ) -> RefResult {
+        let (m, n) = (p.m(), p.n());
+        let s = set.len();
+        let ctx = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, cost);
+        let mut t_vals: Vec<f64> =
+            set.rows.iter().zip(&set.cols).map(|(&i, &j)| p.a[i] * p.b[j]).collect();
+        let inv_w: Vec<f64> = set.weights.iter().map(|&w| 1.0 / w).collect();
+        let mut outer = 0;
+        let mut converged = false;
+        let mut k_vals = vec![0.0f64; s];
+        let mut c_red = vec![0.0f64; s];
+        for _r in 0..cfg.outer_iters {
+            let c_vals = ctx.cost_values(&t_vals);
+            let mut row_min = vec![f64::INFINITY; m];
+            for l in 0..s {
+                let i = set.rows[l];
+                if c_vals[l] < row_min[i] {
+                    row_min[i] = c_vals[l];
+                }
+            }
+            let mut col_min = vec![f64::INFINITY; n];
+            for l in 0..s {
+                let v = c_vals[l] - row_min[set.rows[l]];
+                let j = set.cols[l];
+                if v < col_min[j] {
+                    col_min[j] = v;
+                }
+            }
+            for l in 0..s {
+                c_red[l] = c_vals[l] - row_min[set.rows[l]] - col_min[set.cols[l]];
+            }
+            match cfg.reg {
+                Regularizer::Proximal => {
+                    for l in 0..s {
+                        k_vals[l] = if c_vals[l] == 0.0 && t_vals[l] == 0.0 {
+                            0.0
+                        } else {
+                            (-c_red[l] / cfg.epsilon).exp() * t_vals[l] * inv_w[l]
+                        };
+                    }
+                }
+                Regularizer::Entropy => {
+                    for l in 0..s {
+                        k_vals[l] = (-c_red[l] / cfg.epsilon).exp() * inv_w[l];
+                    }
+                }
+            }
+            let k = Coo::from_triplets(m, n, &set.rows, &set.cols, &k_vals);
+            let (plan, _) = sparse_sinkhorn(p.a, p.b, &k, cfg.inner_iters, 0.0);
+            let new_vals = plan.vals().to_vec();
+            if !new_vals.iter().all(|v| v.is_finite()) {
+                break;
+            }
+            outer += 1;
+            if cfg.tol > 0.0 {
+                let mut diff = 0.0;
+                for (x, y) in new_vals.iter().zip(&t_vals) {
+                    let d = x - y;
+                    diff += d * d;
+                }
+                if diff.sqrt() < cfg.tol {
+                    t_vals = new_vals;
+                    converged = true;
+                    break;
+                }
+            }
+            t_vals = new_vals;
+        }
+        let value = ctx.energy(&t_vals);
+        RefResult { value, plan_vals: t_vals, outer_iters: outer, converged }
+    }
+
+    /// Pre-refactor Algorithm 4 (fused Spar-FGW) on a fixed set.
+    pub fn spar_fgw_ref(
+        p: &FgwProblem,
+        cost: GroundCost,
+        cfg: &SparGwConfig,
+        set: &SampledSet,
+    ) -> RefResult {
+        let (m, n) = (p.gw.m(), p.gw.n());
+        let s = set.len();
+        let alpha = p.alpha;
+        let ctx = SparseCostContext::new(p.gw.cx, p.gw.cy, &set.rows, &set.cols, cost);
+        let m_vals: Vec<f64> =
+            set.rows.iter().zip(&set.cols).map(|(&i, &j)| p.feat[(i, j)]).collect();
+        let mut t_vals: Vec<f64> =
+            set.rows.iter().zip(&set.cols).map(|(&i, &j)| p.gw.a[i] * p.gw.b[j]).collect();
+        let inv_w: Vec<f64> = set.weights.iter().map(|&w| 1.0 / w).collect();
+        let mut outer = 0;
+        let mut converged = false;
+        let mut k_vals = vec![0.0f64; s];
+        let mut c_fu = vec![0.0f64; s];
+        for _ in 0..cfg.outer_iters {
+            let c_gw = ctx.cost_values(&t_vals);
+            for l in 0..s {
+                c_fu[l] = alpha * c_gw[l] + (1.0 - alpha) * m_vals[l];
+            }
+            let mut row_min = vec![f64::INFINITY; m];
+            for l in 0..s {
+                let i = set.rows[l];
+                if c_fu[l] < row_min[i] {
+                    row_min[i] = c_fu[l];
+                }
+            }
+            let mut col_min = vec![f64::INFINITY; n];
+            for l in 0..s {
+                let v = c_fu[l] - row_min[set.rows[l]];
+                let j = set.cols[l];
+                if v < col_min[j] {
+                    col_min[j] = v;
+                }
+            }
+            for l in 0..s {
+                let c_red = c_fu[l] - row_min[set.rows[l]] - col_min[set.cols[l]];
+                let e = (-c_red / cfg.epsilon).exp();
+                k_vals[l] = match cfg.reg {
+                    Regularizer::Proximal => e * t_vals[l] * inv_w[l],
+                    Regularizer::Entropy => e * inv_w[l],
+                };
+            }
+            let k = Coo::from_triplets(m, n, &set.rows, &set.cols, &k_vals);
+            let (plan, _) = sparse_sinkhorn(p.gw.a, p.gw.b, &k, cfg.inner_iters, 0.0);
+            let new_vals = plan.vals().to_vec();
+            outer += 1;
+            if cfg.tol > 0.0 {
+                let mut diff = 0.0;
+                for (x, y) in new_vals.iter().zip(&t_vals) {
+                    let d = x - y;
+                    diff += d * d;
+                }
+                if diff.sqrt() < cfg.tol {
+                    t_vals = new_vals;
+                    converged = true;
+                    break;
+                }
+            }
+            t_vals = new_vals;
+        }
+        let gw_term = ctx.energy(&t_vals);
+        let w_term: f64 = m_vals.iter().zip(&t_vals).map(|(m, t)| m * t).sum();
+        let value = alpha * gw_term + (1.0 - alpha) * w_term;
+        RefResult { value, plan_vals: t_vals, outer_iters: outer, converged }
+    }
+
+    /// Pre-refactor Algorithm 3 (unbalanced Spar-UGW) on a fixed set.
+    pub fn spar_ugw_ref(
+        p: &GwProblem,
+        cost: GroundCost,
+        cfg: &SparUgwConfig,
+        set: &SampledSet,
+    ) -> RefResult {
+        let (m, n) = (p.m(), p.n());
+        let s = set.len();
+        let lam = cfg.ugw.lambda;
+        let ma: f64 = p.a.iter().sum();
+        let mb: f64 = p.b.iter().sum();
+        let ctx = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, cost);
+        let norm0 = 1.0 / (ma * mb).sqrt();
+        let mut t = Coo::with_pattern(m, n, &set.rows, &set.cols);
+        for (l, (&i, &j)) in set.rows.iter().zip(&set.cols).enumerate() {
+            t.vals_mut()[l] = p.a[i] * p.b[j] * norm0;
+        }
+        let inv_w: Vec<f64> = set.weights.iter().map(|&w| 1.0 / w).collect();
+        let mut outer = 0;
+        let mut k_vals = vec![0.0f64; s];
+        for _ in 0..cfg.ugw.outer_iters {
+            let mass = t.sum();
+            if mass <= 0.0 || !mass.is_finite() {
+                break;
+            }
+            let eps_bar = cfg.ugw.epsilon * mass;
+            let lam_bar = lam * mass;
+            let c_vals = ctx.cost_values(t.vals());
+            let shift = unbalanced_cost_shift(&t.row_sums(), &t.col_sums(), p.a, p.b, lam);
+            for l in 0..s {
+                k_vals[l] = (-(c_vals[l] + shift) / eps_bar).exp() * t.vals()[l] * inv_w[l];
+            }
+            let k = Coo::from_triplets(m, n, &set.rows, &set.cols, &k_vals);
+            let mut t_next =
+                sparse_unbalanced_sinkhorn(p.a, p.b, &k, lam_bar, eps_bar, cfg.ugw.inner_iters);
+            let next_mass = t_next.sum();
+            if !next_mass.is_finite() || next_mass <= 0.0 {
+                break;
+            }
+            let scale = (mass / next_mass).sqrt();
+            t_next.map_inplace(|v| v * scale);
+            outer += 1;
+            if cfg.ugw.tol > 0.0 {
+                let diff = t.pattern_sqdist(&t_next).sqrt();
+                t = t_next;
+                if diff < cfg.ugw.tol {
+                    break;
+                }
+            } else {
+                t = t_next;
+            }
+        }
+        let quad = ctx.energy(t.vals());
+        let r = t.row_sums();
+        let c = t.col_sums();
+        let value = quad + lam * kl_otimes(&r, p.a) + lam * kl_otimes(&c, p.b);
+        RefResult { value, plan_vals: t.vals().to_vec(), outer_iters: outer, converged: false }
+    }
+}
+
+fn assert_bits_eq(label: &str, new_vals: &[f64], ref_vals: &[f64]) {
+    assert_eq!(new_vals.len(), ref_vals.len(), "{label}: length mismatch");
+    for (l, (&x, &y)) in new_vals.iter().zip(ref_vals).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{label}: entry {l} differs ({x:e} vs {y:e})"
+        );
+    }
+}
+
+#[test]
+fn spar_gw_bit_identical_to_pre_refactor_reference() {
+    use spargw::gw::sampling::GwSampler;
+    use spargw::gw::spar_gw::spar_gw_with_set;
+    use spargw::gw::Regularizer;
+
+    // Sweep regularizers, costs, tolerances, shrinkage and marginal
+    // shapes; every cell must reproduce the historical trajectory bit-
+    // for-bit, including iteration counts and the convergence flag.
+    let n = 21;
+    let mut rng = Xoshiro256::new(301);
+    let inst = Workload::Moon.make(n, &mut rng);
+    let mut a_nonunif: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64).collect();
+    spargw::util::normalize(&mut a_nonunif);
+    let b = uniform(n);
+
+    let cases: Vec<(Regularizer, GroundCost, f64, f64, bool)> = vec![
+        (Regularizer::Proximal, GroundCost::L2, 1e-9, 0.0, false),
+        (Regularizer::Proximal, GroundCost::L1, 0.0, 0.0, false),
+        (Regularizer::Entropy, GroundCost::L2, 1e-9, 0.0, false),
+        (Regularizer::Entropy, GroundCost::L1, 1e-3, 0.1, false),
+        (Regularizer::Proximal, GroundCost::L2, 1e-9, 0.2, true),
+    ];
+    for (ci, (reg, cost, tol, shrink, nonunif)) in cases.into_iter().enumerate() {
+        let a: &[f64] = if nonunif { &a_nonunif } else { &inst.a };
+        let p = GwProblem::new(&inst.cx, &inst.cy, a, &b);
+        let mut srng = Xoshiro256::new(400 + ci as u64);
+        let mut sampler = GwSampler::new(a, &b, shrink);
+        let set = sampler.sample_iid(&mut srng, 12 * n);
+        let cfg = spargw::gw::spar_gw::SparGwConfig {
+            sample_size: 12 * n,
+            outer_iters: 12,
+            inner_iters: 25,
+            reg,
+            shrink,
+            tol,
+            ..Default::default()
+        };
+        let new = spar_gw_with_set(&p, cost, &cfg, &set);
+        let golden = golden::spar_gw_ref(&p, cost, &cfg, &set);
+        assert_eq!(
+            new.value.to_bits(),
+            golden.value.to_bits(),
+            "case {ci}: value {:e} vs golden {:e}",
+            new.value,
+            golden.value
+        );
+        assert_eq!(new.outer_iters, golden.outer_iters, "case {ci}: outer_iters");
+        assert_eq!(new.converged, golden.converged, "case {ci}: converged");
+        assert_bits_eq(&format!("spar_gw case {ci}"), new.plan.vals(), &golden.plan_vals);
+    }
+}
+
+#[test]
+fn spar_fgw_bit_identical_to_pre_refactor_reference() {
+    use spargw::gw::fgw::FgwProblem;
+    use spargw::gw::sampling::GwSampler;
+    use spargw::gw::spar_fgw::spar_fgw_with_set;
+    use spargw::gw::Regularizer;
+
+    let n = 18;
+    let mut rng = Xoshiro256::new(501);
+    let mut inst = Workload::Graph.make(n, &mut rng);
+    attach_features(&mut inst, &mut rng);
+    let feat = inst.feat.as_ref().unwrap();
+    let gw = inst.problem();
+
+    for (ci, (alpha, reg)) in [
+        (0.6, Regularizer::Proximal),
+        (1.0, Regularizer::Proximal),
+        (0.3, Regularizer::Entropy),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let p = FgwProblem::new(gw, feat, alpha);
+        let mut srng = Xoshiro256::new(600 + ci as u64);
+        let mut sampler = GwSampler::new(gw.a, gw.b, 0.0);
+        let set = sampler.sample_iid(&mut srng, 10 * n);
+        let cfg = spargw::gw::spar_gw::SparGwConfig {
+            sample_size: 10 * n,
+            outer_iters: 10,
+            inner_iters: 20,
+            reg,
+            ..Default::default()
+        };
+        let new = spar_fgw_with_set(&p, GroundCost::L2, &cfg, &set);
+        let golden = golden::spar_fgw_ref(&p, GroundCost::L2, &cfg, &set);
+        assert_eq!(
+            new.value.to_bits(),
+            golden.value.to_bits(),
+            "case {ci}: value {:e} vs golden {:e}",
+            new.value,
+            golden.value
+        );
+        assert_eq!(new.outer_iters, golden.outer_iters, "case {ci}: outer_iters");
+        assert_eq!(new.converged, golden.converged, "case {ci}: converged");
+        assert_bits_eq(&format!("spar_fgw case {ci}"), new.plan.vals(), &golden.plan_vals);
+    }
+}
+
+#[test]
+fn spar_ugw_bit_identical_to_pre_refactor_reference() {
+    use spargw::gw::spar_ugw::{sample_ugw_set, spar_ugw_with_set};
+
+    let n = 16;
+    let mut rng = Xoshiro256::new(701);
+    let inst = Workload::Moon.make(n, &mut rng);
+    let a = uniform(n);
+    let b_heavy: Vec<f64> = vec![2.0 / n as f64; n]; // mass 2: unbalanced
+
+    for (ci, (b, lambda, tol)) in [
+        (&a, 1.0, 1e-9),
+        (&b_heavy, 1.0, 1e-9),
+        (&a, 0.3, 0.0),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let p = GwProblem::new(&inst.cx, &inst.cy, &a, b);
+        let cfg = SparUgwConfig {
+            ugw: spargw::gw::ugw::UgwConfig {
+                lambda,
+                outer_iters: 10,
+                inner_iters: 20,
+                tol,
+                ..Default::default()
+            },
+            sample_size: 10 * n,
+            shrink: 0.1,
+        };
+        let mut srng = Xoshiro256::new(800 + ci as u64);
+        let set = sample_ugw_set(&p, GroundCost::L2, &cfg, &mut srng);
+        let new = spar_ugw_with_set(&p, GroundCost::L2, &cfg, &set);
+        let golden = golden::spar_ugw_ref(&p, GroundCost::L2, &cfg, &set);
+        assert_eq!(
+            new.value.to_bits(),
+            golden.value.to_bits(),
+            "case {ci}: value {:e} vs golden {:e}",
+            new.value,
+            golden.value
+        );
+        assert_eq!(new.outer_iters, golden.outer_iters, "case {ci}: outer_iters");
+        assert_bits_eq(&format!("spar_ugw case {ci}"), new.plan.vals(), &golden.plan_vals);
+    }
+}
+
 #[test]
 fn uniform_marginal_problem_is_symmetric() {
     // GW((Cx,a),(Cy,b)) = GW((Cy,b),(Cx,a)) for the dense solver.
