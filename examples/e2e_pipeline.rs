@@ -37,7 +37,7 @@ fn main() {
 
     // ---- Stage 1: PJRT path (AOT JAX+Pallas artifacts executed from Rust).
     let cfg = PairwiseConfig { cost: GroundCost::L2, workers: 4, seed, ..Default::default() };
-    let pjrt_res = match PairwiseGw::with_runtime(cfg, &artifact_dir) {
+    let pjrt_res = match PairwiseGw::with_runtime(cfg.clone(), &artifact_dir) {
         Ok(mut svc) => {
             let res = svc.pairwise(&ds).expect("pjrt pairwise failed");
             let (compiled, cached, execs) = svc.runtime_stats().unwrap();

@@ -16,7 +16,10 @@ use spargw::util::mean;
 
 fn main() {
     let args = Args::from_env();
-    let seed = args.u64_or("seed", 7);
+    let seed = args.u64_or("seed", 7).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
     let name = args.str_or("dataset", "synthetic").to_string();
     let cost = match args.str_or("cost", "l1") {
         "l2" => GroundCost::L2,

@@ -1,18 +1,24 @@
-//! **Table 1** — empirical time-complexity check: run each method over a
-//! geometric n-sweep, fit the log-log slope of CPU time vs n, and print
-//! it next to the complexity exponent the paper's Table 1 claims.
+//! **Table 1** — empirical time-complexity check: run each registered
+//! solver over a geometric n-sweep, fit the log-log slope of CPU time vs
+//! n, and print it next to the complexity exponent the paper's Table 1
+//! claims.
 //!
-//! Methods are run in the regime their Table-1 row assumes (decomposable
-//! ℓ2 for EGW/LR-GW/S-GWL; Spar-GW is additionally measured under the
-//! indecomposable ℓ1 cost, where its advantage is the whole point).
+//! The row list is generated from [`SolverRegistry::names`] — every
+//! engine constructible by name gets a row (in the regime its Table-1 row
+//! assumes: decomposable ℓ2 for EGW/LR-GW/S-GWL), followed by contrast
+//! rows built through the same registry: Spar-GW under the indecomposable
+//! ℓ1 cost (where its advantage is the whole point), dense EGW under ℓ1
+//! (the O(n⁴) generic-tensor path), and Spar-GW with the row-chunked
+//! threaded cost kernel.
 //!
 //! Output: the fitted table on stdout + `results/table1.csv`.
 
+use std::collections::BTreeMap;
+use std::time::Instant;
+
 use spargw::bench::workloads::{full_mode, Workload};
-use spargw::bench::{Method, RunSettings};
 use spargw::gw::core::Workspace;
-use spargw::gw::sampling::GwSampler;
-use spargw::gw::spar_gw::{spar_gw_with_workspace, SparGwConfig};
+use spargw::gw::solver::{SolverBase, SolverRegistry};
 use spargw::gw::GroundCost;
 use spargw::rng::{derive_seed, Xoshiro256};
 use spargw::util::csv::CsvWriter;
@@ -28,55 +34,109 @@ fn loglog_slope(ns: &[usize], ts: &[f64]) -> f64 {
     num / den
 }
 
+/// The complexity claim of each registry entry's Table-1 row (all rows
+/// run the decomposable ℓ2 regime; ℓ1 contrast rows are added below).
+fn paper_claim(name: &str) -> &'static str {
+    match name {
+        "spar_gw" => "n^2 + s^2, s = 16n",
+        "spar_fgw" => "n^2 + s^2 (fused; α=1 on plain GW)",
+        "spar_ugw" => "mn + s^2 (unbalanced)",
+        "egw" => "n^3 (decomposable)",
+        "pga_gw" => "n^3 (decomposable)",
+        "emd_gw" => "n^3 log n (LP inner)",
+        "sagrow" => "n^2 (s'+log n)",
+        "lr_gw" => "r(r+r)n (low-rank)",
+        "sgwl" => "n^2 log n",
+        "anchor" => "n^2 log(n^2)",
+        other => panic!("no Table-1 claim recorded for solver {other:?}"),
+    }
+}
+
+/// Time one registry-built solver over the n-sweep (Moon workload, same
+/// instance seeds for every row).
+fn sweep(
+    name: &str,
+    cost: GroundCost,
+    opts: &BTreeMap<String, String>,
+    ns: &[usize],
+    ws: &mut Workspace,
+) -> Vec<f64> {
+    let base = SolverBase { cost, ..Default::default() };
+    let solver =
+        SolverRegistry::build_with_base(name, opts, &base).expect("registry build");
+    let mut times = Vec::new();
+    for (ni, &n) in ns.iter().enumerate() {
+        let mut grng = Xoshiro256::new(derive_seed(0x7AB1, ni as u64));
+        let inst = Workload::Moon.make(n, &mut grng);
+        let p = inst.problem();
+        let mut rng = Xoshiro256::new(derive_seed(29, n as u64));
+        let t0 = Instant::now();
+        let report = solver.solve(&p, &mut rng, ws).expect("solve");
+        std::hint::black_box(report.value);
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times
+}
+
 fn main() {
     let ns: Vec<usize> =
         if full_mode() { vec![64, 128, 256, 512] } else { vec![64, 128, 256] };
     println!("Table 1: empirical scaling exponents (n in {ns:?}, Moon workload)\n");
     println!(
-        "{:<10} {:<5} {:>10} {:>22}   {}",
-        "method", "cost", "slope", "time/n (s)", "paper claim"
+        "{:<12} {:<5} {:>10} {:>22}   {}",
+        "solver", "cost", "slope", "time/n (s)", "paper claim"
     );
 
-    let rows: Vec<(Method, GroundCost, &str)> = vec![
-        (Method::Egw, GroundCost::L2, "n^3 (decomposable)"),
-        (Method::PgaGw, GroundCost::L2, "n^3 (decomposable)"),
-        (Method::EmdGw, GroundCost::L2, "n^3 log n (LP inner)"),
-        (Method::Sgwl, GroundCost::L2, "n^2 log n"),
-        (Method::LrGw, GroundCost::L2, "r(r+r)n (low-rank)"),
-        (Method::Anchor, GroundCost::L2, "n^2 log(n^2)"),
-        (Method::Sagrow, GroundCost::L2, "n^2 (s'+log n)"),
-        (Method::SparGw, GroundCost::L2, "n^2 + s^2, s = 16n"),
-        (Method::SparGw, GroundCost::L1, "n^2 + s^2 (arbitrary L)"),
-        (Method::Egw, GroundCost::L1, "n^4 (no decomposition)"),
-    ];
+    // Registry rows + ℓ1/threaded contrast rows, all built by name.
+    let no_opts = BTreeMap::new();
+    let threaded: BTreeMap<String, String> =
+        [("threads".to_string(), "4".to_string())].into_iter().collect();
+    let mut rows: Vec<(&str, GroundCost, &BTreeMap<String, String>, &str, String)> =
+        Vec::new();
+    for &name in SolverRegistry::names() {
+        rows.push((name, GroundCost::L2, &no_opts, paper_claim(name), name.to_string()));
+    }
+    rows.push((
+        "spar_gw",
+        GroundCost::L1,
+        &no_opts,
+        "n^2 + s^2 (arbitrary L)",
+        "spar_gw".to_string(),
+    ));
+    rows.push((
+        "egw",
+        GroundCost::L1,
+        &no_opts,
+        "n^4 (no decomposition)",
+        "egw".to_string(),
+    ));
+    rows.push((
+        "spar_gw",
+        GroundCost::L1,
+        &threaded,
+        "n^2 + s^2/t (row-chunked)",
+        "spar_gw-t4".to_string(),
+    ));
 
     let mut csv =
         CsvWriter::create("results/table1.csv", &["method", "cost", "n", "seconds", "slope"])
             .expect("csv");
+    let mut ws = Workspace::new();
 
-    for (method, cost, claim) in rows {
+    for (name, cost, opts, claim, label) in rows {
         // The generic-tensor dense path is O(n^4): cap its sweep so the
         // bench terminates (slope fits on the smaller prefix).
-        let ns_m: Vec<usize> = if method == Method::Egw && cost == GroundCost::L1 {
+        let ns_m: Vec<usize> = if name == "egw" && cost == GroundCost::L1 {
             ns.iter().copied().filter(|&n| n <= 128).collect()
         } else {
             ns.clone()
         };
-        let mut times = Vec::new();
-        for (ni, &n) in ns_m.iter().enumerate() {
-            let mut grng = Xoshiro256::new(derive_seed(0x7AB1, ni as u64));
-            let inst = Workload::Moon.make(n, &mut grng);
-            let p = inst.problem();
-            let st = RunSettings::default();
-            let mut rng = Xoshiro256::new(derive_seed(29, n as u64));
-            let out = method.run(&p, None, cost, &st, &mut rng).unwrap();
-            times.push(out.seconds);
-        }
+        let times = sweep(name, cost, opts, &ns_m, &mut ws);
         let slope = loglog_slope(&ns_m, &times);
         let times_str: Vec<String> = times.iter().map(|t| format!("{t:.3}")).collect();
         println!(
-            "{:<10} {:<5} {:>10.2} {:>22}   {}",
-            method.name(),
+            "{:<12} {:<5} {:>10.2} {:>22}   {}",
+            label,
             cost.name(),
             slope,
             times_str.join("/"),
@@ -84,7 +144,7 @@ fn main() {
         );
         for (i, &n) in ns_m.iter().enumerate() {
             csv.row(&[
-                method.name().into(),
+                label.clone(),
                 cost.name().into(),
                 n.to_string(),
                 format!("{:.6e}", times[i]),
@@ -92,47 +152,6 @@ fn main() {
             ])
             .unwrap();
         }
-    }
-    // Extra row (not a paper column): Spar-GW with the SparCore engine's
-    // row-chunked cost kernel and a reused workspace — the coordinator's
-    // few-large-pairs configuration. Same estimates as the serial row
-    // (threading is bit-transparent), lower wall time once s² dominates.
-    let threads = 4;
-    let mut ws = Workspace::new();
-    let mut times = Vec::new();
-    for (ni, &n) in ns.iter().enumerate() {
-        let mut grng = Xoshiro256::new(derive_seed(0x7AB1, ni as u64));
-        let inst = Workload::Moon.make(n, &mut grng);
-        let p = inst.problem();
-        let mut rng = Xoshiro256::new(derive_seed(29, n as u64));
-        let mut sampler = GwSampler::new(p.a, p.b, 0.0);
-        let set = sampler.sample_iid(&mut rng, 16 * n);
-        let cfg = SparGwConfig { sample_size: 16 * n, ..Default::default() };
-        let t0 = std::time::Instant::now();
-        let out = spar_gw_with_workspace(&p, GroundCost::L1, &cfg, &set, &mut ws, threads);
-        let secs = t0.elapsed().as_secs_f64();
-        std::hint::black_box(out.value);
-        times.push(secs);
-    }
-    let slope = loglog_slope(&ns, &times);
-    let times_str: Vec<String> = times.iter().map(|t| format!("{t:.3}")).collect();
-    println!(
-        "{:<10} {:<5} {:>10.2} {:>22}   {}",
-        format!("Spar-GW×{threads}"),
-        "l1",
-        slope,
-        times_str.join("/"),
-        "n^2 + s^2/t (row-chunked)"
-    );
-    for (i, &n) in ns.iter().enumerate() {
-        csv.row(&[
-            format!("Spar-GW-t{threads}"),
-            "l1".into(),
-            n.to_string(),
-            format!("{:.6e}", times[i]),
-            format!("{slope:.3}"),
-        ])
-        .unwrap();
     }
 
     csv.flush().unwrap();

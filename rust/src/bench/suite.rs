@@ -1,18 +1,22 @@
 //! A uniform dispatcher over every solver the paper evaluates, so the
 //! benches, the CLI and the pairwise tables can iterate "for each method"
 //! without duplicating per-solver glue.
+//!
+//! Since the solver-interface refactor, [`Method::run`] is a thin veneer
+//! over [`SolverRegistry`]: each method maps to its registry name
+//! ([`Method::registry_name`]), [`RunSettings`] seeds the
+//! [`SolverBase`] defaults, and the dispatch goes through the
+//! [`GwSolver`](crate::gw::solver::GwSolver) trait. Only the naive
+//! baseline (a closed-form energy, not an iterative engine) stays inline.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-use crate::gw::anchor::{anchor_energy, AnchorConfig};
-use crate::gw::fgw::{egw_fgw, emd_fgw, naive_fgw, pga_fgw, FgwProblem};
-use crate::gw::lr_gw::{lr_gw, LrGwConfig};
-use crate::gw::sagrow::{matched_s_prime, sagrow, sagrow_fgw, SagrowConfig};
-use crate::gw::sgwl::{sgwl, SgwlConfig};
-use crate::gw::spar_fgw::spar_fgw;
-use crate::gw::spar_gw::{spar_gw, SparGwConfig};
+use crate::gw::core::Workspace;
+use crate::gw::fgw::{naive_fgw, FgwProblem};
+use crate::gw::solver::{SolverBase, SolverRegistry};
 use crate::gw::tensor::gw_energy;
-use crate::gw::{egw, emd_gw, pga_gw, Alg1Config, GroundCost, GwProblem, Regularizer};
+use crate::gw::{GroundCost, GwProblem, Regularizer};
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -80,6 +84,22 @@ impl Method {
             Method::Anchor => "AE",
             Method::Sagrow => "SaGroW",
             Method::SparGw => "Spar-GW",
+        }
+    }
+
+    /// The [`SolverRegistry`] name this method dispatches to (`None` for
+    /// the naive baseline, which is a closed-form energy, not an engine).
+    pub fn registry_name(self) -> Option<&'static str> {
+        match self {
+            Method::Naive => None,
+            Method::Egw => Some("egw"),
+            Method::PgaGw => Some("pga_gw"),
+            Method::EmdGw => Some("emd_gw"),
+            Method::Sgwl => Some("sgwl"),
+            Method::LrGw => Some("lr_gw"),
+            Method::Anchor => Some("anchor"),
+            Method::Sagrow => Some("sagrow"),
+            Method::SparGw => Some("spar_gw"),
         }
     }
 
@@ -159,36 +179,17 @@ impl Default for RunSettings {
 }
 
 impl RunSettings {
-    fn alg1(&self) -> Alg1Config {
-        Alg1Config {
-            epsilon: self.epsilon,
-            outer_iters: self.outer_iters,
-            inner_iters: self.inner_iters,
-            tol: 1e-9,
-        }
-    }
-
-    fn spar(&self) -> SparGwConfig {
-        SparGwConfig {
+    /// The [`SolverBase`] these settings seed (registry construction).
+    pub fn solver_base(&self, cost: GroundCost) -> SolverBase {
+        SolverBase {
+            cost,
             epsilon: self.epsilon,
             sample_size: self.sample_size,
             outer_iters: self.outer_iters,
             inner_iters: self.inner_iters,
             reg: self.reg,
-            shrink: 0.0,
-            tol: 1e-9,
-        }
-    }
-
-    fn sagrow_cfg(&self, m: usize, n: usize) -> SagrowConfig {
-        let s = if self.sample_size == 0 { 16 * m.max(n) } else { self.sample_size };
-        SagrowConfig {
-            epsilon: self.epsilon,
-            s_prime: matched_s_prime(s, m, n),
-            outer_iters: self.outer_iters,
-            inner_iters: self.inner_iters,
-            reg: self.reg,
-            tol: 1e-9,
+            alpha: self.alpha,
+            ..SolverBase::default()
         }
     }
 }
@@ -207,6 +208,9 @@ impl Method {
     /// feature distance matrix (`feat`, trade-off `settings.alpha`).
     /// Structure-only methods ignore `feat`. Returns `None` when the
     /// method cannot handle `cost` (LR-GW on ℓ1).
+    ///
+    /// Dispatch goes through [`SolverRegistry`] — the same engines the
+    /// coordinator and the CLI run.
     pub fn run(
         self,
         p: &GwProblem,
@@ -219,45 +223,29 @@ impl Method {
             return None;
         }
         let t0 = Instant::now();
-        let value = match (self, feat) {
-            // --- fused paths -------------------------------------------
-            (m, Some(feat)) if m.supports_fused() => {
-                let fp = FgwProblem::new(*p, feat, settings.alpha);
-                match m {
-                    Method::Naive => naive_fgw(&fp, cost),
-                    Method::Egw => egw_fgw(&fp, cost, &settings.alg1()).value,
-                    Method::PgaGw => pga_fgw(&fp, cost, &settings.alg1()).value,
-                    Method::EmdGw => emd_fgw(&fp, cost, &settings.alg1()).value,
-                    Method::Sagrow => {
-                        sagrow_fgw(&fp, cost, &settings.sagrow_cfg(p.m(), p.n()), rng).value
+        let value = match self.registry_name() {
+            // The naive baseline is a closed-form energy.
+            None => match feat {
+                Some(feat) => naive_fgw(&FgwProblem::new(*p, feat, settings.alpha), cost),
+                None => gw_energy(p.cx, p.cy, &Mat::outer(p.a, p.b), cost),
+            },
+            Some(name) => {
+                let solver = SolverRegistry::build_with_base(
+                    name,
+                    &BTreeMap::new(),
+                    &settings.solver_base(cost),
+                )
+                .ok()?;
+                let mut ws = Workspace::new();
+                let report = match feat {
+                    Some(feat) if self.supports_fused() => {
+                        let fp = FgwProblem::new(*p, feat, settings.alpha);
+                        solver.solve_fused(&fp, rng, &mut ws)
                     }
-                    Method::SparGw => spar_fgw(&fp, cost, &settings.spar(), rng).value,
-                    _ => unreachable!(),
-                }
-            }
-            // --- structure-only paths ----------------------------------
-            (Method::Naive, _) => gw_energy(p.cx, p.cy, &Mat::outer(p.a, p.b), cost),
-            (Method::Egw, _) => egw(p, cost, &settings.alg1()).value,
-            (Method::PgaGw, _) => pga_gw(p, cost, &settings.alg1()).value,
-            (Method::EmdGw, _) => emd_gw(p, cost, &settings.alg1()).value,
-            (Method::Sgwl, _) => {
-                let cfg = SgwlConfig {
-                    inner: Alg1Config {
-                        epsilon: settings.epsilon,
-                        outer_iters: settings.outer_iters.min(15),
-                        inner_iters: settings.inner_iters.min(40),
-                        tol: 1e-8,
-                    },
-                    ..Default::default()
+                    _ => solver.solve(p, rng, &mut ws),
                 };
-                sgwl(p, cost, &cfg, rng).value
+                report.ok()?.value
             }
-            (Method::LrGw, _) => lr_gw(p, cost, &LrGwConfig::default()).value,
-            (Method::Anchor, _) => anchor_energy(p, cost, &AnchorConfig::default()),
-            (Method::Sagrow, _) => {
-                sagrow(p, cost, &settings.sagrow_cfg(p.m(), p.n()), rng).value
-            }
-            (Method::SparGw, _) => spar_gw(p, cost, &settings.spar(), rng).value,
         };
         Some(MethodOutput { value, seconds: t0.elapsed().as_secs_f64() })
     }
@@ -283,6 +271,20 @@ mod tests {
         assert_eq!(Method::parse("spar-gw"), Some(Method::SparGw));
         assert_eq!(Method::parse("PGA_GW"), Some(Method::PgaGw));
         assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn methods_map_onto_registry() {
+        // Every non-naive method dispatches to a registered solver.
+        for &m in Method::all() {
+            match m.registry_name() {
+                Some(name) => assert!(
+                    SolverRegistry::names().contains(&name),
+                    "{name} not registered"
+                ),
+                None => assert_eq!(m, Method::Naive),
+            }
+        }
     }
 
     #[test]

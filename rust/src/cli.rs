@@ -1,37 +1,65 @@
 //! Minimal command-line argument parser (clap is unavailable offline).
 //!
-//! Supports `--flag`, `--key value`, and positional arguments, with typed
-//! accessors and a collected error message on malformed input.
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors returning the crate's `Result` (so bad
+//! input surfaces as a one-line error, not a panic backtrace).
+//!
+//! Boolean flags can be *registered* per parse
+//! ([`Args::parse_with_flags`]): a registered `--flag` never swallows the
+//! following token as its value, so `--pjrt run` parses as the flag
+//! `pjrt` plus the positional `run`. Unregistered `--key` tokens keep the
+//! positional grammar: `--key value` binds, `--key --other` is a flag.
+//! Options may repeat; [`Args::opt_str`] returns the last occurrence and
+//! [`Args::opt_all`] every occurrence in order (the CLI's repeatable
+//! `--solver-opt k=v`).
 
-use std::collections::BTreeMap;
+use crate::format_err;
+use crate::util::error::Result;
 
 /// Parsed arguments: positionals in order plus `--key [value]` options.
 pub struct Args {
     positional: Vec<String>,
-    options: BTreeMap<String, String>,
+    options: Vec<(String, String)>,
     flags: Vec<String>,
 }
 
 impl Args {
-    /// Parse from an iterator of raw arguments (excluding argv(0)).
-    ///
-    /// A `--key` followed by a token that does not start with `--` is an
-    /// option; a `--key` followed by another `--` token (or end of input)
-    /// is a boolean flag.
+    /// Parse from an iterator of raw arguments (excluding argv(0)) with
+    /// no registered boolean flags.
     pub fn parse(raw: impl IntoIterator<Item = String>) -> Args {
+        Args::parse_with_flags(raw, &[])
+    }
+
+    /// Parse with a set of known boolean flags. A `--key` in
+    /// `known_flags` is always a flag (the next token stays positional);
+    /// any other `--key` followed by a token that does not start with
+    /// `--` is an option; a trailing `--key` (or one followed by another
+    /// `--` token) is a boolean flag.
+    pub fn parse_with_flags(
+        raw: impl IntoIterator<Item = String>,
+        known_flags: &[&str],
+    ) -> Args {
         let raw: Vec<String> = raw.into_iter().collect();
         let mut positional = Vec::new();
-        let mut options = BTreeMap::new();
+        let mut options: Vec<(String, String)> = Vec::new();
         let mut flags = Vec::new();
         let mut i = 0;
         while i < raw.len() {
             let tok = &raw[i];
             if let Some(key) = tok.strip_prefix("--") {
-                // `--key=value` form.
+                // `--key=value` form. A registered boolean flag spelled
+                // `--flag=...` still sets the flag (the historical
+                // workaround spelling `--pjrt=1` keeps working).
                 if let Some((k, v)) = key.split_once('=') {
-                    options.insert(k.to_string(), v.to_string());
+                    if known_flags.contains(&k) {
+                        flags.push(k.to_string());
+                    } else {
+                        options.push((k.to_string(), v.to_string()));
+                    }
+                } else if known_flags.contains(&key) {
+                    flags.push(key.to_string());
                 } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
-                    options.insert(key.to_string(), raw[i + 1].clone());
+                    options.push((key.to_string(), raw[i + 1].clone()));
                     i += 1;
                 } else {
                     flags.push(key.to_string());
@@ -49,6 +77,11 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Parse from the process environment with registered boolean flags.
+    pub fn from_env_with_flags(known_flags: &[&str]) -> Args {
+        Args::parse_with_flags(std::env::args().skip(1), known_flags)
+    }
+
     pub fn positional(&self, idx: usize) -> Option<&str> {
         self.positional.get(idx).map(|s| s.as_str())
     }
@@ -61,30 +94,53 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Last value given for `--name` (repeats override).
     pub fn opt_str(&self, name: &str) -> Option<&str> {
-        self.options.get(name).map(|s| s.as_str())
+        self.options
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Every value given for `--name`, in order of appearance.
+    pub fn opt_all(&self, name: &str) -> Vec<&str> {
+        self.options
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.opt_str(name).unwrap_or(default)
     }
 
-    pub fn usize_or(&self, name: &str, default: usize) -> usize {
-        self.opt_str(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format_err!("--{name} expects an integer, got {v:?}")),
+        }
     }
 
-    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
-        self.opt_str(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format_err!("--{name} expects an integer, got {v:?}")),
+        }
     }
 
-    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
-        self.opt_str(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
-            .unwrap_or(default)
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format_err!("--{name} expects a number, got {v:?}")),
+        }
     }
 }
 
@@ -96,11 +152,15 @@ mod tests {
         Args::parse(toks.iter().map(|s| s.to_string()))
     }
 
+    fn args_with_flags(toks: &[&str], flags: &[&str]) -> Args {
+        Args::parse_with_flags(toks.iter().map(|s| s.to_string()), flags)
+    }
+
     #[test]
     fn positional_and_options() {
         let a = args(&["solve", "--n", "200", "--cost", "l1", "--verbose"]);
         assert_eq!(a.positional(0), Some("solve"));
-        assert_eq!(a.usize_or("n", 0), 200);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 200);
         assert_eq!(a.str_or("cost", "l2"), "l1");
         assert!(a.flag("verbose"));
         assert!(!a.flag("quiet"));
@@ -109,24 +169,54 @@ mod tests {
     #[test]
     fn key_equals_value() {
         let a = args(&["--eps=0.5", "--s=64"]);
-        assert_eq!(a.f64_or("eps", 0.0), 0.5);
-        assert_eq!(a.usize_or("s", 0), 64);
+        assert_eq!(a.f64_or("eps", 0.0).unwrap(), 0.5);
+        assert_eq!(a.usize_or("s", 0).unwrap(), 64);
     }
 
     #[test]
     fn defaults() {
         let a = args(&[]);
-        assert_eq!(a.usize_or("n", 7), 7);
-        assert_eq!(a.f64_or("eps", 0.25), 0.25);
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("eps", 0.25).unwrap(), 0.25);
         assert_eq!(a.str_or("cost", "l2"), "l2");
         assert_eq!(a.positional(0), None);
     }
 
     #[test]
+    fn malformed_values_error_without_panicking() {
+        let a = args(&["--n", "many", "--eps", "tiny", "--seed", "-3"]);
+        let e = a.usize_or("n", 0).unwrap_err();
+        assert!(format!("{e}").contains("expects an integer"), "{e}");
+        assert!(format!("{e}").contains("many"), "{e}");
+        assert!(a.f64_or("eps", 0.0).is_err());
+        assert!(a.u64_or("seed", 0).is_err());
+    }
+
+    #[test]
     fn flag_before_positional() {
-        let a = args(&["--pjrt", "run"]);
-        // `--pjrt run` binds "run" as the option value by the grammar; use
-        // `--pjrt` last or `--pjrt=1`. Document via this test.
-        assert_eq!(a.opt_str("pjrt"), Some("run"));
+        // A *registered* boolean flag never swallows the next token:
+        // `--pjrt run` is the flag `pjrt` plus the positional `run`.
+        let a = args_with_flags(&["--pjrt", "run"], &["pjrt"]);
+        assert!(a.flag("pjrt"));
+        assert_eq!(a.opt_str("pjrt"), None);
+        assert_eq!(a.positional(0), Some("run"));
+        // Unregistered keys keep the value-binding grammar.
+        let b = args(&["--pjrt", "run"]);
+        assert_eq!(b.opt_str("pjrt"), Some("run"));
+        assert_eq!(b.positional(0), None);
+        // The historical `--pjrt=1` workaround spelling still sets the
+        // registered flag instead of binding an option.
+        let c = args_with_flags(&["--pjrt=1", "run"], &["pjrt"]);
+        assert!(c.flag("pjrt"));
+        assert_eq!(c.opt_str("pjrt"), None);
+        assert_eq!(c.positional(0), Some("run"));
+    }
+
+    #[test]
+    fn repeated_options_collect_in_order() {
+        let a = args(&["--solver-opt", "epsilon=0.1", "--solver-opt", "outer=5"]);
+        assert_eq!(a.opt_all("solver-opt"), vec!["epsilon=0.1", "outer=5"]);
+        // Last occurrence wins for the scalar accessor.
+        assert_eq!(a.opt_str("solver-opt"), Some("outer=5"));
     }
 }

@@ -1,15 +1,27 @@
 //! Latency/throughput metrics for the pairwise service.
 
-/// Collects per-job latencies and summarizes them.
+/// Collects per-job latencies and summarizes them, tagged with the name
+/// of the engine that produced the jobs.
 #[derive(Default)]
 pub struct MetricsRecorder {
     latencies: Vec<f64>,
     total_wall: f64,
+    solver: Option<String>,
 }
 
 impl MetricsRecorder {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Tag this recorder with the registry name of the executing solver.
+    pub fn set_solver(&mut self, name: impl Into<String>) {
+        self.solver = Some(name.into());
+    }
+
+    /// Registry name of the executing solver, if one was recorded.
+    pub fn solver(&self) -> Option<&str> {
+        self.solver.as_deref()
     }
 
     pub fn record(&mut self, seconds: f64) {
@@ -51,8 +63,12 @@ impl MetricsRecorder {
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
+        let solver = match &self.solver {
+            Some(name) => format!("solver={name} "),
+            None => String::new(),
+        };
         format!(
-            "jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s",
+            "{solver}jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s",
             self.count(),
             self.mean(),
             self.percentile(0.5),
@@ -93,5 +109,15 @@ mod tests {
         assert_eq!(m.percentile(0.5), 0.0);
         assert_eq!(m.throughput(), 0.0);
         assert!(!m.summary().is_empty());
+        assert_eq!(m.solver(), None);
+    }
+
+    #[test]
+    fn solver_tag_appears_in_summary() {
+        let mut m = MetricsRecorder::new();
+        m.set_solver("sagrow");
+        m.record(0.5);
+        assert_eq!(m.solver(), Some("sagrow"));
+        assert!(m.summary().starts_with("solver=sagrow "), "{}", m.summary());
     }
 }

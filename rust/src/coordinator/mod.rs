@@ -10,9 +10,12 @@
 //! * [`scheduler`] — a work-queue worker pool (std threads; tokio is
 //!   unavailable offline) with deterministic per-job RNG streams;
 //! * [`service`] — [`service::PairwiseGw`]: dataset in, distance matrix +
-//!   latency/throughput metrics out, with per-pair execution-plan choice
-//!   (PJRT artifact vs native solver);
-//! * [`metrics`] — latency recorder (p50/p90/p99, throughput).
+//!   latency/throughput metrics out. The engine is selected per request
+//!   by registry name (`PairwiseConfig::solver`, any
+//!   [`GwSolver`](crate::gw::solver::GwSolver)), with per-pair
+//!   execution-plan choice (PJRT artifact vs native trait dispatch);
+//! * [`metrics`] — latency recorder (p50/p90/p99, throughput), tagged
+//!   with the executing solver's name.
 
 pub mod bucket;
 pub mod metrics;

@@ -1,12 +1,15 @@
 //! The pairwise-GW service: dataset → distance matrix.
 //!
-//! For every unordered pair (i, j) of dataset items the service samples
-//! the index set `S` in Rust (alias method over the Eq. (5) probabilities),
-//! chooses an execution path — the AOT/PJRT artifact when a compiled
-//! bucket fits, the native Rust solver otherwise — executes, and fills the
-//! symmetric distance matrix. Attribute-carrying datasets go through
-//! Spar-FGW with the paper's α.
+//! The executing engine is selected by name through the
+//! [`SolverRegistry`] (`PairwiseConfig::solver`, default `"spar_gw"`,
+//! options via `PairwiseConfig::solver_opts`) — the service itself never
+//! hardcodes a solver. For every unordered pair (i, j) it chooses an
+//! execution path — the AOT/PJRT artifact when a compiled bucket fits
+//! (Spar-GW only), the native trait dispatch otherwise — and fills the
+//! symmetric distance matrix. Attribute-carrying datasets go through the
+//! solver's fused objective (paper α) when the engine supports it.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use super::metrics::MetricsRecorder;
@@ -15,8 +18,8 @@ use crate::datasets::graphsets::{attribute_distance, GraphDataset};
 use crate::gw::core::Workspace;
 use crate::gw::fgw::FgwProblem;
 use crate::gw::sampling::GwSampler;
-use crate::gw::spar_fgw::spar_fgw_with_workspace;
-use crate::gw::spar_gw::{spar_gw_with_set, spar_gw_with_workspace, SparGwConfig};
+use crate::gw::solver::{GwSolver, SolverBase, SolverRegistry};
+use crate::gw::spar_gw::{spar_gw_with_set, SparGwConfig};
 use crate::gw::{GroundCost, GwProblem};
 use crate::linalg::Mat;
 use crate::rng::{derive_seed, Rng};
@@ -33,11 +36,18 @@ pub enum ExecutionPath {
 }
 
 /// Service configuration.
-#[derive(Clone, Copy)]
+#[derive(Clone)]
 pub struct PairwiseConfig {
+    /// Registry name of the engine that runs each pair (default
+    /// `"spar_gw"`; see [`SolverRegistry::names`] for the choices).
+    pub solver: String,
+    /// Solver-specific option overrides (the CLI's `--solver-opt k=v`),
+    /// applied on top of the typed fields below.
+    pub solver_opts: BTreeMap<String, String>,
     /// Ground cost for the structural term.
     pub cost: GroundCost,
-    /// Spar-GW parameters (sample_size = 0 → 16·n per pair).
+    /// Spar-GW parameters (sample_size = 0 → 16·n per pair); these seed
+    /// the [`SolverBase`] defaults for whichever engine is selected.
     pub spar: SparGwConfig,
     /// FGW trade-off α when the dataset has attributes (paper: 0.6).
     pub alpha: f64,
@@ -58,6 +68,8 @@ pub struct PairwiseConfig {
 impl Default for PairwiseConfig {
     fn default() -> Self {
         PairwiseConfig {
+            solver: "spar_gw".to_string(),
+            solver_opts: BTreeMap::new(),
             cost: GroundCost::L2,
             spar: SparGwConfig::default(),
             alpha: 0.6,
@@ -69,11 +81,38 @@ impl Default for PairwiseConfig {
     }
 }
 
+impl PairwiseConfig {
+    /// The [`SolverBase`] defaults this config seeds before
+    /// `solver_opts` overrides are applied.
+    fn solver_base(&self) -> SolverBase {
+        SolverBase {
+            cost: self.cost,
+            epsilon: self.spar.epsilon,
+            sample_size: self.spar.sample_size,
+            outer_iters: self.spar.outer_iters,
+            inner_iters: self.spar.inner_iters,
+            reg: self.spar.reg,
+            alpha: self.alpha,
+            shrink: self.spar.shrink,
+            tol: self.spar.tol,
+            threads: self.kernel_threads,
+            ..SolverBase::default()
+        }
+    }
+
+    /// Build the configured engine through the registry.
+    pub fn build_solver(&self) -> Result<Box<dyn GwSolver>> {
+        SolverRegistry::build_with_base(&self.solver, &self.solver_opts, &self.solver_base())
+    }
+}
+
 /// Output of a pairwise run.
 pub struct PairwiseResult {
     /// Symmetric N×N distance matrix.
     pub distances: Mat,
-    /// Latency metrics over the pair jobs.
+    /// Registry name of the engine that produced the matrix.
+    pub solver: String,
+    /// Latency metrics over the pair jobs (tagged with the solver name).
     pub metrics: MetricsRecorder,
     /// How many pairs ran on each path.
     pub pjrt_pairs: usize,
@@ -106,13 +145,20 @@ impl PairwiseGw {
 
     /// Compute the pairwise distance matrix of a graph dataset.
     ///
-    /// Attributed datasets (per `dataset.attr_kind`) use Spar-FGW with
-    /// `alpha`; plain datasets use Spar-GW. The native path parallelizes
+    /// The engine is resolved by name through the registry
+    /// (`cfg.solver` + `cfg.solver_opts`). Attributed datasets (per
+    /// `dataset.attr_kind`) run the solver's fused objective with `alpha`
+    /// when the engine supports it; plain datasets (or structure-only
+    /// engines) run the plain objective. The native path parallelizes
     /// across `workers` threads with deterministic per-pair RNG streams;
-    /// the PJRT path runs pairs sequentially on the runtime thread
-    /// (executables are not Sync) but reuses one compiled executable per
-    /// bucket.
+    /// the PJRT path (Spar-GW only) runs pairs sequentially on the
+    /// runtime thread (executables are not Sync) but reuses one compiled
+    /// executable per bucket.
     pub fn pairwise(&mut self, dataset: &GraphDataset) -> Result<PairwiseResult> {
+        let solver = self
+            .cfg
+            .build_solver()
+            .map_err(|e| e.wrap("building pairwise solver"))?;
         let n_items = dataset.len();
         let marginals: Vec<Vec<f64>> =
             dataset.graphs.iter().map(|g| g.marginal()).collect();
@@ -123,14 +169,23 @@ impl PairwiseGw {
 
         let mut distances = Mat::zeros(n_items, n_items);
         let mut metrics = MetricsRecorder::new();
+        metrics.set_solver(solver.name());
         let mut pjrt_pairs = 0usize;
         let mut native_pairs = 0usize;
         let wall_start = Instant::now();
 
-        // Decide per pair whether PJRT can serve it (both sides fit one
-        // bucket and the dataset is unattributed — the FGW artifact is not
-        // compiled in this bundle).
-        let use_pjrt = self.cfg.use_pjrt && self.runtime.is_some();
+        // Decide per pair whether PJRT can serve it (only the Spar-GW
+        // artifact is compiled in this bundle, both sides must fit one
+        // bucket, and the dataset must be unattributed). The PJRT branch
+        // executes from the typed `cfg.cost`/`cfg.spar` fields, so it is
+        // taken only when no string `solver_opts` overrides exist —
+        // otherwise pairs run through the trait dispatch, which honors
+        // them (a silent config mismatch would be worse than losing the
+        // artifact path).
+        let use_pjrt = self.cfg.use_pjrt
+            && self.runtime.is_some()
+            && solver.name() == "spar_gw"
+            && self.cfg.solver_opts.is_empty();
         let has_attrs = dataset
             .graphs
             .first()
@@ -215,11 +270,14 @@ impl PairwiseGw {
             metrics.record_batch(&lats, wall_start.elapsed().as_secs_f64());
         } else {
             // Native path: parallel worker pool, deterministic per-pair
-            // RNG, one reused SparCore workspace per worker thread (the
-            // inner solver loop then allocates nothing per pair beyond the
-            // gathered cost block and the returned plan).
-            let cfg = self.cfg;
-            let results: Vec<(f64, f64)> = run_jobs_with(
+            // RNG, one reused SparCore workspace per worker thread (for
+            // the Spar-* engines the inner solver loop then allocates
+            // nothing per pair beyond the gathered cost block and the
+            // returned plan; dense engines ignore the workspace). Dispatch
+            // goes through the shared `GwSolver` trait object.
+            let cfg = &self.cfg;
+            let solver = solver.as_ref();
+            let results: Vec<Result<(f64, f64)>> = run_jobs_with(
                 pairs.len(),
                 cfg.workers,
                 Workspace::new,
@@ -232,43 +290,22 @@ impl PairwiseGw {
                     let p = GwProblem::new(&gi.adj, &gj.adj, a, b);
                     let mut rng =
                         Rng::new(derive_seed(cfg.seed, (i * n_items + j) as u64));
-                    let n_pair = gi.n_nodes().max(gj.n_nodes());
-                    let budget = if cfg.spar.sample_size == 0 {
-                        16 * n_pair
-                    } else {
-                        cfg.spar.sample_size
-                    };
-                    let mut sampler = GwSampler::new(a, b, cfg.spar.shrink);
-                    let set = sampler.sample_iid(&mut rng, budget);
-                    let value = match attribute_distance(gi, gj) {
-                        Some(feat) => {
+                    let report = match attribute_distance(gi, gj) {
+                        Some(feat) if solver.supports_fused() => {
                             let fp = FgwProblem::new(p, &feat, cfg.alpha);
-                            spar_fgw_with_workspace(
-                                &fp,
-                                cfg.cost,
-                                &cfg.spar,
-                                &set,
-                                ws,
-                                cfg.kernel_threads,
-                            )
-                            .value
+                            solver.solve_fused(&fp, &mut rng, ws)?
                         }
-                        None => spar_gw_with_workspace(
-                            &p,
-                            cfg.cost,
-                            &cfg.spar,
-                            &set,
-                            ws,
-                            cfg.kernel_threads,
-                        )
-                        .value,
+                        _ => solver.solve(&p, &mut rng, ws)?,
                     };
-                    (value, t0.elapsed().as_secs_f64())
+                    Ok((report.value, t0.elapsed().as_secs_f64()))
                 },
             );
             let mut lats = Vec::with_capacity(results.len());
-            for (k, (value, lat)) in results.into_iter().enumerate() {
+            for (k, res) in results.into_iter().enumerate() {
                 let (i, j) = pairs[k];
+                let (value, lat) = res.map_err(|e| {
+                    e.wrap(format!("pair ({i},{j}) via solver {:?}", solver.name()))
+                })?;
                 distances[(i, j)] = value;
                 distances[(j, i)] = value;
                 lats.push(lat);
@@ -277,7 +314,13 @@ impl PairwiseGw {
             metrics.record_batch(&lats, wall_start.elapsed().as_secs_f64());
         }
 
-        Ok(PairwiseResult { distances, metrics, pjrt_pairs, native_pairs })
+        Ok(PairwiseResult {
+            distances,
+            solver: solver.name().to_string(),
+            metrics,
+            pjrt_pairs,
+            native_pairs,
+        })
     }
 }
 
@@ -362,6 +405,67 @@ mod tests {
         for (x, y) in serial.data().iter().zip(threaded.data()) {
             assert_eq!(x, y, "kernel threading changed results");
         }
+    }
+
+    #[test]
+    fn solver_selectable_by_name() {
+        // A non-Spar engine must be selectable per request and reported
+        // back in the result and the metrics tag.
+        let ds = tiny_dataset();
+        let mut svc = PairwiseGw::new(PairwiseConfig {
+            solver: "sagrow".to_string(),
+            spar: SparGwConfig { sample_size: 64, outer_iters: 3, inner_iters: 8, ..Default::default() },
+            ..Default::default()
+        });
+        let out = svc.pairwise(&ds).unwrap();
+        assert_eq!(out.solver, "sagrow");
+        assert_eq!(out.metrics.solver(), Some("sagrow"));
+        assert!(out.metrics.summary().contains("solver=sagrow"));
+        for &v in out.distances.data() {
+            assert!(v.is_finite());
+        }
+    }
+
+    #[test]
+    fn unknown_solver_errors_before_running() {
+        let ds = tiny_dataset();
+        let mut svc = PairwiseGw::new(PairwiseConfig {
+            solver: "bogus".to_string(),
+            ..Default::default()
+        });
+        let err = svc.pairwise(&ds).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown solver"), "{msg}");
+        assert!(msg.contains("spar_gw"), "{msg} should list valid solvers");
+    }
+
+    #[test]
+    fn solver_opts_override_typed_config() {
+        // String options win over the typed spar config: an absurdly small
+        // outer cap must change the distances relative to the default.
+        let ds = tiny_dataset();
+        let mk = |opts: &[(&str, &str)]| {
+            let solver_opts: std::collections::BTreeMap<String, String> = opts
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect();
+            let mut svc = PairwiseGw::new(PairwiseConfig {
+                solver_opts,
+                seed: 21,
+                spar: SparGwConfig { sample_size: 64, outer_iters: 8, inner_iters: 10, ..Default::default() },
+                ..Default::default()
+            });
+            svc.pairwise(&ds).unwrap().distances
+        };
+        let default = mk(&[]);
+        let clamped = mk(&[("outer", "1")]);
+        let diff: f64 = default
+            .data()
+            .iter()
+            .zip(clamped.data())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 0.0, "outer=1 override had no effect");
     }
 
     #[test]

@@ -1,11 +1,18 @@
 //! Algorithm 1 — the dense iterative scheme for (entropic / proximal) GW,
 //! plus the EMD-GW baseline (ε = 0 with an exact inner OT solver).
 
+use std::time::Instant;
+
+use super::core::Workspace;
 use super::cost::GroundCost;
+use super::fgw::{egw_fgw, emd_fgw, pga_fgw, FgwProblem};
+use super::solver::{GwSolver, Opts, PhaseTimings, Plan, SolveReport, SolverBase};
 use super::tensor::tensor_product;
 use super::{DenseGwResult, GwProblem, Regularizer};
 use crate::linalg::Mat;
 use crate::ot::{emd, sinkhorn};
+use crate::rng::Rng;
+use crate::util::error::Result;
 
 /// Configuration for the dense Algorithm-1 solvers.
 #[derive(Clone, Copy, Debug)]
@@ -140,6 +147,94 @@ pub fn emd_gw(p: &GwProblem, cost: GroundCost, cfg: &Alg1Config) -> DenseGwResul
     let c_final = tensor_product(p.cx, p.cy, &t, cost);
     let value = c_final.frob_inner(&t);
     DenseGwResult { value, plan: t, outer_iters: outer, converged }
+}
+
+/// Which Algorithm-1 variant an [`Alg1Solver`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Alg1Kind {
+    /// Entropic GW (`"egw"`).
+    Egw,
+    /// Proximal-gradient GW (`"pga_gw"`) — the accuracy benchmark.
+    PgaGw,
+    /// ε = 0 with an exact inner OT solver (`"emd_gw"`).
+    EmdGw,
+}
+
+/// Registry solver for the dense Algorithm-1 family. Deterministic (the
+/// RNG is untouched) and dense (the workspace is untouched); extends to
+/// the fused objective through the `fgw` variants.
+pub struct Alg1Solver {
+    /// Which variant to run.
+    pub kind: Alg1Kind,
+    /// Ground cost `L`.
+    pub cost: GroundCost,
+    /// Algorithm-1 parameters.
+    pub cfg: Alg1Config,
+}
+
+impl Alg1Solver {
+    pub(crate) fn from_opts(kind: Alg1Kind, base: &SolverBase, o: &mut Opts) -> Result<Self> {
+        Ok(Alg1Solver {
+            kind,
+            cost: o.cost(base.cost)?,
+            cfg: Alg1Config {
+                epsilon: o.f64("epsilon", base.epsilon)?,
+                outer_iters: o.usize("outer", base.outer_iters)?,
+                inner_iters: o.usize("inner", base.inner_iters)?,
+                tol: o.f64("tol", base.tol)?,
+            },
+        })
+    }
+
+    fn report(&self, r: DenseGwResult, solve_seconds: f64) -> SolveReport {
+        SolveReport {
+            solver: self.name(),
+            value: r.value,
+            plan: Plan::Dense(r.plan),
+            outer_iters: r.outer_iters,
+            converged: r.converged,
+            timings: PhaseTimings { sample_seconds: 0.0, solve_seconds },
+        }
+    }
+}
+
+impl GwSolver for Alg1Solver {
+    fn name(&self) -> &'static str {
+        match self.kind {
+            Alg1Kind::Egw => "egw",
+            Alg1Kind::PgaGw => "pga_gw",
+            Alg1Kind::EmdGw => "emd_gw",
+        }
+    }
+
+    fn solve(&self, p: &GwProblem, _rng: &mut Rng, _ws: &mut Workspace) -> Result<SolveReport> {
+        let t0 = Instant::now();
+        let r = match self.kind {
+            Alg1Kind::Egw => egw(p, self.cost, &self.cfg),
+            Alg1Kind::PgaGw => pga_gw(p, self.cost, &self.cfg),
+            Alg1Kind::EmdGw => emd_gw(p, self.cost, &self.cfg),
+        };
+        Ok(self.report(r, t0.elapsed().as_secs_f64()))
+    }
+
+    fn supports_fused(&self) -> bool {
+        true
+    }
+
+    fn solve_fused(
+        &self,
+        p: &FgwProblem,
+        _rng: &mut Rng,
+        _ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        let t0 = Instant::now();
+        let r = match self.kind {
+            Alg1Kind::Egw => egw_fgw(p, self.cost, &self.cfg),
+            Alg1Kind::PgaGw => pga_fgw(p, self.cost, &self.cfg),
+            Alg1Kind::EmdGw => emd_fgw(p, self.cost, &self.cfg),
+        };
+        Ok(self.report(r, t0.elapsed().as_secs_f64()))
+    }
 }
 
 #[cfg(test)]

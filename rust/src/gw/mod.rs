@@ -1,6 +1,14 @@
 //! Core Gromov-Wasserstein library — the paper's contribution and the
 //! complete family of solvers it is evaluated against.
 //!
+//! **Entry point: [`solver`]** — the unified [`solver::GwSolver`] trait,
+//! the [`solver::SolveReport`] result type and the string-keyed
+//! [`solver::SolverRegistry`] through which the coordinator, the bench
+//! suite and the CLI construct and dispatch *any* of the engines below by
+//! name (`"spar_gw"`, `"egw"`, `"sagrow"`, …). The per-algorithm modules
+//! keep their typed free functions (bit-identical, golden-locked) and
+//! additionally host their `GwSolver` implementations.
+//!
 //! * [`cost`] — ground cost functions `L` (ℓ1 / ℓ2 / KL) and their
 //!   decomposable `(f1, f2, h1, h2)` forms.
 //! * [`tensor`] — the tensor-matrix product `L(Cx,Cy) ⊗ T`: generic
@@ -20,6 +28,8 @@
 //!   (adapter over [`core`]).
 //! * [`sagrow`], [`lr_gw`], [`sgwl`], [`anchor`] — reimplemented
 //!   comparators (Table 1 rows).
+//! * [`solver`] — the unified `GwSolver` trait, `SolveReport`, and the
+//!   string-keyed `SolverRegistry` dispatching every engine above.
 //! * [`stationarity`] — the gap `G(T)` of §4 (theory validation).
 
 pub mod alg1;
@@ -31,6 +41,7 @@ pub mod lr_gw;
 pub mod sagrow;
 pub mod sampling;
 pub mod sgwl;
+pub mod solver;
 pub mod spar_fgw;
 pub mod spar_gw;
 pub mod spar_ugw;
@@ -40,6 +51,7 @@ pub mod ugw;
 
 pub use alg1::{egw, emd_gw, pga_gw, Alg1Config};
 pub use cost::GroundCost;
+pub use solver::{GwSolver, PhaseTimings, Plan, SolveReport, SolverBase, SolverRegistry};
 pub use spar_gw::{spar_gw, SparGwConfig, SparGwResult};
 
 use crate::linalg::Mat;

@@ -11,14 +11,19 @@
 //! comparison the paper sets `s′ = s²/n²` so both methods touch the same
 //! number of tensor entries per iteration.
 
+use std::time::Instant;
+
+use super::core::Workspace;
 use super::cost::GroundCost;
 use super::fgw::FgwProblem;
+use super::solver::{GwSolver, Opts, PhaseTimings, Plan, SolveReport, SolverBase};
 use super::tensor::tensor_product;
 use super::ugw::{ugw_objective, unbalanced_cost_shift, UgwConfig, UgwResult};
 use super::{DenseGwResult, GwProblem, Regularizer};
 use crate::linalg::Mat;
 use crate::ot::{sinkhorn, unbalanced_sinkhorn};
 use crate::rng::{AliasTable, Rng};
+use crate::util::error::Result;
 
 /// Configuration for SaGroW.
 #[derive(Clone, Copy, Debug)]
@@ -221,6 +226,85 @@ pub fn sagrow_ugw(
 /// same number of tensor elements as Spar-GW with `s` samples).
 pub fn matched_s_prime(s: usize, m: usize, n: usize) -> usize {
     ((s * s) as f64 / (m * n) as f64).round().max(1.0) as usize
+}
+
+/// Registry solver for SaGroW (`"sagrow"`). `s_prime == 0` applies the
+/// paper's budget-matching rule at solve time: `s′ = s²/(mn)` with
+/// `s = sample_size` (0 → 16·max(m,n)), so SaGroW touches the same number
+/// of tensor entries as Spar-GW would on the same problem.
+pub struct SagrowSolver {
+    /// Ground cost `L`.
+    pub cost: GroundCost,
+    /// SaGroW parameters (`s_prime == 0` → budget-matched per problem).
+    pub cfg: SagrowConfig,
+    /// Spar-GW-equivalent sample budget used by the matching rule.
+    pub sample_size: usize,
+}
+
+impl SagrowSolver {
+    pub(crate) fn from_opts(base: &SolverBase, o: &mut Opts) -> Result<Self> {
+        Ok(SagrowSolver {
+            cost: o.cost(base.cost)?,
+            cfg: SagrowConfig {
+                epsilon: o.f64("epsilon", base.epsilon)?,
+                s_prime: o.usize("s_prime", 0)?,
+                outer_iters: o.usize("outer", base.outer_iters)?,
+                inner_iters: o.usize("inner", base.inner_iters)?,
+                reg: o.reg(base.reg)?,
+                tol: o.f64("tol", base.tol)?,
+            },
+            sample_size: o.usize("s", base.sample_size)?,
+        })
+    }
+
+    /// Resolve `s_prime == 0` to the budget-matched value for an m×n
+    /// problem.
+    fn cfg_for(&self, m: usize, n: usize) -> SagrowConfig {
+        let mut cfg = self.cfg;
+        if cfg.s_prime == 0 {
+            let s = if self.sample_size == 0 { 16 * m.max(n) } else { self.sample_size };
+            cfg.s_prime = matched_s_prime(s, m, n);
+        }
+        cfg
+    }
+
+    fn report(&self, r: DenseGwResult, solve_seconds: f64) -> SolveReport {
+        SolveReport {
+            solver: self.name(),
+            value: r.value,
+            plan: Plan::Dense(r.plan),
+            outer_iters: r.outer_iters,
+            converged: r.converged,
+            timings: PhaseTimings { sample_seconds: 0.0, solve_seconds },
+        }
+    }
+}
+
+impl GwSolver for SagrowSolver {
+    fn name(&self) -> &'static str {
+        "sagrow"
+    }
+
+    fn solve(&self, p: &GwProblem, rng: &mut Rng, _ws: &mut Workspace) -> Result<SolveReport> {
+        let t0 = Instant::now();
+        let r = sagrow(p, self.cost, &self.cfg_for(p.m(), p.n()), rng);
+        Ok(self.report(r, t0.elapsed().as_secs_f64()))
+    }
+
+    fn supports_fused(&self) -> bool {
+        true
+    }
+
+    fn solve_fused(
+        &self,
+        p: &FgwProblem,
+        rng: &mut Rng,
+        _ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        let t0 = Instant::now();
+        let r = sagrow_fgw(p, self.cost, &self.cfg_for(p.gw.m(), p.gw.n()), rng);
+        Ok(self.report(r, t0.elapsed().as_secs_f64()))
+    }
 }
 
 #[cfg(test)]

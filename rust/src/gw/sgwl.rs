@@ -9,12 +9,17 @@
 //! plan mass are matched, and a fine GW problem is solved inside each
 //! matched pair; the block plans compose into a global sparse coupling.
 
+use std::time::Instant;
+
 use super::alg1::{pga_gw, Alg1Config};
+use super::core::Workspace;
 use super::cost::GroundCost;
+use super::solver::{GwSolver, Opts, PhaseTimings, Plan, SolveReport, SolverBase};
 use super::{DenseGwResult, GwProblem};
 use crate::linalg::Mat;
 use crate::ml::kmeans::kmeans;
 use crate::rng::Rng;
+use crate::util::error::Result;
 
 /// Configuration for the multiscale solver.
 #[derive(Clone, Copy, Debug)]
@@ -125,6 +130,57 @@ pub fn sgwl(p: &GwProblem, cost: GroundCost, cfg: &SgwlConfig, rng: &mut Rng) ->
     // tensor product for correctness).
     let value = super::tensor::tensor_product(p.cx, p.cy, &t, cost).frob_inner(&t);
     DenseGwResult { value, plan: t, outer_iters: coarse_res.outer_iters, converged: false }
+}
+
+/// Registry solver for the multiscale S-GWL (`"sgwl"`). The inner dense
+/// solves inherit ε/R/H from the base config with the same caps the bench
+/// suite has always applied (R ≤ 15, H ≤ 40 per level, tol 1e-8), so the
+/// two-level scheme stays cheap even under generous outer settings.
+pub struct SgwlSolver {
+    /// Ground cost `L`.
+    pub cost: GroundCost,
+    /// Multiscale parameters.
+    pub cfg: SgwlConfig,
+}
+
+impl SgwlSolver {
+    pub(crate) fn from_opts(base: &SolverBase, o: &mut Opts) -> Result<Self> {
+        Ok(SgwlSolver {
+            cost: o.cost(base.cost)?,
+            cfg: SgwlConfig {
+                clusters: o.usize("clusters", 0)?,
+                inner: Alg1Config {
+                    epsilon: o.f64("epsilon", base.epsilon)?,
+                    outer_iters: o.usize("outer", base.outer_iters.min(15))?,
+                    inner_iters: o.usize("inner", base.inner_iters.min(40))?,
+                    tol: o.f64("tol", 1e-8)?,
+                },
+                mass_threshold: o.f64("mass_threshold", 0.5)?,
+            },
+        })
+    }
+}
+
+impl GwSolver for SgwlSolver {
+    fn name(&self) -> &'static str {
+        "sgwl"
+    }
+
+    fn solve(&self, p: &GwProblem, rng: &mut Rng, _ws: &mut Workspace) -> Result<SolveReport> {
+        let t0 = Instant::now();
+        let r = sgwl(p, self.cost, &self.cfg, rng);
+        Ok(SolveReport {
+            solver: self.name(),
+            value: r.value,
+            plan: Plan::Dense(r.plan),
+            outer_iters: r.outer_iters,
+            converged: r.converged,
+            timings: PhaseTimings {
+                sample_seconds: 0.0,
+                solve_seconds: t0.elapsed().as_secs_f64(),
+            },
+        })
+    }
 }
 
 #[cfg(test)]

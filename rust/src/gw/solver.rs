@@ -1,0 +1,390 @@
+//! **The solver interface** — one trait, one report type, one dispatch
+//! point for every GW engine in the crate.
+//!
+//! The paper evaluates Spar-GW against a whole family of estimators
+//! (entropic/proximal Algorithm 1, SaGroW, low-rank GW, S-GWL, anchor
+//! energies, …). Each family member keeps its bespoke free function and
+//! typed config — those stay bit-identical and golden-locked — but every
+//! one of them also implements [`GwSolver`], so the coordinator, the bench
+//! suite and the CLI can select any engine per request by name:
+//!
+//! * [`GwSolver`] — `solve(&GwProblem, &mut Rng, &mut Workspace)` (plus
+//!   `solve_fused` for methods that extend to the fused objective),
+//!   returning a uniform [`SolveReport`].
+//! * [`SolveReport`] — estimated value, the coupling as a dense-or-sparse
+//!   [`Plan`], outer iterations, convergence flag and per-phase
+//!   [`PhaseTimings`].
+//! * [`SolverRegistry`] — string-keyed construction
+//!   (`"spar_gw"`, `"sagrow"`, `"lr_gw"`, …) with solver-specific options
+//!   parsed from a `BTreeMap<String, String>` (the CLI's `--solver-opt
+//!   k=v`). Unknown names and unknown option keys produce descriptive
+//!   errors listing the valid choices.
+//! * [`SolverBase`] — typed defaults the string options override, so the
+//!   coordinator's `PairwiseConfig` and the bench suite's `RunSettings`
+//!   seed per-solver configs without every caller re-spelling them.
+//!
+//! The solver *implementations* live next to the algorithms they wrap
+//! (`spar_gw::SparGwSolver`, `alg1::Alg1Solver`, `sagrow::SagrowSolver`,
+//! …); this module owns only the interface and the registry.
+
+use std::collections::BTreeMap;
+
+use super::alg1::{Alg1Kind, Alg1Solver};
+use super::anchor::AnchorSolver;
+use super::core::Workspace;
+use super::cost::GroundCost;
+use super::fgw::FgwProblem;
+use super::lr_gw::LrGwSolver;
+use super::sagrow::SagrowSolver;
+use super::sgwl::SgwlSolver;
+use super::spar_fgw::SparFgwSolver;
+use super::spar_gw::SparGwSolver;
+use super::spar_ugw::SparUgwSolver;
+use super::{GwProblem, Regularizer};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::sparse::Coo;
+use crate::util::error::Result;
+use crate::{bail, format_err};
+
+/// A coupling in whichever representation the solver natively produces:
+/// dense (Algorithm-1 family, SaGroW, LR-GW, S-GWL, AE) or sparse on the
+/// sampled support (the Spar-* family).
+pub enum Plan {
+    /// Full m×n coupling.
+    Dense(Mat),
+    /// Coupling restricted to a sampled sparsity pattern.
+    Sparse(Coo),
+}
+
+impl Plan {
+    /// Total transported mass.
+    pub fn sum(&self) -> f64 {
+        match self {
+            Plan::Dense(t) => t.sum(),
+            Plan::Sparse(t) => t.sum(),
+        }
+    }
+
+    /// Row marginals `T·1`.
+    pub fn row_sums(&self) -> Vec<f64> {
+        match self {
+            Plan::Dense(t) => t.row_sums(),
+            Plan::Sparse(t) => t.row_sums(),
+        }
+    }
+
+    /// Column marginals `Tᵀ·1`.
+    pub fn col_sums(&self) -> Vec<f64> {
+        match self {
+            Plan::Dense(t) => t.col_sums(),
+            Plan::Sparse(t) => t.col_sums(),
+        }
+    }
+
+    /// Stored entries (m·n for dense plans, |S| for sparse ones).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Plan::Dense(t) => t.rows() * t.cols(),
+            Plan::Sparse(t) => t.nnz(),
+        }
+    }
+
+    /// True if every stored entry is finite.
+    pub fn is_finite(&self) -> bool {
+        match self {
+            Plan::Dense(t) => t.data().iter().all(|v| v.is_finite()),
+            Plan::Sparse(t) => t.vals().iter().all(|v| v.is_finite()),
+        }
+    }
+}
+
+/// Wall-clock seconds per solve phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimings {
+    /// Building the sampled index set (0 for dense solvers).
+    pub sample_seconds: f64,
+    /// The iteration loop (everything after sampling).
+    pub solve_seconds: f64,
+}
+
+impl PhaseTimings {
+    pub fn total(&self) -> f64 {
+        self.sample_seconds + self.solve_seconds
+    }
+}
+
+/// Uniform result of any registered solver.
+pub struct SolveReport {
+    /// Registry name of the engine that produced this report.
+    pub solver: &'static str,
+    /// Estimated (F/U)GW value.
+    pub value: f64,
+    /// Final coupling, dense or sparse.
+    pub plan: Plan,
+    /// Outer iterations performed (1 for one-shot methods like AE).
+    pub outer_iters: usize,
+    /// True if the solver's stopping rule fired before its iteration cap
+    /// (one-shot exact methods report `true`).
+    pub converged: bool,
+    /// Per-phase wall-clock timings.
+    pub timings: PhaseTimings,
+}
+
+/// The one interface every GW engine implements. Implementations are
+/// plain data (`Send + Sync`), so one boxed solver can serve a whole
+/// worker pool; per-solve mutable state lives in the caller's `rng` and
+/// `ws` (dense solvers ignore the workspace).
+pub trait GwSolver: Send + Sync {
+    /// Registry name (`"spar_gw"`, `"egw"`, …).
+    fn name(&self) -> &'static str;
+
+    /// Solve a balanced (or, for `spar_ugw`, unbalanced) GW problem.
+    fn solve(&self, p: &GwProblem, rng: &mut Rng, ws: &mut Workspace) -> Result<SolveReport>;
+
+    /// Whether [`GwSolver::solve_fused`] is supported.
+    fn supports_fused(&self) -> bool {
+        false
+    }
+
+    /// Solve the fused objective `α·GW + (1−α)·⟨M, T⟩` (α and `M` come
+    /// with the problem). Structure-only solvers return a descriptive
+    /// error.
+    fn solve_fused(
+        &self,
+        p: &FgwProblem,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        let _ = (p, rng, ws);
+        bail!(
+            "solver {:?} does not support the fused objective (structure-only method)",
+            self.name()
+        )
+    }
+}
+
+/// Typed defaults that seed every solver's config before string options
+/// are applied. The coordinator derives one from `PairwiseConfig`, the
+/// bench suite from `RunSettings`; standalone callers use `::default()`.
+#[derive(Clone, Copy, Debug)]
+pub struct SolverBase {
+    /// Ground cost `L`.
+    pub cost: GroundCost,
+    /// Regularization weight ε.
+    pub epsilon: f64,
+    /// Sample budget s for the sparsified/sampled methods (0 → 16·max(m,n)).
+    pub sample_size: usize,
+    /// Outer iteration cap R.
+    pub outer_iters: usize,
+    /// Inner Sinkhorn iterations H.
+    pub inner_iters: usize,
+    /// Proximal or entropic regularizer for the Alg. 1/2-style methods.
+    pub reg: Regularizer,
+    /// Structure/feature trade-off α for fused problems.
+    pub alpha: f64,
+    /// Shrinkage θ toward uniform sampling (condition H.4).
+    pub shrink: f64,
+    /// Outer stopping tolerance (0 disables).
+    pub tol: f64,
+    /// Marginal relaxation weight λ (unbalanced methods).
+    pub lambda: f64,
+    /// Threads row-chunking the O(s²) cost kernel (Spar-* family).
+    pub threads: usize,
+}
+
+impl Default for SolverBase {
+    fn default() -> Self {
+        SolverBase {
+            cost: GroundCost::L2,
+            epsilon: 0.01,
+            sample_size: 0,
+            outer_iters: 20,
+            inner_iters: 50,
+            reg: Regularizer::Proximal,
+            alpha: 0.6,
+            shrink: 0.0,
+            tol: 1e-9,
+            lambda: 1.0,
+            threads: 1,
+        }
+    }
+}
+
+/// Typed view over a solver's string options. Getters record which keys
+/// the builder understands; [`Opts::finish`] then rejects any key the
+/// builder never asked about, listing the valid ones — so `--solver-opt
+/// typo=1` fails loudly instead of being silently ignored.
+pub(crate) struct Opts<'a> {
+    map: &'a BTreeMap<String, String>,
+    known: Vec<&'static str>,
+}
+
+impl<'a> Opts<'a> {
+    fn new(map: &'a BTreeMap<String, String>) -> Self {
+        Opts { map, known: Vec::new() }
+    }
+
+    fn raw(&mut self, key: &'static str) -> Option<&'a str> {
+        if !self.known.contains(&key) {
+            self.known.push(key);
+        }
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub(crate) fn f64(&mut self, key: &'static str, default: f64) -> Result<f64> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format_err!("solver option {key}={v:?}: expected a number")),
+        }
+    }
+
+    pub(crate) fn usize(&mut self, key: &'static str, default: usize) -> Result<usize> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format_err!("solver option {key}={v:?}: expected an integer")),
+        }
+    }
+
+    pub(crate) fn cost(&mut self, default: GroundCost) -> Result<GroundCost> {
+        match self.raw("cost") {
+            None => Ok(default),
+            Some("l1") => Ok(GroundCost::L1),
+            Some("l2") => Ok(GroundCost::L2),
+            Some("kl") => Ok(GroundCost::Kl),
+            Some(v) => bail!("solver option cost={v:?}: expected l1|l2|kl"),
+        }
+    }
+
+    pub(crate) fn reg(&mut self, default: Regularizer) -> Result<Regularizer> {
+        match self.raw("reg") {
+            None => Ok(default),
+            Some("proximal") => Ok(Regularizer::Proximal),
+            Some("entropy") => Ok(Regularizer::Entropy),
+            Some(v) => bail!("solver option reg={v:?}: expected proximal|entropy"),
+        }
+    }
+
+    fn finish(mut self, solver: &str) -> Result<()> {
+        self.known.sort_unstable();
+        for key in self.map.keys() {
+            if !self.known.contains(&key.as_str()) {
+                bail!(
+                    "unknown option {key:?} for solver {solver:?} (valid keys: {})",
+                    self.known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// String-keyed construction of every GW engine in the crate.
+pub struct SolverRegistry;
+
+/// Registry names in the paper's presentation order.
+const SOLVER_NAMES: &[&str] = &[
+    "spar_gw", "spar_fgw", "spar_ugw", "egw", "pga_gw", "emd_gw", "sagrow", "lr_gw", "sgwl",
+    "anchor",
+];
+
+/// Case/punctuation-insensitive key: `"Spar-GW"` ≡ `"spar_gw"`.
+fn normalize(name: &str) -> String {
+    name.chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .collect::<String>()
+        .to_ascii_lowercase()
+}
+
+impl SolverRegistry {
+    /// All registered solver names.
+    pub fn names() -> &'static [&'static str] {
+        SOLVER_NAMES
+    }
+
+    /// Build a solver by name with library defaults plus `opts` overrides.
+    pub fn build(name: &str, opts: &BTreeMap<String, String>) -> Result<Box<dyn GwSolver>> {
+        Self::build_with_base(name, opts, &SolverBase::default())
+    }
+
+    /// Build a solver by name: `base` seeds the config, `opts` overrides
+    /// individual fields. Unknown names and unknown option keys error
+    /// descriptively.
+    pub fn build_with_base(
+        name: &str,
+        opts: &BTreeMap<String, String>,
+        base: &SolverBase,
+    ) -> Result<Box<dyn GwSolver>> {
+        let mut o = Opts::new(opts);
+        let solver: Box<dyn GwSolver> = match normalize(name).as_str() {
+            "spargw" => Box::new(SparGwSolver::from_opts(base, &mut o)?),
+            "sparfgw" => Box::new(SparFgwSolver::from_opts(base, &mut o)?),
+            "sparugw" => Box::new(SparUgwSolver::from_opts(base, &mut o)?),
+            "egw" => Box::new(Alg1Solver::from_opts(Alg1Kind::Egw, base, &mut o)?),
+            "pgagw" => Box::new(Alg1Solver::from_opts(Alg1Kind::PgaGw, base, &mut o)?),
+            "emdgw" => Box::new(Alg1Solver::from_opts(Alg1Kind::EmdGw, base, &mut o)?),
+            "sagrow" => Box::new(SagrowSolver::from_opts(base, &mut o)?),
+            "lrgw" => Box::new(LrGwSolver::from_opts(base, &mut o)?),
+            "sgwl" => Box::new(SgwlSolver::from_opts(base, &mut o)?),
+            "anchor" | "ae" => Box::new(AnchorSolver::from_opts(base, &mut o)?),
+            _ => bail!(
+                "unknown solver {name:?} (valid solvers: {})",
+                SOLVER_NAMES.join(", ")
+            ),
+        };
+        o.finish(name)?;
+        Ok(solver)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_normalized_keys() {
+        for &name in SolverRegistry::names() {
+            assert!(
+                SolverRegistry::build(name, &BTreeMap::new()).is_ok(),
+                "{name} must be constructible"
+            );
+        }
+        // Punctuation/case variants resolve to the same solver.
+        assert!(SolverRegistry::build("Spar-GW", &BTreeMap::new()).is_ok());
+        assert!(SolverRegistry::build("PGA_GW", &BTreeMap::new()).is_ok());
+    }
+
+    #[test]
+    fn unknown_name_lists_choices() {
+        let err = SolverRegistry::build("warp_drive", &BTreeMap::new()).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown solver"), "{msg}");
+        for &name in SolverRegistry::names() {
+            assert!(msg.contains(name), "{msg} missing {name}");
+        }
+    }
+
+    #[test]
+    fn unknown_option_key_lists_valid_keys() {
+        let mut opts = BTreeMap::new();
+        opts.insert("warp".to_string(), "9".to_string());
+        let err = SolverRegistry::build("spar_gw", &opts).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("warp"), "{msg}");
+        assert!(msg.contains("epsilon"), "{msg} should list valid keys");
+    }
+
+    #[test]
+    fn malformed_option_value_is_descriptive() {
+        let mut opts = BTreeMap::new();
+        opts.insert("epsilon".to_string(), "abc".to_string());
+        let err = SolverRegistry::build("spar_gw", &opts).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("epsilon"), "{msg}");
+        assert!(msg.contains("number"), "{msg}");
+    }
+}

@@ -13,9 +13,11 @@ use super::core::{Engine, Fused, Workspace};
 use super::cost::GroundCost;
 use super::fgw::FgwProblem;
 use super::sampling::{GwSampler, SampledSet};
-use super::spar_gw::{SparGwConfig, SparGwResult};
+use super::solver::{GwSolver, Opts, SolveReport, SolverBase};
+use super::spar_gw::{SparGwConfig, SparGwResult, SparGwSolver};
 use super::tensor::SparseCostContext;
 use crate::rng::Rng;
+use crate::util::error::Result;
 
 /// Run Algorithm 4 on a fused GW problem.
 pub fn spar_fgw(
@@ -82,6 +84,54 @@ pub fn spar_fgw_with_workspace(
         feat_vals: &feat_vals,
     };
     eng.solve(&mut strategy, ws)
+}
+
+/// Registry solver for Algorithm 4 (`"spar_fgw"`). On a fused problem it
+/// runs the [`Fused`] strategy with the problem's α and features; on a
+/// plain GW problem (no features) Algorithm 4 degenerates to Algorithm 2
+/// exactly (α = 1 drops the feature term), so `solve` delegates to the
+/// balanced engine. Internally a thin wrapper over [`SparGwSolver`], whose
+/// config grammar it shares.
+pub struct SparFgwSolver {
+    inner: SparGwSolver,
+}
+
+impl SparFgwSolver {
+    pub(crate) fn from_opts(base: &SolverBase, o: &mut Opts) -> Result<Self> {
+        Ok(SparFgwSolver { inner: SparGwSolver::from_opts(base, o)? })
+    }
+}
+
+impl GwSolver for SparFgwSolver {
+    fn name(&self) -> &'static str {
+        "spar_fgw"
+    }
+
+    fn solve(
+        &self,
+        p: &super::GwProblem,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        let mut report = self.inner.solve(p, rng, ws)?;
+        report.solver = self.name();
+        Ok(report)
+    }
+
+    fn supports_fused(&self) -> bool {
+        true
+    }
+
+    fn solve_fused(
+        &self,
+        p: &FgwProblem,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        let mut report = self.inner.solve_fused(p, rng, ws)?;
+        report.solver = self.name();
+        Ok(report)
+    }
 }
 
 #[cfg(test)]

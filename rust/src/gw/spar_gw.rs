@@ -17,13 +17,18 @@
 //! with the [`Balanced`] marginal strategy. Outputs are bit-identical to
 //! the historical standalone implementation.
 
+use std::time::Instant;
+
 use super::core::{Balanced, Engine, Workspace};
 use super::cost::GroundCost;
+use super::fgw::FgwProblem;
 use super::sampling::{GwSampler, SampledSet};
+use super::solver::{GwSolver, Opts, PhaseTimings, Plan, SolveReport, SolverBase};
 use super::tensor::SparseCostContext;
 use super::{GwProblem, Regularizer};
 use crate::rng::Rng;
 use crate::sparse::Coo;
+use crate::util::error::Result;
 
 /// Configuration for Spar-GW (Algorithm 2).
 #[derive(Clone, Copy, Debug)]
@@ -122,6 +127,103 @@ pub fn spar_gw_with_workspace(
     let mut strategy =
         Balanced { epsilon: cfg.epsilon, reg: cfg.reg, inner_iters: cfg.inner_iters };
     eng.solve(&mut strategy, ws)
+}
+
+/// Registry solver for Algorithm 2 (`"spar_gw"`): samples the index set
+/// from the caller's RNG, then runs the SparCore engine on the caller's
+/// workspace. Extends to the fused objective through the [`Fused`
+/// strategy](super::core::Fused) (same engine Spar-FGW uses), matching the
+/// coordinator's historical attribute handling.
+pub struct SparGwSolver {
+    /// Ground cost `L`.
+    pub cost: GroundCost,
+    /// Algorithm-2 parameters.
+    pub cfg: SparGwConfig,
+    /// Threads row-chunking the O(s²) cost kernel (1 = serial).
+    pub threads: usize,
+}
+
+impl SparGwSolver {
+    pub(crate) fn from_opts(base: &SolverBase, o: &mut Opts) -> Result<Self> {
+        Ok(SparGwSolver {
+            cost: o.cost(base.cost)?,
+            cfg: SparGwConfig {
+                epsilon: o.f64("epsilon", base.epsilon)?,
+                sample_size: o.usize("s", base.sample_size)?,
+                outer_iters: o.usize("outer", base.outer_iters)?,
+                inner_iters: o.usize("inner", base.inner_iters)?,
+                reg: o.reg(base.reg)?,
+                shrink: o.f64("shrink", base.shrink)?,
+                tol: o.f64("tol", base.tol)?,
+            },
+            threads: o.usize("threads", base.threads)?,
+        })
+    }
+
+    /// Steps 2–3: the Eq. (5) sampler on the problem marginals.
+    fn sample(&self, a: &[f64], b: &[f64], rng: &mut Rng) -> SampledSet {
+        let budget = if self.cfg.sample_size == 0 {
+            16 * a.len().max(b.len())
+        } else {
+            self.cfg.sample_size
+        };
+        let mut sampler = GwSampler::new(a, b, self.cfg.shrink);
+        sampler.sample_iid(rng, budget)
+    }
+}
+
+impl GwSolver for SparGwSolver {
+    fn name(&self) -> &'static str {
+        "spar_gw"
+    }
+
+    fn solve(&self, p: &GwProblem, rng: &mut Rng, ws: &mut Workspace) -> Result<SolveReport> {
+        let t0 = Instant::now();
+        let set = self.sample(p.a, p.b, rng);
+        let sample_seconds = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let r = spar_gw_with_workspace(p, self.cost, &self.cfg, &set, ws, self.threads);
+        Ok(SolveReport {
+            solver: self.name(),
+            value: r.value,
+            plan: Plan::Sparse(r.plan),
+            outer_iters: r.outer_iters,
+            converged: r.converged,
+            timings: PhaseTimings { sample_seconds, solve_seconds: t1.elapsed().as_secs_f64() },
+        })
+    }
+
+    fn supports_fused(&self) -> bool {
+        true
+    }
+
+    fn solve_fused(
+        &self,
+        p: &FgwProblem,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        let t0 = Instant::now();
+        let set = self.sample(p.gw.a, p.gw.b, rng);
+        let sample_seconds = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let r = super::spar_fgw::spar_fgw_with_workspace(
+            p,
+            self.cost,
+            &self.cfg,
+            &set,
+            ws,
+            self.threads,
+        );
+        Ok(SolveReport {
+            solver: self.name(),
+            value: r.value,
+            plan: Plan::Sparse(r.plan),
+            outer_iters: r.outer_iters,
+            converged: r.converged,
+            timings: PhaseTimings { sample_seconds, solve_seconds: t1.elapsed().as_secs_f64() },
+        })
+    }
 }
 
 #[cfg(test)]

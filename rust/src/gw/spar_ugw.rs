@@ -14,15 +14,19 @@
 //! and thin adapters over [`super::core`] with the [`Unbalanced`] marginal
 //! strategy; outputs are bit-identical to the historical implementation.
 
+use std::time::Instant;
+
 use super::core::{Engine, Unbalanced, Workspace};
 use super::cost::GroundCost;
 use super::sampling::SampledSet;
+use super::solver::{GwSolver, Opts, PhaseTimings, Plan, SolveReport, SolverBase};
 use super::tensor::{tensor_product, SparseCostContext};
 use super::ugw::{unbalanced_cost_shift, UgwConfig};
 use super::GwProblem;
 use crate::linalg::Mat;
 use crate::rng::{AliasTable, Rng};
 use crate::sparse::Coo;
+use crate::util::error::Result;
 
 /// Configuration for Spar-UGW.
 #[derive(Clone, Copy, Debug)]
@@ -49,6 +53,8 @@ pub struct SparUgwResult {
     pub plan: Coo,
     /// Outer iterations performed.
     pub outer_iters: usize,
+    /// True if the ‖ΔT̃‖_F tolerance was reached before the iteration cap.
+    pub converged: bool,
     /// Support size |S|.
     pub support: usize,
 }
@@ -168,7 +174,67 @@ pub fn spar_ugw_with_workspace(
     let mut strategy =
         Unbalanced::new(cfg.ugw.lambda, cfg.ugw.epsilon, cfg.ugw.inner_iters, p.a, p.b);
     let r = eng.solve(&mut strategy, ws);
-    SparUgwResult { value: r.value, plan: r.plan, outer_iters: r.outer_iters, support: r.support }
+    SparUgwResult {
+        value: r.value,
+        plan: r.plan,
+        outer_iters: r.outer_iters,
+        converged: r.converged,
+        support: r.support,
+    }
+}
+
+/// Registry solver for Algorithm 3 (`"spar_ugw"`): the Eq. (9) sampler on
+/// the caller's RNG, then the SparCore engine with the [`Unbalanced`]
+/// strategy on the caller's workspace. Structure-only (no fused variant).
+pub struct SparUgwSolver {
+    /// Ground cost `L`.
+    pub cost: GroundCost,
+    /// Algorithm-3 parameters.
+    pub cfg: SparUgwConfig,
+    /// Threads row-chunking the O(s²) cost kernel (1 = serial).
+    pub threads: usize,
+}
+
+impl SparUgwSolver {
+    pub(crate) fn from_opts(base: &SolverBase, o: &mut Opts) -> Result<Self> {
+        Ok(SparUgwSolver {
+            cost: o.cost(base.cost)?,
+            cfg: SparUgwConfig {
+                ugw: UgwConfig {
+                    lambda: o.f64("lambda", base.lambda)?,
+                    epsilon: o.f64("epsilon", base.epsilon)?,
+                    outer_iters: o.usize("outer", base.outer_iters)?,
+                    inner_iters: o.usize("inner", base.inner_iters)?,
+                    tol: o.f64("tol", base.tol)?,
+                },
+                sample_size: o.usize("s", base.sample_size)?,
+                shrink: o.f64("shrink", base.shrink)?,
+            },
+            threads: o.usize("threads", base.threads)?,
+        })
+    }
+}
+
+impl GwSolver for SparUgwSolver {
+    fn name(&self) -> &'static str {
+        "spar_ugw"
+    }
+
+    fn solve(&self, p: &GwProblem, rng: &mut Rng, ws: &mut Workspace) -> Result<SolveReport> {
+        let t0 = Instant::now();
+        let set = sample_ugw_set(p, self.cost, &self.cfg, rng);
+        let sample_seconds = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let r = spar_ugw_with_workspace(p, self.cost, &self.cfg, &set, ws, self.threads);
+        Ok(SolveReport {
+            solver: self.name(),
+            value: r.value,
+            plan: Plan::Sparse(r.plan),
+            outer_iters: r.outer_iters,
+            converged: r.converged,
+            timings: PhaseTimings { sample_seconds, solve_seconds: t1.elapsed().as_secs_f64() },
+        })
+    }
 }
 
 #[cfg(test)]

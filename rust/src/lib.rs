@@ -8,6 +8,12 @@
 //!
 //! Architecture (see DESIGN.md):
 //! * **L3 (this crate)** — coordinator, native solvers, substrates.
+//!   Every solver — the Spar-* family and all the comparators — is
+//!   reachable through one interface: the [`gw::solver::GwSolver`] trait
+//!   with its uniform [`gw::solver::SolveReport`], constructed by name
+//!   via the string-keyed [`gw::solver::SolverRegistry`] (the
+//!   coordinator's `PairwiseConfig::solver`, the bench suite's `Method`
+//!   dispatch and the CLI's `--solver`/`--solver-opt` all go through it).
 //!   The whole Spar-* family runs on one workspace-backed engine,
 //!   [`gw::core`] (**SparCore**): a shared outer loop parameterized by a
 //!   [`gw::core::Marginals`] strategy (balanced / fused / unbalanced),

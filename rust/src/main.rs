@@ -2,23 +2,32 @@
 //!
 //! Subcommands:
 //! * `solve`     — one GW solve on a synthetic workload, any method.
+//!                 `--solver <name>` dispatches through the solver
+//!                 registry and prints the full solve report.
 //! * `pairwise`  — the pairwise-GW service over a graph dataset
-//!                 (optionally on the PJRT artifact path).
+//!                 (any registry solver via `--solver`; optionally on the
+//!                 PJRT artifact path).
 //! * `cluster`   — full §6.2 pipeline: pairwise (F)GW → similarity →
 //!                 spectral clustering → Rand index.
+//! * `solvers`   — list the registered solver engines.
 //! * `datasets`  — list the built-in datasets and their statistics.
 //! * `artifacts` — inspect the AOT artifact manifest.
 //!
 //! Run `spargw help` for usage.
 
+use std::collections::BTreeMap;
+
 use spargw::bench::{Method, RunSettings};
 use spargw::cli::Args;
 use spargw::coordinator::service::{similarity_from_distances, PairwiseConfig, PairwiseGw};
 use spargw::datasets::{self, graphsets};
+use spargw::gw::core::Workspace;
+use spargw::gw::solver::SolverRegistry;
 use spargw::gw::GroundCost;
 use spargw::ml::{rand_index, spectral_clustering};
 use spargw::rng::Xoshiro256;
 use spargw::runtime::artifacts::Manifest;
+use spargw::util::error::Result;
 
 const USAGE: &str = "\
 spargw — importance-sparsified Gromov-Wasserstein (Spar-GW) coordinator
@@ -26,15 +35,47 @@ spargw — importance-sparsified Gromov-Wasserstein (Spar-GW) coordinator
 USAGE:
   spargw solve    [--workload moon|graph|gaussian|spiral] [--n 200]
                   [--method spar-gw|egw|pga-gw|emd-gw|s-gwl|lr-gw|ae|sagrow|naive]
+                  [--solver NAME] [--solver-opt k=v]...   # registry dispatch
                   [--cost l1|l2|kl] [--eps 0.01] [--s 0] [--seed 0]
   spargw pairwise [--dataset synthetic|bzr|cox2|cuneiform|firstmm_db|imdb-b]
+                  [--solver NAME] [--solver-opt k=v]...   # engine per request
                   [--cost l1|l2] [--workers 4] [--kernel-threads 1] [--seed 0]
-                  [--artifacts artifacts]        # enable the PJRT path
-  spargw cluster  [--dataset ...] [--cost l1|l2] [--gamma 1.0] [--seed 0]
+                  [--artifacts DIR | --pjrt]              # enable the PJRT path
+  spargw cluster  [--dataset ...] [--solver NAME] [--solver-opt k=v]...
+                  [--cost l1|l2] [--gamma 1.0] [--seed 0]
+  spargw solvers
   spargw datasets [--seed 0]
   spargw artifacts [--dir artifacts]
   spargw help
+
+Registered solvers (spargw solvers): spar_gw spar_fgw spar_ugw egw pga_gw
+emd_gw sagrow lr_gw sgwl anchor
 ";
+
+/// Unwrap a CLI-layer result or exit with a one-line error (no panic
+/// backtrace on malformed input).
+fn ok_or_exit<T>(r: Result<T>) -> T {
+    match r {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// The known subcommands with their registered boolean flags: a
+/// registered flag never swallows the next token as its value, so
+/// `spargw pairwise --pjrt` and flag-before-positional orders both parse.
+const SUBCOMMAND_FLAGS: &[(&str, &[&str])] = &[
+    ("solve", &["verbose"]),
+    ("pairwise", &["pjrt", "verbose"]),
+    ("cluster", &["verbose"]),
+    ("solvers", &[]),
+    ("datasets", &[]),
+    ("artifacts", &[]),
+    ("help", &[]),
+];
 
 fn parse_cost(s: &str) -> GroundCost {
     match s.to_ascii_lowercase().as_str() {
@@ -46,6 +87,24 @@ fn parse_cost(s: &str) -> GroundCost {
             std::process::exit(2);
         }
     }
+}
+
+/// Collect repeated `--solver-opt k=v` occurrences into the registry's
+/// option map.
+fn solver_opts(args: &Args) -> BTreeMap<String, String> {
+    let mut map = BTreeMap::new();
+    for kv in args.opt_all("solver-opt") {
+        match kv.split_once('=') {
+            Some((k, v)) => {
+                map.insert(k.to_string(), v.to_string());
+            }
+            None => {
+                eprintln!("error: --solver-opt expects key=value, got {kv:?}");
+                std::process::exit(2);
+            }
+        }
+    }
+    map
 }
 
 fn make_workload(name: &str, n: usize, rng: &mut Xoshiro256) -> datasets::Instance {
@@ -76,31 +135,63 @@ fn load_dataset(name: &str, seed: u64) -> graphsets::GraphDataset {
     }
 }
 
+fn run_settings(args: &Args) -> RunSettings {
+    RunSettings {
+        epsilon: ok_or_exit(args.f64_or("eps", 0.01)),
+        sample_size: ok_or_exit(args.usize_or("s", 0)),
+        outer_iters: ok_or_exit(args.usize_or("outer", 20)),
+        inner_iters: ok_or_exit(args.usize_or("inner", 50)),
+        ..Default::default()
+    }
+}
+
 fn cmd_solve(args: &Args) {
-    let n = args.usize_or("n", 200);
-    let seed = args.u64_or("seed", 0);
+    let n = ok_or_exit(args.usize_or("n", 200));
+    let seed = ok_or_exit(args.u64_or("seed", 0));
     let cost = parse_cost(args.str_or("cost", "l2"));
+    let workload = args.str_or("workload", "moon");
+    let mut rng = Xoshiro256::new(seed);
+    let inst = make_workload(workload, n, &mut rng);
+    let settings = run_settings(args);
+    let p = inst.problem();
+
+    if let Some(solver_name) = args.opt_str("solver") {
+        // Registry dispatch: any engine by name, options as k=v strings.
+        let solver = ok_or_exit(SolverRegistry::build_with_base(
+            solver_name,
+            &solver_opts(args),
+            &settings.solver_base(cost),
+        ));
+        let mut ws = Workspace::new();
+        let report = ok_or_exit(solver.solve(&p, &mut rng, &mut ws));
+        println!(
+            "solver={} workload={} n={} cost={} -> value={:.6e}  outer={} converged={}  \
+             time={:.3}s (sample {:.3}s + solve {:.3}s)",
+            report.solver,
+            workload,
+            n,
+            cost.name(),
+            report.value,
+            report.outer_iters,
+            report.converged,
+            report.timings.total(),
+            report.timings.sample_seconds,
+            report.timings.solve_seconds,
+        );
+        return;
+    }
+
     let method_name = args.str_or("method", "spar-gw");
     let method = Method::parse(method_name).unwrap_or_else(|| {
         eprintln!("unknown method {method_name:?}");
         std::process::exit(2);
     });
-    let mut rng = Xoshiro256::new(seed);
-    let inst = make_workload(args.str_or("workload", "moon"), n, &mut rng);
-    let settings = RunSettings {
-        epsilon: args.f64_or("eps", 0.01),
-        sample_size: args.usize_or("s", 0),
-        outer_iters: args.usize_or("outer", 20),
-        inner_iters: args.usize_or("inner", 50),
-        ..Default::default()
-    };
-    let p = inst.problem();
     match method.run(&p, None, cost, &settings, &mut rng) {
         Some(out) => {
             println!(
                 "method={} workload={} n={} cost={} eps={} -> value={:.6e}  time={:.3}s",
                 method.name(),
-                args.str_or("workload", "moon"),
+                workload,
                 n,
                 cost.name(),
                 settings.epsilon,
@@ -115,17 +206,28 @@ fn cmd_solve(args: &Args) {
     }
 }
 
-fn cmd_pairwise(args: &Args) {
-    let seed = args.u64_or("seed", 0);
-    let ds = load_dataset(args.str_or("dataset", "synthetic"), seed);
-    let cfg = PairwiseConfig {
+fn pairwise_config(args: &Args, seed: u64) -> PairwiseConfig {
+    PairwiseConfig {
+        solver: args.str_or("solver", "spar_gw").to_string(),
+        solver_opts: solver_opts(args),
         cost: parse_cost(args.str_or("cost", "l2")),
-        workers: args.usize_or("workers", 4),
-        kernel_threads: args.usize_or("kernel-threads", 1),
+        workers: ok_or_exit(args.usize_or("workers", 4)),
+        kernel_threads: ok_or_exit(args.usize_or("kernel-threads", 1)),
         seed,
         ..Default::default()
-    };
-    let mut svc = match args.opt_str("artifacts") {
+    }
+}
+
+fn cmd_pairwise(args: &Args) {
+    let seed = ok_or_exit(args.u64_or("seed", 0));
+    let ds = load_dataset(args.str_or("dataset", "synthetic"), seed);
+    let cfg = pairwise_config(args, seed);
+    // `--artifacts DIR` names the artifact directory; the bare `--pjrt`
+    // flag uses the default one.
+    let artifact_dir = args
+        .opt_str("artifacts")
+        .or(if args.flag("pjrt") { Some("artifacts") } else { None });
+    let mut svc = match artifact_dir {
         Some(dir) => match PairwiseGw::with_runtime(cfg, dir) {
             Ok(s) => s,
             Err(e) => {
@@ -135,8 +237,14 @@ fn cmd_pairwise(args: &Args) {
         },
         None => PairwiseGw::new(cfg),
     };
-    let res = svc.pairwise(&ds).expect("pairwise failed");
-    println!("dataset={} N={} mean_nodes={:.2}", ds.name, ds.len(), ds.mean_nodes());
+    let res = ok_or_exit(svc.pairwise(&ds));
+    println!(
+        "dataset={} N={} mean_nodes={:.2} solver={}",
+        ds.name,
+        ds.len(),
+        ds.mean_nodes(),
+        res.solver
+    );
     println!(
         "pairs: pjrt={} native={}  {}",
         res.pjrt_pairs,
@@ -149,26 +257,21 @@ fn cmd_pairwise(args: &Args) {
 }
 
 fn cmd_cluster(args: &Args) {
-    let seed = args.u64_or("seed", 0);
+    let seed = ok_or_exit(args.u64_or("seed", 0));
     let ds = load_dataset(args.str_or("dataset", "synthetic"), seed);
-    let cfg = PairwiseConfig {
-        cost: parse_cost(args.str_or("cost", "l2")),
-        workers: args.usize_or("workers", 4),
-        kernel_threads: args.usize_or("kernel-threads", 1),
-        seed,
-        ..Default::default()
-    };
+    let cfg = pairwise_config(args, seed);
     let mut svc = PairwiseGw::new(cfg);
-    let res = svc.pairwise(&ds).expect("pairwise failed");
-    let gamma = args.f64_or("gamma", 1.0);
+    let res = ok_or_exit(svc.pairwise(&ds));
+    let gamma = ok_or_exit(args.f64_or("gamma", 1.0));
     let sim = similarity_from_distances(&res.distances, gamma);
     let mut rng = Xoshiro256::new(seed ^ 0x5eed);
     let assign = spectral_clustering(&sim, ds.n_classes, &mut rng);
     let ri = rand_index(&assign, &ds.labels());
     println!(
-        "dataset={} N={} gamma={} RI={:.2}%  ({} pairs, mean {:.1} ms/pair)",
+        "dataset={} N={} solver={} gamma={} RI={:.2}%  ({} pairs, mean {:.1} ms/pair)",
         ds.name,
         ds.len(),
+        res.solver,
         gamma,
         100.0 * ri,
         res.metrics.count(),
@@ -176,8 +279,16 @@ fn cmd_cluster(args: &Args) {
     );
 }
 
+fn cmd_solvers() {
+    println!("registered solvers:");
+    for &name in SolverRegistry::names() {
+        println!("  {name}");
+    }
+    println!("\nselect with --solver NAME; pass options as --solver-opt k=v");
+}
+
 fn cmd_datasets(args: &Args) {
-    let seed = args.u64_or("seed", 0);
+    let seed = ok_or_exit(args.u64_or("seed", 0));
     println!("{:<12} {:>6} {:>12} {:>9} {:>12}", "dataset", "N", "mean_nodes", "classes", "attrs");
     for ds in graphsets::all_datasets(seed) {
         println!(
@@ -208,11 +319,26 @@ fn cmd_artifacts(args: &Args) {
 }
 
 fn main() {
-    let args = Args::from_env();
+    // Two-stage parse: find the subcommand token first (subcommand names
+    // are fixed literals, so this is unambiguous regardless of flag
+    // position), then parse with that subcommand's registered boolean
+    // flags so `--flag <positional>` orders are grammatical.
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let sub = raw
+        .iter()
+        .map(|s| s.as_str())
+        .find(|tok| SUBCOMMAND_FLAGS.iter().any(|(name, _)| name == tok));
+    let flags = SUBCOMMAND_FLAGS
+        .iter()
+        .find(|(name, _)| Some(*name) == sub)
+        .map(|(_, flags)| *flags)
+        .unwrap_or(&[]);
+    let args = Args::parse_with_flags(raw, flags);
     match args.positional(0) {
         Some("solve") => cmd_solve(&args),
         Some("pairwise") => cmd_pairwise(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("solvers") => cmd_solvers(),
         Some("datasets") => cmd_datasets(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("help") | None => print!("{USAGE}"),

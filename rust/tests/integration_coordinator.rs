@@ -59,7 +59,7 @@ fn attributed_dataset_routes_through_fgw() {
     let mut ds = synthetic_ds(3);
     ds.graphs.truncate(6);
     let cfg = PairwiseConfig { workers: 2, seed: 4, ..Default::default() };
-    let fused = PairwiseGw::new(cfg).pairwise(&ds).unwrap().distances;
+    let fused = PairwiseGw::new(cfg.clone()).pairwise(&ds).unwrap().distances;
     // Strip attributes -> plain Spar-GW.
     for g in &mut ds.graphs {
         g.attrs.clear();

@@ -1,0 +1,182 @@
+//! Registry smoke tests: every solver constructible through
+//! `SolverRegistry` runs end-to-end on a tiny fixed problem (m = n = 12)
+//! and returns a sane `SolveReport`; unknown solver names and unknown
+//! option keys fail with descriptive errors listing the valid choices.
+//! This file is also exercised as a dedicated CI step
+//! (`cargo test --release --test registry_smoke`).
+
+use std::collections::BTreeMap;
+
+use spargw::gw::core::Workspace;
+use spargw::gw::solver::{SolverBase, SolverRegistry};
+use spargw::gw::GwProblem;
+use spargw::linalg::Mat;
+use spargw::rng::Xoshiro256;
+use spargw::util::uniform;
+
+const N: usize = 12;
+const OUTER_CAP: usize = 8;
+
+fn relation(n: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::new(seed);
+    let pts: Vec<[f64; 2]> = (0..n).map(|_| [rng.f64(), rng.f64()]).collect();
+    Mat::from_fn(n, n, |i, j| spargw::linalg::sqdist(&pts[i], &pts[j]).sqrt())
+}
+
+fn smoke_base() -> SolverBase {
+    // 300 inner sweeps keep the dense Sinkhorn projections tight on the
+    // 12×12 problem, so the marginal checks below are meaningful.
+    SolverBase { outer_iters: OUTER_CAP, inner_iters: 300, ..Default::default() }
+}
+
+/// Per-solver option overrides for the smoke run (LR-GW's mirror-descent
+/// schedule keeps its own defaults, so pin its cap explicitly).
+fn smoke_opts(name: &str) -> BTreeMap<String, String> {
+    let mut opts = BTreeMap::new();
+    if name == "lr_gw" {
+        opts.insert("outer".to_string(), OUTER_CAP.to_string());
+    }
+    opts
+}
+
+#[test]
+fn every_registered_solver_runs_on_a_tiny_problem() {
+    let c1 = relation(N, 1);
+    let c2 = relation(N, 2);
+    let a = uniform(N);
+    let p = GwProblem::new(&c1, &c2, &a, &a);
+    let base = smoke_base();
+
+    for &name in SolverRegistry::names() {
+        let solver = SolverRegistry::build_with_base(name, &smoke_opts(name), &base)
+            .unwrap_or_else(|e| panic!("{name}: build failed: {e}"));
+        assert_eq!(solver.name(), name, "registry name round-trip");
+        let mut rng = Xoshiro256::new(42);
+        let mut ws = Workspace::new();
+        let r = solver
+            .solve(&p, &mut rng, &mut ws)
+            .unwrap_or_else(|e| panic!("{name}: solve failed: {e}"));
+
+        // A finite, non-negative estimate and a finite plan.
+        assert!(
+            r.value.is_finite() && r.value >= -1e-6,
+            "{name}: value {}",
+            r.value
+        );
+        assert!(r.plan.is_finite(), "{name}: non-finite plan entries");
+        assert!(r.plan.nnz() > 0, "{name}: empty plan");
+        assert!(r.timings.total() >= 0.0, "{name}: negative timings");
+
+        // `converged` is consistent with the iteration cap: nobody
+        // exceeds it, and the iterative engines that report
+        // non-convergence must have exhausted it (sgwl reports the
+        // coarse-level count and never claims convergence; anchor is
+        // one-shot exact with outer_iters = 1).
+        assert!(
+            r.outer_iters <= OUTER_CAP,
+            "{name}: outer_iters {} > cap {OUTER_CAP}",
+            r.outer_iters
+        );
+        if r.converged {
+            assert!(r.outer_iters >= 1, "{name}: converged with zero iterations");
+        } else if name != "sgwl" {
+            assert_eq!(
+                r.outer_iters, OUTER_CAP,
+                "{name}: not converged but stopped before the cap"
+            );
+        }
+
+        // Balanced solvers transport (approximately) unit mass with the
+        // problem marginals; the unbalanced solver only keeps positive
+        // finite mass.
+        if name == "spar_ugw" {
+            assert!(r.plan.sum() > 0.0, "{name}: plan mass {}", r.plan.sum());
+            continue;
+        }
+        let mass = r.plan.sum();
+        assert!(
+            (mass - 1.0).abs() < 0.1,
+            "{name}: plan mass {mass} far from 1"
+        );
+        // Dense engines project (near-)exactly; sparse plans honor the
+        // marginals only on the sampled support.
+        let tol = if name.starts_with("spar") { 0.5 } else { 0.1 };
+        let row_err: f64 =
+            r.plan.row_sums().iter().zip(&a).map(|(x, y)| (x - y).abs()).sum();
+        let col_err: f64 =
+            r.plan.col_sums().iter().zip(&a).map(|(x, y)| (x - y).abs()).sum();
+        assert!(row_err < tol, "{name}: row-marginal L1 error {row_err}");
+        assert!(col_err < tol, "{name}: col-marginal L1 error {col_err}");
+    }
+}
+
+#[test]
+fn structure_only_solvers_decline_fused_descriptively() {
+    let c1 = relation(N, 3);
+    let c2 = relation(N, 4);
+    let a = uniform(N);
+    let gw = GwProblem::new(&c1, &c2, &a, &a);
+    let feat = Mat::full(N, N, 0.5);
+    let fp = spargw::gw::fgw::FgwProblem::new(gw, &feat, 0.6);
+    let base = smoke_base();
+
+    let fused: &[&str] = &["spar_gw", "spar_fgw", "egw", "pga_gw", "emd_gw", "sagrow"];
+    for &name in SolverRegistry::names() {
+        let solver =
+            SolverRegistry::build_with_base(name, &smoke_opts(name), &base).unwrap();
+        let mut rng = Xoshiro256::new(7);
+        let mut ws = Workspace::new();
+        if fused.contains(&name) {
+            assert!(solver.supports_fused(), "{name} should support fused");
+            let r = solver.solve_fused(&fp, &mut rng, &mut ws).unwrap();
+            assert!(r.value.is_finite(), "{name}: fused value {}", r.value);
+        } else {
+            assert!(!solver.supports_fused(), "{name} should be structure-only");
+            let err = solver.solve_fused(&fp, &mut rng, &mut ws).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains(name), "{msg} should name the solver");
+            assert!(msg.contains("fused"), "{msg} should explain the limitation");
+        }
+    }
+}
+
+#[test]
+fn unknown_solver_name_lists_valid_choices() {
+    let err = SolverRegistry::build("warp_drive", &BTreeMap::new()).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("unknown solver"), "{msg}");
+    assert!(msg.contains("warp_drive"), "{msg}");
+    for &name in SolverRegistry::names() {
+        assert!(msg.contains(name), "{msg} missing valid choice {name}");
+    }
+}
+
+#[test]
+fn unknown_solver_opt_key_lists_valid_keys() {
+    for &name in SolverRegistry::names() {
+        let mut opts = BTreeMap::new();
+        opts.insert("definitely_not_a_key".to_string(), "1".to_string());
+        let err = SolverRegistry::build(name, &opts).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("definitely_not_a_key"), "{name}: {msg}");
+        assert!(msg.contains("valid keys"), "{name}: {msg}");
+        assert!(msg.contains("cost"), "{name}: {msg} should list the cost key");
+    }
+}
+
+#[test]
+fn lr_gw_declines_l1_with_an_error_not_a_panic() {
+    let c1 = relation(N, 5);
+    let c2 = relation(N, 6);
+    let a = uniform(N);
+    let p = GwProblem::new(&c1, &c2, &a, &a);
+    let mut opts = smoke_opts("lr_gw");
+    opts.insert("cost".to_string(), "l1".to_string());
+    let solver = SolverRegistry::build_with_base("lr_gw", &opts, &smoke_base()).unwrap();
+    let mut rng = Xoshiro256::new(8);
+    let mut ws = Workspace::new();
+    let err = solver.solve(&p, &mut rng, &mut ws).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("decomposable"), "{msg}");
+    assert!(msg.contains("l1"), "{msg}");
+}
