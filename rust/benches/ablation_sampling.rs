@@ -54,7 +54,7 @@ fn main() {
                 let stats = repeat_timed(reps, |r| {
                     let mut rng =
                         Xoshiro256::new(derive_seed(0xAB, (r * 64 + s_mult) as u64));
-                    let mut sampler = GwSampler::new(p.a, p.b, shrink);
+                    let sampler = GwSampler::new(p.a, p.b, shrink);
                     let set = sampler.sample_iid(&mut rng, s);
                     spar_gw_with_set(&p, GroundCost::L2, &cfg, &set).value
                 });

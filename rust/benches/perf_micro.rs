@@ -72,7 +72,7 @@ fn main() {
 
     // 1. Sampling S: product-alias build + s draws.
     let t = bench(reps, || {
-        let mut alias = ProductAlias::new(p.a, p.b);
+        let alias = ProductAlias::new(p.a, p.b);
         let mut r = Xoshiro256::new(1);
         std::hint::black_box(alias.sample_many(&mut r, s));
     });
@@ -80,14 +80,14 @@ fn main() {
 
     // 2. Importance sampler end-to-end (probabilities + dedup + weights).
     let t = bench(reps, || {
-        let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+        let sampler = GwSampler::new(p.a, p.b, 0.0);
         let mut r = Xoshiro256::new(2);
         std::hint::black_box(sampler.sample_iid(&mut r, s));
     });
     emit("gw_sampler_sample_iid", t);
 
     // Shared sampled set for the kernel benches.
-    let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+    let sampler = GwSampler::new(p.a, p.b, 0.0);
     let mut r = Xoshiro256::new(3);
     let set = sampler.sample_iid(&mut r, s);
     let s_eff = set.len();

@@ -41,7 +41,7 @@ fn main() {
         for r in 0..reps {
             let mut rng = Xoshiro256::new(derive_seed(31, (s * 97 + r) as u64));
             let cfg = SparGwConfig { sample_size: s, epsilon: 0.01, ..Default::default() };
-            let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+            let sampler = GwSampler::new(p.a, p.b, 0.0);
             let set = sampler.sample_iid(&mut rng, s);
             let res = spar_gw_with_set(&p, GroundCost::L2, &cfg, &set);
             gaps.push(stationarity_gap_sparse(&p, &res.plan, GroundCost::L2));
@@ -59,7 +59,7 @@ fn main() {
         for r in 0..reps {
             let mut rng = Xoshiro256::new(derive_seed(37, (r as u64) ^ eps.to_bits()));
             let cfg = SparGwConfig { sample_size: 16 * n, epsilon: eps, ..Default::default() };
-            let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+            let sampler = GwSampler::new(p.a, p.b, 0.0);
             let set = sampler.sample_iid(&mut rng, 16 * n);
             let res = spar_gw_with_set(&p, GroundCost::L2, &cfg, &set);
             gaps.push(stationarity_gap_sparse(&p, &res.plan, GroundCost::L2));
@@ -78,7 +78,7 @@ fn main() {
             let mut rng = Xoshiro256::new(derive_seed(41, r as u64));
             let cfg = SparGwConfig { sample_size: 16 * n, epsilon: 0.01, ..Default::default() };
             let set = if scheme == "iid" {
-                let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+                let sampler = GwSampler::new(p.a, p.b, 0.0);
                 sampler.sample_iid(&mut rng, 16 * n)
             } else {
                 sample_poisson(&mut rng, p.a, p.b, 0.0, 16 * n)

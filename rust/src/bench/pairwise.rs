@@ -5,6 +5,7 @@
 //! pipeline.)
 
 use super::suite::{Method, RunSettings};
+use crate::coordinator::cache::StructureCache;
 use crate::coordinator::scheduler::run_jobs;
 use crate::datasets::graphsets::{attribute_distance, GraphDataset};
 use crate::gw::{GroundCost, GwProblem};
@@ -15,6 +16,9 @@ use crate::rng::{derive_seed, Xoshiro256};
 /// `method`. Attributed datasets use the fused objective when the method
 /// supports it (α from `settings`); structure-only methods fall back to
 /// plain GW. Deterministic per-pair RNG streams keyed on `seed`.
+/// Per-structure preprocessing (relation + marginal) goes through the
+/// coordinator's [`StructureCache`], so it runs once per graph instead of
+/// once per pair side.
 pub fn pairwise_distances(
     dataset: &GraphDataset,
     method: Method,
@@ -24,16 +28,20 @@ pub fn pairwise_distances(
     seed: u64,
 ) -> Mat {
     let n_items = dataset.len();
-    let marginals: Vec<Vec<f64>> = dataset.graphs.iter().map(|g| g.marginal()).collect();
+    let cache = StructureCache::build(dataset);
     let pairs: Vec<(usize, usize)> =
         (0..n_items).flat_map(|i| ((i + 1)..n_items).map(move |j| (i, j))).collect();
 
     let vals = run_jobs(pairs.len(), workers, |k| {
         let (i, j) = pairs[k];
-        let gi = &dataset.graphs[i];
-        let gj = &dataset.graphs[j];
-        let p = GwProblem::new(&gi.adj, &gj.adj, &marginals[i], &marginals[j]);
-        let feat = if method.supports_fused() { attribute_distance(gi, gj) } else { None };
+        let (gi, gj) = (&dataset.graphs[i], &dataset.graphs[j]);
+        let (sx, sy) = (cache.get(i), cache.get(j));
+        let p = GwProblem::new(&gi.adj, &gj.adj, &sx.marginal, &sy.marginal);
+        let feat = if method.supports_fused() {
+            attribute_distance(gi, gj)
+        } else {
+            None
+        };
         let mut rng = Xoshiro256::new(derive_seed(seed, k as u64));
         method
             .run(&p, feat.as_ref(), cost, settings, &mut rng)

@@ -27,6 +27,11 @@ pub fn pad_marginal(a: &[f64], n_pad: usize) -> Vec<f64> {
     out
 }
 
+/// Size classes the pairwise engine uses when reporting the distribution
+/// of pair sizes (max node count per pair) in a Gram run — the same
+/// ascending-bucket convention the artifact path compiles against.
+pub const REPORT_BUCKETS: &[usize] = &[16, 32, 64, 128, 256, 512];
+
 /// Choose the smallest bucket ≥ n from an ascending list.
 pub fn choose_bucket(n: usize, buckets: &[usize]) -> Option<usize> {
     buckets.iter().copied().find(|&b| b >= n)

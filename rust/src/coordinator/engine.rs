@@ -1,0 +1,675 @@
+//! **The sharded pairwise Gram engine** — K×K distance matrices of
+//! GW/FGW/UGW at service scale.
+//!
+//! Three pieces industrialize the coordinator's pairwise path:
+//!
+//! 1. **Per-structure preprocessing cache** ([`StructureCache`]): each
+//!    input's marginal and Eq. (5) sampling factors are computed exactly
+//!    once and shared immutably across the O(K²) pairs, instead of being
+//!    re-derived per pair (relation matrices are already materialized by
+//!    the dataset and travel by reference). Dispatch goes through the
+//!    [`GwSolver`](crate::gw::solver::GwSolver) prepared entry points, so
+//!    every registry solver runs on the cached structures (the Spar-*
+//!    family additionally reuses the cached sampling factors).
+//! 2. **Deterministic sharding**: the upper-triangular pair set is split
+//!    by [`shard_partition`] (round-robin on the canonical pair index), a
+//!    pure function of `(n_pairs, shards)`. A Gram job can therefore be
+//!    partitioned across processes (`--shard i/of`) and every process
+//!    computes exactly the rows a single-process run would — per-pair RNG
+//!    streams are keyed on the pair's `(i, j)`, never on scheduling.
+//! 3. **Streaming sink with checkpoint/resume**: completed shards append
+//!    their result rows (with bit-exact f64 encodings) plus a `done`
+//!    marker to a line-delimited file; a restarted run skips finished
+//!    shards and recomputes only unfinished ones. A truncated tail (a run
+//!    killed mid-write) is detected and the affected shard recomputed.
+//!    Shard runs sharing one sink file must execute **sequentially**
+//!    (each run rewrites the sink from its trusted prefix); concurrent
+//!    writers to the same path are not supported — give each process its
+//!    own working sink, or serialize the shard runs as CI does.
+//!
+//! Determinism contract (locked by `rust/tests/determinism.rs`): the Gram
+//! matrix is bit-identical across worker counts, kernel-thread counts,
+//! shard counts, cached-vs-uncached paths, and fresh-vs-resumed runs.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use super::bucket::{bucket_histogram, REPORT_BUCKETS};
+use super::cache::{CacheStats, StructureCache};
+use super::metrics::MetricsRecorder;
+use super::scheduler::{run_jobs_with, shard_partition};
+use super::service::PairwiseConfig;
+use crate::datasets::graphsets::{attribute_distance, GraphDataset};
+use crate::gw::core::Workspace;
+use crate::gw::fgw::FgwProblem;
+use crate::gw::solver::GwSolver;
+use crate::gw::GwProblem;
+use crate::linalg::Mat;
+use crate::rng::{derive_seed, Rng};
+use crate::util::error::Result;
+use crate::{bail, ensure, format_err};
+
+/// Sink format version tag (first header field after the magic).
+const SINK_VERSION: &str = "v1";
+
+/// Engine-level options layered on top of [`PairwiseConfig`]: how the
+/// pair set is sharded, where results stream, and whether the
+/// per-structure cache is used (disabling it exists for the determinism
+/// harness's cached-vs-uncached comparison, not for production).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Deterministic shard count the pair set is split into (≥ 1).
+    pub shards: usize,
+    /// Run only this shard (multi-process partitioning, `--shard i/of`
+    /// with `shards = of`). `None` runs every shard.
+    pub only_shard: Option<usize>,
+    /// Line-delimited result sink; completed shards append rows and a
+    /// `done` marker here. Runs sharing one sink must execute
+    /// sequentially (no concurrent writers to the same path).
+    pub sink: Option<PathBuf>,
+    /// Resume from the sink: skip shards already marked done (requires
+    /// `sink`).
+    pub resume: bool,
+    /// Use the per-structure preprocessing cache (default). `false`
+    /// re-derives structures per pair — the bit-identical reference path.
+    pub use_cache: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            shards: 1,
+            only_shard: None,
+            sink: None,
+            resume: false,
+            use_cache: true,
+        }
+    }
+}
+
+/// Output of a Gram computation (possibly partial, when `only_shard`
+/// restricted the run).
+pub struct GramResult {
+    /// Symmetric K×K distance matrix. Rows of shards neither run nor
+    /// resumed (multi-process partitioning) remain zero.
+    pub distances: Mat,
+    /// Registry name of the executing solver.
+    pub solver: String,
+    /// Latency metrics over the pairs computed *by this run*, tagged with
+    /// solver and shard schedule.
+    pub metrics: MetricsRecorder,
+    /// Pairs solved by this run.
+    pub computed_pairs: usize,
+    /// Pairs restored from the sink instead of being recomputed.
+    pub resumed_pairs: usize,
+    /// Shards executed by this run.
+    pub shards_run: usize,
+    /// Shards skipped because the sink already marked them done.
+    pub shards_skipped: usize,
+    /// Preprocessing-cache counters (`built == K` when the cache is on).
+    pub cache: CacheStats,
+    /// Pair-size distribution over the full pair set, as
+    /// `(bucket, count)` rows ([`REPORT_BUCKETS`] size classes).
+    pub size_histogram: Vec<(usize, usize)>,
+}
+
+/// The sharded pairwise Gram engine. Construct with a solver-level
+/// [`PairwiseConfig`] plus engine-level [`EngineConfig`], then call
+/// [`PairwiseEngine::gram`].
+pub struct PairwiseEngine {
+    cfg: PairwiseConfig,
+    opts: EngineConfig,
+}
+
+/// State recovered from a sink file.
+struct SinkState {
+    /// Shards with a `done` marker.
+    done: BTreeSet<usize>,
+    /// Result rows `(i, j, value)` belonging to done shards.
+    rows: Vec<(usize, usize, f64)>,
+    /// The trusted lines verbatim (each done shard's block, in original
+    /// order) — what a resume rewrites the sink from, dropping any
+    /// partial shard's rows or truncated tail.
+    raw: Vec<String>,
+}
+
+impl SinkState {
+    fn empty() -> Self {
+        SinkState { done: BTreeSet::new(), rows: Vec::new(), raw: Vec::new() }
+    }
+}
+
+impl PairwiseEngine {
+    pub fn new(cfg: PairwiseConfig, opts: EngineConfig) -> Self {
+        PairwiseEngine { cfg, opts }
+    }
+
+    /// Compute (this process's share of) the pairwise Gram matrix,
+    /// building the configured solver through the registry.
+    pub fn gram(&self, dataset: &GraphDataset) -> Result<GramResult> {
+        let solver = self
+            .cfg
+            .build_solver()
+            .map_err(|e| e.wrap("building pairwise solver"))?;
+        self.gram_with_solver(dataset, solver.as_ref())
+    }
+
+    /// [`PairwiseEngine::gram`] with a caller-built solver (the service
+    /// hands over the one it already constructed for path selection).
+    pub fn gram_with_solver(
+        &self,
+        dataset: &GraphDataset,
+        solver: &dyn GwSolver,
+    ) -> Result<GramResult> {
+        let shards = self.opts.shards.max(1);
+        if let Some(only) = self.opts.only_shard {
+            ensure!(
+                only < shards,
+                "--shard {only}/{shards}: shard index must be < shard count"
+            );
+        }
+        ensure!(
+            !self.opts.resume || self.opts.sink.is_some(),
+            "resume requested but no sink path configured"
+        );
+
+        let n_items = dataset.len();
+        let pairs: Vec<(usize, usize)> = (0..n_items)
+            .flat_map(|i| ((i + 1)..n_items).map(move |j| (i, j)))
+            .collect();
+        let shard_sets = shard_partition(pairs.len(), shards);
+        let header = sink_header(
+            solver.name(),
+            n_items,
+            shards,
+            config_fingerprint(&self.cfg, dataset),
+        );
+
+        // Recover prior progress before touching the sink for writing. A
+        // pre-existing sink without `resume` is refused rather than
+        // silently truncated — it may hold another process's finished
+        // shards.
+        let recovered = match &self.opts.sink {
+            Some(path) if path.exists() => {
+                if !self.opts.resume {
+                    bail!(
+                        "sink {} already exists: resume to continue it, or delete it \
+                         to start fresh",
+                        path.display()
+                    );
+                }
+                parse_sink(path, &header)
+                    .map_err(|e| e.wrap(format!("resuming from sink {}", path.display())))?
+            }
+            _ => SinkState::empty(),
+        };
+
+        let mut distances = Mat::zeros(n_items, n_items);
+        let mut resumed_pairs = 0usize;
+        for &(i, j, value) in &recovered.rows {
+            ensure!(
+                i < n_items && j < n_items,
+                "sink row ({i},{j}) out of range for n={n_items}"
+            );
+            distances[(i, j)] = value;
+            distances[(j, i)] = value;
+            resumed_pairs += 1;
+        }
+
+        // (Re)write the sink up to its trusted prefix: header plus every
+        // intact done-shard block. This heals a tail truncated by a kill
+        // mid-write — the partial shard's rows are dropped here and the
+        // shard recomputed below — instead of appending after a dangling
+        // half line and poisoning every later resume.
+        let mut sink_file = match &self.opts.sink {
+            Some(path) => Some(write_sink_base(path, &header, &recovered.raw)?),
+            None => None,
+        };
+
+        let to_run: Vec<usize> = match self.opts.only_shard {
+            Some(only) => vec![only],
+            None => (0..shards).collect(),
+        };
+        // Build the preprocessing cache only when at least one shard will
+        // actually compute — a fully resumed run restores everything from
+        // the sink and should not pay the O(Σ nᵢ²) per-structure pass.
+        let will_compute = to_run.iter().any(|s| !recovered.done.contains(s))
+            && !pairs.is_empty();
+        let cache = if self.opts.use_cache && will_compute {
+            Some(StructureCache::build(dataset))
+        } else {
+            None
+        };
+
+        let mut metrics = MetricsRecorder::new();
+        metrics.set_solver(solver.name());
+        let mut computed_pairs = 0usize;
+        let mut shards_run = 0usize;
+        let mut shards_skipped = 0usize;
+
+        for &shard in &to_run {
+            if recovered.done.contains(&shard) {
+                shards_skipped += 1;
+                continue;
+            }
+            let jobs = &shard_sets[shard];
+            let wall = Instant::now();
+            let solver_ref = solver;
+            let cache_ref = cache.as_ref();
+            let cfg = &self.cfg;
+            let results: Vec<Result<(f64, f64)>> = run_jobs_with(
+                jobs.len(),
+                cfg.workers,
+                Workspace::new,
+                |ws, q| {
+                    let (i, j) = pairs[jobs[q]];
+                    let t0 = Instant::now();
+                    let mut rng =
+                        Rng::new(derive_seed(cfg.seed, (i * n_items + j) as u64));
+                    let gi = &dataset.graphs[i];
+                    let gj = &dataset.graphs[j];
+                    let feat = attribute_distance(gi, gj);
+                    let report = match cache_ref {
+                        Some(cache) => {
+                            // Cached path: immutable prepared structures,
+                            // preprocessing already done once per input;
+                            // relation matrices come straight from the
+                            // dataset (never copied).
+                            let sx = cache.get(i);
+                            let sy = cache.get(j);
+                            let p = GwProblem::new(
+                                &gi.adj,
+                                &gj.adj,
+                                &sx.marginal,
+                                &sy.marginal,
+                            );
+                            match feat {
+                                Some(feat) if solver_ref.supports_fused() => {
+                                    let fp = FgwProblem::new(p, &feat, cfg.alpha);
+                                    solver_ref.solve_fused_prepared(&fp, sx, sy, &mut rng, ws)?
+                                }
+                                _ => solver_ref.solve_prepared(&p, sx, sy, &mut rng, ws)?,
+                            }
+                        }
+                        None => {
+                            // Reference path: per-pair re-derivation, the
+                            // pre-cache behaviour the determinism harness
+                            // compares against.
+                            let (a, b) = (gi.marginal(), gj.marginal());
+                            let p = GwProblem::new(&gi.adj, &gj.adj, &a, &b);
+                            match feat {
+                                Some(feat) if solver_ref.supports_fused() => {
+                                    let fp = FgwProblem::new(p, &feat, cfg.alpha);
+                                    solver_ref.solve_fused(&fp, &mut rng, ws)?
+                                }
+                                _ => solver_ref.solve(&p, &mut rng, ws)?,
+                            }
+                        }
+                    };
+                    Ok((report.value, t0.elapsed().as_secs_f64()))
+                },
+            );
+
+            let mut lats = Vec::with_capacity(results.len());
+            let mut shard_rows = Vec::with_capacity(results.len());
+            for (q, res) in results.into_iter().enumerate() {
+                let (i, j) = pairs[jobs[q]];
+                let (value, lat) = res.map_err(|e| {
+                    e.wrap(format!(
+                        "shard {shard} pair ({i},{j}) via solver {:?}",
+                        solver.name()
+                    ))
+                })?;
+                distances[(i, j)] = value;
+                distances[(j, i)] = value;
+                shard_rows.push((i, j, value, lat));
+                lats.push(lat);
+                computed_pairs += 1;
+            }
+            if let Some(f) = sink_file.as_mut() {
+                append_shard(f, shard, &shard_rows).map_err(|e| {
+                    e.wrap(format!("writing shard {shard} to sink"))
+                })?;
+            }
+            metrics.record_batch(&lats, wall.elapsed().as_secs_f64());
+            shards_run += 1;
+        }
+
+        metrics.set_shards(shards_run, shards);
+        let sizes: Vec<usize> = pairs
+            .iter()
+            .map(|&(i, j)| {
+                dataset.graphs[i].n_nodes().max(dataset.graphs[j].n_nodes())
+            })
+            .collect();
+        Ok(GramResult {
+            distances,
+            solver: solver.name().to_string(),
+            metrics,
+            computed_pairs,
+            resumed_pairs,
+            shards_run,
+            shards_skipped,
+            cache: cache.map(|c| c.stats()).unwrap_or_default(),
+            size_histogram: bucket_histogram(&sizes, REPORT_BUCKETS),
+        })
+    }
+}
+
+/// FNV-1a digest of everything that decides the *values* of a Gram run:
+/// solver config (typed fields and string overrides), ground cost, seed,
+/// and dataset identity — name, shape AND contents (adjacency and
+/// attribute bits), so resuming against a same-shaped but differently
+/// generated dataset is refused. Pure throughput knobs (`workers`,
+/// `kernel_threads`, the cache toggle) are deliberately excluded — the
+/// determinism contract says they never change bits, so a checkpoint
+/// written at one worker count must resume at another.
+fn config_fingerprint(cfg: &PairwiseConfig, dataset: &GraphDataset) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    eat(dataset.name.as_bytes());
+    eat(&(dataset.len() as u64).to_le_bytes());
+    for g in &dataset.graphs {
+        eat(&(g.n_nodes() as u64).to_le_bytes());
+        for &v in g.adj.data() {
+            eat(&v.to_bits().to_le_bytes());
+        }
+        for attr in &g.attrs {
+            for &v in attr {
+                eat(&v.to_bits().to_le_bytes());
+            }
+        }
+    }
+    eat(cfg.solver.as_bytes());
+    for (k, v) in &cfg.solver_opts {
+        eat(k.as_bytes());
+        eat(v.as_bytes());
+    }
+    eat(cfg.cost.name().as_bytes());
+    eat(&cfg.seed.to_le_bytes());
+    eat(&cfg.alpha.to_bits().to_le_bytes());
+    eat(&cfg.spar.epsilon.to_bits().to_le_bytes());
+    eat(&(cfg.spar.sample_size as u64).to_le_bytes());
+    eat(&(cfg.spar.outer_iters as u64).to_le_bytes());
+    eat(&(cfg.spar.inner_iters as u64).to_le_bytes());
+    eat(format!("{:?}", cfg.spar.reg).as_bytes());
+    eat(&cfg.spar.shrink.to_bits().to_le_bytes());
+    eat(&cfg.spar.tol.to_bits().to_le_bytes());
+    h
+}
+
+/// The sink's header line: format version, run shape, and the config
+/// fingerprint, so a resumed run cannot silently merge rows from a
+/// different solver, dataset, seed, option set or shard layout.
+fn sink_header(solver: &str, n: usize, shards: usize, fingerprint: u64) -> String {
+    format!(
+        "# spargw-sink {SINK_VERSION} solver={solver} n={n} shards={shards} \
+         config={fingerprint:016x}"
+    )
+}
+
+/// Create/rewrite the sink to its trusted base — the header plus the
+/// verbatim blocks of every intact done shard — and return the handle
+/// positioned for appending new shards. Rewriting (rather than appending
+/// to whatever is on disk) drops truncated tails and partial-shard rows,
+/// so the checkpoint heals instead of accreting garbage.
+fn write_sink_base(path: &Path, header: &str, raw: &[String]) -> Result<std::fs::File> {
+    let mut f = std::fs::File::create(path)?;
+    let body: usize = raw.iter().map(|l| l.len() + 1).sum();
+    let mut block = String::with_capacity(header.len() + 1 + body);
+    block.push_str(header);
+    block.push('\n');
+    for line in raw {
+        block.push_str(line);
+        block.push('\n');
+    }
+    f.write_all(block.as_bytes())?;
+    f.flush()?;
+    Ok(f)
+}
+
+/// Append one completed shard: its result rows, then the `done` marker,
+/// flushed so a kill after this call never loses the shard. The f64 value
+/// is stored both as exact bits (hex) and human-readable.
+fn append_shard(
+    f: &mut std::fs::File,
+    shard: usize,
+    rows: &[(usize, usize, f64, f64)],
+) -> Result<()> {
+    let mut block = String::new();
+    for &(i, j, value, lat) in rows {
+        block.push_str(&format!(
+            "pair {shard} {i} {j} {:016x} {value:.9e} {lat:.6}\n",
+            value.to_bits()
+        ));
+    }
+    block.push_str(&format!("done {shard}\n"));
+    f.write_all(block.as_bytes())?;
+    f.flush()?;
+    Ok(())
+}
+
+/// Parse a sink file back into recovered state. Only rows of shards whose
+/// `done` marker was written count; a malformed line (a run killed
+/// mid-write truncates the tail) stops parsing there, so the partial
+/// shard it belonged to is recomputed.
+fn parse_sink(path: &Path, expected_header: &str) -> Result<SinkState> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| format_err!("sink is empty (no header)"))?;
+    ensure!(
+        header == expected_header,
+        "sink header mismatch: found {header:?}, expected {expected_header:?} \
+         (different solver, dataset size or shard layout)"
+    );
+    // Per-shard staging: rows and their verbatim lines graduate into the
+    // trusted state only when the shard's `done` marker parses.
+    let mut pending: BTreeMap<usize, Vec<(usize, usize, f64)>> = BTreeMap::new();
+    let mut pending_lines: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    let mut state = SinkState::empty();
+    for line in lines {
+        let fields: Vec<&str> = line.split_ascii_whitespace().collect();
+        let ok = match fields.as_slice() {
+            ["pair", shard, i, j, bits, _value, _lat] => {
+                match (
+                    shard.parse::<usize>(),
+                    i.parse::<usize>(),
+                    j.parse::<usize>(),
+                    u64::from_str_radix(bits, 16),
+                ) {
+                    (Ok(s), Ok(i), Ok(j), Ok(bits)) => {
+                        pending
+                            .entry(s)
+                            .or_default()
+                            .push((i, j, f64::from_bits(bits)));
+                        pending_lines.entry(s).or_default().push(line.to_string());
+                        true
+                    }
+                    _ => false,
+                }
+            }
+            ["done", shard] => match shard.parse::<usize>() {
+                Ok(s) => {
+                    state.done.insert(s);
+                    if let Some(rows) = pending.remove(&s) {
+                        state.rows.extend(rows);
+                    }
+                    state.raw.extend(pending_lines.remove(&s).unwrap_or_default());
+                    state.raw.push(line.to_string());
+                    true
+                }
+                Err(_) => false,
+            },
+            [] => true, // tolerate blank lines
+            _ => false,
+        };
+        if !ok {
+            // Truncated tail from an interrupted write: everything before
+            // this line is intact (shards are only trusted once their
+            // `done` marker parsed), everything from here on is discarded.
+            break;
+        }
+    }
+    Ok(state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::graphsets::imdb_b;
+    use crate::gw::spar_gw::SparGwConfig;
+
+    fn tiny_cfg(seed: u64) -> PairwiseConfig {
+        PairwiseConfig {
+            seed,
+            spar: SparGwConfig {
+                sample_size: 48,
+                outer_iters: 3,
+                inner_iters: 6,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    fn tiny_dataset() -> GraphDataset {
+        let mut ds = imdb_b(3);
+        ds.graphs.truncate(6);
+        ds
+    }
+
+    #[test]
+    fn gram_matches_shape_and_counts() {
+        let ds = tiny_dataset();
+        let eng = PairwiseEngine::new(tiny_cfg(5), EngineConfig::default());
+        let g = eng.gram(&ds).unwrap();
+        let n = ds.len();
+        assert_eq!(g.distances.shape(), (n, n));
+        assert_eq!(g.computed_pairs, n * (n - 1) / 2);
+        assert_eq!(g.resumed_pairs, 0);
+        assert_eq!(g.shards_run, 1);
+        assert_eq!(g.cache.built, n);
+        assert_eq!(g.cache.hits, 2 * g.computed_pairs);
+        let histo_total: usize = g.size_histogram.iter().map(|&(_, c)| c).sum();
+        assert_eq!(histo_total, g.computed_pairs);
+    }
+
+    #[test]
+    fn only_shard_computes_its_subset() {
+        let ds = tiny_dataset();
+        let n = ds.len();
+        let all_pairs = n * (n - 1) / 2;
+        let opts = EngineConfig { shards: 3, only_shard: Some(1), ..Default::default() };
+        let eng = PairwiseEngine::new(tiny_cfg(5), opts);
+        let g = eng.gram(&ds).unwrap();
+        assert_eq!(g.shards_run, 1);
+        assert!(g.computed_pairs < all_pairs);
+        assert_eq!(g.computed_pairs, shard_partition(all_pairs, 3)[1].len());
+    }
+
+    #[test]
+    fn shard_index_out_of_range_errors() {
+        let ds = tiny_dataset();
+        let opts = EngineConfig { shards: 2, only_shard: Some(2), ..Default::default() };
+        let eng = PairwiseEngine::new(tiny_cfg(1), opts);
+        let msg = format!("{}", eng.gram(&ds).unwrap_err());
+        assert!(msg.contains("shard index"), "{msg}");
+    }
+
+    #[test]
+    fn resume_without_sink_errors() {
+        let ds = tiny_dataset();
+        let opts = EngineConfig { resume: true, ..Default::default() };
+        let eng = PairwiseEngine::new(tiny_cfg(1), opts);
+        let msg = format!("{}", eng.gram(&ds).unwrap_err());
+        assert!(msg.contains("resume"), "{msg}");
+    }
+
+    #[test]
+    fn sink_header_mismatch_is_descriptive() {
+        let dir = std::env::temp_dir().join("spargw_engine_header_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sink.txt");
+        std::fs::write(&path, "# spargw-sink v1 solver=sagrow n=99 shards=7 config=0\n")
+            .unwrap();
+        let ds = tiny_dataset();
+        let opts = EngineConfig {
+            sink: Some(path.clone()),
+            resume: true,
+            ..Default::default()
+        };
+        let eng = PairwiseEngine::new(tiny_cfg(1), opts);
+        let msg = format!("{}", eng.gram(&ds).unwrap_err());
+        assert!(msg.contains("header mismatch"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn existing_sink_without_resume_is_refused() {
+        // A pre-existing sink may hold another process's finished shards:
+        // a fresh run must refuse it rather than silently truncate.
+        let dir = std::env::temp_dir().join("spargw_engine_clobber_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sink.txt");
+        std::fs::remove_file(&path).ok();
+        let ds = tiny_dataset();
+        let mk = |resume| EngineConfig {
+            shards: 2,
+            only_shard: Some(0),
+            sink: Some(path.clone()),
+            resume,
+            ..Default::default()
+        };
+        PairwiseEngine::new(tiny_cfg(2), mk(false)).gram(&ds).unwrap();
+        let before = std::fs::read_to_string(&path).unwrap();
+        let msg = format!(
+            "{}",
+            PairwiseEngine::new(tiny_cfg(2), mk(false)).gram(&ds).unwrap_err()
+        );
+        assert!(msg.contains("already exists"), "{msg}");
+        assert_eq!(
+            before,
+            std::fs::read_to_string(&path).unwrap(),
+            "refused run must not touch the sink"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_refuses_a_different_seed_or_options() {
+        // The config fingerprint in the header pins the run semantics:
+        // same solver/n/shards but a different seed (or solver option)
+        // must not merge.
+        let dir = std::env::temp_dir().join("spargw_engine_fingerprint_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sink.txt");
+        std::fs::remove_file(&path).ok();
+        let ds = tiny_dataset();
+        let mk = |seed, resume| {
+            let opts = EngineConfig {
+                shards: 2,
+                only_shard: Some(0),
+                sink: Some(path.clone()),
+                resume,
+                ..Default::default()
+            };
+            PairwiseEngine::new(tiny_cfg(seed), opts)
+        };
+        mk(1, false).gram(&ds).unwrap();
+        let msg = format!("{}", mk(2, true).gram(&ds).unwrap_err());
+        assert!(msg.contains("header mismatch"), "{msg}");
+        // Same seed resumes cleanly.
+        let g = mk(1, true).gram(&ds).unwrap();
+        assert_eq!(g.shards_skipped, 1);
+        std::fs::remove_file(&path).ok();
+    }
+}

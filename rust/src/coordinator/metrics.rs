@@ -7,6 +7,8 @@ pub struct MetricsRecorder {
     latencies: Vec<f64>,
     total_wall: f64,
     solver: Option<String>,
+    /// (shards executed, total shard count) when the sharded engine ran.
+    shards: Option<(usize, usize)>,
 }
 
 impl MetricsRecorder {
@@ -22,6 +24,17 @@ impl MetricsRecorder {
     /// Registry name of the executing solver, if one was recorded.
     pub fn solver(&self) -> Option<&str> {
         self.solver.as_deref()
+    }
+
+    /// Tag this recorder with the sharded engine's schedule: how many
+    /// shards this process executed out of the deterministic total.
+    pub fn set_shards(&mut self, run: usize, total: usize) {
+        self.shards = Some((run, total));
+    }
+
+    /// `(shards executed, total shards)` when tagged by the engine.
+    pub fn shards(&self) -> Option<(usize, usize)> {
+        self.shards
     }
 
     pub fn record(&mut self, seconds: f64) {
@@ -67,8 +80,12 @@ impl MetricsRecorder {
             Some(name) => format!("solver={name} "),
             None => String::new(),
         };
+        let shards = match self.shards {
+            Some((run, total)) => format!("shards={run}/{total} "),
+            None => String::new(),
+        };
         format!(
-            "{solver}jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s",
+            "{solver}{shards}jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s",
             self.count(),
             self.mean(),
             self.percentile(0.5),
@@ -119,5 +136,19 @@ mod tests {
         m.record(0.5);
         assert_eq!(m.solver(), Some("sagrow"));
         assert!(m.summary().starts_with("solver=sagrow "), "{}", m.summary());
+    }
+
+    #[test]
+    fn shard_tag_appears_in_summary() {
+        let mut m = MetricsRecorder::new();
+        m.set_solver("spar_gw");
+        m.set_shards(2, 3);
+        m.record(0.1);
+        assert_eq!(m.shards(), Some((2, 3)));
+        assert!(
+            m.summary().contains("shards=2/3 "),
+            "{}",
+            m.summary()
+        );
     }
 }

@@ -8,21 +8,34 @@
 //!   compiled artifact bucket so one PJRT executable is reused across
 //!   every pair in the class (compile-once, execute-many);
 //! * [`scheduler`] — a work-queue worker pool (std threads; tokio is
-//!   unavailable offline) with deterministic per-job RNG streams;
+//!   unavailable offline) with deterministic per-job RNG streams and the
+//!   deterministic [`scheduler::shard_partition`] of the pair set;
+//! * [`cache`] — [`cache::StructureCache`]: per-input preprocessing
+//!   (relation matrix, marginal, Eq. (5) sampling factors) computed
+//!   exactly once per Gram run and shared immutably across pairs, shards
+//!   and worker threads;
+//! * [`engine`] — [`engine::PairwiseEngine`]: the sharded Gram engine —
+//!   cached structures + deterministic shards + a streaming result sink
+//!   with checkpoint/resume. The native path of the service delegates
+//!   here;
 //! * [`service`] — [`service::PairwiseGw`]: dataset in, distance matrix +
 //!   latency/throughput metrics out. The engine is selected per request
 //!   by registry name (`PairwiseConfig::solver`, any
 //!   [`GwSolver`](crate::gw::solver::GwSolver)), with per-pair
 //!   execution-plan choice (PJRT artifact vs native trait dispatch);
 //! * [`metrics`] — latency recorder (p50/p90/p99, throughput), tagged
-//!   with the executing solver's name.
+//!   with the executing solver's name and shard schedule.
 
 pub mod bucket;
+pub mod cache;
+pub mod engine;
 pub mod metrics;
 pub mod scheduler;
 pub mod service;
 
 pub use bucket::pad_relation;
+pub use cache::{CacheStats, StructureCache};
+pub use engine::{EngineConfig, GramResult, PairwiseEngine};
 pub use metrics::MetricsRecorder;
-pub use scheduler::{run_jobs, run_jobs_with};
+pub use scheduler::{run_jobs, run_jobs_with, shard_partition};
 pub use service::{ExecutionPath, PairwiseConfig, PairwiseGw, PairwiseResult};

@@ -54,9 +54,49 @@ where
         .collect()
 }
 
+/// Deterministic round-robin shard assignment: job `k` belongs to shard
+/// `k % shards`. Returns each shard's job indices in ascending order.
+///
+/// The assignment is a pure function of `(n_jobs, shards)` — independent
+/// of worker counts, thread interleaving or which process runs which shard
+/// — so a Gram computation split across processes by `--shard i/of`
+/// produces exactly the rows a single-process run would, and a resumed run
+/// can skip finished shards by id. Round-robin (rather than contiguous
+/// ranges) spreads the large-index pairs of an upper-triangular pair list
+/// evenly, keeping shard workloads balanced.
+pub fn shard_partition(n_jobs: usize, shards: usize) -> Vec<Vec<usize>> {
+    let shards = shards.max(1);
+    let mut out: Vec<Vec<usize>> = (0..shards).map(|_| Vec::new()).collect();
+    for k in 0..n_jobs {
+        out[k % shards].push(k);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shard_partition_covers_all_jobs_once() {
+        for (n, shards) in [(0usize, 3usize), (7, 1), (10, 3), (5, 8)] {
+            let parts = shard_partition(n, shards);
+            assert_eq!(parts.len(), shards.max(1));
+            let mut seen: Vec<usize> = parts.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..n).collect::<Vec<_>>(), "n={n} shards={shards}");
+            // Balanced to within one job.
+            let lens: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+            let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(hi - lo <= 1, "unbalanced shards {lens:?}");
+        }
+    }
+
+    #[test]
+    fn shard_partition_is_deterministic() {
+        assert_eq!(shard_partition(11, 4), shard_partition(11, 4));
+        assert_eq!(shard_partition(6, 0), shard_partition(6, 1));
+    }
 
     #[test]
     fn results_in_order() {

@@ -12,11 +12,9 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use super::engine::{EngineConfig, PairwiseEngine};
 use super::metrics::MetricsRecorder;
-use super::scheduler::run_jobs_with;
-use crate::datasets::graphsets::{attribute_distance, GraphDataset};
-use crate::gw::core::Workspace;
-use crate::gw::fgw::FgwProblem;
+use crate::datasets::graphsets::GraphDataset;
 use crate::gw::sampling::GwSampler;
 use crate::gw::solver::{GwSolver, SolverBase, SolverRegistry};
 use crate::gw::spar_gw::{spar_gw_with_set, SparGwConfig};
@@ -160,19 +158,6 @@ impl PairwiseGw {
             .build_solver()
             .map_err(|e| e.wrap("building pairwise solver"))?;
         let n_items = dataset.len();
-        let marginals: Vec<Vec<f64>> =
-            dataset.graphs.iter().map(|g| g.marginal()).collect();
-        // All unordered pairs.
-        let pairs: Vec<(usize, usize)> = (0..n_items)
-            .flat_map(|i| ((i + 1)..n_items).map(move |j| (i, j)))
-            .collect();
-
-        let mut distances = Mat::zeros(n_items, n_items);
-        let mut metrics = MetricsRecorder::new();
-        metrics.set_solver(solver.name());
-        let mut pjrt_pairs = 0usize;
-        let mut native_pairs = 0usize;
-        let wall_start = Instant::now();
 
         // Decide per pair whether PJRT can serve it (only the Spar-GW
         // artifact is compiled in this bundle, both sides must fit one
@@ -193,6 +178,18 @@ impl PairwiseGw {
             .unwrap_or(false);
 
         if use_pjrt && !has_attrs {
+            let marginals: Vec<Vec<f64>> =
+                dataset.graphs.iter().map(|g| g.marginal()).collect();
+            // All unordered pairs.
+            let pairs: Vec<(usize, usize)> = (0..n_items)
+                .flat_map(|i| ((i + 1)..n_items).map(move |j| (i, j)))
+                .collect();
+            let mut distances = Mat::zeros(n_items, n_items);
+            let mut metrics = MetricsRecorder::new();
+            metrics.set_solver(solver.name());
+            let mut pjrt_pairs = 0usize;
+            let mut native_pairs = 0usize;
+            let wall_start = Instant::now();
             let runtime = self.runtime.as_mut().unwrap();
             let mut lats = Vec::with_capacity(pairs.len());
             for &(i, j) in &pairs {
@@ -213,7 +210,7 @@ impl PairwiseGw {
                             self.cfg.seed,
                             (i * n_items + j) as u64,
                         ));
-                        let mut sampler =
+                        let sampler =
                             GwSampler::new(a, b, self.cfg.spar.shrink);
                         let set = sampler.sample_iid(&mut rng, budget);
                         match runtime.run_spar_gw(
@@ -251,7 +248,7 @@ impl PairwiseGw {
                             self.cfg.seed,
                             (i * n_items + j) as u64,
                         ));
-                        let mut sampler =
+                        let sampler =
                             GwSampler::new(a, b, self.cfg.spar.shrink);
                         let budget = if self.cfg.spar.sample_size == 0 {
                             16 * n_pair
@@ -268,59 +265,33 @@ impl PairwiseGw {
                 lats.push(t0.elapsed().as_secs_f64());
             }
             metrics.record_batch(&lats, wall_start.elapsed().as_secs_f64());
+            Ok(PairwiseResult {
+                distances,
+                solver: solver.name().to_string(),
+                metrics,
+                pjrt_pairs,
+                native_pairs,
+            })
         } else {
-            // Native path: parallel worker pool, deterministic per-pair
-            // RNG, one reused SparCore workspace per worker thread (for
-            // the Spar-* engines the inner solver loop then allocates
-            // nothing per pair beyond the gathered cost block and the
-            // returned plan; dense engines ignore the workspace). Dispatch
-            // goes through the shared `GwSolver` trait object.
-            let cfg = &self.cfg;
-            let solver = solver.as_ref();
-            let results: Vec<Result<(f64, f64)>> = run_jobs_with(
-                pairs.len(),
-                cfg.workers,
-                Workspace::new,
-                |ws, k| {
-                    let (i, j) = pairs[k];
-                    let t0 = Instant::now();
-                    let gi = &dataset.graphs[i];
-                    let gj = &dataset.graphs[j];
-                    let (a, b) = (&marginals[i], &marginals[j]);
-                    let p = GwProblem::new(&gi.adj, &gj.adj, a, b);
-                    let mut rng =
-                        Rng::new(derive_seed(cfg.seed, (i * n_items + j) as u64));
-                    let report = match attribute_distance(gi, gj) {
-                        Some(feat) if solver.supports_fused() => {
-                            let fp = FgwProblem::new(p, &feat, cfg.alpha);
-                            solver.solve_fused(&fp, &mut rng, ws)?
-                        }
-                        _ => solver.solve(&p, &mut rng, ws)?,
-                    };
-                    Ok((report.value, t0.elapsed().as_secs_f64()))
-                },
-            );
-            let mut lats = Vec::with_capacity(results.len());
-            for (k, res) in results.into_iter().enumerate() {
-                let (i, j) = pairs[k];
-                let (value, lat) = res.map_err(|e| {
-                    e.wrap(format!("pair ({i},{j}) via solver {:?}", solver.name()))
-                })?;
-                distances[(i, j)] = value;
-                distances[(j, i)] = value;
-                lats.push(lat);
-                native_pairs += 1;
-            }
-            metrics.record_batch(&lats, wall_start.elapsed().as_secs_f64());
+            // Native path: the sharded Gram engine with a single shard
+            // and no sink — cached per-structure preprocessing, parallel
+            // worker pool with one reused SparCore workspace per worker,
+            // deterministic per-pair RNG, dispatch through the shared
+            // `GwSolver` trait (prepared entry points). Bit-identical to
+            // the historical direct path (locked by
+            // `rust/tests/determinism.rs`). The solver built above for
+            // path selection is handed over, not rebuilt.
+            let engine =
+                PairwiseEngine::new(self.cfg.clone(), EngineConfig::default());
+            let g = engine.gram_with_solver(dataset, solver.as_ref())?;
+            Ok(PairwiseResult {
+                distances: g.distances,
+                solver: g.solver,
+                metrics: g.metrics,
+                pjrt_pairs: 0,
+                native_pairs: g.computed_pairs,
+            })
         }
-
-        Ok(PairwiseResult {
-            distances,
-            solver: solver.name().to_string(),
-            metrics,
-            pjrt_pairs,
-            native_pairs,
-        })
     }
 }
 

@@ -53,6 +53,21 @@ pub struct GraphDataset {
     pub attr_kind: AttrKind,
 }
 
+impl std::fmt::Debug for GraphDataset {
+    /// Compact form (name + shape), so datasets can ride through the
+    /// property-test harness without dumping adjacency matrices.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "GraphDataset({}, N={}, classes={}, attrs={:?})",
+            self.name,
+            self.len(),
+            self.n_classes,
+            self.attr_kind
+        )
+    }
+}
+
 impl GraphDataset {
     pub fn len(&self) -> usize {
         self.graphs.len()

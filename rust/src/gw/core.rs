@@ -495,7 +495,7 @@ mod tests {
             let c2 = relation(n, seed + 10);
             let a = uniform(n);
             let p = GwProblem::new(&c1, &c2, &a, &a);
-            let mut sampler = GwSampler::new(&a, &a, 0.0);
+            let sampler = GwSampler::new(&a, &a, 0.0);
             let mut rng = Xoshiro256::new(seed + 20);
             let set = sampler.sample_iid(&mut rng, 8 * n);
             let cfg = SparGwConfig { sample_size: 8 * n, ..Default::default() };
@@ -516,7 +516,7 @@ mod tests {
         let c2 = relation(n, 6);
         let a = uniform(n);
         let p = GwProblem::new(&c1, &c2, &a, &a);
-        let mut sampler = GwSampler::new(&a, &a, 0.0);
+        let sampler = GwSampler::new(&a, &a, 0.0);
         let mut rng = Xoshiro256::new(7);
         let set = sampler.sample_iid(&mut rng, 16 * n);
         let cfg = SparGwConfig { sample_size: 16 * n, ..Default::default() };

@@ -51,7 +51,9 @@ pub mod ugw;
 
 pub use alg1::{egw, emd_gw, pga_gw, Alg1Config};
 pub use cost::GroundCost;
-pub use solver::{GwSolver, PhaseTimings, Plan, SolveReport, SolverBase, SolverRegistry};
+pub use solver::{
+    GwSolver, PhaseTimings, Plan, PreparedStructure, SolveReport, SolverBase, SolverRegistry,
+};
 pub use spar_gw::{spar_gw, SparGwConfig, SparGwResult};
 
 use crate::linalg::Mat;

@@ -67,7 +67,7 @@ fn sampled_cost(
     rng: &mut Rng,
 ) -> Mat {
     let (m, n) = (p.m(), p.n());
-    let mut alias = AliasTable::new(t.data());
+    let alias = AliasTable::new(t.data());
     let mut c_hat = Mat::zeros(m, n);
     for _ in 0..s_prime {
         let key = alias.sample(rng);

@@ -15,7 +15,7 @@
 //!   probability `min(1, s·p_ij)` (Braverman et al. 2021), used by the
 //!   theory-validation benches.
 
-use crate::rng::{ProductAlias, Rng};
+use crate::rng::{AliasTable, ProductAlias, Rng};
 
 /// The sampled sparsity pattern `S` plus its importance weights.
 #[derive(Clone, Debug)]
@@ -41,6 +41,38 @@ impl SampledSet {
     }
 }
 
+/// One marginal's half of the Eq. (5) sampler: the `√a_i` factors as an
+/// alias table. The product distribution factorizes per side, so these can
+/// be computed **once per metric-measure space** and reused across every
+/// pair that space participates in — the per-structure preprocessing the
+/// coordinator's [`StructureCache`](crate::coordinator::cache) amortizes
+/// over a K×K Gram computation. Assembling a [`GwSampler`] from two
+/// `SideFactors` ([`GwSampler::from_factors`]) is bit-identical to
+/// building it from the raw marginals ([`GwSampler::new`]).
+#[derive(Clone, Debug)]
+pub struct SideFactors {
+    table: AliasTable,
+    len: usize,
+}
+
+impl SideFactors {
+    /// Compute `√marginal` and its alias table (O(n)).
+    pub fn new(marginal: &[f64]) -> Self {
+        let u: Vec<f64> = marginal.iter().map(|&x| x.max(0.0).sqrt()).collect();
+        SideFactors { table: AliasTable::new(&u), len: marginal.len() }
+    }
+
+    /// Number of atoms in the underlying marginal.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when built from an empty marginal (never: construction panics).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
 /// Importance sampling probabilities for balanced GW:
 /// row factors `√a_i` and column factors `√b_j`, optionally shrunk toward
 /// uniform: `p ← (1−θ)·p + θ/(mn)` (condition H.4, with c₃ = θ).
@@ -54,19 +86,25 @@ pub struct GwSampler {
 
 impl GwSampler {
     pub fn new(a: &[f64], b: &[f64], shrink: f64) -> Self {
-        assert!((0.0..=1.0).contains(&shrink), "shrink must be in [0,1]");
         // The Eq. (5) part stays in product form (two-table alias, O(1)
         // draws); the uniform component of the mixture is drawn by a
         // Bernoulli(θ) branch, so sampling stays O(1) and the *exact*
         // mixture probability p_ij = (1−θ)·p⁽⁵⁾_ij + θ/(mn) ≥ θ/(mn)
         // satisfies (H.4) with c₃ = θ.
-        let u: Vec<f64> = a.iter().map(|&x| x.max(0.0).sqrt()).collect();
-        let v: Vec<f64> = b.iter().map(|&x| x.max(0.0).sqrt()).collect();
+        GwSampler::from_factors(&SideFactors::new(a), &SideFactors::new(b), shrink)
+    }
+
+    /// Assemble the sampler from precomputed per-side factors, skipping
+    /// the O(m)+O(n) `√·`/alias-table builds. Draws and probabilities are
+    /// bit-identical to [`GwSampler::new`] on the marginals the factors
+    /// were built from.
+    pub fn from_factors(fa: &SideFactors, fb: &SideFactors, shrink: f64) -> Self {
+        assert!((0.0..=1.0).contains(&shrink), "shrink must be in [0,1]");
         GwSampler {
-            alias: ProductAlias::new(&u, &v),
+            alias: ProductAlias::from_tables(fa.table.clone(), fb.table.clone()),
             shrink,
-            m: a.len(),
-            n: b.len(),
+            m: fa.len,
+            n: fb.len,
         }
     }
 
@@ -78,7 +116,7 @@ impl GwSampler {
 
     /// Algorithm 2, step 3: draw `s` i.i.d. pairs, de-duplicate, and attach
     /// the `min(1, s·p_ij)` importance weights.
-    pub fn sample_iid(&mut self, rng: &mut Rng, s: usize) -> SampledSet {
+    pub fn sample_iid(&self, rng: &mut Rng, s: usize) -> SampledSet {
         let draws: Vec<(usize, usize)> = (0..s)
             .map(|_| {
                 if self.shrink > 0.0 && rng.f64() < self.shrink {
@@ -200,7 +238,7 @@ mod tests {
     fn iid_sample_dedup_and_weights() {
         let a = uniform(10);
         let b = uniform(10);
-        let mut s = GwSampler::new(&a, &b, 0.0);
+        let s = GwSampler::new(&a, &b, 0.0);
         let mut rng = Rng::new(21);
         let set = s.sample_iid(&mut rng, 160);
         assert!(!set.is_empty());

@@ -36,6 +36,7 @@ use super::cost::GroundCost;
 use super::fgw::FgwProblem;
 use super::lr_gw::LrGwSolver;
 use super::sagrow::SagrowSolver;
+use super::sampling::SideFactors;
 use super::sgwl::SgwlSolver;
 use super::spar_fgw::SparFgwSolver;
 use super::spar_gw::SparGwSolver;
@@ -131,6 +132,41 @@ pub struct SolveReport {
     pub timings: PhaseTimings,
 }
 
+/// Immutable per-structure (per metric-measure space) precomputation: the
+/// structure's marginal and the Eq. (5) sampling factors over it. In a
+/// K×K pairwise Gram computation this is the work that is identical for
+/// every pair a structure participates in; the coordinator's
+/// `StructureCache` builds one `PreparedStructure` per input exactly once
+/// and shares it (immutably) across all pairs, shards and worker threads.
+/// The intra-space relation matrix itself is NOT copied here — it stays
+/// in the caller's dataset and travels by reference through `GwProblem`,
+/// so caching adds no O(n²) memory.
+pub struct PreparedStructure {
+    /// Marginal distribution over the structure's atoms (length n).
+    pub marginal: Vec<f64>,
+    /// Eq. (5) importance-sampling factors `√marginal` as an alias table.
+    pub factors: SideFactors,
+}
+
+impl PreparedStructure {
+    /// Run the per-structure preprocessing once: keeps `marginal` and
+    /// derives the sampling factors from it.
+    pub fn new(marginal: Vec<f64>) -> Self {
+        let factors = SideFactors::new(&marginal);
+        PreparedStructure { marginal, factors }
+    }
+
+    /// Number of atoms.
+    pub fn len(&self) -> usize {
+        self.marginal.len()
+    }
+
+    /// True for a structure with no atoms (never: construction asserts).
+    pub fn is_empty(&self) -> bool {
+        self.marginal.is_empty()
+    }
+}
+
 /// The one interface every GW engine implements. Implementations are
 /// plain data (`Send + Sync`), so one boxed solver can serve a whole
 /// worker pool; per-solve mutable state lives in the caller's `rng` and
@@ -161,6 +197,41 @@ pub trait GwSolver: Send + Sync {
             "solver {:?} does not support the fused objective (structure-only method)",
             self.name()
         )
+    }
+
+    /// [`GwSolver::solve`] with per-side precomputed structures. The
+    /// contract is strict: `sx`/`sy` must describe the same spaces as `p`
+    /// (`p.a == sx.marginal`, `p.b == sy.marginal`), and the result is
+    /// **bit-identical** to `solve` — prepared structures are a pure
+    /// amortization, never a semantic switch. The default ignores them
+    /// (dense engines have no per-structure reusable state); the Spar-*
+    /// samplers override to reuse the cached Eq. (5) factors.
+    fn solve_prepared(
+        &self,
+        p: &GwProblem,
+        sx: &PreparedStructure,
+        sy: &PreparedStructure,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        let _ = (sx, sy);
+        self.solve(p, rng, ws)
+    }
+
+    /// [`GwSolver::solve_fused`] with per-side precomputed structures;
+    /// same bit-identity contract as [`GwSolver::solve_prepared`].
+    /// Structure-only solvers return the same descriptive error as
+    /// `solve_fused`.
+    fn solve_fused_prepared(
+        &self,
+        p: &FgwProblem,
+        sx: &PreparedStructure,
+        sy: &PreparedStructure,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        let _ = (sx, sy);
+        self.solve_fused(p, rng, ws)
     }
 }
 

@@ -13,7 +13,7 @@ use super::core::{Engine, Fused, Workspace};
 use super::cost::GroundCost;
 use super::fgw::FgwProblem;
 use super::sampling::{GwSampler, SampledSet};
-use super::solver::{GwSolver, Opts, SolveReport, SolverBase};
+use super::solver::{GwSolver, Opts, PreparedStructure, SolveReport, SolverBase};
 use super::spar_gw::{SparGwConfig, SparGwResult, SparGwSolver};
 use super::tensor::SparseCostContext;
 use crate::rng::Rng;
@@ -31,7 +31,7 @@ pub fn spar_fgw(
     } else {
         cfg.sample_size
     };
-    let mut sampler = GwSampler::new(p.gw.a, p.gw.b, cfg.shrink);
+    let sampler = GwSampler::new(p.gw.a, p.gw.b, cfg.shrink);
     let set = sampler.sample_iid(rng, s_budget);
     spar_fgw_with_set(p, cost, cfg, &set)
 }
@@ -129,6 +129,32 @@ impl GwSolver for SparFgwSolver {
         ws: &mut Workspace,
     ) -> Result<SolveReport> {
         let mut report = self.inner.solve_fused(p, rng, ws)?;
+        report.solver = self.name();
+        Ok(report)
+    }
+
+    fn solve_prepared(
+        &self,
+        p: &super::GwProblem,
+        sx: &PreparedStructure,
+        sy: &PreparedStructure,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        let mut report = self.inner.solve_prepared(p, sx, sy, rng, ws)?;
+        report.solver = self.name();
+        Ok(report)
+    }
+
+    fn solve_fused_prepared(
+        &self,
+        p: &FgwProblem,
+        sx: &PreparedStructure,
+        sy: &PreparedStructure,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        let mut report = self.inner.solve_fused_prepared(p, sx, sy, rng, ws)?;
         report.solver = self.name();
         Ok(report)
     }

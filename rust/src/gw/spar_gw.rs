@@ -22,8 +22,10 @@ use std::time::Instant;
 use super::core::{Balanced, Engine, Workspace};
 use super::cost::GroundCost;
 use super::fgw::FgwProblem;
-use super::sampling::{GwSampler, SampledSet};
-use super::solver::{GwSolver, Opts, PhaseTimings, Plan, SolveReport, SolverBase};
+use super::sampling::{GwSampler, SampledSet, SideFactors};
+use super::solver::{
+    GwSolver, Opts, PhaseTimings, Plan, PreparedStructure, SolveReport, SolverBase,
+};
 use super::tensor::SparseCostContext;
 use super::{GwProblem, Regularizer};
 use crate::rng::Rng;
@@ -81,7 +83,7 @@ pub struct SparGwResult {
 pub fn spar_gw(p: &GwProblem, cost: GroundCost, cfg: &SparGwConfig, rng: &mut Rng) -> SparGwResult {
     let s_budget = if cfg.sample_size == 0 { 16 * p.m().max(p.n()) } else { cfg.sample_size };
     // Steps 2–3: sampling probabilities and index set.
-    let mut sampler = GwSampler::new(p.a, p.b, cfg.shrink);
+    let sampler = GwSampler::new(p.a, p.b, cfg.shrink);
     let set = sampler.sample_iid(rng, s_budget);
     spar_gw_with_set(p, cost, cfg, &set)
 }
@@ -162,13 +164,19 @@ impl SparGwSolver {
 
     /// Steps 2–3: the Eq. (5) sampler on the problem marginals.
     fn sample(&self, a: &[f64], b: &[f64], rng: &mut Rng) -> SampledSet {
-        let budget = if self.cfg.sample_size == 0 {
-            16 * a.len().max(b.len())
-        } else {
-            self.cfg.sample_size
-        };
-        let mut sampler = GwSampler::new(a, b, self.cfg.shrink);
-        sampler.sample_iid(rng, budget)
+        let sampler = GwSampler::new(a, b, self.cfg.shrink);
+        sampler.sample_iid(rng, self.budget(a.len(), b.len()))
+    }
+
+    /// Steps 2–3 from cached per-side factors — bit-identical draws to
+    /// [`SparGwSolver::sample`] on the marginals the factors came from.
+    fn sample_cached(&self, fa: &SideFactors, fb: &SideFactors, rng: &mut Rng) -> SampledSet {
+        let sampler = GwSampler::from_factors(fa, fb, self.cfg.shrink);
+        sampler.sample_iid(rng, self.budget(fa.len(), fb.len()))
+    }
+
+    fn budget(&self, m: usize, n: usize) -> usize {
+        if self.cfg.sample_size == 0 { 16 * m.max(n) } else { self.cfg.sample_size }
     }
 }
 
@@ -180,17 +188,7 @@ impl GwSolver for SparGwSolver {
     fn solve(&self, p: &GwProblem, rng: &mut Rng, ws: &mut Workspace) -> Result<SolveReport> {
         let t0 = Instant::now();
         let set = self.sample(p.a, p.b, rng);
-        let sample_seconds = t0.elapsed().as_secs_f64();
-        let t1 = Instant::now();
-        let r = spar_gw_with_workspace(p, self.cost, &self.cfg, &set, ws, self.threads);
-        Ok(SolveReport {
-            solver: self.name(),
-            value: r.value,
-            plan: Plan::Sparse(r.plan),
-            outer_iters: r.outer_iters,
-            converged: r.converged,
-            timings: PhaseTimings { sample_seconds, solve_seconds: t1.elapsed().as_secs_f64() },
-        })
+        self.solve_with_set(p, &set, t0.elapsed().as_secs_f64(), ws)
     }
 
     fn supports_fused(&self) -> bool {
@@ -205,13 +203,72 @@ impl GwSolver for SparGwSolver {
     ) -> Result<SolveReport> {
         let t0 = Instant::now();
         let set = self.sample(p.gw.a, p.gw.b, rng);
-        let sample_seconds = t0.elapsed().as_secs_f64();
+        self.solve_fused_with_set(p, &set, t0.elapsed().as_secs_f64(), ws)
+    }
+
+    fn solve_prepared(
+        &self,
+        p: &GwProblem,
+        sx: &PreparedStructure,
+        sy: &PreparedStructure,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        let t0 = Instant::now();
+        let set = self.sample_cached(&sx.factors, &sy.factors, rng);
+        self.solve_with_set(p, &set, t0.elapsed().as_secs_f64(), ws)
+    }
+
+    fn solve_fused_prepared(
+        &self,
+        p: &FgwProblem,
+        sx: &PreparedStructure,
+        sy: &PreparedStructure,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        let t0 = Instant::now();
+        let set = self.sample_cached(&sx.factors, &sy.factors, rng);
+        self.solve_fused_with_set(p, &set, t0.elapsed().as_secs_f64(), ws)
+    }
+}
+
+impl SparGwSolver {
+    /// Steps 4–8 on a ready index set (shared by the fresh and prepared
+    /// entry points — the trajectories are identical once `set` is fixed).
+    fn solve_with_set(
+        &self,
+        p: &GwProblem,
+        set: &SampledSet,
+        sample_seconds: f64,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        let t1 = Instant::now();
+        let r = spar_gw_with_workspace(p, self.cost, &self.cfg, set, ws, self.threads);
+        Ok(SolveReport {
+            solver: self.name(),
+            value: r.value,
+            plan: Plan::Sparse(r.plan),
+            outer_iters: r.outer_iters,
+            converged: r.converged,
+            timings: PhaseTimings { sample_seconds, solve_seconds: t1.elapsed().as_secs_f64() },
+        })
+    }
+
+    /// Algorithm 4 on a ready index set (fused objective).
+    fn solve_fused_with_set(
+        &self,
+        p: &FgwProblem,
+        set: &SampledSet,
+        sample_seconds: f64,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
         let t1 = Instant::now();
         let r = super::spar_fgw::spar_fgw_with_workspace(
             p,
             self.cost,
             &self.cfg,
-            &set,
+            set,
             ws,
             self.threads,
         );

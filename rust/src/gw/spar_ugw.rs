@@ -109,7 +109,7 @@ pub fn sample_ugw_set(
         weights.iter_mut().for_each(|w| *w = 1.0);
     }
 
-    let mut alias = AliasTable::new(&weights);
+    let alias = AliasTable::new(&weights);
     let draws = alias.sample_many(rng, s);
     let mut keys: Vec<usize> = draws;
     keys.sort_unstable();

@@ -16,9 +16,11 @@
 //! Run `spargw help` for usage.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 use spargw::bench::{Method, RunSettings};
 use spargw::cli::Args;
+use spargw::coordinator::engine::{EngineConfig, PairwiseEngine};
 use spargw::coordinator::service::{similarity_from_distances, PairwiseConfig, PairwiseGw};
 use spargw::datasets::{self, graphsets};
 use spargw::gw::core::Workspace;
@@ -40,6 +42,8 @@ USAGE:
   spargw pairwise [--dataset synthetic|bzr|cox2|cuneiform|firstmm_db|imdb-b]
                   [--solver NAME] [--solver-opt k=v]...   # engine per request
                   [--cost l1|l2] [--workers 4] [--kernel-threads 1] [--seed 0]
+                  [--shard I/OF | --shards N]             # deterministic sharding
+                  [--out FILE] [--resume]                 # streaming sink + resume
                   [--artifacts DIR | --pjrt]              # enable the PJRT path
   spargw cluster  [--dataset ...] [--solver NAME] [--solver-opt k=v]...
                   [--cost l1|l2] [--gamma 1.0] [--seed 0]
@@ -69,7 +73,7 @@ fn ok_or_exit<T>(r: Result<T>) -> T {
 /// `spargw pairwise --pjrt` and flag-before-positional orders both parse.
 const SUBCOMMAND_FLAGS: &[(&str, &[&str])] = &[
     ("solve", &["verbose"]),
-    ("pairwise", &["pjrt", "verbose"]),
+    ("pairwise", &["pjrt", "verbose", "resume"]),
     ("cluster", &["verbose"]),
     ("solvers", &[]),
     ("datasets", &[]),
@@ -218,6 +222,46 @@ fn pairwise_config(args: &Args, seed: u64) -> PairwiseConfig {
     }
 }
 
+/// Parse a `--shard I/OF` spec.
+fn parse_shard(spec: &str) -> (usize, usize) {
+    let parse = || -> Option<(usize, usize)> {
+        let (i, of) = spec.split_once('/')?;
+        Some((i.parse().ok()?, of.parse().ok()?))
+    };
+    match parse() {
+        Some((i, of)) if of > 0 && i < of => (i, of),
+        _ => {
+            eprintln!("error: --shard expects I/OF with I < OF, got {spec:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Engine-level options from the CLI (`--shard`, `--shards`, `--out`,
+/// `--resume`); `None` when none were given (plain service path).
+fn engine_opts(args: &Args) -> Option<EngineConfig> {
+    let shard = args.opt_str("shard").map(parse_shard);
+    let shards = ok_or_exit(args.usize_or("shards", 0));
+    let out = args.opt_str("out").map(PathBuf::from);
+    let resume = args.flag("resume");
+    if shard.is_none() && shards == 0 && out.is_none() && !resume {
+        return None;
+    }
+    if let (Some((_, of)), true) = (shard, shards > 0) {
+        if of != shards {
+            eprintln!("error: --shard I/{of} conflicts with --shards {shards}");
+            std::process::exit(2);
+        }
+    }
+    Some(EngineConfig {
+        shards: shard.map(|(_, of)| of).unwrap_or(shards.max(1)),
+        only_shard: shard.map(|(i, _)| i),
+        sink: out,
+        resume,
+        use_cache: true,
+    })
+}
+
 fn cmd_pairwise(args: &Args) {
     let seed = ok_or_exit(args.u64_or("seed", 0));
     let ds = load_dataset(args.str_or("dataset", "synthetic"), seed);
@@ -227,6 +271,36 @@ fn cmd_pairwise(args: &Args) {
     let artifact_dir = args
         .opt_str("artifacts")
         .or(if args.flag("pjrt") { Some("artifacts") } else { None });
+
+    if let Some(opts) = engine_opts(args) {
+        // Sharded/checkpointed runs go straight to the Gram engine (the
+        // PJRT artifact path has no shard/sink semantics).
+        if artifact_dir.is_some() {
+            eprintln!("error: --shard/--shards/--out/--resume cannot be combined with the PJRT path");
+            std::process::exit(2);
+        }
+        let total_shards = opts.shards;
+        let engine = PairwiseEngine::new(cfg, opts);
+        let g = ok_or_exit(engine.gram(&ds));
+        println!(
+            "dataset={} N={} mean_nodes={:.2} solver={}",
+            ds.name,
+            ds.len(),
+            ds.mean_nodes(),
+            g.solver
+        );
+        println!(
+            "shards: run={} skipped={} of={}  pairs: computed={} resumed={}",
+            g.shards_run, g.shards_skipped, total_shards, g.computed_pairs, g.resumed_pairs
+        );
+        println!(
+            "cache: structures={} hits={}  {}",
+            g.cache.built,
+            g.cache.hits,
+            g.metrics.summary()
+        );
+        return;
+    }
     let mut svc = match artifact_dir {
         Some(dir) => match PairwiseGw::with_runtime(cfg, dir) {
             Ok(s) => s,

@@ -88,9 +88,11 @@ impl AliasTable {
         self.p[i]
     }
 
-    /// Draw one category in O(1).
+    /// Draw one category in O(1). Sampling is read-only, so one table can
+    /// serve any number of concurrent samplers (the structure cache shares
+    /// per-side tables across every pair of a Gram computation).
     #[inline]
-    pub fn sample(&mut self, rng: &mut Xoshiro256) -> usize {
+    pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
         let i = rng.usize(self.prob.len());
         if rng.f64() < self.prob[i] {
             i
@@ -100,7 +102,7 @@ impl AliasTable {
     }
 
     /// Draw `k` i.i.d. categories.
-    pub fn sample_many(&mut self, rng: &mut Xoshiro256, k: usize) -> Vec<usize> {
+    pub fn sample_many(&self, rng: &mut Xoshiro256, k: usize) -> Vec<usize> {
         (0..k).map(|_| self.sample(rng)).collect()
     }
 }
@@ -111,41 +113,36 @@ impl AliasTable {
 pub struct ProductAlias {
     rows: AliasTable,
     cols: AliasTable,
-    /// 1 / (Σu · Σv), for density queries.
-    row_total: f64,
-    col_total: f64,
-    u: Vec<f64>,
-    v: Vec<f64>,
 }
 
 impl ProductAlias {
     pub fn new(u: &[f64], v: &[f64]) -> Self {
-        let rows = AliasTable::new(u);
-        let cols = AliasTable::new(v);
-        ProductAlias {
-            rows,
-            cols,
-            row_total: u.iter().sum(),
-            col_total: v.iter().sum(),
-            u: u.to_vec(),
-            v: v.to_vec(),
-        }
+        ProductAlias::from_tables(AliasTable::new(u), AliasTable::new(v))
+    }
+
+    /// Assemble from prebuilt per-side tables. Because the product
+    /// distribution factorizes, each side's table can be computed once per
+    /// marginal and reused across every pairing of that marginal — the
+    /// amortization the coordinator's structure cache exploits. Equivalent
+    /// bit-for-bit to [`ProductAlias::new`] on the same weights.
+    pub fn from_tables(rows: AliasTable, cols: AliasTable) -> Self {
+        ProductAlias { rows, cols }
     }
 
     /// Normalized probability of pair (i, j).
     #[inline]
     pub fn prob_of(&self, i: usize, j: usize) -> f64 {
-        (self.u[i] / self.row_total) * (self.v[j] / self.col_total)
+        self.rows.prob_of(i) * self.cols.prob_of(j)
     }
 
     /// Draw one (row, col) pair in O(1).
     #[inline]
-    pub fn sample(&mut self, rng: &mut Xoshiro256) -> (usize, usize) {
+    pub fn sample(&self, rng: &mut Xoshiro256) -> (usize, usize) {
         (self.rows.sample(rng), self.cols.sample(rng))
     }
 
     /// Draw `k` i.i.d. pairs.
-    pub fn sample_many(&mut self, rng: &mut Xoshiro256, k: usize) -> Vec<(usize, usize)> {
+    pub fn sample_many(&self, rng: &mut Xoshiro256, k: usize) -> Vec<(usize, usize)> {
         (0..k).map(|_| self.sample(rng)).collect()
     }
 }
@@ -171,7 +168,7 @@ mod tests {
     #[test]
     fn matches_distribution() {
         let w = [0.1, 0.0, 0.4, 0.2, 0.3];
-        let mut t = AliasTable::new(&w);
+        let t = AliasTable::new(&w);
         let mut rng = Xoshiro256::new(9);
         let n = 100_000;
         let mut counts = vec![0usize; w.len()];
@@ -184,7 +181,7 @@ mod tests {
     #[test]
     fn uniform_weights() {
         let w = vec![1.0; 16];
-        let mut t = AliasTable::new(&w);
+        let t = AliasTable::new(&w);
         let mut rng = Xoshiro256::new(10);
         let n = 64_000;
         let mut counts = vec![0usize; 16];
@@ -198,7 +195,7 @@ mod tests {
 
     #[test]
     fn single_category() {
-        let mut t = AliasTable::new(&[3.0]);
+        let t = AliasTable::new(&[3.0]);
         let mut rng = Xoshiro256::new(11);
         for _ in 0..100 {
             assert_eq!(t.sample(&mut rng), 0);
@@ -222,7 +219,7 @@ mod tests {
     fn product_alias_matches_flat() {
         let u = [0.2, 0.8];
         let v = [0.5, 0.3, 0.2];
-        let mut pa = ProductAlias::new(&u, &v);
+        let pa = ProductAlias::new(&u, &v);
         let mut rng = Xoshiro256::new(12);
         let n = 120_000;
         let mut counts = vec![0usize; 6];

@@ -28,6 +28,25 @@ pub fn forall<T: std::fmt::Debug>(
     }
 }
 
+/// Kernel-thread counts the determinism harness sweeps.
+///
+/// By default the sweep covers serial and threaded cost kernels
+/// (`[1, 4]`). CI's test matrix pins a single level through the
+/// `SPARGW_KERNEL_THREADS` environment knob so each matrix job exercises
+/// one configuration end-to-end; any non-integer value is rejected
+/// loudly rather than silently ignored.
+pub fn kernel_thread_levels() -> Vec<usize> {
+    match std::env::var("SPARGW_KERNEL_THREADS") {
+        Ok(v) => {
+            let n: usize = v
+                .parse()
+                .unwrap_or_else(|_| panic!("SPARGW_KERNEL_THREADS={v:?}: expected an integer"));
+            vec![n.max(1)]
+        }
+        Err(_) => vec![1, 4],
+    }
+}
+
 /// Random probability vector on the simplex with strictly positive mass.
 pub fn random_simplex(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
     let mut v: Vec<f64> = (0..n).map(|_| rng.f64() + 1e-3).collect();

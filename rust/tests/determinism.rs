@@ -1,0 +1,306 @@
+//! Determinism/conformance harness for the sharded pairwise Gram engine.
+//!
+//! The engine's contract is that every execution knob is a pure
+//! throughput/operability choice: the Gram matrix must be **bit-identical**
+//! across
+//!   * kernel-thread counts (`PairwiseConfig::kernel_threads`, swept via
+//!     `spargw::testutil::kernel_thread_levels` — CI pins one level per
+//!     matrix job through `SPARGW_KERNEL_THREADS`),
+//!   * shard counts (1 vs 3) and single-shard multi-process partitioning,
+//!   * the cached path (per-structure preprocessing shared across pairs)
+//!     vs the uncached per-pair re-derivation,
+//!   * fresh runs vs sink-resumed runs,
+//! for spar_gw, spar_fgw and spar_ugw on seeded toy datasets. The
+//! reference each variant is compared against is the *direct* pre-engine
+//! path: a plain loop over pairs calling `GwSolver::solve`/`solve_fused`
+//! with the historical RNG derivation — exactly what the coordinator did
+//! before the engine existed.
+
+use spargw::coordinator::engine::{EngineConfig, PairwiseEngine};
+use spargw::coordinator::service::PairwiseConfig;
+use spargw::datasets::graphsets::{attribute_distance, bzr, imdb_b, GraphDataset};
+use spargw::gw::core::Workspace;
+use spargw::gw::fgw::FgwProblem;
+use spargw::gw::GwProblem;
+use spargw::linalg::Mat;
+use spargw::rng::{derive_seed, Rng};
+use spargw::testutil::kernel_thread_levels;
+
+const SEED: u64 = 17;
+
+/// Small structure-only dataset (8 IMDB-like graphs).
+fn plain_dataset() -> GraphDataset {
+    let mut ds = imdb_b(3);
+    ds.graphs.truncate(8);
+    ds
+}
+
+/// Small attributed dataset (8 BZR-like graphs) — exercises the fused
+/// objective for solvers that support it.
+fn attributed_dataset() -> GraphDataset {
+    let mut ds = bzr(4);
+    ds.graphs.truncate(8);
+    ds
+}
+
+fn config(solver: &str, kernel_threads: usize) -> PairwiseConfig {
+    let mut cfg = PairwiseConfig {
+        solver: solver.to_string(),
+        workers: 2,
+        kernel_threads,
+        seed: SEED,
+        ..Default::default()
+    };
+    // Keep the toy runs fast but non-trivial; 384 draws ensure the
+    // threaded cost kernel actually engages (it falls back to serial
+    // below ~64 rows per thread).
+    cfg.spar.sample_size = 384;
+    cfg.spar.outer_iters = 4;
+    cfg.spar.inner_iters = 8;
+    cfg
+}
+
+/// The pre-engine direct path: per-pair solve through the registry
+/// solver, historical RNG streams, no cache, no shards.
+fn direct_reference(ds: &GraphDataset, cfg: &PairwiseConfig) -> Mat {
+    let solver = cfg.build_solver().expect("reference solver");
+    let n = ds.len();
+    let marginals: Vec<Vec<f64>> = ds.graphs.iter().map(|g| g.marginal()).collect();
+    let mut out = Mat::zeros(n, n);
+    let mut ws = Workspace::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let gi = &ds.graphs[i];
+            let gj = &ds.graphs[j];
+            let p = GwProblem::new(&gi.adj, &gj.adj, &marginals[i], &marginals[j]);
+            let mut rng = Rng::new(derive_seed(cfg.seed, (i * n + j) as u64));
+            let report = match attribute_distance(gi, gj) {
+                Some(feat) if solver.supports_fused() => {
+                    let fp = FgwProblem::new(p, &feat, cfg.alpha);
+                    solver.solve_fused(&fp, &mut rng, &mut ws).expect("fused solve")
+                }
+                _ => solver.solve(&p, &mut rng, &mut ws).expect("solve"),
+            };
+            out[(i, j)] = report.value;
+            out[(j, i)] = report.value;
+        }
+    }
+    out
+}
+
+fn engine_gram(ds: &GraphDataset, cfg: &PairwiseConfig, opts: EngineConfig) -> Mat {
+    PairwiseEngine::new(cfg.clone(), opts).gram(ds).expect("engine gram").distances
+}
+
+fn assert_bits_equal(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    for (k, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: entry {k} differs ({x} vs {y})"
+        );
+    }
+}
+
+fn dataset_for(solver: &str) -> GraphDataset {
+    // spar_fgw exercises its fused objective on attributed graphs; the
+    // others run structure-only.
+    if solver == "spar_fgw" {
+        attributed_dataset()
+    } else {
+        plain_dataset()
+    }
+}
+
+#[test]
+fn gram_bit_identical_across_kernel_threads_shards_and_cache() {
+    for solver in ["spar_gw", "spar_fgw", "spar_ugw"] {
+        let ds = dataset_for(solver);
+        // Reference: serial kernel, direct pre-engine path.
+        let reference = direct_reference(&ds, &config(solver, 1));
+        for kernel_threads in kernel_thread_levels() {
+            let cfg = config(solver, kernel_threads);
+            for shards in [1usize, 3] {
+                for use_cache in [true, false] {
+                    let opts = EngineConfig { shards, use_cache, ..Default::default() };
+                    let got = engine_gram(&ds, &cfg, opts);
+                    assert_bits_equal(
+                        &reference,
+                        &got,
+                        &format!(
+                            "{solver}: kernel_threads={kernel_threads} \
+                             shards={shards} cache={use_cache}"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_processes_cover_the_reference_exactly() {
+    // Simulate multi-process partitioning: three engines each running one
+    // shard; their merged (summed) outputs must reproduce the reference
+    // bit-for-bit with no overlap.
+    for solver in ["spar_gw", "spar_ugw"] {
+        let ds = plain_dataset();
+        let cfg = config(solver, 1);
+        let reference = direct_reference(&ds, &cfg);
+        let n = ds.len();
+        let mut merged = Mat::zeros(n, n);
+        for shard in 0..3 {
+            let opts = EngineConfig {
+                shards: 3,
+                only_shard: Some(shard),
+                ..Default::default()
+            };
+            let part = engine_gram(&ds, &cfg, opts);
+            for (m, p) in merged.data_mut().iter_mut().zip(part.data()) {
+                if *p != 0.0 {
+                    assert_eq!(*m, 0.0, "{solver}: shards overlap");
+                    *m = *p;
+                }
+            }
+        }
+        assert_bits_equal(&reference, &merged, &format!("{solver}: 3-way shard merge"));
+    }
+}
+
+#[test]
+fn preprocessing_runs_exactly_once_per_structure_k40() {
+    // The acceptance criterion: a K=40 toy pairwise run performs each
+    // structure's preprocessing exactly once, while serving two cached
+    // look-ups per pair.
+    let mut ds = imdb_b(6);
+    ds.graphs.truncate(40);
+    let k = ds.len();
+    assert_eq!(k, 40);
+    let mut cfg = config("spar_gw", 1);
+    cfg.workers = 4;
+    cfg.spar.sample_size = 48;
+    cfg.spar.outer_iters = 2;
+    cfg.spar.inner_iters = 4;
+    let g = PairwiseEngine::new(cfg, EngineConfig::default())
+        .gram(&ds)
+        .expect("K=40 gram");
+    let pairs = k * (k - 1) / 2;
+    assert_eq!(g.computed_pairs, pairs);
+    assert_eq!(g.cache.built, k, "preprocessing must run once per structure");
+    assert_eq!(g.cache.hits, 2 * pairs, "two cached look-ups per pair");
+}
+
+// ---------------------------------------------------------------------
+// Sink checkpoint/resume correctness.
+// ---------------------------------------------------------------------
+
+fn temp_sink(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("spargw_determinism_tests");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    dir.join(name)
+}
+
+#[test]
+fn resume_after_partial_run_matches_uninterrupted_run() {
+    let ds = plain_dataset();
+    let cfg = config("spar_gw", 1);
+    let reference = direct_reference(&ds, &cfg);
+
+    // "Kill after k shards": run only shards 0 and 1 of 3, checkpointing
+    // to the sink, then resume the full job.
+    let sink = temp_sink("resume_partial.sink");
+    std::fs::remove_file(&sink).ok();
+    for shard in 0..2 {
+        let opts = EngineConfig {
+            shards: 3,
+            only_shard: Some(shard),
+            sink: Some(sink.clone()),
+            resume: shard > 0, // first run creates the sink, second appends
+            ..Default::default()
+        };
+        let g = PairwiseEngine::new(cfg.clone(), opts).gram(&ds).expect("partial run");
+        assert_eq!(g.shards_run, 1);
+    }
+
+    let opts = EngineConfig {
+        shards: 3,
+        sink: Some(sink.clone()),
+        resume: true,
+        ..Default::default()
+    };
+    let g = PairwiseEngine::new(cfg.clone(), opts).gram(&ds).expect("resumed run");
+    // Two shards restored from the sink, one computed.
+    assert_eq!(g.shards_skipped, 2);
+    assert_eq!(g.shards_run, 1);
+    assert!(g.resumed_pairs > 0);
+    let n = ds.len();
+    assert_eq!(g.resumed_pairs + g.computed_pairs, n * (n - 1) / 2);
+    assert_bits_equal(&reference, &g.distances, "resume merge");
+    std::fs::remove_file(&sink).ok();
+}
+
+#[test]
+fn truncated_sink_tail_recomputes_the_partial_shard() {
+    // Simulate a run killed mid-write: take a complete 3-shard sink,
+    // chop it inside the last shard's block (no `done` marker, possibly a
+    // half-written line), and resume. The damaged shard must be
+    // recomputed and the final matrix still match the reference.
+    let ds = plain_dataset();
+    let cfg = config("spar_gw", 1);
+    let reference = direct_reference(&ds, &cfg);
+
+    let sink = temp_sink("resume_truncated.sink");
+    std::fs::remove_file(&sink).ok();
+    let opts = EngineConfig {
+        shards: 3,
+        sink: Some(sink.clone()),
+        ..Default::default()
+    };
+    let g = PairwiseEngine::new(cfg.clone(), opts).gram(&ds).expect("full run");
+    assert_eq!(g.shards_run, 3);
+    assert_bits_equal(&reference, &g.distances, "full sink run");
+
+    // Chop the file mid-way through the final shard's block, leaving a
+    // dangling half line.
+    let text = std::fs::read_to_string(&sink).expect("read sink");
+    let last_done = text.rfind("\ndone ").expect("final done marker");
+    let truncated = &text[..last_done - 20];
+    std::fs::write(&sink, truncated).expect("truncate sink");
+
+    let opts = EngineConfig {
+        shards: 3,
+        sink: Some(sink.clone()),
+        resume: true,
+        ..Default::default()
+    };
+    let g = PairwiseEngine::new(cfg.clone(), opts).gram(&ds).expect("resume truncated");
+    assert_eq!(g.shards_skipped, 2, "intact shards are skipped");
+    assert_eq!(g.shards_run, 1, "damaged shard is recomputed");
+    assert_bits_equal(&reference, &g.distances, "truncated-tail resume");
+    std::fs::remove_file(&sink).ok();
+}
+
+#[test]
+fn resumed_sink_is_replay_complete() {
+    // After a fully resumed run the sink contains every shard's `done`
+    // marker, so a further resume computes nothing at all.
+    let ds = plain_dataset();
+    let cfg = config("spar_gw", 1);
+    let sink = temp_sink("resume_complete.sink");
+    std::fs::remove_file(&sink).ok();
+    let mk = |resume: bool| EngineConfig {
+        shards: 2,
+        sink: Some(sink.clone()),
+        resume,
+        ..Default::default()
+    };
+    let first = PairwiseEngine::new(cfg.clone(), mk(false)).gram(&ds).expect("first");
+    let replay = PairwiseEngine::new(cfg.clone(), mk(true)).gram(&ds).expect("replay");
+    assert_eq!(replay.computed_pairs, 0);
+    assert_eq!(replay.shards_skipped, 2);
+    let n = ds.len();
+    assert_eq!(replay.resumed_pairs, n * (n - 1) / 2);
+    assert_bits_equal(&first.distances, &replay.distances, "replayed sink");
+    std::fs::remove_file(&sink).ok();
+}

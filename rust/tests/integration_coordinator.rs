@@ -78,7 +78,7 @@ fn bucket_padding_preserves_spar_gw_result() {
     let mut rng = Xoshiro256::new(11);
     let inst = spargw::bench::Workload::Moon.make(n, &mut rng);
     let p = inst.problem();
-    let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+    let sampler = GwSampler::new(p.a, p.b, 0.0);
     let set = sampler.sample_iid(&mut rng, 16 * n);
 
     let cfg = SparGwConfig { sample_size: 16 * n, ..Default::default() };

@@ -54,7 +54,7 @@ fn pjrt_spar_gw_matches_native_solver() {
     let (_bucket_n, bucket_s) = rt.spar_gw_bucket(GroundCost::L2, n).expect("bucket");
 
     // Sample with the bucket's budget so native and PJRT share the set.
-    let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+    let sampler = GwSampler::new(p.a, p.b, 0.0);
     let set = sampler.sample_iid(&mut rng, bucket_s);
 
     let out = rt.run_spar_gw(GroundCost::L2, &inst.cx, &inst.cy, &inst.a, &inst.b, &set).unwrap();
@@ -85,7 +85,7 @@ fn pjrt_executable_cache_reuses_compilations() {
         let inst = Workload::Graph.make(n, &mut rng);
         let p = inst.problem();
         let (_, bucket_s) = rt.spar_gw_bucket(GroundCost::L2, n).unwrap();
-        let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+        let sampler = GwSampler::new(p.a, p.b, 0.0);
         let set = sampler.sample_iid(&mut rng, bucket_s);
         rt.run_spar_gw(GroundCost::L2, &inst.cx, &inst.cy, &inst.a, &inst.b, &set).unwrap();
     }
@@ -106,7 +106,7 @@ fn pjrt_l1_artifact_runs() {
     let inst = Workload::Moon.make(n, &mut rng);
     let p = inst.problem();
     let (_, bucket_s) = rt.spar_gw_bucket(GroundCost::L1, n).expect("l1 bucket");
-    let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+    let sampler = GwSampler::new(p.a, p.b, 0.0);
     let set = sampler.sample_iid(&mut rng, bucket_s);
     let out = rt.run_spar_gw(GroundCost::L1, &inst.cx, &inst.cy, &inst.a, &inst.b, &set).unwrap();
     assert!(out.gw.is_finite() && out.gw >= -1e-6, "l1 gw {}", out.gw);
@@ -123,7 +123,7 @@ fn oversized_problem_is_rejected_cleanly() {
     let mut rng = Xoshiro256::new(24);
     let inst = Workload::Moon.make(n, &mut rng);
     let p = inst.problem();
-    let mut sampler = GwSampler::new(p.a, p.b, 0.0);
+    let sampler = GwSampler::new(p.a, p.b, 0.0);
     let set = sampler.sample_iid(&mut rng, 8);
     let res = rt.run_spar_gw(GroundCost::L2, &inst.cx, &inst.cy, &inst.a, &inst.b, &set);
     let err = match res {

@@ -442,7 +442,7 @@ fn spar_gw_bit_identical_to_pre_refactor_reference() {
         let a: &[f64] = if nonunif { &a_nonunif } else { &inst.a };
         let p = GwProblem::new(&inst.cx, &inst.cy, a, &b);
         let mut srng = Xoshiro256::new(400 + ci as u64);
-        let mut sampler = GwSampler::new(a, &b, shrink);
+        let sampler = GwSampler::new(a, &b, shrink);
         let set = sampler.sample_iid(&mut srng, 12 * n);
         let cfg = spargw::gw::spar_gw::SparGwConfig {
             sample_size: 12 * n,
@@ -492,7 +492,7 @@ fn spar_fgw_bit_identical_to_pre_refactor_reference() {
     {
         let p = FgwProblem::new(gw, feat, alpha);
         let mut srng = Xoshiro256::new(600 + ci as u64);
-        let mut sampler = GwSampler::new(gw.a, gw.b, 0.0);
+        let sampler = GwSampler::new(gw.a, gw.b, 0.0);
         let set = sampler.sample_iid(&mut srng, 10 * n);
         let cfg = spargw::gw::spar_gw::SparGwConfig {
             sample_size: 10 * n,

@@ -1,7 +1,11 @@
 //! Property-based tests over the library's core invariants, driven by the
 //! seeded [`spargw::testutil::forall`] harness.
 
-use spargw::gw::sampling::{sample_poisson, GwSampler};
+use spargw::coordinator::cache::StructureCache;
+use spargw::coordinator::engine::{EngineConfig, PairwiseEngine};
+use spargw::coordinator::service::PairwiseConfig;
+use spargw::datasets::graphsets::imdb_b;
+use spargw::gw::sampling::{sample_poisson, GwSampler, SideFactors};
 use spargw::gw::spar_gw::{spar_gw, SparGwConfig};
 use spargw::gw::tensor::{
     gw_energy, tensor_product_decomposable, tensor_product_generic, SparseCostContext,
@@ -63,7 +67,7 @@ fn prop_sparse_sinkhorn_marginals_on_support() {
         |rng| {
             let inst = gen_inst(rng);
             let s = 8 * inst.a.len().max(inst.b.len());
-            let mut sampler = GwSampler::new(&inst.a, &inst.b, 0.0);
+            let sampler = GwSampler::new(&inst.a, &inst.b, 0.0);
             let set = sampler.sample_iid(rng, s);
             (inst, set)
         },
@@ -200,7 +204,7 @@ fn prop_sparse_cost_matches_dense_on_support() {
         |rng| {
             let inst = gen_inst(rng);
             let s = 6 * inst.a.len().max(inst.b.len());
-            let mut sampler = GwSampler::new(&inst.a, &inst.b, 0.0);
+            let sampler = GwSampler::new(&inst.a, &inst.b, 0.0);
             let set = sampler.sample_iid(rng, s);
             (inst, set)
         },
@@ -283,6 +287,140 @@ fn prop_spar_gw_plan_is_feasible_and_supported() {
 }
 
 #[test]
+fn prop_structure_cache_matches_fresh_computation() {
+    // Cached per-structure state is a pure amortization: relation
+    // matrices and marginals equal freshly computed ones, and a sampler
+    // assembled from cached factors draws the exact same index sets as
+    // one built from the raw marginals.
+    forall(
+        "structure-cache-consistency",
+        0xB1,
+        8,
+        |rng| {
+            let mut ds = imdb_b(rng.next_u64());
+            let keep = 3 + rng.usize(4);
+            ds.graphs.truncate(keep);
+            ds
+        },
+        |ds| {
+            let cache = StructureCache::build(ds);
+            for (i, g) in ds.graphs.iter().enumerate() {
+                let e = cache.get(i);
+                if e.marginal != g.marginal() {
+                    return Err(format!("structure {i}: cached marginal differs"));
+                }
+                if e.len() != g.n_nodes() {
+                    return Err(format!("structure {i}: cached length differs"));
+                }
+            }
+            // Pairwise: cached factors reproduce the fresh sampler's draws
+            // bit-for-bit under identical RNG streams.
+            for i in 0..ds.len() {
+                for j in (i + 1)..ds.len() {
+                    let (sx, sy) = (cache.get(i), cache.get(j));
+                    let fresh = GwSampler::new(&sx.marginal, &sy.marginal, 0.0);
+                    let cached = GwSampler::from_factors(&sx.factors, &sy.factors, 0.0);
+                    let mut r1 = Xoshiro256::new(91);
+                    let mut r2 = Xoshiro256::new(91);
+                    let s1 = fresh.sample_iid(&mut r1, 128);
+                    let s2 = cached.sample_iid(&mut r2, 128);
+                    if s1.rows != s2.rows || s1.cols != s2.cols {
+                        return Err(format!("pair ({i},{j}): cached draws differ"));
+                    }
+                    for (l, (w1, w2)) in s1.weights.iter().zip(&s2.weights).enumerate() {
+                        if w1.to_bits() != w2.to_bits() {
+                            return Err(format!(
+                                "pair ({i},{j}) weight {l}: {w1} vs {w2}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_side_factors_preserve_eq5_probabilities() {
+    forall(
+        "side-factors-probabilities",
+        0xB2,
+        15,
+        |rng| {
+            let m = 4 + rng.usize(10);
+            let n = 4 + rng.usize(10);
+            (random_simplex(rng, m), random_simplex(rng, n))
+        },
+        |(a, b)| {
+            let fresh = GwSampler::new(a, b, 0.0);
+            let cached =
+                GwSampler::from_factors(&SideFactors::new(a), &SideFactors::new(b), 0.0);
+            for i in 0..a.len() {
+                for j in 0..b.len() {
+                    let (p1, p2) = (fresh.prob_of(i, j), cached.prob_of(i, j));
+                    if p1.to_bits() != p2.to_bits() {
+                        return Err(format!("p({i},{j}): {p1} vs {p2}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gram_symmetric_zero_diagonal_for_balanced_solvers() {
+    // The engine's Gram output for the balanced solvers is symmetric with
+    // a zero diagonal and finite everywhere, for every shard count.
+    forall(
+        "gram-symmetry",
+        0xB3,
+        2,
+        |rng| {
+            let mut ds = imdb_b(rng.next_u64());
+            ds.graphs.truncate(5);
+            (ds, 1 + rng.usize(3))
+        },
+        |(ds, shards)| {
+            for solver in ["spar_gw", "spar_fgw"] {
+                let cfg = PairwiseConfig {
+                    solver: solver.to_string(),
+                    seed: 9,
+                    spar: SparGwConfig {
+                        sample_size: 48,
+                        outer_iters: 2,
+                        inner_iters: 4,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                };
+                let opts = EngineConfig { shards: *shards, ..Default::default() };
+                let g = PairwiseEngine::new(cfg, opts)
+                    .gram(ds)
+                    .map_err(|e| format!("{solver}: {e}"))?;
+                let n = ds.len();
+                for i in 0..n {
+                    if g.distances[(i, i)] != 0.0 {
+                        return Err(format!("{solver}: diag[{i}] nonzero"));
+                    }
+                    for j in 0..n {
+                        let (x, y) = (g.distances[(i, j)], g.distances[(j, i)]);
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!("{solver}: asymmetry at ({i},{j})"));
+                        }
+                        if !x.is_finite() {
+                            return Err(format!("{solver}: non-finite at ({i},{j})"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_alias_table_reproduces_distribution() {
     forall(
         "alias-distribution",
@@ -293,7 +431,7 @@ fn prop_alias_table_reproduces_distribution() {
             random_simplex(rng, n)
         },
         |w| {
-            let mut alias = AliasTable::new(w);
+            let alias = AliasTable::new(w);
             let mut rng = Xoshiro256::new(77);
             let draws = 200_000;
             let mut counts = vec![0usize; w.len()];

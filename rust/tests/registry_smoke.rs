@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 
 use spargw::gw::core::Workspace;
-use spargw::gw::solver::{SolverBase, SolverRegistry};
+use spargw::gw::solver::{PreparedStructure, SolverBase, SolverRegistry};
 use spargw::gw::GwProblem;
 use spargw::linalg::Mat;
 use spargw::rng::Xoshiro256;
@@ -110,8 +110,13 @@ fn every_registered_solver_runs_on_a_tiny_problem() {
     }
 }
 
+/// The solver names whose `supports_fused` must be true (and whose
+/// `solve_fused` must run); everyone else must decline with a
+/// descriptive error — from BOTH the plain and the prepared entry point.
+const FUSED: &[&str] = &["spar_gw", "spar_fgw", "egw", "pga_gw", "emd_gw", "sagrow"];
+
 #[test]
-fn structure_only_solvers_decline_fused_descriptively() {
+fn every_solver_exercises_solve_fused_or_declines_descriptively() {
     let c1 = relation(N, 3);
     let c2 = relation(N, 4);
     let a = uniform(N);
@@ -120,19 +125,85 @@ fn structure_only_solvers_decline_fused_descriptively() {
     let fp = spargw::gw::fgw::FgwProblem::new(gw, &feat, 0.6);
     let base = smoke_base();
 
-    let fused: &[&str] = &["spar_gw", "spar_fgw", "egw", "pga_gw", "emd_gw", "sagrow"];
     for &name in SolverRegistry::names() {
         let solver =
             SolverRegistry::build_with_base(name, &smoke_opts(name), &base).unwrap();
         let mut rng = Xoshiro256::new(7);
         let mut ws = Workspace::new();
-        if fused.contains(&name) {
+        if FUSED.contains(&name) {
             assert!(solver.supports_fused(), "{name} should support fused");
             let r = solver.solve_fused(&fp, &mut rng, &mut ws).unwrap();
             assert!(r.value.is_finite(), "{name}: fused value {}", r.value);
+            assert!(r.plan.is_finite(), "{name}: non-finite fused plan");
         } else {
             assert!(!solver.supports_fused(), "{name} should be structure-only");
             let err = solver.solve_fused(&fp, &mut rng, &mut ws).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains(name), "{msg} should name the solver");
+            assert!(msg.contains("fused"), "{msg} should explain the limitation");
+        }
+    }
+}
+
+#[test]
+fn prepared_entry_points_match_plain_solves_bit_for_bit() {
+    // The prepared entry points are a pure amortization: for every
+    // registered solver, identical RNG streams must give bit-identical
+    // reports, and structure-only solvers must decline the fused prepared
+    // path with the same descriptive error as the plain one (an error,
+    // not a panic).
+    let c1 = relation(N, 5);
+    let c2 = relation(N, 6);
+    let a = uniform(N);
+    let sx = PreparedStructure::new(a.clone());
+    let sy = PreparedStructure::new(a.clone());
+    let gw = GwProblem::new(&c1, &c2, &a, &a);
+    let feat = Mat::full(N, N, 0.5);
+    let fp = spargw::gw::fgw::FgwProblem::new(gw, &feat, 0.6);
+    let base = smoke_base();
+
+    for &name in SolverRegistry::names() {
+        let solver =
+            SolverRegistry::build_with_base(name, &smoke_opts(name), &base).unwrap();
+
+        let mut rng1 = Xoshiro256::new(42);
+        let mut ws1 = Workspace::new();
+        let plain = solver
+            .solve(&gw, &mut rng1, &mut ws1)
+            .unwrap_or_else(|e| panic!("{name}: solve failed: {e}"));
+        let mut rng2 = Xoshiro256::new(42);
+        let mut ws2 = Workspace::new();
+        let prepared = solver
+            .solve_prepared(&gw, &sx, &sy, &mut rng2, &mut ws2)
+            .unwrap_or_else(|e| panic!("{name}: solve_prepared failed: {e}"));
+        assert_eq!(
+            plain.value.to_bits(),
+            prepared.value.to_bits(),
+            "{name}: prepared value differs ({} vs {})",
+            plain.value,
+            prepared.value
+        );
+        assert_eq!(plain.outer_iters, prepared.outer_iters, "{name}: outer iters");
+        assert_eq!(plain.converged, prepared.converged, "{name}: converged flag");
+
+        let mut rngf1 = Xoshiro256::new(43);
+        let mut rngf2 = Xoshiro256::new(43);
+        let mut wsf1 = Workspace::new();
+        let mut wsf2 = Workspace::new();
+        if FUSED.contains(&name) {
+            let f_plain = solver.solve_fused(&fp, &mut rngf1, &mut wsf1).unwrap();
+            let f_prep = solver
+                .solve_fused_prepared(&fp, &sx, &sy, &mut rngf2, &mut wsf2)
+                .unwrap_or_else(|e| panic!("{name}: solve_fused_prepared failed: {e}"));
+            assert_eq!(
+                f_plain.value.to_bits(),
+                f_prep.value.to_bits(),
+                "{name}: fused prepared value differs"
+            );
+        } else {
+            let err = solver
+                .solve_fused_prepared(&fp, &sx, &sy, &mut rngf2, &mut wsf2)
+                .unwrap_err();
             let msg = format!("{err}");
             assert!(msg.contains(name), "{msg} should name the solver");
             assert!(msg.contains("fused"), "{msg} should explain the limitation");
