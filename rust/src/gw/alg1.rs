@@ -174,6 +174,12 @@ pub struct Alg1Solver {
 
 impl Alg1Solver {
     pub(crate) fn from_opts(kind: Alg1Kind, base: &SolverBase, o: &mut Opts) -> Result<Self> {
+        let name = match kind {
+            Alg1Kind::Egw => "egw",
+            Alg1Kind::PgaGw => "pga_gw",
+            Alg1Kind::EmdGw => "emd_gw",
+        };
+        o.precision_f64_only(name, base.precision)?;
         Ok(Alg1Solver {
             kind,
             cost: o.cost(base.cost)?,

@@ -93,6 +93,7 @@ pub struct AnchorSolver {
 
 impl AnchorSolver {
     pub(crate) fn from_opts(base: &SolverBase, o: &mut Opts) -> Result<Self> {
+        o.precision_f64_only("anchor", base.precision)?;
         Ok(AnchorSolver {
             cost: o.cost(base.cost)?,
             cfg: AnchorConfig { quantiles: o.usize("quantiles", 0)? },

@@ -8,6 +8,17 @@
 //! the small [`Marginals`] strategy trait, so `spar_gw`, `spar_fgw` and
 //! `spar_ugw` are thin adapters over [`Engine::solve`].
 //!
+//! Since the kernel-layer refactor the whole engine is generic over the
+//! kernel [`Scalar`]: [`Workspace<S>`], [`Engine<S>`] and the strategies
+//! run the coupling updates, kernel exponentials and inner Sinkhorn at
+//! storage width `S`, while marginal sums, the outer stopping criterion,
+//! the final objective and the returned plan stay f64 (the accumulator
+//! rule — see `kernel::scalar`). At `S = f64` every operation matches
+//! the historical implementation bit-for-bit; `precision=f32` is reached
+//! through the f64 workspace's lazily allocated
+//! [`f32 lane`](Workspace::lane32), so the `GwSolver` interface and the
+//! coordinator's per-worker workspace reuse are unchanged.
+//!
 //! The engine runs on a per-solve [`Workspace`] of preallocated buffers
 //! plus a CSR view of the sampled pattern built once per solve: with the
 //! default serial cost kernel (`threads == 1`) the inner H×R loop
@@ -29,13 +40,14 @@ use super::spar_gw::SparGwResult;
 use super::tensor::SparseCostContext;
 use super::ugw::{kl_otimes, unbalanced_cost_shift};
 use super::Regularizer;
+use crate::kernel::{Precision, Scalar};
 use crate::ot::{sparse_sinkhorn_fixed, sparse_unbalanced_sinkhorn_fixed};
 use crate::sparse::{Coo, Csr};
 
 /// Resize to `len` zeros, keeping capacity (the workspace-reuse primitive).
-fn fit(buf: &mut Vec<f64>, len: usize) {
+fn fit<S: Scalar>(buf: &mut Vec<S>, len: usize) {
     buf.clear();
-    buf.resize(len, 0.0);
+    buf.resize(len, S::ZERO);
 }
 
 /// Preallocated per-solve buffers for the SparCore engine.
@@ -44,42 +56,54 @@ fn fit(buf: &mut Vec<f64>, len: usize) {
 /// including solves of different shapes and different Spar-* variants; the
 /// engine re-fits the buffers (retaining capacity) at the start of each
 /// solve. One workspace must not be shared across threads concurrently;
-/// the coordinator keeps one per worker.
+/// the coordinator keeps one per worker. The default `Workspace` (f64)
+/// lazily owns an f32 sibling ([`Workspace::lane32`]) so mixed-precision
+/// solves reuse the same per-worker object.
 #[derive(Default)]
-pub struct Workspace {
+pub struct Workspace<S: Scalar = f64> {
     /// CSR view of the sampled pattern, rebuilt per solve.
     csr: Csr,
     /// Importance corrections 1/p*_l, entry order.
-    inv_w: Vec<f64>,
+    inv_w: Vec<S>,
     /// Current plan values T̃ on the pattern.
-    t: Vec<f64>,
+    t: Vec<S>,
     /// Candidate next plan (swapped into `t` on acceptance).
-    t_next: Vec<f64>,
+    t_next: Vec<S>,
     /// Sparse cost values C̃(T̃) (also the energy scratch).
-    c_vals: Vec<f64>,
+    c_vals: Vec<S>,
     /// Stabilized (rank-one-reduced) cost values.
-    c_red: Vec<f64>,
+    c_red: Vec<S>,
     /// Kernel values K̃.
-    k_vals: Vec<f64>,
+    k_vals: Vec<S>,
     /// Per-row pattern minima (stabilization).
-    row_min: Vec<f64>,
+    row_min: Vec<S>,
     /// Per-column pattern minima (stabilization).
-    col_min: Vec<f64>,
+    col_min: Vec<S>,
     /// Sinkhorn row scalings.
-    u: Vec<f64>,
+    u: Vec<S>,
     /// Sinkhorn column scalings.
-    v: Vec<f64>,
+    v: Vec<S>,
     /// Scratch K·v.
-    kv: Vec<f64>,
+    kv: Vec<S>,
     /// Scratch Kᵀ·u.
-    ktu: Vec<f64>,
-    /// Plan row marginals (unbalanced shift / objective).
+    ktu: Vec<S>,
+    /// f64 scatter scratch for the transposed Sinkhorn sweep (length n;
+    /// the accumulator rule for f32 storage — identical bits at f64).
+    wide: Vec<f64>,
+    /// Plan row marginals (unbalanced shift / objective) — marginal sums
+    /// stay f64 at every storage width.
     row_sums: Vec<f64>,
-    /// Plan column marginals.
+    /// Plan column marginals (f64; see `row_sums`).
     col_sums: Vec<f64>,
+    /// f64 staging buffer for the returned plan values (reused across
+    /// solves so the widening copy allocates nothing when warm).
+    t_out: Vec<f64>,
+    /// Lazily allocated f32 sibling for mixed-precision solves (always
+    /// `None` on non-f64 instantiations).
+    lane32: Option<Box<Workspace<f32>>>,
 }
 
-impl Workspace {
+impl<S: Scalar> Workspace<S> {
     pub fn new() -> Self {
         Workspace::default()
     }
@@ -100,21 +124,38 @@ impl Workspace {
         fit(&mut self.v, n);
         fit(&mut self.kv, m);
         fit(&mut self.ktu, n);
+        fit(&mut self.wide, n);
         fit(&mut self.row_sums, m);
         fit(&mut self.col_sums, n);
+        fit(&mut self.t_out, s);
         self.inv_w.clear();
-        self.inv_w.extend(set.weights.iter().map(|&w| 1.0 / w));
+        self.inv_w.extend(set.weights.iter().map(|&w| S::from_f64(1.0 / w)));
         self.csr.rebuild(m, n, &set.rows, &set.cols);
     }
 }
 
-/// The shared solve context: problem marginals, the sampled set, the
+impl Workspace<f64> {
+    /// The f32 sibling workspace, created on first use and reused across
+    /// solves — mixed-precision solves ride the coordinator's per-worker
+    /// f64 workspace without changing the `GwSolver` signature.
+    pub fn lane32(&mut self) -> &mut Workspace<f32> {
+        self.lane32.get_or_insert_with(Default::default)
+    }
+}
+
+/// The shared solve context: problem marginals (at storage width and, for
+/// the f64-only physics, at full width), the sampled set, the
 /// pre-gathered cost block, and the outer-loop controls.
-pub struct Engine<'a> {
-    /// Source marginal (length m).
-    pub a: &'a [f64],
-    /// Target marginal (length n).
-    pub b: &'a [f64],
+pub struct Engine<'a, S: Scalar = f64> {
+    /// Source marginal at storage width (length m).
+    pub a: &'a [S],
+    /// Target marginal at storage width (length n).
+    pub b: &'a [S],
+    /// Source marginal at full f64 width (the unbalanced mass terms and
+    /// objectives always read these; identical storage at `S = f64`).
+    pub a64: &'a [f64],
+    /// Target marginal at full f64 width.
+    pub b64: &'a [f64],
     /// The sampled pattern `S` with importance weights.
     pub set: &'a SampledSet,
     /// Pre-gathered s×s ground-cost block.
@@ -135,43 +176,46 @@ pub struct Engine<'a> {
 /// `inner` → `accept`; returning `false` from `begin_iter`/`accept`
 /// stops the loop keeping the last accepted plan (the degenerate-kernel
 /// guards of the original solvers).
-pub trait Marginals {
+pub trait Marginals<S: Scalar> {
     /// Initial plan value at pattern cell (i, j).
-    fn init(&self, a_i: f64, b_j: f64) -> f64;
+    fn init(&self, a_i: S, b_j: S) -> S;
 
     /// Start-of-iteration state update (e.g. the unbalanced mass terms).
-    fn begin_iter(&mut self, eng: &Engine, ws: &mut Workspace) -> bool {
+    fn begin_iter(&mut self, eng: &Engine<S>, ws: &mut Workspace<S>) -> bool {
         let _ = (eng, ws);
         true
     }
 
     /// Fill `ws.k_vals` (the importance-corrected kernel) from the current
     /// plan `ws.t`; responsible for running the sparse cost product.
-    fn build_kernel(&mut self, eng: &Engine, ws: &mut Workspace);
+    fn build_kernel(&mut self, eng: &Engine<S>, ws: &mut Workspace<S>);
 
     /// Run the inner scaling solver: `ws.k_vals` → candidate plan
     /// `ws.t_next`.
-    fn inner(&mut self, eng: &Engine, ws: &mut Workspace);
+    fn inner(&mut self, eng: &Engine<S>, ws: &mut Workspace<S>);
 
     /// Validate (and possibly rescale) `ws.t_next`; `false` discards it
     /// and stops the outer loop.
-    fn accept(&mut self, eng: &Engine, ws: &mut Workspace) -> bool {
+    fn accept(&mut self, eng: &Engine<S>, ws: &mut Workspace<S>) -> bool {
         let _ = (eng, ws);
         true
     }
 
-    /// Final objective at the plan `ws.t`.
-    fn value(&self, eng: &Engine, ws: &mut Workspace) -> f64;
+    /// Final objective at the plan `ws.t` (always f64).
+    fn value(&self, eng: &Engine<S>, ws: &mut Workspace<S>) -> f64;
 }
 
-impl Engine<'_> {
+impl<S: Scalar> Engine<'_, S> {
     /// Run the shared outer loop with the given marginal strategy on a
-    /// (reusable) workspace.
-    pub fn solve(&self, strategy: &mut dyn Marginals, ws: &mut Workspace) -> SparGwResult {
+    /// (reusable) workspace. The returned plan and value are f64 at every
+    /// storage width.
+    pub fn solve(&self, strategy: &mut dyn Marginals<S>, ws: &mut Workspace<S>) -> SparGwResult {
         let (m, n) = (self.a.len(), self.b.len());
         let s = self.set.len();
         assert!(s > 0, "empty sampled set");
         assert_eq!(self.ctx.s(), s, "SparseCostContext/sampled-set size mismatch");
+        assert_eq!(self.a64.len(), m, "a64/a length mismatch");
+        assert_eq!(self.b64.len(), n, "b64/b length mismatch");
         ws.prepare(m, n, self.set);
 
         for l in 0..s {
@@ -193,7 +237,7 @@ impl Engine<'_> {
             if self.tol > 0.0 {
                 let mut diff = 0.0;
                 for (x, y) in ws.t_next.iter().zip(&ws.t) {
-                    let d = x - y;
+                    let d = (*x - *y).to_f64();
                     diff += d * d;
                 }
                 std::mem::swap(&mut ws.t, &mut ws.t_next);
@@ -207,7 +251,10 @@ impl Engine<'_> {
         }
 
         let value = strategy.value(self, ws);
-        let plan = Coo::from_triplets(m, n, &self.set.rows, &self.set.cols, &ws.t);
+        for (o, v) in ws.t_out.iter_mut().zip(&ws.t) {
+            *o = v.to_f64();
+        }
+        let plan = Coo::from_triplets(m, n, &self.set.rows, &self.set.cols, &ws.t_out);
         SparGwResult { value, plan, outer_iters: outer, converged, support: s }
     }
 }
@@ -216,18 +263,22 @@ impl Engine<'_> {
 /// balanced Sinkhorn is invariant to cost shifts `C_ij ← C_ij − r_i − c_j`,
 /// so reduce `ws.c_vals` by per-row then per-column minima over the stored
 /// pattern into `ws.c_red`, keeping `exp()` in range.
-fn stabilize(eng: &Engine, ws: &mut Workspace) {
+fn stabilize<S: Scalar>(eng: &Engine<S>, ws: &mut Workspace<S>) {
     let s = ws.c_vals.len();
     let rows = &eng.set.rows;
     let cols = &eng.set.cols;
-    ws.row_min.fill(f64::INFINITY);
+    for v in ws.row_min.iter_mut() {
+        *v = S::INFINITY;
+    }
     for l in 0..s {
         let i = rows[l];
         if ws.c_vals[l] < ws.row_min[i] {
             ws.row_min[i] = ws.c_vals[l];
         }
     }
-    ws.col_min.fill(f64::INFINITY);
+    for v in ws.col_min.iter_mut() {
+        *v = S::INFINITY;
+    }
     for l in 0..s {
         let v = ws.c_vals[l] - ws.row_min[rows[l]];
         let j = cols[l];
@@ -243,7 +294,7 @@ fn stabilize(eng: &Engine, ws: &mut Workspace) {
 /// The balanced inner solver shared by the [`Balanced`] and [`Fused`]
 /// strategies: H fixed sparse-Sinkhorn sweeps from `ws.k_vals` into
 /// `ws.t_next`, entirely in workspace buffers.
-fn balanced_inner(eng: &Engine, ws: &mut Workspace, inner_iters: usize) {
+fn balanced_inner<S: Scalar>(eng: &Engine<S>, ws: &mut Workspace<S>, inner_iters: usize) {
     sparse_sinkhorn_fixed(
         eng.a,
         eng.b,
@@ -254,6 +305,7 @@ fn balanced_inner(eng: &Engine, ws: &mut Workspace, inner_iters: usize) {
         &mut ws.v,
         &mut ws.kv,
         &mut ws.ktu,
+        &mut ws.wide,
         &mut ws.t_next,
     );
 }
@@ -268,54 +320,69 @@ pub struct Balanced {
     pub inner_iters: usize,
 }
 
-impl Marginals for Balanced {
-    fn init(&self, a_i: f64, b_j: f64) -> f64 {
+impl<S: Scalar> Marginals<S> for Balanced {
+    fn init(&self, a_i: S, b_j: S) -> S {
         a_i * b_j
     }
 
-    fn build_kernel(&mut self, eng: &Engine, ws: &mut Workspace) {
+    fn build_kernel(&mut self, eng: &Engine<S>, ws: &mut Workspace<S>) {
         eng.ctx.cost_values_into_threaded(&ws.t, &mut ws.c_vals, eng.threads);
         stabilize(eng, ws);
         let s = ws.t.len();
+        let eps = S::from_f64(self.epsilon);
         // Paper: "replace its 0's at S with ∞'s" — a zero cost entry means
         // no sampled mass informed it; exp(−∞/ε) = 0 removes it from the
         // kernel for this round rather than giving it the maximal weight.
         match self.reg {
             Regularizer::Proximal => {
                 for l in 0..s {
-                    ws.k_vals[l] = if ws.c_vals[l] == 0.0 && ws.t[l] == 0.0 {
-                        0.0
+                    ws.k_vals[l] = if ws.c_vals[l] == S::ZERO && ws.t[l] == S::ZERO {
+                        S::ZERO
                     } else {
-                        (-ws.c_red[l] / self.epsilon).exp() * ws.t[l] * ws.inv_w[l]
+                        (-ws.c_red[l] / eps).exp() * ws.t[l] * ws.inv_w[l]
                     };
                 }
             }
             Regularizer::Entropy => {
                 for l in 0..s {
-                    ws.k_vals[l] = (-ws.c_red[l] / self.epsilon).exp() * ws.inv_w[l];
+                    ws.k_vals[l] = (-ws.c_red[l] / eps).exp() * ws.inv_w[l];
                 }
             }
         }
     }
 
-    fn inner(&mut self, eng: &Engine, ws: &mut Workspace) {
+    fn inner(&mut self, eng: &Engine<S>, ws: &mut Workspace<S>) {
         balanced_inner(eng, ws, self.inner_iters);
     }
 
-    fn accept(&mut self, _eng: &Engine, ws: &mut Workspace) -> bool {
+    fn accept(&mut self, _eng: &Engine<S>, ws: &mut Workspace<S>) -> bool {
         // Degenerate kernel (e.g. a severely under-informative sample
         // set): keep the last good plan instead of propagating NaNs.
-        ws.t_next.iter().all(|v| v.is_finite())
+        if !ws.t_next.iter().all(|v| v.is_finite()) {
+            return false;
+        }
+        // f32 lane only: exp(-c_red/ε) underflows to 0 at c_red/ε ≈ 88
+        // (vs ≈708 for f64), which zeroes the whole kernel and hence the
+        // plan — finite, so the guard above misses it. Reject the empty
+        // plan and keep the last good one. Not applied at f64 so the
+        // historical trajectory stays bit-identical.
+        if S::PRECISION == Precision::F32 {
+            let mass: f64 = ws.t_next.iter().map(|v| v.to_f64()).sum();
+            if mass <= 0.0 {
+                return false;
+            }
+        }
+        true
     }
 
-    fn value(&self, eng: &Engine, ws: &mut Workspace) -> f64 {
+    fn value(&self, eng: &Engine<S>, ws: &mut Workspace<S>) -> f64 {
         eng.ctx.energy_with(&ws.t, &mut ws.c_vals)
     }
 }
 
 /// Fused marginals — Algorithm 4 (Spar-FGW): the balanced kernel over the
 /// mixed cost `α·C̃(T̃) + (1−α)·M̃`, objective `α·ĜW + (1−α)·⟨M̃, T̃⟩`.
-pub struct Fused<'m> {
+pub struct Fused<'m, S: Scalar = f64> {
     /// Regularization weight ε.
     pub epsilon: f64,
     /// Proximal or entropic kernel.
@@ -324,24 +391,28 @@ pub struct Fused<'m> {
     pub inner_iters: usize,
     /// Structure/feature trade-off α.
     pub alpha: f64,
-    /// Feature distances M̃ at the sampled positions (entry order).
-    pub feat_vals: &'m [f64],
+    /// Feature distances M̃ at the sampled positions (entry order, at
+    /// storage width).
+    pub feat_vals: &'m [S],
 }
 
-impl Marginals for Fused<'_> {
-    fn init(&self, a_i: f64, b_j: f64) -> f64 {
+impl<S: Scalar> Marginals<S> for Fused<'_, S> {
+    fn init(&self, a_i: S, b_j: S) -> S {
         a_i * b_j
     }
 
-    fn build_kernel(&mut self, eng: &Engine, ws: &mut Workspace) {
+    fn build_kernel(&mut self, eng: &Engine<S>, ws: &mut Workspace<S>) {
         eng.ctx.cost_values_into_threaded(&ws.t, &mut ws.c_vals, eng.threads);
         let s = ws.t.len();
+        let alpha = S::from_f64(self.alpha);
+        let one_minus = S::from_f64(1.0 - self.alpha);
         for l in 0..s {
-            ws.c_vals[l] = self.alpha * ws.c_vals[l] + (1.0 - self.alpha) * self.feat_vals[l];
+            ws.c_vals[l] = alpha * ws.c_vals[l] + one_minus * self.feat_vals[l];
         }
         stabilize(eng, ws);
+        let eps = S::from_f64(self.epsilon);
         for l in 0..s {
-            let e = (-ws.c_red[l] / self.epsilon).exp();
+            let e = (-ws.c_red[l] / eps).exp();
             ws.k_vals[l] = match self.reg {
                 Regularizer::Proximal => e * ws.t[l] * ws.inv_w[l],
                 Regularizer::Entropy => e * ws.inv_w[l],
@@ -349,20 +420,37 @@ impl Marginals for Fused<'_> {
         }
     }
 
-    fn inner(&mut self, eng: &Engine, ws: &mut Workspace) {
+    fn inner(&mut self, eng: &Engine<S>, ws: &mut Workspace<S>) {
         balanced_inner(eng, ws, self.inner_iters);
     }
 
-    fn value(&self, eng: &Engine, ws: &mut Workspace) -> f64 {
+    fn accept(&mut self, _eng: &Engine<S>, ws: &mut Workspace<S>) -> bool {
+        // f32 lane only (see [`Balanced::accept`]): reject the all-zero /
+        // non-finite plan an underflowed f32 kernel produces. The f64
+        // path keeps its historical unconditional accept bit-for-bit.
+        if S::PRECISION == Precision::F64 {
+            return true;
+        }
+        ws.t_next.iter().all(|v| v.is_finite())
+            && ws.t_next.iter().map(|v| v.to_f64()).sum::<f64>() > 0.0
+    }
+
+    fn value(&self, eng: &Engine<S>, ws: &mut Workspace<S>) -> f64 {
         let gw_term = eng.ctx.energy_with(&ws.t, &mut ws.c_vals);
-        let w_term: f64 = self.feat_vals.iter().zip(&ws.t).map(|(m, t)| m * t).sum();
+        let w_term: f64 = self
+            .feat_vals
+            .iter()
+            .zip(&ws.t)
+            .map(|(m, t)| m.to_f64() * t.to_f64())
+            .sum();
         self.alpha * gw_term + (1.0 - self.alpha) * w_term
     }
 }
 
 /// Unbalanced marginals — Algorithm 3 (Spar-UGW): mass-dependent ε̄/λ̄, the
 /// scalar `E(T̃)` cost shift, the λ̄/(λ̄+ε̄)-exponent inner solver, the mass
-/// rescaling step, and the KL⊗-penalized objective.
+/// rescaling step, and the KL⊗-penalized objective. The mass terms, cost
+/// shift and objective always run in f64 (they are marginal sums).
 pub struct Unbalanced {
     /// Marginal relaxation weight λ.
     pub lambda: f64,
@@ -396,13 +484,13 @@ impl Unbalanced {
     }
 }
 
-impl Marginals for Unbalanced {
-    fn init(&self, a_i: f64, b_j: f64) -> f64 {
-        a_i * b_j * self.norm0
+impl<S: Scalar> Marginals<S> for Unbalanced {
+    fn init(&self, a_i: S, b_j: S) -> S {
+        a_i * b_j * S::from_f64(self.norm0)
     }
 
-    fn begin_iter(&mut self, _eng: &Engine, ws: &mut Workspace) -> bool {
-        let mass: f64 = ws.t.iter().sum();
+    fn begin_iter(&mut self, _eng: &Engine<S>, ws: &mut Workspace<S>) -> bool {
+        let mass: f64 = ws.t.iter().map(|v| v.to_f64()).sum();
         if mass <= 0.0 || !mass.is_finite() {
             return false;
         }
@@ -412,22 +500,23 @@ impl Marginals for Unbalanced {
         true
     }
 
-    fn build_kernel(&mut self, eng: &Engine, ws: &mut Workspace) {
+    fn build_kernel(&mut self, eng: &Engine<S>, ws: &mut Workspace<S>) {
         // Step 8a: sparse unbalanced cost = sparse product + E(T̃) shift.
         eng.ctx.cost_values_into_threaded(&ws.t, &mut ws.c_vals, eng.threads);
-        ws.csr.row_sums_into(&ws.t, &mut ws.row_sums);
-        ws.csr.col_sums_into(&ws.t, &mut ws.col_sums);
+        ws.csr.row_sums_wide(&ws.t, &mut ws.row_sums);
+        ws.csr.col_sums_wide(&ws.t, &mut ws.col_sums);
         let shift =
-            unbalanced_cost_shift(&ws.row_sums, &ws.col_sums, eng.a, eng.b, self.lambda);
+            unbalanced_cost_shift(&ws.row_sums, &ws.col_sums, eng.a64, eng.b64, self.lambda);
         // Step 8b: K̃ = exp(−C̃_un/ε̄) ⊙ T̃ ⊘ (sP).
         let s = ws.t.len();
+        let shift_s = S::from_f64(shift);
+        let eps_bar = S::from_f64(self.eps_bar);
         for l in 0..s {
-            ws.k_vals[l] =
-                (-(ws.c_vals[l] + shift) / self.eps_bar).exp() * ws.t[l] * ws.inv_w[l];
+            ws.k_vals[l] = (-(ws.c_vals[l] + shift_s) / eps_bar).exp() * ws.t[l] * ws.inv_w[l];
         }
     }
 
-    fn inner(&mut self, eng: &Engine, ws: &mut Workspace) {
+    fn inner(&mut self, eng: &Engine<S>, ws: &mut Workspace<S>) {
         sparse_unbalanced_sinkhorn_fixed(
             eng.a,
             eng.b,
@@ -440,31 +529,32 @@ impl Marginals for Unbalanced {
             &mut ws.v,
             &mut ws.kv,
             &mut ws.ktu,
+            &mut ws.wide,
             &mut ws.t_next,
         );
     }
 
-    fn accept(&mut self, _eng: &Engine, ws: &mut Workspace) -> bool {
+    fn accept(&mut self, _eng: &Engine<S>, ws: &mut Workspace<S>) -> bool {
         // Step 10: mass rescaling; kernel over/underflow (extreme λ/ε)
         // keeps the last good plan.
-        let next_mass: f64 = ws.t_next.iter().sum();
+        let next_mass: f64 = ws.t_next.iter().map(|v| v.to_f64()).sum();
         if !next_mass.is_finite() || next_mass <= 0.0 {
             return false;
         }
-        let scale = (self.mass / next_mass).sqrt();
+        let scale = S::from_f64((self.mass / next_mass).sqrt());
         for x in ws.t_next.iter_mut() {
             *x *= scale;
         }
         true
     }
 
-    fn value(&self, eng: &Engine, ws: &mut Workspace) -> f64 {
+    fn value(&self, eng: &Engine<S>, ws: &mut Workspace<S>) -> f64 {
         // Step 11: ÛGW = quadratic term (on support) + λ KL⊗ penalties.
         let quad = eng.ctx.energy_with(&ws.t, &mut ws.c_vals);
-        ws.csr.row_sums_into(&ws.t, &mut ws.row_sums);
-        ws.csr.col_sums_into(&ws.t, &mut ws.col_sums);
-        quad + self.lambda * kl_otimes(&ws.row_sums, eng.a)
-            + self.lambda * kl_otimes(&ws.col_sums, eng.b)
+        ws.csr.row_sums_wide(&ws.t, &mut ws.row_sums);
+        ws.csr.col_sums_wide(&ws.t, &mut ws.col_sums);
+        quad + self.lambda * kl_otimes(&ws.row_sums, eng.a64)
+            + self.lambda * kl_otimes(&ws.col_sums, eng.b64)
     }
 }
 
@@ -473,7 +563,9 @@ mod tests {
     use super::*;
     use crate::gw::cost::GroundCost;
     use crate::gw::sampling::GwSampler;
-    use crate::gw::spar_gw::{spar_gw_with_set, spar_gw_with_workspace, SparGwConfig};
+    use crate::gw::spar_gw::{
+        spar_gw_with_set, spar_gw_with_workspace, spar_gw_with_workspace_f32, SparGwConfig,
+    };
     use crate::gw::GwProblem;
     use crate::linalg::Mat;
     use crate::rng::Xoshiro256;
@@ -528,5 +620,35 @@ mod tests {
         for (x, y) in serial.plan.vals().iter().zip(threaded.plan.vals()) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    #[test]
+    fn f32_engine_tracks_f64_on_shared_set() {
+        // Same sampled set, same iteration schedule: the f32 lane's
+        // estimate must land within mixed-precision tolerance of f64 —
+        // far tighter than the estimator's own sampling noise.
+        let n = 24;
+        let c1 = relation(n, 8);
+        let c2 = relation(n, 9);
+        let a = uniform(n);
+        let p = GwProblem::new(&c1, &c2, &a, &a);
+        let sampler = GwSampler::new(&a, &a, 0.0);
+        let mut rng = Xoshiro256::new(10);
+        let set = sampler.sample_iid(&mut rng, 12 * n);
+        let cfg = SparGwConfig { sample_size: 12 * n, ..Default::default() };
+        let mut ws = Workspace::new();
+        let r64 = spar_gw_with_workspace(&p, GroundCost::L2, &cfg, &set, &mut ws, 1);
+        let r32 = spar_gw_with_workspace_f32(&p, GroundCost::L2, &cfg, &set, &mut ws, 1);
+        assert!(r32.value.is_finite());
+        let denom = r64.value.abs().max(1e-3);
+        assert!(
+            (r32.value - r64.value).abs() / denom < 0.05,
+            "f32 {} vs f64 {}",
+            r32.value,
+            r64.value
+        );
+        // The f32 lane is reused (allocated once) across solves.
+        let r32b = spar_gw_with_workspace_f32(&p, GroundCost::L2, &cfg, &set, &mut ws, 1);
+        assert_eq!(r32.value.to_bits(), r32b.value.to_bits());
     }
 }

@@ -193,6 +193,7 @@ pub struct LrGwSolver {
 
 impl LrGwSolver {
     pub(crate) fn from_opts(base: &SolverBase, o: &mut Opts) -> Result<Self> {
+        o.precision_f64_only("lr_gw", base.precision)?;
         let d = LrGwConfig::default();
         Ok(LrGwSolver {
             cost: o.cost(base.cost)?,

@@ -243,6 +243,7 @@ pub struct SagrowSolver {
 
 impl SagrowSolver {
     pub(crate) fn from_opts(base: &SolverBase, o: &mut Opts) -> Result<Self> {
+        o.precision_f64_only("sagrow", base.precision)?;
         Ok(SagrowSolver {
             cost: o.cost(base.cost)?,
             cfg: SagrowConfig {

@@ -15,6 +15,7 @@
 //!   probability `min(1, s·p_ij)` (Braverman et al. 2021), used by the
 //!   theory-validation benches.
 
+use crate::kernel::Precision;
 use crate::rng::{AliasTable, ProductAlias, Rng};
 
 /// The sampled sparsity pattern `S` plus its importance weights.
@@ -58,7 +59,27 @@ pub struct SideFactors {
 impl SideFactors {
     /// Compute `√marginal` and its alias table (O(n)).
     pub fn new(marginal: &[f64]) -> Self {
-        let u: Vec<f64> = marginal.iter().map(|&x| x.max(0.0).sqrt()).collect();
+        SideFactors::with_precision(marginal, Precision::F64)
+    }
+
+    /// [`SideFactors::new`] with the `√·` factors computed at the given
+    /// kernel precision: the marginal is rounded through the storage
+    /// type, the square root taken at that width, and the result widened
+    /// back for the (always-f64) alias machinery. At
+    /// [`Precision::F64`] this is exactly [`SideFactors::new`] —
+    /// bit-identical draws; at [`Precision::F32`] the sampling factors
+    /// carry f32 resolution, matching the rest of the mixed-precision
+    /// pipeline. The coordinator's `StructureCache` caches one instance
+    /// per (structure, precision) via
+    /// [`PreparedStructure::factors_for`](crate::gw::solver::PreparedStructure::factors_for).
+    pub fn with_precision(marginal: &[f64], precision: Precision) -> Self {
+        let u: Vec<f64> = match precision {
+            Precision::F64 => marginal.iter().map(|&x| x.max(0.0).sqrt()).collect(),
+            Precision::F32 => marginal
+                .iter()
+                .map(|&x| ((x.max(0.0) as f32).sqrt()) as f64)
+                .collect(),
+        };
         SideFactors { table: AliasTable::new(&u), len: marginal.len() }
     }
 
@@ -230,6 +251,50 @@ mod tests {
                     "p({i},{j}) = {} < {bound}",
                     s.prob_of(i, j)
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn f64_precision_factors_are_bit_identical_to_new() {
+        let a = vec![0.12, 0.38, 0.5];
+        let plain = SideFactors::new(&a);
+        let prec = SideFactors::with_precision(&a, Precision::F64);
+        // Same factor tables ⇒ same probabilities and same draws.
+        let s1 = GwSampler::from_factors(&plain, &plain, 0.0);
+        let s2 = GwSampler::from_factors(&prec, &prec, 0.0);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(s1.prob_of(i, j).to_bits(), s2.prob_of(i, j).to_bits());
+            }
+        }
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let set1 = s1.sample_iid(&mut r1, 40);
+        let set2 = s2.sample_iid(&mut r2, 40);
+        assert_eq!(set1.rows, set2.rows);
+        assert_eq!(set1.cols, set2.cols);
+    }
+
+    #[test]
+    fn f32_precision_factors_stay_close_and_normalized() {
+        let a = vec![0.01, 0.19, 0.3, 0.5];
+        let f32f = SideFactors::with_precision(&a, Precision::F32);
+        let s = GwSampler::from_factors(&f32f, &f32f, 0.0);
+        let mut total = 0.0;
+        for i in 0..4 {
+            for j in 0..4 {
+                total += s.prob_of(i, j);
+            }
+        }
+        assert!((total - 1.0).abs() < 1e-9, "total {total}");
+        // Quantized factors drift from f64 by at most f32 rounding.
+        let f64f = SideFactors::new(&a);
+        let s64 = GwSampler::from_factors(&f64f, &f64f, 0.0);
+        for i in 0..4 {
+            for j in 0..4 {
+                let d = (s.prob_of(i, j) - s64.prob_of(i, j)).abs();
+                assert!(d < 1e-6, "p({i},{j}) drift {d}");
             }
         }
     }

@@ -145,6 +145,7 @@ pub struct SgwlSolver {
 
 impl SgwlSolver {
     pub(crate) fn from_opts(base: &SolverBase, o: &mut Opts) -> Result<Self> {
+        o.precision_f64_only("sgwl", base.precision)?;
         Ok(SgwlSolver {
             cost: o.cost(base.cost)?,
             cfg: SgwlConfig {

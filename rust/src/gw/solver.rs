@@ -28,6 +28,7 @@
 //! …); this module owns only the interface and the registry.
 
 use std::collections::BTreeMap;
+use std::sync::OnceLock;
 
 use super::alg1::{Alg1Kind, Alg1Solver};
 use super::anchor::AnchorSolver;
@@ -42,6 +43,7 @@ use super::spar_fgw::SparFgwSolver;
 use super::spar_gw::SparGwSolver;
 use super::spar_ugw::SparUgwSolver;
 use super::{GwProblem, Regularizer};
+use crate::kernel::Precision;
 use crate::linalg::Mat;
 use crate::rng::Rng;
 use crate::sparse::Coo;
@@ -144,8 +146,14 @@ pub struct SolveReport {
 pub struct PreparedStructure {
     /// Marginal distribution over the structure's atoms (length n).
     pub marginal: Vec<f64>,
-    /// Eq. (5) importance-sampling factors `√marginal` as an alias table.
+    /// Eq. (5) importance-sampling factors `√marginal` as an alias table
+    /// (f64 precision — the default path).
     pub factors: SideFactors,
+    /// Lazily built f32-precision factors, cached per structure so a
+    /// mixed-precision Gram run builds them exactly once per input (the
+    /// relation matrix itself is never duplicated — only the O(n) factor
+    /// table exists per precision).
+    factors_f32: OnceLock<SideFactors>,
 }
 
 impl PreparedStructure {
@@ -153,7 +161,21 @@ impl PreparedStructure {
     /// derives the sampling factors from it.
     pub fn new(marginal: Vec<f64>) -> Self {
         let factors = SideFactors::new(&marginal);
-        PreparedStructure { marginal, factors }
+        PreparedStructure { marginal, factors, factors_f32: OnceLock::new() }
+    }
+
+    /// The sampling factors at the requested kernel precision. `F64`
+    /// returns the eagerly built table (the historical path, bit-for-bit);
+    /// `F32` builds the quantized table on first use and caches it for
+    /// every later pair/shard/thread that asks (thread-safe via
+    /// `OnceLock`).
+    pub fn factors_for(&self, precision: Precision) -> &SideFactors {
+        match precision {
+            Precision::F64 => &self.factors,
+            Precision::F32 => self
+                .factors_f32
+                .get_or_init(|| SideFactors::with_precision(&self.marginal, Precision::F32)),
+        }
     }
 
     /// Number of atoms.
@@ -262,6 +284,9 @@ pub struct SolverBase {
     pub lambda: f64,
     /// Threads row-chunking the O(s²) cost kernel (Spar-* family).
     pub threads: usize,
+    /// Kernel precision (`f64` default — bit-identical; `f32` = mixed
+    /// precision, Spar-* family only).
+    pub precision: Precision,
 }
 
 impl Default for SolverBase {
@@ -278,6 +303,7 @@ impl Default for SolverBase {
             tol: 1e-9,
             lambda: 1.0,
             threads: 1,
+            precision: Precision::F64,
         }
     }
 }
@@ -340,6 +366,34 @@ impl<'a> Opts<'a> {
         }
     }
 
+    pub(crate) fn precision(&mut self, default: Precision) -> Result<Precision> {
+        match self.raw("precision") {
+            None => Ok(default),
+            // One parser for the whole crate (case-insensitive, like
+            // solver names); only the error prefix is option-specific.
+            Some(v) => Precision::parse(v)
+                .map_err(|_| format_err!("solver option precision={v:?}: expected f32|f64")),
+        }
+    }
+
+    /// For engines whose kernels are f64-only: accept `precision=f64`
+    /// (and the default), reject `precision=f32` with a one-line error
+    /// naming the solver and the values it supports.
+    pub(crate) fn precision_f64_only(
+        &mut self,
+        solver: &'static str,
+        default: Precision,
+    ) -> Result<()> {
+        match self.precision(default)? {
+            Precision::F64 => Ok(()),
+            Precision::F32 => bail!(
+                "solver {solver:?} does not support precision=f32 \
+                 (supported: f64; f32 is available for: {})",
+                F32_SOLVERS.join(", ")
+            ),
+        }
+    }
+
     fn finish(mut self, solver: &str) -> Result<()> {
         self.known.sort_unstable();
         for key in self.map.keys() {
@@ -363,6 +417,11 @@ const SOLVER_NAMES: &[&str] = &[
     "anchor",
 ];
 
+/// The solvers whose engine loop supports `precision=f32` (the SparCore
+/// family); everyone else is f64-only and rejects the option
+/// descriptively.
+const F32_SOLVERS: &[&str] = &["spar_gw", "spar_fgw", "spar_ugw"];
+
 /// Case/punctuation-insensitive key: `"Spar-GW"` ≡ `"spar_gw"`.
 fn normalize(name: &str) -> String {
     name.chars()
@@ -375,6 +434,23 @@ impl SolverRegistry {
     /// All registered solver names.
     pub fn names() -> &'static [&'static str] {
         SOLVER_NAMES
+    }
+
+    /// Whether the named solver supports `precision=f32` (the SparCore
+    /// family does; the dense comparators are f64-only). Unknown names
+    /// return `false`.
+    pub fn supports_f32(name: &str) -> bool {
+        let key = normalize(name);
+        F32_SOLVERS.iter().any(|&s| normalize(s) == key)
+    }
+
+    /// The precisions the named solver accepts, for display.
+    pub fn precisions(name: &str) -> &'static str {
+        if Self::supports_f32(name) {
+            "f32, f64"
+        } else {
+            "f64"
+        }
     }
 
     /// Build a solver by name with library defaults plus `opts` overrides.
@@ -457,5 +533,68 @@ mod tests {
         let msg = format!("{err}");
         assert!(msg.contains("epsilon"), "{msg}");
         assert!(msg.contains("number"), "{msg}");
+    }
+
+    #[test]
+    fn precision_support_table() {
+        for &name in F32_SOLVERS {
+            assert!(SolverRegistry::supports_f32(name), "{name}");
+            assert_eq!(SolverRegistry::precisions(name), "f32, f64");
+        }
+        for &name in &["egw", "pga_gw", "emd_gw", "sagrow", "lr_gw", "sgwl", "anchor"] {
+            assert!(!SolverRegistry::supports_f32(name), "{name}");
+            assert_eq!(SolverRegistry::precisions(name), "f64");
+        }
+        // Case/punctuation-insensitive, like the registry itself.
+        assert!(SolverRegistry::supports_f32("Spar-GW"));
+    }
+
+    #[test]
+    fn every_solver_accepts_the_precision_key_at_f64() {
+        let mut opts = BTreeMap::new();
+        opts.insert("precision".to_string(), "f64".to_string());
+        for &name in SolverRegistry::names() {
+            assert!(
+                SolverRegistry::build(name, &opts).is_ok(),
+                "{name} must accept precision=f64"
+            );
+        }
+    }
+
+    #[test]
+    fn f64_only_solvers_reject_f32_with_one_line_error() {
+        let mut opts = BTreeMap::new();
+        opts.insert("precision".to_string(), "f32".to_string());
+        for &name in SolverRegistry::names() {
+            let r = SolverRegistry::build(name, &opts);
+            if SolverRegistry::supports_f32(name) {
+                assert!(r.is_ok(), "{name} must accept precision=f32");
+            } else {
+                let msg = format!("{}", r.unwrap_err());
+                assert!(!msg.contains('\n'), "{name}: not one line: {msg}");
+                assert!(msg.contains(name), "{name}: {msg}");
+                assert!(msg.contains("f64"), "{name}: {msg} should name the valid value");
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_precision_lists_valid_values() {
+        let mut opts = BTreeMap::new();
+        opts.insert("precision".to_string(), "f16".to_string());
+        let msg = format!("{}", SolverRegistry::build("spar_gw", &opts).unwrap_err());
+        assert!(msg.contains("f32"), "{msg}");
+        assert!(msg.contains("f64"), "{msg}");
+    }
+
+    #[test]
+    fn prepared_structure_caches_per_precision_factors() {
+        let ps = PreparedStructure::new(vec![0.25, 0.25, 0.5]);
+        let f64a = ps.factors_for(Precision::F64) as *const _;
+        let f64b = ps.factors_for(Precision::F64) as *const _;
+        assert_eq!(f64a, f64b, "f64 factors must be the eager table");
+        let f32a = ps.factors_for(Precision::F32) as *const _;
+        let f32b = ps.factors_for(Precision::F32) as *const _;
+        assert_eq!(f32a, f32b, "f32 factors must be built once and cached");
     }
 }

@@ -70,6 +70,8 @@ pub fn spar_fgw_with_workspace(
     let eng = Engine {
         a: p.gw.a,
         b: p.gw.b,
+        a64: p.gw.a,
+        b64: p.gw.b,
         set,
         ctx: &ctx,
         outer_iters: cfg.outer_iters,
@@ -84,6 +86,47 @@ pub fn spar_fgw_with_workspace(
         feat_vals: &feat_vals,
     };
     eng.solve(&mut strategy, ws)
+}
+
+/// [`spar_fgw_with_workspace`] in mixed precision: the fused cost, kernel
+/// and inner Sinkhorn run in f32 on the workspace's
+/// [`lane32`](Workspace::lane32); the final objective and plan stay f64.
+pub fn spar_fgw_with_workspace_f32(
+    p: &FgwProblem,
+    cost: GroundCost,
+    cfg: &SparGwConfig,
+    set: &SampledSet,
+    ws: &mut Workspace,
+    threads: usize,
+) -> SparGwResult {
+    let ctx = SparseCostContext::new(p.gw.cx, p.gw.cy, &set.rows, &set.cols, cost);
+    let feat_vals: Vec<f32> = set
+        .rows
+        .iter()
+        .zip(&set.cols)
+        .map(|(&i, &j)| p.feat[(i, j)] as f32)
+        .collect();
+    let a32: Vec<f32> = p.gw.a.iter().map(|&x| x as f32).collect();
+    let b32: Vec<f32> = p.gw.b.iter().map(|&x| x as f32).collect();
+    let eng = Engine {
+        a: &a32,
+        b: &b32,
+        a64: p.gw.a,
+        b64: p.gw.b,
+        set,
+        ctx: &ctx,
+        outer_iters: cfg.outer_iters,
+        tol: cfg.tol,
+        threads,
+    };
+    let mut strategy = Fused {
+        epsilon: cfg.epsilon,
+        reg: cfg.reg,
+        inner_iters: cfg.inner_iters,
+        alpha: p.alpha,
+        feat_vals: &feat_vals,
+    };
+    eng.solve(&mut strategy, ws.lane32())
 }
 
 /// Registry solver for Algorithm 4 (`"spar_fgw"`). On a fused problem it

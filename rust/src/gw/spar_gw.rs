@@ -28,6 +28,7 @@ use super::solver::{
 };
 use super::tensor::SparseCostContext;
 use super::{GwProblem, Regularizer};
+use crate::kernel::Precision;
 use crate::rng::Rng;
 use crate::sparse::Coo;
 use crate::util::error::Result;
@@ -120,6 +121,8 @@ pub fn spar_gw_with_workspace(
     let eng = Engine {
         a: p.a,
         b: p.b,
+        a64: p.a,
+        b64: p.b,
         set,
         ctx: &ctx,
         outer_iters: cfg.outer_iters,
@@ -129,6 +132,43 @@ pub fn spar_gw_with_workspace(
     let mut strategy =
         Balanced { epsilon: cfg.epsilon, reg: cfg.reg, inner_iters: cfg.inner_iters };
     eng.solve(&mut strategy, ws)
+}
+
+/// [`spar_gw_with_workspace`] in mixed precision: the coupling updates,
+/// kernel exponentials and inner Sinkhorn run in f32 on the f64
+/// workspace's [`lane32`](Workspace::lane32) (reused across solves), while
+/// marginal sums, the final ĜW estimate and the returned plan stay f64.
+/// On the same sampled set the estimate lands within f32-rounding
+/// tolerance of the f64 path (tolerance-tested, not bit-locked). The
+/// iteration schedule may differ: the ‖ΔT̃‖ stopping test reads the f32
+/// plan buffers, so once updates fall below f32 resolution the f32 lane
+/// stops (reporting `converged` certified only at storage resolution)
+/// while the f64 run may keep iterating.
+pub fn spar_gw_with_workspace_f32(
+    p: &GwProblem,
+    cost: GroundCost,
+    cfg: &SparGwConfig,
+    set: &SampledSet,
+    ws: &mut Workspace,
+    threads: usize,
+) -> SparGwResult {
+    let ctx = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, cost);
+    let a32: Vec<f32> = p.a.iter().map(|&x| x as f32).collect();
+    let b32: Vec<f32> = p.b.iter().map(|&x| x as f32).collect();
+    let eng = Engine {
+        a: &a32,
+        b: &b32,
+        a64: p.a,
+        b64: p.b,
+        set,
+        ctx: &ctx,
+        outer_iters: cfg.outer_iters,
+        tol: cfg.tol,
+        threads,
+    };
+    let mut strategy =
+        Balanced { epsilon: cfg.epsilon, reg: cfg.reg, inner_iters: cfg.inner_iters };
+    eng.solve(&mut strategy, ws.lane32())
 }
 
 /// Registry solver for Algorithm 2 (`"spar_gw"`): samples the index set
@@ -143,6 +183,11 @@ pub struct SparGwSolver {
     pub cfg: SparGwConfig,
     /// Threads row-chunking the O(s²) cost kernel (1 = serial).
     pub threads: usize,
+    /// Kernel precision: `F64` (default, bit-identical to the historical
+    /// path) or `F32` (mixed precision — the sampling factors, coupling
+    /// updates and inner Sinkhorn run at half width; the final ĜW, plan
+    /// and report stay f64).
+    pub precision: Precision,
 }
 
 impl SparGwSolver {
@@ -159,13 +204,17 @@ impl SparGwSolver {
                 tol: o.f64("tol", base.tol)?,
             },
             threads: o.usize("threads", base.threads)?,
+            precision: o.precision(base.precision)?,
         })
     }
 
-    /// Steps 2–3: the Eq. (5) sampler on the problem marginals.
+    /// Steps 2–3: the Eq. (5) sampler on the problem marginals, with the
+    /// `√·` factors computed at the solver's precision (identical to the
+    /// historical sampler at f64).
     fn sample(&self, a: &[f64], b: &[f64], rng: &mut Rng) -> SampledSet {
-        let sampler = GwSampler::new(a, b, self.cfg.shrink);
-        sampler.sample_iid(rng, self.budget(a.len(), b.len()))
+        let fa = SideFactors::with_precision(a, self.precision);
+        let fb = SideFactors::with_precision(b, self.precision);
+        self.sample_cached(&fa, &fb, rng)
     }
 
     /// Steps 2–3 from cached per-side factors — bit-identical draws to
@@ -215,7 +264,8 @@ impl GwSolver for SparGwSolver {
         ws: &mut Workspace,
     ) -> Result<SolveReport> {
         let t0 = Instant::now();
-        let set = self.sample_cached(&sx.factors, &sy.factors, rng);
+        let set =
+            self.sample_cached(sx.factors_for(self.precision), sy.factors_for(self.precision), rng);
         self.solve_with_set(p, &set, t0.elapsed().as_secs_f64(), ws)
     }
 
@@ -228,7 +278,8 @@ impl GwSolver for SparGwSolver {
         ws: &mut Workspace,
     ) -> Result<SolveReport> {
         let t0 = Instant::now();
-        let set = self.sample_cached(&sx.factors, &sy.factors, rng);
+        let set =
+            self.sample_cached(sx.factors_for(self.precision), sy.factors_for(self.precision), rng);
         self.solve_fused_with_set(p, &set, t0.elapsed().as_secs_f64(), ws)
     }
 }
@@ -244,7 +295,12 @@ impl SparGwSolver {
         ws: &mut Workspace,
     ) -> Result<SolveReport> {
         let t1 = Instant::now();
-        let r = spar_gw_with_workspace(p, self.cost, &self.cfg, set, ws, self.threads);
+        let r = match self.precision {
+            Precision::F64 => spar_gw_with_workspace(p, self.cost, &self.cfg, set, ws, self.threads),
+            Precision::F32 => {
+                spar_gw_with_workspace_f32(p, self.cost, &self.cfg, set, ws, self.threads)
+            }
+        };
         Ok(SolveReport {
             solver: self.name(),
             value: r.value,
@@ -264,14 +320,24 @@ impl SparGwSolver {
         ws: &mut Workspace,
     ) -> Result<SolveReport> {
         let t1 = Instant::now();
-        let r = super::spar_fgw::spar_fgw_with_workspace(
-            p,
-            self.cost,
-            &self.cfg,
-            set,
-            ws,
-            self.threads,
-        );
+        let r = match self.precision {
+            Precision::F64 => super::spar_fgw::spar_fgw_with_workspace(
+                p,
+                self.cost,
+                &self.cfg,
+                set,
+                ws,
+                self.threads,
+            ),
+            Precision::F32 => super::spar_fgw::spar_fgw_with_workspace_f32(
+                p,
+                self.cost,
+                &self.cfg,
+                set,
+                ws,
+                self.threads,
+            ),
+        };
         Ok(SolveReport {
             solver: self.name(),
             value: r.value,

@@ -23,6 +23,7 @@ use super::solver::{GwSolver, Opts, PhaseTimings, Plan, SolveReport, SolverBase}
 use super::tensor::{tensor_product, SparseCostContext};
 use super::ugw::{unbalanced_cost_shift, UgwConfig};
 use super::GwProblem;
+use crate::kernel::Precision;
 use crate::linalg::Mat;
 use crate::rng::{AliasTable, Rng};
 use crate::sparse::Coo;
@@ -165,6 +166,8 @@ pub fn spar_ugw_with_workspace(
     let eng = Engine {
         a: p.a,
         b: p.b,
+        a64: p.a,
+        b64: p.b,
         set,
         ctx: &ctx,
         outer_iters: cfg.ugw.outer_iters,
@@ -174,6 +177,45 @@ pub fn spar_ugw_with_workspace(
     let mut strategy =
         Unbalanced::new(cfg.ugw.lambda, cfg.ugw.epsilon, cfg.ugw.inner_iters, p.a, p.b);
     let r = eng.solve(&mut strategy, ws);
+    SparUgwResult {
+        value: r.value,
+        plan: r.plan,
+        outer_iters: r.outer_iters,
+        converged: r.converged,
+        support: r.support,
+    }
+}
+
+/// [`spar_ugw_with_workspace`] in mixed precision: the kernel build and
+/// the unbalanced inner solver run in f32 on the workspace's
+/// [`lane32`](Workspace::lane32); the mass terms, `E(T̃)` shift, KL⊗
+/// objective and returned plan stay f64. The Eq. (9) sampling step is
+/// O(mn) preprocessing and always runs in f64 (see `sample_ugw_set`).
+pub fn spar_ugw_with_workspace_f32(
+    p: &GwProblem,
+    cost: GroundCost,
+    cfg: &SparUgwConfig,
+    set: &SampledSet,
+    ws: &mut Workspace,
+    threads: usize,
+) -> SparUgwResult {
+    let ctx = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, cost);
+    let a32: Vec<f32> = p.a.iter().map(|&x| x as f32).collect();
+    let b32: Vec<f32> = p.b.iter().map(|&x| x as f32).collect();
+    let eng = Engine {
+        a: &a32,
+        b: &b32,
+        a64: p.a,
+        b64: p.b,
+        set,
+        ctx: &ctx,
+        outer_iters: cfg.ugw.outer_iters,
+        tol: cfg.ugw.tol,
+        threads,
+    };
+    let mut strategy =
+        Unbalanced::new(cfg.ugw.lambda, cfg.ugw.epsilon, cfg.ugw.inner_iters, p.a, p.b);
+    let r = eng.solve(&mut strategy, ws.lane32());
     SparUgwResult {
         value: r.value,
         plan: r.plan,
@@ -193,6 +235,10 @@ pub struct SparUgwSolver {
     pub cfg: SparUgwConfig,
     /// Threads row-chunking the O(s²) cost kernel (1 = serial).
     pub threads: usize,
+    /// Kernel precision for the engine loop (`f64` default; `f32` runs
+    /// the kernel build and inner solver at half width). The Eq. (9)
+    /// sampler is dense O(mn) preprocessing and stays f64 either way.
+    pub precision: Precision,
 }
 
 impl SparUgwSolver {
@@ -211,6 +257,7 @@ impl SparUgwSolver {
                 shrink: o.f64("shrink", base.shrink)?,
             },
             threads: o.usize("threads", base.threads)?,
+            precision: o.precision(base.precision)?,
         })
     }
 }
@@ -225,7 +272,14 @@ impl GwSolver for SparUgwSolver {
         let set = sample_ugw_set(p, self.cost, &self.cfg, rng);
         let sample_seconds = t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
-        let r = spar_ugw_with_workspace(p, self.cost, &self.cfg, &set, ws, self.threads);
+        let r = match self.precision {
+            Precision::F64 => {
+                spar_ugw_with_workspace(p, self.cost, &self.cfg, &set, ws, self.threads)
+            }
+            Precision::F32 => {
+                spar_ugw_with_workspace_f32(p, self.cost, &self.cfg, &set, ws, self.threads)
+            }
+        };
         Ok(SolveReport {
             solver: self.name(),
             value: r.value,

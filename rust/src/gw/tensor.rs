@@ -14,6 +14,7 @@
 //! contiguous rows (a §Perf optimization over per-element gathers).
 
 use super::cost::GroundCost;
+use crate::kernel::Scalar;
 use crate::linalg::Mat;
 
 /// Generic tensor product: `C(T)[i,j] = Σ_{i',j'} L(Cx[i,i'], Cy[j,j']) T[i',j']`.
@@ -154,29 +155,17 @@ impl SparseCostContext {
 
     /// Fill `out[0..len]` with the cost-product rows `base..base+len`.
     /// The shared kernel behind the serial and row-chunked parallel entry
-    /// points: four independent f64 partial sums over the f32 cost block
-    /// (hides the FMA latency chain; the loop is otherwise
-    /// bandwidth-bound). Each output row is independent, so chunking does
-    /// not change results bit-wise.
-    fn fill_cost_rows(&self, t_vals: &[f64], out: &mut [f64], base: usize) {
+    /// points, generic over the plan-value scalar: each row reduces
+    /// through [`Scalar::gathered_dot`] — at f64 the historical 4-lane
+    /// f64 schedule (bit-identical), at f32 the 8-lane block-folded form
+    /// (`kernel::dense::gathered_dot_f32`). Each output row is
+    /// independent, so chunking does not change results bit-wise.
+    fn fill_cost_rows<S: Scalar>(&self, t_vals: &[S], out: &mut [S], base: usize) {
         let s = self.s;
         for (off, o) in out.iter_mut().enumerate() {
             let l = base + off;
             let row = &self.l_g[l * s..(l + 1) * s];
-            let mut acc = [0.0f64; 4];
-            let chunks = s / 4;
-            for c in 0..chunks {
-                let base = c * 4;
-                acc[0] += row[base] as f64 * t_vals[base];
-                acc[1] += row[base + 1] as f64 * t_vals[base + 1];
-                acc[2] += row[base + 2] as f64 * t_vals[base + 2];
-                acc[3] += row[base + 3] as f64 * t_vals[base + 3];
-            }
-            let mut tail = 0.0;
-            for lp in chunks * 4..s {
-                tail += row[lp] as f64 * t_vals[lp];
-            }
-            *o = acc[0] + acc[1] + acc[2] + acc[3] + tail;
+            *o = S::from_f64(S::gathered_dot(row, t_vals));
         }
     }
 
@@ -185,7 +174,7 @@ impl SparseCostContext {
     /// O(s²), zero allocations — the per-iteration hot loop of
     /// Algorithm 2 (step 6a) as driven by the [`SparCore`
     /// engine](crate::gw::core).
-    pub fn cost_values_into(&self, t_vals: &[f64], out: &mut [f64]) {
+    pub fn cost_values_into<S: Scalar>(&self, t_vals: &[S], out: &mut [S]) {
         assert_eq!(
             t_vals.len(),
             self.s,
@@ -209,7 +198,7 @@ impl SparseCostContext {
     /// result is bit-identical to the serial path for every thread count.
     /// Falls back to the serial path when `threads ≤ 1` or the problem is
     /// too small to amortize thread spawn.
-    pub fn cost_values_into_threaded(&self, t_vals: &[f64], out: &mut [f64], threads: usize) {
+    pub fn cost_values_into_threaded<S: Scalar>(&self, t_vals: &[S], out: &mut [S], threads: usize) {
         assert_eq!(t_vals.len(), self.s);
         assert_eq!(out.len(), self.s);
         // Below ~2^14 gathered entries per thread the spawn cost dominates.
@@ -229,24 +218,26 @@ impl SparseCostContext {
 
     /// Sparse cost product, allocating form (kept for one-shot callers;
     /// the solver loop uses [`SparseCostContext::cost_values_into`]).
-    pub fn cost_values(&self, t_vals: &[f64]) -> Vec<f64> {
-        let mut out = vec![0.0f64; self.s];
+    pub fn cost_values<S: Scalar>(&self, t_vals: &[S]) -> Vec<S> {
+        let mut out = vec![S::ZERO; self.s];
         self.cost_values_into(t_vals, &mut out);
         out
     }
 
     /// The sparse GW estimate of Algorithm 2 step 8:
     /// `ĜW = Σ_{l,l'} L(cx_g[l,l'], cy_g[l,l']) t[l] t[l']`.
-    pub fn energy(&self, t_vals: &[f64]) -> f64 {
+    /// The final reduction always runs in f64 (the reported GW cost stays
+    /// full-precision in f32 mode).
+    pub fn energy<S: Scalar>(&self, t_vals: &[S]) -> f64 {
         let c = self.cost_values(t_vals);
-        c.iter().zip(t_vals).map(|(ci, ti)| ci * ti).sum()
+        c.iter().zip(t_vals).map(|(ci, ti)| ci.to_f64() * ti.to_f64()).sum()
     }
 
     /// [`SparseCostContext::energy`] with a caller-provided scratch buffer
     /// (length s) — allocation-free, bit-identical to the allocating form.
-    pub fn energy_with(&self, t_vals: &[f64], scratch: &mut [f64]) -> f64 {
+    pub fn energy_with<S: Scalar>(&self, t_vals: &[S], scratch: &mut [S]) -> f64 {
         self.cost_values_into(t_vals, scratch);
-        scratch.iter().zip(t_vals).map(|(ci, ti)| ci * ti).sum()
+        scratch.iter().zip(t_vals).map(|(ci, ti)| ci.to_f64() * ti.to_f64()).sum()
     }
 }
 
@@ -368,6 +359,32 @@ mod tests {
                 "{cost:?}: energy {e_sparse} vs {e_dense}"
             );
         }
+    }
+
+    #[test]
+    fn f32_cost_product_tracks_f64() {
+        let n = 20;
+        let cx = random_sym(n, 21);
+        let cy = random_sym(n, 22);
+        let mut rng = Xoshiro256::new(23);
+        let s = 8 * n;
+        let idx_i: Vec<usize> = (0..s).map(|_| rng.usize(n)).collect();
+        let idx_j: Vec<usize> = (0..s).map(|_| rng.usize(n)).collect();
+        let t64: Vec<f64> = (0..s).map(|_| rng.f64() * 1e-3).collect();
+        let t32: Vec<f32> = t64.iter().map(|&x| x as f32).collect();
+        let ctx = SparseCostContext::new(&cx, &cy, &idx_i, &idx_j, GroundCost::L1);
+        let c64 = ctx.cost_values(&t64);
+        let c32 = ctx.cost_values(&t32);
+        for (l, (a, b)) in c32.iter().zip(&c64).enumerate() {
+            let d = (*a as f64 - b).abs();
+            assert!(d < 1e-4 * b.abs().max(1e-6), "l={l}: {a} vs {b}");
+        }
+        let e64 = ctx.energy(&t64);
+        let e32 = ctx.energy(&t32);
+        assert!(
+            (e64 - e32).abs() < 1e-4 * e64.abs().max(1e-9),
+            "energy {e32} vs {e64}"
+        );
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! Blocked dense kernels, generic over [`Scalar`].
+//!
+//! These are the single implementations behind `linalg::Mat<S>` — the
+//! matmul, matvec and gather loops used to live inside `Mat`'s inherent
+//! methods; they now live here so the f32 and f64 instantiations share
+//! one blocked code path. Blocking parameters:
+//!
+//! * `MATMUL_BK = 64` — k-panel width of the ikj matmul (streams one
+//!   panel of `b` rows through cache per output row sweep);
+//! * `DOT_LANES = 4` — independent partial sums hiding the FP add
+//!   latency chain in [`dot`] (the historical f64 schedule, kept
+//!   bit-identical);
+//! * `F32_LANES = 8`, `F32_BLOCK = 4096` — the mixed-precision gathered
+//!   dot accumulates `F32_LANES` f32 partial sums within blocks of
+//!   `F32_BLOCK` elements and folds each block into an f64 total, so the
+//!   f32 rounding never compounds across more than one block.
+//!
+//! Numerical contract: instantiated at `S = f64`, every function here
+//! reproduces the historical `Mat` loops operation-for-operation
+//! (verified by the golden solver tests).
+
+use super::scalar::Scalar;
+
+/// k-panel width of the blocked ikj matmul.
+pub const MATMUL_BK: usize = 64;
+
+/// Dot product with lane-blocked accumulation in `S::Accum`.
+///
+/// The 4-way unrolled schedule of the historical `linalg::dot`: products
+/// are formed at storage width, widened, and accumulated in four
+/// independent accumulator lanes folded at the end. For `S = f64` this
+/// is bit-identical to the original.
+#[inline]
+pub fn dot<S: Scalar>(a: &[S], b: &[S]) -> S::Accum {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (
+        S::Accum::default(),
+        S::Accum::default(),
+        S::Accum::default(),
+        S::Accum::default(),
+    );
+    for k in 0..chunks {
+        let i = k * 4;
+        s0 = s0 + (a[i] * b[i]).widen();
+        s1 = s1 + (a[i + 1] * b[i + 1]).widen();
+        s2 = s2 + (a[i + 2] * b[i + 2]).widen();
+        s3 = s3 + (a[i + 3] * b[i + 3]).widen();
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s = s + (a[i] * b[i]).widen();
+    }
+    s
+}
+
+/// Cache-blocked ikj matmul: `out[m×n] = a[m×k] · b[k×n]`, all row-major.
+/// `out` must be zero-filled by the caller. Zero `a` entries are skipped
+/// (the historical sparsity shortcut, part of the bit-identity contract).
+pub fn matmul_into<S: Scalar>(m: usize, k: usize, n: usize, a: &[S], b: &[S], out: &mut [S]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for kb in (0..k).step_by(MATMUL_BK) {
+        let kend = (kb + MATMUL_BK).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for kk in kb..kend {
+                let aik = arow[kk];
+                if aik == S::ZERO {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aik * bv;
+                }
+            }
+        }
+    }
+}
+
+/// Row-major matvec `y[i] = Σ_j a[i,j]·x[j]`, accumulating each row dot
+/// in `S::Accum` via [`dot`].
+pub fn matvec_into<S: Scalar>(rows: usize, cols: usize, a: &[S], x: &[S], y: &mut [S]) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(y.len(), rows);
+    for i in 0..rows {
+        y[i] = S::narrow(dot(&a[i * cols..(i + 1) * cols], x));
+    }
+}
+
+/// Transposed matvec `y = aᵀ·x` by row-streaming axpy at storage width
+/// (skips zero `x` entries — the historical shortcut). For the
+/// accumulator-rule form see [`matvec_t_wide`].
+pub fn matvec_t_into<S: Scalar>(rows: usize, cols: usize, a: &[S], x: &[S], y: &mut [S]) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(x.len(), rows);
+    debug_assert_eq!(y.len(), cols);
+    for v in y.iter_mut() {
+        *v = S::ZERO;
+    }
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == S::ZERO {
+            continue;
+        }
+        for (o, &av) in y.iter_mut().zip(&a[i * cols..(i + 1) * cols]) {
+            *o += xi * av;
+        }
+    }
+}
+
+/// [`matvec_t_into`] with the scatter accumulated in the f64 scratch
+/// `wide` (length `cols`) and narrowed into `y` — the accumulator rule
+/// for the transposed sweep. Products are formed at storage width;
+/// identical bits to [`matvec_t_into`] at `S = f64`.
+pub fn matvec_t_wide<S: Scalar>(
+    rows: usize,
+    cols: usize,
+    a: &[S],
+    x: &[S],
+    wide: &mut [f64],
+    y: &mut [S],
+) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(x.len(), rows);
+    debug_assert_eq!(y.len(), cols);
+    debug_assert_eq!(wide.len(), cols);
+    wide.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == S::ZERO {
+            continue;
+        }
+        for (o, &av) in wide.iter_mut().zip(&a[i * cols..(i + 1) * cols]) {
+            *o += (xi * av).to_f64();
+        }
+    }
+    for (o, &w) in y.iter_mut().zip(wide.iter()) {
+        *o = S::from_f64(w);
+    }
+}
+
+/// Row/column gather: `out[oi, oj] = a[rows[oi], cols[oj]]` — the
+/// submatrix extraction behind `Mat::gather`, streaming whole source
+/// rows.
+pub fn gather_into<S: Scalar>(
+    a: &[S],
+    a_cols: usize,
+    rows: &[usize],
+    cols: &[usize],
+    out: &mut [S],
+) {
+    debug_assert_eq!(out.len(), rows.len() * cols.len());
+    let w = cols.len();
+    for (oi, &i) in rows.iter().enumerate() {
+        let src = &a[i * a_cols..(i + 1) * a_cols];
+        let dst = &mut out[oi * w..(oi + 1) * w];
+        for (oj, &j) in cols.iter().enumerate() {
+            dst[oj] = src[j];
+        }
+    }
+}
+
+/// The f64 instance of the gathered s×s cost-row reduction: four f64
+/// partial sums over the f32 cost block — **exactly** the historical
+/// `SparseCostContext::fill_cost_rows` inner loop (bit-identity contract
+/// of the `precision=f64` path).
+#[inline]
+pub fn gathered_dot_f64(row: &[f32], t: &[f64]) -> f64 {
+    debug_assert_eq!(row.len(), t.len());
+    let s = row.len();
+    let mut acc = [0.0f64; 4];
+    let chunks = s / 4;
+    for c in 0..chunks {
+        let base = c * 4;
+        acc[0] += row[base] as f64 * t[base];
+        acc[1] += row[base + 1] as f64 * t[base + 1];
+        acc[2] += row[base + 2] as f64 * t[base + 2];
+        acc[3] += row[base + 3] as f64 * t[base + 3];
+    }
+    let mut tail = 0.0;
+    for lp in chunks * 4..s {
+        tail += row[lp] as f64 * t[lp];
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Lane count of the f32 gathered dot.
+pub const F32_LANES: usize = 8;
+/// Block length between f64 folds of the f32 gathered dot.
+pub const F32_BLOCK: usize = 4096;
+
+/// The f32 instance of the gathered s×s cost-row reduction: pure-f32
+/// multiplies in `F32_LANES` independent lanes (twice the SIMD width of
+/// the f64 path, no per-element convert), folded into an f64 total every
+/// `F32_BLOCK` elements so f32 rounding never compounds across blocks —
+/// the blocked form of the accumulator rule.
+#[inline]
+pub fn gathered_dot_f32(row: &[f32], t: &[f32]) -> f64 {
+    debug_assert_eq!(row.len(), t.len());
+    let mut total = 0.0f64;
+    let mut start = 0;
+    let n = row.len();
+    while start < n {
+        let end = (start + F32_BLOCK).min(n);
+        let r = &row[start..end];
+        let tv = &t[start..end];
+        let len = r.len();
+        let mut acc = [0.0f32; F32_LANES];
+        let chunks = len / F32_LANES;
+        for c in 0..chunks {
+            let b = c * F32_LANES;
+            for (lane, av) in acc.iter_mut().enumerate() {
+                *av += r[b + lane] * tv[b + lane];
+            }
+        }
+        let mut block = 0.0f64;
+        for av in acc {
+            block += av as f64;
+        }
+        for k in chunks * F32_LANES..len {
+            block += (r[k] * tv[k]) as f64;
+        }
+        total += block;
+        start = end;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_f64_matches_historical_schedule() {
+        let a: Vec<f64> = (0..13).map(|i| i as f64 * 0.3).collect();
+        let b: Vec<f64> = (0..13).map(|i| (i * i) as f64 * 0.01).collect();
+        // Recompute with the original 4-lane loop, verbatim.
+        let n = a.len();
+        let chunks = n / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+        for k in 0..chunks {
+            let i = k * 4;
+            s0 += a[i] * b[i];
+            s1 += a[i + 1] * b[i + 1];
+            s2 += a[i + 2] * b[i + 2];
+            s3 += a[i + 3] * b[i + 3];
+        }
+        let mut expect = s0 + s1 + s2 + s3;
+        for i in chunks * 4..n {
+            expect += a[i] * b[i];
+        }
+        assert_eq!(dot(&a, &b).to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn matmul_matches_naive_generic() {
+        let (m, k, n) = (5usize, 9, 4);
+        let a: Vec<f64> = (0..m * k).map(|i| (i as f64 * 0.7).sin()).collect();
+        let b: Vec<f64> = (0..k * n).map(|i| (i as f64 * 0.3).cos()).collect();
+        let mut out = vec![0.0f64; m * n];
+        matmul_into(m, k, n, &a, &b, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                assert!((out[i * n + j] - s).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_kernels_track_f64_reference() {
+        let n = 10_000usize;
+        let row: Vec<f32> = (0..n).map(|i| ((i as f32 * 0.37).sin().abs()) + 0.1).collect();
+        let t64: Vec<f64> = (0..n).map(|i| ((i as f64 * 0.11).cos().abs()) * 1e-4).collect();
+        let t32: Vec<f32> = t64.iter().map(|&x| x as f32).collect();
+        let d64 = gathered_dot_f64(&row, &t64);
+        let d32 = gathered_dot_f32(&row, &t32);
+        let rel = (d64 - d32).abs() / d64.abs().max(1e-12);
+        assert!(rel < 1e-4, "f32 gathered dot drifted: {d32} vs {d64} (rel {rel})");
+    }
+
+    #[test]
+    fn generic_matvec_f32_accumulates_wide() {
+        // A sum that collapses in pure f32 (large + many smalls) survives
+        // the Accum=f64 row reduction.
+        let cols = 4096usize;
+        let mut a = vec![1e-4f32; cols];
+        a[0] = 1.0e4;
+        let x = vec![1.0f32; cols];
+        let mut y = vec![0.0f32; 1];
+        matvec_into(1, cols, &a, &x, &mut y);
+        let expect = 1.0e4f64 + (cols as f64 - 1.0) * 1e-4f64;
+        assert!(
+            (y[0] as f64 - expect).abs() / expect < 1e-6,
+            "wide accumulation lost: {} vs {expect}",
+            y[0]
+        );
+    }
+}

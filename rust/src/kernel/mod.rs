@@ -1,0 +1,36 @@
+//! **The kernel layer** — scalar-generic, blocked CPU implementations of
+//! the crate's hot primitives.
+//!
+//! Every hot loop in the Spar-GW stack (dense matmul/matvec, CSR
+//! spmv/spmm, the Sinkhorn scaling updates, and the gathered s×s
+//! tensor-product reduction) is implemented exactly once here, generic
+//! over the [`Scalar`] element type (`f32` or `f64`). Higher layers —
+//! `linalg::Mat<S>`, `sparse::{Csr, Coo}`, `ot::*`, `gw::core` — are
+//! thin, shape-aware wrappers over these functions.
+//!
+//! Contracts:
+//!
+//! * **Bit-identity at f64.** Instantiated at `S = f64`, every kernel
+//!   reproduces the historical f64 loops operation-for-operation. The
+//!   `precision=f64` solver path is therefore bit-identical to the
+//!   golden tests; genericity is free.
+//! * **The accumulator rule.** Dot products, Sinkhorn marginal sums and
+//!   energy reductions accumulate in [`Scalar::Accum`] (f64 for both
+//!   precisions), narrowing only at the final store — f32 mode halves
+//!   memory traffic without losing reduction accuracy. See
+//!   [`scalar`] for the rule, [`dense`]/[`sparse`] for the blocked
+//!   gather/scatter disciplines that implement it.
+//! * **Blocking parameters** live next to the kernels they tune
+//!   ([`dense::MATMUL_BK`], [`dense::F32_LANES`], [`dense::F32_BLOCK`])
+//!   and are documented in DESIGN.md §kernel layer.
+//!
+//! This layer is deliberately dependency-free and slice-oriented so a
+//! future SIMD or accelerator backend can replace individual kernels
+//! behind the same signatures.
+
+pub mod dense;
+pub mod ops;
+pub mod scalar;
+pub mod sparse;
+
+pub use scalar::{Precision, Scalar};

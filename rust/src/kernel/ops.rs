@@ -1,0 +1,91 @@
+//! Elementwise scaling kernels, generic over [`Scalar`] — the `div`
+//! inner loops of the Sinkhorn family, owned here so the f32 and f64
+//! instantiations share one loop (the `exp` kernel-build loops live with
+//! the `SparCore` strategies in `gw::core`, which drive them entirely
+//! through [`Scalar::exp`]).
+//!
+//! All semantics follow the Sinkhorn-safe conventions of the historical
+//! f64 code and are bit-identical to it at `S = f64`:
+//!
+//! * `0 ⊘ x := 0` — zero-mass marginals produce zero scalings;
+//! * non-finite ratios (pattern-empty rows/columns) are zeroed;
+//! * the unbalanced power update zeroes non-positive/non-finite
+//!   denominators before exponentiation.
+
+use super::scalar::Scalar;
+
+/// One balanced scaling update: `out = target ⊘ denom` with `0 ⊘ x := 0`
+/// and non-finite ratios zeroed (the guarded form the sparse Sinkhorn
+/// uses on subsampled patterns).
+#[inline]
+pub fn scaling_update_into<S: Scalar>(target: &[S], denom: &[S], out: &mut [S]) {
+    debug_assert_eq!(target.len(), denom.len());
+    debug_assert_eq!(target.len(), out.len());
+    for ((&t, &d), o) in target.iter().zip(denom).zip(out.iter_mut()) {
+        let q = if t == S::ZERO { S::ZERO } else { t / d };
+        *o = if q.is_finite() { q } else { S::ZERO };
+    }
+}
+
+/// Elementwise `a ⊘ b` with `0 ⊘ x := 0` (no finiteness guard — the
+/// dense-kernel convention of `util::safe_div`), allocating form.
+pub fn safe_div<S: Scalar>(a: &[S], b: &[S]) -> Vec<S> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| if x == S::ZERO { S::ZERO } else { x / y })
+        .collect()
+}
+
+/// The unbalanced scaling update `out = (target ⊘ denom)^expo` with
+/// non-positive / non-finite denominators zeroed (Chizat et al. 2018
+/// exponent λ̄/(λ̄+ε̄)).
+#[inline]
+pub fn pow_update_into<S: Scalar>(target: &[S], denom: &[S], expo: S, out: &mut [S]) {
+    debug_assert_eq!(target.len(), denom.len());
+    debug_assert_eq!(target.len(), out.len());
+    for ((&t, &d), o) in target.iter().zip(denom).zip(out.iter_mut()) {
+        *o = if t == S::ZERO || d <= S::ZERO || !d.is_finite() {
+            S::ZERO
+        } else {
+            (t / d).powf(expo)
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_update_zeroes_empty_support() {
+        let target = [0.5f64, 0.0, 0.25];
+        let denom = [2.0f64, 0.0, 0.0]; // last: 0.25/0 = inf -> zeroed
+        let mut out = [9.0f64; 3];
+        scaling_update_into(&target, &denom, &mut out);
+        assert_eq!(out, [0.25, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn safe_div_matches_util_semantics() {
+        assert_eq!(safe_div(&[0.0f64, 2.0], &[0.0, 4.0]), vec![0.0, 0.5]);
+    }
+
+    #[test]
+    fn pow_update_guards_and_exponentiates() {
+        let target = [1.0f64, 0.0, 1.0, 4.0];
+        let denom = [4.0f64, 3.0, -1.0, 1.0];
+        let mut out = [0.0f64; 4];
+        pow_update_into(&target, &denom, 0.5, &mut out);
+        assert_eq!(out, [0.5, 0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn f32_instantiation_compiles_and_matches() {
+        let target = [0.5f32, 0.0];
+        let denom = [2.0f32, 5.0];
+        let mut out = [0.0f32; 2];
+        scaling_update_into(&target, &denom, &mut out);
+        assert_eq!(out, [0.25, 0.0]);
+    }
+}

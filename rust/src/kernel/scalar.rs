@@ -1,0 +1,275 @@
+//! The [`Scalar`] abstraction: the element type every kernel in this
+//! crate is generic over, plus the [`Precision`] selector the solver
+//! registry exposes (`--solver-opt precision=f32|f64`).
+//!
+//! **The accumulator rule.** Narrow storage must never narrow
+//! reductions: each scalar carries an associated [`Scalar::Accum`] type
+//! (f64 for both supported precisions) and every dot product, Sinkhorn
+//! marginal sum and energy reduction in the kernel layer accumulates in
+//! `Accum`, narrowing only at the final store. In f64 mode `Accum == S`,
+//! so the generic kernels compile to *exactly* the historical f64 loops
+//! — the `precision=f64` path stays bit-identical to the golden tests.
+//! In f32 mode, storage and multiplies run at half width (half the
+//! memory traffic on the memory-bound Spar-GW hot loops) while the
+//! reductions keep f64 resolution.
+
+use std::fmt::{Debug, Display};
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+use crate::format_err;
+use crate::util::error::Result;
+
+/// Numeric precision selector for the mixed-precision solver paths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Precision {
+    /// 32-bit storage with f64 accumulation (the mixed-precision mode).
+    F32,
+    /// Full 64-bit arithmetic (default; bit-identical to the historical
+    /// implementation).
+    F64,
+}
+
+impl Precision {
+    /// Parse a CLI/registry spelling; errors name the valid values.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" => Ok(Precision::F32),
+            "f64" => Ok(Precision::F64),
+            _ => Err(format_err!("unknown precision {s:?} (valid values: f32, f64)")),
+        }
+    }
+
+    /// Canonical spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+}
+
+/// A floating-point element type the blocked kernels can run on.
+///
+/// Implemented for `f32` and `f64`. The trait deliberately stays small:
+/// arithmetic comes from the `std::ops` supertraits, reductions go
+/// through [`Scalar::widen`]/[`Scalar::narrow`] on the associated
+/// accumulator, and the one performance-critical specialization point is
+/// [`Scalar::gathered_dot`] — the s×s tensor-product row reduction,
+/// whose f64 instance must reproduce the historical loop bit-for-bit
+/// while the f32 instance uses wider lane blocking.
+pub trait Scalar:
+    Copy
+    + Clone
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Debug
+    + Display
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+{
+    /// Wide accumulator for dots and marginal sums — f64 for every
+    /// supported scalar (the accumulator rule).
+    type Accum: Copy
+        + Default
+        + PartialOrd
+        + Add<Output = Self::Accum>
+        + Sub<Output = Self::Accum>
+        + Mul<Output = Self::Accum>;
+
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Positive infinity (pattern-minimum seeds in the stabilizer).
+    const INFINITY: Self;
+    /// The precision this scalar implements.
+    const PRECISION: Precision;
+
+    /// Round from f64 (identity for f64).
+    fn from_f64(v: f64) -> Self;
+    /// Widen to f64 (exact for both supported scalars).
+    fn to_f64(self) -> f64;
+    /// Widen into the accumulator type.
+    fn widen(self) -> Self::Accum;
+    /// Narrow an accumulated value back to storage width.
+    fn narrow(a: Self::Accum) -> Self;
+    /// Read an accumulator as f64 (identity in both impls).
+    fn accum_to_f64(a: Self::Accum) -> f64;
+    /// e^self.
+    fn exp(self) -> Self;
+    /// √self.
+    fn sqrt(self) -> Self;
+    /// |self|.
+    fn abs(self) -> Self;
+    /// self^e.
+    fn powf(self, e: Self) -> Self;
+    /// Neither NaN nor ±∞.
+    fn is_finite(self) -> bool;
+
+    /// Row reduction of the gathered s×s cost block:
+    /// `Σ_l row[l]·t[l]` with f64 resolution. The cost block is stored as
+    /// f32 in *both* precisions (see `gw::tensor`); only the plan-value
+    /// operand and the blocking schedule differ. See
+    /// [`kernel::dense`](super::dense) for the two instances.
+    fn gathered_dot(row: &[f32], t: &[Self]) -> f64;
+}
+
+impl Scalar for f64 {
+    type Accum = f64;
+
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const INFINITY: Self = f64::INFINITY;
+    const PRECISION: Precision = Precision::F64;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn widen(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn narrow(a: f64) -> Self {
+        a
+    }
+    #[inline(always)]
+    fn accum_to_f64(a: f64) -> f64 {
+        a
+    }
+    #[inline(always)]
+    fn exp(self) -> Self {
+        f64::exp(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn powf(self, e: Self) -> Self {
+        f64::powf(self, e)
+    }
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+    #[inline]
+    fn gathered_dot(row: &[f32], t: &[Self]) -> f64 {
+        super::dense::gathered_dot_f64(row, t)
+    }
+}
+
+impl Scalar for f32 {
+    type Accum = f64;
+
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const INFINITY: Self = f32::INFINITY;
+    const PRECISION: Precision = Precision::F32;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn widen(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn narrow(a: f64) -> Self {
+        a as f32
+    }
+    #[inline(always)]
+    fn accum_to_f64(a: f64) -> f64 {
+        a
+    }
+    #[inline(always)]
+    fn exp(self) -> Self {
+        f32::exp(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline(always)]
+    fn powf(self, e: Self) -> Self {
+        f32::powf(self, e)
+    }
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+    #[inline]
+    fn gathered_dot(row: &[f32], t: &[Self]) -> f64 {
+        super::dense::gathered_dot_f32(row, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("F64").unwrap(), Precision::F64);
+        let msg = format!("{}", Precision::parse("f16").unwrap_err());
+        assert!(msg.contains("f32"), "{msg}");
+        assert!(msg.contains("f64"), "{msg}");
+    }
+
+    #[test]
+    fn f64_conversions_are_identity() {
+        for &x in &[0.0f64, 1.5, -2.25e-300, f64::INFINITY] {
+            assert_eq!(<f64 as Scalar>::from_f64(x).to_bits(), x.to_bits());
+            assert_eq!(Scalar::widen(x).to_bits(), x.to_bits());
+            assert_eq!(<f64 as Scalar>::narrow(x).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn f32_widen_is_exact() {
+        // f32 → f64 is exact; the round trip through widen/narrow is the
+        // identity on values already representable in f32.
+        for &x in &[0.5f32, -1.25, 3.0e10, f32::MIN_POSITIVE] {
+            assert_eq!(<f32 as Scalar>::narrow(x.widen()), x);
+        }
+    }
+
+    /// Ensure a `parse`/`name` round trip so the CLI listing and the
+    /// registry agree on spellings.
+    #[test]
+    fn name_parse_agree() {
+        for p in [Precision::F32, Precision::F64] {
+            assert_eq!(Precision::parse(p.name()).unwrap(), p);
+        }
+    }
+}

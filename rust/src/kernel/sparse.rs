@@ -1,0 +1,225 @@
+//! Sparse (CSR-structured) kernels, generic over [`Scalar`].
+//!
+//! `sparse::Csr` separates *structure* from *values*; these free
+//! functions are the value loops, shared by every precision. They take
+//! the structure's raw index slices so that `sparse::{Csr, Coo}` can
+//! delegate here without a module cycle.
+//!
+//! Two accumulation disciplines coexist, both per the accumulator rule:
+//!
+//! * **Row-local gather** ([`spmv`], [`spmm`]) accumulates each output
+//!   coordinate in a `S::Accum` register and narrows once per output —
+//!   free, no scratch needed.
+//! * **Entry-order scatter** ([`spmv_t_wide`], [`row_sums_wide`],
+//!   [`col_sums_wide`]) cannot keep per-output registers, so it scatters
+//!   widened products into a caller-provided f64 buffer and narrows at
+//!   the end. For `S = f64` the widen/narrow are identities and the
+//!   result is bit-identical to scattering in place.
+//!
+//! The plain in-storage scatter forms ([`spmv_t`], [`row_sums`],
+//! [`col_sums`]) are kept for the COO compatibility path (`Coo`
+//! delegates its f64 matvecs here; at `S = f64` scatter order and
+//! rounding match the historical COO loops exactly).
+
+use super::scalar::Scalar;
+
+/// `y = A·x` over a CSR structure: row-local accumulation in
+/// `S::Accum`, ascending entry order within each row (the COO/CSR
+/// bit-identity contract).
+pub fn spmv<S: Scalar>(
+    row_ptr: &[u32],
+    slot_col: &[u32],
+    slot_src: &[u32],
+    vals: &[S],
+    x: &[S],
+    y: &mut [S],
+) {
+    let nrows = row_ptr.len() - 1;
+    debug_assert_eq!(y.len(), nrows);
+    for i in 0..nrows {
+        let lo = row_ptr[i] as usize;
+        let hi = row_ptr[i + 1] as usize;
+        let mut acc = S::Accum::default();
+        for slot in lo..hi {
+            acc = acc
+                + (vals[slot_src[slot] as usize] * x[slot_col[slot] as usize]).widen();
+        }
+        y[i] = S::narrow(acc);
+    }
+}
+
+/// `y = Aᵀ·x` by entry-order scatter at storage width (COO-compatible).
+pub fn spmv_t<S: Scalar>(rows_e: &[u32], cols_e: &[u32], vals: &[S], x: &[S], y: &mut [S]) {
+    for v in y.iter_mut() {
+        *v = S::ZERO;
+    }
+    for k in 0..vals.len() {
+        y[cols_e[k] as usize] += vals[k] * x[rows_e[k] as usize];
+    }
+}
+
+/// `y = Aᵀ·x` with wide scatter: products are formed at storage width,
+/// widened, accumulated in the f64 scratch `wide`, then narrowed into
+/// `y`. Identical values to [`spmv_t`] at `S = f64`.
+pub fn spmv_t_wide<S: Scalar>(
+    rows_e: &[u32],
+    cols_e: &[u32],
+    vals: &[S],
+    x: &[S],
+    wide: &mut [f64],
+    y: &mut [S],
+) {
+    debug_assert_eq!(wide.len(), y.len());
+    wide.fill(0.0);
+    for k in 0..vals.len() {
+        wide[cols_e[k] as usize] += (vals[k] * x[rows_e[k] as usize]).to_f64();
+    }
+    for (o, &w) in y.iter_mut().zip(wide.iter()) {
+        *o = S::from_f64(w);
+    }
+}
+
+/// Row sums (marginal `T·1`) at storage width, entry-order scatter.
+pub fn row_sums<S: Scalar>(rows_e: &[u32], vals: &[S], y: &mut [S]) {
+    for v in y.iter_mut() {
+        *v = S::ZERO;
+    }
+    for k in 0..vals.len() {
+        y[rows_e[k] as usize] += vals[k];
+    }
+}
+
+/// Column sums (marginal `Tᵀ·1`) at storage width, entry-order scatter.
+pub fn col_sums<S: Scalar>(cols_e: &[u32], vals: &[S], y: &mut [S]) {
+    for v in y.iter_mut() {
+        *v = S::ZERO;
+    }
+    for k in 0..vals.len() {
+        y[cols_e[k] as usize] += vals[k];
+    }
+}
+
+/// Row sums accumulated directly in f64 (the marginal-sum form the
+/// unbalanced engine uses: sums stay wide no matter the storage width).
+/// Identical to [`row_sums`] at `S = f64`.
+pub fn row_sums_wide<S: Scalar>(rows_e: &[u32], vals: &[S], y: &mut [f64]) {
+    y.fill(0.0);
+    for k in 0..vals.len() {
+        y[rows_e[k] as usize] += vals[k].to_f64();
+    }
+}
+
+/// Column sums accumulated directly in f64; see [`row_sums_wide`].
+pub fn col_sums_wide<S: Scalar>(cols_e: &[u32], vals: &[S], y: &mut [f64]) {
+    y.fill(0.0);
+    for k in 0..vals.len() {
+        y[cols_e[k] as usize] += vals[k].to_f64();
+    }
+}
+
+/// CSR × dense row-major spmm: `out[m×n] += A[m×k] · b[k×n]` with `A` in
+/// CSR structure form. Streams whole rows of `b` per stored entry (the
+/// sparse analogue of the blocked ikj matmul). `out` must be
+/// zero-filled by the caller.
+pub fn spmm<S: Scalar>(
+    row_ptr: &[u32],
+    slot_col: &[u32],
+    slot_src: &[u32],
+    vals: &[S],
+    b: &[S],
+    n: usize,
+    out: &mut [S],
+) {
+    let nrows = row_ptr.len() - 1;
+    debug_assert_eq!(out.len(), nrows * n);
+    for i in 0..nrows {
+        let lo = row_ptr[i] as usize;
+        let hi = row_ptr[i + 1] as usize;
+        let orow = &mut out[i * n..(i + 1) * n];
+        for slot in lo..hi {
+            let v = vals[slot_src[slot] as usize];
+            if v == S::ZERO {
+                continue;
+            }
+            let brow = &b[slot_col[slot] as usize * n..(slot_col[slot] as usize + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += v * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Structure of [[0, 1, 0], [2, 0, 3]] in entry order (1.0, 2.0, 3.0).
+    fn sample() -> (Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>) {
+        // row_ptr, slot_col, slot_src, rows_e, cols_e
+        (vec![0, 1, 3], vec![1, 0, 2], vec![0, 1, 2], vec![0, 1, 1], vec![1, 0, 2])
+    }
+
+    #[test]
+    fn spmv_and_wide_transpose_match() {
+        let (rp, sc, ss, re, ce) = sample();
+        let vals = [1.0f64, 2.0, 3.0];
+        let mut y = [0.0f64; 2];
+        spmv(&rp, &sc, &ss, &vals, &[1.0, 10.0, 100.0], &mut y);
+        assert_eq!(y, [10.0, 302.0]);
+
+        let x = [1.0f64, 10.0];
+        let mut yt = [0.0f64; 3];
+        spmv_t(&re, &ce, &vals, &x, &mut yt);
+        assert_eq!(yt, [20.0, 1.0, 30.0]);
+
+        let mut wide = [0.0f64; 3];
+        let mut ytw = [0.0f64; 3];
+        spmv_t_wide(&re, &ce, &vals, &x, &mut wide, &mut ytw);
+        for (a, b) in yt.iter().zip(&ytw) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn wide_sums_match_storage_sums_for_f64() {
+        let (_, _, _, re, ce) = sample();
+        let vals = [1.5f64, 2.5, 3.5];
+        let (mut r, mut c) = ([0.0f64; 2], [0.0f64; 3]);
+        row_sums(&re, &vals, &mut r);
+        col_sums(&ce, &vals, &mut c);
+        let (mut rw, mut cw) = ([0.0f64; 2], [0.0f64; 3]);
+        row_sums_wide(&re, &vals, &mut rw);
+        col_sums_wide(&ce, &vals, &mut cw);
+        assert_eq!(r, rw);
+        assert_eq!(c, cw);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let (rp, sc, ss, _, _) = sample();
+        let vals = [1.0f64, 2.0, 3.0];
+        // b: 3×2
+        let b = [1.0f64, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out = [0.0f64; 4];
+        spmm(&rp, &sc, &ss, &vals, &b, 2, &mut out);
+        // A·b = [[3, 4], [17, 22]]
+        assert_eq!(out, [3.0, 4.0, 17.0, 22.0]);
+    }
+
+    #[test]
+    fn f32_spmv_narrow_after_wide_accum() {
+        // One row of many small f32 values plus one large: Accum=f64
+        // keeps the small contributions.
+        let n = 2048u32;
+        let row_ptr = vec![0u32, n];
+        let slot_col: Vec<u32> = (0..n).collect();
+        let slot_src: Vec<u32> = (0..n).collect();
+        let mut vals = vec![1e-4f32; n as usize];
+        vals[0] = 2.0e4;
+        let x = vec![1.0f32; n as usize];
+        let mut y = [0.0f32; 1];
+        spmv(&row_ptr, &slot_col, &slot_src, &vals, &x, &mut y);
+        let expect = 2.0e4f64 + (n as f64 - 1.0) * 1e-4;
+        assert!((y[0] as f64 - expect).abs() / expect < 1e-6, "{}", y[0]);
+    }
+}

@@ -22,7 +22,10 @@
 //!   zero heap allocations (with the default serial cost kernel);
 //!   `spar_gw`, `spar_fgw` and `spar_ugw` are thin
 //!   adapters over it, bit-identical to the historical standalone
-//!   implementations.
+//!   implementations. Every hot loop runs on the scalar-generic
+//!   [`kernel`] layer (blocked f32/f64 CPU kernels with f64
+//!   accumulation); the Spar-* solvers accept
+//!   `--solver-opt precision=f32|f64` (default `f64`, bit-identical).
 //! * **L2 (`python/compile/model.py`)** — JAX iteration graphs, AOT-lowered
 //!   to HLO text in `artifacts/`.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the O(s²)
@@ -39,6 +42,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod datasets;
 pub mod gw;
+pub mod kernel;
 pub mod linalg;
 pub mod ml;
 pub mod ot;

@@ -88,9 +88,18 @@ pub fn symmetric_eigen(a: &Mat, max_sweeps: usize) -> EigenDecomposition {
         }
     }
 
-    // Extract, sort ascending.
+    // Extract, sort ascending. The comparator must be total even when a
+    // degenerate input (NaN/∞ entries) pushes NaNs onto the diagonal —
+    // `partial_cmp(..).unwrap()` used to panic here. NaNs sort last;
+    // comparable values keep the exact historical `partial_cmp` order
+    // (including ±0.0 ties, which `total_cmp` would reorder — that would
+    // break the bit-identity of the default f64 path on rank-deficient
+    // inputs), so the caller sees NaNs in `values` instead of a crash.
     let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
-    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    pairs.sort_by(|a, b| match a.0.partial_cmp(&b.0) {
+        Some(o) => o,
+        None => a.0.is_nan().cmp(&b.0.is_nan()),
+    });
     let values: Vec<f64> = pairs.iter().map(|&(l, _)| l).collect();
     let mut vectors = Mat::zeros(n, n);
     for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
@@ -157,6 +166,32 @@ mod tests {
             }
         }
         assert!(err < 1e-8, "reconstruction error {err}");
+    }
+
+    #[test]
+    fn degenerate_nan_matrix_sorts_without_panic() {
+        // Regression: a NaN relation value (degenerate dataset row)
+        // propagates to the diagonal; the eigenvalue sort must complete
+        // (NaN-last total comparator) instead of panicking in
+        // partial_cmp().unwrap().
+        let mut a = Mat::zeros(4, 4);
+        for i in 0..4 {
+            for j in i..4 {
+                let v = ((i + 2 * j) as f64).sin();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a[(1, 2)] = f64::NAN;
+        a[(2, 1)] = f64::NAN;
+        let e = symmetric_eigen(&a, 10);
+        assert_eq!(e.values.len(), 4);
+        assert_eq!(e.vectors.shape(), (4, 4));
+        // NaNs (if any survive) sort after every finite eigenvalue.
+        let first_nan = e.values.iter().position(|v| v.is_nan());
+        if let Some(k) = first_nan {
+            assert!(e.values[k..].iter().all(|v| v.is_nan()), "{:?}", e.values);
+        }
     }
 
     #[test]

@@ -1,24 +1,31 @@
-//! Row-major dense matrix with the operations the GW stack needs.
+//! Row-major dense matrix with the operations the GW stack needs,
+//! generic over the kernel-layer [`Scalar`] (`Mat<f32>` or the default
+//! `Mat<f64>`). The arithmetic lives in [`crate::kernel::dense`]; this
+//! type owns shape checking and storage. At `S = f64` every operation is
+//! bit-identical to the historical f64-only implementation.
 
 use std::fmt;
 use std::ops::{Index, IndexMut};
 
-/// Dense row-major `rows × cols` matrix of f64.
+use crate::kernel::dense;
+use crate::kernel::{Precision, Scalar};
+
+/// Dense row-major `rows × cols` matrix of `S` (default f64).
 #[derive(Clone, PartialEq)]
-pub struct Mat {
+pub struct Mat<S: Scalar = f64> {
     rows: usize,
     cols: usize,
-    data: Vec<f64>,
+    data: Vec<S>,
 }
 
-impl Mat {
+impl<S: Scalar> Mat<S> {
     /// Zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Mat { rows, cols, data: vec![0.0; rows * cols] }
+        Mat { rows, cols, data: vec![S::ZERO; rows * cols] }
     }
 
     /// Constant-filled matrix.
-    pub fn full(rows: usize, cols: usize, v: f64) -> Self {
+    pub fn full(rows: usize, cols: usize, v: S) -> Self {
         Mat { rows, cols, data: vec![v; rows * cols] }
     }
 
@@ -26,19 +33,19 @@ impl Mat {
     pub fn eye(n: usize) -> Self {
         let mut m = Mat::zeros(n, n);
         for i in 0..n {
-            m[(i, i)] = 1.0;
+            m[(i, i)] = S::ONE;
         }
         m
     }
 
     /// Build from a flat row-major vector.
-    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<S>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape mismatch");
         Mat { rows, cols, data }
     }
 
     /// Build from a generator f(i, j).
-    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> S) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
             for j in 0..cols {
@@ -49,7 +56,7 @@ impl Mat {
     }
 
     /// Outer product a bᵀ.
-    pub fn outer(a: &[f64], b: &[f64]) -> Self {
+    pub fn outer(a: &[S], b: &[S]) -> Self {
         let mut m = Mat::zeros(a.len(), b.len());
         for (i, &ai) in a.iter().enumerate() {
             let row = m.row_mut(i);
@@ -58,6 +65,16 @@ impl Mat {
             }
         }
         m
+    }
+
+    /// Widen an f64 matrix into this precision (rounding each entry
+    /// through `S`); identity copy at `S = f64`.
+    pub fn from_f64_mat(src: &Mat<f64>) -> Self {
+        Mat {
+            rows: src.rows,
+            cols: src.cols,
+            data: src.data.iter().map(|&v| S::from_f64(v)).collect(),
+        }
     }
 
     #[inline]
@@ -76,27 +93,27 @@ impl Mat {
     }
 
     #[inline]
-    pub fn data(&self) -> &[f64] {
+    pub fn data(&self) -> &[S] {
         &self.data
     }
 
     #[inline]
-    pub fn data_mut(&mut self) -> &mut [f64] {
+    pub fn data_mut(&mut self) -> &mut [S] {
         &mut self.data
     }
 
     #[inline]
-    pub fn row(&self, i: usize) -> &[f64] {
+    pub fn row(&self, i: usize) -> &[S] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
-    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+    pub fn row_mut(&mut self, i: usize) -> &mut [S] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     /// Transposed copy.
-    pub fn transpose(&self) -> Mat {
+    pub fn transpose(&self) -> Mat<S> {
         let mut t = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
             for j in 0..self.cols {
@@ -106,78 +123,76 @@ impl Mat {
         t
     }
 
-    /// Matrix product `self * other` (cache-blocked ikj loop).
-    pub fn matmul(&self, other: &Mat) -> Mat {
+    /// Matrix product `self * other` (cache-blocked ikj loop in
+    /// [`dense::matmul_into`]).
+    pub fn matmul(&self, other: &Mat<S>) -> Mat<S> {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        // ikj ordering: streams rows of `other`, writes rows of `out`.
-        const BK: usize = 64;
-        for kb in (0..k).step_by(BK) {
-            let kend = (kb + BK).min(k);
-            for i in 0..m {
-                let arow = self.row(i);
-                for kk in kb..kend {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = other.row(kk);
-                    let orow = &mut out.data[i * n..(i + 1) * n];
-                    for (o, &b) in orow.iter_mut().zip(brow) {
-                        *o += aik * b;
-                    }
-                }
-            }
-        }
+        dense::matmul_into(m, k, n, &self.data, &other.data, &mut out.data);
         out
     }
 
-    /// Matrix-vector product.
-    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+    /// Matrix-vector product (row dots accumulated in `S::Accum`).
+    pub fn matvec(&self, x: &[S]) -> Vec<S> {
         assert_eq!(self.cols, x.len(), "matvec shape mismatch");
-        (0..self.rows).map(|i| super::dot(self.row(i), x)).collect()
+        let mut y = vec![S::ZERO; self.rows];
+        dense::matvec_into(self.rows, self.cols, &self.data, x, &mut y);
+        y
     }
 
-    /// Transposed matrix-vector product `selfᵀ x`.
-    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+    /// Transposed matrix-vector product `selfᵀ x`. Narrow storage
+    /// scatter-accumulates in an f64 buffer per the accumulator rule; at
+    /// f64 the plain scatter *is* the wide scatter (proven bit-identical
+    /// by the kernel tests), so no extra buffer is paid there.
+    pub fn matvec_t(&self, x: &[S]) -> Vec<S> {
         assert_eq!(self.rows, x.len(), "matvec_t shape mismatch");
-        let mut out = vec![0.0; self.cols];
-        for (i, &xi) in x.iter().enumerate() {
-            if xi == 0.0 {
-                continue;
-            }
-            for (o, &a) in out.iter_mut().zip(self.row(i)) {
-                *o += xi * a;
-            }
+        let mut y = vec![S::ZERO; self.cols];
+        if S::PRECISION == Precision::F64 {
+            dense::matvec_t_into(self.rows, self.cols, &self.data, x, &mut y);
+        } else {
+            let mut wide = vec![0.0f64; self.cols];
+            dense::matvec_t_wide(self.rows, self.cols, &self.data, x, &mut wide, &mut y);
         }
-        out
+        y
     }
 
-    /// Frobenius inner product ⟨self, other⟩.
-    pub fn frob_inner(&self, other: &Mat) -> f64 {
+    /// Frobenius inner product ⟨self, other⟩, accumulated wide.
+    pub fn frob_inner(&self, other: &Mat<S>) -> S::Accum {
         assert_eq!(self.shape(), other.shape());
-        super::dot(&self.data, &other.data)
+        dense::dot(&self.data, &other.data)
     }
 
-    /// Frobenius norm.
+    /// Frobenius norm (f64 regardless of storage width).
     pub fn frob_norm(&self) -> f64 {
-        super::norm2(&self.data)
+        S::accum_to_f64(dense::dot(&self.data, &self.data)).sqrt()
     }
 
     /// Sum of all entries.
-    pub fn sum(&self) -> f64 {
-        self.data.iter().sum()
+    pub fn sum(&self) -> S {
+        let mut acc = S::Accum::default();
+        for v in &self.data {
+            acc = acc + v.widen();
+        }
+        S::narrow(acc)
     }
 
-    /// Row sums (length `rows`).
-    pub fn row_sums(&self) -> Vec<f64> {
-        (0..self.rows).map(|i| self.row(i).iter().sum()).collect()
+    /// Row sums (length `rows`), each accumulated wide.
+    pub fn row_sums(&self) -> Vec<S> {
+        (0..self.rows)
+            .map(|i| {
+                let mut acc = S::Accum::default();
+                for v in self.row(i) {
+                    acc = acc + v.widen();
+                }
+                S::narrow(acc)
+            })
+            .collect()
     }
 
     /// Column sums (length `cols`).
-    pub fn col_sums(&self) -> Vec<f64> {
-        let mut out = vec![0.0; self.cols];
+    pub fn col_sums(&self) -> Vec<S> {
+        let mut out = vec![S::ZERO; self.cols];
         for i in 0..self.rows {
             for (o, &v) in out.iter_mut().zip(self.row(i)) {
                 *o += v;
@@ -187,7 +202,7 @@ impl Mat {
     }
 
     /// Elementwise map (new matrix).
-    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+    pub fn map(&self, f: impl Fn(S) -> S) -> Mat<S> {
         Mat {
             rows: self.rows,
             cols: self.cols,
@@ -196,14 +211,14 @@ impl Mat {
     }
 
     /// Elementwise map in place.
-    pub fn map_inplace(&mut self, f: impl Fn(f64) -> f64) {
+    pub fn map_inplace(&mut self, f: impl Fn(S) -> S) {
         for v in &mut self.data {
             *v = f(*v);
         }
     }
 
     /// Elementwise binary zip (new matrix).
-    pub fn zip(&self, other: &Mat, f: impl Fn(f64, f64) -> f64) -> Mat {
+    pub fn zip(&self, other: &Mat<S>, f: impl Fn(S, S) -> S) -> Mat<S> {
         assert_eq!(self.shape(), other.shape());
         Mat {
             rows: self.rows,
@@ -218,7 +233,7 @@ impl Mat {
     }
 
     /// self + alpha * other, in place.
-    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+    pub fn axpy(&mut self, alpha: S, other: &Mat<S>) {
         assert_eq!(self.shape(), other.shape());
         for (a, &b) in self.data.iter_mut().zip(&other.data) {
             *a += alpha * b;
@@ -226,14 +241,14 @@ impl Mat {
     }
 
     /// Scale all entries in place.
-    pub fn scale(&mut self, alpha: f64) {
+    pub fn scale(&mut self, alpha: S) {
         for v in &mut self.data {
             *v *= alpha;
         }
     }
 
     /// `diag(u) * self * diag(v)` — the Sinkhorn plan recovery.
-    pub fn diag_scale(&self, u: &[f64], v: &[f64]) -> Mat {
+    pub fn diag_scale(&self, u: &[S], v: &[S]) -> Mat<S> {
         assert_eq!(u.len(), self.rows);
         assert_eq!(v.len(), self.cols);
         let mut out = self.clone();
@@ -247,40 +262,35 @@ impl Mat {
     }
 
     /// Maximum absolute entry.
-    pub fn max_abs(&self) -> f64 {
-        self.data.iter().fold(0.0, |m, &v| m.max(v.abs()))
+    pub fn max_abs(&self) -> S {
+        self.data.iter().fold(S::ZERO, |m, &v| if v.abs() > m { v.abs() } else { m })
     }
 
-    /// Extract a sub-matrix by row and column index lists.
-    pub fn gather(&self, rows: &[usize], cols: &[usize]) -> Mat {
+    /// Extract a sub-matrix by row and column index lists (blocked
+    /// row-gather in [`dense::gather_into`]).
+    pub fn gather(&self, rows: &[usize], cols: &[usize]) -> Mat<S> {
         let mut out = Mat::zeros(rows.len(), cols.len());
-        for (oi, &i) in rows.iter().enumerate() {
-            let src = self.row(i);
-            let dst = out.row_mut(oi);
-            for (oj, &j) in cols.iter().enumerate() {
-                dst[oj] = src[j];
-            }
-        }
+        dense::gather_into(&self.data, self.cols, rows, cols, &mut out.data);
         out
     }
 }
 
-impl Index<(usize, usize)> for Mat {
-    type Output = f64;
+impl<S: Scalar> Index<(usize, usize)> for Mat<S> {
+    type Output = S;
     #[inline]
-    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+    fn index(&self, (i, j): (usize, usize)) -> &S {
         &self.data[i * self.cols + j]
     }
 }
 
-impl IndexMut<(usize, usize)> for Mat {
+impl<S: Scalar> IndexMut<(usize, usize)> for Mat<S> {
     #[inline]
-    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut S {
         &mut self.data[i * self.cols + j]
     }
 }
 
-impl fmt::Debug for Mat {
+impl<S: Scalar> fmt::Debug for Mat<S> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
         for i in 0..self.rows.min(8) {
@@ -368,5 +378,23 @@ mod tests {
         let m = Mat::outer(&[1.0, 2.0], &[3.0, 4.0, 5.0]);
         assert_eq!(m.shape(), (2, 3));
         assert_eq!(m[(1, 2)], 10.0);
+    }
+
+    #[test]
+    fn f32_matrix_roundtrips_from_f64() {
+        let m = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64 * 0.5);
+        let m32: Mat<f32> = Mat::from_f64_mat(&m);
+        assert_eq!(m32.shape(), (3, 3));
+        for i in 0..3 {
+            for j in 0..3 {
+                // All test values are exactly representable in f32.
+                assert_eq!(m32[(i, j)] as f64, m[(i, j)]);
+            }
+        }
+        let y = m32.matvec(&[1.0f32, 2.0, 3.0]);
+        let y64 = m.matvec(&[1.0, 2.0, 3.0]);
+        for (a, b) in y.iter().zip(&y64) {
+            assert!((*a as f64 - b).abs() < 1e-5);
+        }
     }
 }

@@ -12,27 +12,12 @@ mod mat;
 pub use eig::{symmetric_eigen, EigenDecomposition};
 pub use mat::Mat;
 
-/// Dot product of two equal-length slices.
+/// Dot product of two equal-length slices — the 4-way lane-blocked
+/// kernel in [`crate::kernel::dense::dot`], monomorphized at f64
+/// (bit-identical to the historical implementation).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: measurably faster than .zip().sum() on
-    // the scalar CPU path and keeps FP error comparable.
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for k in 0..chunks {
-        let i = k * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
-    }
-    s
+    crate::kernel::dense::dot(a, b)
 }
 
 /// Euclidean norm.

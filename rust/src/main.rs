@@ -38,6 +38,7 @@ USAGE:
   spargw solve    [--workload moon|graph|gaussian|spiral] [--n 200]
                   [--method spar-gw|egw|pga-gw|emd-gw|s-gwl|lr-gw|ae|sagrow|naive]
                   [--solver NAME] [--solver-opt k=v]...   # registry dispatch
+                  [--solver-opt precision=f32|f64]        # Spar-* mixed precision
                   [--cost l1|l2|kl] [--eps 0.01] [--s 0] [--seed 0]
   spargw pairwise [--dataset synthetic|bzr|cox2|cuneiform|firstmm_db|imdb-b]
                   [--solver NAME] [--solver-opt k=v]...   # engine per request
@@ -355,10 +356,12 @@ fn cmd_cluster(args: &Args) {
 
 fn cmd_solvers() {
     println!("registered solvers:");
+    println!("  {:<12} precision", "name");
     for &name in SolverRegistry::names() {
-        println!("  {name}");
+        println!("  {:<12} {}", name, SolverRegistry::precisions(name));
     }
     println!("\nselect with --solver NAME; pass options as --solver-opt k=v");
+    println!("mixed precision: --solver-opt precision=f32 (Spar-* engines; default f64)");
 }
 
 fn cmd_datasets(args: &Args) {

@@ -1,16 +1,25 @@
 //! Dense Sinkhorn scaling (Sinkhorn & Knopp 1967; Cuturi 2013).
+//!
+//! [`sinkhorn`] is generic over the kernel-layer [`Scalar`]: the u/v
+//! scaling sweeps run at storage width over `Mat<S>` (matvecs accumulate
+//! wide per the accumulator rule), with the `div` inner loop shared with
+//! the sparse family through [`crate::kernel::ops`]. At `S = f64` the
+//! trajectory is bit-identical to the historical implementation.
+//! [`sinkhorn_log`] (the log-domain stabilized path) intentionally stays
+//! f64-only: it exists for numerical head-room at tiny ε, which narrow
+//! storage would defeat.
 
+use crate::kernel::{ops, Scalar};
 use crate::linalg::Mat;
-use crate::util::safe_div;
 
 /// Output of a Sinkhorn run.
-pub struct SinkhornResult {
+pub struct SinkhornResult<S: Scalar = f64> {
     /// The (approximately) projected coupling `diag(u) K diag(v)`.
-    pub plan: Mat,
+    pub plan: Mat<S>,
     /// Row scaling vector.
-    pub u: Vec<f64>,
+    pub u: Vec<S>,
     /// Column scaling vector.
-    pub v: Vec<f64>,
+    pub v: Vec<S>,
     /// Inner iterations actually performed.
     pub iters: usize,
 }
@@ -24,26 +33,34 @@ pub struct SinkhornResult {
 ///
 /// Entries of `a`/`b` may be zero (padded coordinates); scalings for those
 /// coordinates are zero and the plan has zero mass there.
-pub fn sinkhorn(a: &[f64], b: &[f64], k: &Mat, max_iter: usize, tol: f64) -> SinkhornResult {
+pub fn sinkhorn<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    k: &Mat<S>,
+    max_iter: usize,
+    tol: f64,
+) -> SinkhornResult<S> {
     let (m, n) = k.shape();
     assert_eq!(a.len(), m, "a/K shape mismatch");
     assert_eq!(b.len(), n, "b/K shape mismatch");
-    let mut u = vec![1.0; m];
-    let mut v = vec![1.0; n];
+    let mut u = vec![S::ONE; m];
+    let mut v = vec![S::ONE; n];
     let mut iters = 0;
     for _ in 0..max_iter {
         // u = a ⊘ (K v); v = b ⊘ (Kᵀ u)
         let kv = k.matvec(&v);
-        u = safe_div(a, &kv);
+        u = ops::safe_div(a, &kv);
         let ktu = k.matvec_t(&u);
-        v = safe_div(b, &ktu);
+        v = ops::safe_div(b, &ktu);
         iters += 1;
         if tol > 0.0 {
-            // Row-marginal residual.
+            // Row-marginal residual, computed in f64 (widening *before*
+            // the multiply — an f32-rounded residual would floor at
+            // storage resolution and small tolerances could never fire).
             let kv2 = k.matvec(&v);
             let mut err = 0.0f64;
             for i in 0..m {
-                err = err.max((u[i] * kv2[i] - a[i]).abs());
+                err = err.max((u[i].to_f64() * kv2[i].to_f64() - a[i].to_f64()).abs());
             }
             if err < tol {
                 break;
@@ -204,6 +221,26 @@ mod tests {
         let k = Mat::from_fn(m, n, |i, j| (-((i as f64 - j as f64).powi(2)) / 2.0).exp());
         let r = sinkhorn(&a, &b, &k, 500, 1e-12);
         assert!(marginal_err(&r.plan, &a, &b) < 1e-8);
+    }
+
+    #[test]
+    fn f32_projection_tracks_f64() {
+        let m = 6;
+        let n = 5;
+        let a = uniform(m);
+        let b = uniform(n);
+        let k = Mat::from_fn(m, n, |i, j| (-((i as f64 - j as f64).powi(2)) / 2.0).exp());
+        let r64 = sinkhorn(&a, &b, &k, 300, 0.0);
+        let a32: Vec<f32> = a.iter().map(|&x| x as f32).collect();
+        let b32: Vec<f32> = b.iter().map(|&x| x as f32).collect();
+        let k32: Mat<f32> = Mat::from_f64_mat(&k);
+        let r32 = sinkhorn(&a32, &b32, &k32, 300, 0.0);
+        for i in 0..m {
+            for j in 0..n {
+                let d = (r32.plan[(i, j)] as f64 - r64.plan[(i, j)]).abs();
+                assert!(d < 1e-5, "({i},{j}): {} vs {}", r32.plan[(i, j)], r64.plan[(i, j)]);
+            }
+        }
     }
 
     #[test]

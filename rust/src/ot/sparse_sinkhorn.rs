@@ -7,63 +7,61 @@
 //! [`Coo`] kernel, and [`sparse_sinkhorn_fixed`] — the workspace form the
 //! [`SparCore` engine](crate::gw::core) drives, which runs a fixed number
 //! of sweeps over a prebuilt [`Csr`] structure entirely in caller-provided
-//! buffers (zero heap allocations, bit-identical scaling updates).
+//! buffers (zero heap allocations, bit-identical scaling updates). The
+//! fixed form is generic over the kernel [`Scalar`]: in f32 mode the
+//! sweeps run at half width while the `Kᵀu` scatter accumulates in the
+//! caller's f64 `wide` scratch (the accumulator rule); at f64 the wide
+//! path produces the same bits as the historical in-place scatter.
 
+use crate::kernel::{ops, Scalar};
 use crate::sparse::{Coo, Csr};
-use crate::util::safe_div;
-
-/// One balanced scaling update into `out`: `out = target ⊘ denom` with the
-/// Sinkhorn-safe conventions `0 ⊘ x := 0` and non-finite ratios (empty
-/// pattern rows/columns) zeroed. Bit-identical to `safe_div` followed by
-/// the finiteness guard in [`sparse_sinkhorn`].
-#[inline]
-fn scaling_update_into(target: &[f64], denom: &[f64], out: &mut [f64]) {
-    for ((&t, &d), o) in target.iter().zip(denom).zip(out.iter_mut()) {
-        let q = if t == 0.0 { 0.0 } else { t / d };
-        *o = if q.is_finite() { q } else { 0.0 };
-    }
-}
 
 /// Fixed-iteration sparse Sinkhorn over a prebuilt CSR structure with
 /// caller-owned buffers — the Algorithm 2 step 7 inner loop as executed by
 /// the `SparCore` engine. `k_vals` are the kernel values in entry order;
-/// `u`/`kv` are row-sized, `v`/`ktu` column-sized, `plan_vals` entry-sized.
+/// `u`/`kv` are row-sized, `v`/`ktu` column-sized, `wide` a column-sized
+/// f64 scratch for the transposed scatter, `plan_vals` entry-sized.
 /// On return `plan_vals[l] = k_vals[l] · u[i_l] · v[j_l]` (the scaled
 /// plan). Performs exactly `iters` sweeps and zero heap allocations.
 #[allow(clippy::too_many_arguments)]
-pub fn sparse_sinkhorn_fixed(
-    a: &[f64],
-    b: &[f64],
+pub fn sparse_sinkhorn_fixed<S: Scalar>(
+    a: &[S],
+    b: &[S],
     csr: &Csr,
-    k_vals: &[f64],
+    k_vals: &[S],
     iters: usize,
-    u: &mut [f64],
-    v: &mut [f64],
-    kv: &mut [f64],
-    ktu: &mut [f64],
-    plan_vals: &mut [f64],
+    u: &mut [S],
+    v: &mut [S],
+    kv: &mut [S],
+    ktu: &mut [S],
+    wide: &mut [f64],
+    plan_vals: &mut [S],
 ) {
     assert_eq!(a.len(), csr.nrows(), "sparse_sinkhorn_fixed: a/nrows mismatch");
     assert_eq!(b.len(), csr.ncols(), "sparse_sinkhorn_fixed: b/ncols mismatch");
-    u.fill(1.0);
-    v.fill(1.0);
+    for x in u.iter_mut() {
+        *x = S::ONE;
+    }
+    for x in v.iter_mut() {
+        *x = S::ONE;
+    }
     for _ in 0..iters {
         csr.matvec_into(k_vals, v, kv);
-        scaling_update_into(a, kv, u);
-        csr.matvec_t_into(k_vals, u, ktu);
-        scaling_update_into(b, ktu, v);
+        ops::scaling_update_into(a, kv, u);
+        csr.matvec_t_wide(k_vals, u, wide, ktu);
+        ops::scaling_update_into(b, ktu, v);
     }
     scale_plan_into(csr, k_vals, u, v, plan_vals);
 }
 
 /// `plan_vals[l] = k_vals[l] · (u[i_l] · v[j_l])` — the plan recovery of
 /// [`Coo::diag_scale_inplace`] in entry order, without mutating the kernel.
-pub(crate) fn scale_plan_into(
+pub(crate) fn scale_plan_into<S: Scalar>(
     csr: &Csr,
-    k_vals: &[f64],
-    u: &[f64],
-    v: &[f64],
-    plan_vals: &mut [f64],
+    k_vals: &[S],
+    u: &[S],
+    v: &[S],
+    plan_vals: &mut [S],
 ) {
     let rows = csr.entry_rows();
     let cols = csr.entry_cols();
@@ -87,21 +85,13 @@ pub fn sparse_sinkhorn(a: &[f64], b: &[f64], k: &Coo, max_iter: usize, tol: f64)
     let mut v = vec![1.0; b.len()];
     let mut iters = 0;
     for _ in 0..max_iter {
+        // The guarded scaling update (0 ⊘ x := 0, non-finite ratios from
+        // pattern-empty rows/columns zeroed) — one shared kernel with the
+        // fixed-iteration path.
         let kv = k.matvec(&v);
-        u = safe_div(a, &kv);
-        // Guard: pattern-empty rows give kv = 0 -> u = a/0 = inf; zero them.
-        for ui in &mut u {
-            if !ui.is_finite() {
-                *ui = 0.0;
-            }
-        }
+        ops::scaling_update_into(a, &kv, &mut u);
         let ktu = k.matvec_t(&u);
-        v = safe_div(b, &ktu);
-        for vi in &mut v {
-            if !vi.is_finite() {
-                *vi = 0.0;
-            }
-        }
+        ops::scaling_update_into(b, &ktu, &mut v);
         iters += 1;
         if tol > 0.0 {
             let kv2 = k.matvec(&v);
@@ -210,11 +200,52 @@ mod tests {
         let csr = Csr::from_pattern(m, n, &rows, &cols);
         let (mut u, mut v) = (vec![0.0; m], vec![0.0; n]);
         let (mut kv, mut ktu) = (vec![0.0; m], vec![0.0; n]);
+        let mut wide = vec![0.0; n];
         let mut out = vec![0.0; s];
-        sparse_sinkhorn_fixed(&a, &b, &csr, &vals, 40, &mut u, &mut v, &mut kv, &mut ktu, &mut out);
+        sparse_sinkhorn_fixed(
+            &a, &b, &csr, &vals, 40, &mut u, &mut v, &mut kv, &mut ktu, &mut wide, &mut out,
+        );
         assert_eq!(iters, 40);
         for (l, (&x, &y)) in out.iter().zip(plan.vals()).enumerate() {
             assert_eq!(x.to_bits(), y.to_bits(), "entry {l}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn fixed_variant_f32_tracks_f64() {
+        use crate::rng::Xoshiro256;
+        use crate::sparse::Csr;
+        let (m, n) = (15, 11);
+        let mut rng = Xoshiro256::new(99);
+        let s = 8 * m;
+        let rows: Vec<usize> = (0..s).map(|_| rng.usize(m)).collect();
+        let cols: Vec<usize> = (0..s).map(|_| rng.usize(n)).collect();
+        let vals: Vec<f64> = (0..s).map(|_| rng.f64() + 0.01).collect();
+        let a = uniform(m);
+        let b = uniform(n);
+        let csr = Csr::from_pattern(m, n, &rows, &cols);
+
+        let (mut u, mut v) = (vec![0.0f64; m], vec![0.0f64; n]);
+        let (mut kv, mut ktu) = (vec![0.0f64; m], vec![0.0f64; n]);
+        let mut wide = vec![0.0f64; n];
+        let mut out64 = vec![0.0f64; s];
+        sparse_sinkhorn_fixed(
+            &a, &b, &csr, &vals, 30, &mut u, &mut v, &mut kv, &mut ktu, &mut wide, &mut out64,
+        );
+
+        let a32: Vec<f32> = a.iter().map(|&x| x as f32).collect();
+        let b32: Vec<f32> = b.iter().map(|&x| x as f32).collect();
+        let vals32: Vec<f32> = vals.iter().map(|&x| x as f32).collect();
+        let (mut u32v, mut v32v) = (vec![0.0f32; m], vec![0.0f32; n]);
+        let (mut kv32, mut ktu32) = (vec![0.0f32; m], vec![0.0f32; n]);
+        let mut out32 = vec![0.0f32; s];
+        sparse_sinkhorn_fixed(
+            &a32, &b32, &csr, &vals32, 30, &mut u32v, &mut v32v, &mut kv32, &mut ktu32,
+            &mut wide, &mut out32,
+        );
+        for (l, (&x32, &x64)) in out32.iter().zip(&out64).enumerate() {
+            let d = (x32 as f64 - x64).abs();
+            assert!(d < 1e-4 * x64.abs().max(1e-3), "entry {l}: {x32} vs {x64}");
         }
     }
 

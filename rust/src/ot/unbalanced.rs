@@ -6,63 +6,56 @@
 //!   u = (a ⊘ K v)^{λ̄/(λ̄+ε̄)},   v = (b ⊘ Kᵀ u)^{λ̄/(λ̄+ε̄)} .
 //! With exponent → 1 (λ̄ → ∞) this degenerates to balanced Sinkhorn.
 
+use crate::kernel::{ops, Scalar};
 use crate::linalg::Mat;
 use crate::sparse::{Coo, Csr};
 
 #[inline]
 fn pow_update(target: &[f64], denom: &[f64], expo: f64) -> Vec<f64> {
-    target
-        .iter()
-        .zip(denom)
-        .map(|(&t, &d)| {
-            if t == 0.0 || d <= 0.0 || !d.is_finite() {
-                0.0
-            } else {
-                (t / d).powf(expo)
-            }
-        })
-        .collect()
-}
-
-/// [`pow_update`] into a caller-provided buffer (identical arithmetic).
-#[inline]
-fn pow_update_into(target: &[f64], denom: &[f64], expo: f64, out: &mut [f64]) {
-    for ((&t, &d), o) in target.iter().zip(denom).zip(out.iter_mut()) {
-        *o = if t == 0.0 || d <= 0.0 || !d.is_finite() { 0.0 } else { (t / d).powf(expo) };
-    }
+    let mut out = vec![0.0; target.len()];
+    ops::pow_update_into(target, denom, expo, &mut out);
+    out
 }
 
 /// Fixed-iteration sparse *unbalanced* Sinkhorn over a prebuilt CSR
 /// structure with caller-owned buffers — Algorithm 3 step 9 as executed by
 /// the `SparCore` engine. Same buffer contract as
-/// [`sparse_sinkhorn_fixed`](crate::ot::sparse_sinkhorn_fixed); performs
-/// exactly `iters` sweeps with exponent λ/(λ+ε) and zero heap allocations.
+/// [`sparse_sinkhorn_fixed`](crate::ot::sparse_sinkhorn_fixed) (including
+/// the column-sized f64 `wide` scratch for the transposed scatter);
+/// performs exactly `iters` sweeps with exponent λ/(λ+ε) and zero heap
+/// allocations. Generic over the kernel [`Scalar`]; the exponent is
+/// computed in f64 and rounded once to storage width.
 #[allow(clippy::too_many_arguments)]
-pub fn sparse_unbalanced_sinkhorn_fixed(
-    a: &[f64],
-    b: &[f64],
+pub fn sparse_unbalanced_sinkhorn_fixed<S: Scalar>(
+    a: &[S],
+    b: &[S],
     csr: &Csr,
-    k_vals: &[f64],
+    k_vals: &[S],
     lambda: f64,
     eps: f64,
     iters: usize,
-    u: &mut [f64],
-    v: &mut [f64],
-    kv: &mut [f64],
-    ktu: &mut [f64],
-    plan_vals: &mut [f64],
+    u: &mut [S],
+    v: &mut [S],
+    kv: &mut [S],
+    ktu: &mut [S],
+    wide: &mut [f64],
+    plan_vals: &mut [S],
 ) {
     assert_eq!(a.len(), csr.nrows(), "sparse_unbalanced_sinkhorn_fixed: a/nrows mismatch");
     assert_eq!(b.len(), csr.ncols(), "sparse_unbalanced_sinkhorn_fixed: b/ncols mismatch");
     assert!(lambda > 0.0 && eps > 0.0);
-    let expo = lambda / (lambda + eps);
-    u.fill(1.0);
-    v.fill(1.0);
+    let expo = S::from_f64(lambda / (lambda + eps));
+    for x in u.iter_mut() {
+        *x = S::ONE;
+    }
+    for x in v.iter_mut() {
+        *x = S::ONE;
+    }
     for _ in 0..iters {
         csr.matvec_into(k_vals, v, kv);
-        pow_update_into(a, kv, expo, u);
-        csr.matvec_t_into(k_vals, u, ktu);
-        pow_update_into(b, ktu, expo, v);
+        ops::pow_update_into(a, kv, expo, u);
+        csr.matvec_t_wide(k_vals, u, wide, ktu);
+        ops::pow_update_into(b, ktu, expo, v);
     }
     super::sparse_sinkhorn::scale_plan_into(csr, k_vals, u, v, plan_vals);
 }
@@ -195,9 +188,11 @@ mod tests {
         let csr = Csr::from_pattern(m, n, &rows, &cols);
         let (mut u, mut v) = (vec![0.0; m], vec![0.0; n]);
         let (mut kv, mut ktu) = (vec![0.0; m], vec![0.0; n]);
+        let mut wide = vec![0.0; n];
         let mut out = vec![0.0; s];
         sparse_unbalanced_sinkhorn_fixed(
-            &a, &b, &csr, &vals, 1.3, 0.2, 30, &mut u, &mut v, &mut kv, &mut ktu, &mut out,
+            &a, &b, &csr, &vals, 1.3, 0.2, 30, &mut u, &mut v, &mut kv, &mut ktu, &mut wide,
+            &mut out,
         );
         for (l, (&x, &y)) in out.iter().zip(plan.vals()).enumerate() {
             assert_eq!(x.to_bits(), y.to_bits(), "entry {l}: {x} vs {y}");

@@ -1,5 +1,9 @@
 //! COO (coordinate) sparse matrix with a *fixed pattern*.
 
+use std::sync::OnceLock;
+
+use super::Csr;
+use crate::kernel::sparse as kern;
 use crate::linalg::Mat;
 
 /// Coordinate-format sparse matrix.
@@ -8,13 +12,39 @@ use crate::linalg::Mat;
 /// mutable. Duplicate coordinates are allowed (they act additively in all
 /// linear operations), matching the i.i.d.-with-replacement sampling of the
 /// index set `S` in Algorithm 2.
-#[derive(Clone, Debug)]
+///
+/// Since the kernel-layer refactor every linear operation runs the
+/// shared `kernel::sparse` loops — there is exactly **one** sparse inner
+/// loop in the crate. The entry-order scatter ops (`matvec_t`,
+/// row/column sums) run directly on the COO index arrays; `matvec`
+/// (row-grouped gather) delegates to a lazily built, cached [`Csr`] view
+/// of the same pattern, whose entry-order contract makes the result
+/// bit-identical to the historical COO scatter. The cache is sound
+/// because the pattern never changes after construction (only values
+/// do, and values are passed to the CSR ops per call).
+#[derive(Debug)]
 pub struct Coo {
     nrows: usize,
     ncols: usize,
     rows: Vec<u32>,
     cols: Vec<u32>,
     vals: Vec<f64>,
+    /// Lazily built CSR view of the (immutable) pattern.
+    csr: OnceLock<Csr>,
+}
+
+impl Clone for Coo {
+    fn clone(&self) -> Self {
+        // The CSR cache is derived state; cloning re-derives it lazily.
+        Coo {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            rows: self.rows.clone(),
+            cols: self.cols.clone(),
+            vals: self.vals.clone(),
+            csr: OnceLock::new(),
+        }
+    }
 }
 
 impl Coo {
@@ -37,6 +67,7 @@ impl Coo {
             rows: rows.iter().map(|&r| r as u32).collect(),
             cols: cols.iter().map(|&c| c as u32).collect(),
             vals: vals.to_vec(),
+            csr: OnceLock::new(),
         }
     }
 
@@ -88,6 +119,24 @@ impl Coo {
         self.vals.copy_from_slice(vals);
     }
 
+    /// The cached CSR view of this pattern, built on first use.
+    fn csr(&self) -> &Csr {
+        self.csr.get_or_init(|| {
+            let rows: Vec<usize> = self.rows.iter().map(|&r| r as usize).collect();
+            let cols: Vec<usize> = self.cols.iter().map(|&c| c as usize).collect();
+            Csr::from_pattern(self.nrows, self.ncols, &rows, &cols)
+        })
+    }
+
+    /// Lossless CSR view of this matrix's pattern: same duplicates, and
+    /// values stay in this matrix's entry order (pass [`Coo::vals`] to
+    /// the structure's operations). Every linear operation below
+    /// delegates through this structure, so COO and CSR share one inner
+    /// loop.
+    pub fn to_csr(&self) -> Csr {
+        self.csr().clone()
+    }
+
     /// y = A x  (sparse mat-vec, O(nnz)). Panics (with the shapes) when
     /// `x` is not column-compatible — a mis-sized input would otherwise
     /// read wrong data or die deep inside the loop on an opaque index.
@@ -101,15 +150,15 @@ impl Coo {
             self.ncols
         );
         let mut y = vec![0.0; self.nrows];
-        for k in 0..self.vals.len() {
-            y[self.rows[k] as usize] += self.vals[k] * x[self.cols[k] as usize];
-        }
+        self.csr().matvec_into(&self.vals, x, &mut y);
         y
     }
 
     /// y = Aᵀ x  (O(nnz)). Panics (with the shapes) when `x` is not
     /// row-compatible — the transposed use is where silently swapped
     /// dimensions used to slip through on square-ish problems.
+    /// Entry-order scatter needs no row grouping, so this runs the shared
+    /// kernel directly on the COO index arrays (no CSR build).
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(
             x.len(),
@@ -120,27 +169,21 @@ impl Coo {
             self.ncols
         );
         let mut y = vec![0.0; self.ncols];
-        for k in 0..self.vals.len() {
-            y[self.cols[k] as usize] += self.vals[k] * x[self.rows[k] as usize];
-        }
+        kern::spmv_t(&self.rows, &self.cols, &self.vals, x, &mut y);
         y
     }
 
-    /// Row sums (marginal `T 1`).
+    /// Row sums (marginal `T 1`). Shared scatter kernel, no CSR build.
     pub fn row_sums(&self) -> Vec<f64> {
         let mut y = vec![0.0; self.nrows];
-        for k in 0..self.vals.len() {
-            y[self.rows[k] as usize] += self.vals[k];
-        }
+        kern::row_sums(&self.rows, &self.vals, &mut y);
         y
     }
 
-    /// Column sums (marginal `Tᵀ 1`).
+    /// Column sums (marginal `Tᵀ 1`). Shared scatter kernel, no CSR build.
     pub fn col_sums(&self) -> Vec<f64> {
         let mut y = vec![0.0; self.ncols];
-        for k in 0..self.vals.len() {
-            y[self.cols[k] as usize] += self.vals[k];
-        }
+        kern::col_sums(&self.cols, &self.vals, &mut y);
         y
     }
 
@@ -253,6 +296,36 @@ mod tests {
         let d = a.to_dense();
         assert_eq!(d[(0, 0)], 4.0);
         assert_eq!(a.row_sums(), vec![4.0, 0.0]);
+    }
+
+    #[test]
+    fn to_csr_is_lossless_and_delegation_is_bit_identical() {
+        // Duplicates and out-of-order entries survive the conversion, and
+        // the delegated matvec reproduces the historical COO scatter
+        // bit-for-bit.
+        let rows = [1usize, 0, 1, 0, 1];
+        let cols = [0usize, 1, 0, 0, 2];
+        let vals = [0.1, 0.2, 0.4, 0.8, 1.6];
+        let coo = Coo::from_triplets(2, 3, &rows, &cols, &vals);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), coo.nnz());
+        assert_eq!(csr.nrows(), coo.nrows());
+        assert_eq!(csr.ncols(), coo.ncols());
+        // Entry order preserved: the structure's entry_rows/cols match.
+        for k in 0..rows.len() {
+            assert_eq!(csr.entry_rows()[k] as usize, rows[k]);
+            assert_eq!(csr.entry_cols()[k] as usize, cols[k]);
+        }
+        // Historical scatter, computed manually.
+        let x = [1.0, 10.0, 100.0];
+        let mut manual = vec![0.0f64; 2];
+        for k in 0..vals.len() {
+            manual[rows[k]] += vals[k] * x[cols[k]];
+        }
+        let delegated = coo.matvec(&x);
+        for (m, d) in manual.iter().zip(&delegated) {
+            assert_eq!(m.to_bits(), d.to_bits());
+        }
     }
 
     #[test]

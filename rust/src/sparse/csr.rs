@@ -5,13 +5,24 @@
 //! *values*: the caller keeps values in the original entry order (the
 //! order of the sampled set `S`) and passes them to every operation, so
 //! one structure serves the kernel `K̃`, the plan `T̃` and any scratch
-//! array without copies. All operations write into caller-provided
-//! buffers — the Spar-GW inner loop performs zero heap allocations.
+//! array without copies — and, since the kernel-layer refactor, one
+//! structure also serves **both precisions**: every value-taking method
+//! is generic over the kernel [`Scalar`] (`f32` or `f64`), with the
+//! loops implemented once in [`crate::kernel::sparse`]. All operations
+//! write into caller-provided buffers — the Spar-GW inner loop performs
+//! zero heap allocations.
 //!
 //! Numerical contract: for every output coordinate, contributions are
 //! accumulated in ascending entry order — exactly the order
 //! [`Coo::matvec`](super::Coo::matvec) and friends use — so CSR and COO
-//! results are bit-identical, not merely close.
+//! results are bit-identical, not merely close. The `*_wide` variants
+//! accumulate scattered sums in a caller-provided f64 buffer (the
+//! accumulator rule for f32 values); at f64 they produce the same bits
+//! as the plain forms.
+
+use crate::kernel::sparse as kern;
+use crate::kernel::Scalar;
+use crate::linalg::Mat;
 
 /// Compressed-sparse-row pattern with entry-order value indirection.
 #[derive(Clone, Debug, Default)]
@@ -123,7 +134,7 @@ impl Csr {
     }
 
     #[inline]
-    fn check_vals(&self, vals: &[f64], op: &str) {
+    fn check_vals<S: Scalar>(&self, vals: &[S], op: &str) {
         assert_eq!(
             vals.len(),
             self.nnz(),
@@ -134,51 +145,81 @@ impl Csr {
     }
 
     /// `y = A x` where `A`'s values are `vals` in entry order. O(nnz),
-    /// allocation-free, row-local accumulation.
-    pub fn matvec_into(&self, vals: &[f64], x: &[f64], y: &mut [f64]) {
+    /// allocation-free; each row dot accumulates in `S::Accum`.
+    pub fn matvec_into<S: Scalar>(&self, vals: &[S], x: &[S], y: &mut [S]) {
         self.check_vals(vals, "matvec_into");
         assert_eq!(x.len(), self.ncols, "Csr::matvec_into: x length {} != ncols {}", x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows, "Csr::matvec_into: y length {} != nrows {}", y.len(), self.nrows);
-        for i in 0..self.nrows {
-            let lo = self.row_ptr[i] as usize;
-            let hi = self.row_ptr[i + 1] as usize;
-            let mut acc = 0.0;
-            for slot in lo..hi {
-                acc += vals[self.slot_src[slot] as usize] * x[self.slot_col[slot] as usize];
-            }
-            y[i] = acc;
-        }
+        kern::spmv(&self.row_ptr, &self.slot_col, &self.slot_src, vals, x, y);
     }
 
     /// `y = Aᵀ x`. Scatter in entry order (bit-identical to COO). O(nnz).
-    pub fn matvec_t_into(&self, vals: &[f64], x: &[f64], y: &mut [f64]) {
+    pub fn matvec_t_into<S: Scalar>(&self, vals: &[S], x: &[S], y: &mut [S]) {
         self.check_vals(vals, "matvec_t_into");
         assert_eq!(x.len(), self.nrows, "Csr::matvec_t_into: x length {} != nrows {}", x.len(), self.nrows);
         assert_eq!(y.len(), self.ncols, "Csr::matvec_t_into: y length {} != ncols {}", y.len(), self.ncols);
-        y.fill(0.0);
-        for k in 0..vals.len() {
-            y[self.cols_e[k] as usize] += vals[k] * x[self.rows_e[k] as usize];
-        }
+        kern::spmv_t(&self.rows_e, &self.cols_e, vals, x, y);
+    }
+
+    /// `y = Aᵀ x` with the scatter accumulated in the f64 scratch `wide`
+    /// (length `ncols`) and narrowed into `y` — the accumulator-rule form
+    /// the mixed-precision Sinkhorn uses. Identical bits to
+    /// [`Csr::matvec_t_into`] at `S = f64`.
+    pub fn matvec_t_wide<S: Scalar>(&self, vals: &[S], x: &[S], wide: &mut [f64], y: &mut [S]) {
+        self.check_vals(vals, "matvec_t_wide");
+        assert_eq!(x.len(), self.nrows, "Csr::matvec_t_wide: x length {} != nrows {}", x.len(), self.nrows);
+        assert_eq!(y.len(), self.ncols, "Csr::matvec_t_wide: y length {} != ncols {}", y.len(), self.ncols);
+        assert_eq!(wide.len(), self.ncols, "Csr::matvec_t_wide: wide length {} != ncols {}", wide.len(), self.ncols);
+        kern::spmv_t_wide(&self.rows_e, &self.cols_e, vals, x, wide, y);
     }
 
     /// Row sums (marginal `T 1`) into `y`. Scatter in entry order.
-    pub fn row_sums_into(&self, vals: &[f64], y: &mut [f64]) {
+    pub fn row_sums_into<S: Scalar>(&self, vals: &[S], y: &mut [S]) {
         self.check_vals(vals, "row_sums_into");
         assert_eq!(y.len(), self.nrows, "Csr::row_sums_into: y length {} != nrows {}", y.len(), self.nrows);
-        y.fill(0.0);
-        for k in 0..vals.len() {
-            y[self.rows_e[k] as usize] += vals[k];
-        }
+        kern::row_sums(&self.rows_e, vals, y);
     }
 
     /// Column sums (marginal `Tᵀ 1`) into `y`. Scatter in entry order.
-    pub fn col_sums_into(&self, vals: &[f64], y: &mut [f64]) {
+    pub fn col_sums_into<S: Scalar>(&self, vals: &[S], y: &mut [S]) {
         self.check_vals(vals, "col_sums_into");
         assert_eq!(y.len(), self.ncols, "Csr::col_sums_into: y length {} != ncols {}", y.len(), self.ncols);
-        y.fill(0.0);
-        for k in 0..vals.len() {
-            y[self.cols_e[k] as usize] += vals[k];
+        kern::col_sums(&self.cols_e, vals, y);
+    }
+
+    /// Row sums accumulated directly in f64 (marginal sums stay wide in
+    /// f32 mode; identical to [`Csr::row_sums_into`] at f64).
+    pub fn row_sums_wide<S: Scalar>(&self, vals: &[S], y: &mut [f64]) {
+        self.check_vals(vals, "row_sums_wide");
+        assert_eq!(y.len(), self.nrows, "Csr::row_sums_wide: y length {} != nrows {}", y.len(), self.nrows);
+        kern::row_sums_wide(&self.rows_e, vals, y);
+    }
+
+    /// Column sums accumulated directly in f64; see [`Csr::row_sums_wide`].
+    pub fn col_sums_wide<S: Scalar>(&self, vals: &[S], y: &mut [f64]) {
+        self.check_vals(vals, "col_sums_wide");
+        assert_eq!(y.len(), self.ncols, "Csr::col_sums_wide: y length {} != ncols {}", y.len(), self.ncols);
+        kern::col_sums_wide(&self.cols_e, vals, y);
+    }
+
+    /// Sparse × dense spmm: `out = A · b` with `A`'s values in entry
+    /// order, streaming rows of `b`. `out` is overwritten.
+    pub fn matmul_into<S: Scalar>(&self, vals: &[S], b: &Mat<S>, out: &mut Mat<S>) {
+        self.check_vals(vals, "matmul_into");
+        assert_eq!(b.rows(), self.ncols, "Csr::matmul_into: b rows {} != ncols {}", b.rows(), self.ncols);
+        assert_eq!(
+            out.shape(),
+            (self.nrows, b.cols()),
+            "Csr::matmul_into: out shape {:?} != ({}, {})",
+            out.shape(),
+            self.nrows,
+            b.cols()
+        );
+        for v in out.data_mut().iter_mut() {
+            *v = S::ZERO;
         }
+        let n = b.cols();
+        kern::spmm(&self.row_ptr, &self.slot_col, &self.slot_src, vals, b.data(), n, out.data_mut());
     }
 }
 
@@ -229,6 +270,51 @@ mod tests {
         let mut cs = [0.0; 2];
         c.col_sums_into(&vals, &mut cs);
         assert_eq!(cs, [13.0, 2.0]);
+    }
+
+    #[test]
+    fn wide_transpose_bit_identical_at_f64() {
+        let rows = [0usize, 1, 1, 0];
+        let cols = [1usize, 0, 2, 0];
+        let vals = [1.0f64, 2.0, 3.0, 4.0];
+        let c = Csr::from_pattern(2, 3, &rows, &cols);
+        let x = [0.3f64, 0.7];
+        let mut plain = [0.0f64; 3];
+        c.matvec_t_into(&vals, &x, &mut plain);
+        let mut wide = [0.0f64; 3];
+        let mut viaw = [0.0f64; 3];
+        c.matvec_t_wide(&vals, &x, &mut wide, &mut viaw);
+        for (a, b) in plain.iter().zip(&viaw) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut rs = [0.0f64; 2];
+        c.row_sums_into(&vals, &mut rs);
+        let mut rsw = [0.0f64; 2];
+        c.row_sums_wide(&vals, &mut rsw);
+        assert_eq!(rs, rsw);
+    }
+
+    #[test]
+    fn f32_values_share_the_f64_structure() {
+        let c = Csr::from_pattern(2, 3, &[0, 1, 1], &[1, 0, 2]);
+        let vals = [1.0f32, 2.0, 3.0];
+        let mut y = [0.0f32; 2];
+        c.matvec_into(&vals, &[1.0f32, 10.0, 100.0], &mut y);
+        assert_eq!(y, [10.0, 302.0]);
+    }
+
+    #[test]
+    fn spmm_matches_manual() {
+        let c = Csr::from_pattern(2, 3, &[0, 1, 1], &[1, 0, 2]);
+        let vals = [1.0f64, 2.0, 3.0];
+        let b = Mat::from_fn(3, 2, |i, j| (i * 2 + j + 1) as f64);
+        let mut out = Mat::zeros(2, 2);
+        c.matmul_into(&vals, &b, &mut out);
+        // A = [[0,1,0],[2,0,3]]; b = [[1,2],[3,4],[5,6]]
+        assert_eq!(out[(0, 0)], 3.0);
+        assert_eq!(out[(0, 1)], 4.0);
+        assert_eq!(out[(1, 0)], 17.0);
+        assert_eq!(out[(1, 1)], 22.0);
     }
 
     #[test]

@@ -21,13 +21,10 @@ pub fn uniform(n: usize) -> Vec<f64> {
 }
 
 /// Elementwise a ⊘ b with 0/0 := 0 (the Sinkhorn-safe division:
-/// zero-mass marginals produce zero scalings rather than NaN).
+/// zero-mass marginals produce zero scalings rather than NaN). Thin f64
+/// veneer over the scalar-generic kernel in [`crate::kernel::ops`].
 pub fn safe_div(a: &[f64], b: &[f64]) -> Vec<f64> {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| if x == 0.0 { 0.0 } else { x / y })
-        .collect()
+    crate::kernel::ops::safe_div(a, b)
 }
 
 /// Max |a-b| over two slices.

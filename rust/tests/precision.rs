@@ -1,0 +1,213 @@
+//! Mixed-precision suite: the `precision=f32|f64` registry option.
+//!
+//! Three contracts, in order of strictness:
+//!
+//! 1. **f64 golden parity** — `precision=f64` (and the default) is
+//!    bit-identical to the historical path for *all ten* registered
+//!    solvers: same value bits, same plan mass bits, same iteration
+//!    counts under identical RNG streams.
+//! 2. **f32 tolerance** — on the gaussian and moon workloads the f32
+//!    Spar-GW estimate lands within a stated tolerance of the f64
+//!    estimate: 5% on a shared sampled set (pure rounding difference),
+//!    35% (with an absolute floor) across independently sampled runs
+//!    (rounding + sampling noise).
+//! 3. **Descriptive rejection** — f64-only solvers reject
+//!    `precision=f32` with a one-line error naming the supported values.
+//!
+//! Run standalone in CI: `cargo test --release --test precision`.
+
+use std::collections::BTreeMap;
+
+use spargw::datasets;
+use spargw::gw::core::Workspace;
+use spargw::gw::solver::{SolverBase, SolverRegistry};
+use spargw::gw::spar_gw::{spar_gw_with_workspace, spar_gw_with_workspace_f32, SparGwConfig};
+use spargw::gw::sampling::GwSampler;
+use spargw::gw::GroundCost;
+use spargw::rng::Xoshiro256;
+use spargw::util::mean;
+
+fn opts(kv: &[(&str, &str)]) -> BTreeMap<String, String> {
+    kv.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+fn smoke_base() -> SolverBase {
+    SolverBase { outer_iters: 6, inner_iters: 60, ..Default::default() }
+}
+
+/// Per-solver overrides mirroring `registry_smoke` (LR-GW keeps its own
+/// mirror-descent schedule unless pinned).
+fn extra_opts(name: &str) -> Vec<(&'static str, &'static str)> {
+    if name == "lr_gw" {
+        vec![("outer", "6")]
+    } else {
+        Vec::new()
+    }
+}
+
+#[test]
+fn precision_f64_is_bit_identical_for_every_solver() {
+    let n = 12;
+    let mut rng0 = Xoshiro256::new(0xF0);
+    let inst = datasets::gaussian::gaussian(n, &mut rng0);
+    let p = inst.problem();
+    let base = smoke_base();
+
+    for &name in SolverRegistry::names() {
+        let mut plain_opts = extra_opts(name);
+        let default_solver =
+            SolverRegistry::build_with_base(name, &opts(&plain_opts), &base).unwrap();
+        plain_opts.push(("precision", "f64"));
+        let f64_solver =
+            SolverRegistry::build_with_base(name, &opts(&plain_opts), &base).unwrap();
+
+        let mut rng1 = Xoshiro256::new(7);
+        let mut rng2 = Xoshiro256::new(7);
+        let mut ws1 = Workspace::new();
+        let mut ws2 = Workspace::new();
+        let r1 = default_solver
+            .solve(&p, &mut rng1, &mut ws1)
+            .unwrap_or_else(|e| panic!("{name}: default solve failed: {e}"));
+        let r2 = f64_solver
+            .solve(&p, &mut rng2, &mut ws2)
+            .unwrap_or_else(|e| panic!("{name}: precision=f64 solve failed: {e}"));
+
+        assert_eq!(
+            r1.value.to_bits(),
+            r2.value.to_bits(),
+            "{name}: precision=f64 changed the value ({} vs {})",
+            r1.value,
+            r2.value
+        );
+        assert_eq!(r1.outer_iters, r2.outer_iters, "{name}: outer iters changed");
+        assert_eq!(r1.converged, r2.converged, "{name}: converged flag changed");
+        assert_eq!(r1.plan.nnz(), r2.plan.nnz(), "{name}: plan support changed");
+        assert_eq!(
+            r1.plan.sum().to_bits(),
+            r2.plan.sum().to_bits(),
+            "{name}: plan mass changed"
+        );
+    }
+}
+
+/// Same sampled set, same schedule: the f32 engine differs from f64 only
+/// by rounding. 5% is generous (observed drift is ~1e-4 relative).
+#[test]
+fn f32_tracks_f64_on_a_shared_set_gaussian_and_moon() {
+    for (label, seed) in [("gaussian", 0xA1u64), ("moon", 0xA2u64)] {
+        let n = 36;
+        let mut rng0 = Xoshiro256::new(seed);
+        let inst = match label {
+            "gaussian" => datasets::gaussian::gaussian(n, &mut rng0),
+            _ => datasets::moon::moon(n, &mut rng0),
+        };
+        let p = inst.problem();
+        let sampler = GwSampler::new(p.a, p.b, 0.0);
+        let mut rng = Xoshiro256::new(seed ^ 0x55);
+        let set = sampler.sample_iid(&mut rng, 12 * n);
+        let cfg = SparGwConfig { sample_size: 12 * n, ..Default::default() };
+        let mut ws = Workspace::new();
+        let r64 = spar_gw_with_workspace(&p, GroundCost::L2, &cfg, &set, &mut ws, 1);
+        let r32 = spar_gw_with_workspace_f32(&p, GroundCost::L2, &cfg, &set, &mut ws, 1);
+        assert!(r32.value.is_finite(), "{label}: f32 value not finite");
+        let denom = r64.value.abs().max(1e-3);
+        let rel = (r32.value - r64.value).abs() / denom;
+        assert!(
+            rel < 0.05,
+            "{label}: f32 {} vs f64 {} (rel {rel})",
+            r32.value,
+            r64.value
+        );
+    }
+}
+
+/// Independently sampled runs (the registry path: f32 rounds the
+/// sampling factors too, so the index sets differ): means over several
+/// seeds agree within sampling noise plus rounding.
+#[test]
+fn f32_registry_estimates_track_f64_across_samples() {
+    for (label, seed) in [("gaussian", 0xB1u64), ("moon", 0xB2u64)] {
+        let n = 36;
+        let mut rng0 = Xoshiro256::new(seed);
+        let inst = match label {
+            "gaussian" => datasets::gaussian::gaussian(n, &mut rng0),
+            _ => datasets::moon::moon(n, &mut rng0),
+        };
+        let p = inst.problem();
+        let base = smoke_base();
+        let s64 = SolverRegistry::build_with_base("spar_gw", &opts(&[]), &base).unwrap();
+        let s32 = SolverRegistry::build_with_base(
+            "spar_gw",
+            &opts(&[("precision", "f32")]),
+            &base,
+        )
+        .unwrap();
+
+        let mut vals64 = Vec::new();
+        let mut vals32 = Vec::new();
+        for k in 0..6u64 {
+            let mut ws = Workspace::new();
+            let mut r1 = Xoshiro256::new(seed ^ (1000 + k));
+            vals64.push(s64.solve(&p, &mut r1, &mut ws).unwrap().value);
+            let mut r2 = Xoshiro256::new(seed ^ (1000 + k));
+            vals32.push(s32.solve(&p, &mut r2, &mut ws).unwrap().value);
+        }
+        let m64 = mean(&vals64);
+        let m32 = mean(&vals32);
+        assert!(vals32.iter().all(|v| v.is_finite()), "{label}: non-finite f32 value");
+        let tol = 0.35 * m64.abs().max(0.02);
+        assert!(
+            (m32 - m64).abs() < tol,
+            "{label}: f32 mean {m32} vs f64 mean {m64} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn spar_family_accepts_f32_and_dense_solvers_reject_it() {
+    let f32_opts = opts(&[("precision", "f32")]);
+    for &name in SolverRegistry::names() {
+        let r = SolverRegistry::build_with_base(name, &f32_opts, &smoke_base());
+        if SolverRegistry::supports_f32(name) {
+            assert!(r.is_ok(), "{name}: must accept precision=f32");
+        } else {
+            let msg = format!("{}", r.unwrap_err());
+            assert!(!msg.contains('\n'), "{name}: error must be one line: {msg}");
+            assert!(msg.contains(name), "{name}: error must name the solver: {msg}");
+            assert!(msg.contains("f64"), "{name}: error must name the valid value: {msg}");
+        }
+    }
+}
+
+#[test]
+fn spar_ugw_f32_runs_and_is_finite() {
+    let n = 24;
+    let mut rng0 = Xoshiro256::new(0xC3);
+    let inst = datasets::gaussian::gaussian(n, &mut rng0);
+    let p = inst.problem();
+    let solver = SolverRegistry::build_with_base(
+        "spar_ugw",
+        &opts(&[("precision", "f32")]),
+        &smoke_base(),
+    )
+    .unwrap();
+    let mut rng = Xoshiro256::new(11);
+    let mut ws = Workspace::new();
+    let r = solver.solve(&p, &mut rng, &mut ws).unwrap();
+    assert!(r.value.is_finite(), "value {}", r.value);
+    assert!(r.plan.is_finite());
+    assert!(r.plan.sum() > 0.0);
+}
+
+#[test]
+fn malformed_precision_value_lists_choices() {
+    let err = SolverRegistry::build_with_base(
+        "spar_gw",
+        &opts(&[("precision", "half")]),
+        &smoke_base(),
+    )
+    .unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("precision"), "{msg}");
+    assert!(msg.contains("f32") && msg.contains("f64"), "{msg}");
+}
