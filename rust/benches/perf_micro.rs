@@ -4,7 +4,7 @@
 //!
 //! * alias-table construction + s categorical draws (sampling S);
 //! * the O(s²) sparse cost product `C̃(T̃)` (the paper's bottleneck),
-//!   serial and row-chunked across threads;
+//!   serial and pool-chunked at several thread widths;
 //! * one sparse Sinkhorn scaling pass (O(Hs));
 //! * dense decomposable vs generic tensor product (the baseline cost);
 //! * end-to-end Spar-GW solve latency, cold and with a reused
@@ -16,6 +16,13 @@
 //! number of allocation events (every allocation happens before the outer
 //! loop). A regression aborts the bench with a non-zero exit.
 //!
+//! It also emits the **thread-scaling matrix** — wall time and speedup
+//! for the blocked matmul, CSR spmm, fixed sparse Sinkhorn, the gathered
+//! cost product, the Eq. (5) `SideFactors` build and a single-pair
+//! Spar-GW solve at pool widths 1/2/4/8 — to
+//! `results/BENCH_threads.json` (uploaded as a CI artifact to seed the
+//! perf trajectory).
+//!
 //! Output: stdout rows + `results/perf_micro.csv`.
 
 use std::time::Instant;
@@ -23,7 +30,7 @@ use std::time::Instant;
 use spargw::bench::workloads::{smoke_mode, Workload};
 use spargw::bench::{allocations_during, CountingAllocator};
 use spargw::gw::core::Workspace;
-use spargw::gw::sampling::GwSampler;
+use spargw::gw::sampling::{GwSampler, SideFactors};
 use spargw::gw::spar_gw::{spar_gw, spar_gw_with_workspace, SparGwConfig};
 use spargw::gw::spar_ugw::{spar_ugw_with_workspace, SparUgwConfig};
 use spargw::gw::tensor::{
@@ -34,6 +41,7 @@ use spargw::gw::GroundCost;
 use spargw::linalg::Mat;
 use spargw::ot::{sparse_sinkhorn, sparse_sinkhorn_fixed};
 use spargw::rng::{ProductAlias, Xoshiro256};
+use spargw::runtime::pool::with_thread_limit;
 use spargw::sparse::{Coo, Csr};
 use spargw::util::csv::CsvWriter;
 
@@ -111,12 +119,14 @@ fn main() {
         std::hint::black_box(&c_out);
     });
     emit("sparse_cost_product_l1", t);
-    for threads in [2usize, 4, 8] {
-        let t = bench(reps, || {
-            ctx_l1.cost_values_into_threaded(&t_vals, &mut c_out, threads);
-            std::hint::black_box(&c_out);
+    for width in [2usize, 4, 8] {
+        let t = with_thread_limit(width, || {
+            bench(reps, || {
+                ctx_l1.cost_values_into_threaded(&t_vals, &mut c_out);
+                std::hint::black_box(&c_out);
+            })
         });
-        emit(&format!("sparse_cost_product_l1_t{threads}"), t);
+        emit(&format!("sparse_cost_product_l1_t{width}"), t);
     }
     let ctx_l2 = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, GroundCost::L2);
     let t = bench(reps, || {
@@ -153,14 +163,7 @@ fn main() {
     emit("spar_gw_end_to_end_l1", t);
     let mut ws = Workspace::new();
     let t = bench(reps, || {
-        std::hint::black_box(spar_gw_with_workspace(
-            &p,
-            GroundCost::L1,
-            &cfg,
-            &set,
-            &mut ws,
-            1,
-        ));
+        std::hint::black_box(spar_gw_with_workspace(&p, GroundCost::L1, &cfg, &set, &mut ws));
     });
     emit("spar_gw_ws_reuse_l1", t);
 
@@ -183,12 +186,12 @@ fn main() {
 
     // Balanced (Spar-GW). tol = 0 pins the iteration counts.
     let gw_cfg = |outer| SparGwConfig { sample_size: s, outer_iters: outer, tol: 0.0, ..Default::default() };
-    spar_gw_with_workspace(&p, GroundCost::L1, &gw_cfg(2), &set, &mut ws, 1); // warm buffers
+    spar_gw_with_workspace(&p, GroundCost::L1, &gw_cfg(2), &set, &mut ws); // warm buffers + pool
     let (_, a3) = allocations_during(|| {
-        spar_gw_with_workspace(&p, GroundCost::L1, &gw_cfg(3), &set, &mut ws, 1)
+        spar_gw_with_workspace(&p, GroundCost::L1, &gw_cfg(3), &set, &mut ws)
     });
     let (_, a24) = allocations_during(|| {
-        spar_gw_with_workspace(&p, GroundCost::L1, &gw_cfg(24), &set, &mut ws, 1)
+        spar_gw_with_workspace(&p, GroundCost::L1, &gw_cfg(24), &set, &mut ws)
     });
     audit("spar_gw(balanced)", a3, a24, 3, 24);
 
@@ -198,12 +201,12 @@ fn main() {
         sample_size: s,
         shrink: 0.0,
     };
-    spar_ugw_with_workspace(&p, GroundCost::L1, &ucfg(2), &set, &mut ws, 1);
+    spar_ugw_with_workspace(&p, GroundCost::L1, &ucfg(2), &set, &mut ws);
     let (_, u3) = allocations_during(|| {
-        spar_ugw_with_workspace(&p, GroundCost::L1, &ucfg(3), &set, &mut ws, 1)
+        spar_ugw_with_workspace(&p, GroundCost::L1, &ucfg(3), &set, &mut ws)
     });
     let (_, u24) = allocations_during(|| {
-        spar_ugw_with_workspace(&p, GroundCost::L1, &ucfg(24), &set, &mut ws, 1)
+        spar_ugw_with_workspace(&p, GroundCost::L1, &ucfg(24), &set, &mut ws)
     });
     audit("spar_ugw(unbalanced)", u3, u24, 3, 24);
 
@@ -225,14 +228,12 @@ fn main() {
     let k32: Vec<f32> = k64.iter().map(|&x| x as f32).collect();
     let a32: Vec<f32> = p.a.iter().map(|&x| x as f32).collect();
     let b32: Vec<f32> = p.b.iter().map(|&x| x as f32).collect();
-    let mut wide = vec![0.0f64; n];
     let (mut u64b, mut v64b, mut kv64, mut ktu64) =
         (vec![0.0f64; n], vec![0.0f64; n], vec![0.0f64; n], vec![0.0f64; n]);
     let mut plan64 = vec![0.0f64; s_eff];
     let t64 = bench(reps, || {
         sparse_sinkhorn_fixed(
-            p.a, p.b, &csr, &k64, 50, &mut u64b, &mut v64b, &mut kv64, &mut ktu64, &mut wide,
-            &mut plan64,
+            p.a, p.b, &csr, &k64, 50, &mut u64b, &mut v64b, &mut kv64, &mut ktu64, &mut plan64,
         );
         std::hint::black_box(&plan64);
     });
@@ -241,8 +242,7 @@ fn main() {
     let mut plan32 = vec![0.0f32; s_eff];
     let t32 = bench(reps, || {
         sparse_sinkhorn_fixed(
-            &a32, &b32, &csr, &k32, 50, &mut u32b, &mut v32b, &mut kv32, &mut ktu32, &mut wide,
-            &mut plan32,
+            &a32, &b32, &csr, &k32, 50, &mut u32b, &mut v32b, &mut kv32, &mut ktu32, &mut plan32,
         );
         std::hint::black_box(&plan32);
     });
@@ -335,6 +335,201 @@ fn main() {
     json.push_str("  ]\n}\n");
     std::fs::write("results/BENCH_kernels.json", &json).expect("write BENCH_kernels.json");
     println!("wrote results/BENCH_kernels.json");
+
+    // 10. Thread-scaling matrix: wall time + speedup at pool widths
+    //     1/2/4/8 for every newly parallel kernel family plus a
+    //     single-pair Spar-GW solve, emitted to
+    //     results/BENCH_threads.json (the CI artifact seeding the perf
+    //     trajectory). Widths above the machine's pool size clamp down,
+    //     so the recorded machine_threads qualifies the tail columns.
+    println!();
+    let widths = [1usize, 2, 4, 8];
+    let (n_mm, n_solve, s_mult) =
+        if smoke_mode() { (128usize, 256usize, 16usize) } else { (384, 2000, 4) };
+    let mut scaling: Vec<(String, Vec<f64>)> = Vec::new();
+
+    // Dense blocked matmul (n_mm³ mul-adds).
+    let ma = Mat::from_fn(n_mm, n_mm, |i, j| ((i * n_mm + j) as f64 * 0.13).sin());
+    let mb = Mat::from_fn(n_mm, n_mm, |i, j| ((i + 2 * j) as f64 * 0.29).cos());
+    let times: Vec<f64> = widths
+        .iter()
+        .map(|&w| {
+            with_thread_limit(w, || {
+                bench(reps, || {
+                    std::hint::black_box(ma.matmul(&mb));
+                })
+            })
+        })
+        .collect();
+    scaling.push(("dense_matmul".to_string(), times));
+
+    // Deterministic-reduction self-check: checksum the matmul output via
+    // the pool's fixed-chunk-order combine at serial and full width — the
+    // partial sums must agree bit-for-bit (the reduce primitive's
+    // determinism contract, exercised on real data in a shipped binary).
+    let mm = ma.matmul(&mb);
+    let checksum_at = |w: usize| {
+        with_thread_limit(w, || {
+            spargw::runtime::pool::pool().run_chunked_reduce(
+                mm.data().len(),
+                1 << 12,
+                |range, _| mm.data()[range].iter().sum::<f64>(),
+            )
+        })
+    };
+    let (c1, cw) = (checksum_at(1), checksum_at(usize::MAX));
+    assert_eq!(
+        c1.to_bits(),
+        cw.to_bits(),
+        "run_chunked_reduce changed bits across widths: {c1} vs {cw}"
+    );
+
+    // CSR spmm over a 16·n_solve-entry pattern times a 32-wide dense block.
+    let n_sp = n_solve;
+    let mut rng_sp = Xoshiro256::new(0xAB5D);
+    let sp_rows: Vec<usize> = (0..16 * n_sp).map(|_| rng_sp.usize(n_sp)).collect();
+    let sp_cols: Vec<usize> = (0..16 * n_sp).map(|_| rng_sp.usize(n_sp)).collect();
+    let sp_vals: Vec<f64> = (0..16 * n_sp).map(|_| rng_sp.f64() + 0.01).collect();
+    let sp_csr = Csr::from_pattern(n_sp, n_sp, &sp_rows, &sp_cols);
+    let bmat = Mat::from_fn(n_sp, 32, |i, j| ((i * 32 + j) as f64 * 0.17).sin());
+    let mut spmm_out = Mat::zeros(n_sp, 32);
+    let times: Vec<f64> = widths
+        .iter()
+        .map(|&w| {
+            with_thread_limit(w, || {
+                bench(reps, || {
+                    sp_csr.matmul_into(&sp_vals, &bmat, &mut spmm_out);
+                    std::hint::black_box(&spmm_out);
+                })
+            })
+        })
+        .collect();
+    scaling.push(("csr_spmm".to_string(), times));
+
+    // Fixed sparse Sinkhorn (H = 50) over the same pattern.
+    let a_sp = spargw::util::uniform(n_sp);
+    let (mut su, mut sv) = (vec![0.0f64; n_sp], vec![0.0f64; n_sp]);
+    let (mut skv, mut sktu) = (vec![0.0f64; n_sp], vec![0.0f64; n_sp]);
+    let mut splan = vec![0.0f64; 16 * n_sp];
+    let times: Vec<f64> = widths
+        .iter()
+        .map(|&w| {
+            with_thread_limit(w, || {
+                bench(reps, || {
+                    sparse_sinkhorn_fixed(
+                        &a_sp, &a_sp, &sp_csr, &sp_vals, 50, &mut su, &mut sv, &mut skv,
+                        &mut sktu, &mut splan,
+                    );
+                    std::hint::black_box(&splan);
+                })
+            })
+        })
+        .collect();
+    scaling.push(("sparse_sinkhorn_fixed_h50".to_string(), times));
+
+    // Single-pair Spar-GW solve at n_solve (the acceptance-criterion
+    // row: the end-to-end pair latency the pairwise service pays), plus
+    // its O(s²) cost product and the Eq. (5) factor build in isolation.
+    let mut grng = Xoshiro256::new(0x501F);
+    let inst2 = Workload::Moon.make(n_solve, &mut grng);
+    let p2 = inst2.problem();
+    let sampler2 = GwSampler::new(p2.a, p2.b, 0.0);
+    let mut r2 = Xoshiro256::new(77);
+    let set2 = sampler2.sample_iid(&mut r2, s_mult * n_solve);
+    let ctx2 = SparseCostContext::new(p2.cx, p2.cy, &set2.rows, &set2.cols, GroundCost::L1);
+    let tv2: Vec<f64> =
+        set2.rows.iter().zip(&set2.cols).map(|(&i, &j)| p2.a[i] * p2.b[j]).collect();
+    let mut co2 = vec![0.0f64; set2.len()];
+    let times: Vec<f64> = widths
+        .iter()
+        .map(|&w| {
+            with_thread_limit(w, || {
+                bench(reps, || {
+                    ctx2.cost_values_into_threaded(&tv2, &mut co2);
+                    std::hint::black_box(&co2);
+                })
+            })
+        })
+        .collect();
+    scaling.push(("sparse_cost_product".to_string(), times));
+
+    let marg = spargw::util::uniform(if smoke_mode() { 1 << 16 } else { 1 << 20 });
+    let times: Vec<f64> = widths
+        .iter()
+        .map(|&w| {
+            with_thread_limit(w, || {
+                bench(reps, || {
+                    std::hint::black_box(SideFactors::new(&marg));
+                })
+            })
+        })
+        .collect();
+    scaling.push(("side_factors_build".to_string(), times));
+
+    let cfg2 = SparGwConfig {
+        sample_size: s_mult * n_solve,
+        outer_iters: 5,
+        inner_iters: 20,
+        tol: 0.0,
+        ..Default::default()
+    };
+    let mut ws2 = Workspace::new();
+    let times: Vec<f64> = widths
+        .iter()
+        .map(|&w| {
+            with_thread_limit(w, || {
+                bench(reps.min(3), || {
+                    std::hint::black_box(spar_gw_with_workspace(
+                        &p2,
+                        GroundCost::L1,
+                        &cfg2,
+                        &set2,
+                        &mut ws2,
+                    ));
+                })
+            })
+        })
+        .collect();
+    scaling.push(("spar_gw_single_pair_solve".to_string(), times));
+
+    let machine_threads = spargw::runtime::pool::pool().threads();
+    let mut tjson = String::from("{\n");
+    tjson.push_str(&format!(
+        "  \"n_solve\": {n_solve},\n  \"s_solve\": {},\n  \"machine_threads\": \
+         {machine_threads},\n  \"widths\": [1, 2, 4, 8],\n  \"kernels\": [\n",
+        set2.len()
+    ));
+    println!(
+        "thread scaling (machine pool = {machine_threads} threads; widths clamp to it)"
+    );
+    for (ki, (name, times)) in scaling.iter().enumerate() {
+        let base = times[0];
+        let speedups: Vec<f64> = times.iter().map(|&t| base / t.max(1e-12)).collect();
+        println!(
+            "{name:<28} t1 {:>10.6}s  t2 {:>5.2}x  t4 {:>5.2}x  t8 {:>5.2}x",
+            times[0], speedups[1], speedups[2], speedups[3]
+        );
+        for (wi, &w) in widths.iter().enumerate() {
+            csv.row(&[
+                format!("{name}_threads{w}"),
+                n_solve.to_string(),
+                set2.len().to_string(),
+                format!("{:.6e}", times[wi]),
+            ])
+            .unwrap();
+        }
+        let secs: Vec<String> = times.iter().map(|t| format!("{t:.6e}")).collect();
+        let sp: Vec<String> = speedups.iter().map(|x| format!("{x:.3}")).collect();
+        tjson.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"seconds\": [{}], \"speedup\": [{}]}}{}\n",
+            secs.join(", "),
+            sp.join(", "),
+            if ki + 1 < scaling.len() { "," } else { "" }
+        ));
+    }
+    tjson.push_str("  ]\n}\n");
+    std::fs::write("results/BENCH_threads.json", &tjson).expect("write BENCH_threads.json");
+    println!("wrote results/BENCH_threads.json");
 
     println!("\n(effective support |S| = {s_eff} of s = {s})");
     csv.flush().unwrap();

@@ -87,14 +87,14 @@ fn main() {
         "solver", "cost", "slope", "time/n (s)", "paper claim"
     );
 
-    // Registry rows + ℓ1/threaded contrast rows, all built by name.
+    // Registry rows + ℓ1/pool-width contrast rows, all built by name.
+    // The serial rows pin the pool width to 1; the `-t4` row lifts the
+    // cap to 4 so the chunked kernels engage (same bits either way).
     let no_opts = BTreeMap::new();
-    let threaded: BTreeMap<String, String> =
-        [("threads".to_string(), "4".to_string())].into_iter().collect();
-    let mut rows: Vec<(&str, GroundCost, &BTreeMap<String, String>, &str, String)> =
+    let mut rows: Vec<(&str, GroundCost, &BTreeMap<String, String>, &str, String, usize)> =
         Vec::new();
     for &name in SolverRegistry::names() {
-        rows.push((name, GroundCost::L2, &no_opts, paper_claim(name), name.to_string()));
+        rows.push((name, GroundCost::L2, &no_opts, paper_claim(name), name.to_string(), 1));
     }
     rows.push((
         "spar_gw",
@@ -102,6 +102,7 @@ fn main() {
         &no_opts,
         "n^2 + s^2 (arbitrary L)",
         "spar_gw".to_string(),
+        1,
     ));
     rows.push((
         "egw",
@@ -109,13 +110,15 @@ fn main() {
         &no_opts,
         "n^4 (no decomposition)",
         "egw".to_string(),
+        1,
     ));
     rows.push((
         "spar_gw",
         GroundCost::L1,
-        &threaded,
-        "n^2 + s^2/t (row-chunked)",
+        &no_opts,
+        "n^2 + s^2/t (pool, 4 threads)",
         "spar_gw-t4".to_string(),
+        4,
     ));
 
     let mut csv =
@@ -123,7 +126,7 @@ fn main() {
             .expect("csv");
     let mut ws = Workspace::new();
 
-    for (name, cost, opts, claim, label) in rows {
+    for (name, cost, opts, claim, label, width) in rows {
         // The generic-tensor dense path is O(n^4): cap its sweep so the
         // bench terminates (slope fits on the smaller prefix).
         let ns_m: Vec<usize> = if name == "egw" && cost == GroundCost::L1 {
@@ -131,7 +134,9 @@ fn main() {
         } else {
             ns.clone()
         };
-        let times = sweep(name, cost, opts, &ns_m, &mut ws);
+        let times = spargw::runtime::pool::with_thread_limit(width, || {
+            sweep(name, cost, opts, &ns_m, &mut ws)
+        });
         let slope = loglog_slope(&ns_m, &times);
         let times_str: Vec<String> = times.iter().map(|t| format!("{t:.3}")).collect();
         println!(

@@ -21,8 +21,10 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use super::scheduler::run_jobs;
 use crate::datasets::graphsets::GraphDataset;
 use crate::gw::solver::PreparedStructure;
+use crate::runtime::pool;
 
 /// Counters describing how much preprocessing a Gram run performed.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -45,13 +47,14 @@ impl StructureCache {
     /// Run the per-structure preprocessing once per dataset item: the
     /// degree marginal (row sums over the graph's relation matrix) and
     /// the sampling factors derived from it. O(Σ nᵢ²) total, performed
-    /// exactly once no matter how many pairs are solved afterwards.
+    /// exactly once no matter how many pairs are solved afterwards —
+    /// parallel across structures on the shared thread budget (items are
+    /// independent, so the entries are bit-identical at any width).
     pub fn build(dataset: &GraphDataset) -> Self {
-        let entries: Vec<PreparedStructure> = dataset
-            .graphs
-            .iter()
-            .map(|g| PreparedStructure::new(g.marginal()))
-            .collect();
+        let entries: Vec<PreparedStructure> =
+            run_jobs(dataset.graphs.len(), pool::pool().threads(), |i| {
+                PreparedStructure::new(dataset.graphs[i].marginal())
+            });
         let built = entries.len();
         StructureCache { entries, built, hits: AtomicUsize::new(0) }
     }

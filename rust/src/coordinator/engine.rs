@@ -362,10 +362,11 @@ impl PairwiseEngine {
 /// solver config (typed fields and string overrides), ground cost, seed,
 /// and dataset identity — name, shape AND contents (adjacency and
 /// attribute bits), so resuming against a same-shaped but differently
-/// generated dataset is refused. Pure throughput knobs (`workers`,
-/// `kernel_threads`, the cache toggle) are deliberately excluded — the
-/// determinism contract says they never change bits, so a checkpoint
-/// written at one worker count must resume at another.
+/// generated dataset is refused. Pure throughput knobs (`workers`, the
+/// pool width from `--threads`/`SPARGW_THREADS`, the cache toggle) are
+/// deliberately excluded — the determinism contract says they never
+/// change bits, so a checkpoint written at one worker count must resume
+/// at another.
 fn config_fingerprint(cfg: &PairwiseConfig, dataset: &GraphDataset) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     let mut eat = |bytes: &[u8]| {

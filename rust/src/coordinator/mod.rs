@@ -7,9 +7,12 @@
 //! * [`bucket`] — size-class analysis: pairs are padded up to the next
 //!   compiled artifact bucket so one PJRT executable is reused across
 //!   every pair in the class (compile-once, execute-many);
-//! * [`scheduler`] — a work-queue worker pool (std threads; tokio is
-//!   unavailable offline) with deterministic per-job RNG streams and the
-//!   deterministic [`scheduler::shard_partition`] of the pair set;
+//! * [`scheduler`] — a work-queue job scheduler (std threads; tokio is
+//!   unavailable offline) with deterministic per-job RNG streams,
+//!   contention-free result slots, and the deterministic
+//!   [`scheduler::shard_partition`] of the pair set. Its workers claim
+//!   quota from the crate-wide kernel pool
+//!   ([`crate::runtime::pool`]) — one thread budget across layers;
 //! * [`cache`] — [`cache::StructureCache`]: per-input preprocessing
 //!   (relation matrix, marginal, Eq. (5) sampling factors) computed
 //!   exactly once per Gram run and shared immutably across pairs, shards

@@ -1,9 +1,19 @@
 //! Work-queue scheduler: run a batch of independent jobs on a pool of
 //! worker threads (std::thread::scope — tokio is unavailable offline),
 //! preserving result order and bounding in-flight work by the pool size.
+//!
+//! The scheduler composes with the crate-wide kernel pool
+//! ([`crate::runtime::pool`]) under **one thread budget**: the batch is
+//! capped at the pool's thread count, and the workers' net extra threads
+//! are claimed as pool quota for the batch's duration. With the batch at
+//! full width every per-pair kernel call runs inline serial; with one
+//! worker, a single pair's kernels get the whole pool — never both at
+//! once (no oversubscription).
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+
+use crate::runtime::pool;
 
 /// Run `jobs` (index-addressable closures) on `workers` threads; returns
 /// results in job order. `job(i)` must be safe to call from any thread.
@@ -15,43 +25,82 @@ where
     run_jobs_with(n_jobs, workers, || (), |_, i| job(i))
 }
 
+/// Contention-free result collection: one pre-split slot per job. Each
+/// slot is written exactly once, by the worker that claimed its index
+/// from the atomic cursor, and read only after the worker scope joins —
+/// no lock is ever taken on the result path.
+struct Slots<R>(Vec<UnsafeCell<Option<R>>>);
+
+// Safety: slot i is accessed only by the single worker that claimed
+// index i (the fetch_add cursor hands each index out exactly once), and
+// the final reads happen after the thread scope's join barrier.
+unsafe impl<R: Send> Sync for Slots<R> {}
+
+impl<R> Slots<R> {
+    fn new(n: usize) -> Self {
+        Slots((0..n).map(|_| UnsafeCell::new(None)).collect())
+    }
+
+    /// Safety: callers must hold exclusive claim to index `i` (see the
+    /// type-level invariant above).
+    unsafe fn put(&self, i: usize, r: R) {
+        unsafe { *self.0[i].get() = Some(r) };
+    }
+
+    fn into_results(self) -> Vec<R> {
+        self.0
+            .into_iter()
+            .map(|c| c.into_inner().expect("job result missing"))
+            .collect()
+    }
+}
+
 /// [`run_jobs`] with per-worker mutable state: `init()` runs once on each
 /// worker thread and the resulting state is threaded through every job
 /// that worker claims. This is how the pairwise service reuses one solver
 /// [`Workspace`](crate::gw::core::Workspace) per worker across pairs —
 /// buffers are allocated `workers` times per batch instead of once per
 /// pair — without the state ever crossing threads.
+///
+/// Results land in disjoint pre-split slots (no per-result lock). The
+/// worker count is clamped to the kernel pool's thread budget and the
+/// workers' net extra threads (`workers − 1`; the calling thread sleeps)
+/// are reserved from the pool while the batch runs. The caller's pool
+/// thread-limit override propagates into every worker, so a limit set
+/// around a batch governs the kernels its jobs run.
 pub fn run_jobs_with<S, R, I, F>(n_jobs: usize, workers: usize, init: I, job: F) -> Vec<R>
 where
     R: Send,
     I: Fn() -> S + Sync,
     F: Fn(&mut S, usize) -> R + Sync,
 {
-    let workers = workers.max(1).min(n_jobs.max(1));
+    let workers = workers
+        .max(1)
+        .min(n_jobs.max(1))
+        .min(pool::pool().threads());
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<R>>> =
-        Mutex::new((0..n_jobs).map(|_| None).collect());
+    let slots = Slots::new(n_jobs);
+    let limit = pool::current_thread_limit();
+    let _quota = pool::pool().reserve(workers.saturating_sub(1));
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| {
-                let mut state = init();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n_jobs {
-                        break;
+                pool::with_thread_limit(limit, || {
+                    let mut state = init();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_jobs {
+                            break;
+                        }
+                        let r = job(&mut state, i);
+                        // Safety: index i was claimed exactly once above.
+                        unsafe { slots.put(i, r) };
                     }
-                    let r = job(&mut state, i);
-                    results.lock().unwrap()[i] = Some(r);
-                }
+                })
             });
         }
     });
-    results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.expect("job result missing"))
-        .collect()
+    slots.into_results()
 }
 
 /// Deterministic round-robin shard assignment: job `k` belongs to shard

@@ -49,14 +49,12 @@ pub struct PairwiseConfig {
     pub spar: SparGwConfig,
     /// FGW trade-off α when the dataset has attributes (paper: 0.6).
     pub alpha: f64,
-    /// Worker threads for the native path.
+    /// Worker threads for the native path. Capped at the crate-wide
+    /// pool budget (`--threads` / `SPARGW_THREADS`); the pairwise
+    /// scheduler claims pool quota for them, so per-pair kernels use
+    /// whatever width the workers leave free — one coherent thread
+    /// budget, never oversubscribed, never changing results.
     pub workers: usize,
-    /// Threads row-chunking the O(s²) cost kernel *within* one pair
-    /// (1 = serial). Keep at 1 when `workers` already saturates the
-    /// machine; raise for few-but-large pairs (each chunked call spawns
-    /// scoped threads, so small pairs lose more to spawn overhead than
-    /// chunking saves). Never changes results.
-    pub kernel_threads: usize,
     /// Base RNG seed; every pair gets an independent derived stream.
     pub seed: u64,
     /// Prefer the PJRT path when an artifact bucket fits.
@@ -72,7 +70,6 @@ impl Default for PairwiseConfig {
             spar: SparGwConfig::default(),
             alpha: 0.6,
             workers: 1,
-            kernel_threads: 1,
             seed: 0,
             use_pjrt: false,
         }
@@ -93,7 +90,6 @@ impl PairwiseConfig {
             alpha: self.alpha,
             shrink: self.spar.shrink,
             tol: self.spar.tol,
-            threads: self.kernel_threads,
             ..SolverBase::default()
         }
     }
@@ -353,28 +349,28 @@ mod tests {
     }
 
     #[test]
-    fn kernel_threads_do_not_change_results() {
-        // Per-pair kernel threading is a pure throughput knob: the
-        // distance matrix must be bit-identical to the serial run. The
-        // sample budget must be large enough that the threaded path
-        // actually engages (the kernel falls back to serial below ~64
-        // output rows per thread): IMDB-like pairs have ≥16 nodes each,
-        // so a 384-draw budget dedups to well over 128 unique entries.
+    fn pool_width_does_not_change_results() {
+        // Kernel-pool width is a pure throughput knob: the distance
+        // matrix must be bit-identical to the serial run. The limit set
+        // here propagates through the scheduler into every worker. The
+        // sample budget is large enough that the chunked cost kernel
+        // actually engages on at least the bigger pairs.
         let ds = tiny_dataset();
-        let mk = |kernel_threads| {
-            let mut svc = PairwiseGw::new(PairwiseConfig {
-                workers: 2,
-                kernel_threads,
-                seed: 3,
-                spar: SparGwConfig { sample_size: 384, outer_iters: 4, inner_iters: 8, ..Default::default() },
-                ..Default::default()
-            });
-            svc.pairwise(&ds).unwrap().distances
+        let mk = |limit: usize| {
+            crate::runtime::pool::with_thread_limit(limit, || {
+                let mut svc = PairwiseGw::new(PairwiseConfig {
+                    workers: 2,
+                    seed: 3,
+                    spar: SparGwConfig { sample_size: 384, outer_iters: 4, inner_iters: 8, ..Default::default() },
+                    ..Default::default()
+                });
+                svc.pairwise(&ds).unwrap().distances
+            })
         };
         let serial = mk(1);
         let threaded = mk(3);
         for (x, y) in serial.data().iter().zip(threaded.data()) {
-            assert_eq!(x, y, "kernel threading changed results");
+            assert_eq!(x, y, "pool width changed results");
         }
     }
 

@@ -20,16 +20,16 @@
 //! coordinator's per-worker workspace reuse are unchanged.
 //!
 //! The engine runs on a per-solve [`Workspace`] of preallocated buffers
-//! plus a CSR view of the sampled pattern built once per solve: with the
-//! default serial cost kernel (`threads == 1`) the inner H×R loop
-//! performs **zero heap allocations** (verified by the counting
-//! allocator in `benches/perf_micro.rs`), and the coordinator reuses one
+//! plus a CSR view of the sampled pattern built once per solve: the
+//! inner H×R loop performs **zero heap allocations** (verified by the
+//! counting allocator in `benches/perf_micro.rs` — the persistent pool's
+//! dispatch is allocation-free too), and the coordinator reuses one
 //! `Workspace` per worker thread across pairs. The O(s²) sparse-cost
-//! kernel can additionally be row-chunked across threads
-//! ([`SparseCostContext::cost_values_into_threaded`]); chunking never
-//! changes results, because each output row is independent, but each
-//! chunked call spawns scoped threads (which allocate) — a throughput
-//! trade worth taking only when s² dominates the spawn cost.
+//! kernel, the CSR Sinkhorn sweeps and the scaling updates all run on
+//! the crate-wide worker pool ([`crate::runtime::pool`]) when the work
+//! clears the per-kernel grain; chunking never changes results, because
+//! every chunk owns disjoint outputs with the serial per-output
+//! operation order — bit-identical at any `SPARGW_THREADS`.
 //!
 //! Numerical contract: every strategy reproduces the pre-refactor solver
 //! loops operation-for-operation, so results are *bit-identical* to the
@@ -87,9 +87,6 @@ pub struct Workspace<S: Scalar = f64> {
     kv: Vec<S>,
     /// Scratch Kᵀ·u.
     ktu: Vec<S>,
-    /// f64 scatter scratch for the transposed Sinkhorn sweep (length n;
-    /// the accumulator rule for f32 storage — identical bits at f64).
-    wide: Vec<f64>,
     /// Plan row marginals (unbalanced shift / objective) — marginal sums
     /// stay f64 at every storage width.
     row_sums: Vec<f64>,
@@ -124,7 +121,6 @@ impl<S: Scalar> Workspace<S> {
         fit(&mut self.v, n);
         fit(&mut self.kv, m);
         fit(&mut self.ktu, n);
-        fit(&mut self.wide, n);
         fit(&mut self.row_sums, m);
         fit(&mut self.col_sums, n);
         fit(&mut self.t_out, s);
@@ -164,9 +160,6 @@ pub struct Engine<'a, S: Scalar = f64> {
     pub outer_iters: usize,
     /// Outer stopping tolerance on ‖ΔT̃‖_F (0 disables).
     pub tol: f64,
-    /// Threads for the O(s²) cost kernel (1 = serial; the coordinator
-    /// keeps this at 1 when it already parallelizes across pairs).
-    pub threads: usize,
 }
 
 /// The per-variant physics of a Spar-* solver: balanced (Algorithm 2),
@@ -305,7 +298,6 @@ fn balanced_inner<S: Scalar>(eng: &Engine<S>, ws: &mut Workspace<S>, inner_iters
         &mut ws.v,
         &mut ws.kv,
         &mut ws.ktu,
-        &mut ws.wide,
         &mut ws.t_next,
     );
 }
@@ -326,7 +318,7 @@ impl<S: Scalar> Marginals<S> for Balanced {
     }
 
     fn build_kernel(&mut self, eng: &Engine<S>, ws: &mut Workspace<S>) {
-        eng.ctx.cost_values_into_threaded(&ws.t, &mut ws.c_vals, eng.threads);
+        eng.ctx.cost_values_into_threaded(&ws.t, &mut ws.c_vals);
         stabilize(eng, ws);
         let s = ws.t.len();
         let eps = S::from_f64(self.epsilon);
@@ -402,7 +394,7 @@ impl<S: Scalar> Marginals<S> for Fused<'_, S> {
     }
 
     fn build_kernel(&mut self, eng: &Engine<S>, ws: &mut Workspace<S>) {
-        eng.ctx.cost_values_into_threaded(&ws.t, &mut ws.c_vals, eng.threads);
+        eng.ctx.cost_values_into_threaded(&ws.t, &mut ws.c_vals);
         let s = ws.t.len();
         let alpha = S::from_f64(self.alpha);
         let one_minus = S::from_f64(1.0 - self.alpha);
@@ -502,7 +494,7 @@ impl<S: Scalar> Marginals<S> for Unbalanced {
 
     fn build_kernel(&mut self, eng: &Engine<S>, ws: &mut Workspace<S>) {
         // Step 8a: sparse unbalanced cost = sparse product + E(T̃) shift.
-        eng.ctx.cost_values_into_threaded(&ws.t, &mut ws.c_vals, eng.threads);
+        eng.ctx.cost_values_into_threaded(&ws.t, &mut ws.c_vals);
         ws.csr.row_sums_wide(&ws.t, &mut ws.row_sums);
         ws.csr.col_sums_wide(&ws.t, &mut ws.col_sums);
         let shift =
@@ -529,7 +521,6 @@ impl<S: Scalar> Marginals<S> for Unbalanced {
             &mut ws.v,
             &mut ws.kv,
             &mut ws.ktu,
-            &mut ws.wide,
             &mut ws.t_next,
         );
     }
@@ -592,7 +583,7 @@ mod tests {
             let set = sampler.sample_iid(&mut rng, 8 * n);
             let cfg = SparGwConfig { sample_size: 8 * n, ..Default::default() };
             let fresh = spar_gw_with_set(&p, GroundCost::L2, &cfg, &set);
-            let reused = spar_gw_with_workspace(&p, GroundCost::L2, &cfg, &set, &mut ws, 1);
+            let reused = spar_gw_with_workspace(&p, GroundCost::L2, &cfg, &set, &mut ws);
             assert_eq!(fresh.value.to_bits(), reused.value.to_bits());
             assert_eq!(fresh.outer_iters, reused.outer_iters);
             for (x, y) in fresh.plan.vals().iter().zip(reused.plan.vals()) {
@@ -603,6 +594,7 @@ mod tests {
 
     #[test]
     fn threaded_solve_bit_identical_to_serial() {
+        use crate::runtime::pool::with_thread_limit;
         let n = 26;
         let c1 = relation(n, 5);
         let c2 = relation(n, 6);
@@ -614,8 +606,12 @@ mod tests {
         let cfg = SparGwConfig { sample_size: 16 * n, ..Default::default() };
         let mut ws1 = Workspace::new();
         let mut ws4 = Workspace::new();
-        let serial = spar_gw_with_workspace(&p, GroundCost::L1, &cfg, &set, &mut ws1, 1);
-        let threaded = spar_gw_with_workspace(&p, GroundCost::L1, &cfg, &set, &mut ws4, 4);
+        let serial = with_thread_limit(1, || {
+            spar_gw_with_workspace(&p, GroundCost::L1, &cfg, &set, &mut ws1)
+        });
+        let threaded = with_thread_limit(4, || {
+            spar_gw_with_workspace(&p, GroundCost::L1, &cfg, &set, &mut ws4)
+        });
         assert_eq!(serial.value.to_bits(), threaded.value.to_bits());
         for (x, y) in serial.plan.vals().iter().zip(threaded.plan.vals()) {
             assert_eq!(x.to_bits(), y.to_bits());
@@ -637,8 +633,8 @@ mod tests {
         let set = sampler.sample_iid(&mut rng, 12 * n);
         let cfg = SparGwConfig { sample_size: 12 * n, ..Default::default() };
         let mut ws = Workspace::new();
-        let r64 = spar_gw_with_workspace(&p, GroundCost::L2, &cfg, &set, &mut ws, 1);
-        let r32 = spar_gw_with_workspace_f32(&p, GroundCost::L2, &cfg, &set, &mut ws, 1);
+        let r64 = spar_gw_with_workspace(&p, GroundCost::L2, &cfg, &set, &mut ws);
+        let r32 = spar_gw_with_workspace_f32(&p, GroundCost::L2, &cfg, &set, &mut ws);
         assert!(r32.value.is_finite());
         let denom = r64.value.abs().max(1e-3);
         assert!(
@@ -648,7 +644,7 @@ mod tests {
             r64.value
         );
         // The f32 lane is reused (allocated once) across solves.
-        let r32b = spar_gw_with_workspace_f32(&p, GroundCost::L2, &cfg, &set, &mut ws, 1);
+        let r32b = spar_gw_with_workspace_f32(&p, GroundCost::L2, &cfg, &set, &mut ws);
         assert_eq!(r32.value.to_bits(), r32b.value.to_bits());
     }
 }

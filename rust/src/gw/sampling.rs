@@ -17,6 +17,7 @@
 
 use crate::kernel::Precision;
 use crate::rng::{AliasTable, ProductAlias, Rng};
+use crate::runtime::pool::{pool, PAR_GRAIN};
 
 /// The sampled sparsity pattern `S` plus its importance weights.
 #[derive(Clone, Debug)]
@@ -72,14 +73,28 @@ impl SideFactors {
     /// pipeline. The coordinator's `StructureCache` caches one instance
     /// per (structure, precision) via
     /// [`PreparedStructure::factors_for`](crate::gw::solver::PreparedStructure::factors_for).
+    ///
+    /// The `√·` map runs parallel over chunks of the marginal on the
+    /// crate-wide pool (elementwise, so bits are thread-count-free); the
+    /// alias-table build stays serial (it is a sequential partition of
+    /// the probability mass).
     pub fn with_precision(marginal: &[f64], precision: Precision) -> Self {
-        let u: Vec<f64> = match precision {
-            Precision::F64 => marginal.iter().map(|&x| x.max(0.0).sqrt()).collect(),
-            Precision::F32 => marginal
-                .iter()
-                .map(|&x| ((x.max(0.0) as f32).sqrt()) as f64)
-                .collect(),
-        };
+        let mut u = vec![0.0f64; marginal.len()];
+        pool().for_each_chunk_mut(&mut u, PAR_GRAIN, |chunk, range, _| {
+            let src = &marginal[range];
+            match precision {
+                Precision::F64 => {
+                    for (o, &x) in chunk.iter_mut().zip(src) {
+                        *o = x.max(0.0).sqrt();
+                    }
+                }
+                Precision::F32 => {
+                    for (o, &x) in chunk.iter_mut().zip(src) {
+                        *o = ((x.max(0.0) as f32).sqrt()) as f64;
+                    }
+                }
+            }
+        });
         SideFactors { table: AliasTable::new(&u), len: marginal.len() }
     }
 

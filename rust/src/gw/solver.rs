@@ -282,8 +282,6 @@ pub struct SolverBase {
     pub tol: f64,
     /// Marginal relaxation weight λ (unbalanced methods).
     pub lambda: f64,
-    /// Threads row-chunking the O(s²) cost kernel (Spar-* family).
-    pub threads: usize,
     /// Kernel precision (`f64` default — bit-identical; `f32` = mixed
     /// precision, Spar-* family only).
     pub precision: Precision,
@@ -302,7 +300,6 @@ impl Default for SolverBase {
             shrink: 0.0,
             tol: 1e-9,
             lambda: 1.0,
-            threads: 1,
             precision: Precision::F64,
         }
     }

@@ -45,7 +45,7 @@ pub fn spar_fgw_with_set(
     set: &SampledSet,
 ) -> SparGwResult {
     let mut ws = Workspace::new();
-    spar_fgw_with_workspace(p, cost, cfg, set, &mut ws, 1)
+    spar_fgw_with_workspace(p, cost, cfg, set, &mut ws)
 }
 
 /// Algorithm 4 on the shared [`SparCore` engine](super::core): the
@@ -57,7 +57,6 @@ pub fn spar_fgw_with_workspace(
     cfg: &SparGwConfig,
     set: &SampledSet,
     ws: &mut Workspace,
-    threads: usize,
 ) -> SparGwResult {
     let ctx = SparseCostContext::new(p.gw.cx, p.gw.cy, &set.rows, &set.cols, cost);
     // M̃: feature distances at the sampled positions.
@@ -76,7 +75,6 @@ pub fn spar_fgw_with_workspace(
         ctx: &ctx,
         outer_iters: cfg.outer_iters,
         tol: cfg.tol,
-        threads,
     };
     let mut strategy = Fused {
         epsilon: cfg.epsilon,
@@ -97,7 +95,6 @@ pub fn spar_fgw_with_workspace_f32(
     cfg: &SparGwConfig,
     set: &SampledSet,
     ws: &mut Workspace,
-    threads: usize,
 ) -> SparGwResult {
     let ctx = SparseCostContext::new(p.gw.cx, p.gw.cy, &set.rows, &set.cols, cost);
     let feat_vals: Vec<f32> = set
@@ -117,7 +114,6 @@ pub fn spar_fgw_with_workspace_f32(
         ctx: &ctx,
         outer_iters: cfg.outer_iters,
         tol: cfg.tol,
-        threads,
     };
     let mut strategy = Fused {
         epsilon: cfg.epsilon,

@@ -100,21 +100,20 @@ pub fn spar_gw_with_set(
     set: &SampledSet,
 ) -> SparGwResult {
     let mut ws = Workspace::new();
-    spar_gw_with_workspace(p, cost, cfg, set, &mut ws, 1)
+    spar_gw_with_workspace(p, cost, cfg, set, &mut ws)
 }
 
 /// Algorithm 2 on the shared [`SparCore` engine](super::core): steps 4–8
 /// are the [`Engine`] outer loop with the [`Balanced`] marginal strategy.
-/// `ws` is reused across calls (the coordinator keeps one per worker);
-/// `threads` row-chunks the O(s²) cost kernel (1 = serial, results are
-/// identical for every thread count).
+/// `ws` is reused across calls (the coordinator keeps one per worker).
+/// The O(s²) cost kernel and the inner Sinkhorn run on the crate-wide
+/// persistent pool (results are identical for every thread count).
 pub fn spar_gw_with_workspace(
     p: &GwProblem,
     cost: GroundCost,
     cfg: &SparGwConfig,
     set: &SampledSet,
     ws: &mut Workspace,
-    threads: usize,
 ) -> SparGwResult {
     // Pre-gather the relation values touched by S (O(s²), once).
     let ctx = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, cost);
@@ -127,7 +126,6 @@ pub fn spar_gw_with_workspace(
         ctx: &ctx,
         outer_iters: cfg.outer_iters,
         tol: cfg.tol,
-        threads,
     };
     let mut strategy =
         Balanced { epsilon: cfg.epsilon, reg: cfg.reg, inner_iters: cfg.inner_iters };
@@ -150,7 +148,6 @@ pub fn spar_gw_with_workspace_f32(
     cfg: &SparGwConfig,
     set: &SampledSet,
     ws: &mut Workspace,
-    threads: usize,
 ) -> SparGwResult {
     let ctx = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, cost);
     let a32: Vec<f32> = p.a.iter().map(|&x| x as f32).collect();
@@ -164,7 +161,6 @@ pub fn spar_gw_with_workspace_f32(
         ctx: &ctx,
         outer_iters: cfg.outer_iters,
         tol: cfg.tol,
-        threads,
     };
     let mut strategy =
         Balanced { epsilon: cfg.epsilon, reg: cfg.reg, inner_iters: cfg.inner_iters };
@@ -181,8 +177,6 @@ pub struct SparGwSolver {
     pub cost: GroundCost,
     /// Algorithm-2 parameters.
     pub cfg: SparGwConfig,
-    /// Threads row-chunking the O(s²) cost kernel (1 = serial).
-    pub threads: usize,
     /// Kernel precision: `F64` (default, bit-identical to the historical
     /// path) or `F32` (mixed precision — the sampling factors, coupling
     /// updates and inner Sinkhorn run at half width; the final ĜW, plan
@@ -203,7 +197,6 @@ impl SparGwSolver {
                 shrink: o.f64("shrink", base.shrink)?,
                 tol: o.f64("tol", base.tol)?,
             },
-            threads: o.usize("threads", base.threads)?,
             precision: o.precision(base.precision)?,
         })
     }
@@ -296,10 +289,8 @@ impl SparGwSolver {
     ) -> Result<SolveReport> {
         let t1 = Instant::now();
         let r = match self.precision {
-            Precision::F64 => spar_gw_with_workspace(p, self.cost, &self.cfg, set, ws, self.threads),
-            Precision::F32 => {
-                spar_gw_with_workspace_f32(p, self.cost, &self.cfg, set, ws, self.threads)
-            }
+            Precision::F64 => spar_gw_with_workspace(p, self.cost, &self.cfg, set, ws),
+            Precision::F32 => spar_gw_with_workspace_f32(p, self.cost, &self.cfg, set, ws),
         };
         Ok(SolveReport {
             solver: self.name(),
@@ -321,22 +312,12 @@ impl SparGwSolver {
     ) -> Result<SolveReport> {
         let t1 = Instant::now();
         let r = match self.precision {
-            Precision::F64 => super::spar_fgw::spar_fgw_with_workspace(
-                p,
-                self.cost,
-                &self.cfg,
-                set,
-                ws,
-                self.threads,
-            ),
-            Precision::F32 => super::spar_fgw::spar_fgw_with_workspace_f32(
-                p,
-                self.cost,
-                &self.cfg,
-                set,
-                ws,
-                self.threads,
-            ),
+            Precision::F64 => {
+                super::spar_fgw::spar_fgw_with_workspace(p, self.cost, &self.cfg, set, ws)
+            }
+            Precision::F32 => {
+                super::spar_fgw::spar_fgw_with_workspace_f32(p, self.cost, &self.cfg, set, ws)
+            }
         };
         Ok(SolveReport {
             solver: self.name(),

@@ -147,7 +147,7 @@ pub fn spar_ugw_with_set(
     set: &SampledSet,
 ) -> SparUgwResult {
     let mut ws = Workspace::new();
-    spar_ugw_with_workspace(p, cost, cfg, set, &mut ws, 1)
+    spar_ugw_with_workspace(p, cost, cfg, set, &mut ws)
 }
 
 /// Algorithm 3 on the shared [`SparCore` engine](super::core): steps 6–11
@@ -160,7 +160,6 @@ pub fn spar_ugw_with_workspace(
     cfg: &SparUgwConfig,
     set: &SampledSet,
     ws: &mut Workspace,
-    threads: usize,
 ) -> SparUgwResult {
     let ctx = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, cost);
     let eng = Engine {
@@ -172,7 +171,6 @@ pub fn spar_ugw_with_workspace(
         ctx: &ctx,
         outer_iters: cfg.ugw.outer_iters,
         tol: cfg.ugw.tol,
-        threads,
     };
     let mut strategy =
         Unbalanced::new(cfg.ugw.lambda, cfg.ugw.epsilon, cfg.ugw.inner_iters, p.a, p.b);
@@ -197,7 +195,6 @@ pub fn spar_ugw_with_workspace_f32(
     cfg: &SparUgwConfig,
     set: &SampledSet,
     ws: &mut Workspace,
-    threads: usize,
 ) -> SparUgwResult {
     let ctx = SparseCostContext::new(p.cx, p.cy, &set.rows, &set.cols, cost);
     let a32: Vec<f32> = p.a.iter().map(|&x| x as f32).collect();
@@ -211,7 +208,6 @@ pub fn spar_ugw_with_workspace_f32(
         ctx: &ctx,
         outer_iters: cfg.ugw.outer_iters,
         tol: cfg.ugw.tol,
-        threads,
     };
     let mut strategy =
         Unbalanced::new(cfg.ugw.lambda, cfg.ugw.epsilon, cfg.ugw.inner_iters, p.a, p.b);
@@ -233,8 +229,6 @@ pub struct SparUgwSolver {
     pub cost: GroundCost,
     /// Algorithm-3 parameters.
     pub cfg: SparUgwConfig,
-    /// Threads row-chunking the O(s²) cost kernel (1 = serial).
-    pub threads: usize,
     /// Kernel precision for the engine loop (`f64` default; `f32` runs
     /// the kernel build and inner solver at half width). The Eq. (9)
     /// sampler is dense O(mn) preprocessing and stays f64 either way.
@@ -256,7 +250,6 @@ impl SparUgwSolver {
                 sample_size: o.usize("s", base.sample_size)?,
                 shrink: o.f64("shrink", base.shrink)?,
             },
-            threads: o.usize("threads", base.threads)?,
             precision: o.precision(base.precision)?,
         })
     }
@@ -273,12 +266,8 @@ impl GwSolver for SparUgwSolver {
         let sample_seconds = t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
         let r = match self.precision {
-            Precision::F64 => {
-                spar_ugw_with_workspace(p, self.cost, &self.cfg, &set, ws, self.threads)
-            }
-            Precision::F32 => {
-                spar_ugw_with_workspace_f32(p, self.cost, &self.cfg, &set, ws, self.threads)
-            }
+            Precision::F64 => spar_ugw_with_workspace(p, self.cost, &self.cfg, &set, ws),
+            Precision::F32 => spar_ugw_with_workspace_f32(p, self.cost, &self.cfg, &set, ws),
         };
         Ok(SolveReport {
             solver: self.name(),

@@ -16,32 +16,43 @@
 use super::cost::GroundCost;
 use crate::kernel::Scalar;
 use crate::linalg::Mat;
+use crate::runtime::pool::pool;
 
 /// Generic tensor product: `C(T)[i,j] = Σ_{i',j'} L(Cx[i,i'], Cy[j,j']) T[i',j']`.
 /// O(m²n²) time — use only for validation and the dense ℓ1 baselines.
+/// Parallel over output-row chunks (each `(i, j)` keeps its serial
+/// reduction order, so results are thread-count-free).
 pub fn tensor_product_generic(cx: &Mat, cy: &Mat, t: &Mat, cost: GroundCost) -> Mat {
     let m = cx.rows();
     let n = cy.rows();
     assert_eq!(t.shape(), (m, n));
     let mut out = Mat::zeros(m, n);
-    for i in 0..m {
-        let cx_row = cx.row(i);
-        for j in 0..n {
-            let cy_row = cy.row(j);
-            let mut acc = 0.0;
-            for ip in 0..m {
-                let x = cx_row[ip];
-                let t_row = t.row(ip);
-                // Inner loop over j' — contiguous in both t and cy_row.
-                let mut s = 0.0;
-                for jp in 0..n {
-                    s += cost.eval(x, cy_row[jp]) * t_row[jp];
-                }
-                acc += s;
-            }
-            out[(i, j)] = acc;
-        }
+    if m == 0 || n == 0 {
+        return out;
     }
+    // Each output row costs m·n cost-evals; a single row is almost
+    // always past the grain, so chunk at one row minimum.
+    pool().for_each_row_chunk_mut(out.data_mut(), n, 1, |orows, range, _| {
+        for (local, i) in range.enumerate() {
+            let cx_row = cx.row(i);
+            let orow = &mut orows[local * n..(local + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let cy_row = cy.row(j);
+                let mut acc = 0.0;
+                for ip in 0..m {
+                    let x = cx_row[ip];
+                    let t_row = t.row(ip);
+                    // Inner loop over j' — contiguous in both t and cy_row.
+                    let mut s = 0.0;
+                    for jp in 0..n {
+                        s += cost.eval(x, cy_row[jp]) * t_row[jp];
+                    }
+                    acc += s;
+                }
+                *o = acc;
+            }
+        }
+    });
     out
 }
 
@@ -113,38 +124,55 @@ pub struct SparseCostContext {
     s: usize,
 }
 
+/// Minimum gathered entries per parallel chunk of the O(s²) loops (the
+/// cost-row product and the context build): each output row touches `s`
+/// gathered values, so chunks hold at least `2^14 / s` rows. Measured
+/// crossover on the bench box: below ~16k entries per chunk the pool's
+/// dispatch hand-off costs more than the chunk computes; the historical
+/// comment claimed the same number while the code gated on a flat 64
+/// rows per thread, which over-chunked small-`s` problems.
+pub const MIN_GATHERED_ENTRIES_PER_CHUNK: usize = 1 << 14;
+
 impl SparseCostContext {
     /// Gather the relation values touched by the index set `S` and apply
     /// the ground cost. O(s²) time and memory — the same order as one
-    /// sparse cost product.
+    /// sparse cost product, and (with the dense Eq. (5) factor build)
+    /// the dominant preprocessing phase for large inputs; runs parallel
+    /// over row chunks on the crate-wide pool (each row is an
+    /// independent gather, so results are thread-count-free).
     pub fn new(cx: &Mat, cy: &Mat, idx_i: &[usize], idx_j: &[usize], cost: GroundCost) -> Self {
         assert_eq!(idx_i.len(), idx_j.len());
         let s = idx_i.len();
         let mut l_g = vec![0f32; s * s];
-        for l in 0..s {
-            let cx_row = cx.row(idx_i[l]);
-            let cy_row = cy.row(idx_j[l]);
-            let out = &mut l_g[l * s..(l + 1) * s];
-            // Branch-free specializations vectorize; the generic path
-            // calls through eval().
-            match cost {
-                GroundCost::L1 => {
-                    for lp in 0..s {
-                        out[lp] = (cx_row[idx_i[lp]] - cy_row[idx_j[lp]]).abs() as f32;
+        if s > 0 {
+            let min_rows = MIN_GATHERED_ENTRIES_PER_CHUNK.div_ceil(s);
+            pool().for_each_row_chunk_mut(&mut l_g, s, min_rows, |rows_chunk, range, _| {
+                for (local, l) in range.enumerate() {
+                    let cx_row = cx.row(idx_i[l]);
+                    let cy_row = cy.row(idx_j[l]);
+                    let out = &mut rows_chunk[local * s..(local + 1) * s];
+                    // Branch-free specializations vectorize; the generic
+                    // path calls through eval().
+                    match cost {
+                        GroundCost::L1 => {
+                            for lp in 0..s {
+                                out[lp] = (cx_row[idx_i[lp]] - cy_row[idx_j[lp]]).abs() as f32;
+                            }
+                        }
+                        GroundCost::L2 => {
+                            for lp in 0..s {
+                                let d = cx_row[idx_i[lp]] - cy_row[idx_j[lp]];
+                                out[lp] = (d * d) as f32;
+                            }
+                        }
+                        cost => {
+                            for lp in 0..s {
+                                out[lp] = cost.eval(cx_row[idx_i[lp]], cy_row[idx_j[lp]]) as f32;
+                            }
+                        }
                     }
                 }
-                GroundCost::L2 => {
-                    for lp in 0..s {
-                        let d = cx_row[idx_i[lp]] - cy_row[idx_j[lp]];
-                        out[lp] = (d * d) as f32;
-                    }
-                }
-                cost => {
-                    for lp in 0..s {
-                        out[lp] = cost.eval(cx_row[idx_i[lp]], cy_row[idx_j[lp]]) as f32;
-                    }
-                }
-            }
+            });
         }
         SparseCostContext { l_g, s }
     }
@@ -192,27 +220,22 @@ impl SparseCostContext {
         self.fill_cost_rows(t_vals, out, 0);
     }
 
-    /// Row-chunked parallel cost product (`std::thread::scope`, same
-    /// pattern as `coordinator/scheduler.rs`). Each thread owns a disjoint
-    /// chunk of output rows over the shared read-only cost block, so the
-    /// result is bit-identical to the serial path for every thread count.
-    /// Falls back to the serial path when `threads ≤ 1` or the problem is
-    /// too small to amortize thread spawn.
-    pub fn cost_values_into_threaded<S: Scalar>(&self, t_vals: &[S], out: &mut [S], threads: usize) {
+    /// Row-chunked parallel cost product on the crate-wide persistent
+    /// pool. Each chunk owns a disjoint range of output rows over the
+    /// shared read-only cost block, so the result is bit-identical to
+    /// the serial path for every thread count. Gated on **gathered
+    /// entries per chunk**: a chunk of `r` rows streams `r·s` gathered
+    /// values, and chunks below [`MIN_GATHERED_ENTRIES_PER_CHUNK`]
+    /// (~2^14, the measured pool-dispatch crossover) run inline serial.
+    pub fn cost_values_into_threaded<S: Scalar>(&self, t_vals: &[S], out: &mut [S]) {
         assert_eq!(t_vals.len(), self.s);
         assert_eq!(out.len(), self.s);
-        // Below ~2^14 gathered entries per thread the spawn cost dominates.
-        const MIN_ROWS_PER_THREAD: usize = 64;
-        let usable = threads.min(self.s / MIN_ROWS_PER_THREAD.max(1));
-        if usable <= 1 {
-            self.fill_cost_rows(t_vals, out, 0);
+        if self.s == 0 {
             return;
         }
-        let chunk = self.s.div_ceil(usable);
-        std::thread::scope(|scope| {
-            for (ci, chunk_out) in out.chunks_mut(chunk).enumerate() {
-                scope.spawn(move || self.fill_cost_rows(t_vals, chunk_out, ci * chunk));
-            }
+        let min_rows = MIN_GATHERED_ENTRIES_PER_CHUNK.div_ceil(self.s);
+        pool().for_each_chunk_mut(out, min_rows, |chunk, range, _| {
+            self.fill_cost_rows(t_vals, chunk, range.start);
         });
     }
 
@@ -399,10 +422,12 @@ mod tests {
         let t_vals: Vec<f64> = (0..s).map(|_| rng.f64()).collect();
         let ctx = SparseCostContext::new(&cx, &cy, &idx_i, &idx_j, GroundCost::L1);
         let serial = ctx.cost_values(&t_vals);
-        for threads in [1usize, 2, 3, 7] {
-            let mut out = vec![0.0; s];
-            ctx.cost_values_into_threaded(&t_vals, &mut out, threads);
-            assert_eq!(out, serial, "threads = {threads}");
+        for limit in [1usize, 2, 3, 7] {
+            crate::runtime::pool::with_thread_limit(limit, || {
+                let mut out = vec![0.0; s];
+                ctx.cost_values_into_threaded(&t_vals, &mut out);
+                assert_eq!(out, serial, "thread limit = {limit}");
+            });
         }
         // energy_with matches energy exactly.
         let mut scratch = vec![0.0; s];

@@ -15,11 +15,23 @@
 //!   `F32_BLOCK` elements and folds each block into an f64 total, so the
 //!   f32 rounding never compounds across more than one block.
 //!
+//! **Parallelism.** The bulk kernels (matmul, matvec, the transposed
+//! sweeps, gather) run on the crate-wide persistent pool
+//! ([`crate::runtime::pool`]) when the work exceeds
+//! [`pool::PAR_GRAIN`](crate::runtime::pool::PAR_GRAIN) operations per
+//! chunk, chunked over *output* coordinates so every chunk writes a
+//! disjoint slice. The per-output operation order is exactly the serial
+//! order (rows keep their dot schedule; the transposed sweep keeps its
+//! ascending-`i` axpy order restricted to the chunk's columns), so
+//! results are **bit-identical at every thread count** — parallelism is
+//! a pure throughput knob, enforced by the determinism suite.
+//!
 //! Numerical contract: instantiated at `S = f64`, every function here
 //! reproduces the historical `Mat` loops operation-for-operation
 //! (verified by the golden solver tests).
 
 use super::scalar::Scalar;
+use crate::runtime::pool::{pool, PAR_GRAIN};
 
 /// k-panel width of the blocked ikj matmul.
 pub const MATMUL_BK: usize = 64;
@@ -58,64 +70,85 @@ pub fn dot<S: Scalar>(a: &[S], b: &[S]) -> S::Accum {
 /// Cache-blocked ikj matmul: `out[m×n] = a[m×k] · b[k×n]`, all row-major.
 /// `out` must be zero-filled by the caller. Zero `a` entries are skipped
 /// (the historical sparsity shortcut, part of the bit-identity contract).
+/// Parallel over i-row blocks: each chunk runs the full k-panel sweep for
+/// its rows, so every output row sees the serial operation order.
 pub fn matmul_into<S: Scalar>(m: usize, k: usize, n: usize, a: &[S], b: &[S], out: &mut [S]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
-    for kb in (0..k).step_by(MATMUL_BK) {
-        let kend = (kb + MATMUL_BK).min(k);
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            for kk in kb..kend {
-                let aik = arow[kk];
-                if aik == S::ZERO {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                let orow = &mut out[i * n..(i + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += aik * bv;
+    if m == 0 || n == 0 {
+        return;
+    }
+    // Per-row work is k·n mul-adds; chunks carry at least PAR_GRAIN of it.
+    let min_rows = PAR_GRAIN.div_ceil((k * n).max(1));
+    pool().for_each_row_chunk_mut(out, n, min_rows, |orows, range, _| {
+        for kb in (0..k).step_by(MATMUL_BK) {
+            let kend = (kb + MATMUL_BK).min(k);
+            for (local, i) in range.clone().enumerate() {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut orows[local * n..(local + 1) * n];
+                for kk in kb..kend {
+                    let aik = arow[kk];
+                    if aik == S::ZERO {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += aik * bv;
+                    }
                 }
             }
         }
-    }
+    });
 }
 
 /// Row-major matvec `y[i] = Σ_j a[i,j]·x[j]`, accumulating each row dot
-/// in `S::Accum` via [`dot`].
+/// in `S::Accum` via [`dot`]. Parallel over output-row chunks (each row's
+/// dot schedule is untouched — bit-identical at every thread count).
 pub fn matvec_into<S: Scalar>(rows: usize, cols: usize, a: &[S], x: &[S], y: &mut [S]) {
     debug_assert_eq!(a.len(), rows * cols);
     debug_assert_eq!(x.len(), cols);
     debug_assert_eq!(y.len(), rows);
-    for i in 0..rows {
-        y[i] = S::narrow(dot(&a[i * cols..(i + 1) * cols], x));
-    }
+    let min_rows = PAR_GRAIN.div_ceil(cols.max(1));
+    pool().for_each_chunk_mut(y, min_rows, |ychunk, range, _| {
+        for (o, i) in ychunk.iter_mut().zip(range) {
+            *o = S::narrow(dot(&a[i * cols..(i + 1) * cols], x));
+        }
+    });
 }
 
 /// Transposed matvec `y = aᵀ·x` by row-streaming axpy at storage width
-/// (skips zero `x` entries — the historical shortcut). For the
-/// accumulator-rule form see [`matvec_t_wide`].
+/// (skips zero `x` entries — the historical shortcut). Parallel over
+/// output-*column* chunks: each chunk streams every row's sub-slice for
+/// its columns, preserving the serial ascending-`i` accumulation order
+/// per output. For the accumulator-rule form see [`matvec_t_wide`].
 pub fn matvec_t_into<S: Scalar>(rows: usize, cols: usize, a: &[S], x: &[S], y: &mut [S]) {
     debug_assert_eq!(a.len(), rows * cols);
     debug_assert_eq!(x.len(), rows);
     debug_assert_eq!(y.len(), cols);
-    for v in y.iter_mut() {
-        *v = S::ZERO;
-    }
-    for (i, &xi) in x.iter().enumerate() {
-        if xi == S::ZERO {
-            continue;
+    let min_cols = PAR_GRAIN.div_ceil(rows.max(1));
+    pool().for_each_chunk_mut(y, min_cols, |ychunk, range, _| {
+        for v in ychunk.iter_mut() {
+            *v = S::ZERO;
         }
-        for (o, &av) in y.iter_mut().zip(&a[i * cols..(i + 1) * cols]) {
-            *o += xi * av;
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == S::ZERO {
+                continue;
+            }
+            let arow = &a[i * cols + range.start..i * cols + range.end];
+            for (o, &av) in ychunk.iter_mut().zip(arow) {
+                *o += xi * av;
+            }
         }
-    }
+    });
 }
 
 /// [`matvec_t_into`] with the scatter accumulated in the f64 scratch
 /// `wide` (length `cols`) and narrowed into `y` — the accumulator rule
 /// for the transposed sweep. Products are formed at storage width;
-/// identical bits to [`matvec_t_into`] at `S = f64`.
+/// identical bits to [`matvec_t_into`] at `S = f64`. Parallel over
+/// column chunks like [`matvec_t_into`] (`wide` and `y` are chunked at
+/// the same ranges).
 pub fn matvec_t_wide<S: Scalar>(
     rows: usize,
     cols: usize,
@@ -128,23 +161,34 @@ pub fn matvec_t_wide<S: Scalar>(
     debug_assert_eq!(x.len(), rows);
     debug_assert_eq!(y.len(), cols);
     debug_assert_eq!(wide.len(), cols);
-    wide.fill(0.0);
-    for (i, &xi) in x.iter().enumerate() {
-        if xi == S::ZERO {
-            continue;
+    use crate::runtime::pool::SendPtr;
+    let pw = SendPtr(wide.as_mut_ptr());
+    pool().for_each_chunk_mut(y, PAR_GRAIN.div_ceil(rows.max(1)), |ychunk, range, _| {
+        // Safety: chunk ranges are disjoint; `wide` is sliced at exactly
+        // the same ranges as `y`.
+        let wchunk = unsafe {
+            std::slice::from_raw_parts_mut(pw.get().add(range.start), range.len())
+        };
+        wchunk.fill(0.0);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == S::ZERO {
+                continue;
+            }
+            let arow = &a[i * cols + range.start..i * cols + range.end];
+            for (o, &av) in wchunk.iter_mut().zip(arow) {
+                *o += (xi * av).to_f64();
+            }
         }
-        for (o, &av) in wide.iter_mut().zip(&a[i * cols..(i + 1) * cols]) {
-            *o += (xi * av).to_f64();
+        for (o, &w) in ychunk.iter_mut().zip(wchunk.iter()) {
+            *o = S::from_f64(w);
         }
-    }
-    for (o, &w) in y.iter_mut().zip(wide.iter()) {
-        *o = S::from_f64(w);
-    }
+    });
 }
 
 /// Row/column gather: `out[oi, oj] = a[rows[oi], cols[oj]]` — the
 /// submatrix extraction behind `Mat::gather`, streaming whole source
-/// rows.
+/// rows. Parallel over output-row chunks (pure copies, trivially
+/// order-free).
 pub fn gather_into<S: Scalar>(
     a: &[S],
     a_cols: usize,
@@ -154,13 +198,19 @@ pub fn gather_into<S: Scalar>(
 ) {
     debug_assert_eq!(out.len(), rows.len() * cols.len());
     let w = cols.len();
-    for (oi, &i) in rows.iter().enumerate() {
-        let src = &a[i * a_cols..(i + 1) * a_cols];
-        let dst = &mut out[oi * w..(oi + 1) * w];
-        for (oj, &j) in cols.iter().enumerate() {
-            dst[oj] = src[j];
-        }
+    if rows.is_empty() || w == 0 {
+        return;
     }
+    let min_rows = PAR_GRAIN.div_ceil(w);
+    pool().for_each_row_chunk_mut(out, w, min_rows, |orows, range, _| {
+        for (local, oi) in range.enumerate() {
+            let src = &a[rows[oi] * a_cols..(rows[oi] + 1) * a_cols];
+            let dst = &mut orows[local * w..(local + 1) * w];
+            for (oj, &j) in cols.iter().enumerate() {
+                dst[oj] = src[j];
+            }
+        }
+    });
 }
 
 /// The f64 instance of the gathered s×s cost-row reduction: four f64
@@ -283,6 +333,52 @@ mod tests {
         let d32 = gathered_dot_f32(&row, &t32);
         let rel = (d64 - d32).abs() / d64.abs().max(1e-12);
         assert!(rel < 1e-4, "f32 gathered dot drifted: {d32} vs {d64} (rel {rel})");
+    }
+
+    #[test]
+    fn dense_kernels_bit_identical_across_thread_limits() {
+        use crate::runtime::pool::with_thread_limit;
+        // Sizes above the parallel thresholds so the pool actually engages.
+        let (m, k, n) = (257usize, 129, 131);
+        let a: Vec<f64> = (0..m * k).map(|i| ((i as f64) * 0.13).sin()).collect();
+        let b: Vec<f64> = (0..k * n).map(|i| ((i as f64) * 0.29).cos()).collect();
+        let x: Vec<f64> = (0..k).map(|i| ((i as f64) * 0.7).sin()).collect();
+        let xt: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.3).cos()).collect();
+        let run = |limit: usize| {
+            with_thread_limit(limit, || {
+                let mut mm = vec![0.0f64; m * n];
+                matmul_into(m, k, n, &a, &b, &mut mm);
+                let mut mv = vec![0.0f64; m];
+                matvec_into(m, k, &a, &x, &mut mv);
+                let mut mt = vec![0.0f64; k];
+                matvec_t_into(m, k, &a, &xt, &mut mt);
+                let mut wide = vec![0.0f64; k];
+                let mut mtw = vec![0.0f64; k];
+                matvec_t_wide(m, k, &a, &xt, &mut wide, &mut mtw);
+                (mm, mv, mt, mtw)
+            })
+        };
+        let reference = run(1);
+        for limit in [2usize, 8] {
+            let got = run(limit);
+            for (which, (r, g)) in [
+                (&reference.0, &got.0),
+                (&reference.1, &got.1),
+                (&reference.2, &got.2),
+                (&reference.3, &got.3),
+            ]
+            .into_iter()
+            .enumerate()
+            {
+                for (x, y) in r.iter().zip(g.iter()) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "kernel {which} at limit {limit}: {x} vs {y}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

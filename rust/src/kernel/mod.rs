@@ -23,10 +23,18 @@
 //! * **Blocking parameters** live next to the kernels they tune
 //!   ([`dense::MATMUL_BK`], [`dense::F32_LANES`], [`dense::F32_BLOCK`])
 //!   and are documented in DESIGN.md §kernel layer.
+//! * **Pool parallelism.** Every bulk kernel chunks over *output*
+//!   coordinates on the crate-wide persistent pool
+//!   ([`crate::runtime::pool`]) once the work clears the per-kernel
+//!   grain (derived from [`crate::runtime::pool::PAR_GRAIN`]). Chunk
+//!   boundaries are a pure function of the problem shape and every
+//!   output keeps its serial operation order, so kernels are
+//!   bit-identical at any `SPARGW_THREADS` (see DESIGN.md §threading
+//!   model).
 //!
-//! This layer is deliberately dependency-free and slice-oriented so a
-//! future SIMD or accelerator backend can replace individual kernels
-//! behind the same signatures.
+//! This layer is deliberately slice-oriented so a future SIMD or
+//! accelerator backend can replace individual kernels behind the same
+//! signatures.
 
 pub mod dense;
 pub mod ops;

@@ -11,20 +11,32 @@
 //! * non-finite ratios (pattern-empty rows/columns) are zeroed;
 //! * the unbalanced power update zeroes non-positive/non-finite
 //!   denominators before exponentiation.
+//!
+//! The `*_into` updates are elementwise (every output depends on one
+//! input coordinate), so they chunk over output ranges on the crate-wide
+//! pool above [`PAR_GRAIN`] elements — trivially bit-identical at any
+//! thread count.
 
 use super::scalar::Scalar;
+use crate::runtime::pool::{pool, PAR_GRAIN};
 
 /// One balanced scaling update: `out = target ⊘ denom` with `0 ⊘ x := 0`
 /// and non-finite ratios zeroed (the guarded form the sparse Sinkhorn
-/// uses on subsampled patterns).
+/// uses on subsampled patterns). Parallel over output chunks.
 #[inline]
 pub fn scaling_update_into<S: Scalar>(target: &[S], denom: &[S], out: &mut [S]) {
     debug_assert_eq!(target.len(), denom.len());
     debug_assert_eq!(target.len(), out.len());
-    for ((&t, &d), o) in target.iter().zip(denom).zip(out.iter_mut()) {
-        let q = if t == S::ZERO { S::ZERO } else { t / d };
-        *o = if q.is_finite() { q } else { S::ZERO };
-    }
+    pool().for_each_chunk_mut(out, PAR_GRAIN, |ochunk, range, _| {
+        for ((&t, &d), o) in target[range.clone()]
+            .iter()
+            .zip(&denom[range])
+            .zip(ochunk.iter_mut())
+        {
+            let q = if t == S::ZERO { S::ZERO } else { t / d };
+            *o = if q.is_finite() { q } else { S::ZERO };
+        }
+    });
 }
 
 /// Elementwise `a ⊘ b` with `0 ⊘ x := 0` (no finiteness guard — the
@@ -39,18 +51,24 @@ pub fn safe_div<S: Scalar>(a: &[S], b: &[S]) -> Vec<S> {
 
 /// The unbalanced scaling update `out = (target ⊘ denom)^expo` with
 /// non-positive / non-finite denominators zeroed (Chizat et al. 2018
-/// exponent λ̄/(λ̄+ε̄)).
+/// exponent λ̄/(λ̄+ε̄)). Parallel over output chunks.
 #[inline]
 pub fn pow_update_into<S: Scalar>(target: &[S], denom: &[S], expo: S, out: &mut [S]) {
     debug_assert_eq!(target.len(), denom.len());
     debug_assert_eq!(target.len(), out.len());
-    for ((&t, &d), o) in target.iter().zip(denom).zip(out.iter_mut()) {
-        *o = if t == S::ZERO || d <= S::ZERO || !d.is_finite() {
-            S::ZERO
-        } else {
-            (t / d).powf(expo)
-        };
-    }
+    pool().for_each_chunk_mut(out, PAR_GRAIN, |ochunk, range, _| {
+        for ((&t, &d), o) in target[range.clone()]
+            .iter()
+            .zip(&denom[range])
+            .zip(ochunk.iter_mut())
+        {
+            *o = if t == S::ZERO || d <= S::ZERO || !d.is_finite() {
+                S::ZERO
+            } else {
+                (t / d).powf(expo)
+            };
+        }
+    });
 }
 
 #[cfg(test)]

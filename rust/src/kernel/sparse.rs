@@ -7,25 +7,43 @@
 //!
 //! Two accumulation disciplines coexist, both per the accumulator rule:
 //!
-//! * **Row-local gather** ([`spmv`], [`spmm`]) accumulates each output
-//!   coordinate in a `S::Accum` register and narrows once per output —
-//!   free, no scratch needed.
-//! * **Entry-order scatter** ([`spmv_t_wide`], [`row_sums_wide`],
-//!   [`col_sums_wide`]) cannot keep per-output registers, so it scatters
-//!   widened products into a caller-provided f64 buffer and narrows at
-//!   the end. For `S = f64` the widen/narrow are identities and the
-//!   result is bit-identical to scattering in place.
+//! * **Output-local gather** ([`spmv`], [`spmm`], and the transposed /
+//!   marginal forms [`spmv_t_csc`], [`row_sums_csr`], [`col_sums_csc`])
+//!   accumulates each output coordinate in a register and narrows once
+//!   per output. Gather forms are the parallel ones: every output is
+//!   independent, so they chunk over output ranges on the crate-wide
+//!   pool with **bit-identical** results at every thread count.
+//! * **Entry-order scatter** ([`spmv_t`], [`row_sums`], [`col_sums`] and
+//!   their `_wide` variants) walks the entries once, scattering into the
+//!   output (or a wide f64 buffer). Scatter is inherently serial; it is
+//!   kept as the COO compatibility path (`Coo` delegates its f64 entry
+//!   loops here) and as the reference the gather forms are proven
+//!   bit-identical against.
 //!
-//! The plain in-storage scatter forms ([`spmv_t`], [`row_sums`],
-//! [`col_sums`]) are kept for the COO compatibility path (`Coo`
-//! delegates its f64 matvecs here; at `S = f64` scatter order and
-//! rounding match the historical COO loops exactly).
+//! The gather/scatter bit-identity is structural: the CSR/CSC slot
+//! orders are built by *stable* counting sorts over the entry list, so
+//! for every output coordinate the gather adds exactly the contributions
+//! the scatter would, in exactly the same (ascending-entry) order, at
+//! the same width. `gather_matches_scatter_bitwise` locks this in.
 
 use super::scalar::Scalar;
+use crate::runtime::pool::{pool, PAR_GRAIN};
+
+/// Minimum stored entries per parallel chunk of a sparse kernel (same
+/// ~32k-operations grain as the dense kernels; sparse ops are one
+/// mul-add per entry).
+const SPARSE_GRAIN: usize = PAR_GRAIN;
+
+/// Rows per chunk so an average chunk covers ~[`SPARSE_GRAIN`] entries.
+#[inline]
+fn min_rows_for(n_outputs: usize, nnz: usize) -> usize {
+    let avg = (nnz / n_outputs.max(1)).max(1);
+    SPARSE_GRAIN.div_ceil(avg)
+}
 
 /// `y = A·x` over a CSR structure: row-local accumulation in
 /// `S::Accum`, ascending entry order within each row (the COO/CSR
-/// bit-identity contract).
+/// bit-identity contract). Parallel over output-row chunks.
 pub fn spmv<S: Scalar>(
     row_ptr: &[u32],
     slot_col: &[u32],
@@ -36,19 +54,23 @@ pub fn spmv<S: Scalar>(
 ) {
     let nrows = row_ptr.len() - 1;
     debug_assert_eq!(y.len(), nrows);
-    for i in 0..nrows {
-        let lo = row_ptr[i] as usize;
-        let hi = row_ptr[i + 1] as usize;
-        let mut acc = S::Accum::default();
-        for slot in lo..hi {
-            acc = acc
-                + (vals[slot_src[slot] as usize] * x[slot_col[slot] as usize]).widen();
+    let min_rows = min_rows_for(nrows, slot_col.len());
+    pool().for_each_chunk_mut(y, min_rows, |ychunk, range, _| {
+        for (o, i) in ychunk.iter_mut().zip(range) {
+            let lo = row_ptr[i] as usize;
+            let hi = row_ptr[i + 1] as usize;
+            let mut acc = S::Accum::default();
+            for slot in lo..hi {
+                acc = acc
+                    + (vals[slot_src[slot] as usize] * x[slot_col[slot] as usize]).widen();
+            }
+            *o = S::narrow(acc);
         }
-        y[i] = S::narrow(acc);
-    }
+    });
 }
 
-/// `y = Aᵀ·x` by entry-order scatter at storage width (COO-compatible).
+/// `y = Aᵀ·x` by entry-order scatter at storage width (COO-compatible,
+/// serial — the reference for [`spmv_t_csc`]).
 pub fn spmv_t<S: Scalar>(rows_e: &[u32], cols_e: &[u32], vals: &[S], x: &[S], y: &mut [S]) {
     for v in y.iter_mut() {
         *v = S::ZERO;
@@ -58,9 +80,40 @@ pub fn spmv_t<S: Scalar>(rows_e: &[u32], cols_e: &[u32], vals: &[S], x: &[S], y:
     }
 }
 
+/// `y = Aᵀ·x` over the column structure (CSC slot order): per output
+/// column, contributions are gathered **in ascending entry order** — the
+/// exact sequence [`spmv_t`]'s scatter applies to that column — at
+/// storage width, so the result is bit-identical to the scatter while
+/// being parallel over output-column chunks.
+pub fn spmv_t_csc<S: Scalar>(
+    col_ptr: &[u32],
+    cslot_src: &[u32],
+    rows_e: &[u32],
+    vals: &[S],
+    x: &[S],
+    y: &mut [S],
+) {
+    let ncols = col_ptr.len() - 1;
+    debug_assert_eq!(y.len(), ncols);
+    let min_cols = min_rows_for(ncols, cslot_src.len());
+    pool().for_each_chunk_mut(y, min_cols, |ychunk, range, _| {
+        for (o, j) in ychunk.iter_mut().zip(range) {
+            let lo = col_ptr[j] as usize;
+            let hi = col_ptr[j + 1] as usize;
+            let mut acc = S::ZERO;
+            for slot in lo..hi {
+                let e = cslot_src[slot] as usize;
+                acc += vals[e] * x[rows_e[e] as usize];
+            }
+            *o = acc;
+        }
+    });
+}
+
 /// `y = Aᵀ·x` with wide scatter: products are formed at storage width,
 /// widened, accumulated in the f64 scratch `wide`, then narrowed into
-/// `y`. Identical values to [`spmv_t`] at `S = f64`.
+/// `y`. Identical values to [`spmv_t`] at `S = f64`. Serial
+/// (COO-compatible reference for [`spmv_t_wide_csc`]).
 pub fn spmv_t_wide<S: Scalar>(
     rows_e: &[u32],
     cols_e: &[u32],
@@ -79,7 +132,38 @@ pub fn spmv_t_wide<S: Scalar>(
     }
 }
 
-/// Row sums (marginal `T·1`) at storage width, entry-order scatter.
+/// [`spmv_t_csc`] with the per-column accumulation carried in f64 (the
+/// accumulator rule) — bit-identical to [`spmv_t_wide`]'s scatter, and
+/// parallel over output-column chunks. The caller's `wide` scratch is no
+/// longer needed (the accumulator lives in a register); the signature
+/// stays at the value level for the structure wrappers to adapt.
+pub fn spmv_t_wide_csc<S: Scalar>(
+    col_ptr: &[u32],
+    cslot_src: &[u32],
+    rows_e: &[u32],
+    vals: &[S],
+    x: &[S],
+    y: &mut [S],
+) {
+    let ncols = col_ptr.len() - 1;
+    debug_assert_eq!(y.len(), ncols);
+    let min_cols = min_rows_for(ncols, cslot_src.len());
+    pool().for_each_chunk_mut(y, min_cols, |ychunk, range, _| {
+        for (o, j) in ychunk.iter_mut().zip(range) {
+            let lo = col_ptr[j] as usize;
+            let hi = col_ptr[j + 1] as usize;
+            let mut acc = 0.0f64;
+            for slot in lo..hi {
+                let e = cslot_src[slot] as usize;
+                acc += (vals[e] * x[rows_e[e] as usize]).to_f64();
+            }
+            *o = S::from_f64(acc);
+        }
+    });
+}
+
+/// Row sums (marginal `T·1`) at storage width, entry-order scatter
+/// (serial COO reference for [`row_sums_csr`]).
 pub fn row_sums<S: Scalar>(rows_e: &[u32], vals: &[S], y: &mut [S]) {
     for v in y.iter_mut() {
         *v = S::ZERO;
@@ -89,7 +173,8 @@ pub fn row_sums<S: Scalar>(rows_e: &[u32], vals: &[S], y: &mut [S]) {
     }
 }
 
-/// Column sums (marginal `Tᵀ·1`) at storage width, entry-order scatter.
+/// Column sums (marginal `Tᵀ·1`) at storage width, entry-order scatter
+/// (serial COO reference for [`col_sums_csc`]).
 pub fn col_sums<S: Scalar>(cols_e: &[u32], vals: &[S], y: &mut [S]) {
     for v in y.iter_mut() {
         *v = S::ZERO;
@@ -99,9 +184,45 @@ pub fn col_sums<S: Scalar>(cols_e: &[u32], vals: &[S], y: &mut [S]) {
     }
 }
 
+/// Row sums gathered over the CSR slot order (ascending entry order per
+/// row — bit-identical to [`row_sums`]), parallel over row chunks. The
+/// `wide` flavour accumulates in f64 per the marginal-sum rule.
+pub fn row_sums_csr<S: Scalar>(row_ptr: &[u32], slot_src: &[u32], vals: &[S], y: &mut [S]) {
+    let nrows = row_ptr.len() - 1;
+    debug_assert_eq!(y.len(), nrows);
+    let min_rows = min_rows_for(nrows, slot_src.len());
+    pool().for_each_chunk_mut(y, min_rows, |ychunk, range, _| {
+        for (o, i) in ychunk.iter_mut().zip(range) {
+            let mut acc = S::ZERO;
+            for slot in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+                acc += vals[slot_src[slot] as usize];
+            }
+            *o = acc;
+        }
+    });
+}
+
+/// Column sums gathered over the CSC slot order (ascending entry order
+/// per column — bit-identical to [`col_sums`]), parallel over column
+/// chunks.
+pub fn col_sums_csc<S: Scalar>(col_ptr: &[u32], cslot_src: &[u32], vals: &[S], y: &mut [S]) {
+    let ncols = col_ptr.len() - 1;
+    debug_assert_eq!(y.len(), ncols);
+    let min_cols = min_rows_for(ncols, cslot_src.len());
+    pool().for_each_chunk_mut(y, min_cols, |ychunk, range, _| {
+        for (o, j) in ychunk.iter_mut().zip(range) {
+            let mut acc = S::ZERO;
+            for slot in col_ptr[j] as usize..col_ptr[j + 1] as usize {
+                acc += vals[cslot_src[slot] as usize];
+            }
+            *o = acc;
+        }
+    });
+}
+
 /// Row sums accumulated directly in f64 (the marginal-sum form the
 /// unbalanced engine uses: sums stay wide no matter the storage width).
-/// Identical to [`row_sums`] at `S = f64`.
+/// Identical to [`row_sums`] at `S = f64`. Serial scatter reference.
 pub fn row_sums_wide<S: Scalar>(rows_e: &[u32], vals: &[S], y: &mut [f64]) {
     y.fill(0.0);
     for k in 0..vals.len() {
@@ -110,6 +231,7 @@ pub fn row_sums_wide<S: Scalar>(rows_e: &[u32], vals: &[S], y: &mut [f64]) {
 }
 
 /// Column sums accumulated directly in f64; see [`row_sums_wide`].
+/// Serial scatter reference.
 pub fn col_sums_wide<S: Scalar>(cols_e: &[u32], vals: &[S], y: &mut [f64]) {
     y.fill(0.0);
     for k in 0..vals.len() {
@@ -117,10 +239,55 @@ pub fn col_sums_wide<S: Scalar>(cols_e: &[u32], vals: &[S], y: &mut [f64]) {
     }
 }
 
+/// [`row_sums_wide`] gathered over the CSR slot order — bit-identical,
+/// parallel over row chunks.
+pub fn row_sums_wide_csr<S: Scalar>(
+    row_ptr: &[u32],
+    slot_src: &[u32],
+    vals: &[S],
+    y: &mut [f64],
+) {
+    let nrows = row_ptr.len() - 1;
+    debug_assert_eq!(y.len(), nrows);
+    let min_rows = min_rows_for(nrows, slot_src.len());
+    pool().for_each_chunk_mut(y, min_rows, |ychunk, range, _| {
+        for (o, i) in ychunk.iter_mut().zip(range) {
+            let mut acc = 0.0f64;
+            for slot in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+                acc += vals[slot_src[slot] as usize].to_f64();
+            }
+            *o = acc;
+        }
+    });
+}
+
+/// [`col_sums_wide`] gathered over the CSC slot order — bit-identical,
+/// parallel over column chunks.
+pub fn col_sums_wide_csc<S: Scalar>(
+    col_ptr: &[u32],
+    cslot_src: &[u32],
+    vals: &[S],
+    y: &mut [f64],
+) {
+    let ncols = col_ptr.len() - 1;
+    debug_assert_eq!(y.len(), ncols);
+    let min_cols = min_rows_for(ncols, cslot_src.len());
+    pool().for_each_chunk_mut(y, min_cols, |ychunk, range, _| {
+        for (o, j) in ychunk.iter_mut().zip(range) {
+            let mut acc = 0.0f64;
+            for slot in col_ptr[j] as usize..col_ptr[j + 1] as usize {
+                acc += vals[cslot_src[slot] as usize].to_f64();
+            }
+            *o = acc;
+        }
+    });
+}
+
 /// CSR × dense row-major spmm: `out[m×n] += A[m×k] · b[k×n]` with `A` in
 /// CSR structure form. Streams whole rows of `b` per stored entry (the
 /// sparse analogue of the blocked ikj matmul). `out` must be
-/// zero-filled by the caller.
+/// zero-filled by the caller. Parallel over output-row chunks (each row
+/// keeps its serial slot order).
 pub fn spmm<S: Scalar>(
     row_ptr: &[u32],
     slot_col: &[u32],
@@ -132,21 +299,29 @@ pub fn spmm<S: Scalar>(
 ) {
     let nrows = row_ptr.len() - 1;
     debug_assert_eq!(out.len(), nrows * n);
-    for i in 0..nrows {
-        let lo = row_ptr[i] as usize;
-        let hi = row_ptr[i + 1] as usize;
-        let orow = &mut out[i * n..(i + 1) * n];
-        for slot in lo..hi {
-            let v = vals[slot_src[slot] as usize];
-            if v == S::ZERO {
-                continue;
-            }
-            let brow = &b[slot_col[slot] as usize * n..(slot_col[slot] as usize + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += v * bv;
+    if nrows == 0 || n == 0 {
+        return;
+    }
+    let avg = (slot_col.len() / nrows.max(1)).max(1);
+    let min_rows = SPARSE_GRAIN.div_ceil(avg * n);
+    pool().for_each_row_chunk_mut(out, n, min_rows, |orows, range, _| {
+        for (local, i) in range.enumerate() {
+            let lo = row_ptr[i] as usize;
+            let hi = row_ptr[i + 1] as usize;
+            let orow = &mut orows[local * n..(local + 1) * n];
+            for slot in lo..hi {
+                let v = vals[slot_src[slot] as usize];
+                if v == S::ZERO {
+                    continue;
+                }
+                let brow =
+                    &b[slot_col[slot] as usize * n..(slot_col[slot] as usize + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += v * bv;
+                }
             }
         }
-    }
+    });
 }
 
 #[cfg(test)]
@@ -157,6 +332,25 @@ mod tests {
     fn sample() -> (Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>) {
         // row_ptr, slot_col, slot_src, rows_e, cols_e
         (vec![0, 1, 3], vec![1, 0, 2], vec![0, 1, 2], vec![0, 1, 1], vec![1, 0, 2])
+    }
+
+    /// CSC structure (col_ptr, cslot_src) of an entry list via the same
+    /// stable counting sort `sparse::Csr` uses.
+    fn csc_of(ncols: usize, cols_e: &[u32]) -> (Vec<u32>, Vec<u32>) {
+        let mut col_ptr = vec![0u32; ncols + 1];
+        for &c in cols_e {
+            col_ptr[c as usize + 1] += 1;
+        }
+        for j in 0..ncols {
+            col_ptr[j + 1] += col_ptr[j];
+        }
+        let mut cursor: Vec<u32> = col_ptr[..ncols].to_vec();
+        let mut cslot_src = vec![0u32; cols_e.len()];
+        for (k, &c) in cols_e.iter().enumerate() {
+            cslot_src[cursor[c as usize] as usize] = k as u32;
+            cursor[c as usize] += 1;
+        }
+        (col_ptr, cslot_src)
     }
 
     #[test]
@@ -178,6 +372,71 @@ mod tests {
         for (a, b) in yt.iter().zip(&ytw) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn gather_matches_scatter_bitwise() {
+        // Random-ish pattern with duplicates and varied magnitudes: the
+        // CSC gather forms must reproduce the entry-order scatter exactly,
+        // bit for bit, at every thread limit.
+        use crate::runtime::pool::with_thread_limit;
+        let (m, n, nnz) = (37usize, 29usize, 500usize);
+        let rows_e: Vec<u32> = (0..nnz).map(|k| ((k * 7 + 3) % m) as u32).collect();
+        let cols_e: Vec<u32> = (0..nnz).map(|k| ((k * 13 + 1) % n) as u32).collect();
+        let vals: Vec<f64> = (0..nnz)
+            .map(|k| ((k as f64) * 0.61).sin() * 10f64.powi((k % 5) as i32 - 2))
+            .collect();
+        let x: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.17).cos() + 1.1).collect();
+        let (col_ptr, cslot_src) = csc_of(n, &cols_e);
+
+        let mut scatter = vec![0.0f64; n];
+        spmv_t(&rows_e, &cols_e, &vals, &x, &mut scatter);
+        let mut wide = vec![0.0f64; n];
+        let mut scatter_w = vec![0.0f64; n];
+        spmv_t_wide(&rows_e, &cols_e, &vals, &x, &mut wide, &mut scatter_w);
+        let mut cs = vec![0.0f64; n];
+        col_sums(&cols_e, &vals, &mut cs);
+        let mut csw = vec![0.0f64; n];
+        col_sums_wide(&cols_e, &vals, &mut csw);
+
+        for limit in [1usize, 2, 8] {
+            with_thread_limit(limit, || {
+                let mut gather = vec![0.0f64; n];
+                spmv_t_csc(&col_ptr, &cslot_src, &rows_e, &vals, &x, &mut gather);
+                let mut gather_w = vec![0.0f64; n];
+                spmv_t_wide_csc(&col_ptr, &cslot_src, &rows_e, &vals, &x, &mut gather_w);
+                let mut gcs = vec![0.0f64; n];
+                col_sums_csc(&col_ptr, &cslot_src, &vals, &mut gcs);
+                let mut gcsw = vec![0.0f64; n];
+                col_sums_wide_csc(&col_ptr, &cslot_src, &vals, &mut gcsw);
+                for j in 0..n {
+                    assert_eq!(scatter[j].to_bits(), gather[j].to_bits(), "spmv_t col {j}");
+                    assert_eq!(
+                        scatter_w[j].to_bits(),
+                        gather_w[j].to_bits(),
+                        "spmv_t_wide col {j}"
+                    );
+                    assert_eq!(cs[j].to_bits(), gcs[j].to_bits(), "col_sums col {j}");
+                    assert_eq!(csw[j].to_bits(), gcsw[j].to_bits(), "col_sums_wide col {j}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn row_gather_matches_row_scatter_bitwise() {
+        let (rp, _sc, ss, re, _ce) = sample();
+        let vals = [1.5f64, 2.5, 3.5];
+        let mut scatter = [0.0f64; 2];
+        row_sums(&re, &vals, &mut scatter);
+        let mut gather = [0.0f64; 2];
+        row_sums_csr(&rp, &ss, &vals, &mut gather);
+        assert_eq!(scatter, gather);
+        let mut sw = [0.0f64; 2];
+        row_sums_wide(&re, &vals, &mut sw);
+        let mut gw = [0.0f64; 2];
+        row_sums_wide_csr(&rp, &ss, &vals, &mut gw);
+        assert_eq!(sw, gw);
     }
 
     #[test]

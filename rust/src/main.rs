@@ -39,19 +39,26 @@ USAGE:
                   [--method spar-gw|egw|pga-gw|emd-gw|s-gwl|lr-gw|ae|sagrow|naive]
                   [--solver NAME] [--solver-opt k=v]...   # registry dispatch
                   [--solver-opt precision=f32|f64]        # Spar-* mixed precision
-                  [--cost l1|l2|kl] [--eps 0.01] [--s 0] [--seed 0]
+                  [--cost l1|l2|kl] [--eps 0.01] [--s 0] [--seed 0] [--threads N]
   spargw pairwise [--dataset synthetic|bzr|cox2|cuneiform|firstmm_db|imdb-b]
                   [--solver NAME] [--solver-opt k=v]...   # engine per request
-                  [--cost l1|l2] [--workers 4] [--kernel-threads 1] [--seed 0]
+                  [--cost l1|l2] [--workers 4] [--threads N] [--seed 0]
                   [--shard I/OF | --shards N]             # deterministic sharding
                   [--out FILE] [--resume]                 # streaming sink + resume
                   [--artifacts DIR | --pjrt]              # enable the PJRT path
   spargw cluster  [--dataset ...] [--solver NAME] [--solver-opt k=v]...
-                  [--cost l1|l2] [--gamma 1.0] [--seed 0]
+                  [--cost l1|l2] [--gamma 1.0] [--seed 0] [--threads N]
   spargw solvers
   spargw datasets [--seed 0]
   spargw artifacts [--dir artifacts]
   spargw help
+
+THREADING
+  --threads N sizes the crate-wide worker pool (kernels + pairwise
+  workers share the one budget); the SPARGW_THREADS environment variable
+  is the fallback, and the default is the machine's available
+  parallelism. Thread count never changes results — every parallel
+  kernel is bit-identical at any width.
 
 Registered solvers (spargw solvers): spar_gw spar_fgw spar_ugw egw pga_gw
 emd_gw sagrow lr_gw sgwl anchor
@@ -217,7 +224,6 @@ fn pairwise_config(args: &Args, seed: u64) -> PairwiseConfig {
         solver_opts: solver_opts(args),
         cost: parse_cost(args.str_or("cost", "l2")),
         workers: ok_or_exit(args.usize_or("workers", 4)),
-        kernel_threads: ok_or_exit(args.usize_or("kernel-threads", 1)),
         seed,
         ..Default::default()
     }
@@ -411,6 +417,12 @@ fn main() {
         .map(|(_, flags)| *flags)
         .unwrap_or(&[]);
     let args = Args::parse_with_flags(raw, flags);
+    // Size the crate-wide worker pool before any parallel region runs
+    // (`--threads` beats SPARGW_THREADS beats available parallelism).
+    let threads = ok_or_exit(args.usize_or("threads", 0));
+    if threads > 0 {
+        spargw::runtime::pool::configure_threads(threads);
+    }
     match args.positional(0) {
         Some("solve") => cmd_solve(&args),
         Some("pairwise") => cmd_pairwise(&args),

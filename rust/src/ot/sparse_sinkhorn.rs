@@ -9,9 +9,13 @@
 //! of sweeps over a prebuilt [`Csr`] structure entirely in caller-provided
 //! buffers (zero heap allocations, bit-identical scaling updates). The
 //! fixed form is generic over the kernel [`Scalar`]: in f32 mode the
-//! sweeps run at half width while the `Kᵀu` scatter accumulates in the
-//! caller's f64 `wide` scratch (the accumulator rule); at f64 the wide
-//! path produces the same bits as the historical in-place scatter.
+//! sweeps run at half width while the `Kᵀu` sweep accumulates in f64
+//! per output (the accumulator rule — no scratch buffer needed since
+//! the CSC gather keeps the accumulator in a register); at f64 it
+//! produces the same bits as the historical in-place scatter. Every
+//! sweep (spmv, the transposed gather, the scaling updates, the plan
+//! recovery) runs on the crate-wide worker pool above the per-kernel
+//! grain — bit-identical at any `SPARGW_THREADS`.
 
 use crate::kernel::{ops, Scalar};
 use crate::sparse::{Coo, Csr};
@@ -19,10 +23,10 @@ use crate::sparse::{Coo, Csr};
 /// Fixed-iteration sparse Sinkhorn over a prebuilt CSR structure with
 /// caller-owned buffers — the Algorithm 2 step 7 inner loop as executed by
 /// the `SparCore` engine. `k_vals` are the kernel values in entry order;
-/// `u`/`kv` are row-sized, `v`/`ktu` column-sized, `wide` a column-sized
-/// f64 scratch for the transposed scatter, `plan_vals` entry-sized.
-/// On return `plan_vals[l] = k_vals[l] · u[i_l] · v[j_l]` (the scaled
-/// plan). Performs exactly `iters` sweeps and zero heap allocations.
+/// `u`/`kv` are row-sized, `v`/`ktu` column-sized, `plan_vals`
+/// entry-sized. On return `plan_vals[l] = k_vals[l] · u[i_l] · v[j_l]`
+/// (the scaled plan). Performs exactly `iters` sweeps and zero heap
+/// allocations.
 #[allow(clippy::too_many_arguments)]
 pub fn sparse_sinkhorn_fixed<S: Scalar>(
     a: &[S],
@@ -34,7 +38,6 @@ pub fn sparse_sinkhorn_fixed<S: Scalar>(
     v: &mut [S],
     kv: &mut [S],
     ktu: &mut [S],
-    wide: &mut [f64],
     plan_vals: &mut [S],
 ) {
     assert_eq!(a.len(), csr.nrows(), "sparse_sinkhorn_fixed: a/nrows mismatch");
@@ -48,14 +51,16 @@ pub fn sparse_sinkhorn_fixed<S: Scalar>(
     for _ in 0..iters {
         csr.matvec_into(k_vals, v, kv);
         ops::scaling_update_into(a, kv, u);
-        csr.matvec_t_wide(k_vals, u, wide, ktu);
+        csr.matvec_t_wide(k_vals, u, ktu);
         ops::scaling_update_into(b, ktu, v);
     }
     scale_plan_into(csr, k_vals, u, v, plan_vals);
 }
 
 /// `plan_vals[l] = k_vals[l] · (u[i_l] · v[j_l])` — the plan recovery of
-/// [`Coo::diag_scale_inplace`] in entry order, without mutating the kernel.
+/// [`Coo::diag_scale_inplace`] in entry order, without mutating the
+/// kernel. Elementwise over entries, so it chunks on the crate-wide pool
+/// (bit-identical at any width).
 pub(crate) fn scale_plan_into<S: Scalar>(
     csr: &Csr,
     k_vals: &[S],
@@ -65,9 +70,15 @@ pub(crate) fn scale_plan_into<S: Scalar>(
 ) {
     let rows = csr.entry_rows();
     let cols = csr.entry_cols();
-    for l in 0..k_vals.len() {
-        plan_vals[l] = k_vals[l] * (u[rows[l] as usize] * v[cols[l] as usize]);
-    }
+    crate::runtime::pool::pool().for_each_chunk_mut(
+        plan_vals,
+        crate::runtime::pool::PAR_GRAIN,
+        |chunk, range, _| {
+            for (o, l) in chunk.iter_mut().zip(range) {
+                *o = k_vals[l] * (u[rows[l] as usize] * v[cols[l] as usize]);
+            }
+        },
+    );
 }
 
 /// Sparse Sinkhorn: scales `k` so that `diag(u) K diag(v)` has marginals
@@ -200,10 +211,9 @@ mod tests {
         let csr = Csr::from_pattern(m, n, &rows, &cols);
         let (mut u, mut v) = (vec![0.0; m], vec![0.0; n]);
         let (mut kv, mut ktu) = (vec![0.0; m], vec![0.0; n]);
-        let mut wide = vec![0.0; n];
         let mut out = vec![0.0; s];
         sparse_sinkhorn_fixed(
-            &a, &b, &csr, &vals, 40, &mut u, &mut v, &mut kv, &mut ktu, &mut wide, &mut out,
+            &a, &b, &csr, &vals, 40, &mut u, &mut v, &mut kv, &mut ktu, &mut out,
         );
         assert_eq!(iters, 40);
         for (l, (&x, &y)) in out.iter().zip(plan.vals()).enumerate() {
@@ -227,10 +237,9 @@ mod tests {
 
         let (mut u, mut v) = (vec![0.0f64; m], vec![0.0f64; n]);
         let (mut kv, mut ktu) = (vec![0.0f64; m], vec![0.0f64; n]);
-        let mut wide = vec![0.0f64; n];
         let mut out64 = vec![0.0f64; s];
         sparse_sinkhorn_fixed(
-            &a, &b, &csr, &vals, 30, &mut u, &mut v, &mut kv, &mut ktu, &mut wide, &mut out64,
+            &a, &b, &csr, &vals, 30, &mut u, &mut v, &mut kv, &mut ktu, &mut out64,
         );
 
         let a32: Vec<f32> = a.iter().map(|&x| x as f32).collect();
@@ -241,7 +250,7 @@ mod tests {
         let mut out32 = vec![0.0f32; s];
         sparse_sinkhorn_fixed(
             &a32, &b32, &csr, &vals32, 30, &mut u32v, &mut v32v, &mut kv32, &mut ktu32,
-            &mut wide, &mut out32,
+            &mut out32,
         );
         for (l, (&x32, &x64)) in out32.iter().zip(&out64).enumerate() {
             let d = (x32 as f64 - x64).abs();

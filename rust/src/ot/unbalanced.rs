@@ -20,8 +20,7 @@ fn pow_update(target: &[f64], denom: &[f64], expo: f64) -> Vec<f64> {
 /// Fixed-iteration sparse *unbalanced* Sinkhorn over a prebuilt CSR
 /// structure with caller-owned buffers — Algorithm 3 step 9 as executed by
 /// the `SparCore` engine. Same buffer contract as
-/// [`sparse_sinkhorn_fixed`](crate::ot::sparse_sinkhorn_fixed) (including
-/// the column-sized f64 `wide` scratch for the transposed scatter);
+/// [`sparse_sinkhorn_fixed`](crate::ot::sparse_sinkhorn_fixed);
 /// performs exactly `iters` sweeps with exponent λ/(λ+ε) and zero heap
 /// allocations. Generic over the kernel [`Scalar`]; the exponent is
 /// computed in f64 and rounded once to storage width.
@@ -38,7 +37,6 @@ pub fn sparse_unbalanced_sinkhorn_fixed<S: Scalar>(
     v: &mut [S],
     kv: &mut [S],
     ktu: &mut [S],
-    wide: &mut [f64],
     plan_vals: &mut [S],
 ) {
     assert_eq!(a.len(), csr.nrows(), "sparse_unbalanced_sinkhorn_fixed: a/nrows mismatch");
@@ -54,7 +52,7 @@ pub fn sparse_unbalanced_sinkhorn_fixed<S: Scalar>(
     for _ in 0..iters {
         csr.matvec_into(k_vals, v, kv);
         ops::pow_update_into(a, kv, expo, u);
-        csr.matvec_t_wide(k_vals, u, wide, ktu);
+        csr.matvec_t_wide(k_vals, u, ktu);
         ops::pow_update_into(b, ktu, expo, v);
     }
     super::sparse_sinkhorn::scale_plan_into(csr, k_vals, u, v, plan_vals);
@@ -188,11 +186,9 @@ mod tests {
         let csr = Csr::from_pattern(m, n, &rows, &cols);
         let (mut u, mut v) = (vec![0.0; m], vec![0.0; n]);
         let (mut kv, mut ktu) = (vec![0.0; m], vec![0.0; n]);
-        let mut wide = vec![0.0; n];
         let mut out = vec![0.0; s];
         sparse_unbalanced_sinkhorn_fixed(
-            &a, &b, &csr, &vals, 1.3, 0.2, 30, &mut u, &mut v, &mut kv, &mut ktu, &mut wide,
-            &mut out,
+            &a, &b, &csr, &vals, 1.3, 0.2, 30, &mut u, &mut v, &mut kv, &mut ktu, &mut out,
         );
         for (l, (&x, &y)) in out.iter().zip(plan.vals()).enumerate() {
             assert_eq!(x.to_bits(), y.to_bits(), "entry {l}: {x} vs {y}");

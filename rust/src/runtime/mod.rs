@@ -1,10 +1,13 @@
-//! PJRT runtime — loads the AOT-compiled HLO artifacts produced by
+//! Execution runtimes: the crate-wide persistent [`pool`] (the thread
+//! budget every parallel kernel and the pairwise scheduler share), and
+//! the PJRT runtime — loads the AOT-compiled HLO artifacts produced by
 //! `python/compile/aot.py` and executes them natively. Python never runs
-//! on this path: the artifacts are plain HLO text, compiled once per
+//! on the PJRT path: the artifacts are plain HLO text, compiled once per
 //! (variant, bucket) by the in-process PJRT CPU client and cached.
 
 pub mod artifacts;
 pub mod pjrt;
+pub mod pool;
 
 pub use artifacts::{ArtifactKind, ArtifactSpec, Manifest};
 pub use pjrt::{Runtime, SparGwOutput};

@@ -1,0 +1,658 @@
+//! **The crate-wide persistent worker pool** — one thread budget for
+//! every parallel region in the crate.
+//!
+//! Before this module existed, each parallel call site paid OS-thread
+//! spawn cost per invocation (`std::thread::scope` once per outer
+//! iteration per pair in the hot loops). The pool spawns its workers
+//! exactly once, lazily, and parks them on a condvar between jobs, so a
+//! parallel kernel call costs one mutex hand-off instead of a spawn.
+//!
+//! ## Sizing
+//!
+//! The budget is resolved once, at first use, in precedence order:
+//!
+//! 1. [`configure_threads`] — the CLI's `--threads N` (must run before
+//!    the first parallel region; the CLI calls it at startup);
+//! 2. the `SPARGW_THREADS` environment variable;
+//! 3. `std::thread::available_parallelism()`.
+//!
+//! A budget of 1 never spawns anything: every `run_chunked` call runs
+//! inline on the caller.
+//!
+//! ## The determinism contract
+//!
+//! [`Pool::run_chunked`] splits `n_items` into chunks whose boundaries
+//! are a **pure function of `(n_items, min_chunk)`** — never of the
+//! thread count, the thread-limit override, or scheduling. Workers claim
+//! chunk *indices* dynamically, but every chunk writes disjoint state
+//! keyed by its index, and [`Pool::run_chunked_reduce`] combines the
+//! per-chunk f64 partials **in ascending chunk order** on the caller.
+//! Consequently every parallel path built on these primitives is
+//! bit-identical across `SPARGW_THREADS` ∈ {1, 2, 8, …} — the invariant
+//! the determinism suite (`rust/tests/determinism.rs`) enforces.
+//!
+//! ## Thread-budget composition
+//!
+//! The pairwise scheduler (`coordinator::scheduler::run_jobs_with`) and
+//! the kernel layer share this one budget: the scheduler claims quota
+//! for its workers via [`Pool::reserve`] before spawning them, and
+//! `run_chunked` subtracts the reservation from the usable width. With
+//! `workers == threads` every per-pair kernel call therefore runs inline
+//! serial (no oversubscription); with `workers == 1` a single pair gets
+//! the whole pool. Nested parallel regions (a chunk submitting another
+//! job) and submissions while another job is in flight both degrade to
+//! inline execution — a submitter never deadlocks and never idles.
+//! Chunk panics are caught, drained, and re-raised on the submitting
+//! thread (the job protocol never leaves a dangling task pointer or a
+//! stuck counter behind).
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Hard cap on chunks per job. Keeping it fixed (and small enough for a
+/// stack array of partials) makes the chunk plan thread-count-free and
+/// the reduction combine allocation-free.
+pub const MAX_CHUNKS: usize = 64;
+
+/// Default minimum scalar operations per parallel chunk (~32k mul-adds).
+/// Below this, pool dispatch costs more than the parallelism wins;
+/// kernels derive their per-call `min_chunk` from it (see DESIGN.md
+/// §threading model for the per-kernel thresholds).
+pub const PAR_GRAIN: usize = 1 << 15;
+
+/// The chunk plan: number of chunks and per-chunk length for `n_items`
+/// work items with at least `min_chunk` items per chunk. Pure function
+/// of its arguments — the determinism contract hinges on this never
+/// consulting the thread count.
+pub fn chunk_plan(n_items: usize, min_chunk: usize) -> (usize, usize) {
+    let min_chunk = min_chunk.max(1);
+    let n_chunks = (n_items / min_chunk).clamp(1, MAX_CHUNKS);
+    let chunk_len = n_items.div_ceil(n_chunks);
+    // Recompute so no trailing chunk is empty.
+    (n_items.div_ceil(chunk_len.max(1)).max(1), chunk_len.max(1))
+}
+
+#[inline]
+fn chunk_range(ci: usize, chunk_len: usize, n_items: usize) -> Range<usize> {
+    let start = ci * chunk_len;
+    start..((start + chunk_len).min(n_items))
+}
+
+/// Lifetime-erased job closure: `f(chunk_index)`. Soundness: the
+/// submitting call does not return until every claimed chunk has
+/// finished executing, so the borrow outlives all uses.
+#[derive(Clone, Copy)]
+struct Task(*const (dyn Fn(usize) + Sync));
+// Safety: the pointee is Sync (shared calls from many threads are fine)
+// and the submit protocol above bounds its lifetime.
+unsafe impl Send for Task {}
+
+/// One in-flight job. All fields are guarded by `Pool::slot`.
+struct Slot {
+    task: Option<Task>,
+    /// Next unclaimed chunk index.
+    next: usize,
+    n_chunks: usize,
+    /// Chunks not yet finished executing.
+    pending: usize,
+    /// Worker admissions left for this job (caps parallel width at the
+    /// submitting thread's effective budget).
+    tickets: usize,
+    /// True when any chunk of the current job panicked. Chunk panics are
+    /// caught (so `pending` always reaches 0 and the task pointer is
+    /// never left dangling) and re-raised on the submitting thread after
+    /// the job drains; the original panic message was already printed by
+    /// the panic hook at unwind time.
+    panicked: bool,
+}
+
+/// The persistent worker pool. Obtain the process-wide instance with
+/// [`pool`]; workers are spawned lazily on the first parallel job and
+/// live for the rest of the process, parked on `work` between jobs.
+pub struct Pool {
+    threads: usize,
+    slot: Mutex<Slot>,
+    work: Condvar,
+    done: Condvar,
+    /// Serializes job submission (one job in flight at a time).
+    submit: Mutex<()>,
+    /// Thread-budget quota claimed by the pairwise scheduler.
+    reserved: AtomicUsize,
+    /// Set once when the workers are spawned; holds the worker count.
+    spawned: OnceLock<usize>,
+}
+
+thread_local! {
+    /// Per-thread cap on the effective width (testing/benching knob; the
+    /// scheduler propagates it into its scoped workers).
+    static LIMIT: Cell<usize> = const { Cell::new(usize::MAX) };
+    /// True while this thread is executing a pool chunk or is a pool
+    /// worker: nested submissions run inline instead of deadlocking on
+    /// the submit lock.
+    static IN_PARALLEL: Cell<bool> = const { Cell::new(false) };
+}
+
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// Set the pool size from the CLI (`--threads N`). Takes effect only if
+/// called before the first parallel region; later calls are ignored (the
+/// pool is already running at its resolved size).
+pub fn configure_threads(n: usize) {
+    CONFIGURED.store(n.max(1), Ordering::SeqCst);
+}
+
+fn resolve_threads() -> usize {
+    let configured = CONFIGURED.load(Ordering::SeqCst);
+    if configured > 0 {
+        return configured;
+    }
+    if let Ok(v) = std::env::var("SPARGW_THREADS") {
+        let n: usize = v
+            .parse()
+            .unwrap_or_else(|_| panic!("SPARGW_THREADS={v:?}: expected a positive integer"));
+        return n.max(1);
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The process-wide pool, created (but not yet spawned) on first use.
+pub fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        threads: resolve_threads(),
+        slot: Mutex::new(Slot {
+            task: None,
+            next: 0,
+            n_chunks: 0,
+            pending: 0,
+            tickets: 0,
+            panicked: false,
+        }),
+        work: Condvar::new(),
+        done: Condvar::new(),
+        submit: Mutex::new(()),
+        reserved: AtomicUsize::new(0),
+        spawned: OnceLock::new(),
+    })
+}
+
+/// Run `f` with this thread's effective pool width capped at `limit`.
+/// Chunk *boundaries* are unaffected (they never depend on width), so
+/// results are bit-identical at every limit — this is how the
+/// determinism suite sweeps pool sizes inside one process.
+pub fn with_thread_limit<T>(limit: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LIMIT.with(|l| l.set(self.0));
+        }
+    }
+    let prev = LIMIT.with(|l| l.get());
+    let _restore = Restore(prev);
+    LIMIT.with(|l| l.set(limit.max(1)));
+    f()
+}
+
+/// This thread's current width cap (`usize::MAX` when unlimited). The
+/// pairwise scheduler reads it before spawning scoped workers and
+/// re-applies it inside each, so a limit set around a batch governs the
+/// kernels its workers run.
+pub fn current_thread_limit() -> usize {
+    LIMIT.with(|l| l.get())
+}
+
+/// RAII quota claim returned by [`Pool::reserve`].
+pub struct QuotaGuard {
+    pool: &'static Pool,
+    n: usize,
+}
+
+impl Drop for QuotaGuard {
+    fn drop(&mut self) {
+        self.pool.reserved.fetch_sub(self.n, Ordering::SeqCst);
+    }
+}
+
+/// Escape hatch for writing disjoint chunk ranges of one buffer from the
+/// shared job closure. Soundness relies on the chunk ranges being
+/// disjoint, which [`chunk_plan`] guarantees.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    #[inline]
+    pub(crate) fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+impl Pool {
+    /// The resolved thread budget (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// How many worker threads have been spawned so far (0 before the
+    /// first parallel job; constant afterwards — the pool-reuse
+    /// invariant the determinism suite asserts).
+    pub fn workers_spawned(&self) -> usize {
+        self.spawned.get().copied().unwrap_or(0)
+    }
+
+    /// Claim `n` slots of the thread budget for out-of-pool workers (the
+    /// pairwise scheduler's scoped threads). While the guard lives,
+    /// `run_chunked` subtracts the claim from its usable width, so the
+    /// scheduler's workers plus the kernel pool never oversubscribe the
+    /// budget.
+    pub fn reserve(&'static self, n: usize) -> QuotaGuard {
+        self.reserved.fetch_add(n, Ordering::SeqCst);
+        QuotaGuard { pool: self, n }
+    }
+
+    /// Effective parallel width for a job submitted by this thread.
+    fn width(&self) -> usize {
+        let limit = LIMIT.with(|l| l.get()).max(1);
+        self.threads
+            .saturating_sub(self.reserved.load(Ordering::SeqCst))
+            .clamp(1, limit)
+    }
+
+    fn ensure_workers(&'static self) {
+        self.spawned.get_or_init(|| {
+            let n = self.threads.saturating_sub(1);
+            for i in 0..n {
+                std::thread::Builder::new()
+                    .name(format!("spargw-pool-{i}"))
+                    .spawn(move || self.worker_loop())
+                    .expect("spawn pool worker");
+            }
+            n
+        });
+    }
+
+    /// Spawn the workers now (idempotent) instead of on the first
+    /// parallel job. Useful to front-load the one-time spawn cost before
+    /// a latency-sensitive phase, and to make
+    /// [`Pool::workers_spawned`] final for observers (the pool-reuse
+    /// test pins the count with this).
+    pub fn warm_up(&'static self) {
+        self.ensure_workers();
+    }
+
+    fn worker_loop(&self) {
+        // Workers never submit: anything parallel a chunk does runs
+        // inline on the worker.
+        IN_PARALLEL.with(|f| f.set(true));
+        let mut g = self.slot.lock().unwrap();
+        loop {
+            if g.task.is_some() && g.tickets > 0 && g.next < g.n_chunks {
+                g.tickets -= 1;
+                let task = g.task.unwrap();
+                while g.next < g.n_chunks {
+                    let ci = g.next;
+                    g.next += 1;
+                    drop(g);
+                    // Safety: the submitter blocks until `pending == 0`,
+                    // which we only decrement after the call returns. The
+                    // catch keeps that true even for a panicking chunk —
+                    // an unwinding worker would otherwise leave `pending`
+                    // stuck and the submitter hung.
+                    let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        unsafe { (&*task.0)(ci) }
+                    }))
+                    .is_ok();
+                    g = self.slot.lock().unwrap();
+                    if !ok {
+                        g.panicked = true;
+                    }
+                    g.pending -= 1;
+                    if g.pending == 0 {
+                        self.done.notify_all();
+                    }
+                }
+            } else {
+                g = self.work.wait(g).unwrap();
+            }
+        }
+    }
+
+    /// Run `f(range, chunk_idx)` over the deterministic chunk plan of
+    /// `n_items` (see [`chunk_plan`]). Chunks are disjoint and may run
+    /// concurrently; the call returns when all have finished. Runs
+    /// inline (ascending chunk order, this thread) when the plan is a
+    /// single chunk, the effective width is 1, or the caller is itself
+    /// inside a pool chunk. Allocation-free in steady state.
+    pub fn run_chunked<F>(&'static self, n_items: usize, min_chunk: usize, f: F)
+    where
+        F: Fn(Range<usize>, usize) + Sync,
+    {
+        if n_items == 0 {
+            return;
+        }
+        let (n_chunks, chunk_len) = chunk_plan(n_items, min_chunk);
+        let width = self.width();
+        let nested = IN_PARALLEL.with(|fl| fl.get());
+        if n_chunks == 1 || width <= 1 || nested {
+            for ci in 0..n_chunks {
+                f(chunk_range(ci, chunk_len, n_items), ci);
+            }
+            return;
+        }
+        self.ensure_workers();
+        // One job in flight at a time. A busy pool (another thread's job
+        // holds the submit lock) must not idle this submitter: falling
+        // back to inline execution keeps the core busy, and the chunk
+        // plan is identical either way, so results don't change.
+        let _submit = match self.submit.try_lock() {
+            Ok(guard) => guard,
+            Err(std::sync::TryLockError::WouldBlock) => {
+                for ci in 0..n_chunks {
+                    f(chunk_range(ci, chunk_len, n_items), ci);
+                }
+                return;
+            }
+            Err(std::sync::TryLockError::Poisoned(e)) => {
+                panic!("worker pool submit lock poisoned: {e}")
+            }
+        };
+        let call = move |ci: usize| f(chunk_range(ci, chunk_len, n_items), ci);
+        let obj: &(dyn Fn(usize) + Sync) = &call;
+        // Safety: see `Task` — the borrow is erased only for the duration
+        // of this call (we block until every chunk has run; chunk panics
+        // are caught, so this function cannot unwind while the pointer is
+        // live). A plain `as` cast cannot extend the trait-object
+        // lifetime to the 'static the slot type carries, hence the
+        // transmute.
+        #[allow(clippy::transmutes_expressible_as_ptr_casts)]
+        let task = Task(unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                *const (dyn Fn(usize) + Sync),
+            >(obj)
+        });
+        let mut g = self.slot.lock().unwrap();
+        g.task = Some(task);
+        g.next = 0;
+        g.n_chunks = n_chunks;
+        g.pending = n_chunks;
+        g.tickets = (width - 1).min(n_chunks.saturating_sub(1));
+        g.panicked = false;
+        self.work.notify_all();
+        // The submitting thread chews chunks too — guarantees progress
+        // even if every worker is busy elsewhere. Panics are deferred
+        // (not propagated mid-protocol) so the task pointer is never
+        // freed while a parked worker could still claim a chunk.
+        while g.next < g.n_chunks {
+            let ci = g.next;
+            g.next += 1;
+            drop(g);
+            IN_PARALLEL.with(|fl| fl.set(true));
+            let ok =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| call(ci))).is_ok();
+            IN_PARALLEL.with(|fl| fl.set(false));
+            g = self.slot.lock().unwrap();
+            if !ok {
+                g.panicked = true;
+            }
+            g.pending -= 1;
+        }
+        while g.pending > 0 {
+            g = self.done.wait(g).unwrap();
+        }
+        g.task = None;
+        g.tickets = 0;
+        let panicked = g.panicked;
+        g.panicked = false;
+        drop(g);
+        drop(_submit);
+        if panicked {
+            // The original message was printed by the panic hook when the
+            // chunk unwound; re-raise on the submitting thread (after
+            // releasing the submit lock, so other jobs aren't poisoned)
+            // so callers and the test harness observe the failure.
+            panic!("worker pool: a parallel chunk panicked (see message above)");
+        }
+    }
+
+    /// [`Pool::run_chunked`] over a mutable buffer: each chunk gets the
+    /// disjoint sub-slice `out[range]` (plus the range and chunk index).
+    pub fn for_each_chunk_mut<T, F>(&'static self, out: &mut [T], min_chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(&mut [T], Range<usize>, usize) + Sync,
+    {
+        let ptr = SendPtr(out.as_mut_ptr());
+        let n = out.len();
+        self.run_chunked(n, min_chunk, |range, ci| {
+            // Safety: chunk ranges are disjoint sub-ranges of 0..n.
+            let chunk = unsafe {
+                std::slice::from_raw_parts_mut(ptr.get().add(range.start), range.len())
+            };
+            f(chunk, range, ci);
+        });
+    }
+
+    /// [`Pool::for_each_chunk_mut`] for row-major buffers: chunks cover
+    /// whole rows of width `width`, so kernels that write row blocks
+    /// (matmul, spmm, the gathered cost rows) get row-aligned slices.
+    pub fn for_each_row_chunk_mut<T, F>(
+        &'static self,
+        out: &mut [T],
+        width: usize,
+        min_rows: usize,
+        f: F,
+    ) where
+        T: Send,
+        F: Fn(&mut [T], Range<usize>, usize) + Sync,
+    {
+        assert!(width > 0, "for_each_row_chunk_mut: zero row width");
+        assert_eq!(out.len() % width, 0, "for_each_row_chunk_mut: ragged buffer");
+        let rows = out.len() / width;
+        let ptr = SendPtr(out.as_mut_ptr());
+        self.run_chunked(rows, min_rows, |range, ci| {
+            // Safety: disjoint row ranges → disjoint element ranges.
+            let chunk = unsafe {
+                std::slice::from_raw_parts_mut(
+                    ptr.get().add(range.start * width),
+                    range.len() * width,
+                )
+            };
+            f(chunk, range, ci);
+        });
+    }
+
+    /// Deterministic parallel reduction: `f(range, chunk_idx) -> f64`
+    /// partials are stored per chunk index and summed **in ascending
+    /// chunk order** — the fixed-order combine that keeps reductions
+    /// bit-identical across thread counts. Allocation-free (the partial
+    /// store is a stack array of [`MAX_CHUNKS`]).
+    ///
+    /// Note the chunked partial order differs from a plain serial sweep,
+    /// so this is for reductions that are *born* parallel (perf_micro's
+    /// thread-scaling checksum self-check; future kernels) — the
+    /// golden-locked historical reductions (solver energies, norms) keep
+    /// their serial schedules and must not migrate here.
+    pub fn run_chunked_reduce<F>(&'static self, n_items: usize, min_chunk: usize, f: F) -> f64
+    where
+        F: Fn(Range<usize>, usize) -> f64 + Sync,
+    {
+        if n_items == 0 {
+            return 0.0;
+        }
+        let mut partials = [0.0f64; MAX_CHUNKS];
+        let (n_chunks, _) = chunk_plan(n_items, min_chunk);
+        let ptr = SendPtr(partials.as_mut_ptr());
+        self.run_chunked(n_items, min_chunk, |range, ci| {
+            let p = f(range, ci);
+            // Safety: each chunk index is claimed exactly once and
+            // ci < MAX_CHUNKS by the chunk-plan cap.
+            unsafe { *ptr.get().add(ci) = p };
+        });
+        partials[..n_chunks].iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunk_plan_is_shape_pure_and_covers() {
+        for (n, mc) in [(0usize, 8usize), (1, 8), (7, 8), (100, 10), (1 << 20, 1 << 14)] {
+            let (chunks, len) = chunk_plan(n, mc);
+            assert!(chunks <= MAX_CHUNKS);
+            if n > 0 {
+                // Coverage: ranges tile 0..n exactly.
+                let mut covered = 0;
+                for ci in 0..chunks {
+                    let r = chunk_range(ci, len, n);
+                    assert_eq!(r.start, covered);
+                    assert!(!r.is_empty(), "empty chunk {ci} for n={n} mc={mc}");
+                    covered = r.end;
+                }
+                assert_eq!(covered, n);
+            }
+            // Pure function: identical on recompute.
+            assert_eq!(chunk_plan(n, mc), (chunks, len));
+        }
+    }
+
+    #[test]
+    fn run_chunked_visits_every_item_once() {
+        let n = 10_000usize;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool().run_chunked(n, 64, |range, _| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn reduce_is_bit_identical_across_limits() {
+        let n = 200_000usize;
+        let xs: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.37).sin() * 1e-3).collect();
+        let sum_at = |limit: usize| {
+            with_thread_limit(limit, || {
+                pool().run_chunked_reduce(n, 1 << 12, |range, _| {
+                    let mut acc = 0.0;
+                    for i in range {
+                        acc += xs[i];
+                    }
+                    acc
+                })
+            })
+        };
+        let reference = sum_at(1);
+        for limit in [2usize, 3, 8] {
+            assert_eq!(
+                sum_at(limit).to_bits(),
+                reference.to_bits(),
+                "limit {limit} changed the reduction"
+            );
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_mut_writes_disjoint_slices() {
+        let mut out = vec![0usize; 5000];
+        pool().for_each_chunk_mut(&mut out, 128, |chunk, range, _| {
+            for (o, i) in chunk.iter_mut().zip(range) {
+                *o = i * 3;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * 3);
+        }
+    }
+
+    #[test]
+    fn row_chunks_are_row_aligned() {
+        let (rows, width) = (300usize, 7usize);
+        let mut out = vec![0usize; rows * width];
+        pool().for_each_row_chunk_mut(&mut out, width, 16, |chunk, range, _| {
+            assert_eq!(chunk.len(), range.len() * width);
+            for (local, r) in range.enumerate() {
+                for c in 0..width {
+                    chunk[local * width + c] = r * width + c;
+                }
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn nested_submission_runs_inline() {
+        // A chunk that itself calls run_chunked must not deadlock.
+        let total = AtomicU64::new(0);
+        pool().run_chunked(256, 4, |outer, _| {
+            pool().run_chunked(outer.len(), 1, |inner, _| {
+                total.fetch_add(inner.len() as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 256);
+    }
+
+    #[test]
+    fn reservation_narrows_width_to_serial() {
+        // The counter is process-global (other tests may hold their own
+        // reservations concurrently), so assert only the monotone-safe
+        // properties: a full reservation still completes work (inline),
+        // and this guard's drop releases exactly what it claimed.
+        let p = pool();
+        let claim = p.threads();
+        let guard = p.reserve(claim);
+        assert!(
+            p.reserved.load(Ordering::SeqCst) >= claim,
+            "claim not recorded"
+        );
+        let mut out = vec![0u8; 4096];
+        p.for_each_chunk_mut(&mut out, 16, |chunk, _, _| {
+            for v in chunk.iter_mut() {
+                *v = 1;
+            }
+        });
+        assert!(out.iter().all(|&v| v == 1));
+        drop(guard);
+    }
+
+    #[test]
+    fn chunk_panic_propagates_and_pool_survives() {
+        // A panicking chunk must surface as a panic on the submitting
+        // thread (inline paths propagate directly; pooled paths drain the
+        // job, keeping the task pointer sound, then re-raise) — and the
+        // pool must remain usable afterwards.
+        let caught = std::panic::catch_unwind(|| {
+            pool().run_chunked(10_000, 1, |range, _| {
+                if range.start == 0 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(caught.is_err(), "chunk panic was swallowed");
+        let mut out = vec![0u8; 1000];
+        pool().for_each_chunk_mut(&mut out, 8, |chunk, _, _| {
+            for v in chunk.iter_mut() {
+                *v = 1;
+            }
+        });
+        assert!(out.iter().all(|&v| v == 1), "pool unusable after a chunk panic");
+    }
+
+    #[test]
+    fn thread_limit_restores_on_exit() {
+        assert_eq!(current_thread_limit(), usize::MAX);
+        with_thread_limit(2, || {
+            assert_eq!(current_thread_limit(), 2);
+            with_thread_limit(1, || assert_eq!(current_thread_limit(), 1));
+            assert_eq!(current_thread_limit(), 2);
+        });
+        assert_eq!(current_thread_limit(), usize::MAX);
+    }
+}

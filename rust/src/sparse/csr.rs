@@ -16,9 +16,16 @@
 //! accumulated in ascending entry order — exactly the order
 //! [`Coo::matvec`](super::Coo::matvec) and friends use — so CSR and COO
 //! results are bit-identical, not merely close. The `*_wide` variants
-//! accumulate scattered sums in a caller-provided f64 buffer (the
-//! accumulator rule for f32 values); at f64 they produce the same bits
-//! as the plain forms.
+//! accumulate sums in f64 (the accumulator rule for f32 values); at f64
+//! they produce the same bits as the plain forms.
+//!
+//! Since the worker-pool refactor the structure also carries a **column
+//! view** (`col_ptr` + per-column slots in ascending entry order), so
+//! the transposed matvec and the column marginals run as output-local
+//! *gathers* instead of entry-order scatters: same adds, same order per
+//! output — bit-identical — but parallelizable over output chunks on
+//! the crate-wide pool. Every value op here is therefore parallel and
+//! deterministic at any `SPARGW_THREADS`.
 
 use crate::kernel::sparse as kern;
 use crate::kernel::Scalar;
@@ -39,6 +46,13 @@ pub struct Csr {
     rows_e: Vec<u32>,
     /// Column index per *entry* (original order).
     cols_e: Vec<u32>,
+    /// Column start offsets into `cslot_src`; length `ncols + 1` (the
+    /// CSC view of the same pattern, for parallel transposed gathers).
+    col_ptr: Vec<u32>,
+    /// Original entry index per CSC slot, ascending entry order within
+    /// each column (stable counting sort — the gather/scatter
+    /// bit-identity hinges on this).
+    cslot_src: Vec<u32>,
     /// Fill cursor scratch for `rebuild` (kept to avoid per-rebuild
     /// allocation when the structure is reused across solves).
     cursor: Vec<u32>,
@@ -104,6 +118,26 @@ impl Csr {
             self.slot_src[slot] = k as u32;
             self.cursor[rows[k]] += 1;
         }
+
+        // Column view: stable counting sort by column, so slots within a
+        // column keep ascending entry order (gather == scatter, bit for
+        // bit).
+        self.col_ptr.clear();
+        self.col_ptr.resize(ncols + 1, 0);
+        for &c in cols {
+            self.col_ptr[c + 1] += 1;
+        }
+        for j in 0..ncols {
+            self.col_ptr[j + 1] += self.col_ptr[j];
+        }
+        self.cslot_src.clear();
+        self.cslot_src.resize(nnz, 0);
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.col_ptr[..ncols]);
+        for (k, &c) in cols.iter().enumerate() {
+            self.cslot_src[self.cursor[c] as usize] = k as u32;
+            self.cursor[c] += 1;
+        }
     }
 
     #[inline]
@@ -153,53 +187,57 @@ impl Csr {
         kern::spmv(&self.row_ptr, &self.slot_col, &self.slot_src, vals, x, y);
     }
 
-    /// `y = Aᵀ x`. Scatter in entry order (bit-identical to COO). O(nnz).
+    /// `y = Aᵀ x`. Per-column gather over the CSC view in ascending
+    /// entry order — bit-identical to the historical COO scatter, and
+    /// parallel over column chunks. O(nnz).
     pub fn matvec_t_into<S: Scalar>(&self, vals: &[S], x: &[S], y: &mut [S]) {
         self.check_vals(vals, "matvec_t_into");
         assert_eq!(x.len(), self.nrows, "Csr::matvec_t_into: x length {} != nrows {}", x.len(), self.nrows);
         assert_eq!(y.len(), self.ncols, "Csr::matvec_t_into: y length {} != ncols {}", y.len(), self.ncols);
-        kern::spmv_t(&self.rows_e, &self.cols_e, vals, x, y);
+        kern::spmv_t_csc(&self.col_ptr, &self.cslot_src, &self.rows_e, vals, x, y);
     }
 
-    /// `y = Aᵀ x` with the scatter accumulated in the f64 scratch `wide`
-    /// (length `ncols`) and narrowed into `y` — the accumulator-rule form
-    /// the mixed-precision Sinkhorn uses. Identical bits to
-    /// [`Csr::matvec_t_into`] at `S = f64`.
-    pub fn matvec_t_wide<S: Scalar>(&self, vals: &[S], x: &[S], wide: &mut [f64], y: &mut [S]) {
+    /// `y = Aᵀ x` with the per-column accumulation carried in f64 — the
+    /// accumulator-rule form the mixed-precision Sinkhorn uses.
+    /// Identical bits to [`Csr::matvec_t_into`] at `S = f64` (and to the
+    /// historical f64 scatter through a wide scratch buffer, which the
+    /// register-accumulating gather form no longer needs).
+    pub fn matvec_t_wide<S: Scalar>(&self, vals: &[S], x: &[S], y: &mut [S]) {
         self.check_vals(vals, "matvec_t_wide");
         assert_eq!(x.len(), self.nrows, "Csr::matvec_t_wide: x length {} != nrows {}", x.len(), self.nrows);
         assert_eq!(y.len(), self.ncols, "Csr::matvec_t_wide: y length {} != ncols {}", y.len(), self.ncols);
-        assert_eq!(wide.len(), self.ncols, "Csr::matvec_t_wide: wide length {} != ncols {}", wide.len(), self.ncols);
-        kern::spmv_t_wide(&self.rows_e, &self.cols_e, vals, x, wide, y);
+        kern::spmv_t_wide_csc(&self.col_ptr, &self.cslot_src, &self.rows_e, vals, x, y);
     }
 
-    /// Row sums (marginal `T 1`) into `y`. Scatter in entry order.
+    /// Row sums (marginal `T 1`) into `y`. Per-row gather in ascending
+    /// entry order (bit-identical to the scatter), parallel.
     pub fn row_sums_into<S: Scalar>(&self, vals: &[S], y: &mut [S]) {
         self.check_vals(vals, "row_sums_into");
         assert_eq!(y.len(), self.nrows, "Csr::row_sums_into: y length {} != nrows {}", y.len(), self.nrows);
-        kern::row_sums(&self.rows_e, vals, y);
+        kern::row_sums_csr(&self.row_ptr, &self.slot_src, vals, y);
     }
 
-    /// Column sums (marginal `Tᵀ 1`) into `y`. Scatter in entry order.
+    /// Column sums (marginal `Tᵀ 1`) into `y`. Per-column gather in
+    /// ascending entry order (bit-identical to the scatter), parallel.
     pub fn col_sums_into<S: Scalar>(&self, vals: &[S], y: &mut [S]) {
         self.check_vals(vals, "col_sums_into");
         assert_eq!(y.len(), self.ncols, "Csr::col_sums_into: y length {} != ncols {}", y.len(), self.ncols);
-        kern::col_sums(&self.cols_e, vals, y);
+        kern::col_sums_csc(&self.col_ptr, &self.cslot_src, vals, y);
     }
 
     /// Row sums accumulated directly in f64 (marginal sums stay wide in
-    /// f32 mode; identical to [`Csr::row_sums_into`] at f64).
+    /// f32 mode; identical to [`Csr::row_sums_into`] at f64). Parallel.
     pub fn row_sums_wide<S: Scalar>(&self, vals: &[S], y: &mut [f64]) {
         self.check_vals(vals, "row_sums_wide");
         assert_eq!(y.len(), self.nrows, "Csr::row_sums_wide: y length {} != nrows {}", y.len(), self.nrows);
-        kern::row_sums_wide(&self.rows_e, vals, y);
+        kern::row_sums_wide_csr(&self.row_ptr, &self.slot_src, vals, y);
     }
 
     /// Column sums accumulated directly in f64; see [`Csr::row_sums_wide`].
     pub fn col_sums_wide<S: Scalar>(&self, vals: &[S], y: &mut [f64]) {
         self.check_vals(vals, "col_sums_wide");
         assert_eq!(y.len(), self.ncols, "Csr::col_sums_wide: y length {} != ncols {}", y.len(), self.ncols);
-        kern::col_sums_wide(&self.cols_e, vals, y);
+        kern::col_sums_wide_csc(&self.col_ptr, &self.cslot_src, vals, y);
     }
 
     /// Sparse × dense spmm: `out = A · b` with `A`'s values in entry
@@ -281,9 +319,8 @@ mod tests {
         let x = [0.3f64, 0.7];
         let mut plain = [0.0f64; 3];
         c.matvec_t_into(&vals, &x, &mut plain);
-        let mut wide = [0.0f64; 3];
         let mut viaw = [0.0f64; 3];
-        c.matvec_t_wide(&vals, &x, &mut wide, &mut viaw);
+        c.matvec_t_wide(&vals, &x, &mut viaw);
         for (a, b) in plain.iter().zip(&viaw) {
             assert_eq!(a.to_bits(), b.to_bits());
         }

@@ -28,22 +28,26 @@ pub fn forall<T: std::fmt::Debug>(
     }
 }
 
-/// Kernel-thread counts the determinism harness sweeps.
+/// Worker-pool width levels the determinism harness sweeps (applied via
+/// [`crate::runtime::pool::with_thread_limit`]).
 ///
-/// By default the sweep covers serial and threaded cost kernels
-/// (`[1, 4]`). CI's test matrix pins a single level through the
-/// `SPARGW_KERNEL_THREADS` environment knob so each matrix job exercises
-/// one configuration end-to-end; any non-integer value is rejected
-/// loudly rather than silently ignored.
-pub fn kernel_thread_levels() -> Vec<usize> {
-    match std::env::var("SPARGW_KERNEL_THREADS") {
+/// By default the sweep covers serial, two-wide and eight-wide kernel
+/// execution (`[1, 2, 8]` — widths above the machine's pool size clamp
+/// down, which still exercises the inline-vs-pooled dispatch boundary).
+/// CI's thread matrix pins a single level through the `SPARGW_THREADS`
+/// environment knob — the same variable that sizes the pool itself — so
+/// each matrix job validates the whole suite end-to-end at one width;
+/// any non-integer value is rejected loudly rather than silently
+/// ignored.
+pub fn pool_thread_levels() -> Vec<usize> {
+    match std::env::var("SPARGW_THREADS") {
         Ok(v) => {
             let n: usize = v
                 .parse()
-                .unwrap_or_else(|_| panic!("SPARGW_KERNEL_THREADS={v:?}: expected an integer"));
+                .unwrap_or_else(|_| panic!("SPARGW_THREADS={v:?}: expected an integer"));
             vec![n.max(1)]
         }
-        Err(_) => vec![1, 4],
+        Err(_) => vec![1, 2, 8],
     }
 }
 

@@ -3,14 +3,18 @@
 //! The engine's contract is that every execution knob is a pure
 //! throughput/operability choice: the Gram matrix must be **bit-identical**
 //! across
-//!   * kernel-thread counts (`PairwiseConfig::kernel_threads`, swept via
-//!     `spargw::testutil::kernel_thread_levels` — CI pins one level per
-//!     matrix job through `SPARGW_KERNEL_THREADS`),
+//!   * worker-pool widths (the crate-wide pool of `runtime::pool`, swept
+//!     via `spargw::testutil::pool_thread_levels` +
+//!     `pool::with_thread_limit` — CI additionally pins the pool itself
+//!     per matrix job through `SPARGW_THREADS`),
 //!   * shard counts (1 vs 3) and single-shard multi-process partitioning,
 //!   * the cached path (per-structure preprocessing shared across pairs)
 //!     vs the uncached per-pair re-derivation,
 //!   * fresh runs vs sink-resumed runs,
-//! for spar_gw, spar_fgw and spar_ugw on seeded toy datasets. The
+//! for spar_gw, spar_fgw and spar_ugw on seeded toy datasets — plus a
+//! single-solve pool-width matrix over **all ten registry solvers** and a
+//! pool-reuse check (the worker count stays constant across repeated
+//! solves; parallel regions never re-spawn threads). The
 //! reference each variant is compared against is the *direct* pre-engine
 //! path: a plain loop over pairs calling `GwSolver::solve`/`solve_fused`
 //! with the historical RNG derivation — exactly what the coordinator did
@@ -21,10 +25,12 @@ use spargw::coordinator::service::PairwiseConfig;
 use spargw::datasets::graphsets::{attribute_distance, bzr, imdb_b, GraphDataset};
 use spargw::gw::core::Workspace;
 use spargw::gw::fgw::FgwProblem;
+use spargw::gw::solver::{Plan, SolverRegistry};
 use spargw::gw::GwProblem;
 use spargw::linalg::Mat;
 use spargw::rng::{derive_seed, Rng};
-use spargw::testutil::kernel_thread_levels;
+use spargw::runtime::pool::{pool, with_thread_limit};
+use spargw::testutil::pool_thread_levels;
 
 const SEED: u64 = 17;
 
@@ -43,17 +49,15 @@ fn attributed_dataset() -> GraphDataset {
     ds
 }
 
-fn config(solver: &str, kernel_threads: usize) -> PairwiseConfig {
+fn config(solver: &str) -> PairwiseConfig {
     let mut cfg = PairwiseConfig {
         solver: solver.to_string(),
         workers: 2,
-        kernel_threads,
         seed: SEED,
         ..Default::default()
     };
-    // Keep the toy runs fast but non-trivial; 384 draws ensure the
-    // threaded cost kernel actually engages (it falls back to serial
-    // below ~64 rows per thread).
+    // Keep the toy runs fast but non-trivial; 384 draws give the chunked
+    // cost kernel enough rows to engage on the larger pairs.
     cfg.spar.sample_size = 384;
     cfg.spar.outer_iters = 4;
     cfg.spar.inner_iters = 8;
@@ -114,28 +118,131 @@ fn dataset_for(solver: &str) -> GraphDataset {
 }
 
 #[test]
-fn gram_bit_identical_across_kernel_threads_shards_and_cache() {
+fn gram_bit_identical_across_pool_widths_shards_and_cache() {
     for solver in ["spar_gw", "spar_fgw", "spar_ugw"] {
         let ds = dataset_for(solver);
-        // Reference: serial kernel, direct pre-engine path.
-        let reference = direct_reference(&ds, &config(solver, 1));
-        for kernel_threads in kernel_thread_levels() {
-            let cfg = config(solver, kernel_threads);
+        // Reference: serial kernels, direct pre-engine path.
+        let reference =
+            with_thread_limit(1, || direct_reference(&ds, &config(solver)));
+        for width in pool_thread_levels() {
+            let cfg = config(solver);
             for shards in [1usize, 3] {
                 for use_cache in [true, false] {
                     let opts = EngineConfig { shards, use_cache, ..Default::default() };
-                    let got = engine_gram(&ds, &cfg, opts);
+                    let got =
+                        with_thread_limit(width, || engine_gram(&ds, &cfg, opts));
                     assert_bits_equal(
                         &reference,
                         &got,
                         &format!(
-                            "{solver}: kernel_threads={kernel_threads} \
+                            "{solver}: pool_width={width} \
                              shards={shards} cache={use_cache}"
                         ),
                     );
                 }
             }
         }
+    }
+}
+
+/// The plan's stored values (dense data or sparse entry values), for
+/// bitwise comparison.
+fn plan_vals(plan: &Plan) -> Vec<f64> {
+    match plan {
+        Plan::Dense(t) => t.data().to_vec(),
+        Plan::Sparse(t) => t.vals().to_vec(),
+    }
+}
+
+#[test]
+fn all_registry_solvers_bit_identical_across_pool_widths() {
+    // Every parallelized path — dense matmul/matvec (Alg.1 family,
+    // LR-GW, S-GWL, SaGroW, anchor), CSR spmv/gathered transposes,
+    // Sinkhorn updates, the Eq. (5) factor build and the O(s²) cost
+    // kernels (Spar-*) — must produce bit-identical plans and costs at
+    // every pool width. n = 96 puts the blocked matmul past its
+    // rows-per-chunk gate (⌈2^15/96²⌉ = 4 rows) and the default
+    // s = 16n = 1536 puts the gathered cost kernel past its
+    // entries-per-chunk gate, so the pooled paths genuinely execute at
+    // widths > 1 rather than falling back to the inline branch.
+    let n = 96;
+    let mut grng = spargw::rng::Xoshiro256::new(0xD157);
+    let cx = spargw::testutil::random_relation(&mut grng, n);
+    let cy = spargw::testutil::random_relation(&mut grng, n);
+    let a = spargw::util::uniform(n);
+    let b = spargw::util::uniform(n);
+    let p = GwProblem::new(&cx, &cy, &a, &b);
+    // Short schedules keep the ten-solver × three-width sweep fast; the
+    // bit-identity property is schedule-independent.
+    let base = spargw::gw::solver::SolverBase {
+        outer_iters: 3,
+        inner_iters: 10,
+        ..Default::default()
+    };
+    for &name in SolverRegistry::names() {
+        let solver =
+            SolverRegistry::build_with_base(name, &Default::default(), &base).expect(name);
+        let solve_at = |width: usize| {
+            with_thread_limit(width, || {
+                let mut rng = Rng::new(derive_seed(SEED, 77));
+                let mut ws = Workspace::new();
+                solver.solve(&p, &mut rng, &mut ws).expect(name)
+            })
+        };
+        let reference = solve_at(1);
+        let ref_vals = plan_vals(&reference.plan);
+        for width in [2usize, 8] {
+            let got = solve_at(width);
+            assert_eq!(
+                reference.value.to_bits(),
+                got.value.to_bits(),
+                "{name}: value differs at pool width {width} \
+                 ({} vs {})",
+                reference.value,
+                got.value
+            );
+            assert_eq!(
+                reference.outer_iters, got.outer_iters,
+                "{name}: iteration schedule differs at width {width}"
+            );
+            let got_vals = plan_vals(&got.plan);
+            assert_eq!(ref_vals.len(), got_vals.len(), "{name}: plan size");
+            for (l, (x, y)) in ref_vals.iter().zip(&got_vals).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{name}: plan entry {l} differs at width {width} ({x} vs {y})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_workers_constant_across_repeated_solves() {
+    // The pool spawns its workers at most once (lazily); repeated solves
+    // must reuse them — the spawn-per-invocation cost the pool replaces
+    // must not creep back in.
+    let mut ds = imdb_b(10);
+    ds.graphs.truncate(2);
+    let (a, b) = (ds.graphs[0].marginal(), ds.graphs[1].marginal());
+    let p = GwProblem::new(&ds.graphs[0].adj, &ds.graphs[1].adj, &a, &b);
+    let solver = SolverRegistry::build("spar_gw", &Default::default()).unwrap();
+    let mut ws = Workspace::new();
+    let mut rng = Rng::new(1);
+    // Pin the lazy spawn deterministically (warm_up is idempotent and
+    // independent of concurrent tests' reservations), so the worker
+    // count is final for the process before the first observation.
+    pool().warm_up();
+    let expected = pool().threads().saturating_sub(1);
+    assert_eq!(pool().workers_spawned(), expected, "warm_up spawn count");
+    for _ in 0..6 {
+        let _ = solver.solve(&p, &mut rng, &mut ws).unwrap();
+        assert_eq!(
+            pool().workers_spawned(),
+            expected,
+            "repeated solves changed the pool's worker count"
+        );
     }
 }
 
@@ -146,7 +253,7 @@ fn sharded_processes_cover_the_reference_exactly() {
     // bit-for-bit with no overlap.
     for solver in ["spar_gw", "spar_ugw"] {
         let ds = plain_dataset();
-        let cfg = config(solver, 1);
+        let cfg = config(solver);
         let reference = direct_reference(&ds, &cfg);
         let n = ds.len();
         let mut merged = Mat::zeros(n, n);
@@ -177,7 +284,7 @@ fn preprocessing_runs_exactly_once_per_structure_k40() {
     ds.graphs.truncate(40);
     let k = ds.len();
     assert_eq!(k, 40);
-    let mut cfg = config("spar_gw", 1);
+    let mut cfg = config("spar_gw");
     cfg.workers = 4;
     cfg.spar.sample_size = 48;
     cfg.spar.outer_iters = 2;
@@ -204,7 +311,7 @@ fn temp_sink(name: &str) -> std::path::PathBuf {
 #[test]
 fn resume_after_partial_run_matches_uninterrupted_run() {
     let ds = plain_dataset();
-    let cfg = config("spar_gw", 1);
+    let cfg = config("spar_gw");
     let reference = direct_reference(&ds, &cfg);
 
     // "Kill after k shards": run only shards 0 and 1 of 3, checkpointing
@@ -247,7 +354,7 @@ fn truncated_sink_tail_recomputes_the_partial_shard() {
     // half-written line), and resume. The damaged shard must be
     // recomputed and the final matrix still match the reference.
     let ds = plain_dataset();
-    let cfg = config("spar_gw", 1);
+    let cfg = config("spar_gw");
     let reference = direct_reference(&ds, &cfg);
 
     let sink = temp_sink("resume_truncated.sink");
@@ -286,7 +393,7 @@ fn resumed_sink_is_replay_complete() {
     // After a fully resumed run the sink contains every shard's `done`
     // marker, so a further resume computes nothing at all.
     let ds = plain_dataset();
-    let cfg = config("spar_gw", 1);
+    let cfg = config("spar_gw");
     let sink = temp_sink("resume_complete.sink");
     std::fs::remove_file(&sink).ok();
     let mk = |resume: bool| EngineConfig {

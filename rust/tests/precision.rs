@@ -107,8 +107,8 @@ fn f32_tracks_f64_on_a_shared_set_gaussian_and_moon() {
         let set = sampler.sample_iid(&mut rng, 12 * n);
         let cfg = SparGwConfig { sample_size: 12 * n, ..Default::default() };
         let mut ws = Workspace::new();
-        let r64 = spar_gw_with_workspace(&p, GroundCost::L2, &cfg, &set, &mut ws, 1);
-        let r32 = spar_gw_with_workspace_f32(&p, GroundCost::L2, &cfg, &set, &mut ws, 1);
+        let r64 = spar_gw_with_workspace(&p, GroundCost::L2, &cfg, &set, &mut ws);
+        let r32 = spar_gw_with_workspace_f32(&p, GroundCost::L2, &cfg, &set, &mut ws);
         assert!(r32.value.is_finite(), "{label}: f32 value not finite");
         let denom = r64.value.abs().max(1e-3);
         let rel = (r32.value - r64.value).abs() / denom;
