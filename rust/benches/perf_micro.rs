@@ -21,7 +21,11 @@
 //! cost product, the Eq. (5) `SideFactors` build and a single-pair
 //! Spar-GW solve at pool widths 1/2/4/8 — to
 //! `results/BENCH_threads.json` (uploaded as a CI artifact to seed the
-//! perf trajectory).
+//! perf trajectory), and the **scalar-vs-SIMD matrix** — the dispatched
+//! vector kernels against the portable schedule they reproduce
+//! bit-for-bit, per precision at pool widths 1/8 — into
+//! `results/BENCH_kernels.json`. Both JSON artifacts are also copied to
+//! the repository root (the tracked perf-trajectory snapshots).
 //!
 //! Output: stdout rows + `results/perf_micro.csv`.
 
@@ -38,6 +42,7 @@ use spargw::gw::tensor::{
 };
 use spargw::gw::ugw::UgwConfig;
 use spargw::gw::GroundCost;
+use spargw::kernel::simd::{self, Backend};
 use spargw::linalg::Mat;
 use spargw::ot::{sparse_sinkhorn, sparse_sinkhorn_fixed};
 use spargw::rng::{ProductAlias, Xoshiro256};
@@ -291,6 +296,87 @@ fn main() {
     });
     kernel_rows.push(("sparse_cost_product_tile".to_string(), t64, t32));
 
+    // 9b. Scalar-vs-SIMD matrix: each dispatched kernel family against
+    //     the portable schedule it reproduces bit-for-bit, per precision
+    //     and at pool widths 1 and 8 (the backend override is resolved at
+    //     submit time, so pool chunks honor it at any width). Recorded as
+    //     the `scalar_vs_simd` object in BENCH_kernels.json.
+    println!();
+    let best = simd::detect();
+    println!("scalar vs simd backend = {} (pool widths 1/8)", best.name());
+    let mut svs_rows: Vec<(&'static str, &'static str, usize, f64, f64)> = Vec::new();
+    let mut svs = |kernel: &'static str, precision: &'static str, f: &mut dyn FnMut()| {
+        for &w in &[1usize, 8] {
+            let t_scalar = simd::with_backend_override(Backend::Scalar, || {
+                with_thread_limit(w, || bench(reps, &mut *f))
+            });
+            let t_simd = simd::with_backend_override(best, || {
+                with_thread_limit(w, || bench(reps, &mut *f))
+            });
+            println!(
+                "{kernel:<18} {precision} w{w}  scalar {t_scalar:>11.6}s  {:<6} \
+                 {t_simd:>11.6}s  speedup {:>5.2}x",
+                best.name(),
+                t_scalar / t_simd
+            );
+            svs_rows.push((kernel, precision, w, t_scalar, t_simd));
+        }
+    };
+
+    // Blocked matmul micro-kernel (axpy rows inside the ikj tiles).
+    let n_sv = if smoke_mode() { 96 } else { 320 };
+    let sa64 = Mat::from_fn(n_sv, n_sv, |i, j| ((i * n_sv + j) as f64 * 0.11).sin());
+    let sb64 = Mat::from_fn(n_sv, n_sv, |i, j| ((i + 3 * j) as f64 * 0.23).cos());
+    let sa32: Mat<f32> = Mat::from_f64_mat(&sa64);
+    let sb32: Mat<f32> = Mat::from_f64_mat(&sb64);
+    svs("matmul_into", "f64", &mut || {
+        std::hint::black_box(sa64.matmul(&sb64));
+    });
+    svs("matmul_into", "f32", &mut || {
+        std::hint::black_box(sa32.matmul(&sb32));
+    });
+    // Gathered s×s cost product (gathered_dot_f64 / gathered_dot_f32).
+    svs("gathered_dot", "f64", &mut || {
+        ctx_l1.cost_values_into_threaded(&t_vals, &mut c_out);
+        std::hint::black_box(&c_out);
+    });
+    svs("gathered_dot", "f32", &mut || {
+        ctx_l1.cost_values_into_threaded(&t_vals32, &mut c_out32);
+        std::hint::black_box(&c_out32);
+    });
+
+    for &(kernel, precision, w, t_scalar, t_simd) in &svs_rows {
+        csv.row(&[
+            format!("{kernel}_{precision}_w{w}_scalar"),
+            n.to_string(),
+            s.to_string(),
+            format!("{t_scalar:.6e}"),
+        ])
+        .unwrap();
+        csv.row(&[
+            format!("{kernel}_{precision}_w{w}_simd"),
+            n.to_string(),
+            s.to_string(),
+            format!("{t_simd:.6e}"),
+        ])
+        .unwrap();
+    }
+
+    // Artifacts land in results/ (CI upload) and at the repository root
+    // (the tracked perf-trajectory snapshots the acceptance gates read).
+    let write_artifact = |name: &str, contents: &str| {
+        let local = format!("results/{name}");
+        std::fs::write(&local, contents).unwrap_or_else(|e| panic!("write {local}: {e}"));
+        println!("wrote {local}");
+        if let Some(root) = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+            let rp = root.join(name);
+            match std::fs::write(&rp, contents) {
+                Ok(()) => println!("wrote {}", rp.display()),
+                Err(e) => println!("WARNING: cannot write {}: {e}", rp.display()),
+            }
+        }
+    };
+
     // Emit the matrix: stdout, CSV rows, and the JSON artifact.
     let mut json = String::from("{\n");
     json.push_str(&format!(
@@ -332,9 +418,23 @@ fn main() {
             if i + 1 < kernel_rows.len() { "," } else { "" }
         ));
     }
-    json.push_str("  ]\n}\n");
-    std::fs::write("results/BENCH_kernels.json", &json).expect("write BENCH_kernels.json");
-    println!("wrote results/BENCH_kernels.json");
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"scalar_vs_simd\": {{\n    \"simd_backend\": \"{}\",\n    \"widths\": [1, 8],\n    \
+         \"rows\": [\n",
+        best.name()
+    ));
+    for (i, &(kernel, precision, w, t_scalar, t_simd)) in svs_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "      {{\"kernel\": \"{kernel}\", \"precision\": \"{precision}\", \"width\": {w}, \
+             \"scalar_seconds\": {t_scalar:.6e}, \"simd_seconds\": {t_simd:.6e}, \
+             \"speedup\": {:.3}}}{}\n",
+            t_scalar / t_simd,
+            if i + 1 < svs_rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("    ]\n  }\n}\n");
+    write_artifact("BENCH_kernels.json", &json);
 
     // 10. Thread-scaling matrix: wall time + speedup at pool widths
     //     1/2/4/8 for every newly parallel kernel family plus a
@@ -528,8 +628,7 @@ fn main() {
         ));
     }
     tjson.push_str("  ]\n}\n");
-    std::fs::write("results/BENCH_threads.json", &tjson).expect("write BENCH_threads.json");
-    println!("wrote results/BENCH_threads.json");
+    write_artifact("BENCH_threads.json", &tjson);
 
     println!("\n(effective support |S| = {s_eff} of s = {s})");
     csv.flush().unwrap();

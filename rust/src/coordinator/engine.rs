@@ -46,6 +46,7 @@ use crate::gw::core::Workspace;
 use crate::gw::fgw::FgwProblem;
 use crate::gw::solver::GwSolver;
 use crate::gw::GwProblem;
+use crate::kernel::simd;
 use crate::linalg::Mat;
 use crate::rng::{derive_seed, Rng};
 use crate::util::error::Result;
@@ -245,6 +246,7 @@ impl PairwiseEngine {
 
         let mut metrics = MetricsRecorder::new();
         metrics.set_solver(solver.name());
+        metrics.set_simd(simd::current().name());
         let mut computed_pairs = 0usize;
         let mut shards_run = 0usize;
         let mut shards_skipped = 0usize;
@@ -408,12 +410,29 @@ fn config_fingerprint(cfg: &PairwiseConfig, dataset: &GraphDataset) -> u64 {
 
 /// The sink's header line: format version, run shape, and the config
 /// fingerprint, so a resumed run cannot silently merge rows from a
-/// different solver, dataset, seed, option set or shard layout.
+/// different solver, dataset, seed, option set or shard layout. The
+/// `simd=` token is *informational*: it records which kernel backend
+/// produced the rows, but — like every other throughput knob (threads,
+/// workers, cache) — it is excluded from the resume compatibility check
+/// by [`header_without_simd`], because backends are bit-identical and a
+/// sink may legitimately resume on a different machine.
 fn sink_header(solver: &str, n: usize, shards: usize, fingerprint: u64) -> String {
     format!(
         "# spargw-sink {SINK_VERSION} solver={solver} n={n} shards={shards} \
-         config={fingerprint:016x}"
+         config={fingerprint:016x} simd={}",
+        simd::current().name()
     )
+}
+
+/// A sink header with its informational `simd=` token removed — the
+/// normalized form compared on resume. Headers written before the token
+/// existed normalize to the same string, so old sinks stay resumable.
+fn header_without_simd(header: &str) -> String {
+    header
+        .split_ascii_whitespace()
+        .filter(|t| !t.starts_with("simd="))
+        .collect::<Vec<_>>()
+        .join(" ")
 }
 
 /// Create/rewrite the sink to its trusted base — the header plus the
@@ -468,7 +487,7 @@ fn parse_sink(path: &Path, expected_header: &str) -> Result<SinkState> {
         .next()
         .ok_or_else(|| format_err!("sink is empty (no header)"))?;
     ensure!(
-        header == expected_header,
+        header_without_simd(header) == header_without_simd(expected_header),
         "sink header mismatch: found {header:?}, expected {expected_header:?} \
          (different solver, dataset size or shard layout)"
     );
@@ -671,6 +690,53 @@ mod tests {
         // Same seed resumes cleanly.
         let g = mk(1, true).gram(&ds).unwrap();
         assert_eq!(g.shards_skipped, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_accepts_a_different_simd_backend() {
+        // Backends are bit-identical, so a sink written under one must
+        // resume under another (and under a pre-token header at all):
+        // the simd= token is informational, not part of compatibility.
+        let dir = std::env::temp_dir().join("spargw_engine_simd_token_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sink.txt");
+        std::fs::remove_file(&path).ok();
+        let ds = tiny_dataset();
+        let mk = |resume| {
+            let opts = EngineConfig {
+                shards: 2,
+                only_shard: Some(0),
+                sink: Some(path.clone()),
+                resume,
+                ..Default::default()
+            };
+            PairwiseEngine::new(tiny_cfg(3), opts)
+        };
+        mk(false).gram(&ds).unwrap();
+        // Rewrite the header's simd token to a name no backend uses, as
+        // if the sink came from a machine with different hardware.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rewritten: Vec<String> = text
+            .lines()
+            .enumerate()
+            .map(|(k, l)| {
+                if k == 0 {
+                    format!("{} simd=elsewhere", header_without_simd(l))
+                } else {
+                    l.to_string()
+                }
+            })
+            .collect();
+        std::fs::write(&path, rewritten.join("\n") + "\n").unwrap();
+        let g = mk(true).gram(&ds).unwrap();
+        assert_eq!(g.shards_skipped, 1, "foreign simd token must still resume");
+        // A header with no simd token at all (pre-token sinks) also
+        // normalizes identically.
+        assert_eq!(
+            header_without_simd("# spargw-sink v1 solver=x n=4 shards=2 config=0 simd=avx2"),
+            "# spargw-sink v1 solver=x n=4 shards=2 config=0"
+        );
         std::fs::remove_file(&path).ok();
     }
 }

@@ -9,6 +9,8 @@ pub struct MetricsRecorder {
     solver: Option<String>,
     /// (shards executed, total shard count) when the sharded engine ran.
     shards: Option<(usize, usize)>,
+    /// Active SIMD kernel backend name (`kernel::simd::current().name()`).
+    simd: Option<String>,
 }
 
 impl MetricsRecorder {
@@ -35,6 +37,17 @@ impl MetricsRecorder {
     /// `(shards executed, total shards)` when tagged by the engine.
     pub fn shards(&self) -> Option<(usize, usize)> {
         self.shards
+    }
+
+    /// Tag this recorder with the resolved SIMD kernel backend, so run
+    /// logs record which dispatch produced the (bit-identical) numbers.
+    pub fn set_simd(&mut self, backend: impl Into<String>) {
+        self.simd = Some(backend.into());
+    }
+
+    /// Resolved SIMD backend name when tagged by the engine/service.
+    pub fn simd(&self) -> Option<&str> {
+        self.simd.as_deref()
     }
 
     pub fn record(&mut self, seconds: f64) {
@@ -84,8 +97,12 @@ impl MetricsRecorder {
             Some((run, total)) => format!("shards={run}/{total} "),
             None => String::new(),
         };
+        let simd = match &self.simd {
+            Some(name) => format!("simd={name} "),
+            None => String::new(),
+        };
         format!(
-            "{solver}{shards}jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s",
+            "{solver}{shards}{simd}jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s",
             self.count(),
             self.mean(),
             self.percentile(0.5),
@@ -136,6 +153,16 @@ mod tests {
         m.record(0.5);
         assert_eq!(m.solver(), Some("sagrow"));
         assert!(m.summary().starts_with("solver=sagrow "), "{}", m.summary());
+    }
+
+    #[test]
+    fn simd_tag_appears_in_summary() {
+        let mut m = MetricsRecorder::new();
+        m.set_solver("spar_gw");
+        m.set_simd("avx2");
+        m.record(0.1);
+        assert_eq!(m.simd(), Some("avx2"));
+        assert!(m.summary().contains("simd=avx2 "), "{}", m.summary());
     }
 
     #[test]

@@ -183,6 +183,7 @@ impl PairwiseGw {
             let mut distances = Mat::zeros(n_items, n_items);
             let mut metrics = MetricsRecorder::new();
             metrics.set_solver(solver.name());
+            metrics.set_simd(crate::kernel::simd::current().name());
             let mut pjrt_pairs = 0usize;
             let mut native_pairs = 0usize;
             let wall_start = Instant::now();

@@ -14,6 +14,7 @@
 //! contiguous rows (a §Perf optimization over per-element gathers).
 
 use super::cost::GroundCost;
+use crate::kernel::simd;
 use crate::kernel::Scalar;
 use crate::linalg::Mat;
 use crate::runtime::pool::pool;
@@ -184,16 +185,25 @@ impl SparseCostContext {
     /// Fill `out[0..len]` with the cost-product rows `base..base+len`.
     /// The shared kernel behind the serial and row-chunked parallel entry
     /// points, generic over the plan-value scalar: each row reduces
-    /// through [`Scalar::gathered_dot`] — at f64 the historical 4-lane
-    /// f64 schedule (bit-identical), at f32 the 8-lane block-folded form
-    /// (`kernel::dense::gathered_dot_f32`). Each output row is
+    /// through [`Scalar::gathered_dot_backend`] — at f64 the historical
+    /// 4-lane f64 schedule (bit-identical), at f32 the 8-lane
+    /// block-folded form. The SIMD backend is passed in by the entry
+    /// points (resolved once on the submitting thread — the
+    /// capture-at-submit rule; this body runs inside pool chunks, which
+    /// never see the caller's thread-local override). Each output row is
     /// independent, so chunking does not change results bit-wise.
-    fn fill_cost_rows<S: Scalar>(&self, t_vals: &[S], out: &mut [S], base: usize) {
+    fn fill_cost_rows<S: Scalar>(
+        &self,
+        backend: simd::Backend,
+        t_vals: &[S],
+        out: &mut [S],
+        base: usize,
+    ) {
         let s = self.s;
         for (off, o) in out.iter_mut().enumerate() {
             let l = base + off;
             let row = &self.l_g[l * s..(l + 1) * s];
-            *o = S::from_f64(S::gathered_dot(row, t_vals));
+            *o = S::from_f64(S::gathered_dot_backend(backend, row, t_vals));
         }
     }
 
@@ -217,7 +227,7 @@ impl SparseCostContext {
             out.len(),
             self.s
         );
-        self.fill_cost_rows(t_vals, out, 0);
+        self.fill_cost_rows(simd::current(), t_vals, out, 0);
     }
 
     /// Row-chunked parallel cost product on the crate-wide persistent
@@ -234,8 +244,9 @@ impl SparseCostContext {
             return;
         }
         let min_rows = MIN_GATHERED_ENTRIES_PER_CHUNK.div_ceil(self.s);
+        let backend = simd::current();
         pool().for_each_chunk_mut(out, min_rows, |chunk, range, _| {
-            self.fill_cost_rows(t_vals, chunk, range.start);
+            self.fill_cost_rows(backend, t_vals, chunk, range.start);
         });
     }
 

@@ -26,11 +26,21 @@
 //! results are **bit-identical at every thread count** — parallelism is
 //! a pure throughput knob, enforced by the determinism suite.
 //!
+//! **SIMD dispatch.** The inner bodies (the dot schedule, the gathered
+//! reductions, the axpy micro-kernels) live in [`super::simd`] — the
+//! portable bodies there are the canonical lane schedules, and the
+//! arch backends reproduce them bit-for-bit. Each entry point here
+//! resolves [`simd::current`](super::simd::current) **once, before
+//! submitting pool chunks**, and captures the `Copy` backend value into
+//! the chunk closures (pool workers never see the submitting thread's
+//! override — the capture-at-submit rule).
+//!
 //! Numerical contract: instantiated at `S = f64`, every function here
 //! reproduces the historical `Mat` loops operation-for-operation
 //! (verified by the golden solver tests).
 
 use super::scalar::Scalar;
+use super::simd;
 use crate::runtime::pool::{pool, PAR_GRAIN};
 
 /// k-panel width of the blocked ikj matmul.
@@ -41,30 +51,13 @@ pub const MATMUL_BK: usize = 64;
 /// The 4-way unrolled schedule of the historical `linalg::dot`: products
 /// are formed at storage width, widened, and accumulated in four
 /// independent accumulator lanes folded at the end. For `S = f64` this
-/// is bit-identical to the original.
+/// is bit-identical to the original. The canonical loop lives in
+/// [`simd::portable::dot`]; this entry point dispatches to the active
+/// backend (bit-identical by the SIMD contract).
 #[inline]
 pub fn dot<S: Scalar>(a: &[S], b: &[S]) -> S::Accum {
     debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (
-        S::Accum::default(),
-        S::Accum::default(),
-        S::Accum::default(),
-        S::Accum::default(),
-    );
-    for k in 0..chunks {
-        let i = k * 4;
-        s0 = s0 + (a[i] * b[i]).widen();
-        s1 = s1 + (a[i + 1] * b[i + 1]).widen();
-        s2 = s2 + (a[i + 2] * b[i + 2]).widen();
-        s3 = s3 + (a[i + 3] * b[i + 3]).widen();
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s = s + (a[i] * b[i]).widen();
-    }
-    s
+    simd::dot(simd::current(), a, b)
 }
 
 /// Cache-blocked ikj matmul: `out[m×n] = a[m×k] · b[k×n]`, all row-major.
@@ -81,6 +74,7 @@ pub fn matmul_into<S: Scalar>(m: usize, k: usize, n: usize, a: &[S], b: &[S], ou
     }
     // Per-row work is k·n mul-adds; chunks carry at least PAR_GRAIN of it.
     let min_rows = PAR_GRAIN.div_ceil((k * n).max(1));
+    let backend = simd::current();
     pool().for_each_row_chunk_mut(out, n, min_rows, |orows, range, _| {
         for kb in (0..k).step_by(MATMUL_BK) {
             let kend = (kb + MATMUL_BK).min(k);
@@ -93,9 +87,7 @@ pub fn matmul_into<S: Scalar>(m: usize, k: usize, n: usize, a: &[S], b: &[S], ou
                         continue;
                     }
                     let brow = &b[kk * n..(kk + 1) * n];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += aik * bv;
-                    }
+                    simd::axpy(backend, aik, brow, orow);
                 }
             }
         }
@@ -110,9 +102,10 @@ pub fn matvec_into<S: Scalar>(rows: usize, cols: usize, a: &[S], x: &[S], y: &mu
     debug_assert_eq!(x.len(), cols);
     debug_assert_eq!(y.len(), rows);
     let min_rows = PAR_GRAIN.div_ceil(cols.max(1));
+    let backend = simd::current();
     pool().for_each_chunk_mut(y, min_rows, |ychunk, range, _| {
         for (o, i) in ychunk.iter_mut().zip(range) {
-            *o = S::narrow(dot(&a[i * cols..(i + 1) * cols], x));
+            *o = S::narrow(simd::dot(backend, &a[i * cols..(i + 1) * cols], x));
         }
     });
 }
@@ -127,6 +120,7 @@ pub fn matvec_t_into<S: Scalar>(rows: usize, cols: usize, a: &[S], x: &[S], y: &
     debug_assert_eq!(x.len(), rows);
     debug_assert_eq!(y.len(), cols);
     let min_cols = PAR_GRAIN.div_ceil(rows.max(1));
+    let backend = simd::current();
     pool().for_each_chunk_mut(y, min_cols, |ychunk, range, _| {
         for v in ychunk.iter_mut() {
             *v = S::ZERO;
@@ -136,9 +130,7 @@ pub fn matvec_t_into<S: Scalar>(rows: usize, cols: usize, a: &[S], x: &[S], y: &
                 continue;
             }
             let arow = &a[i * cols + range.start..i * cols + range.end];
-            for (o, &av) in ychunk.iter_mut().zip(arow) {
-                *o += xi * av;
-            }
+            simd::axpy(backend, xi, arow, ychunk);
         }
     });
 }
@@ -163,8 +155,9 @@ pub fn matvec_t_wide<S: Scalar>(
     debug_assert_eq!(wide.len(), cols);
     use crate::runtime::pool::SendPtr;
     let pw = SendPtr(wide.as_mut_ptr());
+    let backend = simd::current();
     pool().for_each_chunk_mut(y, PAR_GRAIN.div_ceil(rows.max(1)), |ychunk, range, _| {
-        // Safety: chunk ranges are disjoint; `wide` is sliced at exactly
+        // SAFETY: chunk ranges are disjoint; `wide` is sliced at exactly
         // the same ranges as `y`.
         let wchunk = unsafe {
             std::slice::from_raw_parts_mut(pw.get().add(range.start), range.len())
@@ -175,9 +168,7 @@ pub fn matvec_t_wide<S: Scalar>(
                 continue;
             }
             let arow = &a[i * cols + range.start..i * cols + range.end];
-            for (o, &av) in wchunk.iter_mut().zip(arow) {
-                *o += (xi * av).to_f64();
-            }
+            simd::axpy_wide(backend, xi, arow, wchunk);
         }
         for (o, &w) in ychunk.iter_mut().zip(wchunk.iter()) {
             *o = S::from_f64(w);
@@ -216,25 +207,12 @@ pub fn gather_into<S: Scalar>(
 /// The f64 instance of the gathered s×s cost-row reduction: four f64
 /// partial sums over the f32 cost block — **exactly** the historical
 /// `SparseCostContext::fill_cost_rows` inner loop (bit-identity contract
-/// of the `precision=f64` path).
+/// of the `precision=f64` path). The canonical loop lives in
+/// [`simd::portable::gathered_dot_f64`]; this dispatches to the active
+/// backend.
 #[inline]
 pub fn gathered_dot_f64(row: &[f32], t: &[f64]) -> f64 {
-    debug_assert_eq!(row.len(), t.len());
-    let s = row.len();
-    let mut acc = [0.0f64; 4];
-    let chunks = s / 4;
-    for c in 0..chunks {
-        let base = c * 4;
-        acc[0] += row[base] as f64 * t[base];
-        acc[1] += row[base + 1] as f64 * t[base + 1];
-        acc[2] += row[base + 2] as f64 * t[base + 2];
-        acc[3] += row[base + 3] as f64 * t[base + 3];
-    }
-    let mut tail = 0.0;
-    for lp in chunks * 4..s {
-        tail += row[lp] as f64 * t[lp];
-    }
-    acc[0] + acc[1] + acc[2] + acc[3] + tail
+    simd::gathered_dot_f64(simd::current(), row, t)
 }
 
 /// Lane count of the f32 gathered dot.
@@ -246,37 +224,12 @@ pub const F32_BLOCK: usize = 4096;
 /// multiplies in `F32_LANES` independent lanes (twice the SIMD width of
 /// the f64 path, no per-element convert), folded into an f64 total every
 /// `F32_BLOCK` elements so f32 rounding never compounds across blocks —
-/// the blocked form of the accumulator rule.
+/// the blocked form of the accumulator rule. The canonical loop lives in
+/// [`simd::portable::gathered_dot_f32`]; this dispatches to the active
+/// backend.
 #[inline]
 pub fn gathered_dot_f32(row: &[f32], t: &[f32]) -> f64 {
-    debug_assert_eq!(row.len(), t.len());
-    let mut total = 0.0f64;
-    let mut start = 0;
-    let n = row.len();
-    while start < n {
-        let end = (start + F32_BLOCK).min(n);
-        let r = &row[start..end];
-        let tv = &t[start..end];
-        let len = r.len();
-        let mut acc = [0.0f32; F32_LANES];
-        let chunks = len / F32_LANES;
-        for c in 0..chunks {
-            let b = c * F32_LANES;
-            for (lane, av) in acc.iter_mut().enumerate() {
-                *av += r[b + lane] * tv[b + lane];
-            }
-        }
-        let mut block = 0.0f64;
-        for av in acc {
-            block += av as f64;
-        }
-        for k in chunks * F32_LANES..len {
-            block += (r[k] * tv[k]) as f64;
-        }
-        total += block;
-        start = end;
-    }
-    total
+    simd::gathered_dot_f32(simd::current(), row, t)
 }
 
 #[cfg(test)]

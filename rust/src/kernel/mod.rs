@@ -32,13 +32,30 @@
 //!   bit-identical at any `SPARGW_THREADS` (see DESIGN.md §threading
 //!   model).
 //!
-//! This layer is deliberately slice-oriented so a future SIMD or
-//! accelerator backend can replace individual kernels behind the same
-//! signatures.
+//! * **SIMD dispatch.** The hottest bodies (dot, the gathered cost
+//!   reductions, the matmul/matvec micro-kernels, the Sinkhorn updates,
+//!   the spmv gathers) route through [`simd`]: a backend resolved once
+//!   at startup (`--simd` / `SPARGW_SIMD`, runtime feature detection)
+//!   selects AVX2, NEON or the portable scalar bodies. Every vector
+//!   body reproduces the portable lane schedule **bit-for-bit** (see
+//!   DESIGN.md §SIMD backends), so the backend — like threads, shards
+//!   and caching — is a pure throughput knob. Kernel entry points
+//!   capture [`simd::current`] *before* submitting pool chunks (pool
+//!   workers never see the caller's thread-local override).
+//!
+//! This layer is deliberately slice-oriented so further accelerator
+//! backends can replace individual kernels behind the same signatures.
+//!
+//! The `deny` below is the kernel-layer safety gate: every `unsafe`
+//! block in this module tree (the SIMD intrinsics and the
+//! pool-disjointness escapes) must carry a `// SAFETY:` comment, and CI
+//! runs clippy with `-D warnings`.
+#![deny(clippy::undocumented_unsafe_blocks)]
 
 pub mod dense;
 pub mod ops;
 pub mod scalar;
+pub mod simd;
 pub mod sparse;
 
 pub use scalar::{Precision, Scalar};

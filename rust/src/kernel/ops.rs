@@ -15,9 +15,13 @@
 //! The `*_into` updates are elementwise (every output depends on one
 //! input coordinate), so they chunk over output ranges on the crate-wide
 //! pool above [`PAR_GRAIN`] elements — trivially bit-identical at any
-//! thread count.
+//! thread count. The chunk bodies dispatch through [`super::simd`]
+//! (masked vector guards, proven bit-identical to the scalar branches);
+//! the backend is captured before the pool call per the
+//! capture-at-submit rule.
 
 use super::scalar::Scalar;
+use super::simd;
 use crate::runtime::pool::{pool, PAR_GRAIN};
 
 /// One balanced scaling update: `out = target ⊘ denom` with `0 ⊘ x := 0`
@@ -27,15 +31,9 @@ use crate::runtime::pool::{pool, PAR_GRAIN};
 pub fn scaling_update_into<S: Scalar>(target: &[S], denom: &[S], out: &mut [S]) {
     debug_assert_eq!(target.len(), denom.len());
     debug_assert_eq!(target.len(), out.len());
+    let backend = simd::current();
     pool().for_each_chunk_mut(out, PAR_GRAIN, |ochunk, range, _| {
-        for ((&t, &d), o) in target[range.clone()]
-            .iter()
-            .zip(&denom[range])
-            .zip(ochunk.iter_mut())
-        {
-            let q = if t == S::ZERO { S::ZERO } else { t / d };
-            *o = if q.is_finite() { q } else { S::ZERO };
-        }
+        simd::scaling_update(backend, &target[range.clone()], &denom[range], ochunk);
     });
 }
 
@@ -56,18 +54,9 @@ pub fn safe_div<S: Scalar>(a: &[S], b: &[S]) -> Vec<S> {
 pub fn pow_update_into<S: Scalar>(target: &[S], denom: &[S], expo: S, out: &mut [S]) {
     debug_assert_eq!(target.len(), denom.len());
     debug_assert_eq!(target.len(), out.len());
+    let backend = simd::current();
     pool().for_each_chunk_mut(out, PAR_GRAIN, |ochunk, range, _| {
-        for ((&t, &d), o) in target[range.clone()]
-            .iter()
-            .zip(&denom[range])
-            .zip(ochunk.iter_mut())
-        {
-            *o = if t == S::ZERO || d <= S::ZERO || !d.is_finite() {
-                S::ZERO
-            } else {
-                (t / d).powf(expo)
-            };
-        }
+        simd::pow_update(backend, &target[range.clone()], &denom[range], expo, ochunk);
     });
 }
 

@@ -106,6 +106,10 @@ pub trait Scalar:
     fn narrow(a: Self::Accum) -> Self;
     /// Read an accumulator as f64 (identity in both impls).
     fn accum_to_f64(a: Self::Accum) -> f64;
+    /// Build an accumulator from f64 (identity in both impls) — how the
+    /// concrete SIMD kernels return their f64 totals through the
+    /// generic signatures (see [`super::simd`]).
+    fn accum_from_f64(v: f64) -> Self::Accum;
     /// e^self.
     fn exp(self) -> Self;
     /// √self.
@@ -123,6 +127,13 @@ pub trait Scalar:
     /// operand and the blocking schedule differ. See
     /// [`kernel::dense`](super::dense) for the two instances.
     fn gathered_dot(row: &[f32], t: &[Self]) -> f64;
+
+    /// [`Scalar::gathered_dot`] with the SIMD backend passed explicitly
+    /// — the capture-at-submit form for call sites inside pool chunks
+    /// (`gw::tensor::fill_cost_rows` resolves
+    /// [`simd::current`](super::simd::current) once on the submitting
+    /// thread and threads the value through here).
+    fn gathered_dot_backend(backend: super::simd::Backend, row: &[f32], t: &[Self]) -> f64;
 }
 
 impl Scalar for f64 {
@@ -154,6 +165,10 @@ impl Scalar for f64 {
         a
     }
     #[inline(always)]
+    fn accum_from_f64(v: f64) -> f64 {
+        v
+    }
+    #[inline(always)]
     fn exp(self) -> Self {
         f64::exp(self)
     }
@@ -176,6 +191,10 @@ impl Scalar for f64 {
     #[inline]
     fn gathered_dot(row: &[f32], t: &[Self]) -> f64 {
         super::dense::gathered_dot_f64(row, t)
+    }
+    #[inline]
+    fn gathered_dot_backend(backend: super::simd::Backend, row: &[f32], t: &[Self]) -> f64 {
+        super::simd::gathered_dot_f64(backend, row, t)
     }
 }
 
@@ -208,6 +227,10 @@ impl Scalar for f32 {
         a
     }
     #[inline(always)]
+    fn accum_from_f64(v: f64) -> f64 {
+        v
+    }
+    #[inline(always)]
     fn exp(self) -> Self {
         f32::exp(self)
     }
@@ -230,6 +253,10 @@ impl Scalar for f32 {
     #[inline]
     fn gathered_dot(row: &[f32], t: &[Self]) -> f64 {
         super::dense::gathered_dot_f32(row, t)
+    }
+    #[inline]
+    fn gathered_dot_backend(backend: super::simd::Backend, row: &[f32], t: &[Self]) -> f64 {
+        super::simd::gathered_dot_f32(backend, row, t)
     }
 }
 

@@ -1,0 +1,891 @@
+//! **The SIMD backend layer** — runtime-dispatched vector bodies for the
+//! hottest kernels, bit-identical to the scalar lane schedules.
+//!
+//! PR 4/5 gave every hot loop a *fixed* lane schedule (4-lane f64 /
+//! 8-lane f32 partial-sum trees, f64 fold cadence every
+//! [`dense::F32_BLOCK`](crate::kernel::dense::F32_BLOCK) elements,
+//! strictly sequential sparse reductions) precisely so that explicit
+//! SIMD could later be dropped in without perturbing a single bit. This
+//! module is that drop-in:
+//!
+//! * [`portable`] holds the canonical scalar bodies (the schedules
+//!   themselves, moved verbatim from `dense`/`ops`/`sparse`);
+//! * [`x86`] (x86_64) implements them with AVX2 intrinsics, [`neon`]
+//!   (aarch64) with NEON — each reproducing the portable bits exactly
+//!   (no FMA, same lane↔accumulator mapping, same fold order, scalar
+//!   tails);
+//! * this file owns the [`Backend`] selector, the once-at-startup
+//!   resolution, and the per-kernel dispatch functions the kernel layer
+//!   calls.
+//!
+//! ## Dispatch lifecycle
+//!
+//! The backend is resolved **once**, at the first kernel call, in
+//! precedence order (mirroring the worker pool's thread budget):
+//!
+//! 1. [`configure`] — the CLI's `--simd NAME` (validated against runtime
+//!    feature detection; must run before the first kernel call);
+//! 2. the `SPARGW_SIMD` environment variable (`auto|avx2|neon|scalar`;
+//!    an unknown or unavailable value panics loudly rather than
+//!    silently degrading a benchmark);
+//! 3. `auto`: the best available backend for this CPU ([`detect`]).
+//!
+//! [`current`] reads the resolved value (or a thread-local override
+//! installed by [`with_backend_override`], the testing/benching knob).
+//!
+//! ## The capture-at-submit rule
+//!
+//! Pool workers are long-lived threads that never see another thread's
+//! override, so **kernel entry points resolve [`current`] once on the
+//! submitting thread and capture the `Copy` value into their pool chunk
+//! closures** (see `dense::matmul_into` et al.). A kernel body must
+//! never call [`current`] from inside a chunk.
+//!
+//! ## Safety
+//!
+//! The arch modules are `unsafe` (intrinsics + `target_feature`); every
+//! call site here documents why it is sound: the backend value proves
+//! runtime detection succeeded, and the gather kernels additionally get
+//! their index prepasses done by the dispatch bridges below, falling
+//! back to [`portable`] on any violation — malformed sparse structure
+//! panics via the portable bounds checks instead of becoming UB.
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+pub mod portable;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+use std::any::TypeId;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use super::scalar::Scalar;
+use crate::format_err;
+use crate::util::error::Result;
+
+/// A resolved kernel backend. `Copy` so kernel entry points can capture
+/// it into pool chunk closures (the capture-at-submit rule).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The portable scalar bodies — always available, and the canonical
+    /// definition of every kernel's bits.
+    Scalar,
+    /// AVX2 intrinsics (x86_64, runtime-detected).
+    Avx2,
+    /// NEON intrinsics (aarch64, runtime-detected).
+    Neon,
+}
+
+impl Backend {
+    /// Canonical spelling (CLI/env/metrics/sink-header token).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// Parse a CLI/env spelling. `"auto"` means "detect at startup" and
+    /// parses to `None`; errors name the valid values.
+    pub fn parse(s: &str) -> Result<Option<Backend>> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(None),
+            "scalar" => Ok(Some(Backend::Scalar)),
+            "avx2" => Ok(Some(Backend::Avx2)),
+            "neon" => Ok(Some(Backend::Neon)),
+            _ => Err(format_err!(
+                "unknown simd backend {s:?} (valid values: auto, avx2, neon, scalar)"
+            )),
+        }
+    }
+
+    /// Whether this backend can run on the current CPU (compile target
+    /// *and* runtime feature detection). `Scalar` is always available —
+    /// there is no compile-time arch requirement anywhere in the crate.
+    pub fn available(self) -> bool {
+        match self {
+            Backend::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+}
+
+/// The best available backend for this CPU (`auto` resolution): AVX2,
+/// then NEON, then the scalar fallback.
+pub fn detect() -> Backend {
+    for b in [Backend::Avx2, Backend::Neon] {
+        if b.available() {
+            return b;
+        }
+    }
+    Backend::Scalar
+}
+
+/// CLI-configured request, encoded for the pre-resolution atomic:
+/// 0 = unset, 1 = explicit auto, 2.. = Backend discriminants + 2.
+static CONFIGURED: AtomicU8 = AtomicU8::new(0);
+static RESOLVED: OnceLock<Backend> = OnceLock::new();
+
+/// Set the backend from the CLI (`--simd NAME`; `None` = explicit
+/// `auto`). Validates availability immediately so `--simd avx2` on a
+/// non-AVX2 machine fails with a one-line error instead of a late
+/// panic. Like [`crate::runtime::pool::configure_threads`], this takes
+/// effect only if called before the first kernel dispatch.
+pub fn configure(req: Option<Backend>) -> Result<()> {
+    let code = match req {
+        None => 1,
+        Some(b) => {
+            if !b.available() {
+                return Err(format_err!(
+                    "simd backend {:?} is not available on this CPU (detected: {})",
+                    b.name(),
+                    detect().name()
+                ));
+            }
+            match b {
+                Backend::Scalar => 2,
+                Backend::Avx2 => 3,
+                Backend::Neon => 4,
+            }
+        }
+    };
+    CONFIGURED.store(code, Ordering::SeqCst);
+    Ok(())
+}
+
+fn resolve() -> Backend {
+    match CONFIGURED.load(Ordering::SeqCst) {
+        1 => return detect(),
+        2 => return Backend::Scalar,
+        3 => return Backend::Avx2,
+        4 => return Backend::Neon,
+        _ => {}
+    }
+    if let Ok(v) = std::env::var("SPARGW_SIMD") {
+        let req = Backend::parse(&v)
+            .unwrap_or_else(|e| panic!("SPARGW_SIMD={v:?}: {e}"));
+        return match req {
+            None => detect(),
+            Some(b) => {
+                assert!(
+                    b.available(),
+                    "SPARGW_SIMD={v:?}: backend not available on this CPU (detected: {})",
+                    detect().name()
+                );
+                b
+            }
+        };
+    }
+    detect()
+}
+
+/// The process-wide resolved backend (resolution happens on first call).
+pub fn resolved() -> Backend {
+    *RESOLVED.get_or_init(resolve)
+}
+
+thread_local! {
+    /// Per-thread backend override (testing/benching knob — the
+    /// `scalar_vs_simd` bench matrix and the per-kernel equivalence
+    /// tests sweep backends inside one process with this).
+    static OVERRIDE: std::cell::Cell<Option<Backend>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// The backend kernel entry points should use **on this thread, right
+/// now**: the thread-local override if one is installed, else the
+/// process-wide resolved backend. Kernel entry points call this once and
+/// capture the value before submitting pool chunks (pool workers never
+/// see the caller's override).
+#[inline]
+pub fn current() -> Backend {
+    OVERRIDE.with(|o| o.get()).unwrap_or_else(resolved)
+}
+
+/// Run `f` with this thread's backend forced to `backend`. Panics if the
+/// backend is unavailable on this CPU (an override must never make a
+/// dispatch bridge call intrinsics the hardware lacks). Nests and
+/// restores on unwind, like
+/// [`crate::runtime::pool::with_thread_limit`].
+pub fn with_backend_override<T>(backend: Backend, f: impl FnOnce() -> T) -> T {
+    assert!(
+        backend.available(),
+        "backend override {:?} not available on this CPU",
+        backend.name()
+    );
+    struct Restore(Option<Backend>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|o| o.set(self.0));
+        }
+    }
+    let prev = OVERRIDE.with(|o| o.get());
+    let _restore = Restore(prev);
+    OVERRIDE.with(|o| o.set(Some(backend)));
+    f()
+}
+
+// ---------------------------------------------------------------------
+// Generic → concrete bridging.
+//
+// The kernel layer is generic over `Scalar`; the arch modules are
+// concrete (f32/f64). `TypeId` equality on the `'static` scalar type
+// proves which concrete type `S` is, making the pointer reinterpret
+// sound — same type, same layout, same lifetime.
+// ---------------------------------------------------------------------
+
+#[inline]
+fn as_f64<S: Scalar>(s: &[S]) -> Option<&[f64]> {
+    if TypeId::of::<S>() == TypeId::of::<f64>() {
+        // SAFETY: TypeId equality on 'static types proves S == f64, so
+        // the slice is already a [f64] with the same length and lifetime.
+        Some(unsafe { std::slice::from_raw_parts(s.as_ptr() as *const f64, s.len()) })
+    } else {
+        None
+    }
+}
+
+#[inline]
+fn as_f64_mut<S: Scalar>(s: &mut [S]) -> Option<&mut [f64]> {
+    if TypeId::of::<S>() == TypeId::of::<f64>() {
+        // SAFETY: TypeId equality on 'static types proves S == f64; the
+        // exclusive borrow is carried through unchanged.
+        Some(unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut f64, s.len()) })
+    } else {
+        None
+    }
+}
+
+#[inline]
+fn as_f32<S: Scalar>(s: &[S]) -> Option<&[f32]> {
+    if TypeId::of::<S>() == TypeId::of::<f32>() {
+        // SAFETY: TypeId equality on 'static types proves S == f32.
+        Some(unsafe { std::slice::from_raw_parts(s.as_ptr() as *const f32, s.len()) })
+    } else {
+        None
+    }
+}
+
+#[inline]
+fn as_f32_mut<S: Scalar>(s: &mut [S]) -> Option<&mut [f32]> {
+    if TypeId::of::<S>() == TypeId::of::<f32>() {
+        // SAFETY: TypeId equality on 'static types proves S == f32; the
+        // exclusive borrow is carried through unchanged.
+        Some(unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut f32, s.len()) })
+    } else {
+        None
+    }
+}
+
+/// Index prepass for the vector gather kernels: every index must address
+/// inside a buffer of `len` elements, and `len` must fit the signed
+/// 32-bit offsets the gather instructions take. On failure the dispatch
+/// bridges fall back to [`portable`], whose ordinary slice indexing
+/// panics on malformed structure instead of gathering out of bounds.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn gather_ok(idx: &[u32], len: usize) -> bool {
+    len <= i32::MAX as usize && idx.iter().all(|&i| (i as usize) < len)
+}
+
+/// Minimum slots before the sparse gather kernels beat their prepass
+/// overhead; shorter rows/columns take the portable body.
+#[cfg(target_arch = "x86_64")]
+const MIN_GATHER_SLOTS: usize = 8;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! Generic→AVX2 bridges. Every `unsafe` call is sound because the
+    //! dispatch functions only route here for `Backend::Avx2`, which is
+    //! only constructible as a *selected* backend after
+    //! `is_x86_feature_detected!("avx2")` succeeded (see
+    //! `Backend::available`, `configure`, `with_backend_override`).
+
+    use super::*;
+
+    #[inline]
+    pub(super) fn dot<S: Scalar>(a: &[S], b: &[S]) -> S::Accum {
+        if let (Some(a64), Some(b64)) = (as_f64(a), as_f64(b)) {
+            // SAFETY: AVX2 was runtime-detected (module contract above).
+            return S::accum_from_f64(unsafe { x86::dot_f64(a64, b64) });
+        }
+        if let (Some(a32), Some(b32)) = (as_f32(a), as_f32(b)) {
+            // SAFETY: AVX2 was runtime-detected (module contract above).
+            return S::accum_from_f64(unsafe { x86::dot_f32(a32, b32) });
+        }
+        portable::dot(a, b)
+    }
+
+    #[inline]
+    pub(super) fn gathered_dot_f64(row: &[f32], t: &[f64]) -> f64 {
+        // SAFETY: AVX2 was runtime-detected (module contract above).
+        unsafe { x86::gathered_dot_f64(row, t) }
+    }
+
+    #[inline]
+    pub(super) fn gathered_dot_f32(row: &[f32], t: &[f32]) -> f64 {
+        // SAFETY: AVX2 was runtime-detected (module contract above).
+        unsafe { x86::gathered_dot_f32(row, t) }
+    }
+
+    #[inline]
+    pub(super) fn axpy<S: Scalar>(alpha: S, x: &[S], y: &mut [S]) {
+        if let Some(x64) = as_f64(x) {
+            if let Some(y64) = as_f64_mut(y) {
+                // SAFETY: AVX2 was runtime-detected (module contract above).
+                unsafe { x86::axpy_f64(alpha.to_f64(), x64, y64) };
+                return;
+            }
+        }
+        if let Some(x32) = as_f32(x) {
+            if let Some(y32) = as_f32_mut(y) {
+                // f32 → f64 → f32 is the identity on f32 values.
+                // SAFETY: AVX2 was runtime-detected (module contract above).
+                unsafe { x86::axpy_f32(alpha.to_f64() as f32, x32, y32) };
+                return;
+            }
+        }
+        portable::axpy(alpha, x, y);
+    }
+
+    #[inline]
+    pub(super) fn axpy_wide<S: Scalar>(alpha: S, x: &[S], y: &mut [f64]) {
+        if let Some(x64) = as_f64(x) {
+            // At S = f64 the wide form *is* the storage-width axpy.
+            // SAFETY: AVX2 was runtime-detected (module contract above).
+            unsafe { x86::axpy_f64(alpha.to_f64(), x64, y) };
+            return;
+        }
+        if let Some(x32) = as_f32(x) {
+            // SAFETY: AVX2 was runtime-detected (module contract above).
+            unsafe { x86::axpy_wide_f32(alpha.to_f64() as f32, x32, y) };
+            return;
+        }
+        portable::axpy_wide(alpha, x, y);
+    }
+
+    #[inline]
+    pub(super) fn scaling_update<S: Scalar>(target: &[S], denom: &[S], out: &mut [S]) {
+        if let (Some(t64), Some(d64)) = (as_f64(target), as_f64(denom)) {
+            if let Some(o64) = as_f64_mut(out) {
+                // SAFETY: AVX2 was runtime-detected (module contract above).
+                unsafe { x86::scaling_update_f64(t64, d64, o64) };
+                return;
+            }
+        }
+        if let (Some(t32), Some(d32)) = (as_f32(target), as_f32(denom)) {
+            if let Some(o32) = as_f32_mut(out) {
+                // SAFETY: AVX2 was runtime-detected (module contract above).
+                unsafe { x86::scaling_update_f32(t32, d32, o32) };
+                return;
+            }
+        }
+        portable::scaling_update(target, denom, out);
+    }
+
+    #[inline]
+    pub(super) fn pow_update<S: Scalar>(target: &[S], denom: &[S], expo: S, out: &mut [S]) {
+        if let (Some(t64), Some(d64)) = (as_f64(target), as_f64(denom)) {
+            if let Some(o64) = as_f64_mut(out) {
+                // SAFETY: AVX2 was runtime-detected (module contract above).
+                unsafe { x86::pow_update_f64(t64, d64, expo.to_f64(), o64) };
+                return;
+            }
+        }
+        if let (Some(t32), Some(d32)) = (as_f32(target), as_f32(denom)) {
+            if let Some(o32) = as_f32_mut(out) {
+                // SAFETY: AVX2 was runtime-detected (module contract above).
+                unsafe { x86::pow_update_f32(t32, d32, expo.to_f64() as f32, o32) };
+                return;
+            }
+        }
+        portable::pow_update(target, denom, expo, out);
+    }
+
+    #[inline]
+    pub(super) fn spmv_gather_dot<S: Scalar>(
+        cols: &[u32],
+        srcs: &[u32],
+        vals: &[S],
+        x: &[S],
+    ) -> S::Accum {
+        if cols.len() >= MIN_GATHER_SLOTS
+            && cols.len() == srcs.len()
+            && gather_ok(srcs, vals.len())
+            && gather_ok(cols, x.len())
+        {
+            if let (Some(v64), Some(x64)) = (as_f64(vals), as_f64(x)) {
+                // SAFETY: AVX2 runtime-detected; the prepass above
+                // validated every index and the i32 offset range.
+                return S::accum_from_f64(unsafe { x86::spmv_dot_f64(cols, srcs, v64, x64) });
+            }
+            if let (Some(v32), Some(x32)) = (as_f32(vals), as_f32(x)) {
+                // SAFETY: AVX2 runtime-detected; the prepass above
+                // validated every index and the i32 offset range.
+                return S::accum_from_f64(unsafe { x86::spmv_dot_f32(cols, srcs, v32, x32) });
+            }
+        }
+        portable::spmv_gather_dot(cols, srcs, vals, x)
+    }
+
+    #[inline]
+    pub(super) fn spmv_t_gather_dot<S: Scalar>(
+        es: &[u32],
+        rows_e: &[u32],
+        vals: &[S],
+        x: &[S],
+    ) -> S {
+        if es.len() >= MIN_GATHER_SLOTS
+            && gather_ok(es, vals.len().min(rows_e.len()))
+            && x.len() <= i32::MAX as usize
+        {
+            if let (Some(v64), Some(x64)) = (as_f64(vals), as_f64(x)) {
+                // SAFETY: AVX2 runtime-detected; `es` validated against
+                // both `vals` and `rows_e` and the i32 offset range; the
+                // kernel bounds-checks row values against `x` itself.
+                return S::from_f64(unsafe { x86::spmv_t_dot_f64(es, rows_e, v64, x64) });
+            }
+        }
+        // f32 spmv_t stays portable: the f32 column reduction is at
+        // storage width with no wide accumulator to amortize the extra
+        // epi32 gather round-trip.
+        portable::spmv_t_gather_dot(es, rows_e, vals, x)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon_bridge {
+    //! Generic→NEON bridges; same soundness contract as the AVX2
+    //! bridges (`Backend::Neon` is only selected after
+    //! `is_aarch64_feature_detected!("neon")` succeeded). The Sinkhorn
+    //! element-wise updates and the spmv gathers stay portable on NEON
+    //! (no hardware gather; see `neon` module docs).
+
+    use super::*;
+
+    #[inline]
+    pub(super) fn dot<S: Scalar>(a: &[S], b: &[S]) -> S::Accum {
+        if let (Some(a64), Some(b64)) = (as_f64(a), as_f64(b)) {
+            // SAFETY: NEON was runtime-detected (module contract above).
+            return S::accum_from_f64(unsafe { neon::dot_f64(a64, b64) });
+        }
+        if let (Some(a32), Some(b32)) = (as_f32(a), as_f32(b)) {
+            // SAFETY: NEON was runtime-detected (module contract above).
+            return S::accum_from_f64(unsafe { neon::dot_f32(a32, b32) });
+        }
+        portable::dot(a, b)
+    }
+
+    #[inline]
+    pub(super) fn gathered_dot_f64(row: &[f32], t: &[f64]) -> f64 {
+        // SAFETY: NEON was runtime-detected (module contract above).
+        unsafe { neon::gathered_dot_f64(row, t) }
+    }
+
+    #[inline]
+    pub(super) fn gathered_dot_f32(row: &[f32], t: &[f32]) -> f64 {
+        // SAFETY: NEON was runtime-detected (module contract above).
+        unsafe { neon::gathered_dot_f32(row, t) }
+    }
+
+    #[inline]
+    pub(super) fn axpy<S: Scalar>(alpha: S, x: &[S], y: &mut [S]) {
+        if let Some(x64) = as_f64(x) {
+            if let Some(y64) = as_f64_mut(y) {
+                // SAFETY: NEON was runtime-detected (module contract above).
+                unsafe { neon::axpy_f64(alpha.to_f64(), x64, y64) };
+                return;
+            }
+        }
+        if let Some(x32) = as_f32(x) {
+            if let Some(y32) = as_f32_mut(y) {
+                // SAFETY: NEON was runtime-detected (module contract above).
+                unsafe { neon::axpy_f32(alpha.to_f64() as f32, x32, y32) };
+                return;
+            }
+        }
+        portable::axpy(alpha, x, y);
+    }
+
+    #[inline]
+    pub(super) fn axpy_wide<S: Scalar>(alpha: S, x: &[S], y: &mut [f64]) {
+        if let Some(x64) = as_f64(x) {
+            // SAFETY: NEON was runtime-detected (module contract above).
+            unsafe { neon::axpy_f64(alpha.to_f64(), x64, y) };
+            return;
+        }
+        if let Some(x32) = as_f32(x) {
+            // SAFETY: NEON was runtime-detected (module contract above).
+            unsafe { neon::axpy_wide_f32(alpha.to_f64() as f32, x32, y) };
+            return;
+        }
+        portable::axpy_wide(alpha, x, y);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatched kernel entry points.
+//
+// Each takes the backend explicitly (capture-at-submit: the kernel
+// layer resolves `current()` once on the submitting thread). Arms for
+// other architectures are compiled out; anything unmatched — including
+// a `Backend` value for a foreign arch, which `configure`/`resolve`
+// never produce — takes the portable body.
+// ---------------------------------------------------------------------
+
+/// Dispatched [`portable::dot`].
+#[inline]
+pub fn dot<S: Scalar>(backend: Backend, a: &[S], b: &[S]) -> S::Accum {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::dot(a, b),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon_bridge::dot(a, b),
+        _ => portable::dot(a, b),
+    }
+}
+
+/// Dispatched [`portable::gathered_dot_f64`].
+#[inline]
+pub fn gathered_dot_f64(backend: Backend, row: &[f32], t: &[f64]) -> f64 {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::gathered_dot_f64(row, t),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon_bridge::gathered_dot_f64(row, t),
+        _ => portable::gathered_dot_f64(row, t),
+    }
+}
+
+/// Dispatched [`portable::gathered_dot_f32`].
+#[inline]
+pub fn gathered_dot_f32(backend: Backend, row: &[f32], t: &[f32]) -> f64 {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::gathered_dot_f32(row, t),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon_bridge::gathered_dot_f32(row, t),
+        _ => portable::gathered_dot_f32(row, t),
+    }
+}
+
+/// Dispatched [`portable::axpy`] — the blocked-matmul micro-kernel.
+#[inline]
+pub fn axpy<S: Scalar>(backend: Backend, alpha: S, x: &[S], y: &mut [S]) {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::axpy(alpha, x, y),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon_bridge::axpy(alpha, x, y),
+        _ => portable::axpy(alpha, x, y),
+    }
+}
+
+/// Dispatched [`portable::axpy_wide`].
+#[inline]
+pub fn axpy_wide<S: Scalar>(backend: Backend, alpha: S, x: &[S], y: &mut [f64]) {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::axpy_wide(alpha, x, y),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => neon_bridge::axpy_wide(alpha, x, y),
+        _ => portable::axpy_wide(alpha, x, y),
+    }
+}
+
+/// Dispatched [`portable::scaling_update`].
+#[inline]
+pub fn scaling_update<S: Scalar>(backend: Backend, target: &[S], denom: &[S], out: &mut [S]) {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::scaling_update(target, denom, out),
+        _ => portable::scaling_update(target, denom, out),
+    }
+}
+
+/// Dispatched [`portable::pow_update`].
+#[inline]
+pub fn pow_update<S: Scalar>(backend: Backend, target: &[S], denom: &[S], expo: S, out: &mut [S]) {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::pow_update(target, denom, expo, out),
+        _ => portable::pow_update(target, denom, expo, out),
+    }
+}
+
+/// Dispatched [`portable::spmv_gather_dot`] (one CSR row of `A·x`).
+#[inline]
+pub fn spmv_gather_dot<S: Scalar>(
+    backend: Backend,
+    cols: &[u32],
+    srcs: &[u32],
+    vals: &[S],
+    x: &[S],
+) -> S::Accum {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::spmv_gather_dot(cols, srcs, vals, x),
+        _ => portable::spmv_gather_dot(cols, srcs, vals, x),
+    }
+}
+
+/// Dispatched [`portable::spmv_t_gather_dot`] (one CSC column of
+/// `Aᵀ·x`).
+#[inline]
+pub fn spmv_t_gather_dot<S: Scalar>(
+    backend: Backend,
+    es: &[u32],
+    rows_e: &[u32],
+    vals: &[S],
+    x: &[S],
+) -> S {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => avx2::spmv_t_gather_dot(es, rows_e, vals, x),
+        _ => portable::spmv_t_gather_dot(es, rows_e, vals, x),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic mixed-magnitude data (includes denormal-scale and
+    /// large entries so lane order actually matters to the low bits).
+    fn data_f64(n: usize, seed: usize) -> Vec<f64> {
+        (0..n)
+            .map(|i| {
+                let k = i + seed * 7919;
+                ((k as f64) * 0.61).sin() * 10f64.powi((k % 9) as i32 - 4)
+            })
+            .collect()
+    }
+
+    fn data_f32(n: usize, seed: usize) -> Vec<f32> {
+        data_f64(n, seed).iter().map(|&v| v as f32).collect()
+    }
+
+    /// Lengths straddling every lane/block boundary in the schedules.
+    const LENGTHS: [usize; 16] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 13, 31, 64, 257, 4095, 4096, 4100];
+
+    #[test]
+    fn parse_roundtrip_and_auto() {
+        assert_eq!(Backend::parse("auto").unwrap(), None);
+        for b in [Backend::Scalar, Backend::Avx2, Backend::Neon] {
+            assert_eq!(Backend::parse(b.name()).unwrap(), Some(b));
+        }
+        assert_eq!(Backend::parse("AVX2").unwrap(), Some(Backend::Avx2));
+        let msg = format!("{}", Backend::parse("sse9").unwrap_err());
+        for valid in ["auto", "avx2", "neon", "scalar"] {
+            assert!(msg.contains(valid), "{msg}");
+        }
+    }
+
+    #[test]
+    fn scalar_always_available_and_detect_is_available() {
+        assert!(Backend::Scalar.available());
+        assert!(detect().available());
+    }
+
+    #[test]
+    fn override_nests_and_restores() {
+        let base = current();
+        with_backend_override(Backend::Scalar, || {
+            assert_eq!(current(), Backend::Scalar);
+            with_backend_override(detect(), || assert_eq!(current(), detect()));
+            assert_eq!(current(), Backend::Scalar);
+        });
+        assert_eq!(current(), base);
+    }
+
+    #[test]
+    fn dispatch_at_scalar_is_the_portable_body() {
+        let a = data_f64(100, 1);
+        let b = data_f64(100, 2);
+        assert_eq!(
+            dot::<f64>(Backend::Scalar, &a, &b).to_bits(),
+            portable::dot(&a, &b).to_bits()
+        );
+    }
+
+    #[test]
+    fn dot_bitwise_equivalence() {
+        let best = detect();
+        for &n in &LENGTHS {
+            let (a, b) = (data_f64(n, 1), data_f64(n, 2));
+            assert_eq!(
+                dot::<f64>(best, &a, &b).to_bits(),
+                portable::dot(&a, &b).to_bits(),
+                "dot f64 n={n}"
+            );
+            let (a32, b32) = (data_f32(n, 3), data_f32(n, 4));
+            assert_eq!(
+                dot::<f32>(best, &a32, &b32).to_bits(),
+                portable::dot(&a32, &b32).to_bits(),
+                "dot f32 n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn gathered_dot_bitwise_equivalence() {
+        let best = detect();
+        for &n in &LENGTHS {
+            let row = data_f32(n, 5);
+            let t64 = data_f64(n, 6);
+            assert_eq!(
+                gathered_dot_f64(best, &row, &t64).to_bits(),
+                portable::gathered_dot_f64(&row, &t64).to_bits(),
+                "gathered f64 n={n}"
+            );
+            let t32 = data_f32(n, 7);
+            assert_eq!(
+                gathered_dot_f32(best, &row, &t32).to_bits(),
+                portable::gathered_dot_f32(&row, &t32).to_bits(),
+                "gathered f32 n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_bitwise_equivalence() {
+        let best = detect();
+        for &n in &LENGTHS {
+            let x = data_f64(n, 8);
+            let mut ya = data_f64(n, 9);
+            let mut yb = ya.clone();
+            axpy::<f64>(best, 0.37, &x, &mut ya);
+            portable::axpy(0.37, &x, &mut yb);
+            for (a, b) in ya.iter().zip(&yb) {
+                assert_eq!(a.to_bits(), b.to_bits(), "axpy f64 n={n}");
+            }
+            let x32 = data_f32(n, 10);
+            let mut ya32 = data_f32(n, 11);
+            let mut yb32 = ya32.clone();
+            axpy::<f32>(best, 0.37, &x32, &mut ya32);
+            portable::axpy(0.37, &x32, &mut yb32);
+            for (a, b) in ya32.iter().zip(&yb32) {
+                assert_eq!(a.to_bits(), b.to_bits(), "axpy f32 n={n}");
+            }
+            let mut wa = data_f64(n, 12);
+            let mut wb = wa.clone();
+            axpy_wide::<f32>(best, -1.83, &x32, &mut wa);
+            portable::axpy_wide(-1.83f32, &x32, &mut wb);
+            for (a, b) in wa.iter().zip(&wb) {
+                assert_eq!(a.to_bits(), b.to_bits(), "axpy_wide f32 n={n}");
+            }
+        }
+    }
+
+    /// Edge-case laden inputs for the guarded Sinkhorn updates: zeros of
+    /// both signs, infinities, NaN, denormals — the masked vector guards
+    /// must reproduce the scalar branches bit-for-bit.
+    fn guard_cases_f64(n: usize) -> (Vec<f64>, Vec<f64>) {
+        let special = [
+            0.0,
+            -0.0,
+            1.0,
+            -2.5,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            5e-324,
+            1e308,
+        ];
+        let t = (0..n).map(|i| special[i % special.len()]).collect();
+        let d = (0..n).map(|i| special[(i * 5 + 3) % special.len()]).collect();
+        (t, d)
+    }
+
+    #[test]
+    fn scaling_and_pow_update_bitwise_equivalence() {
+        let best = detect();
+        for &n in &LENGTHS {
+            let (t, d) = guard_cases_f64(n);
+            let mut oa = vec![9.0f64; n];
+            let mut ob = vec![9.0f64; n];
+            scaling_update::<f64>(best, &t, &d, &mut oa);
+            portable::scaling_update(&t, &d, &mut ob);
+            for (i, (a, b)) in oa.iter().zip(&ob).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "scaling f64 n={n} i={i}");
+            }
+            pow_update::<f64>(best, &t, &d, 0.7, &mut oa);
+            portable::pow_update(&t, &d, 0.7, &mut ob);
+            for (i, (a, b)) in oa.iter().zip(&ob).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "pow f64 n={n} i={i}");
+            }
+            let t32: Vec<f32> = t.iter().map(|&v| v as f32).collect();
+            let d32: Vec<f32> = d.iter().map(|&v| v as f32).collect();
+            let mut oa32 = vec![9.0f32; n];
+            let mut ob32 = vec![9.0f32; n];
+            scaling_update::<f32>(best, &t32, &d32, &mut oa32);
+            portable::scaling_update(&t32, &d32, &mut ob32);
+            for (i, (a, b)) in oa32.iter().zip(&ob32).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "scaling f32 n={n} i={i}");
+            }
+            pow_update::<f32>(best, &t32, &d32, 0.7, &mut oa32);
+            portable::pow_update(&t32, &d32, 0.7, &mut ob32);
+            for (i, (a, b)) in oa32.iter().zip(&ob32).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "pow f32 n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_gather_dots_bitwise_equivalence() {
+        let best = detect();
+        // Sweep row lengths across the vector/portable threshold,
+        // including duplicate indices and out-of-order columns.
+        for &slots in &[0usize, 1, 3, 7, 8, 9, 12, 100, 257] {
+            let nvals = 300usize.max(slots);
+            let nx = 97usize;
+            let cols: Vec<u32> = (0..slots).map(|k| ((k * 13 + 5) % nx) as u32).collect();
+            let srcs: Vec<u32> = (0..slots).map(|k| ((k * 7 + 2) % nvals) as u32).collect();
+            let vals = data_f64(nvals, 13);
+            let x = data_f64(nx, 14);
+            assert_eq!(
+                spmv_gather_dot::<f64>(best, &cols, &srcs, &vals, &x).to_bits(),
+                portable::spmv_gather_dot(&cols, &srcs, &vals, &x).to_bits(),
+                "spmv f64 slots={slots}"
+            );
+            let vals32 = data_f32(nvals, 15);
+            let x32 = data_f32(nx, 16);
+            assert_eq!(
+                spmv_gather_dot::<f32>(best, &cols, &srcs, &vals32, &x32).to_bits(),
+                portable::spmv_gather_dot(&cols, &srcs, &vals32, &x32).to_bits(),
+                "spmv f32 slots={slots}"
+            );
+            // Transposed form: es indexes (vals, rows_e) pairs.
+            let es: Vec<u32> = (0..slots).map(|k| ((k * 11 + 1) % nvals) as u32).collect();
+            let rows_e: Vec<u32> = (0..nvals).map(|e| ((e * 17 + 3) % nx) as u32).collect();
+            assert_eq!(
+                spmv_t_gather_dot::<f64>(best, &es, &rows_e, &vals, &x).to_bits(),
+                portable::spmv_t_gather_dot(&es, &rows_e, &vals, &x).to_bits(),
+                "spmv_t f64 slots={slots}"
+            );
+        }
+    }
+
+    #[test]
+    fn unavailable_backend_rejected_by_configure() {
+        // At most one arch backend is available per machine, so the
+        // other must be rejected with a one-line error naming both the
+        // request and the detected backend. (Validation fails *before*
+        // the atomic store, so this never perturbs the process-wide
+        // resolution other tests share.)
+        for b in [Backend::Avx2, Backend::Neon] {
+            if !b.available() {
+                let msg = format!("{}", configure(Some(b)).unwrap_err());
+                assert!(msg.contains(b.name()), "{msg}");
+                assert!(msg.contains(detect().name()), "{msg}");
+            }
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! NEON kernel bodies (aarch64).
+//!
+//! Same bit-identity rules as [`super::x86`]: no fused multiply-add
+//! (`vaddq`/`vmulq` pairs, never `vfmaq`), lane ↔ accumulator
+//! correspondence preserved, folds in the scalar order, scalar tails.
+//! NEON registers are 128-bit, so the 4-lane f64 schedules use **two**
+//! `float64x2_t` accumulators — `acc01` carrying scalar partial sums
+//! (s0, s1) and `acc23` carrying (s2, s3) — and the 8-lane f32 schedule
+//! uses two `float32x4_t` accumulators for lanes 0–3 and 4–7.
+//!
+//! This backend implements the dense reduction and axpy kernels; the
+//! Sinkhorn element-wise updates and the spmv gathers stay on
+//! [`super::portable`] (NEON has no hardware gather, and the masked
+//! element-wise ops gain little at 128 bits) — the dispatch layer
+//! routes those accordingly.
+//!
+//! All functions require NEON at runtime; the dispatch layer only calls
+//! them after `is_aarch64_feature_detected!("neon")` succeeded.
+
+use core::arch::aarch64::*;
+
+use crate::kernel::dense::{F32_BLOCK, F32_LANES};
+
+// The 8-lane f32 schedule is hard-wired into two `float32x4_t` accumulators.
+const _: () = assert!(F32_LANES == 8);
+
+/// f64 dot product — partial sums (s0, s1) in `acc01` and (s2, s3) in
+/// `acc23`, folded `((s0+s1)+s2)+s3`, scalar tail.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON. Panics if the slices have
+/// different lengths.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for k in 0..chunks {
+        let i = k * 4;
+        let a01 = vld1q_f64(a.as_ptr().add(i));
+        let b01 = vld1q_f64(b.as_ptr().add(i));
+        let a23 = vld1q_f64(a.as_ptr().add(i + 2));
+        let b23 = vld1q_f64(b.as_ptr().add(i + 2));
+        acc01 = vaddq_f64(acc01, vmulq_f64(a01, b01));
+        acc23 = vaddq_f64(acc23, vmulq_f64(a23, b23));
+    }
+    let mut s = vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01);
+    s += vgetq_lane_f64::<0>(acc23);
+    s += vgetq_lane_f64::<1>(acc23);
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// f32 dot product with f64 accumulation — products at f32 width
+/// (`vmulq_f32`), widened exactly (`vcvt_f64_f32` /
+/// `vcvt_high_f64_f32`) into the same two-register 4-lane f64
+/// partial-sum tree as [`dot_f64`].
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON. Panics if the slices have
+/// different lengths.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for k in 0..chunks {
+        let i = k * 4;
+        let prod = vmulq_f32(vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+        acc01 = vaddq_f64(acc01, vcvt_f64_f32(vget_low_f32(prod)));
+        acc23 = vaddq_f64(acc23, vcvt_high_f64_f32(prod));
+    }
+    let mut s = vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01);
+    s += vgetq_lane_f64::<0>(acc23);
+    s += vgetq_lane_f64::<1>(acc23);
+    for i in chunks * 4..n {
+        s += (a[i] * b[i]) as f64;
+    }
+    s
+}
+
+/// Gathered cost-row reduction, f64 transport: widen 4 f32 cost entries
+/// (exact) and multiply-accumulate against the f64 transport values in
+/// the two-register 4-lane tree.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON. Panics if the slices have
+/// different lengths.
+#[target_feature(enable = "neon")]
+pub unsafe fn gathered_dot_f64(row: &[f32], t: &[f64]) -> f64 {
+    assert_eq!(row.len(), t.len());
+    let s = row.len();
+    let chunks = s / 4;
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for c in 0..chunks {
+        let base = c * 4;
+        let vr = vld1q_f32(row.as_ptr().add(base));
+        let t01 = vld1q_f64(t.as_ptr().add(base));
+        let t23 = vld1q_f64(t.as_ptr().add(base + 2));
+        acc01 = vaddq_f64(acc01, vmulq_f64(vcvt_f64_f32(vget_low_f32(vr)), t01));
+        acc23 = vaddq_f64(acc23, vmulq_f64(vcvt_high_f64_f32(vr), t23));
+    }
+    let lanes = [
+        vgetq_lane_f64::<0>(acc01),
+        vgetq_lane_f64::<1>(acc01),
+        vgetq_lane_f64::<0>(acc23),
+        vgetq_lane_f64::<1>(acc23),
+    ];
+    let mut tail = 0.0;
+    for lp in chunks * 4..s {
+        tail += row[lp] as f64 * t[lp];
+    }
+    lanes[0] + lanes[1] + lanes[2] + lanes[3] + tail
+}
+
+/// Gathered cost-row reduction, f32 transport: lanes 0–3 in one
+/// `float32x4_t` accumulator and lanes 4–7 in another, folded into f64
+/// in ascending lane order at every [`F32_BLOCK`] boundary, f32 tail
+/// products widened individually.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON. Panics if the slices have
+/// different lengths.
+#[target_feature(enable = "neon")]
+pub unsafe fn gathered_dot_f32(row: &[f32], t: &[f32]) -> f64 {
+    assert_eq!(row.len(), t.len());
+    let n = row.len();
+    let mut total = 0.0f64;
+    let mut start = 0;
+    while start < n {
+        let end = (start + F32_BLOCK).min(n);
+        let len = end - start;
+        let chunks = len / F32_LANES;
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let b = start + c * F32_LANES;
+            acc_lo = vaddq_f32(
+                acc_lo,
+                vmulq_f32(vld1q_f32(row.as_ptr().add(b)), vld1q_f32(t.as_ptr().add(b))),
+            );
+            acc_hi = vaddq_f32(
+                acc_hi,
+                vmulq_f32(
+                    vld1q_f32(row.as_ptr().add(b + 4)),
+                    vld1q_f32(t.as_ptr().add(b + 4)),
+                ),
+            );
+        }
+        let lanes = [
+            vgetq_lane_f32::<0>(acc_lo),
+            vgetq_lane_f32::<1>(acc_lo),
+            vgetq_lane_f32::<2>(acc_lo),
+            vgetq_lane_f32::<3>(acc_lo),
+            vgetq_lane_f32::<0>(acc_hi),
+            vgetq_lane_f32::<1>(acc_hi),
+            vgetq_lane_f32::<2>(acc_hi),
+            vgetq_lane_f32::<3>(acc_hi),
+        ];
+        let mut block = 0.0f64;
+        for av in lanes {
+            block += av as f64;
+        }
+        for k in start + chunks * F32_LANES..end {
+            block += (row[k] * t[k]) as f64;
+        }
+        total += block;
+        start = end;
+    }
+    total
+}
+
+/// f64 axpy `y += alpha·x` over `min(x.len(), y.len())` elements.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON.
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_f64(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 2;
+    let va = vdupq_n_f64(alpha);
+    for k in 0..chunks {
+        let i = k * 2;
+        let vx = vld1q_f64(x.as_ptr().add(i));
+        let vy = vld1q_f64(y.as_ptr().add(i));
+        vst1q_f64(y.as_mut_ptr().add(i), vaddq_f64(vy, vmulq_f64(va, vx)));
+    }
+    for i in chunks * 2..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// f32 axpy `y += alpha·x` over `min(x.len(), y.len())` elements.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON.
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let va = vdupq_n_f32(alpha);
+    for k in 0..chunks {
+        let i = k * 4;
+        let vx = vld1q_f32(x.as_ptr().add(i));
+        let vy = vld1q_f32(y.as_ptr().add(i));
+        vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(vy, vmulq_f32(va, vx)));
+    }
+    for i in chunks * 4..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// f32-storage wide axpy `y_f64 += (alpha·x)_f32 as f64` — products at
+/// f32 width, widened exactly before the f64 accumulate.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON.
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_wide_f32(alpha: f32, x: &[f32], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let va = vdupq_n_f32(alpha);
+    for k in 0..chunks {
+        let i = k * 4;
+        let prod = vmulq_f32(va, vld1q_f32(x.as_ptr().add(i)));
+        let y01 = vld1q_f64(y.as_ptr().add(i));
+        let y23 = vld1q_f64(y.as_ptr().add(i + 2));
+        vst1q_f64(
+            y.as_mut_ptr().add(i),
+            vaddq_f64(y01, vcvt_f64_f32(vget_low_f32(prod))),
+        );
+        vst1q_f64(
+            y.as_mut_ptr().add(i + 2),
+            vaddq_f64(y23, vcvt_high_f64_f32(prod)),
+        );
+    }
+    for i in chunks * 4..n {
+        y[i] += (alpha * x[i]) as f64;
+    }
+}

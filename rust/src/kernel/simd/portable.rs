@@ -1,0 +1,187 @@
+//! The portable scalar bodies of every dispatched kernel — the
+//! **canonical lane schedules**.
+//!
+//! These are the loops the golden suites locked down in PRs 1–5, moved
+//! here verbatim so the arch backends ([`super::x86`], [`super::neon`])
+//! have a single reference to reproduce bit-for-bit. The dispatch layer
+//! ([`super`]) falls back to these whenever no vector implementation
+//! exists for the (backend, scalar, kernel) triple, so this module is
+//! also the *semantics* of every kernel: a vector body is correct iff it
+//! produces exactly these bits.
+//!
+//! Schedule summary (see DESIGN.md §"SIMD backends" for the full
+//! contract):
+//!
+//! * [`dot`] — 4 independent `S::Accum` lanes (products at storage
+//!   width, widened per element), folded left-associatively, scalar
+//!   tail;
+//! * [`gathered_dot_f64`] — 4 f64 lanes over an f32 cost row;
+//! * [`gathered_dot_f32`] — 8 pure-f32 lanes folded into f64 every
+//!   [`F32_BLOCK`] elements;
+//! * [`axpy`] / [`axpy_wide`] — per-element independent (any vector
+//!   width reproduces them);
+//! * [`scaling_update`] / [`pow_update`] — per-element independent with
+//!   the Sinkhorn-safe guards;
+//! * [`spmv_gather_dot`] / [`spmv_t_gather_dot`] — **strictly
+//!   sequential** single-accumulator reductions in ascending slot order
+//!   (the CSR/COO bit-identity contract): vector bodies may parallelize
+//!   the gathers and multiplies but never the adds.
+
+use crate::kernel::dense::{F32_BLOCK, F32_LANES};
+use crate::kernel::scalar::Scalar;
+
+/// Dot product with lane-blocked accumulation in `S::Accum` — the
+/// historical 4-way unrolled f64 schedule, generic over storage width.
+#[inline]
+pub fn dot<S: Scalar>(a: &[S], b: &[S]) -> S::Accum {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (
+        S::Accum::default(),
+        S::Accum::default(),
+        S::Accum::default(),
+        S::Accum::default(),
+    );
+    for k in 0..chunks {
+        let i = k * 4;
+        s0 = s0 + (a[i] * b[i]).widen();
+        s1 = s1 + (a[i + 1] * b[i + 1]).widen();
+        s2 = s2 + (a[i + 2] * b[i + 2]).widen();
+        s3 = s3 + (a[i + 3] * b[i + 3]).widen();
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s = s + (a[i] * b[i]).widen();
+    }
+    s
+}
+
+/// The f64 instance of the gathered s×s cost-row reduction: four f64
+/// partial sums over the f32 cost block — exactly the historical
+/// `SparseCostContext::fill_cost_rows` inner loop.
+#[inline]
+pub fn gathered_dot_f64(row: &[f32], t: &[f64]) -> f64 {
+    debug_assert_eq!(row.len(), t.len());
+    let s = row.len();
+    let mut acc = [0.0f64; 4];
+    let chunks = s / 4;
+    for c in 0..chunks {
+        let base = c * 4;
+        acc[0] += row[base] as f64 * t[base];
+        acc[1] += row[base + 1] as f64 * t[base + 1];
+        acc[2] += row[base + 2] as f64 * t[base + 2];
+        acc[3] += row[base + 3] as f64 * t[base + 3];
+    }
+    let mut tail = 0.0;
+    for lp in chunks * 4..s {
+        tail += row[lp] as f64 * t[lp];
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// The f32 instance of the gathered cost-row reduction: pure-f32
+/// multiplies in [`F32_LANES`] independent lanes, folded into an f64
+/// total every [`F32_BLOCK`] elements (per-block fold in ascending lane
+/// order, then the f32-product tail widened per element).
+#[inline]
+pub fn gathered_dot_f32(row: &[f32], t: &[f32]) -> f64 {
+    debug_assert_eq!(row.len(), t.len());
+    let mut total = 0.0f64;
+    let mut start = 0;
+    let n = row.len();
+    while start < n {
+        let end = (start + F32_BLOCK).min(n);
+        let r = &row[start..end];
+        let tv = &t[start..end];
+        let len = r.len();
+        let mut acc = [0.0f32; F32_LANES];
+        let chunks = len / F32_LANES;
+        for c in 0..chunks {
+            let b = c * F32_LANES;
+            for (lane, av) in acc.iter_mut().enumerate() {
+                *av += r[b + lane] * tv[b + lane];
+            }
+        }
+        let mut block = 0.0f64;
+        for av in acc {
+            block += av as f64;
+        }
+        for k in chunks * F32_LANES..len {
+            block += (r[k] * tv[k]) as f64;
+        }
+        total += block;
+        start = end;
+    }
+    total
+}
+
+/// `y[i] += alpha · x[i]` at storage width — the micro-kernel of the
+/// blocked ikj matmul and the transposed matvec sweep. Per-element
+/// independent (iterates `min(x.len(), y.len())` like the historical
+/// zip loops).
+#[inline]
+pub fn axpy<S: Scalar>(alpha: S, x: &[S], y: &mut [S]) {
+    for (o, &xv) in y.iter_mut().zip(x) {
+        *o += alpha * xv;
+    }
+}
+
+/// `y[i] += (alpha · x[i]).to_f64()` — the wide-scatter form of [`axpy`]
+/// (products at storage width, accumulation in f64; the accumulator rule
+/// for the transposed sweep).
+#[inline]
+pub fn axpy_wide<S: Scalar>(alpha: S, x: &[S], y: &mut [f64]) {
+    for (o, &xv) in y.iter_mut().zip(x) {
+        *o += (alpha * xv).to_f64();
+    }
+}
+
+/// One balanced Sinkhorn scaling update: `out = target ⊘ denom` with
+/// `0 ⊘ x := 0` and non-finite ratios zeroed.
+#[inline]
+pub fn scaling_update<S: Scalar>(target: &[S], denom: &[S], out: &mut [S]) {
+    for ((&t, &d), o) in target.iter().zip(denom).zip(out.iter_mut()) {
+        let q = if t == S::ZERO { S::ZERO } else { t / d };
+        *o = if q.is_finite() { q } else { S::ZERO };
+    }
+}
+
+/// The unbalanced scaling update `out = (target ⊘ denom)^expo` with
+/// non-positive / non-finite denominators zeroed.
+#[inline]
+pub fn pow_update<S: Scalar>(target: &[S], denom: &[S], expo: S, out: &mut [S]) {
+    for ((&t, &d), o) in target.iter().zip(denom).zip(out.iter_mut()) {
+        *o = if t == S::ZERO || d <= S::ZERO || !d.is_finite() {
+            S::ZERO
+        } else {
+            (t / d).powf(expo)
+        };
+    }
+}
+
+/// One CSR row of `A·x`: `Σ_k vals[srcs[k]] · x[cols[k]]` accumulated in
+/// `S::Accum`, **strictly sequential** in ascending slot order (the
+/// CSR/COO bit-identity contract).
+#[inline]
+pub fn spmv_gather_dot<S: Scalar>(cols: &[u32], srcs: &[u32], vals: &[S], x: &[S]) -> S::Accum {
+    debug_assert_eq!(cols.len(), srcs.len());
+    let mut acc = S::Accum::default();
+    for k in 0..cols.len() {
+        acc = acc + (vals[srcs[k] as usize] * x[cols[k] as usize]).widen();
+    }
+    acc
+}
+
+/// One CSC column of `Aᵀ·x`: `Σ vals[e] · x[rows_e[e]]` over the
+/// column's entry list `es`, accumulated **at storage width** in
+/// ascending entry order (bit-identical to the COO scatter).
+#[inline]
+pub fn spmv_t_gather_dot<S: Scalar>(es: &[u32], rows_e: &[u32], vals: &[S], x: &[S]) -> S {
+    let mut acc = S::ZERO;
+    for &e in es {
+        let e = e as usize;
+        acc += vals[e] * x[rows_e[e] as usize];
+    }
+    acc
+}

@@ -1,0 +1,497 @@
+//! AVX2 kernel bodies (x86_64).
+//!
+//! Every function here reproduces the matching [`super::portable`]
+//! schedule **bit-for-bit**. The rules that make that possible:
+//!
+//! * **No FMA.** A fused multiply-add rounds once where the scalar
+//!   schedule rounds twice (`mul` then `add`), so every accumulation is
+//!   an explicit `_mm256_mul_*` followed by `_mm256_add_*` even though
+//!   the dispatch layer only selects this module when FMA is present.
+//! * **Lane ↔ accumulator correspondence.** The scalar schedules keep 4
+//!   independent f64 (8 independent f32) partial sums with element
+//!   `i*LANES + j` feeding sum `j`; one 256-bit accumulator register
+//!   reproduces that exactly, and the final fold stores the lanes and
+//!   adds them in the same (left-associative, ascending) order as the
+//!   scalar fold.
+//! * **Sequential reductions stay sequential.** The spmv kernels
+//!   vectorize the index/value *gathers* and the multiplies, but the
+//!   adds into the single accumulator happen one product at a time in
+//!   ascending slot order — the CSR/COO contract.
+//! * **Tails are the scalar code.** Every remainder loop is copied from
+//!   the portable body, not re-vectorized.
+//!
+//! All functions are `unsafe` because they require AVX2 at runtime; the
+//! dispatch layer in [`super`] only calls them after
+//! `is_x86_feature_detected!("avx2")` succeeded at startup. Gather
+//! kernels additionally require pre-validated indices (documented per
+//! function); the dispatch layer performs those prepasses and falls back
+//! to [`super::portable`] when they fail.
+
+use core::arch::x86_64::*;
+
+use crate::kernel::dense::{F32_BLOCK, F32_LANES};
+
+const F64_ABS_MASK: u64 = 0x7fff_ffff_ffff_ffff;
+const F32_ABS_MASK: u32 = 0x7fff_ffff;
+
+// The 8-lane f32 schedule is hard-wired into one `__m256` accumulator.
+const _: () = assert!(F32_LANES == 8);
+
+/// f64 dot product — 4 lanes in one `__m256d`, mul-then-add, lane fold
+/// `((l0+l1)+l2)+l3`, scalar tail.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2. Panics (like the scalar
+/// schedule's indexing) if the slices have different lengths.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..chunks {
+        let i = k * 4;
+        let va = _mm256_loadu_pd(a.as_ptr().add(i));
+        let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut s = lanes[0] + lanes[1];
+    s += lanes[2];
+    s += lanes[3];
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// f32 dot product with f64 accumulation — products at f32 width
+/// (`_mm_mul_ps`), widened per element (`_mm256_cvtps_pd`) into the same
+/// 4-lane f64 partial-sum tree as [`dot_f64`].
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2. Panics if the slices have
+/// different lengths.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..chunks {
+        let i = k * 4;
+        let va = _mm_loadu_ps(a.as_ptr().add(i));
+        let vb = _mm_loadu_ps(b.as_ptr().add(i));
+        let prod = _mm256_cvtps_pd(_mm_mul_ps(va, vb));
+        acc = _mm256_add_pd(acc, prod);
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut s = lanes[0] + lanes[1];
+    s += lanes[2];
+    s += lanes[3];
+    for i in chunks * 4..n {
+        s += (a[i] * b[i]) as f64;
+    }
+    s
+}
+
+/// Gathered cost-row reduction, f64 transport: widen 4 f32 cost entries
+/// (`_mm256_cvtps_pd`, exact) and multiply-accumulate against 4 f64
+/// transport values in one 4-lane accumulator.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2. Panics if the slices have
+/// different lengths.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gathered_dot_f64(row: &[f32], t: &[f64]) -> f64 {
+    assert_eq!(row.len(), t.len());
+    let s = row.len();
+    let chunks = s / 4;
+    let mut acc = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let base = c * 4;
+        let vr = _mm256_cvtps_pd(_mm_loadu_ps(row.as_ptr().add(base)));
+        let vt = _mm256_loadu_pd(t.as_ptr().add(base));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(vr, vt));
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut tail = 0.0;
+    for lp in chunks * 4..s {
+        tail += row[lp] as f64 * t[lp];
+    }
+    lanes[0] + lanes[1] + lanes[2] + lanes[3] + tail
+}
+
+/// Gathered cost-row reduction, f32 transport: one 8-lane `__m256` f32
+/// accumulator per [`F32_BLOCK`] block, folded into f64 in ascending
+/// lane order at every block boundary (the fixed fold cadence), f32
+/// tail products widened individually.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2. Panics if the slices have
+/// different lengths.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gathered_dot_f32(row: &[f32], t: &[f32]) -> f64 {
+    assert_eq!(row.len(), t.len());
+    let n = row.len();
+    let mut total = 0.0f64;
+    let mut start = 0;
+    while start < n {
+        let end = (start + F32_BLOCK).min(n);
+        let len = end - start;
+        let chunks = len / F32_LANES;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let b = start + c * F32_LANES;
+            let vr = _mm256_loadu_ps(row.as_ptr().add(b));
+            let vt = _mm256_loadu_ps(t.as_ptr().add(b));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(vr, vt));
+        }
+        let mut lanes = [0.0f32; F32_LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut block = 0.0f64;
+        for av in lanes {
+            block += av as f64;
+        }
+        for k in start + chunks * F32_LANES..end {
+            block += (row[k] * t[k]) as f64;
+        }
+        total += block;
+        start = end;
+    }
+    total
+}
+
+/// f64 axpy `y += alpha·x` over `min(x.len(), y.len())` elements —
+/// the blocked-matmul micro-kernel. Broadcast, mul, add, store; scalar
+/// tail.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_f64(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let va = _mm256_set1_pd(alpha);
+    for k in 0..chunks {
+        let i = k * 4;
+        let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+        let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+        _mm256_storeu_pd(
+            y.as_mut_ptr().add(i),
+            _mm256_add_pd(vy, _mm256_mul_pd(va, vx)),
+        );
+    }
+    for i in chunks * 4..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// f32 axpy `y += alpha·x` over `min(x.len(), y.len())` elements,
+/// 8-wide.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 8;
+    let va = _mm256_set1_ps(alpha);
+    for k in 0..chunks {
+        let i = k * 8;
+        let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+        let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+        _mm256_storeu_ps(
+            y.as_mut_ptr().add(i),
+            _mm256_add_ps(vy, _mm256_mul_ps(va, vx)),
+        );
+    }
+    for i in chunks * 8..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// f32-storage wide axpy `y_f64 += (alpha·x)_f32 as f64` — products at
+/// f32 width (`_mm_mul_ps`), widened exactly (`_mm256_cvtps_pd`) before
+/// the f64 accumulate; the transposed-sweep accumulator rule.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_wide_f32(alpha: f32, x: &[f32], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let va = _mm_set1_ps(alpha);
+    for k in 0..chunks {
+        let i = k * 4;
+        let prod = _mm256_cvtps_pd(_mm_mul_ps(va, _mm_loadu_ps(x.as_ptr().add(i))));
+        let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+        _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_add_pd(vy, prod));
+    }
+    for i in chunks * 4..n {
+        y[i] += (alpha * x[i]) as f64;
+    }
+}
+
+/// f64 Sinkhorn scaling update `out = target ⊘ denom`, vectorized
+/// guards: `0 ⊘ x := 0` via `andnot(t == 0, q)`, non-finite ratios
+/// zeroed via `and(q, |q| < ∞)`. The division is the same IEEE op as the
+/// scalar path, and masking produces the exact `+0.0` the scalar
+/// branches write.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn scaling_update_f64(target: &[f64], denom: &[f64], out: &mut [f64]) {
+    let n = target.len().min(denom.len()).min(out.len());
+    let chunks = n / 4;
+    let zero = _mm256_setzero_pd();
+    let abs_mask = _mm256_set1_pd(f64::from_bits(F64_ABS_MASK));
+    let inf = _mm256_set1_pd(f64::INFINITY);
+    for k in 0..chunks {
+        let i = k * 4;
+        let vt = _mm256_loadu_pd(target.as_ptr().add(i));
+        let vd = _mm256_loadu_pd(denom.as_ptr().add(i));
+        let mut q = _mm256_div_pd(vt, vd);
+        q = _mm256_andnot_pd(_mm256_cmp_pd::<_CMP_EQ_OQ>(vt, zero), q);
+        let finite = _mm256_cmp_pd::<_CMP_LT_OQ>(_mm256_and_pd(q, abs_mask), inf);
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_and_pd(q, finite));
+    }
+    for i in chunks * 4..n {
+        let t = target[i];
+        let q = if t == 0.0 { 0.0 } else { t / denom[i] };
+        out[i] = if q.is_finite() { q } else { 0.0 };
+    }
+}
+
+/// f32 Sinkhorn scaling update, 8-wide; guard structure identical to
+/// [`scaling_update_f64`].
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn scaling_update_f32(target: &[f32], denom: &[f32], out: &mut [f32]) {
+    let n = target.len().min(denom.len()).min(out.len());
+    let chunks = n / 8;
+    let zero = _mm256_setzero_ps();
+    let abs_mask = _mm256_set1_ps(f32::from_bits(F32_ABS_MASK));
+    let inf = _mm256_set1_ps(f32::INFINITY);
+    for k in 0..chunks {
+        let i = k * 8;
+        let vt = _mm256_loadu_ps(target.as_ptr().add(i));
+        let vd = _mm256_loadu_ps(denom.as_ptr().add(i));
+        let mut q = _mm256_div_ps(vt, vd);
+        q = _mm256_andnot_ps(_mm256_cmp_ps::<_CMP_EQ_OQ>(vt, zero), q);
+        let finite = _mm256_cmp_ps::<_CMP_LT_OQ>(_mm256_and_ps(q, abs_mask), inf);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_and_ps(q, finite));
+    }
+    for i in chunks * 8..n {
+        let t = target[i];
+        let q = if t == 0.0 { 0.0 } else { t / denom[i] };
+        out[i] = if q.is_finite() { q } else { 0.0 };
+    }
+}
+
+/// f64 unbalanced scaling update `out = (target ⊘ denom)^expo`. The
+/// ratio and its guard mask (`t != 0 && d > 0 && |d| < ∞`) are computed
+/// vectorized; `powf` has no bit-compatible vector form, so kept lanes
+/// go through the scalar `f64::powf` — exactly the op the portable body
+/// uses.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn pow_update_f64(target: &[f64], denom: &[f64], expo: f64, out: &mut [f64]) {
+    let n = target.len().min(denom.len()).min(out.len());
+    let chunks = n / 4;
+    let zero = _mm256_setzero_pd();
+    let abs_mask = _mm256_set1_pd(f64::from_bits(F64_ABS_MASK));
+    let inf = _mm256_set1_pd(f64::INFINITY);
+    for k in 0..chunks {
+        let i = k * 4;
+        let vt = _mm256_loadu_pd(target.as_ptr().add(i));
+        let vd = _mm256_loadu_pd(denom.as_ptr().add(i));
+        let q = _mm256_div_pd(vt, vd);
+        let d_ok = _mm256_and_pd(
+            _mm256_cmp_pd::<_CMP_GT_OQ>(vd, zero),
+            _mm256_cmp_pd::<_CMP_LT_OQ>(_mm256_and_pd(vd, abs_mask), inf),
+        );
+        let keep = _mm256_andnot_pd(_mm256_cmp_pd::<_CMP_EQ_OQ>(vt, zero), d_ok);
+        let mask = _mm256_movemask_pd(keep);
+        let mut ratios = [0.0f64; 4];
+        _mm256_storeu_pd(ratios.as_mut_ptr(), q);
+        for (lane, &r) in ratios.iter().enumerate() {
+            out[i + lane] = if mask & (1 << lane) != 0 {
+                r.powf(expo)
+            } else {
+                0.0
+            };
+        }
+    }
+    for i in chunks * 4..n {
+        let (t, d) = (target[i], denom[i]);
+        out[i] = if t == 0.0 || d <= 0.0 || !d.is_finite() {
+            0.0
+        } else {
+            (t / d).powf(expo)
+        };
+    }
+}
+
+/// f32 unbalanced scaling update, 8-wide; structure identical to
+/// [`pow_update_f64`].
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn pow_update_f32(target: &[f32], denom: &[f32], expo: f32, out: &mut [f32]) {
+    let n = target.len().min(denom.len()).min(out.len());
+    let chunks = n / 8;
+    let zero = _mm256_setzero_ps();
+    let abs_mask = _mm256_set1_ps(f32::from_bits(F32_ABS_MASK));
+    let inf = _mm256_set1_ps(f32::INFINITY);
+    for k in 0..chunks {
+        let i = k * 8;
+        let vt = _mm256_loadu_ps(target.as_ptr().add(i));
+        let vd = _mm256_loadu_ps(denom.as_ptr().add(i));
+        let q = _mm256_div_ps(vt, vd);
+        let d_ok = _mm256_and_ps(
+            _mm256_cmp_ps::<_CMP_GT_OQ>(vd, zero),
+            _mm256_cmp_ps::<_CMP_LT_OQ>(_mm256_and_ps(vd, abs_mask), inf),
+        );
+        let keep = _mm256_andnot_ps(_mm256_cmp_ps::<_CMP_EQ_OQ>(vt, zero), d_ok);
+        let mask = _mm256_movemask_ps(keep);
+        let mut ratios = [0.0f32; 8];
+        _mm256_storeu_ps(ratios.as_mut_ptr(), q);
+        for (lane, &r) in ratios.iter().enumerate() {
+            out[i + lane] = if mask & (1 << lane) != 0 {
+                r.powf(expo)
+            } else {
+                0.0
+            };
+        }
+    }
+    for i in chunks * 8..n {
+        let (t, d) = (target[i], denom[i]);
+        out[i] = if t == 0.0 || d <= 0.0 || !d.is_finite() {
+            0.0
+        } else {
+            (t / d).powf(expo)
+        };
+    }
+}
+
+/// One CSR row of f64 `A·x`: values and inputs fetched four at a time
+/// with `vpgatherdpd`, multiplied vectorized, then added **one product
+/// at a time in ascending slot order** into the single accumulator —
+/// the gathers and multiplies vectorize, the reduction does not.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2, `cols.len() == srcs.len()`,
+/// every `srcs[k] < vals.len()`, every `cols[k] < x.len()`, and both
+/// `vals.len()` and `x.len()` are at most `i32::MAX` (gather offsets are
+/// signed 32-bit). The dispatch layer validates all of this and falls
+/// back to the portable body otherwise.
+#[target_feature(enable = "avx2")]
+pub unsafe fn spmv_dot_f64(cols: &[u32], srcs: &[u32], vals: &[f64], x: &[f64]) -> f64 {
+    let n = cols.len();
+    let chunks = n / 4;
+    let mut acc = 0.0f64;
+    for k in 0..chunks {
+        let i = k * 4;
+        let vsrc = _mm_loadu_si128(srcs.as_ptr().add(i) as *const __m128i);
+        let vcol = _mm_loadu_si128(cols.as_ptr().add(i) as *const __m128i);
+        let vv = _mm256_i32gather_pd::<8>(vals.as_ptr(), vsrc);
+        let vx = _mm256_i32gather_pd::<8>(x.as_ptr(), vcol);
+        let mut prods = [0.0f64; 4];
+        _mm256_storeu_pd(prods.as_mut_ptr(), _mm256_mul_pd(vv, vx));
+        acc += prods[0];
+        acc += prods[1];
+        acc += prods[2];
+        acc += prods[3];
+    }
+    for k in chunks * 4..n {
+        acc += vals[srcs[k] as usize] * x[cols[k] as usize];
+    }
+    acc
+}
+
+/// One CSR row of f32 `A·x` with f64 accumulation: 4-wide `vgatherdps`
+/// fetches, f32 multiply, exact widening, then sequential ascending
+/// adds into the f64 accumulator.
+///
+/// # Safety
+/// Same contract as [`spmv_dot_f64`] (AVX2; `cols.len() == srcs.len()`;
+/// indices in bounds; slice lengths ≤ `i32::MAX`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn spmv_dot_f32(cols: &[u32], srcs: &[u32], vals: &[f32], x: &[f32]) -> f64 {
+    let n = cols.len();
+    let chunks = n / 4;
+    let mut acc = 0.0f64;
+    for k in 0..chunks {
+        let i = k * 4;
+        let vsrc = _mm_loadu_si128(srcs.as_ptr().add(i) as *const __m128i);
+        let vcol = _mm_loadu_si128(cols.as_ptr().add(i) as *const __m128i);
+        let vv = _mm_i32gather_ps::<4>(vals.as_ptr(), vsrc);
+        let vx = _mm_i32gather_ps::<4>(x.as_ptr(), vcol);
+        let mut prods = [0.0f64; 4];
+        _mm256_storeu_pd(prods.as_mut_ptr(), _mm256_cvtps_pd(_mm_mul_ps(vv, vx)));
+        acc += prods[0];
+        acc += prods[1];
+        acc += prods[2];
+        acc += prods[3];
+    }
+    for k in chunks * 4..n {
+        acc += (vals[srcs[k] as usize] * x[cols[k] as usize]) as f64;
+    }
+    acc
+}
+
+/// One CSC column of f64 `Aᵀ·x`: entry values gathered by `es`
+/// (`vpgatherdpd`), row indices loaded with ordinary checked indexing
+/// (they feed the `x` gather, so each is asserted `< x.len()` — the
+/// same panic the scalar body's `x[rows_e[e]]` produces on malformed
+/// structure), then `x` gathered and the products added sequentially in
+/// ascending entry order at storage width.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2, every
+/// `es[k] < min(vals.len(), rows_e.len())`, and both `vals.len()` and
+/// `x.len()` are at most `i32::MAX`. Row values are bounds-checked here.
+#[target_feature(enable = "avx2")]
+pub unsafe fn spmv_t_dot_f64(es: &[u32], rows_e: &[u32], vals: &[f64], x: &[f64]) -> f64 {
+    let n = es.len();
+    let chunks = n / 4;
+    let mut acc = 0.0f64;
+    for k in 0..chunks {
+        let i = k * 4;
+        let ve = _mm_loadu_si128(es.as_ptr().add(i) as *const __m128i);
+        let vv = _mm256_i32gather_pd::<8>(vals.as_ptr(), ve);
+        let r0 = rows_e[es[i] as usize];
+        let r1 = rows_e[es[i + 1] as usize];
+        let r2 = rows_e[es[i + 2] as usize];
+        let r3 = rows_e[es[i + 3] as usize];
+        assert!(
+            (r0 as usize) < x.len()
+                && (r1 as usize) < x.len()
+                && (r2 as usize) < x.len()
+                && (r3 as usize) < x.len()
+        );
+        let vr = _mm_set_epi32(r3 as i32, r2 as i32, r1 as i32, r0 as i32);
+        let vx = _mm256_i32gather_pd::<8>(x.as_ptr(), vr);
+        let mut prods = [0.0f64; 4];
+        _mm256_storeu_pd(prods.as_mut_ptr(), _mm256_mul_pd(vv, vx));
+        acc += prods[0];
+        acc += prods[1];
+        acc += prods[2];
+        acc += prods[3];
+    }
+    for k in chunks * 4..n {
+        let e = es[k] as usize;
+        acc += vals[e] * x[rows_e[e] as usize];
+    }
+    acc
+}

@@ -25,8 +25,14 @@
 //! for every output coordinate the gather adds exactly the contributions
 //! the scatter would, in exactly the same (ascending-entry) order, at
 //! the same width. `gather_matches_scatter_bitwise` locks this in.
+//!
+//! The per-row/per-column reductions of [`spmv`] and [`spmv_t_csc`]
+//! dispatch through [`super::simd`] (vectorized index/value gathers; the
+//! adds stay strictly sequential per the contract above), with the
+//! backend captured before the pool call per the capture-at-submit rule.
 
 use super::scalar::Scalar;
+use super::simd;
 use crate::runtime::pool::{pool, PAR_GRAIN};
 
 /// Minimum stored entries per parallel chunk of a sparse kernel (same
@@ -55,16 +61,18 @@ pub fn spmv<S: Scalar>(
     let nrows = row_ptr.len() - 1;
     debug_assert_eq!(y.len(), nrows);
     let min_rows = min_rows_for(nrows, slot_col.len());
+    let backend = simd::current();
     pool().for_each_chunk_mut(y, min_rows, |ychunk, range, _| {
         for (o, i) in ychunk.iter_mut().zip(range) {
             let lo = row_ptr[i] as usize;
             let hi = row_ptr[i + 1] as usize;
-            let mut acc = S::Accum::default();
-            for slot in lo..hi {
-                acc = acc
-                    + (vals[slot_src[slot] as usize] * x[slot_col[slot] as usize]).widen();
-            }
-            *o = S::narrow(acc);
+            *o = S::narrow(simd::spmv_gather_dot(
+                backend,
+                &slot_col[lo..hi],
+                &slot_src[lo..hi],
+                vals,
+                x,
+            ));
         }
     });
 }
@@ -96,16 +104,12 @@ pub fn spmv_t_csc<S: Scalar>(
     let ncols = col_ptr.len() - 1;
     debug_assert_eq!(y.len(), ncols);
     let min_cols = min_rows_for(ncols, cslot_src.len());
+    let backend = simd::current();
     pool().for_each_chunk_mut(y, min_cols, |ychunk, range, _| {
         for (o, j) in ychunk.iter_mut().zip(range) {
             let lo = col_ptr[j] as usize;
             let hi = col_ptr[j + 1] as usize;
-            let mut acc = S::ZERO;
-            for slot in lo..hi {
-                let e = cslot_src[slot] as usize;
-                acc += vals[e] * x[rows_e[e] as usize];
-            }
-            *o = acc;
+            *o = simd::spmv_t_gather_dot(backend, &cslot_src[lo..hi], rows_e, vals, x);
         }
     });
 }

@@ -1,0 +1,224 @@
+//! Cache-aligned backing storage for [`Mat`](super::Mat).
+//!
+//! [`AlignedBuf`] is a fixed-length heap buffer whose allocation starts
+//! on a [`MAT_ALIGN`]-byte boundary — one full x86-64 cache line, and a
+//! multiple of every vector width the [`crate::kernel::simd`] backends
+//! load (32-byte AVX2, 16-byte NEON). `Vec<S>` only guarantees
+//! `align_of::<S>()`, so a 64-row matmul tile starting mid-line pays an
+//! extra cache-line fetch per row and the SIMD loops see split loads;
+//! aligning the base (row strides are the caller's business) removes
+//! the straddle for the row-major tiles the blocked kernels walk.
+//!
+//! The buffer dereferences to `[S]`, so `Mat` indexes, slices and
+//! iterates it exactly as it did the `Vec` it replaces. Alignment never
+//! affects *values*: every kernel reads elements through slices, so the
+//! bit-identity contract is untouched by this module.
+//!
+//! Element types are constrained to `Copy` at every constructor, which
+//! means elements never need dropping — `Drop` only returns the
+//! allocation. Zero-length buffers hold a dangling pointer and never
+//! touch the allocator (mirroring `Vec`), so the 64-byte guarantee
+//! applies only to non-empty buffers.
+
+use std::alloc::{alloc, dealloc, handle_alloc_error, Layout};
+use std::fmt;
+use std::mem::size_of;
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+use std::slice;
+
+/// Alignment, in bytes, of every non-empty [`AlignedBuf`] allocation:
+/// one x86-64 cache line, ≥ the widest SIMD register in use.
+pub const MAT_ALIGN: usize = 64;
+
+/// Fixed-length heap buffer of `S` aligned to [`MAT_ALIGN`] bytes.
+///
+/// Construct with [`AlignedBuf::from_fn`], [`AlignedBuf::full`] or
+/// [`AlignedBuf::from_slice`]; read and write through the `[S]` deref.
+/// The length is fixed at construction (no push/pop — `Mat` never
+/// resizes its storage).
+pub struct AlignedBuf<S> {
+    ptr: NonNull<S>,
+    len: usize,
+}
+
+impl<S: Copy> AlignedBuf<S> {
+    /// Allocate `len` uninitialized elements at [`MAT_ALIGN`]; dangling
+    /// (no allocation) when the buffer would be empty.
+    fn alloc_uninit(len: usize) -> NonNull<S> {
+        if len == 0 || size_of::<S>() == 0 {
+            return NonNull::dangling();
+        }
+        let bytes = len
+            .checked_mul(size_of::<S>())
+            .expect("AlignedBuf size overflow");
+        let layout =
+            Layout::from_size_align(bytes, MAT_ALIGN).expect("AlignedBuf layout overflow");
+        // SAFETY: `layout` has non-zero size (len > 0 and S is not
+        // zero-sized, both checked above).
+        let raw = unsafe { alloc(layout) }.cast::<S>();
+        match NonNull::new(raw) {
+            Some(p) => p,
+            None => handle_alloc_error(layout),
+        }
+    }
+
+    /// Build from a generator over flat indices `0..len`, called in
+    /// ascending order (matching the push order of the `Vec` loops this
+    /// replaces, so stateful closures see the same sequence). If `f`
+    /// panics mid-fill the allocation is leaked — never freed while
+    /// partially initialized, and `Copy` elements have no destructors
+    /// to run.
+    pub fn from_fn(len: usize, mut f: impl FnMut(usize) -> S) -> Self {
+        let ptr = Self::alloc_uninit(len);
+        for k in 0..len {
+            // SAFETY: k < len, inside the allocation made just above;
+            // `write` needs no valid prior value.
+            unsafe { ptr.as_ptr().add(k).write(f(k)) };
+        }
+        AlignedBuf { ptr, len }
+    }
+
+    /// Constant-filled buffer.
+    pub fn full(len: usize, v: S) -> Self {
+        Self::from_fn(len, |_| v)
+    }
+
+    /// Aligned copy of an existing slice.
+    pub fn from_slice(src: &[S]) -> Self {
+        let ptr = Self::alloc_uninit(src.len());
+        // SAFETY: both pointers are valid for `src.len()` elements (the
+        // allocation above is exactly that long) and cannot overlap —
+        // the destination is a fresh allocation.
+        unsafe { std::ptr::copy_nonoverlapping(src.as_ptr(), ptr.as_ptr(), src.len()) };
+        AlignedBuf { ptr, len: src.len() }
+    }
+}
+
+impl<S> Deref for AlignedBuf<S> {
+    type Target = [S];
+    #[inline]
+    fn deref(&self) -> &[S] {
+        // SAFETY: `ptr` is valid for `len` initialized elements (every
+        // constructor writes all of them), or dangling with len == 0,
+        // which `from_raw_parts` permits.
+        unsafe { slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<S> DerefMut for AlignedBuf<S> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [S] {
+        // SAFETY: as in `Deref`, and `&mut self` guarantees exclusive
+        // access to the allocation.
+        unsafe { slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<S> Drop for AlignedBuf<S> {
+    fn drop(&mut self) {
+        if self.len == 0 || size_of::<S>() == 0 {
+            return; // dangling — nothing was allocated
+        }
+        let layout = Layout::from_size_align(self.len * size_of::<S>(), MAT_ALIGN)
+            .expect("AlignedBuf layout valid at construction");
+        // SAFETY: allocated in `alloc_uninit` with this exact layout
+        // (same length, element size and alignment); elements are Copy
+        // and need no drops.
+        unsafe { dealloc(self.ptr.as_ptr().cast::<u8>(), layout) };
+    }
+}
+
+// SAFETY: AlignedBuf owns its allocation exclusively (no aliasing, no
+// interior mutability); moving it between threads is safe whenever the
+// elements themselves are Send.
+unsafe impl<S: Send> Send for AlignedBuf<S> {}
+// SAFETY: shared access is only ever `&[S]` through Deref, so sharing
+// across threads is safe whenever `&S` is (S: Sync).
+unsafe impl<S: Sync> Sync for AlignedBuf<S> {}
+
+impl<S: Copy> Clone for AlignedBuf<S> {
+    fn clone(&self) -> Self {
+        Self::from_slice(self)
+    }
+}
+
+impl<S: PartialEq> PartialEq for AlignedBuf<S> {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<S: fmt::Debug> fmt::Debug for AlignedBuf<S> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<'a, S> IntoIterator for &'a AlignedBuf<S> {
+    type Item = &'a S;
+    type IntoIter = slice::Iter<'a, S>;
+    #[inline]
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+impl<'a, S> IntoIterator for &'a mut AlignedBuf<S> {
+    type Item = &'a mut S;
+    type IntoIter = slice::IterMut<'a, S>;
+    #[inline]
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocations_are_cache_aligned() {
+        // Lengths straddling cache-line multiples in both widths.
+        for len in [1usize, 2, 7, 8, 9, 63, 64, 65, 1000, 4096] {
+            let b64 = AlignedBuf::<f64>::from_fn(len, |k| k as f64);
+            assert_eq!(b64.as_ptr() as usize % MAT_ALIGN, 0, "f64 len {len}");
+            let b32 = AlignedBuf::<f32>::full(len, 1.5);
+            assert_eq!(b32.as_ptr() as usize % MAT_ALIGN, 0, "f32 len {len}");
+        }
+    }
+
+    #[test]
+    fn zero_length_never_allocates_and_is_empty() {
+        let b = AlignedBuf::<f64>::from_fn(0, |_| unreachable!());
+        assert!(b.is_empty());
+        assert_eq!(&b[..], &[] as &[f64]);
+        let c = b.clone();
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn from_fn_order_and_slice_roundtrip() {
+        let b = AlignedBuf::from_fn(5, |k| (k * k) as f64);
+        assert_eq!(&b[..], &[0.0, 1.0, 4.0, 9.0, 16.0]);
+        let c = AlignedBuf::from_slice(&b[1..4]);
+        assert_eq!(&c[..], &[1.0, 4.0, 9.0]);
+        assert_eq!(c.as_ptr() as usize % MAT_ALIGN, 0);
+    }
+
+    #[test]
+    fn clone_eq_and_mutation() {
+        let mut b = AlignedBuf::full(8, 2.0f64);
+        let c = b.clone();
+        assert_eq!(b, c);
+        assert_ne!(b.as_ptr(), c.as_ptr(), "clone must not alias");
+        b[3] = 7.0;
+        assert_ne!(b, c);
+        let s: f64 = (&b).into_iter().sum();
+        assert_eq!(s, 7.0 * 2.0 + 7.0);
+        for v in &mut b {
+            *v *= 0.5;
+        }
+        assert_eq!(b[3], 3.5);
+    }
+}

@@ -6,9 +6,11 @@
 //! touch. All heavy *model* compute is meant to go through the AOT/PJRT path
 //! (see `runtime`); this module backs the native fallback and the ML layer.
 
+mod aligned;
 mod eig;
 mod mat;
 
+pub use aligned::{AlignedBuf, MAT_ALIGN};
 pub use eig::{symmetric_eigen, EigenDecomposition};
 pub use mat::Mat;
 

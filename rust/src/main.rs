@@ -40,14 +40,17 @@ USAGE:
                   [--solver NAME] [--solver-opt k=v]...   # registry dispatch
                   [--solver-opt precision=f32|f64]        # Spar-* mixed precision
                   [--cost l1|l2|kl] [--eps 0.01] [--s 0] [--seed 0] [--threads N]
+                  [--simd auto|avx2|neon|scalar]
   spargw pairwise [--dataset synthetic|bzr|cox2|cuneiform|firstmm_db|imdb-b]
                   [--solver NAME] [--solver-opt k=v]...   # engine per request
                   [--cost l1|l2] [--workers 4] [--threads N] [--seed 0]
+                  [--simd auto|avx2|neon|scalar]
                   [--shard I/OF | --shards N]             # deterministic sharding
                   [--out FILE] [--resume]                 # streaming sink + resume
                   [--artifacts DIR | --pjrt]              # enable the PJRT path
   spargw cluster  [--dataset ...] [--solver NAME] [--solver-opt k=v]...
                   [--cost l1|l2] [--gamma 1.0] [--seed 0] [--threads N]
+                  [--simd auto|avx2|neon|scalar]
   spargw solvers
   spargw datasets [--seed 0]
   spargw artifacts [--dir artifacts]
@@ -59,6 +62,15 @@ THREADING
   is the fallback, and the default is the machine's available
   parallelism. Thread count never changes results — every parallel
   kernel is bit-identical at any width.
+
+SIMD
+  --simd selects the kernel backend (default auto: the best vector unit
+  the CPU reports — AVX2 on x86-64, NEON on aarch64 — else scalar); the
+  SPARGW_SIMD environment variable is the fallback.
+  Requesting an unavailable backend fails loudly. Like thread count,
+  the backend never changes results: every vector kernel reproduces the
+  scalar lane schedule bit-for-bit. `spargw solvers` prints the
+  resolved backend.
 
 Registered solvers (spargw solvers): spar_gw spar_fgw spar_ugw egw pga_gw
 emd_gw sagrow lr_gw sgwl anchor
@@ -366,8 +378,20 @@ fn cmd_solvers() {
     for &name in SolverRegistry::names() {
         println!("  {:<12} {}", name, SolverRegistry::precisions(name));
     }
+    println!("\n{}", backend_summary());
     println!("\nselect with --solver NAME; pass options as --solver-opt k=v");
     println!("mixed precision: --solver-opt precision=f32 (Spar-* engines; default f64)");
+}
+
+/// One-line description of the active execution backend: resolved SIMD
+/// dispatch (with what detection found), pool width, default precision.
+fn backend_summary() -> String {
+    format!(
+        "backend: simd={} (detected {}) threads={} precision=f64 (default)",
+        spargw::kernel::simd::current().name(),
+        spargw::kernel::simd::detect().name(),
+        spargw::runtime::pool::pool().threads(),
+    )
 }
 
 fn cmd_datasets(args: &Args) {
@@ -423,6 +447,12 @@ fn main() {
     if threads > 0 {
         spargw::runtime::pool::configure_threads(threads);
     }
+    // Pin the SIMD kernel backend before any kernel resolves it
+    // (`--simd` beats SPARGW_SIMD beats CPU feature detection).
+    if let Some(spec) = args.opt_str("simd") {
+        let req = ok_or_exit(spargw::kernel::simd::Backend::parse(spec));
+        ok_or_exit(spargw::kernel::simd::configure(req));
+    }
     match args.positional(0) {
         Some("solve") => cmd_solve(&args),
         Some("pairwise") => cmd_pairwise(&args),
@@ -430,7 +460,10 @@ fn main() {
         Some("solvers") => cmd_solvers(),
         Some("datasets") => cmd_datasets(&args),
         Some("artifacts") => cmd_artifacts(&args),
-        Some("help") | None => print!("{USAGE}"),
+        Some("help") | None => {
+            print!("{USAGE}");
+            println!("\n{}", backend_summary());
+        }
         Some(other) => {
             eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
             std::process::exit(2);

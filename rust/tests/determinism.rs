@@ -11,6 +11,11 @@
 //!   * the cached path (per-structure preprocessing shared across pairs)
 //!     vs the uncached per-pair re-derivation,
 //!   * fresh runs vs sink-resumed runs,
+//!   * SIMD kernel backends (`kernel::simd`: the portable scalar
+//!     schedule vs the detected vector backend, crossed with pool widths
+//!     — for all registry solvers and the prepared pairwise path; CI
+//!     additionally pins the process-wide backend per matrix job through
+//!     `SPARGW_SIMD`),
 //! for spar_gw, spar_fgw and spar_ugw on seeded toy datasets — plus a
 //! single-solve pool-width matrix over **all ten registry solvers** and a
 //! pool-reuse check (the worker count stays constant across repeated
@@ -27,6 +32,7 @@ use spargw::gw::core::Workspace;
 use spargw::gw::fgw::FgwProblem;
 use spargw::gw::solver::{Plan, SolverRegistry};
 use spargw::gw::GwProblem;
+use spargw::kernel::simd::{self, Backend};
 use spargw::linalg::Mat;
 use spargw::rng::{derive_seed, Rng};
 use spargw::runtime::pool::{pool, with_thread_limit};
@@ -214,6 +220,105 @@ fn all_registry_solvers_bit_identical_across_pool_widths() {
                     "{name}: plan entry {l} differs at width {width} ({x} vs {y})"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn all_registry_solvers_bit_identical_across_simd_backends() {
+    // The SIMD kernel backend is a throughput knob exactly like the pool
+    // width: every registry solver must produce a bit-identical value,
+    // iteration schedule and plan under the portable scalar schedule and
+    // under the detected vector backend (AVX2/NEON where available — on
+    // machines without one, detect() is Scalar and this degenerates to a
+    // self-comparison, which CI's x86_64 runner rules out for AVX2). The
+    // backend override is resolved at submit time and captured into pool
+    // chunks, so the matrix crosses it with pool widths 1 and 8.
+    let n = 96;
+    let mut grng = spargw::rng::Xoshiro256::new(0xD157);
+    let cx = spargw::testutil::random_relation(&mut grng, n);
+    let cy = spargw::testutil::random_relation(&mut grng, n);
+    let a = spargw::util::uniform(n);
+    let b = spargw::util::uniform(n);
+    let p = GwProblem::new(&cx, &cy, &a, &b);
+    let base = spargw::gw::solver::SolverBase {
+        outer_iters: 3,
+        inner_iters: 10,
+        ..Default::default()
+    };
+    let best = simd::detect();
+    for &name in SolverRegistry::names() {
+        let solver =
+            SolverRegistry::build_with_base(name, &Default::default(), &base).expect(name);
+        let solve_at = |backend: Backend, width: usize| {
+            simd::with_backend_override(backend, || {
+                with_thread_limit(width, || {
+                    let mut rng = Rng::new(derive_seed(SEED, 91));
+                    let mut ws = Workspace::new();
+                    solver.solve(&p, &mut rng, &mut ws).expect(name)
+                })
+            })
+        };
+        let reference = solve_at(Backend::Scalar, 1);
+        let ref_vals = plan_vals(&reference.plan);
+        for backend in [Backend::Scalar, best] {
+            for width in [1usize, 8] {
+                if backend == Backend::Scalar && width == 1 {
+                    continue; // the reference itself
+                }
+                let got = solve_at(backend, width);
+                assert_eq!(
+                    reference.value.to_bits(),
+                    got.value.to_bits(),
+                    "{name}: value differs at simd={} width={width} ({} vs {})",
+                    backend.name(),
+                    reference.value,
+                    got.value
+                );
+                assert_eq!(
+                    reference.outer_iters,
+                    got.outer_iters,
+                    "{name}: iteration schedule differs at simd={} width={width}",
+                    backend.name()
+                );
+                let got_vals = plan_vals(&got.plan);
+                assert_eq!(ref_vals.len(), got_vals.len(), "{name}: plan size");
+                for (l, (x, y)) in ref_vals.iter().zip(&got_vals).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{name}: plan entry {l} differs at simd={} width={width} ({x} vs {y})",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pairwise_gram_bit_identical_across_simd_backends() {
+    // The prepared pairwise path (engine + structure cache + scheduler
+    // workers) under the backend matrix: the scheduler re-applies the
+    // submit-time backend on every worker thread, so pinning a backend
+    // around a whole Gram run governs all of its kernels. Each variant
+    // must reproduce the serial scalar reference bit-for-bit.
+    let ds = plain_dataset();
+    let cfg = config("spar_gw");
+    let reference = simd::with_backend_override(Backend::Scalar, || {
+        with_thread_limit(1, || engine_gram(&ds, &cfg, EngineConfig::default()))
+    });
+    let best = simd::detect();
+    for backend in [Backend::Scalar, best] {
+        for width in [1usize, 8] {
+            let got = simd::with_backend_override(backend, || {
+                with_thread_limit(width, || engine_gram(&ds, &cfg, EngineConfig::default()))
+            });
+            assert_bits_equal(
+                &reference,
+                &got,
+                &format!("prepared pairwise: simd={} width={width}", backend.name()),
+            );
         }
     }
 }
