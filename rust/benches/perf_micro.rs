@@ -8,7 +8,10 @@
 //! * one sparse Sinkhorn scaling pass (O(Hs));
 //! * dense decomposable vs generic tensor product (the baseline cost);
 //! * end-to-end Spar-GW solve latency, cold and with a reused
-//!   `SparCore` workspace.
+//!   `SparCore` workspace;
+//! * the hierarchical tier: one qgw solve from the raw point cloud
+//!   (partition + coarse + extension) and one factored lr_gw mirror
+//!   descent at the same n.
 //!
 //! This binary also installs the counting allocator and **verifies the
 //! zero-allocations-per-iteration property** of the SparCore inner loop:
@@ -171,6 +174,34 @@ fn main() {
         std::hint::black_box(spar_gw_with_workspace(&p, GroundCost::L1, &cfg, &set, &mut ws));
     });
     emit("spar_gw_ws_reuse_l1", t);
+
+    // 7b. Hierarchical tier rows: qgw end-to-end from the point cloud
+    //     (no n×n allocation on its path) and the factored lr_gw descent
+    //     on the dense instance, both at the same n.
+    let tier_base = spargw::gw::solver::SolverBase { outer_iters: 5, ..Default::default() };
+    let qsolver = spargw::gw::qgw::build(&Default::default(), &tier_base).expect("qgw build");
+    let mut qrng = Xoshiro256::new(0x99);
+    let (qsrc, qtgt) = spargw::datasets::moon::moon_points(n, 0.05, &mut qrng);
+    let qpx = spargw::gw::PointCloud::from_points(&qsrc);
+    let qpy = spargw::gw::PointCloud::from_points(&qtgt);
+    let qa = spargw::util::uniform(n);
+    let t = bench(reps, || {
+        let mut r = Xoshiro256::new(6);
+        let rep = qsolver.solve_points(&qpx, &qpy, &qa, &qa, &mut r, &mut ws).expect("qgw");
+        std::hint::black_box(rep.value);
+    });
+    emit("qgw_points_end_to_end", t);
+    let mut lr_opts = std::collections::BTreeMap::new();
+    lr_opts.insert("outer".to_string(), "5".to_string());
+    let lr_solver =
+        spargw::gw::solver::SolverRegistry::build_with_base("lr_gw", &lr_opts, &tier_base)
+            .expect("lr_gw build");
+    let t = bench(reps, || {
+        let mut r = Xoshiro256::new(7);
+        let rep = lr_solver.solve(&p, &mut r, &mut ws).expect("lr_gw");
+        std::hint::black_box(rep.value);
+    });
+    emit("lr_gw_factored_solve", t);
 
     // 8. Allocation audit: the SparCore inner loop must not allocate.
     //    Compare allocation events at two outer budgets on a warm

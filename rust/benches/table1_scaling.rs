@@ -11,17 +11,33 @@
 //! (the O(n⁴) generic-tensor path), and Spar-GW with the row-chunked
 //! threaded cost kernel.
 //!
-//! Output: the fitted table on stdout + `results/table1.csv`.
+//! After the fitted table, the **million-point tier** section times the
+//! hierarchical solvers from raw point clouds and records the solve-path
+//! peak allocation (counting global allocator): qgw streams the points
+//! and never allocates O(n²), while the dense baselines are capped at the
+//! largest n whose relation matrices fit. Rows land in
+//! `results/BENCH_scaling.json`, mirrored to the repository root (the
+//! tracked perf-trajectory snapshot).
+//!
+//! Output: the fitted table on stdout + `results/table1.csv` +
+//! `results/BENCH_scaling.json`.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use spargw::bench::workloads::{full_mode, Workload};
+use spargw::bench::{peak_bytes_during, CountingAllocator};
+use spargw::datasets::moon::moon_points;
+use spargw::datasets::pairwise_euclidean;
 use spargw::gw::core::Workspace;
 use spargw::gw::solver::{SolverBase, SolverRegistry};
-use spargw::gw::GroundCost;
+use spargw::gw::{qgw, GroundCost, GwProblem, PointCloud};
 use spargw::rng::{derive_seed, Xoshiro256};
 use spargw::util::csv::CsvWriter;
+use spargw::util::uniform;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
 
 /// Least-squares slope of log(time) against log(n).
 fn loglog_slope(ns: &[usize], ts: &[f64]) -> f64 {
@@ -48,6 +64,7 @@ fn paper_claim(name: &str) -> &'static str {
         "lr_gw" => "r(r+r)n (low-rank)",
         "sgwl" => "n^2 log n",
         "anchor" => "n^2 log(n^2)",
+        "qgw" => "nm + solve(m), m = sqrt(n) (quantized)",
         other => panic!("no Table-1 claim recorded for solver {other:?}"),
     }
 }
@@ -161,4 +178,105 @@ fn main() {
 
     csv.flush().unwrap();
     println!("\nwrote results/table1.csv");
+
+    // ------------------------------------------------------------------
+    // Million-point tier: seconds + solve-path peak bytes from raw point
+    // clouds. qgw consumes the points directly (no n×n matrix anywhere);
+    // the dense baselines (spar_gw, factored lr_gw) get their relation
+    // matrices materialized *outside* the measured region and are capped
+    // at the largest n whose dense inputs fit, so the recorded peak is
+    // the solve path's own allocation in every row.
+    // ------------------------------------------------------------------
+    let tier_ns: Vec<usize> =
+        if full_mode() { vec![2_000, 10_000, 50_000] } else { vec![256, 512] };
+    let dense_cap: usize = if full_mode() { 2_000 } else { 512 };
+    let tier_base = SolverBase { outer_iters: 5, ..Default::default() };
+    println!(
+        "\nMillion-point tier (moon points, uniform marginals, outer = {}):",
+        tier_base.outer_iters
+    );
+    println!(
+        "{:<10} {:>8} {:>12} {:>14}",
+        "solver", "n", "seconds", "peak_bytes"
+    );
+    let mut tier_rows: Vec<(String, usize, f64, usize)> = Vec::new();
+    for (ti, &n) in tier_ns.iter().enumerate() {
+        let mut grng = Xoshiro256::new(derive_seed(0x5CA1, ti as u64));
+        let (src, tgt) = moon_points(n, 0.05, &mut grng);
+        let a = uniform(n);
+
+        // qgw over the implicit point-cloud relation.
+        let qsolver = qgw::build(&BTreeMap::new(), &tier_base).expect("qgw build");
+        let px = PointCloud::from_points(&src);
+        let py = PointCloud::from_points(&tgt);
+        let t0 = Instant::now();
+        let (rep, peak) = peak_bytes_during(|| {
+            let mut rng = Xoshiro256::new(derive_seed(31, n as u64));
+            qsolver.solve_points(&px, &py, &a, &a, &mut rng, &mut ws).expect("qgw solve")
+        });
+        let secs = t0.elapsed().as_secs_f64();
+        std::hint::black_box(rep.value);
+        println!("{:<10} {n:>8} {secs:>12.4} {peak:>14}", "qgw");
+        tier_rows.push(("qgw".to_string(), n, secs, peak));
+
+        if n > dense_cap {
+            continue;
+        }
+        let cx = pairwise_euclidean(&src);
+        let cy = pairwise_euclidean(&tgt);
+        let p = GwProblem::new(&cx, &cy, &a, &a);
+        // Factored lr_gw keeps the paper rank but a Nyström operator and
+        // a short descent so the row times the factored path, not the
+        // schedule length.
+        let mut lr_opts = BTreeMap::new();
+        lr_opts.insert("outer".to_string(), "10".to_string());
+        lr_opts.insert("landmarks".to_string(), "64".to_string());
+        let no_tier_opts = BTreeMap::new();
+        for (name, opts) in [("spar_gw", &no_tier_opts), ("lr_gw", &lr_opts)] {
+            let solver =
+                SolverRegistry::build_with_base(name, opts, &tier_base).expect("tier build");
+            let t0 = Instant::now();
+            let (rep, peak) = peak_bytes_during(|| {
+                let mut rng = Xoshiro256::new(derive_seed(31, n as u64));
+                solver.solve(&p, &mut rng, &mut ws).expect("tier solve")
+            });
+            let secs = t0.elapsed().as_secs_f64();
+            std::hint::black_box(rep.value);
+            println!("{name:<10} {n:>8} {secs:>12.4} {peak:>14}");
+            tier_rows.push((name.to_string(), n, secs, peak));
+        }
+    }
+
+    // Emit BENCH_scaling.json: results/ for the CI artifact upload plus a
+    // mirror at the repository root (the tracked snapshot the acceptance
+    // gates read — same convention as BENCH_threads/BENCH_kernels).
+    let tier_ns_str: Vec<String> = tier_ns.iter().map(|n| n.to_string()).collect();
+    let mut sjson = String::from("{\n");
+    sjson.push_str(&format!(
+        "  \"workload\": \"moon-points\",\n  \"full\": {},\n  \"dense_cap\": {dense_cap},\n  \
+         \"tier_ns\": [{}],\n  \"rows\": [\n",
+        full_mode(),
+        tier_ns_str.join(", ")
+    ));
+    for (i, (name, n, secs, peak)) in tier_rows.iter().enumerate() {
+        sjson.push_str(&format!(
+            "    {{\"solver\": \"{name}\", \"n\": {n}, \"seconds\": {secs:.6e}, \
+             \"peak_bytes\": {peak}}}{}\n",
+            if i + 1 < tier_rows.len() { "," } else { "" }
+        ));
+    }
+    sjson.push_str("  ]\n}\n");
+    let write_artifact = |name: &str, contents: &str| {
+        let local = format!("results/{name}");
+        std::fs::write(&local, contents).unwrap_or_else(|e| panic!("write {local}: {e}"));
+        println!("wrote {local}");
+        if let Some(root) = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+            let rp = root.join(name);
+            match std::fs::write(&rp, contents) {
+                Ok(()) => println!("wrote {}", rp.display()),
+                Err(e) => println!("WARNING: cannot write {}: {e}", rp.display()),
+            }
+        }
+    };
+    write_artifact("BENCH_scaling.json", &sjson);
 }

@@ -44,7 +44,7 @@ use super::service::PairwiseConfig;
 use crate::datasets::graphsets::{attribute_distance, GraphDataset};
 use crate::gw::core::Workspace;
 use crate::gw::fgw::FgwProblem;
-use crate::gw::solver::GwSolver;
+use crate::gw::solver::{GwSolver, PhaseTimings};
 use crate::gw::GwProblem;
 use crate::kernel::simd;
 use crate::linalg::Mat;
@@ -261,7 +261,7 @@ impl PairwiseEngine {
             let solver_ref = solver;
             let cache_ref = cache.as_ref();
             let cfg = &self.cfg;
-            let results: Vec<Result<(f64, f64)>> = run_jobs_with(
+            let results: Vec<Result<(f64, PhaseTimings, f64)>> = run_jobs_with(
                 jobs.len(),
                 cfg.workers,
                 Workspace::new,
@@ -310,7 +310,7 @@ impl PairwiseEngine {
                             }
                         }
                     };
-                    Ok((report.value, t0.elapsed().as_secs_f64()))
+                    Ok((report.value, report.timings, t0.elapsed().as_secs_f64()))
                 },
             );
 
@@ -318,7 +318,7 @@ impl PairwiseEngine {
             let mut shard_rows = Vec::with_capacity(results.len());
             for (q, res) in results.into_iter().enumerate() {
                 let (i, j) = pairs[jobs[q]];
-                let (value, lat) = res.map_err(|e| {
+                let (value, timings, lat) = res.map_err(|e| {
                     e.wrap(format!(
                         "shard {shard} pair ({i},{j}) via solver {:?}",
                         solver.name()
@@ -328,6 +328,7 @@ impl PairwiseEngine {
                 distances[(j, i)] = value;
                 shard_rows.push((i, j, value, lat));
                 lats.push(lat);
+                metrics.record_phases(&timings);
                 computed_pairs += 1;
             }
             if let Some(f) = sink_file.as_mut() {

@@ -1,5 +1,7 @@
 //! Latency/throughput metrics for the pairwise service.
 
+use crate::gw::PhaseTimings;
+
 /// Collects per-job latencies and summarizes them, tagged with the name
 /// of the engine that produced the jobs.
 #[derive(Default)]
@@ -11,6 +13,9 @@ pub struct MetricsRecorder {
     shards: Option<(usize, usize)>,
     /// Active SIMD kernel backend name (`kernel::simd::current().name()`).
     simd: Option<String>,
+    /// Accumulated named solve-phase seconds (insertion order preserved:
+    /// the order the first report named its phases in).
+    phases: Vec<(&'static str, f64)>,
 }
 
 impl MetricsRecorder {
@@ -52,6 +57,24 @@ impl MetricsRecorder {
 
     pub fn record(&mut self, seconds: f64) {
         self.latencies.push(seconds);
+    }
+
+    /// Accumulate a report's per-phase wall-clock breakdown. The
+    /// hierarchical solvers (qgw, lr_gw) name their phases via
+    /// [`PhaseDetail`](crate::gw::PhaseDetail); historical solvers
+    /// contribute nothing and the summary stays unchanged.
+    pub fn record_phases(&mut self, timings: &PhaseTimings) {
+        for (name, seconds) in timings.detail.named() {
+            match self.phases.iter_mut().find(|(n, _)| *n == name) {
+                Some((_, acc)) => *acc += seconds,
+                None => self.phases.push((name, seconds)),
+            }
+        }
+    }
+
+    /// Accumulated `(phase, seconds)` totals, in first-seen order.
+    pub fn phases(&self) -> &[(&'static str, f64)] {
+        &self.phases
     }
 
     pub fn record_batch(&mut self, latencies: &[f64], wall: f64) {
@@ -101,8 +124,18 @@ impl MetricsRecorder {
             Some(name) => format!("simd={name} "),
             None => String::new(),
         };
+        let phases = if self.phases.is_empty() {
+            String::new()
+        } else {
+            let parts: Vec<String> = self
+                .phases
+                .iter()
+                .map(|(name, secs)| format!("{name}={secs:.4}s"))
+                .collect();
+            format!(" phases[{}]", parts.join(" "))
+        };
         format!(
-            "{solver}{shards}{simd}jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s",
+            "{solver}{shards}{simd}jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s{phases}",
             self.count(),
             self.mean(),
             self.percentile(0.5),
@@ -163,6 +196,35 @@ mod tests {
         m.record(0.1);
         assert_eq!(m.simd(), Some("avx2"));
         assert!(m.summary().contains("simd=avx2 "), "{}", m.summary());
+    }
+
+    #[test]
+    fn phase_breakdown_accumulates_and_appears_in_summary() {
+        use crate::gw::PhaseDetail;
+        let mut m = MetricsRecorder::new();
+        m.set_solver("qgw");
+        let t = PhaseTimings {
+            sample_seconds: 0.1,
+            solve_seconds: 0.5,
+            detail: PhaseDetail::Quantized {
+                partition_seconds: 0.1,
+                coarse_seconds: 0.3,
+                extension_seconds: 0.2,
+            },
+        };
+        m.record_phases(&t);
+        m.record_phases(&t);
+        let phases = m.phases();
+        assert_eq!(phases.len(), 3);
+        assert_eq!(phases[0].0, "partition");
+        assert!((phases[1].1 - 0.6).abs() < 1e-12, "coarse acc {}", phases[1].1);
+        let s = m.summary();
+        assert!(s.contains("phases[partition=0.2000s"), "{s}");
+        // Historical solvers contribute no phase detail.
+        let mut plain = MetricsRecorder::new();
+        plain.record_phases(&PhaseTimings::basic(0.0, 1.0));
+        assert!(plain.phases().is_empty());
+        assert!(!plain.summary().contains("phases["), "{}", plain.summary());
     }
 
     #[test]

@@ -199,7 +199,7 @@ impl Alg1Solver {
             plan: Plan::Dense(r.plan),
             outer_iters: r.outer_iters,
             converged: r.converged,
-            timings: PhaseTimings { sample_seconds: 0.0, solve_seconds },
+            timings: PhaseTimings::basic(0.0, solve_seconds),
         }
     }
 }

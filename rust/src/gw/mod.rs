@@ -26,8 +26,15 @@
 //!   (adapter over [`core`]).
 //! * [`ugw`] / [`spar_ugw`] — unbalanced GW, dense and **Algorithm 3**
 //!   (adapter over [`core`]).
-//! * [`sagrow`], [`lr_gw`], [`sgwl`], [`anchor`] — reimplemented
-//!   comparators (Table 1 rows).
+//! * [`sagrow`], [`sgwl`], [`anchor`] — reimplemented comparators
+//!   (Table 1 rows).
+//! * [`qgw`] / [`lr_gw`] — the hierarchical tier: quantized recursive
+//!   GW (partition → coarse solve → local extension, sparse block
+//!   plan) and factored low-rank couplings (`Plan::Factored`, costs
+//!   streamed via [`relation`], never densified).
+//! * [`relation`] — the [`Relation`] input abstraction (dense matrix
+//!   or on-demand [`PointCloud`] distances) behind the O(n²)-free
+//!   solve paths.
 //! * [`solver`] — the unified `GwSolver` trait, `SolveReport`, and the
 //!   string-keyed `SolverRegistry` dispatching every engine above.
 //! * [`stationarity`] — the gap `G(T)` of §4 (theory validation).
@@ -38,6 +45,8 @@ pub mod core;
 pub mod cost;
 pub mod fgw;
 pub mod lr_gw;
+pub mod qgw;
+pub mod relation;
 pub mod sagrow;
 pub mod sampling;
 pub mod sgwl;
@@ -51,8 +60,10 @@ pub mod ugw;
 
 pub use alg1::{egw, emd_gw, pga_gw, Alg1Config};
 pub use cost::GroundCost;
+pub use relation::{PointCloud, Relation};
 pub use solver::{
-    GwSolver, PhaseTimings, Plan, PreparedStructure, SolveReport, SolverBase, SolverRegistry,
+    GwSolver, LowRankPlan, PhaseDetail, PhaseTimings, Plan, PreparedStructure, SolveReport,
+    SolverBase, SolverRegistry,
 };
 pub use spar_gw::{spar_gw, SparGwConfig, SparGwResult};
 

@@ -1,0 +1,568 @@
+//! **Quantized recursive GW (`qgw`)** — the hierarchical million-point
+//! tier (following Chowdhury, Miller & Needham 2021, arXiv 2104.02013).
+//!
+//! Three phases, none of which allocates O(n²):
+//!
+//! 1. **Partition** — pick m anchor points per side (m ≈ √n by default):
+//!    the first anchor is a marginal-weighted draw through the crate's
+//!    alias-table sampling machinery, the rest by farthest-point
+//!    traversal, optionally refined by weighted k-medoid sweeps. Every
+//!    atom is assigned to its nearest anchor (O(n·m) relation entries,
+//!    pool-parallel, element-wise ⇒ bit-identical at any width).
+//! 2. **Coarse solve** — gather the m×m anchor relation blocks, put the
+//!    partition masses on them as marginals, and hand the small dense
+//!    problem to a **registry-dispatched inner solver** (default
+//!    `spar_gw`, so the whole SparCore/SIMD/pool stack accelerates the
+//!    coarse level; any leaf solver name works via `inner=`).
+//! 3. **Extension** — for each coarse coupling entry (u, v) with mass
+//!    t_uv, couple the members of partition u to the members of partition
+//!    v by a northwest-corner transport between their conditional
+//!    marginals (members ordered by distance-to-own-anchor), scaled by
+//!    t_uv. Each block contributes ≤ |P_u| + |P_v| − 1 entries, so the
+//!    extended [`Plan::Sparse`] holds O(coarse-nnz · n/m) = O(n)
+//!    entries, never n².
+//!
+//! The reported value is the coarse GW estimate (the quantized
+//! approximation); `outer_iters`/`converged` are the inner solver's.
+//! Relations come in through [`Relation`], so the same code serves the
+//! registry's dense `GwProblem` entry point *and* the O(n)-memory
+//! [`PointCloud`] path (`QgwSolver::solve_points`, used by the CLI for
+//! point workloads) — with bit-identical results when the dense matrix
+//! equals the materialized cloud.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use super::core::Workspace;
+use super::cost::GroundCost;
+use super::relation::{PointCloud, Relation};
+use super::solver::{
+    normalize, GwSolver, Opts, PhaseDetail, PhaseTimings, Plan, SolveReport, SolverBase,
+    SolverRegistry,
+};
+use super::GwProblem;
+use crate::ensure;
+use crate::rng::{AliasTable, Rng};
+use crate::runtime::pool::pool;
+use crate::sparse::Coo;
+use crate::util::error::Result;
+
+/// Configuration for the quantized solver.
+#[derive(Clone, Debug)]
+pub struct QgwConfig {
+    /// Anchor count m per side (0 → ⌈√n⌉, clamped to [1, n]).
+    pub anchors: usize,
+    /// Weighted k-medoid refinement sweeps after farthest-point seeding.
+    pub refine_iters: usize,
+    /// Registry name of the coarse-level solver (any leaf engine).
+    pub inner: String,
+}
+
+impl Default for QgwConfig {
+    fn default() -> Self {
+        QgwConfig { anchors: 0, refine_iters: 1, inner: "spar_gw".to_string() }
+    }
+}
+
+/// One side's quantization: anchors, per-partition mass, and the member
+/// lists ordered by (distance to own anchor, index) — the order the
+/// northwest-corner extension consumes.
+struct SidePartition {
+    /// Anchor atom indices (one per non-empty, positive-mass partition).
+    anchors: Vec<usize>,
+    /// Marginal mass per partition (coarse marginal; sums to 1).
+    mass: Vec<f64>,
+    /// Member atom indices per partition, sorted by (dist, index).
+    members: Vec<Vec<usize>>,
+}
+
+/// Effective anchor count for an n-atom side.
+fn auto_anchors(requested: usize, n: usize) -> usize {
+    let m = if requested == 0 { (n as f64).sqrt().ceil() as usize } else { requested };
+    m.clamp(1, n)
+}
+
+/// Nearest-anchor assignment: for every atom, the partition index of the
+/// closest anchor (ties → lowest partition index) and that distance.
+/// Element-wise over atoms on the worker pool — bit-identical at any
+/// pool width and chunking.
+fn assign_nearest(rel: &Relation, anchors: &[usize], out: &mut [(f64, u32)]) {
+    pool().for_each_chunk_mut(out, 1024, |chunk, range, _| {
+        for (slot, i) in chunk.iter_mut().zip(range) {
+            let mut best = f64::INFINITY;
+            let mut best_u = 0u32;
+            for (u, &anchor) in anchors.iter().enumerate() {
+                let d = rel.entry(i, anchor);
+                if d < best {
+                    best = d;
+                    best_u = u as u32;
+                }
+            }
+            *slot = (best, best_u);
+        }
+    });
+}
+
+/// Phase 1: quantize one side. The first anchor is a marginal-weighted
+/// alias-table draw, the rest farthest-point picks (ties → lowest index),
+/// optionally refined by weighted k-medoid sweeps. Partitions that end up
+/// empty or with zero marginal mass are dropped (they carry no coupling
+/// mass and would otherwise produce 0/0 conditionals).
+fn quantize(
+    rel: &Relation,
+    marginal: &[f64],
+    m: usize,
+    refine: usize,
+    rng: &mut Rng,
+) -> SidePartition {
+    let n = rel.len();
+    let m = auto_anchors(m, n);
+    let mut anchors = Vec::with_capacity(m);
+    anchors.push(AliasTable::new(marginal).sample(rng));
+
+    // Farthest-point traversal: keep each atom's distance to the nearest
+    // chosen anchor, extend with the argmax (pool-parallel min-update,
+    // serial argmax scan — both deterministic).
+    let mut nearest = vec![0.0f64; n];
+    rel.column_into(anchors[0], &mut nearest);
+    while anchors.len() < m {
+        let last = *anchors.last().unwrap();
+        if anchors.len() > 1 {
+            let relc = *rel;
+            pool().for_each_chunk_mut(&mut nearest, 1024, |chunk, range, _| {
+                for (slot, i) in chunk.iter_mut().zip(range) {
+                    let d = relc.entry(i, last);
+                    if d < *slot {
+                        *slot = d;
+                    }
+                }
+            });
+        }
+        let mut far = 0usize;
+        for i in 1..n {
+            if nearest[i] > nearest[far] {
+                far = i;
+            }
+        }
+        anchors.push(far);
+    }
+
+    // Nearest-anchor assignment (+ optional k-medoid refinement: each
+    // partition's anchor moves to its weighted medoid, then re-assign).
+    let mut near: Vec<(f64, u32)> = vec![(0.0, 0); n];
+    assign_nearest(rel, &anchors, &mut near);
+    for _ in 0..refine {
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); anchors.len()];
+        for (i, &(_, u)) in near.iter().enumerate() {
+            members[u as usize].push(i);
+        }
+        let relc = *rel;
+        let membs = &members;
+        let marg = marginal;
+        let old = anchors.clone();
+        pool().for_each_chunk_mut(&mut anchors, 1, |chunk, range, _| {
+            for (slot, u) in chunk.iter_mut().zip(range) {
+                let pu = &membs[u];
+                if pu.is_empty() {
+                    *slot = old[u];
+                    continue;
+                }
+                let mut best = f64::INFINITY;
+                let mut best_p = pu[0];
+                for &p in pu {
+                    let mut s = 0.0;
+                    for &q in pu {
+                        s += marg[q] * relc.entry(p, q);
+                    }
+                    if s < best {
+                        best = s;
+                        best_p = p;
+                    }
+                }
+                *slot = best_p;
+            }
+        });
+        assign_nearest(rel, &anchors, &mut near);
+    }
+
+    // Final grouping: members sorted by (distance to own anchor, index),
+    // mass summed in that order; drop empty/zero-mass partitions.
+    let mut grouped: Vec<Vec<usize>> = vec![Vec::new(); anchors.len()];
+    for (i, &(_, u)) in near.iter().enumerate() {
+        grouped[u as usize].push(i);
+    }
+    let mut kept_anchors = Vec::new();
+    let mut kept_mass = Vec::new();
+    let mut kept_members = Vec::new();
+    for (u, mut pu) in grouped.into_iter().enumerate() {
+        pu.sort_by(|&p, &q| {
+            near[p].0.partial_cmp(&near[q].0).unwrap().then(p.cmp(&q))
+        });
+        let mass: f64 = pu.iter().map(|&p| marginal[p]).sum();
+        if !pu.is_empty() && mass > 0.0 {
+            kept_anchors.push(anchors[u]);
+            kept_mass.push(mass);
+            kept_members.push(pu);
+        }
+    }
+    SidePartition { anchors: kept_anchors, mass: kept_mass, members: kept_members }
+}
+
+/// Phase 3: extend one coarse entry (u, v, t) by a northwest-corner
+/// transport between the member conditionals, scaled by t. Appends
+/// ≤ |P_u| + |P_v| − 1 triplets.
+#[allow(clippy::too_many_arguments)]
+fn extend_block(
+    px: &SidePartition,
+    py: &SidePartition,
+    a: &[f64],
+    b: &[f64],
+    u: usize,
+    v: usize,
+    t: f64,
+    rows: &mut Vec<usize>,
+    cols: &mut Vec<usize>,
+    vals: &mut Vec<f64>,
+) {
+    if t <= 0.0 {
+        return;
+    }
+    let pu = &px.members[u];
+    let pv = &py.members[v];
+    let (au, bv) = (px.mass[u], py.mass[v]);
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut ra = a[pu[0]] / au * t;
+    let mut rb = b[pv[0]] / bv * t;
+    while i < pu.len() && j < pv.len() {
+        let m = ra.min(rb);
+        if m > 0.0 {
+            rows.push(pu[i]);
+            cols.push(pv[j]);
+            vals.push(m);
+        }
+        if ra <= rb {
+            rb -= ra;
+            i += 1;
+            if i < pu.len() {
+                ra = a[pu[i]] / au * t;
+            }
+        } else {
+            ra -= rb;
+            j += 1;
+            if j < pv.len() {
+                rb = b[pv[j]] / bv * t;
+            }
+        }
+    }
+}
+
+/// Registry solver for quantized recursive GW (`"qgw"`). Holds the
+/// registry-built inner solver for the coarse level; options: `anchors=`
+/// (0 → ⌈√n⌉), `refine=` (k-medoid sweeps), `inner=` (coarse solver
+/// name), plus the usual `cost=`/`epsilon=`/`s=`/`outer=`/`reg=`/
+/// `shrink=`/`tol=`/`precision=` forwarded into the inner solve.
+pub struct QgwSolver {
+    /// Quantization parameters.
+    pub cfg: QgwConfig,
+    /// The coarse-level engine (built once, registry-dispatched).
+    inner: Box<dyn GwSolver>,
+}
+
+impl QgwSolver {
+    pub(crate) fn from_opts(base: &SolverBase, o: &mut Opts) -> Result<Self> {
+        let d = QgwConfig::default();
+        let cfg = QgwConfig {
+            anchors: o.usize("anchors", d.anchors)?,
+            refine_iters: o.usize("refine", d.refine_iters)?,
+            inner: o.string("inner", &d.inner)?,
+        };
+        ensure!(
+            normalize(&cfg.inner) != "qgw",
+            "solver \"qgw\": inner solver must be a leaf engine, got {:?} \
+             (the recursion bottoms out at the coarse level)",
+            cfg.inner
+        );
+        let inner_base = SolverBase {
+            cost: o.cost(base.cost)?,
+            epsilon: o.f64("epsilon", base.epsilon)?,
+            sample_size: o.usize("s", base.sample_size)?,
+            outer_iters: o.usize("outer", base.outer_iters)?,
+            reg: o.reg(base.reg)?,
+            shrink: o.f64("shrink", base.shrink)?,
+            tol: o.f64("tol", base.tol)?,
+            precision: o.precision(base.precision)?,
+            ..*base
+        };
+        let inner = SolverRegistry::build_with_base(&cfg.inner, &BTreeMap::new(), &inner_base)?;
+        Ok(QgwSolver { cfg, inner })
+    }
+
+    /// Registry name of the coarse-level engine.
+    pub fn inner_name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    /// The million-point entry: implicit Euclidean relations over point
+    /// clouds — O(n·dim + n·m + coarse + nnz) memory, no n×n matrix
+    /// anywhere. Bit-identical to [`GwSolver::solve`] on the materialized
+    /// distance matrices of the same clouds.
+    pub fn solve_points(
+        &self,
+        px: &PointCloud,
+        py: &PointCloud,
+        a: &[f64],
+        b: &[f64],
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        assert_eq!(px.len(), a.len(), "qgw: source cloud/marginal mismatch");
+        assert_eq!(py.len(), b.len(), "qgw: target cloud/marginal mismatch");
+        self.solve_relations(Relation::Points(px), Relation::Points(py), a, b, rng, ws)
+    }
+
+    /// The shared three-phase pipeline over any relation representation.
+    fn solve_relations(
+        &self,
+        rx: Relation,
+        ry: Relation,
+        a: &[f64],
+        b: &[f64],
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> Result<SolveReport> {
+        // Phase 1: partition both sides.
+        let t0 = Instant::now();
+        let px = quantize(&rx, a, self.cfg.anchors, self.cfg.refine_iters, rng);
+        let py = quantize(&ry, b, self.cfg.anchors, self.cfg.refine_iters, rng);
+        let partition_seconds = t0.elapsed().as_secs_f64();
+
+        // Phase 2: coarse solve on the gathered anchor blocks.
+        let t1 = Instant::now();
+        let cax = rx.gather(&px.anchors, &px.anchors);
+        let cay = ry.gather(&py.anchors, &py.anchors);
+        let coarse_p = GwProblem::new(&cax, &cay, &px.mass, &py.mass);
+        let coarse = self.inner.solve(&coarse_p, rng, ws)?;
+        let coarse_seconds = t1.elapsed().as_secs_f64();
+
+        // Phase 3: northwest-corner extension within matched partitions,
+        // walking the coarse plan in its deterministic storage order.
+        let t2 = Instant::now();
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        let mut emit = |u: usize, v: usize, t: f64| {
+            extend_block(&px, &py, a, b, u, v, t, &mut rows, &mut cols, &mut vals)
+        };
+        match &coarse.plan {
+            Plan::Dense(t) => {
+                for u in 0..t.rows() {
+                    let row = t.row(u);
+                    for (v, &tv) in row.iter().enumerate() {
+                        emit(u, v, tv);
+                    }
+                }
+            }
+            Plan::Sparse(t) => {
+                for ((&u, &v), &tv) in t.rows().iter().zip(t.cols()).zip(t.vals()) {
+                    emit(u as usize, v as usize, tv);
+                }
+            }
+            Plan::Factored(t) => {
+                let dense = t.reconstruct();
+                for u in 0..dense.rows() {
+                    let row = dense.row(u);
+                    for (v, &tv) in row.iter().enumerate() {
+                        emit(u, v, tv);
+                    }
+                }
+            }
+        }
+        let plan = Coo::from_triplets(a.len(), b.len(), &rows, &cols, &vals);
+        let extension_seconds = t2.elapsed().as_secs_f64();
+
+        Ok(SolveReport {
+            solver: "qgw",
+            value: coarse.value,
+            plan: Plan::Sparse(plan),
+            outer_iters: coarse.outer_iters,
+            converged: coarse.converged,
+            timings: PhaseTimings {
+                sample_seconds: partition_seconds,
+                solve_seconds: coarse_seconds + extension_seconds,
+                detail: PhaseDetail::Quantized {
+                    partition_seconds,
+                    coarse_seconds,
+                    extension_seconds,
+                },
+            },
+        })
+    }
+}
+
+/// Build a [`QgwSolver`] from the CLI-style option map (public so the
+/// binary's point-cloud path can construct one without the `dyn GwSolver`
+/// indirection). Unknown keys error like the registry build.
+pub fn build(opts: &BTreeMap<String, String>, base: &SolverBase) -> Result<QgwSolver> {
+    let mut o = Opts::new(opts);
+    let solver = QgwSolver::from_opts(base, &mut o)?;
+    o.finish("qgw")?;
+    Ok(solver)
+}
+
+impl GwSolver for QgwSolver {
+    fn name(&self) -> &'static str {
+        "qgw"
+    }
+
+    fn solve(&self, p: &GwProblem, rng: &mut Rng, ws: &mut Workspace) -> Result<SolveReport> {
+        self.solve_relations(Relation::Dense(p.cx), Relation::Dense(p.cy), p.a, p.b, rng, ws)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::pairwise_euclidean;
+    use crate::rng::Xoshiro256;
+    use crate::util::uniform;
+
+    fn random_points(n: usize, dim: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n).map(|_| (0..dim).map(|_| rng.f64()).collect()).collect()
+    }
+
+    fn build_default() -> QgwSolver {
+        build(&BTreeMap::new(), &SolverBase::default()).unwrap()
+    }
+
+    #[test]
+    fn quantize_covers_every_atom_once() {
+        let pts = random_points(40, 2, 1);
+        let cloud = PointCloud::from_points(&pts);
+        let a = uniform(40);
+        let mut rng = Xoshiro256::new(3);
+        let part = quantize(&Relation::Points(&cloud), &a, 0, 1, &mut rng);
+        assert_eq!(part.anchors.len(), part.members.len());
+        assert_eq!(part.anchors.len(), part.mass.len());
+        let mut seen = vec![false; 40];
+        for pu in &part.members {
+            for &p in pu {
+                assert!(!seen[p], "atom {p} in two partitions");
+                seen[p] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every atom must be assigned");
+        let total: f64 = part.mass.iter().sum();
+        assert!((total - 1.0).abs() < 1e-12, "coarse mass {total}");
+    }
+
+    #[test]
+    fn extended_plan_mass_matches_coarse_mass() {
+        let xs = random_points(48, 2, 5);
+        let ys = random_points(48, 3, 6);
+        let cx = pairwise_euclidean(&xs);
+        let cy = pairwise_euclidean(&ys);
+        let a = uniform(48);
+        let p = GwProblem::new(&cx, &cy, &a, &a);
+        let solver = build_default();
+        let mut rng = Xoshiro256::new(9);
+        let mut ws = Workspace::new();
+        let r = solver.solve(&p, &mut rng, &mut ws).unwrap();
+        assert!(r.value.is_finite() && r.value >= -1e-9, "value {}", r.value);
+        assert!(r.plan.is_finite());
+        assert!((r.plan.sum() - 1.0).abs() < 0.1, "mass {}", r.plan.sum());
+        // Sub-dense support: the whole point of the tier.
+        assert!(r.plan.nnz() < 48 * 48 / 2, "nnz {}", r.plan.nnz());
+        // Per-phase timings are populated.
+        match r.timings.detail {
+            PhaseDetail::Quantized { .. } => {}
+            _ => panic!("qgw must report quantized phase detail"),
+        }
+    }
+
+    #[test]
+    fn points_path_is_bit_identical_to_dense_path() {
+        let xs = random_points(36, 2, 11);
+        let ys = random_points(36, 2, 12);
+        let cx = pairwise_euclidean(&xs);
+        let cy = pairwise_euclidean(&ys);
+        let pcx = PointCloud::from_points(&xs);
+        let pcy = PointCloud::from_points(&ys);
+        let a = uniform(36);
+
+        let solver = build_default();
+        let p = GwProblem::new(&cx, &cy, &a, &a);
+        let mut rng1 = Xoshiro256::new(21);
+        let mut ws1 = Workspace::new();
+        let dense = solver.solve(&p, &mut rng1, &mut ws1).unwrap();
+        let mut rng2 = Xoshiro256::new(21);
+        let mut ws2 = Workspace::new();
+        let pts = solver.solve_points(&pcx, &pcy, &a, &a, &mut rng2, &mut ws2).unwrap();
+
+        assert_eq!(dense.value.to_bits(), pts.value.to_bits());
+        assert_eq!(dense.outer_iters, pts.outer_iters);
+        assert_eq!(dense.plan.nnz(), pts.plan.nnz());
+        assert_eq!(dense.plan.sum().to_bits(), pts.plan.sum().to_bits());
+        let (rd, rp) = (dense.plan.row_sums(), pts.plan.row_sums());
+        for i in 0..36 {
+            assert_eq!(rd[i].to_bits(), rp[i].to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn inner_solver_is_dispatchable() {
+        let mut opts = BTreeMap::new();
+        opts.insert("inner".to_string(), "egw".to_string());
+        let solver = build(&opts, &SolverBase::default()).unwrap();
+        assert_eq!(solver.inner_name(), "egw");
+        let xs = random_points(20, 2, 31);
+        let cx = pairwise_euclidean(&xs);
+        let a = uniform(20);
+        let p = GwProblem::new(&cx, &cx, &a, &a);
+        let mut rng = Xoshiro256::new(5);
+        let mut ws = Workspace::new();
+        let r = solver.solve(&p, &mut rng, &mut ws).unwrap();
+        assert_eq!(r.solver, "qgw");
+        assert!(r.value.is_finite());
+    }
+
+    #[test]
+    fn recursive_inner_is_rejected() {
+        let mut opts = BTreeMap::new();
+        opts.insert("inner".to_string(), "qgw".to_string());
+        let err = build(&opts, &SolverBase::default()).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("leaf"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_inner_name_errors_descriptively() {
+        let mut opts = BTreeMap::new();
+        opts.insert("inner".to_string(), "warp_drive".to_string());
+        let err = build(&opts, &SolverBase::default()).unwrap_err();
+        assert!(format!("{err}").contains("unknown solver"), "{err}");
+    }
+
+    #[test]
+    fn marginals_track_inputs_within_coarse_error() {
+        // The extension distributes each partition's coarse marginal over
+        // its members proportionally to the input marginal, so the L1
+        // marginal error of the extended plan equals the coarse solver's.
+        let xs = random_points(50, 2, 41);
+        let ys = random_points(50, 2, 42);
+        let cx = pairwise_euclidean(&xs);
+        let cy = pairwise_euclidean(&ys);
+        let mut rng0 = Xoshiro256::new(43);
+        let mut a: Vec<f64> = (0..50).map(|_| rng0.f64() + 0.1).collect();
+        crate::util::normalize(&mut a);
+        let b = uniform(50);
+        let p = GwProblem::new(&cx, &cy, &a, &b);
+        let solver = build_default();
+        let mut rng = Xoshiro256::new(44);
+        let mut ws = Workspace::new();
+        let r = solver.solve(&p, &mut rng, &mut ws).unwrap();
+        let rows = r.plan.row_sums();
+        let err: f64 = rows.iter().zip(&a).map(|(x, y)| (x - y).abs()).sum();
+        assert!(err < 0.5, "L1 row-marginal error {err}");
+    }
+}

@@ -1,0 +1,204 @@
+//! Implicit relation matrices for the million-point tier.
+//!
+//! Every historical solver takes `GwProblem`, which borrows *dense* n×n
+//! relation matrices — at n = 10⁵ that is 80 GB per side, so the
+//! hierarchical `qgw` tier needs relations it can evaluate **on demand**:
+//! a point cloud whose relation entry `(i, j)` is the Euclidean distance
+//! between points i and j, computed when asked, never materialized.
+//!
+//! [`Relation`] abstracts over the two representations:
+//!
+//! * `Dense(&Mat)` — the historical path (entry = stored value), so the
+//!   registry's `GwSolver::solve` entry point funnels through the same
+//!   code as the O(n)-memory path;
+//! * `Points(&PointCloud)` — entry computed from coordinates with the
+//!   *same* formula as [`crate::datasets::pairwise_euclidean`]
+//!   (`sqdist(·,·).sqrt()`, accumulation in coordinate order), so a
+//!   point-cloud solve is **bit-identical** to the equivalent dense solve
+//!   on the materialized matrix.
+//!
+//! Only O(n·m) slices (anchor columns, gathered anchor blocks) are ever
+//! allocated from a `Relation`; those fills run on the crate-wide worker
+//! pool and are element-wise, hence bit-identical at any pool width.
+
+use crate::linalg::{sqdist, Mat};
+use crate::runtime::pool::pool;
+
+/// A flat row-major point set: `n` points of dimension `dim` in one
+/// contiguous allocation (O(n·dim) memory — the only per-space state the
+/// million-point path keeps).
+pub struct PointCloud {
+    data: Vec<f64>,
+    n: usize,
+    dim: usize,
+}
+
+impl PointCloud {
+    /// Flatten a `Vec<Vec<f64>>` point list (the dataset generators'
+    /// output format). All points must share one dimension.
+    pub fn from_points(pts: &[Vec<f64>]) -> Self {
+        assert!(!pts.is_empty(), "PointCloud: empty point set");
+        let dim = pts[0].len();
+        assert!(dim > 0, "PointCloud: zero-dimensional points");
+        let mut data = Vec::with_capacity(pts.len() * dim);
+        for p in pts {
+            assert_eq!(p.len(), dim, "PointCloud: ragged point set");
+            data.extend_from_slice(p);
+        }
+        PointCloud { data, n: pts.len(), dim }
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True for an empty cloud (never: construction asserts).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Coordinate dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The i-th point's coordinates.
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Euclidean distance between points i and j — the same
+    /// `sqdist(·,·).sqrt()` evaluation `pairwise_euclidean` stores, so
+    /// implicit and materialized relations agree bit-for-bit.
+    pub fn dist(&self, i: usize, j: usize) -> f64 {
+        sqdist(self.point(i), self.point(j)).sqrt()
+    }
+}
+
+/// A relation matrix in whichever representation the caller holds: dense
+/// (historical solvers, small n) or an implicit point cloud (the
+/// million-point tier).
+#[derive(Clone, Copy)]
+pub enum Relation<'a> {
+    /// Materialized n×n matrix; entries are reads.
+    Dense(&'a Mat),
+    /// Implicit Euclidean relation over a point cloud; entries are
+    /// computed on demand.
+    Points(&'a PointCloud),
+}
+
+impl Relation<'_> {
+    /// Number of atoms n (the relation is n×n).
+    pub fn len(&self) -> usize {
+        match self {
+            Relation::Dense(c) => c.rows(),
+            Relation::Points(p) => p.len(),
+        }
+    }
+
+    /// True for an empty relation.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Entry `(i, j)` of the relation matrix.
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        match self {
+            Relation::Dense(c) => c[(i, j)],
+            Relation::Points(p) => p.dist(i, j),
+        }
+    }
+
+    /// Materialize the `rows × cols` sub-block (the qgw coarse problem
+    /// gathers the m×m anchor block — O(m²), never O(n²)).
+    pub fn gather(&self, rows: &[usize], cols: &[usize]) -> Mat {
+        match self {
+            Relation::Dense(c) => c.gather(rows, cols),
+            Relation::Points(p) => {
+                Mat::from_fn(rows.len(), cols.len(), |i, j| p.dist(rows[i], cols[j]))
+            }
+        }
+    }
+
+    /// Fill `out[i] = entry(i, j)` for a fixed column j (distance of every
+    /// atom to one anchor). Element-wise on the worker pool: bit-identical
+    /// at any width.
+    pub fn column_into(&self, j: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.len(), "column_into: length mismatch");
+        let this = *self;
+        pool().for_each_chunk_mut(out, 4096, |chunk, range, _| {
+            for (slot, i) in chunk.iter_mut().zip(range) {
+                *slot = this.entry(i, j);
+            }
+        });
+    }
+}
+
+// Safety-by-construction: both variants borrow immutable data, so sharing
+// a `Relation` across pool workers is sound (Mat and PointCloud are Sync).
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::pairwise_euclidean;
+    use crate::rng::Xoshiro256;
+
+    fn random_points(n: usize, dim: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n).map(|_| (0..dim).map(|_| rng.f64()).collect()).collect()
+    }
+
+    #[test]
+    fn points_entry_matches_materialized_matrix_bitwise() {
+        let pts = random_points(17, 3, 1);
+        let dense = pairwise_euclidean(&pts);
+        let cloud = PointCloud::from_points(&pts);
+        let rel = Relation::Points(&cloud);
+        assert_eq!(rel.len(), 17);
+        for i in 0..17 {
+            for j in 0..17 {
+                assert_eq!(
+                    rel.entry(i, j).to_bits(),
+                    dense[(i, j)].to_bits(),
+                    "entry ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gather_matches_dense_gather() {
+        let pts = random_points(12, 2, 2);
+        let dense = pairwise_euclidean(&pts);
+        let cloud = PointCloud::from_points(&pts);
+        let rows = [3, 0, 7];
+        let cols = [1, 11, 5, 2];
+        let gp = Relation::Points(&cloud).gather(&rows, &cols);
+        let gd = Relation::Dense(&dense).gather(&rows, &cols);
+        assert_eq!(gp.shape(), gd.shape());
+        for i in 0..rows.len() {
+            for j in 0..cols.len() {
+                assert_eq!(gp[(i, j)].to_bits(), gd[(i, j)].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn column_fill_is_a_column_of_the_matrix() {
+        let pts = random_points(33, 4, 3);
+        let dense = pairwise_euclidean(&pts);
+        let cloud = PointCloud::from_points(&pts);
+        let mut col = vec![0.0; 33];
+        Relation::Points(&cloud).column_into(9, &mut col);
+        for i in 0..33 {
+            assert_eq!(col[i].to_bits(), dense[(i, 9)].to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_points_rejected() {
+        PointCloud::from_points(&[vec![0.0, 1.0], vec![2.0]]);
+    }
+}

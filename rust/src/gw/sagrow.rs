@@ -276,7 +276,7 @@ impl SagrowSolver {
             plan: Plan::Dense(r.plan),
             outer_iters: r.outer_iters,
             converged: r.converged,
-            timings: PhaseTimings { sample_seconds: 0.0, solve_seconds },
+            timings: PhaseTimings::basic(0.0, solve_seconds),
         }
     }
 }

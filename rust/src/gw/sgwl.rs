@@ -176,10 +176,7 @@ impl GwSolver for SgwlSolver {
             plan: Plan::Dense(r.plan),
             outer_iters: r.outer_iters,
             converged: r.converged,
-            timings: PhaseTimings {
-                sample_seconds: 0.0,
-                solve_seconds: t0.elapsed().as_secs_f64(),
-            },
+            timings: PhaseTimings::basic(0.0, t0.elapsed().as_secs_f64()),
         })
     }
 }

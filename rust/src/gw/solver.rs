@@ -36,6 +36,7 @@ use super::core::Workspace;
 use super::cost::GroundCost;
 use super::fgw::FgwProblem;
 use super::lr_gw::LrGwSolver;
+use super::qgw::QgwSolver;
 use super::sagrow::SagrowSolver;
 use super::sampling::SideFactors;
 use super::sgwl::SgwlSolver;
@@ -50,14 +51,99 @@ use crate::sparse::Coo;
 use crate::util::error::Result;
 use crate::{bail, format_err};
 
+/// A factored low-rank coupling `T = Q diag(1/g) Rᵀ` with `Q` m×r, `R`
+/// n×r, `g ∈ Δ^{r−1}` — O((m+n)·r) storage. Mass, marginals and
+/// finiteness are all evaluated from the factors; the dense m×n matrix is
+/// only built by the explicit [`LowRankPlan::reconstruct`] (small-n
+/// evaluation paths and the opt-in `dense=1` solver option).
+pub struct LowRankPlan {
+    /// Left factor, `Q ∈ Π(a, g)` (m×r).
+    pub q: Mat,
+    /// Right factor, `R ∈ Π(b, g)` (n×r).
+    pub r: Mat,
+    /// Inner weights (length r, on the simplex).
+    pub g: Vec<f64>,
+}
+
+impl LowRankPlan {
+    /// Coupling rank r.
+    pub fn rank(&self) -> usize {
+        self.g.len()
+    }
+
+    /// `Σ_ij T_ij = Σ_k (Qᵀ1)_k (Rᵀ1)_k / g_k` — O((m+n)r).
+    pub fn sum(&self) -> f64 {
+        let cq = self.q.col_sums();
+        let cr = self.r.col_sums();
+        let mut s = 0.0;
+        for k in 0..self.g.len() {
+            s += cq[k] * cr[k] / self.g[k].max(1e-300);
+        }
+        s
+    }
+
+    /// `T·1 = Q·((Rᵀ1) ∘ g⁻¹)` — O((m+n)r), no densification.
+    pub fn row_sums(&self) -> Vec<f64> {
+        let mut w = self.r.col_sums();
+        for (wk, gk) in w.iter_mut().zip(&self.g) {
+            *wk /= gk.max(1e-300);
+        }
+        self.q.matvec(&w)
+    }
+
+    /// `Tᵀ·1 = R·((Qᵀ1) ∘ g⁻¹)`.
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut w = self.q.col_sums();
+        for (wk, gk) in w.iter_mut().zip(&self.g) {
+            *wk /= gk.max(1e-300);
+        }
+        self.r.matvec(&w)
+    }
+
+    /// Stored entries: the factor storage (m+n)·r + r, **not** m·n.
+    pub fn nnz(&self) -> usize {
+        self.q.rows() * self.q.cols() + self.r.rows() * self.r.cols() + self.g.len()
+    }
+
+    /// True if every stored factor entry is finite.
+    pub fn is_finite(&self) -> bool {
+        self.q.data().iter().all(|v| v.is_finite())
+            && self.r.data().iter().all(|v| v.is_finite())
+            && self.g.iter().all(|v| v.is_finite())
+    }
+
+    /// Materialize the dense m×n coupling. O(m·n·r) time and O(m·n)
+    /// memory — small-n evaluation only; the solve path never calls this.
+    pub fn reconstruct(&self) -> Mat {
+        let (m, n, rank) = (self.q.rows(), self.r.rows(), self.g.len());
+        let mut t = Mat::zeros(m, n);
+        for i in 0..m {
+            let qrow = self.q.row(i);
+            let trow = t.row_mut(i);
+            for (j, slot) in trow.iter_mut().enumerate() {
+                let rrow = self.r.row(j);
+                let mut s = 0.0;
+                for k in 0..rank {
+                    s += qrow[k] * rrow[k] / self.g[k].max(1e-300);
+                }
+                *slot = s;
+            }
+        }
+        t
+    }
+}
+
 /// A coupling in whichever representation the solver natively produces:
-/// dense (Algorithm-1 family, SaGroW, LR-GW, S-GWL, AE) or sparse on the
-/// sampled support (the Spar-* family).
+/// dense (Algorithm-1 family, SaGroW, S-GWL, AE), sparse on the sampled
+/// support (the Spar-* family, qgw's extended block plan), or factored
+/// low-rank (LR-GW's O((m+n)r) representation).
 pub enum Plan {
     /// Full m×n coupling.
     Dense(Mat),
     /// Coupling restricted to a sampled sparsity pattern.
     Sparse(Coo),
+    /// Factored low-rank coupling `Q diag(1/g) Rᵀ`.
+    Factored(LowRankPlan),
 }
 
 impl Plan {
@@ -66,6 +152,7 @@ impl Plan {
         match self {
             Plan::Dense(t) => t.sum(),
             Plan::Sparse(t) => t.sum(),
+            Plan::Factored(t) => t.sum(),
         }
     }
 
@@ -74,6 +161,7 @@ impl Plan {
         match self {
             Plan::Dense(t) => t.row_sums(),
             Plan::Sparse(t) => t.row_sums(),
+            Plan::Factored(t) => t.row_sums(),
         }
     }
 
@@ -82,14 +170,17 @@ impl Plan {
         match self {
             Plan::Dense(t) => t.col_sums(),
             Plan::Sparse(t) => t.col_sums(),
+            Plan::Factored(t) => t.col_sums(),
         }
     }
 
-    /// Stored entries (m·n for dense plans, |S| for sparse ones).
+    /// Stored entries (m·n for dense plans, |S| for sparse ones, the
+    /// factor storage for factored ones).
     pub fn nnz(&self) -> usize {
         match self {
             Plan::Dense(t) => t.rows() * t.cols(),
             Plan::Sparse(t) => t.nnz(),
+            Plan::Factored(t) => t.nnz(),
         }
     }
 
@@ -98,6 +189,55 @@ impl Plan {
         match self {
             Plan::Dense(t) => t.data().iter().all(|v| v.is_finite()),
             Plan::Sparse(t) => t.vals().iter().all(|v| v.is_finite()),
+            Plan::Factored(t) => t.is_finite(),
+        }
+    }
+}
+
+/// Fine-grained per-phase wall-clock breakdown for the hierarchical tier
+/// (solvers with more structure than sample + iterate). `Copy` so
+/// [`PhaseTimings`] stays a plain value type.
+#[derive(Clone, Copy, Debug, Default)]
+pub enum PhaseDetail {
+    /// No finer breakdown (the historical solvers).
+    #[default]
+    None,
+    /// Quantized GW: partition → coarse solve → local extension.
+    Quantized {
+        /// Anchor selection + nearest-anchor assignment.
+        partition_seconds: f64,
+        /// The registry-dispatched inner solve on the anchor problem.
+        coarse_seconds: f64,
+        /// Local coupling extension within matched partitions.
+        extension_seconds: f64,
+    },
+    /// Low-rank GW: factorization → mirror descent.
+    LowRank {
+        /// Building the (optional) Nyström factors of the mapped costs.
+        factor_seconds: f64,
+        /// The factored mirror-descent loop.
+        descent_seconds: f64,
+    },
+}
+
+impl PhaseDetail {
+    /// Named (phase, seconds) pairs for metrics/summary display; empty
+    /// for `None`.
+    pub fn named(&self) -> Vec<(&'static str, f64)> {
+        match *self {
+            PhaseDetail::None => Vec::new(),
+            PhaseDetail::Quantized {
+                partition_seconds,
+                coarse_seconds,
+                extension_seconds,
+            } => vec![
+                ("partition", partition_seconds),
+                ("coarse", coarse_seconds),
+                ("extension", extension_seconds),
+            ],
+            PhaseDetail::LowRank { factor_seconds, descent_seconds } => {
+                vec![("factor", factor_seconds), ("descent", descent_seconds)]
+            }
         }
     }
 }
@@ -109,9 +249,16 @@ pub struct PhaseTimings {
     pub sample_seconds: f64,
     /// The iteration loop (everything after sampling).
     pub solve_seconds: f64,
+    /// Finer breakdown of `solve_seconds` where the solver has one.
+    pub detail: PhaseDetail,
 }
 
 impl PhaseTimings {
+    /// The historical two-phase timing (no finer breakdown).
+    pub fn basic(sample_seconds: f64, solve_seconds: f64) -> Self {
+        PhaseTimings { sample_seconds, solve_seconds, detail: PhaseDetail::None }
+    }
+
     pub fn total(&self) -> f64 {
         self.sample_seconds + self.solve_seconds
     }
@@ -315,7 +462,7 @@ pub(crate) struct Opts<'a> {
 }
 
 impl<'a> Opts<'a> {
-    fn new(map: &'a BTreeMap<String, String>) -> Self {
+    pub(crate) fn new(map: &'a BTreeMap<String, String>) -> Self {
         Opts { map, known: Vec::new() }
     }
 
@@ -333,6 +480,11 @@ impl<'a> Opts<'a> {
                 .parse()
                 .map_err(|_| format_err!("solver option {key}={v:?}: expected a number")),
         }
+    }
+
+    /// Free-form string option (e.g. the name of qgw's inner solver).
+    pub(crate) fn string(&mut self, key: &'static str, default: &str) -> Result<String> {
+        Ok(self.raw(key).unwrap_or(default).to_string())
     }
 
     pub(crate) fn usize(&mut self, key: &'static str, default: usize) -> Result<usize> {
@@ -391,7 +543,7 @@ impl<'a> Opts<'a> {
         }
     }
 
-    fn finish(mut self, solver: &str) -> Result<()> {
+    pub(crate) fn finish(mut self, solver: &str) -> Result<()> {
         self.known.sort_unstable();
         for key in self.map.keys() {
             if !self.known.contains(&key.as_str()) {
@@ -408,19 +560,20 @@ impl<'a> Opts<'a> {
 /// String-keyed construction of every GW engine in the crate.
 pub struct SolverRegistry;
 
-/// Registry names in the paper's presentation order.
+/// Registry names in the paper's presentation order, plus the
+/// hierarchical tier (`qgw`).
 const SOLVER_NAMES: &[&str] = &[
     "spar_gw", "spar_fgw", "spar_ugw", "egw", "pga_gw", "emd_gw", "sagrow", "lr_gw", "sgwl",
-    "anchor",
+    "anchor", "qgw",
 ];
 
 /// The solvers whose engine loop supports `precision=f32` (the SparCore
-/// family); everyone else is f64-only and rejects the option
-/// descriptively.
-const F32_SOLVERS: &[&str] = &["spar_gw", "spar_fgw", "spar_ugw"];
+/// family, plus `qgw` whose default inner solve runs on that family);
+/// everyone else is f64-only and rejects the option descriptively.
+const F32_SOLVERS: &[&str] = &["spar_gw", "spar_fgw", "spar_ugw", "qgw"];
 
 /// Case/punctuation-insensitive key: `"Spar-GW"` ≡ `"spar_gw"`.
-fn normalize(name: &str) -> String {
+pub(crate) fn normalize(name: &str) -> String {
     name.chars()
         .filter(|c| c.is_ascii_alphanumeric())
         .collect::<String>()
@@ -475,6 +628,7 @@ impl SolverRegistry {
             "lrgw" => Box::new(LrGwSolver::from_opts(base, &mut o)?),
             "sgwl" => Box::new(SgwlSolver::from_opts(base, &mut o)?),
             "anchor" | "ae" => Box::new(AnchorSolver::from_opts(base, &mut o)?),
+            "qgw" => Box::new(QgwSolver::from_opts(base, &mut o)?),
             _ => bail!(
                 "unknown solver {name:?} (valid solvers: {})",
                 SOLVER_NAMES.join(", ")

@@ -298,7 +298,7 @@ impl SparGwSolver {
             plan: Plan::Sparse(r.plan),
             outer_iters: r.outer_iters,
             converged: r.converged,
-            timings: PhaseTimings { sample_seconds, solve_seconds: t1.elapsed().as_secs_f64() },
+            timings: PhaseTimings::basic(sample_seconds, t1.elapsed().as_secs_f64()),
         })
     }
 
@@ -325,7 +325,7 @@ impl SparGwSolver {
             plan: Plan::Sparse(r.plan),
             outer_iters: r.outer_iters,
             converged: r.converged,
-            timings: PhaseTimings { sample_seconds, solve_seconds: t1.elapsed().as_secs_f64() },
+            timings: PhaseTimings::basic(sample_seconds, t1.elapsed().as_secs_f64()),
         })
     }
 }

@@ -275,7 +275,7 @@ impl GwSolver for SparUgwSolver {
             plan: Plan::Sparse(r.plan),
             outer_iters: r.outer_iters,
             converged: r.converged,
-            timings: PhaseTimings { sample_seconds, solve_seconds: t1.elapsed().as_secs_f64() },
+            timings: PhaseTimings::basic(sample_seconds, t1.elapsed().as_secs_f64()),
         })
     }
 }

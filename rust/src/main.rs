@@ -73,7 +73,16 @@ SIMD
   resolved backend.
 
 Registered solvers (spargw solvers): spar_gw spar_fgw spar_ugw egw pga_gw
-emd_gw sagrow lr_gw sgwl anchor
+emd_gw sagrow lr_gw sgwl anchor qgw
+
+MILLION-POINT TIER
+  --solver qgw on a point workload (moon|gaussian|spiral) runs the
+  hierarchical quantized path on implicit point-cloud relations: no n x n
+  matrix is ever allocated, so n up to ~10^5 fits in laptop memory.
+  Options: --solver-opt anchors=M (default ceil(sqrt(n))), refine=K,
+  inner=NAME (coarse solver, default spar_gw). lr_gw keeps factored
+  low-rank couplings (--solver-opt rank=R landmarks=C; dense=1 opts into
+  materializing the plan for small n).
 ";
 
 /// Unwrap a CLI-layer result or exit with a one-line error (no panic
@@ -169,14 +178,94 @@ fn run_settings(args: &Args) -> RunSettings {
     }
 }
 
+/// Point sets + marginals for the point-cloud workloads, consuming the
+/// RNG exactly like [`make_workload`] does before the O(n²) relation
+/// materialization — so the qgw point path is bit-identical to the dense
+/// path at the same seed. `None` for relation-only workloads (graph).
+#[allow(clippy::type_complexity)]
+fn point_workload(
+    name: &str,
+    n: usize,
+    rng: &mut Xoshiro256,
+) -> Option<(Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<f64>, Vec<f64>)> {
+    let (src, tgt) = match name {
+        "moon" => datasets::moon::moon_points(n, 0.05, rng),
+        "gaussian" => {
+            let src = datasets::gaussian::gaussian_source(n, rng);
+            let tgt = datasets::gaussian::gaussian_target(n, rng);
+            (src, tgt)
+        }
+        "spiral" => {
+            let src = datasets::spiral::spiral_source(n, rng);
+            let tgt = datasets::spiral::spiral_target(&src);
+            (src, tgt)
+        }
+        _ => return None,
+    };
+    let a = datasets::gaussian_marginal(n, n as f64 / 3.0, n as f64 / 20.0);
+    let b = datasets::gaussian_marginal(n, n as f64 / 2.0, n as f64 / 20.0);
+    Some((src, tgt, a, b))
+}
+
+/// Print one solve report line (+ the per-phase breakdown when the
+/// solver reports one).
+fn print_report(report: &spargw::gw::SolveReport, workload: &str, n: usize, cost: GroundCost) {
+    println!(
+        "solver={} workload={} n={} cost={} -> value={:.6e}  outer={} converged={}  \
+         time={:.3}s (sample {:.3}s + solve {:.3}s)",
+        report.solver,
+        workload,
+        n,
+        cost.name(),
+        report.value,
+        report.outer_iters,
+        report.converged,
+        report.timings.total(),
+        report.timings.sample_seconds,
+        report.timings.solve_seconds,
+    );
+    let phases = report.timings.detail.named();
+    if !phases.is_empty() {
+        let parts: Vec<String> =
+            phases.iter().map(|(name, secs)| format!("{name}={secs:.3}s")).collect();
+        println!("phases: {}  plan_nnz={}", parts.join(" "), report.plan.nnz());
+    }
+}
+
 fn cmd_solve(args: &Args) {
     let n = ok_or_exit(args.usize_or("n", 200));
     let seed = ok_or_exit(args.u64_or("seed", 0));
     let cost = parse_cost(args.str_or("cost", "l2"));
     let workload = args.str_or("workload", "moon");
     let mut rng = Xoshiro256::new(seed);
-    let inst = make_workload(workload, n, &mut rng);
     let settings = run_settings(args);
+
+    // The million-point tier: `--solver qgw` on a point workload runs on
+    // implicit point-cloud relations — the O(n²) matrices of
+    // `make_workload` are never built.
+    let is_qgw = args
+        .opt_str("solver")
+        .map(|s| s.to_ascii_lowercase().replace(['-', '_'], "") == "qgw")
+        .unwrap_or(false);
+    if is_qgw {
+        if let Some((src, tgt, a, b)) = point_workload(workload, n, &mut rng) {
+            let solver = ok_or_exit(spargw::gw::qgw::build(
+                &solver_opts(args),
+                &settings.solver_base(cost),
+            ));
+            let px = spargw::gw::PointCloud::from_points(&src);
+            let py = spargw::gw::PointCloud::from_points(&tgt);
+            drop(src);
+            drop(tgt);
+            let mut ws = Workspace::new();
+            let report =
+                ok_or_exit(solver.solve_points(&px, &py, &a, &b, &mut rng, &mut ws));
+            print_report(&report, workload, n, cost);
+            return;
+        }
+    }
+
+    let inst = make_workload(workload, n, &mut rng);
     let p = inst.problem();
 
     if let Some(solver_name) = args.opt_str("solver") {
@@ -188,20 +277,7 @@ fn cmd_solve(args: &Args) {
         ));
         let mut ws = Workspace::new();
         let report = ok_or_exit(solver.solve(&p, &mut rng, &mut ws));
-        println!(
-            "solver={} workload={} n={} cost={} -> value={:.6e}  outer={} converged={}  \
-             time={:.3}s (sample {:.3}s + solve {:.3}s)",
-            report.solver,
-            workload,
-            n,
-            cost.name(),
-            report.value,
-            report.outer_iters,
-            report.converged,
-            report.timings.total(),
-            report.timings.sample_seconds,
-            report.timings.solve_seconds,
-        );
+        print_report(&report, workload, n, cost);
         return;
     }
 

@@ -17,7 +17,9 @@
 //!     additionally pins the process-wide backend per matrix job through
 //!     `SPARGW_SIMD`),
 //! for spar_gw, spar_fgw and spar_ugw on seeded toy datasets — plus a
-//! single-solve pool-width matrix over **all ten registry solvers** and a
+//! single-solve pool-width matrix over **every registry solver** (the
+//! hierarchical qgw tier and the factored low-rank plan included, and
+//! qgw additionally through its O(n)-memory point-cloud entry) and a
 //! pool-reuse check (the worker count stays constant across repeated
 //! solves; parallel regions never re-spawn threads). The
 //! reference each variant is compared against is the *direct* pre-engine
@@ -151,12 +153,18 @@ fn gram_bit_identical_across_pool_widths_shards_and_cache() {
     }
 }
 
-/// The plan's stored values (dense data or sparse entry values), for
-/// bitwise comparison.
+/// The plan's stored values (dense data, sparse entry values, or the
+/// concatenated low-rank factors), for bitwise comparison.
 fn plan_vals(plan: &Plan) -> Vec<f64> {
     match plan {
         Plan::Dense(t) => t.data().to_vec(),
         Plan::Sparse(t) => t.vals().to_vec(),
+        Plan::Factored(t) => {
+            let mut v = t.q.data().to_vec();
+            v.extend_from_slice(t.r.data());
+            v.extend_from_slice(&t.g);
+            v
+        }
     }
 }
 
@@ -178,7 +186,7 @@ fn all_registry_solvers_bit_identical_across_pool_widths() {
     let a = spargw::util::uniform(n);
     let b = spargw::util::uniform(n);
     let p = GwProblem::new(&cx, &cy, &a, &b);
-    // Short schedules keep the ten-solver × three-width sweep fast; the
+    // Short schedules keep the registry-wide × three-width sweep fast; the
     // bit-identity property is schedule-independent.
     let base = spargw::gw::solver::SolverBase {
         outer_iters: 3,
@@ -291,6 +299,66 @@ fn all_registry_solvers_bit_identical_across_simd_backends() {
                         backend.name()
                     );
                 }
+            }
+        }
+    }
+}
+
+#[test]
+fn qgw_point_path_bit_identical_across_pool_widths_and_simd() {
+    // The million-point entry (implicit Euclidean relations over point
+    // clouds — no n×n matrix anywhere) under the same knob matrix as the
+    // registry solvers: pool width and SIMD backend must leave the value,
+    // iteration schedule and the extended sparse plan bit-identical.
+    let n = 80;
+    let mut grng = Rng::new(0xBEE5);
+    let xs: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..3).map(|_| grng.f64()).collect()).collect();
+    let ys: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..3).map(|_| grng.f64()).collect()).collect();
+    let px = spargw::gw::PointCloud::from_points(&xs);
+    let py = spargw::gw::PointCloud::from_points(&ys);
+    let a = spargw::util::uniform(n);
+    let b = spargw::util::uniform(n);
+    let solver = spargw::gw::qgw::build(
+        &Default::default(),
+        &spargw::gw::SolverBase::default(),
+    )
+    .expect("qgw build");
+    let solve_at = |backend: Backend, width: usize| {
+        simd::with_backend_override(backend, || {
+            with_thread_limit(width, || {
+                let mut rng = Rng::new(derive_seed(SEED, 123));
+                let mut ws = Workspace::new();
+                solver.solve_points(&px, &py, &a, &b, &mut rng, &mut ws).expect("qgw points")
+            })
+        })
+    };
+    let reference = solve_at(Backend::Scalar, 1);
+    let ref_vals = plan_vals(&reference.plan);
+    let best = simd::detect();
+    for backend in [Backend::Scalar, best] {
+        for width in [1usize, 8] {
+            if backend == Backend::Scalar && width == 1 {
+                continue; // the reference itself
+            }
+            let got = solve_at(backend, width);
+            assert_eq!(
+                reference.value.to_bits(),
+                got.value.to_bits(),
+                "qgw points: value differs at simd={} width={width}",
+                backend.name()
+            );
+            assert_eq!(reference.outer_iters, got.outer_iters, "qgw points: schedule");
+            let got_vals = plan_vals(&got.plan);
+            assert_eq!(ref_vals.len(), got_vals.len(), "qgw points: plan size");
+            for (l, (x, y)) in ref_vals.iter().zip(&got_vals).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "qgw points: plan entry {l} differs at simd={} width={width}",
+                    backend.name()
+                );
             }
         }
     }

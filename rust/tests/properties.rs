@@ -1,11 +1,16 @@
 //! Property-based tests over the library's core invariants, driven by the
 //! seeded [`spargw::testutil::forall`] harness.
 
+use std::collections::BTreeMap;
+
 use spargw::coordinator::cache::StructureCache;
 use spargw::coordinator::engine::{EngineConfig, PairwiseEngine};
 use spargw::coordinator::service::PairwiseConfig;
 use spargw::datasets::graphsets::imdb_b;
+use spargw::gw::lr_gw::{lr_gw_factored, LrGwConfig};
+use spargw::gw::qgw;
 use spargw::gw::sampling::{sample_poisson, GwSampler, SideFactors};
+use spargw::gw::solver::SolverBase;
 use spargw::gw::spar_gw::{spar_gw, SparGwConfig};
 use spargw::gw::tensor::{
     gw_energy, tensor_product_decomposable, tensor_product_generic, SparseCostContext,
@@ -413,6 +418,94 @@ fn prop_gram_symmetric_zero_diagonal_for_balanced_solvers() {
                             return Err(format!("{solver}: non-finite at ({i},{j})"));
                         }
                     }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_qgw_extension_preserves_exact_coarse_marginals() {
+    // With an exact inner solver (emd_gw) the coarse plan's marginals are
+    // exact, and the northwest-corner extension distributes each
+    // partition's coarse mass over its members proportionally to the input
+    // marginal — so the extended sparse plan reproduces the *input*
+    // marginals to floating-point error while never materializing n².
+    forall(
+        "qgw-extension-marginals",
+        0xB4,
+        8,
+        gen_inst,
+        |inst| {
+            let p = GwProblem::new(&inst.cx, &inst.cy, &inst.a, &inst.b);
+            let mut opts = BTreeMap::new();
+            opts.insert("inner".to_string(), "emd_gw".to_string());
+            let solver =
+                qgw::build(&opts, &SolverBase::default()).map_err(|e| format!("{e}"))?;
+            let mut rng = Xoshiro256::new(13);
+            let mut ws = spargw::gw::core::Workspace::new();
+            let r = solver.solve(&p, &mut rng, &mut ws).map_err(|e| format!("{e}"))?;
+            if !r.value.is_finite() || r.value < -1e-9 {
+                return Err(format!("value {}", r.value));
+            }
+            if !r.plan.is_finite() || r.plan.nnz() == 0 {
+                return Err(format!("degenerate plan (nnz {})", r.plan.nnz()));
+            }
+            let mass = r.plan.sum();
+            if (mass - 1.0).abs() > 1e-9 {
+                return Err(format!("plan mass {mass}"));
+            }
+            for (i, (x, y)) in r.plan.row_sums().iter().zip(&inst.a).enumerate() {
+                if (x - y).abs() > 1e-8 {
+                    return Err(format!("row {i}: {x} vs {y}"));
+                }
+            }
+            for (j, (x, y)) in r.plan.col_sums().iter().zip(&inst.b).enumerate() {
+                if (x - y).abs() > 1e-8 {
+                    return Err(format!("col {j}: {x} vs {y}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lr_gw_factored_objective_and_marginals_consistent() {
+    // The factored mirror-descent path never materializes the coupling;
+    // its factor-side objective and marginals must agree with the ones
+    // recomputed from the dense reconstruction T = Q diag(1/g) Rᵀ, and the
+    // Sinkhorn projections must keep the factors (hence T) feasible.
+    forall(
+        "lr-gw-factored-consistency",
+        0xB5,
+        6,
+        gen_inst,
+        |inst| {
+            let p = GwProblem::new(&inst.cx, &inst.cy, &inst.a, &inst.b);
+            let cfg = LrGwConfig { outer_iters: 8, ..Default::default() };
+            let r = lr_gw_factored(&p, GroundCost::L2, &cfg);
+            if !r.value.is_finite() {
+                return Err(format!("value {}", r.value));
+            }
+            let t = r.plan.reconstruct();
+            let dense = gw_energy(&inst.cx, &inst.cy, &t, GroundCost::L2);
+            if (r.value - dense).abs() > 1e-7 * dense.abs().max(1.0) {
+                return Err(format!("factored {} vs dense energy {dense}", r.value));
+            }
+            let mass = r.plan.sum();
+            if (mass - 1.0).abs() > 1e-6 {
+                return Err(format!("plan mass {mass}"));
+            }
+            for (i, (x, y)) in r.plan.row_sums().iter().zip(&inst.a).enumerate() {
+                if (x - y).abs() > 1e-3 {
+                    return Err(format!("row {i}: {x} vs {y}"));
+                }
+            }
+            for (j, (x, y)) in r.plan.col_sums().iter().zip(&inst.b).enumerate() {
+                if (x - y).abs() > 1e-3 {
+                    return Err(format!("col {j}: {x} vs {y}"));
                 }
             }
             Ok(())

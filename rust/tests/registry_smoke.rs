@@ -99,8 +99,9 @@ fn every_registered_solver_runs_on_a_tiny_problem() {
             "{name}: plan mass {mass} far from 1"
         );
         // Dense engines project (near-)exactly; sparse plans honor the
-        // marginals only on the sampled support.
-        let tol = if name.starts_with("spar") { 0.5 } else { 0.1 };
+        // marginals only on the sampled support (qgw inherits its coarse
+        // spar_gw solver's marginal error through the extension).
+        let tol = if name.starts_with("spar") || name == "qgw" { 0.5 } else { 0.1 };
         let row_err: f64 =
             r.plan.row_sums().iter().zip(&a).map(|(x, y)| (x - y).abs()).sum();
         let col_err: f64 =
