@@ -19,20 +19,44 @@
 //! nothing is persisted (the result sink persists *outputs*, not
 //! preprocessing).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use super::scheduler::run_jobs;
 use crate::datasets::graphsets::GraphDataset;
 use crate::gw::solver::PreparedStructure;
 use crate::runtime::pool;
 
-/// Counters describing how much preprocessing a Gram run performed.
+/// Counters describing how much preprocessing a cache performed.
+///
+/// The eager per-run [`StructureCache`] reports `built`/`hits` only
+/// (`misses`/`evicted` stay 0: every structure is built up front and
+/// nothing is ever evicted). The server's bounded
+/// [`LruStructureCache`] fills in all four: a look-up either `hits` a
+/// resident entry or `misses` (and `built` counts the rebuild), and
+/// `evicted` counts entries dropped to stay under capacity.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Preprocessing passes performed (one per distinct structure).
     pub built: usize,
-    /// Structure look-ups served from the cache (2 per solved pair).
+    /// Structure look-ups served from the cache.
     pub hits: usize,
+    /// Structure look-ups that found nothing resident (LRU mode only).
+    pub misses: usize,
+    /// Entries evicted to stay under the LRU capacity (LRU mode only).
+    pub evicted: usize,
+}
+
+impl CacheStats {
+    /// Format as the stable `k=v` token run used by the serve protocol's
+    /// trailing `# cache` line and the status verb.
+    pub fn tokens(&self) -> String {
+        format!(
+            "built={} hits={} misses={} evicted={}",
+            self.built, self.hits, self.misses, self.evicted
+        )
+    }
 }
 
 /// One [`PreparedStructure`] per dataset item, built eagerly and then
@@ -78,7 +102,184 @@ impl StructureCache {
     /// Build/hit counters so callers can assert the "preprocess once"
     /// contract (`built == K`, `hits == 2 · pairs_solved`).
     pub fn stats(&self) -> CacheStats {
-        CacheStats { built: self.built, hits: self.hits.load(Ordering::Relaxed) }
+        CacheStats {
+            built: self.built,
+            hits: self.hits.load(Ordering::Relaxed),
+            ..CacheStats::default()
+        }
+    }
+}
+
+/// Cache key: `(dataset fingerprint, structure index)`. The fingerprint
+/// is the engine's config/dataset digest, so two differently generated
+/// datasets (or two solver configurations with different preprocessing
+/// semantics) never share entries.
+type LruKey = (u64, usize);
+
+struct LruInner {
+    /// Resident entries plus their last-used tick.
+    entries: BTreeMap<LruKey, (Arc<PreparedStructure>, u64)>,
+    /// Monotone recency clock (incremented per touch).
+    clock: u64,
+    stats: CacheStats,
+}
+
+impl LruInner {
+    /// Touch `key`, returning the resident entry (hit) or `None` (miss).
+    /// Counters are the caller's job — a miss here is only a *candidate*
+    /// build; `acquire` counts once per distinct structure.
+    fn touch(&mut self, key: LruKey) -> Option<Arc<PreparedStructure>> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.entries.get_mut(&key).map(|(arc, used)| {
+            *used = clock;
+            arc.clone()
+        })
+    }
+
+    /// Evict least-recently-used entries until at most `capacity` remain.
+    fn evict_to(&mut self, capacity: usize) {
+        while self.entries.len() > capacity {
+            let oldest = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| *k)
+                .expect("non-empty map has a minimum");
+            self.entries.remove(&oldest);
+            self.stats.evicted += 1;
+        }
+    }
+}
+
+/// The long-running server's **bounded-LRU mode** of the structure
+/// cache: structures registered once stay warm across requests, capped
+/// at `capacity` resident [`PreparedStructure`]s, least-recently-used
+/// evicted first. Entries travel as `Arc`s, so a request that acquired
+/// its structures keeps them alive even if a later request evicts them
+/// from residency — eviction can never invalidate in-flight work.
+///
+/// Unlike the per-run [`StructureCache`] (built eagerly, dropped with
+/// the engine), this cache outlives any single Gram computation; it is
+/// the amortization the serve mode exists for (re-deriving the Eq. (5)
+/// factors per request throws away the dominant win).
+pub struct LruStructureCache {
+    capacity: usize,
+    inner: Mutex<LruInner>,
+}
+
+impl LruStructureCache {
+    /// An empty cache holding at most `capacity` structures (min 1).
+    pub fn new(capacity: usize) -> Self {
+        LruStructureCache {
+            capacity: capacity.max(1),
+            inner: Mutex::new(LruInner {
+                entries: BTreeMap::new(),
+                clock: 0,
+                stats: CacheStats::default(),
+            }),
+        }
+    }
+
+    /// Configured capacity in structures.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Currently resident structures.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lifetime counters (across every `acquire` since construction).
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Fetch-or-build the prepared structures of `dataset` for the
+    /// indices in `which` (`None` = all of them), LRU-touching each.
+    /// Missing entries are built in parallel on the shared pool (bit-
+    /// identical to [`StructureCache::build`]'s entries — same
+    /// constructor, independent per structure). Returns the pinned
+    /// entries in `which` order plus this call's counter delta, so a
+    /// request can report "served entirely warm" (`built == 0`,
+    /// `hits == structures`).
+    pub fn acquire(
+        &self,
+        dataset: &GraphDataset,
+        fingerprint: u64,
+        which: Option<&[usize]>,
+    ) -> (Vec<Arc<PreparedStructure>>, CacheStats) {
+        let all: Vec<usize>;
+        let indices: &[usize] = match which {
+            Some(idx) => idx,
+            None => {
+                all = (0..dataset.graphs.len()).collect();
+                &all
+            }
+        };
+        let mut out: Vec<Option<Arc<PreparedStructure>>> = vec![None; indices.len()];
+        let mut delta = CacheStats::default();
+        let mut missing: Vec<usize> = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            for (slot, &i) in indices.iter().enumerate() {
+                match inner.touch((fingerprint, i)) {
+                    Some(arc) => {
+                        delta.hits += 1;
+                        out[slot] = Some(arc);
+                    }
+                    None => {
+                        delta.misses += 1;
+                        missing.push(slot);
+                    }
+                }
+            }
+        }
+        // Build the misses outside the lock, in parallel across
+        // structures (each build is independent and deterministic).
+        let built: Vec<Arc<PreparedStructure>> =
+            run_jobs(missing.len(), pool::pool().threads(), |k| {
+                let i = indices[missing[k]];
+                Arc::new(PreparedStructure::new(dataset.graphs[i].marginal()))
+            });
+        if !missing.is_empty() {
+            let mut inner = self.inner.lock().unwrap();
+            for (slot, arc) in missing.iter().zip(built) {
+                let key = (fingerprint, indices[*slot]);
+                // A racing acquire may have inserted meanwhile; keep the
+                // resident entry (entries are value-identical anyway).
+                inner.clock += 1;
+                let clock = inner.clock;
+                let entry = inner
+                    .entries
+                    .entry(key)
+                    .or_insert_with(|| (arc, clock))
+                    .0
+                    .clone();
+                out[*slot] = Some(entry);
+                delta.built += 1;
+            }
+            let evicted_before = inner.stats.evicted;
+            inner.evict_to(self.capacity);
+            delta.evicted = inner.stats.evicted - evicted_before;
+            inner.stats.built += delta.built;
+        }
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.stats.hits += delta.hits;
+            inner.stats.misses += delta.misses;
+        }
+        let entries = out
+            .into_iter()
+            .map(|o| o.expect("every requested structure resolved"))
+            .collect();
+        (entries, delta)
     }
 }
 
@@ -93,12 +294,106 @@ mod tests {
         ds.graphs.truncate(5);
         let cache = StructureCache::build(&ds);
         assert_eq!(cache.len(), 5);
-        assert_eq!(cache.stats(), CacheStats { built: 5, hits: 0 });
+        assert_eq!(
+            cache.stats(),
+            CacheStats { built: 5, hits: 0, ..CacheStats::default() }
+        );
         for i in 0..5 {
             let _ = cache.get(i);
             let _ = cache.get(i);
         }
-        assert_eq!(cache.stats(), CacheStats { built: 5, hits: 10 });
+        assert_eq!(
+            cache.stats(),
+            CacheStats { built: 5, hits: 10, ..CacheStats::default() }
+        );
+    }
+
+    #[test]
+    fn lru_warm_across_acquires() {
+        // First acquire builds everything; a second identical acquire is
+        // served entirely warm: hits == structures, built == 0. This is
+        // the server's "second request round rebuilds nothing" contract.
+        let mut ds = imdb_b(4);
+        ds.graphs.truncate(5);
+        let cache = LruStructureCache::new(16);
+        let (first, d1) = cache.acquire(&ds, 0xfeed, None);
+        assert_eq!(first.len(), 5);
+        assert_eq!(
+            d1,
+            CacheStats { built: 5, hits: 0, misses: 5, evicted: 0 }
+        );
+        let (second, d2) = cache.acquire(&ds, 0xfeed, None);
+        assert_eq!(
+            d2,
+            CacheStats { built: 0, hits: 5, misses: 0, evicted: 0 }
+        );
+        // Warm entries are the same allocations, and value-identical to
+        // a fresh eager build.
+        for (a, b) in first.iter().zip(&second) {
+            assert!(Arc::ptr_eq(a, b));
+        }
+        let eager = StructureCache::build(&ds);
+        for (i, e) in second.iter().enumerate() {
+            assert_eq!(e.marginal, eager.get(i).marginal, "structure {i}");
+        }
+        assert_eq!(cache.stats().built, 5);
+        assert_eq!(cache.stats().hits, 5);
+    }
+
+    #[test]
+    fn lru_bounded_capacity_counts_evictions() {
+        let mut ds = imdb_b(5);
+        ds.graphs.truncate(6);
+        let cache = LruStructureCache::new(3);
+        let (_, d1) = cache.acquire(&ds, 1, None);
+        assert_eq!(d1.built, 6);
+        assert_eq!(d1.evicted, 3, "capacity 3 must evict down to 3 of 6");
+        assert_eq!(cache.len(), 3);
+        // The three *least recently touched* entries (0, 1, 2) were
+        // evicted; re-acquiring only the resident tail is all hits …
+        let (_, warm) = cache.acquire(&ds, 1, Some(&[3, 4, 5]));
+        assert_eq!(warm, CacheStats { built: 0, hits: 3, misses: 0, evicted: 0 });
+        // … while the evicted head must rebuild (and evicts again).
+        let (_, cold) = cache.acquire(&ds, 1, Some(&[0]));
+        assert_eq!(cold.built, 1);
+        assert_eq!(cold.misses, 1);
+        assert_eq!(cold.evicted, 1);
+        assert_eq!(cache.len(), 3);
+        let total = cache.stats();
+        assert_eq!(total.built, 7);
+        assert_eq!(total.evicted, 4);
+    }
+
+    #[test]
+    fn lru_distinguishes_dataset_fingerprints() {
+        // Same indices under a different fingerprint are different
+        // structures: no cross-dataset hit may ever be served.
+        let mut ds = imdb_b(6);
+        ds.graphs.truncate(3);
+        let cache = LruStructureCache::new(16);
+        let (_, a) = cache.acquire(&ds, 0xaaa, None);
+        assert_eq!(a.built, 3);
+        let (_, b) = cache.acquire(&ds, 0xbbb, None);
+        assert_eq!(b.built, 3, "different fingerprint must rebuild");
+        assert_eq!(b.hits, 0);
+        assert_eq!(cache.len(), 6);
+    }
+
+    #[test]
+    fn lru_eviction_cannot_invalidate_pinned_entries() {
+        // A request holds Arcs; evicting its entries from residency must
+        // leave the pinned data intact.
+        let mut ds = imdb_b(7);
+        ds.graphs.truncate(4);
+        let cache = LruStructureCache::new(2);
+        let (pinned, _) = cache.acquire(&ds, 9, Some(&[0, 1]));
+        let before: Vec<Vec<f64>> = pinned.iter().map(|p| p.marginal.clone()).collect();
+        // Evict 0 and 1 by touching 2 and 3.
+        let (_, d) = cache.acquire(&ds, 9, Some(&[2, 3]));
+        assert_eq!(d.evicted, 2);
+        for (p, b) in pinned.iter().zip(&before) {
+            assert_eq!(&p.marginal, b);
+        }
     }
 
     #[test]

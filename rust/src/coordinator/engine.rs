@@ -37,14 +37,14 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use super::bucket::{bucket_histogram, REPORT_BUCKETS};
-use super::cache::{CacheStats, StructureCache};
+use super::cache::{CacheStats, LruStructureCache, StructureCache};
 use super::metrics::MetricsRecorder;
 use super::scheduler::{run_jobs_with, shard_partition};
 use super::service::PairwiseConfig;
 use crate::datasets::graphsets::{attribute_distance, GraphDataset};
 use crate::gw::core::Workspace;
 use crate::gw::fgw::FgwProblem;
-use crate::gw::solver::{GwSolver, PhaseTimings};
+use crate::gw::solver::{GwSolver, PhaseTimings, PreparedStructure};
 use crate::gw::GwProblem;
 use crate::kernel::simd;
 use crate::linalg::Mat;
@@ -109,11 +109,45 @@ pub struct GramResult {
     pub shards_run: usize,
     /// Shards skipped because the sink already marked them done.
     pub shards_skipped: usize,
-    /// Preprocessing-cache counters (`built == K` when the cache is on).
+    /// Preprocessing-cache counters (`built == K` when the eager cache
+    /// is on; the warm-LRU path reports this run's acquire delta —
+    /// `built == 0, hits == K` when served entirely warm).
     pub cache: CacheStats,
     /// Pair-size distribution over the full pair set, as
     /// `(bucket, count)` rows ([`REPORT_BUCKETS`] size classes).
     pub size_histogram: Vec<(usize, usize)>,
+    /// The result rows computed *by this run*, in sink order (shard-major,
+    /// ascending job index within a shard) — exactly what streamed (or
+    /// would stream) to the sink, so the serve mode can emit the
+    /// identical `spargw-sink v1` encoding over the wire.
+    pub rows: Vec<SinkRow>,
+}
+
+/// One computed result row in the `spargw-sink v1` encoding's field
+/// order.
+#[derive(Clone, Copy, Debug)]
+pub struct SinkRow {
+    pub shard: usize,
+    pub i: usize,
+    pub j: usize,
+    pub value: f64,
+    pub latency: f64,
+}
+
+impl SinkRow {
+    /// The row's sink/wire line (no trailing newline): bit-exact hex
+    /// f64 plus the human-readable value and this run's latency.
+    pub fn line(&self) -> String {
+        format!(
+            "pair {} {} {} {:016x} {:.9e} {:.6}",
+            self.shard,
+            self.i,
+            self.j,
+            self.value.to_bits(),
+            self.value,
+            self.latency
+        )
+    }
 }
 
 /// The sharded pairwise Gram engine. Construct with a solver-level
@@ -164,6 +198,32 @@ impl PairwiseEngine {
         dataset: &GraphDataset,
         solver: &dyn GwSolver,
     ) -> Result<GramResult> {
+        self.gram_inner(dataset, solver, None)
+    }
+
+    /// [`PairwiseEngine::gram_with_solver`] backed by a long-lived warm
+    /// [`LruStructureCache`] instead of the per-run eager cache: the
+    /// serve mode's path. Structures resident from earlier requests are
+    /// reused (LRU-touched); missing ones are built and inserted. The
+    /// returned [`GramResult::cache`] is this run's acquire delta, so a
+    /// fully warm run reports `built == 0, hits == K`. Results are
+    /// bit-identical to the eager path — entries come from the same
+    /// constructor either way.
+    pub fn gram_warm(
+        &self,
+        dataset: &GraphDataset,
+        solver: &dyn GwSolver,
+        warm: &LruStructureCache,
+    ) -> Result<GramResult> {
+        self.gram_inner(dataset, solver, Some(warm))
+    }
+
+    fn gram_inner(
+        &self,
+        dataset: &GraphDataset,
+        solver: &dyn GwSolver,
+        warm: Option<&LruStructureCache>,
+    ) -> Result<GramResult> {
         let shards = self.opts.shards.max(1);
         if let Some(only) = self.opts.only_shard {
             ensure!(
@@ -181,12 +241,19 @@ impl PairwiseEngine {
             .flat_map(|i| ((i + 1)..n_items).map(move |j| (i, j)))
             .collect();
         let shard_sets = shard_partition(pairs.len(), shards);
-        let header = sink_header(
-            solver.name(),
-            n_items,
-            shards,
-            config_fingerprint(&self.cfg, dataset),
-        );
+        let fingerprint = config_fingerprint(&self.cfg, dataset);
+        let header = sink_header(solver.name(), n_items, shards, fingerprint);
+
+        // Exclusive writer guard, held for the whole run: concurrent
+        // writers to one sink are unsupported (each run rewrites the sink
+        // from its trusted prefix — a second process would silently
+        // interleave rows and poison every later resume), and nothing
+        // used to enforce it. Acquired before the sink is even *read*,
+        // so a half-written block from a live writer is never parsed.
+        let _sink_lock = match &self.opts.sink {
+            Some(path) => Some(SinkLock::acquire(path)?),
+            None => None,
+        };
 
         // Recover prior progress before touching the sink for writing. A
         // pre-existing sink without `resume` is refused rather than
@@ -236,12 +303,26 @@ impl PairwiseEngine {
         // Build the preprocessing cache only when at least one shard will
         // actually compute — a fully resumed run restores everything from
         // the sink and should not pay the O(Σ nᵢ²) per-structure pass.
+        // Warm-LRU mode (the server) acquires from the long-lived cache
+        // instead of building an eager per-run one.
         let will_compute = to_run.iter().any(|s| !recovered.done.contains(s))
             && !pairs.is_empty();
-        let cache = if self.opts.use_cache && will_compute {
+        let (pinned, warm_delta) = match warm {
+            Some(w) if will_compute => {
+                let (entries, delta) = w.acquire(dataset, fingerprint, None);
+                (Some(entries), delta)
+            }
+            _ => (None, CacheStats::default()),
+        };
+        let cache = if warm.is_none() && self.opts.use_cache && will_compute {
             Some(StructureCache::build(dataset))
         } else {
             None
+        };
+        let lookup = match (&pinned, &cache) {
+            (Some(entries), _) => PreparedLookup::Pinned(entries),
+            (None, Some(c)) => PreparedLookup::Eager(c),
+            (None, None) => PreparedLookup::Off,
         };
 
         let mut metrics = MetricsRecorder::new();
@@ -250,6 +331,7 @@ impl PairwiseEngine {
         let mut computed_pairs = 0usize;
         let mut shards_run = 0usize;
         let mut shards_skipped = 0usize;
+        let mut all_rows: Vec<SinkRow> = Vec::new();
 
         for &shard in &to_run {
             if recovered.done.contains(&shard) {
@@ -259,7 +341,7 @@ impl PairwiseEngine {
             let jobs = &shard_sets[shard];
             let wall = Instant::now();
             let solver_ref = solver;
-            let cache_ref = cache.as_ref();
+            let lookup_ref = &lookup;
             let cfg = &self.cfg;
             let results: Vec<Result<(f64, PhaseTimings, f64)>> = run_jobs_with(
                 jobs.len(),
@@ -268,49 +350,41 @@ impl PairwiseEngine {
                 |ws, q| {
                     let (i, j) = pairs[jobs[q]];
                     let t0 = Instant::now();
-                    let mut rng =
-                        Rng::new(derive_seed(cfg.seed, (i * n_items + j) as u64));
-                    let gi = &dataset.graphs[i];
-                    let gj = &dataset.graphs[j];
-                    let feat = attribute_distance(gi, gj);
-                    let report = match cache_ref {
-                        Some(cache) => {
+                    let (value, timings) = match lookup_ref.get(i, j) {
+                        Some((sx, sy)) => {
                             // Cached path: immutable prepared structures,
-                            // preprocessing already done once per input;
-                            // relation matrices come straight from the
-                            // dataset (never copied).
-                            let sx = cache.get(i);
-                            let sy = cache.get(j);
-                            let p = GwProblem::new(
-                                &gi.adj,
-                                &gj.adj,
-                                &sx.marginal,
-                                &sy.marginal,
-                            );
-                            match feat {
-                                Some(feat) if solver_ref.supports_fused() => {
-                                    let fp = FgwProblem::new(p, &feat, cfg.alpha);
-                                    solver_ref.solve_fused_prepared(&fp, sx, sy, &mut rng, ws)?
-                                }
-                                _ => solver_ref.solve_prepared(&p, sx, sy, &mut rng, ws)?,
-                            }
+                            // preprocessing already done once per input
+                            // (eager) or warm from earlier requests
+                            // (LRU); relation matrices come straight from
+                            // the dataset (never copied).
+                            solve_pair_prepared(
+                                cfg, dataset, solver_ref, sx, sy, i, j, n_items, ws,
+                            )?
                         }
                         None => {
                             // Reference path: per-pair re-derivation, the
                             // pre-cache behaviour the determinism harness
                             // compares against.
+                            let gi = &dataset.graphs[i];
+                            let gj = &dataset.graphs[j];
+                            let mut rng = Rng::new(derive_seed(
+                                cfg.seed,
+                                (i * n_items + j) as u64,
+                            ));
+                            let feat = attribute_distance(gi, gj);
                             let (a, b) = (gi.marginal(), gj.marginal());
                             let p = GwProblem::new(&gi.adj, &gj.adj, &a, &b);
-                            match feat {
+                            let report = match feat {
                                 Some(feat) if solver_ref.supports_fused() => {
                                     let fp = FgwProblem::new(p, &feat, cfg.alpha);
                                     solver_ref.solve_fused(&fp, &mut rng, ws)?
                                 }
                                 _ => solver_ref.solve(&p, &mut rng, ws)?,
-                            }
+                            };
+                            (report.value, report.timings)
                         }
                     };
-                    Ok((report.value, report.timings, t0.elapsed().as_secs_f64()))
+                    Ok((value, timings, t0.elapsed().as_secs_f64()))
                 },
             );
 
@@ -326,7 +400,7 @@ impl PairwiseEngine {
                 })?;
                 distances[(i, j)] = value;
                 distances[(j, i)] = value;
-                shard_rows.push((i, j, value, lat));
+                shard_rows.push(SinkRow { shard, i, j, value, latency: lat });
                 lats.push(lat);
                 metrics.record_phases(&timings);
                 computed_pairs += 1;
@@ -336,6 +410,7 @@ impl PairwiseEngine {
                     e.wrap(format!("writing shard {shard} to sink"))
                 })?;
             }
+            all_rows.extend_from_slice(&shard_rows);
             metrics.record_batch(&lats, wall.elapsed().as_secs_f64());
             shards_run += 1;
         }
@@ -355,10 +430,69 @@ impl PairwiseEngine {
             resumed_pairs,
             shards_run,
             shards_skipped,
-            cache: cache.map(|c| c.stats()).unwrap_or_default(),
+            cache: match (warm, cache) {
+                (Some(_), _) => warm_delta,
+                (None, Some(c)) => c.stats(),
+                (None, None) => CacheStats::default(),
+            },
             size_histogram: bucket_histogram(&sizes, REPORT_BUCKETS),
+            rows: all_rows,
         })
     }
+}
+
+/// Per-pair prepared-structure lookup, shared across worker threads.
+/// `Eager` counts hits on the per-run [`StructureCache`]; `Pinned` holds
+/// the warm-LRU entries acquired (and counted) once at run start; `Off`
+/// is the cache-disabled reference path.
+enum PreparedLookup<'a> {
+    Eager(&'a StructureCache),
+    Pinned(&'a [std::sync::Arc<PreparedStructure>]),
+    Off,
+}
+
+impl PreparedLookup<'_> {
+    fn get(&self, i: usize, j: usize) -> Option<(&PreparedStructure, &PreparedStructure)> {
+        match self {
+            PreparedLookup::Eager(c) => Some((c.get(i), c.get(j))),
+            PreparedLookup::Pinned(v) => Some((&*v[i], &*v[j])),
+            PreparedLookup::Off => None,
+        }
+    }
+}
+
+/// Solve one prepared pair exactly as the Gram engine's cached path
+/// does: the pair's deterministic RNG stream is keyed on `(i, j)` over
+/// the `n_items`-wide index space, attributes route through the fused
+/// objective when the solver supports it, and preprocessing comes from
+/// the prepared structures. The serve mode's `solve` verb calls this
+/// directly, so a single-pair response is bit-identical to the same
+/// pair's row in a batch Gram run.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn solve_pair_prepared(
+    cfg: &PairwiseConfig,
+    dataset: &GraphDataset,
+    solver: &dyn GwSolver,
+    sx: &PreparedStructure,
+    sy: &PreparedStructure,
+    i: usize,
+    j: usize,
+    n_items: usize,
+    ws: &mut Workspace,
+) -> Result<(f64, PhaseTimings)> {
+    let mut rng = Rng::new(derive_seed(cfg.seed, (i * n_items + j) as u64));
+    let gi = &dataset.graphs[i];
+    let gj = &dataset.graphs[j];
+    let feat = attribute_distance(gi, gj);
+    let p = GwProblem::new(&gi.adj, &gj.adj, &sx.marginal, &sy.marginal);
+    let report = match feat {
+        Some(feat) if solver.supports_fused() => {
+            let fp = FgwProblem::new(p, &feat, cfg.alpha);
+            solver.solve_fused_prepared(&fp, sx, sy, &mut rng, ws)?
+        }
+        _ => solver.solve_prepared(&p, sx, sy, &mut rng, ws)?,
+    };
+    Ok((report.value, report.timings))
 }
 
 /// FNV-1a digest of everything that decides the *values* of a Gram run:
@@ -370,7 +504,7 @@ impl PairwiseEngine {
 /// deliberately excluded — the determinism contract says they never
 /// change bits, so a checkpoint written at one worker count must resume
 /// at another.
-fn config_fingerprint(cfg: &PairwiseConfig, dataset: &GraphDataset) -> u64 {
+pub(crate) fn config_fingerprint(cfg: &PairwiseConfig, dataset: &GraphDataset) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     let mut eat = |bytes: &[u8]| {
         for &b in bytes {
@@ -417,7 +551,7 @@ fn config_fingerprint(cfg: &PairwiseConfig, dataset: &GraphDataset) -> u64 {
 /// workers, cache) — it is excluded from the resume compatibility check
 /// by [`header_without_simd`], because backends are bit-identical and a
 /// sink may legitimately resume on a different machine.
-fn sink_header(solver: &str, n: usize, shards: usize, fingerprint: u64) -> String {
+pub(crate) fn sink_header(solver: &str, n: usize, shards: usize, fingerprint: u64) -> String {
     format!(
         "# spargw-sink {SINK_VERSION} solver={solver} n={n} shards={shards} \
          config={fingerprint:016x} simd={}",
@@ -459,22 +593,85 @@ fn write_sink_base(path: &Path, header: &str, raw: &[String]) -> Result<std::fs:
 /// Append one completed shard: its result rows, then the `done` marker,
 /// flushed so a kill after this call never loses the shard. The f64 value
 /// is stored both as exact bits (hex) and human-readable.
-fn append_shard(
-    f: &mut std::fs::File,
-    shard: usize,
-    rows: &[(usize, usize, f64, f64)],
-) -> Result<()> {
+fn append_shard(f: &mut std::fs::File, shard: usize, rows: &[SinkRow]) -> Result<()> {
     let mut block = String::new();
-    for &(i, j, value, lat) in rows {
-        block.push_str(&format!(
-            "pair {shard} {i} {j} {:016x} {value:.9e} {lat:.6}\n",
-            value.to_bits()
-        ));
+    for row in rows {
+        block.push_str(&row.line());
+        block.push('\n');
     }
     block.push_str(&format!("done {shard}\n"));
     f.write_all(block.as_bytes())?;
     f.flush()?;
     Ok(())
+}
+
+/// Exclusive-writer guard for a sink path: `<sink>.lock`, created with
+/// `O_EXCL` (create-new) so exactly one process can hold it, holding the
+/// owner's pid, and removed on drop. Concurrent writers to one sink are
+/// documented-unsupported — each run rewrites the sink from its trusted
+/// prefix, so a second process would silently interleave rows and poison
+/// every later resume; this guard turns that data-loss mode into a
+/// one-line error naming the holder. A long-running server acquires it
+/// for the lifetime of every sink-owning run.
+pub struct SinkLock {
+    path: PathBuf,
+}
+
+impl SinkLock {
+    /// Lock-file path for a sink: the sink's file name with `.lock`
+    /// appended (`gram.sink` → `gram.sink.lock`).
+    pub fn lock_path(sink: &Path) -> PathBuf {
+        let mut name = sink
+            .file_name()
+            .map(|n| n.to_os_string())
+            .unwrap_or_else(|| "sink".into());
+        name.push(".lock");
+        sink.with_file_name(name)
+    }
+
+    /// Atomically create the lock file (O_EXCL). Fails with a one-line
+    /// error naming the current holder when the file already exists.
+    pub fn acquire(sink: &Path) -> Result<SinkLock> {
+        let path = SinkLock::lock_path(sink);
+        match std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&path)
+        {
+            Ok(mut f) => {
+                // Holder line: who to blame in the contention error, and
+                // what a human checks before removing a stale lock.
+                let _ = writeln!(f, "pid={}", std::process::id());
+                let _ = f.flush();
+                Ok(SinkLock { path })
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                let holder = std::fs::read_to_string(&path)
+                    .map(|s| s.trim().to_string())
+                    .unwrap_or_default();
+                let holder = if holder.is_empty() {
+                    "unknown holder".to_string()
+                } else {
+                    holder
+                };
+                bail!(
+                    "sink {} is locked by another writer ({holder}; lock file {}): \
+                     concurrent writers to one sink are unsupported — wait for the \
+                     holder to finish, or remove the lock file if its owner is dead",
+                    sink.display(),
+                    path.display()
+                );
+            }
+            Err(e) => Err(crate::util::error::Error::from(e)
+                .wrap(format!("creating sink lock {}", path.display()))),
+        }
+    }
+}
+
+impl Drop for SinkLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
 }
 
 /// Parse a sink file back into recovered state. Only rows of shards whose
@@ -692,6 +889,117 @@ mod tests {
         let g = mk(1, true).gram(&ds).unwrap();
         assert_eq!(g.shards_skipped, 1);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sink_lock_excludes_concurrent_writers_and_releases_on_drop() {
+        let dir = std::env::temp_dir().join("spargw_engine_lock_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sink.txt");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(SinkLock::lock_path(&path)).ok();
+        let ds = tiny_dataset();
+        let opts = EngineConfig {
+            shards: 2,
+            only_shard: Some(0),
+            sink: Some(path.clone()),
+            ..Default::default()
+        };
+        // While a lock is held, a second engine run on the same sink must
+        // refuse with an error naming the holder and the lock file.
+        let held = SinkLock::acquire(&path).unwrap();
+        let msg = format!(
+            "{}",
+            PairwiseEngine::new(tiny_cfg(4), opts.clone()).gram(&ds).unwrap_err()
+        );
+        assert!(msg.contains("locked by another writer"), "{msg}");
+        assert!(msg.contains(&format!("pid={}", std::process::id())), "{msg}");
+        assert!(msg.contains(".lock"), "{msg}");
+        drop(held);
+        assert!(!SinkLock::lock_path(&path).exists(), "lock must release on drop");
+        // With the lock released the run proceeds — and cleans up its own
+        // lock afterwards.
+        PairwiseEngine::new(tiny_cfg(4), opts).gram(&ds).unwrap();
+        assert!(path.exists());
+        assert!(
+            !SinkLock::lock_path(&path).exists(),
+            "engine must remove its lock after the run"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_rejects_out_of_range_sink_rows() {
+        // A done-shard row whose indices exceed the dataset (corruption,
+        // or a sink hand-edited onto the wrong dataset) must be refused
+        // with a descriptive error, never written out of bounds.
+        let dir = std::env::temp_dir().join("spargw_engine_range_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sink.txt");
+        std::fs::remove_file(&path).ok();
+        let ds = tiny_dataset();
+        let mk = |resume| EngineConfig {
+            sink: Some(path.clone()),
+            resume,
+            ..Default::default()
+        };
+        PairwiseEngine::new(tiny_cfg(6), mk(false)).gram(&ds).unwrap();
+        // Rewrite one pair row's i to an index far past the dataset,
+        // keeping the header and the shard's done marker intact.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rewritten: Vec<String> = text
+            .lines()
+            .map(|l| {
+                let f: Vec<&str> = l.split_ascii_whitespace().collect();
+                if f.first() == Some(&"pair") && f[2] == "0" && f[3] == "1" {
+                    format!("pair {} 99 {} {} {} {}", f[1], f[3], f[4], f[5], f[6])
+                } else {
+                    l.to_string()
+                }
+            })
+            .collect();
+        std::fs::write(&path, rewritten.join("\n") + "\n").unwrap();
+        let msg = format!(
+            "{}",
+            PairwiseEngine::new(tiny_cfg(6), mk(true)).gram(&ds).unwrap_err()
+        );
+        assert!(msg.contains("out of range"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn warm_lru_gram_is_bit_identical_to_eager_and_reports_deltas() {
+        use crate::coordinator::cache::LruStructureCache;
+        let ds = tiny_dataset();
+        let n = ds.len();
+        let eng = PairwiseEngine::new(tiny_cfg(8), EngineConfig::default());
+        let solver = eng.cfg.build_solver().unwrap();
+        let eager = eng.gram_with_solver(&ds, solver.as_ref()).unwrap();
+        let warm = LruStructureCache::new(64);
+        // Cold first round: every structure misses and builds.
+        let g1 = eng.gram_warm(&ds, solver.as_ref(), &warm).unwrap();
+        assert_eq!(g1.cache.built, n);
+        assert_eq!(g1.cache.hits, 0);
+        // Second identical round: served entirely from the warm cache.
+        let g2 = eng.gram_warm(&ds, solver.as_ref(), &warm).unwrap();
+        assert_eq!(g2.cache.built, 0, "warm round must rebuild nothing");
+        assert_eq!(g2.cache.hits, n, "hits must equal structures");
+        for ((a, b), c) in eager
+            .distances
+            .data()
+            .iter()
+            .zip(g1.distances.data())
+            .zip(g2.distances.data())
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "warm path changed bits");
+            assert_eq!(b.to_bits(), c.to_bits(), "second round changed bits");
+        }
+        // The captured rows reproduce the sink encoding of a sink run.
+        assert_eq!(eager.rows.len(), eager.computed_pairs);
+        for (r1, r2) in eager.rows.iter().zip(&g1.rows) {
+            assert_eq!(r1.value.to_bits(), r2.value.to_bits());
+            assert_eq!((r1.shard, r1.i, r1.j), (r2.shard, r2.i, r2.j));
+        }
     }
 
     #[test]

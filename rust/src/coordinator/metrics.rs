@@ -7,6 +7,9 @@ use crate::gw::PhaseTimings;
 #[derive(Default)]
 pub struct MetricsRecorder {
     latencies: Vec<f64>,
+    /// Queue-wait series for the server's admission path: seconds between
+    /// a request being admitted and its execution starting.
+    queue_waits: Vec<f64>,
     total_wall: f64,
     solver: Option<String>,
     /// (shards executed, total shard count) when the sharded engine ran.
@@ -55,8 +58,20 @@ impl MetricsRecorder {
         self.simd.as_deref()
     }
 
+    /// Record one job executed on its own (the server's per-request
+    /// path): the job's latency **is** its wall-clock share, so it
+    /// accumulates into the throughput denominator too. Without this a
+    /// recorder fed only via `record` reported `throughput=0.00/s` with
+    /// nonzero jobs, because `total_wall` never moved.
     pub fn record(&mut self, seconds: f64) {
         self.latencies.push(seconds);
+        self.total_wall += seconds;
+    }
+
+    /// Record how long a request waited in the admission queue before
+    /// execution started (the server path; batch runs have no queue).
+    pub fn record_queue_wait(&mut self, seconds: f64) {
+        self.queue_waits.push(seconds);
     }
 
     /// Accumulate a report's per-phase wall-clock breakdown. The
@@ -88,16 +103,21 @@ impl MetricsRecorder {
 
     /// Latency percentile in seconds (q ∈ [0, 1]).
     pub fn percentile(&self, q: f64) -> f64 {
-        if self.latencies.is_empty() {
-            return 0.0;
-        }
         let mut v = self.latencies.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pos = (q.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
-        v[pos]
+        sort_latencies(&mut v);
+        percentile_of_sorted(&v, q)
     }
 
-    /// Jobs per second of wall-clock (when batch wall time was recorded).
+    /// Queue-wait percentile in seconds (q ∈ [0, 1]); 0 when no waits
+    /// were recorded.
+    pub fn queue_percentile(&self, q: f64) -> f64 {
+        let mut v = self.queue_waits.clone();
+        sort_latencies(&mut v);
+        percentile_of_sorted(&v, q)
+    }
+
+    /// Jobs per second of wall-clock (batch wall via `record_batch`,
+    /// per-request wall via `record`).
     pub fn throughput(&self) -> f64 {
         if self.total_wall <= 0.0 {
             return 0.0;
@@ -134,16 +154,49 @@ impl MetricsRecorder {
                 .collect();
             format!(" phases[{}]", parts.join(" "))
         };
+        // Sort once and slice every percentile out of the same vector —
+        // four separate `percentile` calls would clone + sort four times.
+        let mut sorted = self.latencies.clone();
+        sort_latencies(&mut sorted);
+        let queue = if self.queue_waits.is_empty() {
+            String::new()
+        } else {
+            let mut waits = self.queue_waits.clone();
+            sort_latencies(&mut waits);
+            format!(
+                " queue_p50={:.4}s queue_p90={:.4}s",
+                percentile_of_sorted(&waits, 0.5),
+                percentile_of_sorted(&waits, 0.9),
+            )
+        };
         format!(
-            "{solver}{shards}{simd}jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s{phases}",
+            "{solver}{shards}{simd}jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s{queue}{phases}",
             self.count(),
             self.mean(),
-            self.percentile(0.5),
-            self.percentile(0.9),
-            self.percentile(0.99),
+            percentile_of_sorted(&sorted, 0.5),
+            percentile_of_sorted(&sorted, 0.9),
+            percentile_of_sorted(&sorted, 0.99),
             self.throughput()
         )
     }
+}
+
+/// NaN-last total order (the `linalg/eig.rs` precedent): a NaN latency —
+/// e.g. a wall-clock source going backwards — must never panic the
+/// metrics path mid-serve the way `partial_cmp().unwrap()` did; it sorts
+/// past every real latency and shows up in the top percentiles instead.
+fn sort_latencies(v: &mut [f64]) {
+    v.sort_by(|a, b| a.total_cmp(b));
+}
+
+/// Percentile by nearest-rank over an already-sorted slice (q clamped to
+/// [0, 1]; 0 for an empty series).
+fn percentile_of_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = (q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[pos]
 }
 
 #[cfg(test)]
@@ -168,6 +221,48 @@ mod tests {
         let mut m = MetricsRecorder::new();
         m.record_batch(&[0.1, 0.1, 0.1, 0.1], 2.0);
         assert!((m.throughput() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_from_per_request_records() {
+        // Regression: latencies recorded one at a time (the server's
+        // per-request path) must accumulate wall time — the summary used
+        // to report throughput=0.00/s with nonzero jobs.
+        let mut m = MetricsRecorder::new();
+        m.record(0.5);
+        m.record(0.5);
+        m.record(0.5);
+        assert!((m.throughput() - 2.0).abs() < 1e-9, "{}", m.throughput());
+        assert!(!m.summary().contains("throughput=0.00/s"), "{}", m.summary());
+    }
+
+    #[test]
+    fn nan_latency_never_panics_and_sorts_last() {
+        // Regression: a NaN latency used to panic `percentile` via
+        // `partial_cmp().unwrap()` deep inside `summary()`. It must sort
+        // last (total_cmp) and leave the low percentiles finite.
+        let mut m = MetricsRecorder::new();
+        for i in 1..=9 {
+            m.record(i as f64);
+        }
+        m.record(f64::NAN);
+        assert!(m.percentile(1.0).is_nan(), "NaN must sort last");
+        assert!((m.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!(m.percentile(0.5).is_finite());
+        let s = m.summary(); // must not panic
+        assert!(s.contains("jobs=10"), "{s}");
+    }
+
+    #[test]
+    fn queue_waits_appear_in_summary() {
+        let mut m = MetricsRecorder::new();
+        m.record(0.2);
+        assert!(!m.summary().contains("queue_p50"), "{}", m.summary());
+        m.record_queue_wait(0.05);
+        m.record_queue_wait(0.15);
+        assert!((m.queue_percentile(1.0) - 0.15).abs() < 1e-12);
+        assert!(m.summary().contains("queue_p50="), "{}", m.summary());
+        assert!(m.summary().contains("queue_p90="), "{}", m.summary());
     }
 
     #[test]

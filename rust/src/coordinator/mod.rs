@@ -37,8 +37,8 @@ pub mod scheduler;
 pub mod service;
 
 pub use bucket::pad_relation;
-pub use cache::{CacheStats, StructureCache};
-pub use engine::{EngineConfig, GramResult, PairwiseEngine};
+pub use cache::{CacheStats, LruStructureCache, StructureCache};
+pub use engine::{EngineConfig, GramResult, PairwiseEngine, SinkLock, SinkRow};
 pub use metrics::MetricsRecorder;
 pub use scheduler::{run_jobs, run_jobs_with, shard_partition};
 pub use service::{ExecutionPath, PairwiseConfig, PairwiseGw, PairwiseResult};

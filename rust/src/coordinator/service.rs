@@ -187,7 +187,17 @@ impl PairwiseGw {
             let mut pjrt_pairs = 0usize;
             let mut native_pairs = 0usize;
             let wall_start = Instant::now();
-            let runtime = self.runtime.as_mut().unwrap();
+            // Never unwrap here: a serve request reaching the PJRT branch
+            // without an attached runtime must surface a one-line error
+            // naming the cfg-gate, not a panic deep inside the request.
+            let runtime = self.runtime.as_mut().ok_or_else(|| {
+                crate::format_err!(
+                    "PJRT path selected but no runtime is attached: PJRT is \
+                     compiled in only under `--cfg spargw_pjrt`, and the \
+                     service must be built via PairwiseGw::with_runtime \
+                     (an artifact directory); use the native path otherwise"
+                )
+            })?;
             let mut lats = Vec::with_capacity(pairs.len());
             for &(i, j) in &pairs {
                 let t0 = Instant::now();

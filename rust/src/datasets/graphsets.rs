@@ -318,6 +318,39 @@ pub fn imdb_b(seed: u64) -> GraphDataset {
     GraphDataset { name: "IMDB-B", graphs, n_classes: 2, attr_kind: AttrKind::None }
 }
 
+/// Load a built-in dataset by CLI/protocol name (`-` and `_` are
+/// interchangeable, case-insensitive). An optional `:K` suffix truncates
+/// to the first K graphs — the serve protocol uses it for cheap smoke
+/// requests (`synthetic:8`). Errors name the valid choices.
+pub fn by_name(spec: &str, seed: u64) -> crate::util::error::Result<GraphDataset> {
+    let (name, limit) = match spec.rsplit_once(':') {
+        Some((name, k)) => {
+            let k: usize = k.parse().map_err(|_| {
+                crate::format_err!("dataset spec {spec:?}: `:K` suffix expects an integer")
+            })?;
+            crate::ensure!(k > 0, "dataset spec {spec:?}: `:K` must be positive");
+            (name, Some(k))
+        }
+        None => (spec, None),
+    };
+    let mut ds = match name.to_ascii_lowercase().replace('-', "_").as_str() {
+        "synthetic" => synthetic_ds(seed),
+        "bzr" => bzr(seed),
+        "cox2" => cox2(seed),
+        "cuneiform" => cuneiform(seed),
+        "firstmm_db" => firstmm_db(seed),
+        "imdb_b" => imdb_b(seed),
+        other => crate::bail!(
+            "unknown dataset {other:?} (expected synthetic|bzr|cox2|cuneiform|\
+             firstmm_db|imdb-b, optionally `:K` to truncate)"
+        ),
+    };
+    if let Some(k) = limit {
+        ds.graphs.truncate(k);
+    }
+    Ok(ds)
+}
+
 /// All six datasets in Table 2/3 order.
 pub fn all_datasets(seed: u64) -> Vec<GraphDataset> {
     vec![

@@ -48,6 +48,7 @@ pub mod ml;
 pub mod ot;
 pub mod rng;
 pub mod runtime;
+pub mod server;
 pub mod sparse;
 pub mod testutil;
 pub mod util;

@@ -7,6 +7,10 @@
 //! * `pairwise`  — the pairwise-GW service over a graph dataset
 //!                 (any registry solver via `--solver`; optionally on the
 //!                 PJRT artifact path).
+//! * `serve`     — long-running server mode: newline-framed requests
+//!                 over stdin/stdout or a Unix socket, warm structure
+//!                 cache across requests, bounded admission queue,
+//!                 graceful drain on SIGTERM or the `drain` verb.
 //! * `cluster`   — full §6.2 pipeline: pairwise (F)GW → similarity →
 //!                 spectral clustering → Rand index.
 //! * `solvers`   — list the registered solver engines.
@@ -48,6 +52,13 @@ USAGE:
                   [--shard I/OF | --shards N]             # deterministic sharding
                   [--out FILE] [--resume]                 # streaming sink + resume
                   [--artifacts DIR | --pjrt]              # enable the PJRT path
+  spargw serve    [--socket PATH]                         # default stdin/stdout
+                  [--solver NAME] [--solver-opt k=v]... [--cost l1|l2]
+                  [--workers 4] [--seed 0] [--threads N]
+                  [--simd auto|avx2|neon|scalar]
+                  [--queue 64]             # admission capacity (busy beyond)
+                  [--cache-structures 512] # warm LRU cache capacity
+                  [--summary-every 16] [--retry-after-ms 50]
   spargw cluster  [--dataset ...] [--solver NAME] [--solver-opt k=v]...
                   [--cost l1|l2] [--gamma 1.0] [--seed 0] [--threads N]
                   [--simd auto|avx2|neon|scalar]
@@ -71,6 +82,19 @@ SIMD
   the backend never changes results: every vector kernel reproduces the
   scalar lane schedule bit-for-bit. `spargw solvers` prints the
   resolved backend.
+
+SERVE MODE
+  spargw serve answers newline-framed requests — `solve <ds> <i> <j>`,
+  `pairwise <ds>`, `status`, `drain` — with line-count-prefixed
+  responses (`ok <id> lines=<n>` + n payload lines; `busy` with a retry
+  hint when the admission queue is full). Compute payloads stream in
+  the spargw-sink v1 row encoding, bit-identical to what a batch
+  `spargw pairwise` run writes to its sink at the same config/seed, and
+  every response reports the warm cache's built/hit counters. Dataset
+  specs accept an optional `:K` truncation suffix (synthetic:12), also
+  valid for --dataset. SIGTERM/SIGINT (or `drain`) drain gracefully:
+  admission stops, in-flight requests finish, the drained counts go to
+  stderr, and the process exits 0.
 
 Registered solvers (spargw solvers): spar_gw spar_fgw spar_ugw egw pga_gw
 emd_gw sagrow lr_gw sgwl anchor qgw
@@ -103,6 +127,7 @@ fn ok_or_exit<T>(r: Result<T>) -> T {
 const SUBCOMMAND_FLAGS: &[(&str, &[&str])] = &[
     ("solve", &["verbose"]),
     ("pairwise", &["pjrt", "verbose", "resume"]),
+    ("serve", &[]),
     ("cluster", &["verbose"]),
     ("solvers", &[]),
     ("datasets", &[]),
@@ -153,19 +178,12 @@ fn make_workload(name: &str, n: usize, rng: &mut Xoshiro256) -> datasets::Instan
     }
 }
 
+/// Resolve a `--dataset` spec through the shared registry the serve mode
+/// also uses — same names, same optional `:K` truncation suffix, so a
+/// batch run and a serve request for the same spec build bit-identical
+/// datasets.
 fn load_dataset(name: &str, seed: u64) -> graphsets::GraphDataset {
-    match name.to_ascii_lowercase().replace('-', "_").as_str() {
-        "synthetic" => graphsets::synthetic_ds(seed),
-        "bzr" => graphsets::bzr(seed),
-        "cox2" => graphsets::cox2(seed),
-        "cuneiform" => graphsets::cuneiform(seed),
-        "firstmm_db" => graphsets::firstmm_db(seed),
-        "imdb_b" => graphsets::imdb_b(seed),
-        other => {
-            eprintln!("unknown dataset {other:?}");
-            std::process::exit(2);
-        }
-    }
+    ok_or_exit(graphsets::by_name(name, seed))
 }
 
 fn run_settings(args: &Args) -> RunSettings {
@@ -425,6 +443,47 @@ fn cmd_pairwise(args: &Args) {
     }
 }
 
+/// `spargw serve` — the long-running server mode. Installs the
+/// SIGTERM/SIGINT drain handlers, builds one shared `ServerState`
+/// (config + warm structure cache + counters), then serves newline-framed
+/// requests over stdin/stdout or, with `--socket PATH`, a Unix domain
+/// socket. Exits 0 after a graceful drain with a `drained:` summary on
+/// stderr.
+fn cmd_serve(args: &Args) {
+    use spargw::server::{ServeOptions, ServerState};
+
+    spargw::server::signal::install();
+    let seed = ok_or_exit(args.u64_or("seed", 0));
+    let cfg = pairwise_config(args, seed);
+    let opts = ServeOptions {
+        queue_capacity: ok_or_exit(args.usize_or("queue", 64)),
+        cache_capacity: ok_or_exit(args.usize_or("cache-structures", 512)),
+        summary_every: ok_or_exit(args.usize_or("summary-every", 16)),
+        retry_after_ms: ok_or_exit(args.u64_or("retry-after-ms", 50)),
+    };
+    let state = std::sync::Arc::new(ServerState::new(cfg, opts));
+    let outcome = match args.opt_str("socket") {
+        #[cfg(unix)]
+        Some(path) => {
+            ok_or_exit(spargw::server::serve_socket(&state, std::path::Path::new(path)))
+        }
+        #[cfg(not(unix))]
+        Some(_) => {
+            eprintln!("error: --socket requires a Unix platform");
+            std::process::exit(2);
+        }
+        None => ok_or_exit(spargw::server::serve_connection(
+            &state,
+            std::io::stdin(),
+            std::io::stdout(),
+        )),
+    };
+    eprintln!(
+        "drained: served={} refused={} errors={} in_flight_completed={}",
+        outcome.served, outcome.refused, outcome.errors, outcome.drained_in_flight
+    );
+}
+
 fn cmd_cluster(args: &Args) {
     let seed = ok_or_exit(args.u64_or("seed", 0));
     let ds = load_dataset(args.str_or("dataset", "synthetic"), seed);
@@ -532,6 +591,7 @@ fn main() {
     match args.positional(0) {
         Some("solve") => cmd_solve(&args),
         Some("pairwise") => cmd_pairwise(&args),
+        Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("solvers") => cmd_solvers(),
         Some("datasets") => cmd_datasets(&args),

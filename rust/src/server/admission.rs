@@ -1,0 +1,191 @@
+//! Bounded admission queue with explicit backpressure.
+//!
+//! The serve mode admits requests on a reader thread and executes them on
+//! a single executor thread; this queue is the boundary between them. It
+//! is deliberately **bounded and non-blocking on the push side**: when the
+//! queue is full the reader refuses the request with a `busy` response
+//! (carrying a retry hint and the observed depth) instead of buffering
+//! unboundedly or stalling the protocol stream. The pop side blocks with
+//! a timeout so the executor can poll the shutdown flag between jobs.
+//!
+//! `close()` starts the drain: no further pushes are admitted, but items
+//! already queued remain poppable — `pop_timeout` keeps returning
+//! [`Popped::Item`] until the queue is empty and only then reports
+//! [`Popped::Closed`]. That ordering is what makes "finish in-flight
+//! work, then exit" a one-liner in the executor.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Why a push was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushError {
+    /// The queue is at capacity; the caller should answer `busy` with a
+    /// retry hint.
+    Full {
+        /// Depth observed at refusal (== capacity).
+        depth: usize,
+        /// Configured capacity.
+        capacity: usize,
+    },
+    /// The queue was closed (drain in progress); the caller should answer
+    /// `draining`.
+    Closed,
+}
+
+/// Outcome of a timed pop.
+#[derive(Debug)]
+pub enum Popped<T> {
+    /// A queued item (possibly after the queue closed — drain finishes
+    /// in-flight work).
+    Item(T),
+    /// Nothing arrived within the timeout; the queue is still open.
+    TimedOut,
+    /// The queue is closed *and* empty: the drain is complete.
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPSC-ish queue (any thread may push, the executor pops).
+pub struct AdmissionQueue<T> {
+    capacity: usize,
+    inner: Mutex<Inner<T>>,
+    ready: Condvar,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// An open queue admitting at most `capacity` items (min 1).
+    pub fn new(capacity: usize) -> Self {
+        AdmissionQueue {
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current depth.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit `item` without blocking. Returns the post-push depth, or the
+    /// refusal reason (full / closed) for the caller to report.
+    pub fn try_push(&self, item: T) -> Result<usize, PushError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(PushError::Closed);
+        }
+        if inner.items.len() >= self.capacity {
+            return Err(PushError::Full {
+                depth: inner.items.len(),
+                capacity: self.capacity,
+            });
+        }
+        inner.items.push_back(item);
+        let depth = inner.items.len();
+        self.ready.notify_one();
+        Ok(depth)
+    }
+
+    /// Close admission (start the drain). Queued items stay poppable;
+    /// waiting poppers are woken so an idle executor notices immediately.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Pop the next item, waiting at most `timeout` for one to arrive.
+    pub fn pop_timeout(&self, timeout: Duration) -> Popped<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                return Popped::Item(item);
+            }
+            if inner.closed {
+                return Popped::Closed;
+            }
+            let (guard, result) = self.ready.wait_timeout(inner, timeout).unwrap();
+            inner = guard;
+            if result.timed_out() {
+                if let Some(item) = inner.items.pop_front() {
+                    return Popped::Item(item);
+                }
+                if inner.closed {
+                    return Popped::Closed;
+                }
+                return Popped::TimedOut;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_push_refuses_with_depth() {
+        let q = AdmissionQueue::new(2);
+        assert_eq!(q.try_push(1), Ok(1));
+        assert_eq!(q.try_push(2), Ok(2));
+        assert_eq!(q.try_push(3), Err(PushError::Full { depth: 2, capacity: 2 }));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_queued_items_then_reports_closed() {
+        let q = AdmissionQueue::new(4);
+        q.try_push("a").unwrap();
+        q.try_push("b").unwrap();
+        q.close();
+        assert_eq!(q.try_push("c"), Err(PushError::Closed));
+        // In-flight items still pop after close — the drain contract.
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Popped::Item("a")));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Popped::Item("b")));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Popped::Closed));
+    }
+
+    #[test]
+    fn pop_times_out_on_an_open_empty_queue() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(1);
+        assert!(matches!(q.pop_timeout(Duration::from_millis(5)), Popped::TimedOut));
+    }
+
+    #[test]
+    fn push_wakes_a_waiting_popper() {
+        use std::sync::Arc;
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(1));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_timeout(Duration::from_secs(10)));
+        // The popper may or may not be parked yet; either way the push
+        // must reach it without waiting out the 10 s timeout.
+        q.try_push(7).unwrap();
+        assert!(matches!(h.join().unwrap(), Popped::Item(7)));
+    }
+
+    #[test]
+    fn close_wakes_a_waiting_popper() {
+        use std::sync::Arc;
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(1));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_timeout(Duration::from_secs(10)));
+        q.close();
+        assert!(matches!(h.join().unwrap(), Popped::Closed));
+    }
+}

@@ -1,0 +1,480 @@
+//! **Pairwise-GW-as-a-service** — the long-running serve mode.
+//!
+//! `spargw serve` keeps one process resident and answers newline-framed
+//! requests ([`protocol`]) over stdin/stdout or a Unix socket, instead of
+//! paying per-invocation startup plus a cold preprocessing pass for every
+//! Gram job. Three pieces make it a server rather than a loop:
+//!
+//! * **Warm structure cache** — one
+//!   [`LruStructureCache`](crate::coordinator::cache::LruStructureCache)
+//!   outlives every request: the per-structure marginals and Eq. (5)
+//!   importance-sampling factors computed for one request are still
+//!   resident for the next (bounded capacity, LRU eviction, counters in
+//!   every response's trailing `# cache` line). A repeated request is
+//!   served with `built=0` — the preprocessing amortization is the point
+//!   of staying resident.
+//! * **Bounded admission with backpressure** ([`admission`]) — a reader
+//!   thread admits requests into a bounded queue and answers `busy` with
+//!   a retry hint when it is full; a single executor thread runs jobs in
+//!   admission order through the same
+//!   [`PairwiseEngine`](crate::coordinator::engine::PairwiseEngine) /
+//!   scheduler stack as batch runs. Responses are `spargw-sink v1`
+//!   blocks: serve-mode rows are **bit-identical** to what a batch
+//!   `spargw pairwise` run writes to its sink at the same config/seed.
+//! * **Graceful drain** ([`signal`]) — SIGTERM/SIGINT (or the `drain`
+//!   verb) stops admission, finishes everything already queued, reports
+//!   the drained counts on stderr and exits 0. No in-flight request is
+//!   ever dropped.
+//!
+//! Request latency and queue-wait series feed the coordinator's
+//! [`MetricsRecorder`](crate::coordinator::metrics::MetricsRecorder); a
+//! one-line summary is printed to stderr every `summary_every` requests.
+
+pub mod admission;
+pub mod protocol;
+pub mod signal;
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::cache::LruStructureCache;
+use crate::coordinator::engine::{self, EngineConfig, PairwiseEngine, SinkRow};
+use crate::coordinator::metrics::MetricsRecorder;
+use crate::coordinator::service::PairwiseConfig;
+use crate::datasets::graphsets;
+use crate::gw::core::Workspace;
+use crate::gw::solver::GwSolver;
+use crate::util::error::{Error, Result};
+use crate::{bail, ensure};
+
+use self::admission::{AdmissionQueue, Popped, PushError};
+use self::protocol::Request;
+
+/// Serve-mode knobs layered on top of [`PairwiseConfig`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Admission-queue capacity; a full queue answers `busy` (explicit
+    /// backpressure) instead of buffering unboundedly.
+    pub queue_capacity: usize,
+    /// Warm-cache capacity in resident structures (LRU eviction beyond).
+    pub cache_capacity: usize,
+    /// Print a one-line metrics summary to stderr every this many
+    /// executed requests (0 disables).
+    pub summary_every: usize,
+    /// Retry hint carried by `busy` responses.
+    pub retry_after_ms: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            queue_capacity: 64,
+            cache_capacity: 512,
+            summary_every: 16,
+            retry_after_ms: 50,
+        }
+    }
+}
+
+/// Shared server state: configuration, the warm cache, and the lifetime
+/// counters. One instance outlives every connection (socket mode serves
+/// connections sequentially against the same state, so the cache stays
+/// warm across clients).
+pub struct ServerState {
+    cfg: PairwiseConfig,
+    opts: ServeOptions,
+    cache: LruStructureCache,
+    draining: AtomicBool,
+    served: AtomicUsize,
+    refused: AtomicUsize,
+    errors: AtomicUsize,
+}
+
+impl ServerState {
+    pub fn new(cfg: PairwiseConfig, opts: ServeOptions) -> Self {
+        let cache = LruStructureCache::new(opts.cache_capacity);
+        ServerState {
+            cfg,
+            opts,
+            cache,
+            draining: AtomicBool::new(false),
+            served: AtomicUsize::new(0),
+            refused: AtomicUsize::new(0),
+            errors: AtomicUsize::new(0),
+        }
+    }
+
+    /// The solver/dataset configuration every request executes under.
+    pub fn config(&self) -> &PairwiseConfig {
+        &self.cfg
+    }
+
+    /// The warm structure cache (shared across requests and connections).
+    pub fn cache(&self) -> &LruStructureCache {
+        &self.cache
+    }
+
+    /// Stop admitting new requests. Sticky: once draining, every later
+    /// request on every connection is refused with `draining`.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// True once the drain began (drain verb or SIGTERM/SIGINT).
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+}
+
+/// What a serve loop did, reported in the final `drained:` summary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeOutcome {
+    /// Requests executed to an `ok` response.
+    pub served: usize,
+    /// Requests refused at admission (`busy` or `draining`).
+    pub refused: usize,
+    /// Requests that failed (unparseable or erroring execution).
+    pub errors: usize,
+    /// Requests that were already admitted when the drain began and were
+    /// finished anyway (the no-drop guarantee, observable).
+    pub drained_in_flight: usize,
+}
+
+/// One admitted request.
+struct Job {
+    id: u64,
+    request: Request,
+    admitted: Instant,
+}
+
+/// A message for the writer thread (the single owner of the output
+/// stream — response blocks never interleave mid-block).
+enum Outbound {
+    Block(String),
+    Shutdown,
+}
+
+/// Serve one connection: read newline-framed requests from `reader`,
+/// stream framed responses to `writer`, until EOF, the `drain` verb or a
+/// shutdown signal — then finish everything already admitted and return
+/// this connection's counts.
+///
+/// Thread shape: a reader thread owns admission (parse, refuse-on-full,
+/// refuse-mid-drain), a writer thread owns the output stream, and the
+/// calling thread is the executor. The reader may stay blocked on a
+/// stream that never reaches EOF (a held-open FIFO); it is detached, so
+/// a signal-triggered drain still completes and the process exits
+/// cleanly without it.
+pub fn serve_connection<R, W>(
+    state: &Arc<ServerState>,
+    reader: R,
+    writer: W,
+) -> Result<ServeOutcome>
+where
+    R: Read + Send + 'static,
+    W: Write + Send + 'static,
+{
+    let solver = state
+        .cfg
+        .build_solver()
+        .map_err(|e| e.wrap("building serve solver"))?;
+    let queue: Arc<AdmissionQueue<Job>> =
+        Arc::new(AdmissionQueue::new(state.opts.queue_capacity));
+    let (tx, rx) = mpsc::channel::<Outbound>();
+    let base_served = state.served.load(Ordering::Relaxed);
+    let base_refused = state.refused.load(Ordering::Relaxed);
+    let base_errors = state.errors.load(Ordering::Relaxed);
+
+    let writer_handle = std::thread::spawn(move || -> std::io::Result<()> {
+        let mut w = BufWriter::new(writer);
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                Outbound::Block(block) => {
+                    w.write_all(block.as_bytes())?;
+                    w.flush()?;
+                }
+                Outbound::Shutdown => break,
+            }
+        }
+        Ok(())
+    });
+
+    let reader_done = Arc::new(AtomicBool::new(false));
+    {
+        let state = Arc::clone(state);
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        let reader_done = Arc::clone(&reader_done);
+        std::thread::spawn(move || {
+            let mut next_id: u64 = 0;
+            for line in BufReader::new(reader).lines() {
+                let line = match line {
+                    Ok(l) => l,
+                    Err(_) => break,
+                };
+                if line.trim().is_empty() {
+                    continue;
+                }
+                next_id += 1;
+                let id = next_id;
+                let request = match Request::parse(&line) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        state.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = tx.send(Outbound::Block(protocol::err_line(id, &e)));
+                        continue;
+                    }
+                };
+                if request == Request::Drain {
+                    state.begin_drain();
+                    queue.close();
+                    let _ = tx.send(Outbound::Block(protocol::draining_line(id)));
+                    continue;
+                }
+                if state.is_draining() {
+                    state.refused.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Outbound::Block(protocol::draining_line(id)));
+                    continue;
+                }
+                let job = Job { id, request, admitted: Instant::now() };
+                match queue.try_push(job) {
+                    Ok(_) => {}
+                    Err(PushError::Full { depth, capacity }) => {
+                        state.refused.fetch_add(1, Ordering::Relaxed);
+                        let _ = tx.send(Outbound::Block(protocol::busy_line(
+                            id,
+                            state.opts.retry_after_ms,
+                            depth,
+                            capacity,
+                        )));
+                    }
+                    Err(PushError::Closed) => {
+                        state.refused.fetch_add(1, Ordering::Relaxed);
+                        let _ = tx.send(Outbound::Block(protocol::draining_line(id)));
+                    }
+                }
+            }
+            // EOF: stop admitting; the executor finishes what was queued.
+            queue.close();
+            reader_done.store(true, Ordering::SeqCst);
+        });
+    }
+
+    // Executor: this thread. One workspace reused across requests (the
+    // established bit-identity contract — workspaces never leak state
+    // into results), one metrics recorder per connection.
+    let mut ws = Workspace::new();
+    let mut metrics = MetricsRecorder::new();
+    metrics.set_solver(solver.name());
+    metrics.set_simd(crate::kernel::simd::current().name());
+    let mut drained_in_flight = 0usize;
+    loop {
+        if signal::shutdown_requested() && !state.is_draining() {
+            state.begin_drain();
+            queue.close();
+        }
+        match queue.pop_timeout(Duration::from_millis(50)) {
+            Popped::TimedOut => continue,
+            Popped::Closed => break,
+            Popped::Item(job) => {
+                if state.is_draining() {
+                    drained_in_flight += 1;
+                }
+                let queued = job.admitted.elapsed().as_secs_f64();
+                let wall = Instant::now();
+                let block = match execute(
+                    state,
+                    solver.as_ref(),
+                    &queue,
+                    &metrics,
+                    &job.request,
+                    &mut ws,
+                ) {
+                    Ok(payload) => {
+                        state.served.fetch_add(1, Ordering::Relaxed);
+                        protocol::ok_block(job.id, &payload)
+                    }
+                    Err(e) => {
+                        state.errors.fetch_add(1, Ordering::Relaxed);
+                        protocol::err_line(job.id, &e)
+                    }
+                };
+                metrics.record(wall.elapsed().as_secs_f64());
+                metrics.record_queue_wait(queued);
+                let _ = tx.send(Outbound::Block(block));
+                if state.opts.summary_every > 0
+                    && metrics.count() % state.opts.summary_every == 0
+                {
+                    eprintln!("serve: {}", metrics.summary());
+                }
+            }
+        }
+    }
+
+    // Drain is complete, but the reader may still be turning late-arriving
+    // requests into `draining`/`busy` refusals; shutting the writer down
+    // under it would strand a client waiting on that response. Give the
+    // reader a bounded grace window to reach EOF — skipped entirely on a
+    // signal-triggered shutdown (the reader may then be blocked forever
+    // on a held-open stream, and the process must still exit).
+    let grace = Instant::now();
+    while !reader_done.load(Ordering::SeqCst)
+        && !signal::shutdown_requested()
+        && grace.elapsed() < Duration::from_secs(5)
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let _ = tx.send(Outbound::Shutdown);
+    drop(tx);
+    match writer_handle.join() {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => return Err(Error::from(e).wrap("serve response writer")),
+        Err(_) => bail!("serve response writer thread panicked"),
+    }
+    Ok(ServeOutcome {
+        served: state.served.load(Ordering::Relaxed) - base_served,
+        refused: state.refused.load(Ordering::Relaxed) - base_refused,
+        errors: state.errors.load(Ordering::Relaxed) - base_errors,
+        drained_in_flight,
+    })
+}
+
+/// Execute one admitted request and return its payload lines. Compute
+/// payloads are `spargw-sink v1` blocks plus a trailing `# cache` line —
+/// `parse_sink` trusts only done-marked blocks and stops at the first
+/// non-row line, so a streamed block is even resumable-from as a sink.
+fn execute(
+    state: &ServerState,
+    solver: &dyn GwSolver,
+    queue: &AdmissionQueue<Job>,
+    metrics: &MetricsRecorder,
+    request: &Request,
+    ws: &mut Workspace,
+) -> Result<Vec<String>> {
+    match request {
+        Request::Status => Ok(vec![
+            format!(
+                "# server served={} refused={} errors={} draining={} queue={}/{}",
+                state.served.load(Ordering::Relaxed),
+                state.refused.load(Ordering::Relaxed),
+                state.errors.load(Ordering::Relaxed),
+                state.is_draining(),
+                queue.len(),
+                queue.capacity(),
+            ),
+            format!(
+                "# cache capacity={} resident={} {}",
+                state.cache.capacity(),
+                state.cache.len(),
+                state.cache.stats().tokens(),
+            ),
+            format!("# metrics {}", metrics.summary()),
+        ]),
+        Request::Pairwise { dataset } => {
+            let ds = graphsets::by_name(dataset, state.cfg.seed)?;
+            let eng = PairwiseEngine::new(state.cfg.clone(), EngineConfig::default());
+            let g = eng.gram_warm(&ds, solver, &state.cache)?;
+            let fingerprint = engine::config_fingerprint(&state.cfg, &ds);
+            let mut lines = Vec::with_capacity(g.rows.len() + 3);
+            lines.push(engine::sink_header(solver.name(), ds.len(), 1, fingerprint));
+            for row in &g.rows {
+                lines.push(row.line());
+            }
+            lines.push("done 0".to_string());
+            lines.push(format!("# cache structures={} {}", ds.len(), g.cache.tokens()));
+            Ok(lines)
+        }
+        Request::Solve { dataset, i, j } => {
+            let ds = graphsets::by_name(dataset, state.cfg.seed)?;
+            let n = ds.len();
+            ensure!(
+                *i < n && *j < n,
+                "pair ({i},{j}) out of range for dataset {dataset:?} (n={n})"
+            );
+            ensure!(i != j, "solve expects two distinct indices, got ({i},{j})");
+            // Normalize to the canonical upper-triangular orientation so
+            // the pair's RNG stream — keyed on (i, j) with i < j — is the
+            // one a batch Gram run derives: bit-identity by construction.
+            let (i, j) = (*i.min(j), *i.max(j));
+            let fingerprint = engine::config_fingerprint(&state.cfg, &ds);
+            let (pinned, delta) = state.cache.acquire(&ds, fingerprint, Some(&[i, j]));
+            let t0 = Instant::now();
+            let (value, _timings) = engine::solve_pair_prepared(
+                &state.cfg,
+                &ds,
+                solver,
+                &pinned[0],
+                &pinned[1],
+                i,
+                j,
+                n,
+                ws,
+            )?;
+            let row = SinkRow { shard: 0, i, j, value, latency: t0.elapsed().as_secs_f64() };
+            Ok(vec![
+                engine::sink_header(solver.name(), n, 1, fingerprint),
+                row.line(),
+                "done 0".to_string(),
+                format!("# cache structures=2 {}", delta.tokens()),
+            ])
+        }
+        Request::Drain => bail!("drain is handled at admission, not execution"),
+    }
+}
+
+/// Serve connections sequentially over a Unix domain socket at `path`
+/// until a drain begins, then remove the socket file and return the
+/// aggregated counts. An existing file at `path` is refused (another
+/// server may be live on it) rather than silently replaced.
+#[cfg(unix)]
+pub fn serve_socket(state: &Arc<ServerState>, path: &std::path::Path) -> Result<ServeOutcome> {
+    use std::os::unix::net::UnixListener;
+
+    ensure!(
+        !path.exists(),
+        "socket path {} already exists: another server may be listening — \
+         stop it, or remove the file if its owner is dead",
+        path.display()
+    );
+    let listener = UnixListener::bind(path)
+        .map_err(|e| Error::from(e).wrap(format!("binding {}", path.display())))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| Error::from(e).wrap("configuring socket accept loop"))?;
+
+    let mut total = ServeOutcome::default();
+    let result = loop {
+        if signal::shutdown_requested() || state.is_draining() {
+            break Ok(());
+        }
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let connection = (|| -> Result<ServeOutcome> {
+                    stream.set_nonblocking(false).map_err(Error::from)?;
+                    let read_half = stream.try_clone().map_err(Error::from)?;
+                    serve_connection(state, read_half, stream)
+                })();
+                match connection {
+                    Ok(o) => {
+                        total.served += o.served;
+                        total.refused += o.refused;
+                        total.errors += o.errors;
+                        total.drained_in_flight += o.drained_in_flight;
+                    }
+                    Err(e) => break Err(e.wrap("serving socket connection")),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => {
+                break Err(Error::from(e)
+                    .wrap(format!("accepting on {}", path.display())));
+            }
+        }
+    };
+    let _ = std::fs::remove_file(path);
+    result.map(|()| total)
+}

@@ -1,0 +1,162 @@
+//! The serve mode's newline-framed request/response protocol.
+//!
+//! **Requests** are one line each, whitespace-separated:
+//!
+//! ```text
+//! solve <dataset> <i> <j>     one pair of the named dataset
+//! pairwise <dataset>          the full Gram over the named dataset
+//! status                      counters, cache and metrics snapshot
+//! drain                       stop admitting, finish in-flight, exit
+//! ```
+//!
+//! `<dataset>` is a [`graphsets::by_name`](crate::datasets::graphsets::by_name)
+//! spec (`synthetic`, `imdb-b`, …, optionally `:K` to truncate).
+//!
+//! **Responses** are line-count-prefixed so a client can frame them
+//! without sniffing payload content:
+//!
+//! ```text
+//! ok <id> lines=<n>           followed by exactly n payload lines
+//! err <id> <message>          the request failed (single line)
+//! busy <id> retry-after-ms=<t> queue=<depth>/<cap>
+//! draining <id>               drain ack, or a request refused mid-drain
+//! ```
+//!
+//! Compute payloads are `spargw-sink v1` blocks — the header line, `pair`
+//! rows with bit-exact hex f64 values, the `done` shard marker — plus one
+//! trailing `# cache …` comment line. The wire format **is** the sink
+//! format: rows stream back exactly as a batch run would write them, and
+//! the acceptance bit-identity check diffs the two directly.
+
+use crate::util::error::{Error, Result};
+use crate::{bail, ensure, format_err};
+
+/// A parsed request line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// Solve one pair `(i, j)` of the named dataset.
+    Solve { dataset: String, i: usize, j: usize },
+    /// Compute the full pairwise Gram over the named dataset.
+    Pairwise { dataset: String },
+    /// Report server counters, cache occupancy and latency metrics.
+    Status,
+    /// Begin the graceful drain.
+    Drain,
+}
+
+impl Request {
+    /// Parse one request line. Errors are single-line and name the
+    /// expected grammar — they go straight into an `err` response.
+    pub fn parse(line: &str) -> Result<Request> {
+        let mut toks = line.split_ascii_whitespace();
+        let verb = toks.next().ok_or_else(|| format_err!("empty request"))?;
+        let req = match verb {
+            "solve" => {
+                let dataset = toks
+                    .next()
+                    .ok_or_else(|| format_err!("solve expects: solve <dataset> <i> <j>"))?
+                    .to_string();
+                let i = parse_index(toks.next(), "i")?;
+                let j = parse_index(toks.next(), "j")?;
+                Request::Solve { dataset, i, j }
+            }
+            "pairwise" => {
+                let dataset = toks
+                    .next()
+                    .ok_or_else(|| format_err!("pairwise expects: pairwise <dataset>"))?
+                    .to_string();
+                Request::Pairwise { dataset }
+            }
+            "status" => Request::Status,
+            "drain" => Request::Drain,
+            other => bail!("unknown verb {other:?} (expected solve|pairwise|status|drain)"),
+        };
+        ensure!(
+            toks.next().is_none(),
+            "trailing tokens after a {verb:?} request"
+        );
+        Ok(req)
+    }
+}
+
+fn parse_index(tok: Option<&str>, name: &str) -> Result<usize> {
+    let tok = tok.ok_or_else(|| format_err!("solve expects: solve <dataset> <i> <j>"))?;
+    tok.parse::<usize>()
+        .map_err(|_| format_err!("solve index {name}={tok:?} is not an unsigned integer"))
+}
+
+/// Frame a successful response: the `ok` line plus exactly
+/// `payload.len()` payload lines, newline-terminated.
+pub fn ok_block(id: u64, payload: &[String]) -> String {
+    let body: usize = payload.iter().map(|l| l.len() + 1).sum();
+    let mut out = String::with_capacity(32 + body);
+    out.push_str(&format!("ok {id} lines={}\n", payload.len()));
+    for line in payload {
+        out.push_str(line);
+        out.push('\n');
+    }
+    out
+}
+
+/// Frame a failed request. The message is flattened to one line so the
+/// framing survives multi-line (wrapped) error chains.
+pub fn err_line(id: u64, err: &Error) -> String {
+    format!("err {id} {}\n", one_line(&format!("{err:#}")))
+}
+
+/// Refuse an admission because the queue is full.
+pub fn busy_line(id: u64, retry_after_ms: u64, depth: usize, capacity: usize) -> String {
+    format!("busy {id} retry-after-ms={retry_after_ms} queue={depth}/{capacity}\n")
+}
+
+/// Acknowledge a `drain`, or refuse a request that arrived mid-drain.
+pub fn draining_line(id: u64) -> String {
+    format!("draining {id}\n")
+}
+
+fn one_line(s: &str) -> String {
+    s.replace(['\n', '\r'], "; ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_verb() {
+        assert_eq!(
+            Request::parse("solve imdb-b 3 7").unwrap(),
+            Request::Solve { dataset: "imdb-b".to_string(), i: 3, j: 7 }
+        );
+        assert_eq!(
+            Request::parse("pairwise synthetic:12").unwrap(),
+            Request::Pairwise { dataset: "synthetic:12".to_string() }
+        );
+        assert_eq!(Request::parse("status").unwrap(), Request::Status);
+        assert_eq!(Request::parse("  drain  ").unwrap(), Request::Drain);
+    }
+
+    #[test]
+    fn rejects_malformed_requests_descriptively() {
+        let e = Request::parse("frobnicate").unwrap_err().to_string();
+        assert!(e.contains("unknown verb"), "{e}");
+        let e = Request::parse("solve imdb-b 3").unwrap_err().to_string();
+        assert!(e.contains("solve <dataset> <i> <j>"), "{e}");
+        let e = Request::parse("solve imdb-b 3 x").unwrap_err().to_string();
+        assert!(e.contains("not an unsigned integer"), "{e}");
+        let e = Request::parse("status extra").unwrap_err().to_string();
+        assert!(e.contains("trailing tokens"), "{e}");
+    }
+
+    #[test]
+    fn response_framing_is_line_exact() {
+        let block = ok_block(4, &["a".to_string(), "b".to_string()]);
+        assert_eq!(block, "ok 4 lines=2\na\nb\n");
+        assert_eq!(busy_line(5, 50, 8, 8), "busy 5 retry-after-ms=50 queue=8/8\n");
+        assert_eq!(draining_line(6), "draining 6\n");
+        let err = crate::format_err!("top\nand a second line");
+        let line = err_line(7, &err);
+        assert!(line.starts_with("err 7 "), "{line}");
+        assert_eq!(line.matches('\n').count(), 1, "{line:?}");
+    }
+}

@@ -1,0 +1,61 @@
+//! Dependency-free POSIX signal plumbing for the serve mode.
+//!
+//! The crate vendors no libc bindings, but std already links the
+//! platform libc — declaring `signal(2)` directly is enough to install
+//! an async-signal-safe handler. The handler does the only thing that is
+//! safe in that context: set one atomic flag. The executor polls the
+//! flag between jobs ([`shutdown_requested`]) and turns it into a
+//! graceful drain — stop admitting, finish in-flight work, report the
+//! drained counts, exit 0.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// POSIX signal numbers (stable across every Linux/BSD/macOS target the
+/// crate builds on; no libc crate to import them from).
+const SIGINT: i32 = 2;
+const SIGTERM: i32 = 15;
+
+extern "C" fn on_signal(_signum: i32) {
+    // Async-signal-safe: one atomic store, nothing else.
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Install the SIGTERM/SIGINT handlers. Idempotent; call once at serve
+/// start, before any request is admitted.
+#[cfg(unix)]
+pub fn install() {
+    extern "C" {
+        // `signal(2)` from the libc std already links. The handler
+        // travels as `usize` — function pointers and data pointers share
+        // a register class on every supported Unix ABI, and declaring
+        // the exact `sighandler_t` shape without libc would buy nothing.
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    let handler = on_signal as extern "C" fn(i32) as usize;
+    // SAFETY: `signal` is the libc function of that name; installing a
+    // handler that only stores an atomic flag is async-signal-safe, and
+    // replacing the default SIGTERM/SIGINT disposition is the entire
+    // point of serve-mode graceful drain.
+    unsafe {
+        signal(SIGTERM, handler);
+        signal(SIGINT, handler);
+    }
+}
+
+/// No signals to install off-Unix; the drain verb and EOF still work.
+#[cfg(not(unix))]
+pub fn install() {}
+
+/// True once SIGTERM/SIGINT was received (or a shutdown was requested
+/// programmatically). Sticky for the process lifetime.
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+/// What the signal handler does, callable from code: request a graceful
+/// shutdown of every serve loop in the process.
+pub fn request_shutdown() {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}

@@ -1,0 +1,245 @@
+//! Serve-mode integration tests: the newline-framed protocol end to end
+//! over in-process socket pairs — response framing, warm-cache behaviour
+//! across requests, bit-identity of streamed rows against a batch Gram
+//! run, and the graceful-drain contract (in-flight requests finish,
+//! post-drain requests are refused).
+
+#![cfg(unix)]
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::Shutdown;
+use std::os::unix::net::UnixStream;
+use std::sync::Arc;
+
+use spargw::coordinator::engine::{EngineConfig, PairwiseEngine};
+use spargw::coordinator::service::PairwiseConfig;
+use spargw::datasets::graphsets;
+use spargw::server::{serve_connection, serve_socket, ServeOptions, ServerState};
+
+const SEED: u64 = 11;
+
+/// Fast-but-nontrivial solver settings, the determinism suite's toy
+/// shape.
+fn config() -> PairwiseConfig {
+    let mut cfg = PairwiseConfig {
+        solver: "spar_gw".to_string(),
+        workers: 2,
+        seed: SEED,
+        ..Default::default()
+    };
+    cfg.spar.sample_size = 384;
+    cfg.spar.outer_iters = 4;
+    cfg.spar.inner_iters = 8;
+    cfg
+}
+
+/// Spawn a serve loop over one end of a socket pair; returns the client
+/// stream and the join handle yielding the connection's outcome.
+fn spawn_serve(
+    state: &Arc<ServerState>,
+) -> (UnixStream, std::thread::JoinHandle<spargw::server::ServeOutcome>) {
+    let (client, server_io) = UnixStream::pair().expect("socketpair");
+    let read_half = server_io.try_clone().expect("clone server stream");
+    let state = Arc::clone(state);
+    let handle = std::thread::spawn(move || {
+        serve_connection(&state, read_half, server_io).expect("serve connection")
+    });
+    (client, handle)
+}
+
+fn send(client: &UnixStream, line: &str) {
+    let mut w = client;
+    w.write_all(format!("{line}\n").as_bytes()).expect("send request");
+}
+
+/// Read one framed response: the status line plus, for `ok`, exactly the
+/// advertised payload lines.
+fn read_block(resp: &mut BufReader<UnixStream>) -> (String, Vec<String>) {
+    let mut head = String::new();
+    resp.read_line(&mut head).expect("response head");
+    let head = head.trim_end().to_string();
+    let mut payload = Vec::new();
+    if let Some(rest) = head.strip_prefix("ok ") {
+        let n: usize = rest
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("lines="))
+            .expect("lines= token")
+            .parse()
+            .expect("lines= count");
+        for _ in 0..n {
+            let mut line = String::new();
+            resp.read_line(&mut line).expect("payload line");
+            payload.push(line.trim_end().to_string());
+        }
+    }
+    (head, payload)
+}
+
+/// Extract `(i, j, value_bits)` from the `pair` rows of a payload.
+fn pair_rows(payload: &[String]) -> Vec<(usize, usize, u64)> {
+    payload
+        .iter()
+        .filter(|l| l.starts_with("pair "))
+        .map(|l| {
+            let t: Vec<&str> = l.split_whitespace().collect();
+            (
+                t[2].parse().expect("i"),
+                t[3].parse().expect("j"),
+                u64::from_str_radix(t[4], 16).expect("hex bits"),
+            )
+        })
+        .collect()
+}
+
+fn cache_line(payload: &[String]) -> &str {
+    payload
+        .iter()
+        .find(|l| l.starts_with("# cache "))
+        .expect("trailing # cache line")
+}
+
+#[test]
+fn serve_rounds_are_bit_identical_to_batch_and_second_round_is_warm() {
+    let cfg = config();
+    let state = Arc::new(ServerState::new(cfg.clone(), ServeOptions::default()));
+    let (client, handle) = spawn_serve(&state);
+    let mut resp = BufReader::new(client.try_clone().expect("clone client"));
+
+    // Round 1: cold — every structure is built.
+    send(&client, "pairwise synthetic:6");
+    let (ok1, block1) = read_block(&mut resp);
+    assert!(ok1.starts_with("ok 1 lines="), "{ok1}");
+    let c1 = cache_line(&block1);
+    assert!(c1.contains("structures=6"), "{c1}");
+    assert!(c1.contains("built=6"), "{c1}");
+    assert!(c1.contains("hits=0"), "{c1}");
+
+    // Round 2: identical request — served entirely from the warm cache
+    // (hits == structures, built == 0), rows byte-identical to round 1.
+    send(&client, "pairwise synthetic:6");
+    let (ok2, block2) = read_block(&mut resp);
+    assert!(ok2.starts_with("ok 2 lines="), "{ok2}");
+    let c2 = cache_line(&block2);
+    assert!(c2.contains("built=0"), "second round must rebuild nothing: {c2}");
+    assert!(c2.contains("hits=6"), "{c2}");
+
+    // Single-pair verb, indices deliberately reversed: the response must
+    // be the canonical (1, 4) row.
+    send(&client, "solve synthetic:6 4 1");
+    let (ok3, block3) = read_block(&mut resp);
+    assert!(ok3.starts_with("ok 3 lines="), "{ok3}");
+
+    send(&client, "status");
+    let (ok4, block4) = read_block(&mut resp);
+    assert!(ok4.starts_with("ok 4 lines="), "{ok4}");
+    assert!(
+        block4.iter().any(|l| l.starts_with("# server served=3 ")),
+        "{block4:?}"
+    );
+    assert!(block4.iter().any(|l| l.starts_with("# metrics ")), "{block4:?}");
+
+    // Drain, then one more request: refused, not queued.
+    send(&client, "drain");
+    let (ack, _) = read_block(&mut resp);
+    assert_eq!(ack, "draining 5");
+    send(&client, "pairwise synthetic:6");
+    let (refused, _) = read_block(&mut resp);
+    assert_eq!(refused, "draining 6");
+    client.shutdown(Shutdown::Write).expect("shutdown write");
+
+    let outcome = handle.join().expect("serve thread");
+    assert_eq!(outcome.served, 4);
+    assert_eq!(outcome.refused, 1);
+    assert_eq!(outcome.errors, 0);
+
+    // Bit-identity: every streamed row must carry exactly the bits a
+    // batch Gram run computes for the same config/seed/dataset.
+    let ds = graphsets::by_name("synthetic:6", SEED).expect("dataset");
+    let eng = PairwiseEngine::new(cfg, EngineConfig::default());
+    let g = eng.gram(&ds).expect("batch gram");
+    let rows1 = pair_rows(&block1);
+    assert_eq!(rows1.len(), 15, "6 graphs give 15 upper-triangular pairs");
+    for &(i, j, bits) in &rows1 {
+        assert_eq!(
+            bits,
+            g.distances[(i, j)].to_bits(),
+            "serve row ({i},{j}) diverged from batch"
+        );
+    }
+    assert_eq!(rows1, pair_rows(&block2), "warm round changed bits");
+    let rows3 = pair_rows(&block3);
+    assert_eq!(rows3, vec![(1, 4, g.distances[(1, 4)].to_bits())]);
+}
+
+#[test]
+fn drain_finishes_in_flight_and_refuses_new_requests() {
+    let state = Arc::new(ServerState::new(config(), ServeOptions::default()));
+    let (client, handle) = spawn_serve(&state);
+
+    // Pipeline everything without reading: a malformed request, a
+    // compute request, the drain, and a post-drain request. The reader
+    // admits strictly in order, so the compute job is in flight when the
+    // drain begins and the last request arrives after it.
+    (&client)
+        .write_all(b"bogus\npairwise synthetic:4\ndrain\npairwise synthetic:4\n")
+        .expect("send requests");
+    client.shutdown(Shutdown::Write).expect("shutdown write");
+
+    let mut all = String::new();
+    BufReader::new(client)
+        .read_to_string(&mut all)
+        .expect("read responses");
+    let outcome = handle.join().expect("serve thread");
+
+    assert_eq!(outcome.served, 1, "the in-flight request must finish\n{all}");
+    assert_eq!(outcome.refused, 1, "{all}");
+    assert_eq!(outcome.errors, 1, "{all}");
+    assert!(all.contains("err 1 "), "{all}");
+    // The admitted compute request completed despite the drain: its full
+    // sink block (rows + done marker) is on the wire.
+    assert!(all.contains("ok 2 lines="), "{all}");
+    assert!(all.contains("\ndone 0\n"), "{all}");
+    // Drain ack and the post-drain refusal.
+    assert!(all.contains("draining 3"), "{all}");
+    assert!(all.contains("draining 4"), "{all}");
+}
+
+#[test]
+fn socket_mode_serves_and_cleans_up() {
+    let sock = std::env::temp_dir().join(format!(
+        "spargw-serve-test-{}.sock",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&sock);
+    let state = Arc::new(ServerState::new(config(), ServeOptions::default()));
+    let handle = {
+        let state = Arc::clone(&state);
+        let sock = sock.clone();
+        std::thread::spawn(move || serve_socket(&state, &sock).expect("serve socket"))
+    };
+
+    // The listener binds asynchronously; retry the connect briefly.
+    let client = {
+        let mut tries = 0;
+        loop {
+            match UnixStream::connect(&sock) {
+                Ok(c) => break c,
+                Err(_) => {
+                    tries += 1;
+                    assert!(tries < 500, "socket never came up at {}", sock.display());
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+            }
+        }
+    };
+    (&client).write_all(b"status\ndrain\n").expect("send requests");
+    client.shutdown(Shutdown::Write).expect("shutdown write");
+    let mut all = String::new();
+    BufReader::new(client).read_to_string(&mut all).expect("read responses");
+
+    let outcome = handle.join().expect("socket serve thread");
+    assert_eq!(outcome.served, 1, "{all}");
+    assert!(all.contains("# server "), "{all}");
+    assert!(all.contains("draining 2"), "{all}");
+    assert!(!sock.exists(), "socket file must be removed after drain");
+}
