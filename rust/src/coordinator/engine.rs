@@ -328,6 +328,7 @@ impl PairwiseEngine {
         let mut metrics = MetricsRecorder::new();
         metrics.set_solver(solver.name());
         metrics.set_simd(simd::current().name());
+        metrics.set_numerics(simd::current_numerics().name());
         let mut computed_pairs = 0usize;
         let mut shards_run = 0usize;
         let mut shards_skipped = 0usize;
@@ -546,26 +547,32 @@ pub(crate) fn config_fingerprint(cfg: &PairwiseConfig, dataset: &GraphDataset) -
 /// The sink's header line: format version, run shape, and the config
 /// fingerprint, so a resumed run cannot silently merge rows from a
 /// different solver, dataset, seed, option set or shard layout. The
-/// `simd=` token is *informational*: it records which kernel backend
-/// produced the rows, but — like every other throughput knob (threads,
-/// workers, cache) — it is excluded from the resume compatibility check
-/// by [`header_without_simd`], because backends are bit-identical and a
-/// sink may legitimately resume on a different machine.
+/// `simd=` and `numerics=` tokens are *informational*: they record which
+/// kernel backend and numerics tier produced the rows, but — like every
+/// other throughput knob (threads, workers, cache) — they are excluded
+/// from the resume compatibility check by [`header_without_simd`].
+/// Backends are bit-identical, so a sink may legitimately resume on a
+/// different machine; the numerics tier *does* change bits, but a resume
+/// only skips finished shards verbatim (it never mixes tiers inside a
+/// shard), so a strict run may pick up where a fast run stopped — the
+/// header records per-run provenance, not a compatibility constraint.
 pub(crate) fn sink_header(solver: &str, n: usize, shards: usize, fingerprint: u64) -> String {
     format!(
         "# spargw-sink {SINK_VERSION} solver={solver} n={n} shards={shards} \
-         config={fingerprint:016x} simd={}",
-        simd::current().name()
+         config={fingerprint:016x} simd={} numerics={}",
+        simd::current().name(),
+        simd::current_numerics().name()
     )
 }
 
-/// A sink header with its informational `simd=` token removed — the
-/// normalized form compared on resume. Headers written before the token
-/// existed normalize to the same string, so old sinks stay resumable.
+/// A sink header with its informational `simd=` and `numerics=` tokens
+/// removed — the normalized form compared on resume. Headers written
+/// before either token existed normalize to the same string, so old
+/// sinks stay resumable.
 fn header_without_simd(header: &str) -> String {
     header
         .split_ascii_whitespace()
-        .filter(|t| !t.starts_with("simd="))
+        .filter(|t| !t.starts_with("simd=") && !t.starts_with("numerics="))
         .collect::<Vec<_>>()
         .join(" ")
 }
@@ -1044,6 +1051,48 @@ mod tests {
         // normalizes identically.
         assert_eq!(
             header_without_simd("# spargw-sink v1 solver=x n=4 shards=2 config=0 simd=avx2"),
+            "# spargw-sink v1 solver=x n=4 shards=2 config=0"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_accepts_a_different_numerics_policy() {
+        // The numerics= token is informational like simd=: a strict-mode
+        // run must resume a sink whose shards were written under fast
+        // (finished shards are kept verbatim, never recomputed, so tiers
+        // are never mixed within a shard).
+        use crate::kernel::simd::{with_numerics_override, NumericsPolicy};
+        let dir = std::env::temp_dir().join("spargw_engine_numerics_token_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sink.txt");
+        std::fs::remove_file(&path).ok();
+        let ds = tiny_dataset();
+        let mk = |resume| {
+            let opts = EngineConfig {
+                shards: 2,
+                only_shard: Some(0),
+                sink: Some(path.clone()),
+                resume,
+                ..Default::default()
+            };
+            PairwiseEngine::new(tiny_cfg(3), opts)
+        };
+        with_numerics_override(NumericsPolicy::Fast, || {
+            mk(false).gram(&ds).unwrap();
+        });
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            text.lines().next().unwrap().contains("numerics=fast"),
+            "fast run must stamp its tier in the header: {text}"
+        );
+        let g = with_numerics_override(NumericsPolicy::Strict, || mk(true).gram(&ds).unwrap());
+        assert_eq!(g.shards_skipped, 1, "fast-written sink must resume under strict");
+        // Both informational tokens strip together.
+        assert_eq!(
+            header_without_simd(
+                "# spargw-sink v1 solver=x n=4 shards=2 config=0 simd=avx2 numerics=fast"
+            ),
             "# spargw-sink v1 solver=x n=4 shards=2 config=0"
         );
         std::fs::remove_file(&path).ok();

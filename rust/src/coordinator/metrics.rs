@@ -16,6 +16,9 @@ pub struct MetricsRecorder {
     shards: Option<(usize, usize)>,
     /// Active SIMD kernel backend name (`kernel::simd::current().name()`).
     simd: Option<String>,
+    /// Active numerics policy name
+    /// (`kernel::simd::current_numerics().name()`).
+    numerics: Option<String>,
     /// Accumulated named solve-phase seconds (insertion order preserved:
     /// the order the first report named its phases in).
     phases: Vec<(&'static str, f64)>,
@@ -56,6 +59,18 @@ impl MetricsRecorder {
     /// Resolved SIMD backend name when tagged by the engine/service.
     pub fn simd(&self) -> Option<&str> {
         self.simd.as_deref()
+    }
+
+    /// Tag this recorder with the resolved numerics policy, so run logs
+    /// record which tier (strict bit-exact vs fast FMA/fused) produced
+    /// the numbers.
+    pub fn set_numerics(&mut self, policy: impl Into<String>) {
+        self.numerics = Some(policy.into());
+    }
+
+    /// Resolved numerics-policy name when tagged by the engine/service.
+    pub fn numerics(&self) -> Option<&str> {
+        self.numerics.as_deref()
     }
 
     /// Record one job executed on its own (the server's per-request
@@ -144,6 +159,10 @@ impl MetricsRecorder {
             Some(name) => format!("simd={name} "),
             None => String::new(),
         };
+        let numerics = match &self.numerics {
+            Some(name) => format!("numerics={name} "),
+            None => String::new(),
+        };
         let phases = if self.phases.is_empty() {
             String::new()
         } else {
@@ -170,7 +189,7 @@ impl MetricsRecorder {
             )
         };
         format!(
-            "{solver}{shards}{simd}jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s{queue}{phases}",
+            "{solver}{shards}{simd}{numerics}jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s{queue}{phases}",
             self.count(),
             self.mean(),
             percentile_of_sorted(&sorted, 0.5),
@@ -291,6 +310,17 @@ mod tests {
         m.record(0.1);
         assert_eq!(m.simd(), Some("avx2"));
         assert!(m.summary().contains("simd=avx2 "), "{}", m.summary());
+    }
+
+    #[test]
+    fn numerics_tag_appears_in_summary() {
+        let mut m = MetricsRecorder::new();
+        m.set_solver("spar_gw");
+        m.set_simd("avx2");
+        m.set_numerics("fast");
+        m.record(0.1);
+        assert_eq!(m.numerics(), Some("fast"));
+        assert!(m.summary().contains("simd=avx2 numerics=fast "), "{}", m.summary());
     }
 
     #[test]

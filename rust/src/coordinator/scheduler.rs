@@ -68,9 +68,10 @@ impl<R> Slots<R> {
 /// are reserved from the pool while the batch runs. The caller's pool
 /// thread-limit override propagates into every worker, so a limit set
 /// around a batch governs the kernels its jobs run. The caller's SIMD
-/// backend override ([`crate::kernel::simd`]) propagates the same way —
-/// resolved once at submit, re-applied on every worker — so a backend
-/// pinned around a batch governs every kernel its jobs dispatch.
+/// backend and numerics-policy overrides ([`crate::kernel::simd`])
+/// propagate the same way — resolved once at submit, re-applied on every
+/// worker — so a backend or policy pinned around a batch governs every
+/// kernel its jobs dispatch.
 pub fn run_jobs_with<S, R, I, F>(n_jobs: usize, workers: usize, init: I, job: F) -> Vec<R>
 where
     R: Send,
@@ -85,23 +86,26 @@ where
     let slots = Slots::new(n_jobs);
     let limit = pool::current_thread_limit();
     let backend = crate::kernel::simd::current();
+    let numerics = crate::kernel::simd::current_numerics();
     let _quota = pool::pool().reserve(workers.saturating_sub(1));
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| {
                 pool::with_thread_limit(limit, || {
                     crate::kernel::simd::with_backend_override(backend, || {
-                        let mut state = init();
-                        loop {
-                            let i = next.fetch_add(1, Ordering::Relaxed);
-                            if i >= n_jobs {
-                                break;
+                        crate::kernel::simd::with_numerics_override(numerics, || {
+                            let mut state = init();
+                            loop {
+                                let i = next.fetch_add(1, Ordering::Relaxed);
+                                if i >= n_jobs {
+                                    break;
+                                }
+                                let r = job(&mut state, i);
+                                // SAFETY: index i was claimed exactly
+                                // once above.
+                                unsafe { slots.put(i, r) };
                             }
-                            let r = job(&mut state, i);
-                            // SAFETY: index i was claimed exactly once
-                            // above.
-                            unsafe { slots.put(i, r) };
-                        }
+                        })
                     })
                 })
             });

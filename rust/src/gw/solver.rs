@@ -603,6 +603,19 @@ impl SolverRegistry {
         }
     }
 
+    /// The numerics tiers the named solver runs under, for display.
+    /// Every solver supports both policies (the tier lives in the shared
+    /// kernel layer, not in any engine); the SparCore family additionally
+    /// gets the fused spmv+scaling sweeps under fast, so its tag calls
+    /// that out. Unknown names show the shared-kernel default.
+    pub fn numerics(name: &str) -> &'static str {
+        if Self::supports_f32(name) {
+            "strict, fast (fused sweeps)"
+        } else {
+            "strict, fast"
+        }
+    }
+
     /// Build a solver by name with library defaults plus `opts` overrides.
     pub fn build(name: &str, opts: &BTreeMap<String, String>) -> Result<Box<dyn GwSolver>> {
         Self::build_with_base(name, opts, &SolverBase::default())

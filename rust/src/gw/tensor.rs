@@ -195,6 +195,7 @@ impl SparseCostContext {
     fn fill_cost_rows<S: Scalar>(
         &self,
         backend: simd::Backend,
+        policy: simd::NumericsPolicy,
         t_vals: &[S],
         out: &mut [S],
         base: usize,
@@ -203,7 +204,7 @@ impl SparseCostContext {
         for (off, o) in out.iter_mut().enumerate() {
             let l = base + off;
             let row = &self.l_g[l * s..(l + 1) * s];
-            *o = S::from_f64(S::gathered_dot_backend(backend, row, t_vals));
+            *o = S::from_f64(S::gathered_dot_backend(backend, policy, row, t_vals));
         }
     }
 
@@ -227,7 +228,7 @@ impl SparseCostContext {
             out.len(),
             self.s
         );
-        self.fill_cost_rows(simd::current(), t_vals, out, 0);
+        self.fill_cost_rows(simd::current(), simd::current_numerics(), t_vals, out, 0);
     }
 
     /// Row-chunked parallel cost product on the crate-wide persistent
@@ -245,8 +246,9 @@ impl SparseCostContext {
         }
         let min_rows = MIN_GATHERED_ENTRIES_PER_CHUNK.div_ceil(self.s);
         let backend = simd::current();
+        let policy = simd::current_numerics();
         pool().for_each_chunk_mut(out, min_rows, |chunk, range, _| {
-            self.fill_cost_rows(backend, t_vals, chunk, range.start);
+            self.fill_cost_rows(backend, policy, t_vals, chunk, range.start);
         });
     }
 

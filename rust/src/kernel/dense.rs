@@ -30,10 +30,11 @@
 //! reductions, the axpy micro-kernels) live in [`super::simd`] — the
 //! portable bodies there are the canonical lane schedules, and the
 //! arch backends reproduce them bit-for-bit. Each entry point here
-//! resolves [`simd::current`](super::simd::current) **once, before
-//! submitting pool chunks**, and captures the `Copy` backend value into
-//! the chunk closures (pool workers never see the submitting thread's
-//! override — the capture-at-submit rule).
+//! resolves [`simd::current`](super::simd::current) and
+//! [`simd::current_numerics`](super::simd::current_numerics) **once,
+//! before submitting pool chunks**, and captures the `Copy` backend and
+//! policy values into the chunk closures (pool workers never see the
+//! submitting thread's overrides — the capture-at-submit rule).
 //!
 //! Numerical contract: instantiated at `S = f64`, every function here
 //! reproduces the historical `Mat` loops operation-for-operation
@@ -57,7 +58,7 @@ pub const MATMUL_BK: usize = 64;
 #[inline]
 pub fn dot<S: Scalar>(a: &[S], b: &[S]) -> S::Accum {
     debug_assert_eq!(a.len(), b.len());
-    simd::dot(simd::current(), a, b)
+    simd::dot(simd::current(), simd::current_numerics(), a, b)
 }
 
 /// Cache-blocked ikj matmul: `out[m×n] = a[m×k] · b[k×n]`, all row-major.
@@ -75,6 +76,7 @@ pub fn matmul_into<S: Scalar>(m: usize, k: usize, n: usize, a: &[S], b: &[S], ou
     // Per-row work is k·n mul-adds; chunks carry at least PAR_GRAIN of it.
     let min_rows = PAR_GRAIN.div_ceil((k * n).max(1));
     let backend = simd::current();
+    let policy = simd::current_numerics();
     pool().for_each_row_chunk_mut(out, n, min_rows, |orows, range, _| {
         for kb in (0..k).step_by(MATMUL_BK) {
             let kend = (kb + MATMUL_BK).min(k);
@@ -87,7 +89,7 @@ pub fn matmul_into<S: Scalar>(m: usize, k: usize, n: usize, a: &[S], b: &[S], ou
                         continue;
                     }
                     let brow = &b[kk * n..(kk + 1) * n];
-                    simd::axpy(backend, aik, brow, orow);
+                    simd::axpy(backend, policy, aik, brow, orow);
                 }
             }
         }
@@ -103,9 +105,10 @@ pub fn matvec_into<S: Scalar>(rows: usize, cols: usize, a: &[S], x: &[S], y: &mu
     debug_assert_eq!(y.len(), rows);
     let min_rows = PAR_GRAIN.div_ceil(cols.max(1));
     let backend = simd::current();
+    let policy = simd::current_numerics();
     pool().for_each_chunk_mut(y, min_rows, |ychunk, range, _| {
         for (o, i) in ychunk.iter_mut().zip(range) {
-            *o = S::narrow(simd::dot(backend, &a[i * cols..(i + 1) * cols], x));
+            *o = S::narrow(simd::dot(backend, policy, &a[i * cols..(i + 1) * cols], x));
         }
     });
 }
@@ -121,6 +124,7 @@ pub fn matvec_t_into<S: Scalar>(rows: usize, cols: usize, a: &[S], x: &[S], y: &
     debug_assert_eq!(y.len(), cols);
     let min_cols = PAR_GRAIN.div_ceil(rows.max(1));
     let backend = simd::current();
+    let policy = simd::current_numerics();
     pool().for_each_chunk_mut(y, min_cols, |ychunk, range, _| {
         for v in ychunk.iter_mut() {
             *v = S::ZERO;
@@ -130,7 +134,7 @@ pub fn matvec_t_into<S: Scalar>(rows: usize, cols: usize, a: &[S], x: &[S], y: &
                 continue;
             }
             let arow = &a[i * cols + range.start..i * cols + range.end];
-            simd::axpy(backend, xi, arow, ychunk);
+            simd::axpy(backend, policy, xi, arow, ychunk);
         }
     });
 }
@@ -156,6 +160,7 @@ pub fn matvec_t_wide<S: Scalar>(
     use crate::runtime::pool::SendPtr;
     let pw = SendPtr(wide.as_mut_ptr());
     let backend = simd::current();
+    let policy = simd::current_numerics();
     pool().for_each_chunk_mut(y, PAR_GRAIN.div_ceil(rows.max(1)), |ychunk, range, _| {
         // SAFETY: chunk ranges are disjoint; `wide` is sliced at exactly
         // the same ranges as `y`.
@@ -168,7 +173,7 @@ pub fn matvec_t_wide<S: Scalar>(
                 continue;
             }
             let arow = &a[i * cols + range.start..i * cols + range.end];
-            simd::axpy_wide(backend, xi, arow, wchunk);
+            simd::axpy_wide(backend, policy, xi, arow, wchunk);
         }
         for (o, &w) in ychunk.iter_mut().zip(wchunk.iter()) {
             *o = S::from_f64(w);
@@ -212,7 +217,7 @@ pub fn gather_into<S: Scalar>(
 /// backend.
 #[inline]
 pub fn gathered_dot_f64(row: &[f32], t: &[f64]) -> f64 {
-    simd::gathered_dot_f64(simd::current(), row, t)
+    simd::gathered_dot_f64(simd::current(), simd::current_numerics(), row, t)
 }
 
 /// Lane count of the f32 gathered dot.
@@ -229,7 +234,7 @@ pub const F32_BLOCK: usize = 4096;
 /// backend.
 #[inline]
 pub fn gathered_dot_f32(row: &[f32], t: &[f32]) -> f64 {
-    simd::gathered_dot_f32(simd::current(), row, t)
+    simd::gathered_dot_f32(simd::current(), simd::current_numerics(), row, t)
 }
 
 #[cfg(test)]

@@ -60,6 +60,30 @@ pub fn pow_update_into<S: Scalar>(target: &[S], denom: &[S], expo: S, out: &mut 
     });
 }
 
+/// Fast-tier fused pass 1 of a log-domain Sinkhorn row update: writes
+/// `z[j] = (g[j] − row[j]) · inv_eps` **and** tracks the running maximum
+/// in the same traversal. The strict path makes two passes over
+/// `(g, row)` and divides by ε in each; the fast path hoists `1/ε` into
+/// a reciprocal multiply and leaves the shifted exponents in `z` so pass
+/// 2 is one vectorized exp-and-accumulate sweep over contiguous scratch
+/// ([`simd::fastmath::exp_shifted_sum`]). `−∞` entries of `g` pass
+/// through as `−∞` (zero mass downstream). Returns `−∞` iff every entry
+/// is `−∞`.
+#[inline]
+pub fn fused_scaled_diff_max(g: &[f64], row: &[f64], inv_eps: f64, z: &mut [f64]) -> f64 {
+    debug_assert_eq!(g.len(), row.len());
+    debug_assert_eq!(g.len(), z.len());
+    let mut mx = f64::NEG_INFINITY;
+    for ((zv, &gj), &cj) in z.iter_mut().zip(g).zip(row) {
+        let val = (gj - cj) * inv_eps;
+        *zv = val;
+        if val > mx {
+            mx = val;
+        }
+    }
+    mx
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +109,31 @@ mod tests {
         let mut out = [0.0f64; 4];
         pow_update_into(&target, &denom, 0.5, &mut out);
         assert_eq!(out, [0.5, 0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn fused_scaled_diff_max_matches_two_pass_form() {
+        let g = [0.5f64, f64::NEG_INFINITY, -0.25, 1.0];
+        let row = [1.0f64, 0.0, 2.0, 0.5];
+        let inv_eps = 1.0 / 0.05;
+        let mut z = [0.0f64; 4];
+        let mx = fused_scaled_diff_max(&g, &row, inv_eps, &mut z);
+        let mut want_mx = f64::NEG_INFINITY;
+        for j in 0..4 {
+            let v = (g[j] - row[j]) * inv_eps;
+            assert_eq!(z[j].to_bits(), v.to_bits(), "z[{j}]");
+            if v > want_mx {
+                want_mx = v;
+            }
+        }
+        assert_eq!(mx.to_bits(), want_mx.to_bits());
+        // All −∞ → −∞ sentinel (empty support row).
+        let all_dead = [f64::NEG_INFINITY; 2];
+        let mut z2 = [0.0f64; 2];
+        assert_eq!(
+            fused_scaled_diff_max(&all_dead, &[0.0, 1.0], inv_eps, &mut z2),
+            f64::NEG_INFINITY
+        );
     }
 
     #[test]

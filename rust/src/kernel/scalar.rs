@@ -120,6 +120,11 @@ pub trait Scalar:
     fn powf(self, e: Self) -> Self;
     /// Neither NaN nor ±∞.
     fn is_finite(self) -> bool;
+    /// Correctly-rounded fused multiply–add `self · b + c` at storage
+    /// width — the fast-tier kernel primitive (`NumericsPolicy::Fast`).
+    /// Rust guarantees a single rounding on every platform, so the fast
+    /// bodies built on this are bit-identical across backends.
+    fn mul_add(self, b: Self, c: Self) -> Self;
 
     /// Row reduction of the gathered s×s cost block:
     /// `Σ_l row[l]·t[l]` with f64 resolution. The cost block is stored as
@@ -128,12 +133,18 @@ pub trait Scalar:
     /// [`kernel::dense`](super::dense) for the two instances.
     fn gathered_dot(row: &[f32], t: &[Self]) -> f64;
 
-    /// [`Scalar::gathered_dot`] with the SIMD backend passed explicitly
-    /// — the capture-at-submit form for call sites inside pool chunks
-    /// (`gw::tensor::fill_cost_rows` resolves
-    /// [`simd::current`](super::simd::current) once on the submitting
-    /// thread and threads the value through here).
-    fn gathered_dot_backend(backend: super::simd::Backend, row: &[f32], t: &[Self]) -> f64;
+    /// [`Scalar::gathered_dot`] with the SIMD backend and numerics
+    /// policy passed explicitly — the capture-at-submit form for call
+    /// sites inside pool chunks (`gw::tensor::fill_cost_rows` resolves
+    /// [`simd::current`](super::simd::current) and
+    /// [`simd::current_numerics`](super::simd::current_numerics) once on
+    /// the submitting thread and threads the values through here).
+    fn gathered_dot_backend(
+        backend: super::simd::Backend,
+        policy: super::simd::NumericsPolicy,
+        row: &[f32],
+        t: &[Self],
+    ) -> f64;
 }
 
 impl Scalar for f64 {
@@ -188,13 +199,22 @@ impl Scalar for f64 {
     fn is_finite(self) -> bool {
         f64::is_finite(self)
     }
+    #[inline(always)]
+    fn mul_add(self, b: Self, c: Self) -> Self {
+        f64::mul_add(self, b, c)
+    }
     #[inline]
     fn gathered_dot(row: &[f32], t: &[Self]) -> f64 {
         super::dense::gathered_dot_f64(row, t)
     }
     #[inline]
-    fn gathered_dot_backend(backend: super::simd::Backend, row: &[f32], t: &[Self]) -> f64 {
-        super::simd::gathered_dot_f64(backend, row, t)
+    fn gathered_dot_backend(
+        backend: super::simd::Backend,
+        policy: super::simd::NumericsPolicy,
+        row: &[f32],
+        t: &[Self],
+    ) -> f64 {
+        super::simd::gathered_dot_f64(backend, policy, row, t)
     }
 }
 
@@ -250,13 +270,22 @@ impl Scalar for f32 {
     fn is_finite(self) -> bool {
         f32::is_finite(self)
     }
+    #[inline(always)]
+    fn mul_add(self, b: Self, c: Self) -> Self {
+        f32::mul_add(self, b, c)
+    }
     #[inline]
     fn gathered_dot(row: &[f32], t: &[Self]) -> f64 {
         super::dense::gathered_dot_f32(row, t)
     }
     #[inline]
-    fn gathered_dot_backend(backend: super::simd::Backend, row: &[f32], t: &[Self]) -> f64 {
-        super::simd::gathered_dot_f32(backend, row, t)
+    fn gathered_dot_backend(
+        backend: super::simd::Backend,
+        policy: super::simd::NumericsPolicy,
+        row: &[f32],
+        t: &[Self],
+    ) -> f64 {
+        super::simd::gathered_dot_f32(backend, policy, row, t)
     }
 }
 

@@ -1,0 +1,595 @@
+//! Vectorized transcendental kernels for the fast numerics tier.
+//!
+//! The only inhabitant today is a polynomial `exp` (Cephes `exp.c`
+//! rational approximation, ≤2 ulp against `f64::exp` across
+//! `[-708, 708]`) with three bodies that produce **identical bits**:
+//!
+//! * a portable scalar body built on `f64::mul_add` (correctly rounded
+//!   everywhere), which defines the canonical result;
+//! * an AVX2+FMA 4-lane body (`_mm256_fmadd_pd`);
+//! * a NEON 2-lane body (`vfmaq_f64`).
+//!
+//! Every floating-point operation appears in the same order with the
+//! same rounding in all three, so the dispatched slice helpers
+//! ([`exp_shifted_sum`], [`exp_shifted_into`]) are bit-identical across
+//! backends — the same contract the strict kernels satisfy, which is
+//! what keeps `NumericsPolicy::Fast` deterministic at any backend ×
+//! width combination.
+//!
+//! ## Algorithm
+//!
+//! `exp(x) = 2^n · exp(r)` with `n = round(x·log2 e)` (round-to-nearest
+//! via the `1.5·2^52` magic-number trick — the integer lands in the low
+//! mantissa bits) and `r = x − n·ln2` computed with a two-term split of
+//! `ln 2` for extended precision. `exp(r)` on `|r| ≤ ln2/2` uses the
+//! Cephes (2,3) rational form `1 + 2·r·P(r²) / (Q(r²) − r·P(r²))`. The
+//! `2^n` scale is applied as two exact power-of-two multiplies
+//! (`2^⌊n/2⌋ · 2^(n−⌊n/2⌋)`) so the extremes `n = 1024` (just under the
+//! overflow cutoff) and `n = −1022` stay representable.
+//!
+//! ## Domain guards
+//!
+//! * `x > 709.782712893384` (`ln` of max finite) → `+∞`
+//! * `x < −708.396418532264…` (`ln` of min *normal*) → `0.0` — inputs
+//!   that would produce denormal results flush to zero; the Sinkhorn
+//!   callers treat anything below `exp(−708)` as dead mass anyway
+//! * `NaN` → the input `NaN`; `±0` → `1.0`; `−∞` → `0.0`; `+∞` → `+∞`
+
+use super::Backend;
+
+/// Inputs above this return `+∞` (≈ `ln(f64::MAX)`).
+pub const EXP_HI: f64 = 709.782712893384;
+/// Inputs below this flush to `0.0` (≈ `ln(f64::MIN_POSITIVE)`).
+pub const EXP_LO: f64 = -708.396418532264106224;
+
+/// Cephes `exp.c` coefficients (preserved verbatim, hence the extra
+/// digits) plus the round-to-nearest magic constant.
+#[allow(clippy::excessive_precision)]
+mod cephes {
+    /// `1.5·2^52` — adding this to `|v| < 2^51` rounds `v` to the
+    /// nearest integer (ties to even) and parks it in the low mantissa
+    /// bits.
+    pub const ROUND_MAGIC: f64 = 6755399441055744.0;
+    pub const LOG2_E: f64 = std::f64::consts::LOG2_E;
+    /// High half of `ln 2` (exactly representable, 21 trailing zero
+    /// bits) …
+    pub const LN2_HI: f64 = 6.93145751953125e-1;
+    /// … and the residual `ln 2 − LN2_HI`.
+    pub const LN2_LO: f64 = 1.42860682030941723212e-6;
+    pub const P0: f64 = 1.26177193074810590878e-4;
+    pub const P1: f64 = 3.02994407707441961300e-2;
+    pub const P2: f64 = 9.99999999999999999910e-1;
+    pub const Q0: f64 = 3.00198505138664455042e-6;
+    pub const Q1: f64 = 2.52448340349684104192e-3;
+    pub const Q2: f64 = 2.27265548208155028766e-1;
+    pub const Q3: f64 = 2.0;
+}
+
+use cephes::*;
+
+/// Portable scalar `exp` — the canonical fast-tier bits. Built entirely
+/// on `f64::mul_add` so the AVX2/NEON lane bodies reproduce it exactly.
+#[inline]
+pub fn exp(x: f64) -> f64 {
+    if x.is_nan() {
+        return x;
+    }
+    if x > EXP_HI {
+        return f64::INFINITY;
+    }
+    if x < EXP_LO {
+        return 0.0;
+    }
+    let t = x.mul_add(LOG2_E, ROUND_MAGIC);
+    let n = t - ROUND_MAGIC;
+    // Low mantissa bits of `t` hold round(x·log2 e) in two's complement
+    // (|n| ≤ 1024 ≪ 2^31, so the low dword is the full integer).
+    let k = t.to_bits() as u32 as i32;
+    let r = n.mul_add(-LN2_HI, x);
+    let r = n.mul_add(-LN2_LO, r);
+    let rr = r * r;
+    let mut p = P0;
+    p = p.mul_add(rr, P1);
+    p = p.mul_add(rr, P2);
+    let px = r * p;
+    let mut q = Q0;
+    q = q.mul_add(rr, Q1);
+    q = q.mul_add(rr, Q2);
+    q = q.mul_add(rr, Q3);
+    let e = 2.0 * px / (q - px) + 1.0;
+    // Scale by 2^k in two exact halves so k = 1024 (x near EXP_HI) and
+    // k = −1022 (x near EXP_LO) stay inside the exponent range.
+    let k1 = k >> 1;
+    let k2 = k - k1;
+    let s1 = f64::from_bits(((1023 + k1) as u64) << 52);
+    let s2 = f64::from_bits(((1023 + k2) as u64) << 52);
+    e * s1 * s2
+}
+
+/// Portable `Σ_j exp(z[j] − shift)` — 4 independent accumulator lanes
+/// (the crate's canonical f64 reduction schedule), left-associative
+/// fold, sequential tail.
+#[inline]
+pub fn exp_shifted_sum_portable(z: &[f64], shift: f64) -> f64 {
+    let n = z.len();
+    let chunks = n / 4;
+    let mut acc = [0.0f64; 4];
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += exp(z[i] - shift);
+        acc[1] += exp(z[i + 1] - shift);
+        acc[2] += exp(z[i + 2] - shift);
+        acc[3] += exp(z[i + 3] - shift);
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..n {
+        s += exp(z[i] - shift);
+    }
+    s
+}
+
+/// Portable `out[j] = exp(z[j] − shift)`.
+#[inline]
+pub fn exp_shifted_into_portable(z: &[f64], shift: f64, out: &mut [f64]) {
+    debug_assert_eq!(z.len(), out.len());
+    for (o, &zv) in out.iter_mut().zip(z) {
+        *o = exp(zv - shift);
+    }
+}
+
+/// Portable `acc[j] += exp(z[j])` — the exp-and-accumulate sweep of the
+/// fused column LSE (elementwise, so trivially bit-identical across
+/// backends).
+#[inline]
+pub fn exp_accumulate_portable(z: &[f64], acc: &mut [f64]) {
+    debug_assert_eq!(z.len(), acc.len());
+    for (o, &zv) in acc.iter_mut().zip(z) {
+        *o += exp(zv);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86_lanes {
+    use super::*;
+    use core::arch::x86_64::*;
+
+    /// 4-lane AVX2+FMA body of [`exp`](super::exp) — same operation
+    /// sequence, guards applied by blend instead of early return.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 *and* FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn exp4(x: __m256d) -> __m256d {
+        let magic = _mm256_set1_pd(ROUND_MAGIC);
+        let t = _mm256_fmadd_pd(x, _mm256_set1_pd(LOG2_E), magic);
+        let n = _mm256_sub_pd(t, magic);
+        let r = _mm256_fmadd_pd(n, _mm256_set1_pd(-LN2_HI), x);
+        let r = _mm256_fmadd_pd(n, _mm256_set1_pd(-LN2_LO), r);
+        let rr = _mm256_mul_pd(r, r);
+        let mut p = _mm256_set1_pd(P0);
+        p = _mm256_fmadd_pd(p, rr, _mm256_set1_pd(P1));
+        p = _mm256_fmadd_pd(p, rr, _mm256_set1_pd(P2));
+        let px = _mm256_mul_pd(r, p);
+        let mut q = _mm256_set1_pd(Q0);
+        q = _mm256_fmadd_pd(q, rr, _mm256_set1_pd(Q1));
+        q = _mm256_fmadd_pd(q, rr, _mm256_set1_pd(Q2));
+        q = _mm256_fmadd_pd(q, rr, _mm256_set1_pd(Q3));
+        let e = _mm256_add_pd(
+            _mm256_div_pd(_mm256_mul_pd(_mm256_set1_pd(2.0), px), _mm256_sub_pd(q, px)),
+            _mm256_set1_pd(1.0),
+        );
+        // k sits in the low dword of each 64-bit lane of t's bits; the
+        // 52-bit left shift only reads bits 0..11, so the garbage in the
+        // odd dwords after the 32-bit integer ops never matters.
+        let vk = _mm256_castpd_si256(t);
+        let k1 = _mm256_srai_epi32(vk, 1);
+        let k2 = _mm256_sub_epi32(vk, k1);
+        let bias = _mm256_set1_epi32(1023);
+        let s1 = _mm256_castsi256_pd(_mm256_slli_epi64(_mm256_add_epi32(k1, bias), 52));
+        let s2 = _mm256_castsi256_pd(_mm256_slli_epi64(_mm256_add_epi32(k2, bias), 52));
+        let scaled = _mm256_mul_pd(_mm256_mul_pd(e, s1), s2);
+        let hi = _mm256_cmp_pd(x, _mm256_set1_pd(EXP_HI), _CMP_GT_OQ);
+        let lo = _mm256_cmp_pd(x, _mm256_set1_pd(EXP_LO), _CMP_LT_OQ);
+        let unord = _mm256_cmp_pd(x, x, _CMP_UNORD_Q);
+        let mut out = _mm256_blendv_pd(scaled, _mm256_set1_pd(f64::INFINITY), hi);
+        out = _mm256_blendv_pd(out, _mm256_setzero_pd(), lo);
+        _mm256_blendv_pd(out, x, unord)
+    }
+
+    /// AVX2 [`exp_shifted_sum_portable`](super::exp_shifted_sum_portable)
+    /// — one 4-lane accumulator, same fold order, scalar-`exp` tail.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 *and* FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn exp_shifted_sum(z: &[f64], shift: f64) -> f64 {
+        let n = z.len();
+        let chunks = n / 4;
+        let vs = _mm256_set1_pd(shift);
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let vz = _mm256_loadu_pd(z.as_ptr().add(c * 4));
+            acc = _mm256_add_pd(acc, exp4(_mm256_sub_pd(vz, vs)));
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for i in chunks * 4..n {
+            s += super::exp(z[i] - shift);
+        }
+        s
+    }
+
+    /// AVX2 [`exp_shifted_into_portable`](super::exp_shifted_into_portable).
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 *and* FMA. Panics if the
+    /// slices have different lengths.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn exp_shifted_into(z: &[f64], shift: f64, out: &mut [f64]) {
+        assert_eq!(z.len(), out.len());
+        let n = z.len();
+        let chunks = n / 4;
+        let vs = _mm256_set1_pd(shift);
+        for c in 0..chunks {
+            let i = c * 4;
+            let vz = _mm256_loadu_pd(z.as_ptr().add(i));
+            _mm256_storeu_pd(out.as_mut_ptr().add(i), exp4(_mm256_sub_pd(vz, vs)));
+        }
+        for i in chunks * 4..n {
+            out[i] = super::exp(z[i] - shift);
+        }
+    }
+
+    /// AVX2 [`exp_accumulate_portable`](super::exp_accumulate_portable).
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 *and* FMA. Panics if the
+    /// slices have different lengths.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn exp_accumulate(z: &[f64], acc: &mut [f64]) {
+        assert_eq!(z.len(), acc.len());
+        let n = z.len();
+        let chunks = n / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            let va = _mm256_loadu_pd(acc.as_ptr().add(i));
+            let ve = exp4(_mm256_loadu_pd(z.as_ptr().add(i)));
+            _mm256_storeu_pd(acc.as_mut_ptr().add(i), _mm256_add_pd(va, ve));
+        }
+        for i in chunks * 4..n {
+            acc[i] += super::exp(z[i]);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon_lanes {
+    use super::*;
+    use core::arch::aarch64::*;
+
+    /// 2-lane NEON body of [`exp`](super::exp) — same operation
+    /// sequence, guards applied by bit-select instead of early return.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn exp2_lanes(x: float64x2_t) -> float64x2_t {
+        let magic = vdupq_n_f64(ROUND_MAGIC);
+        let t = vfmaq_f64(magic, x, vdupq_n_f64(LOG2_E));
+        let n = vsubq_f64(t, magic);
+        let r = vfmaq_f64(x, n, vdupq_n_f64(-LN2_HI));
+        let r = vfmaq_f64(r, n, vdupq_n_f64(-LN2_LO));
+        let rr = vmulq_f64(r, r);
+        let mut p = vdupq_n_f64(P0);
+        p = vfmaq_f64(vdupq_n_f64(P1), p, rr);
+        p = vfmaq_f64(vdupq_n_f64(P2), p, rr);
+        let px = vmulq_f64(r, p);
+        let mut q = vdupq_n_f64(Q0);
+        q = vfmaq_f64(vdupq_n_f64(Q1), q, rr);
+        q = vfmaq_f64(vdupq_n_f64(Q2), q, rr);
+        q = vfmaq_f64(vdupq_n_f64(Q3), q, rr);
+        let e = vaddq_f64(
+            vdivq_f64(vmulq_f64(vdupq_n_f64(2.0), px), vsubq_f64(q, px)),
+            vdupq_n_f64(1.0),
+        );
+        // Same low-dword trick as the AVX2 body: the 52-bit shift only
+        // reads bits 0..11 of each 64-bit lane.
+        let vk = vreinterpretq_s32_f64(t);
+        let k1 = vshrq_n_s32(vk, 1);
+        let k2 = vsubq_s32(vk, k1);
+        let bias = vdupq_n_s32(1023);
+        let s1 =
+            vreinterpretq_f64_s64(vshlq_n_s64(vreinterpretq_s64_s32(vaddq_s32(k1, bias)), 52));
+        let s2 =
+            vreinterpretq_f64_s64(vshlq_n_s64(vreinterpretq_s64_s32(vaddq_s32(k2, bias)), 52));
+        let scaled = vmulq_f64(vmulq_f64(e, s1), s2);
+        let hi = vcgtq_f64(x, vdupq_n_f64(EXP_HI));
+        let lo = vcltq_f64(x, vdupq_n_f64(EXP_LO));
+        let ord = vceqq_f64(x, x);
+        let mut out = vbslq_f64(hi, vdupq_n_f64(f64::INFINITY), scaled);
+        out = vbslq_f64(lo, vdupq_n_f64(0.0), out);
+        vbslq_f64(ord, out, x)
+    }
+
+    /// NEON [`exp_shifted_sum_portable`](super::exp_shifted_sum_portable)
+    /// — two 2-lane accumulators carrying (s0,s1)/(s2,s3), same fold
+    /// order, scalar-`exp` tail.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn exp_shifted_sum(z: &[f64], shift: f64) -> f64 {
+        let n = z.len();
+        let chunks = n / 4;
+        let vs = vdupq_n_f64(shift);
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for k in 0..chunks {
+            let i = k * 4;
+            acc01 = vaddq_f64(
+                acc01,
+                exp2_lanes(vsubq_f64(vld1q_f64(z.as_ptr().add(i)), vs)),
+            );
+            acc23 = vaddq_f64(
+                acc23,
+                exp2_lanes(vsubq_f64(vld1q_f64(z.as_ptr().add(i + 2)), vs)),
+            );
+        }
+        let mut s = vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01);
+        s += vgetq_lane_f64::<0>(acc23);
+        s += vgetq_lane_f64::<1>(acc23);
+        for i in chunks * 4..n {
+            s += super::exp(z[i] - shift);
+        }
+        s
+    }
+
+    /// NEON [`exp_shifted_into_portable`](super::exp_shifted_into_portable).
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports NEON. Panics if the slices
+    /// have different lengths.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn exp_shifted_into(z: &[f64], shift: f64, out: &mut [f64]) {
+        assert_eq!(z.len(), out.len());
+        let n = z.len();
+        let chunks = n / 2;
+        let vs = vdupq_n_f64(shift);
+        for c in 0..chunks {
+            let i = c * 2;
+            vst1q_f64(
+                out.as_mut_ptr().add(i),
+                exp2_lanes(vsubq_f64(vld1q_f64(z.as_ptr().add(i)), vs)),
+            );
+        }
+        for i in chunks * 2..n {
+            out[i] = super::exp(z[i] - shift);
+        }
+    }
+
+    /// NEON [`exp_accumulate_portable`](super::exp_accumulate_portable).
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports NEON. Panics if the slices
+    /// have different lengths.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn exp_accumulate(z: &[f64], acc: &mut [f64]) {
+        assert_eq!(z.len(), acc.len());
+        let n = z.len();
+        let chunks = n / 2;
+        for c in 0..chunks {
+            let i = c * 2;
+            let va = vld1q_f64(acc.as_ptr().add(i));
+            let ve = exp2_lanes(vld1q_f64(z.as_ptr().add(i)));
+            vst1q_f64(acc.as_mut_ptr().add(i), vaddq_f64(va, ve));
+        }
+        for i in chunks * 2..n {
+            acc[i] += super::exp(z[i]);
+        }
+    }
+}
+
+/// Dispatched `Σ_j exp(z[j] − shift)` — bit-identical on every backend
+/// (the lane bodies reproduce the portable `mul_add` bits exactly).
+/// AVX2 without an FMA unit falls back to the portable body, same bits.
+#[inline]
+pub fn exp_shifted_sum(backend: Backend, z: &[f64], shift: f64) -> f64 {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: AVX2 and FMA were runtime-detected.
+        Backend::Avx2 if super::fma_ok() => unsafe { x86_lanes::exp_shifted_sum(z, shift) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON was runtime-detected by the dispatch layer.
+        Backend::Neon => unsafe { neon_lanes::exp_shifted_sum(z, shift) },
+        _ => exp_shifted_sum_portable(z, shift),
+    }
+}
+
+/// Dispatched `out[j] = exp(z[j] − shift)` — bit-identical on every
+/// backend. Panics if the slices have different lengths.
+#[inline]
+pub fn exp_shifted_into(backend: Backend, z: &[f64], shift: f64, out: &mut [f64]) {
+    assert_eq!(z.len(), out.len());
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: AVX2 and FMA were runtime-detected.
+        Backend::Avx2 if super::fma_ok() => unsafe { x86_lanes::exp_shifted_into(z, shift, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON was runtime-detected by the dispatch layer.
+        Backend::Neon => unsafe { neon_lanes::exp_shifted_into(z, shift, out) },
+        _ => exp_shifted_into_portable(z, shift, out),
+    }
+}
+
+/// Dispatched `acc[j] += exp(z[j])` — bit-identical on every backend.
+/// Panics if the slices have different lengths.
+#[inline]
+pub fn exp_accumulate(backend: Backend, z: &[f64], acc: &mut [f64]) {
+    assert_eq!(z.len(), acc.len());
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: AVX2 and FMA were runtime-detected.
+        Backend::Avx2 if super::fma_ok() => unsafe { x86_lanes::exp_accumulate(z, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON was runtime-detected by the dispatch layer.
+        Backend::Neon => unsafe { neon_lanes::exp_accumulate(z, acc) },
+        _ => exp_accumulate_portable(z, acc),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Bit distance between two finite same-sign doubles.
+    fn ulp_diff(a: f64, b: f64) -> u64 {
+        if a.to_bits() == b.to_bits() {
+            return 0;
+        }
+        if a.is_nan() || b.is_nan() || a.is_sign_positive() != b.is_sign_positive() {
+            return u64::MAX;
+        }
+        (a.to_bits() as i64).abs_diff(b.to_bits() as i64)
+    }
+
+    #[test]
+    fn exp_matches_std_within_2_ulp_across_domain() {
+        let steps = 200_000u32;
+        let span = 1416.0; // [-708, 708]
+        for i in 0..=steps {
+            let x = -708.0 + f64::from(i) * (span / f64::from(steps));
+            let got = exp(x);
+            let want = x.exp();
+            assert!(
+                ulp_diff(got, want) <= 2,
+                "x={x}: got {got:e} want {want:e} ({} ulp)",
+                ulp_diff(got, want)
+            );
+        }
+    }
+
+    #[test]
+    fn exp_matches_std_on_sinkhorn_scale_inputs() {
+        // The fused Sinkhorn path feeds (cost-like)·(1/eps) values,
+        // typically in [-80, 0]; sweep a dense non-grid pattern there.
+        let mut state = 0x243f_6a88_85a3_08d3u64; // deterministic LCG
+        for _ in 0..100_000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let u = (state >> 11) as f64 / (1u64 << 53) as f64; // [0,1)
+            let x = -80.0 + 80.0 * u;
+            let got = exp(x);
+            let want = x.exp();
+            assert!(ulp_diff(got, want) <= 2, "x={x}: got {got:e} want {want:e}");
+        }
+    }
+
+    #[test]
+    fn exp_guards() {
+        assert!(exp(f64::NAN).is_nan());
+        assert_eq!(exp(f64::INFINITY), f64::INFINITY);
+        assert_eq!(exp(f64::NEG_INFINITY), 0.0);
+        assert_eq!(exp(0.0).to_bits(), 1.0f64.to_bits());
+        assert_eq!(exp(-0.0).to_bits(), 1.0f64.to_bits());
+        // Denormal inputs behave like 0.
+        assert_eq!(exp(5e-324), 1.0);
+        assert_eq!(exp(-5e-324), 1.0);
+        // Overflow cutoff: finite at EXP_HI, +inf above it.
+        assert!(exp(EXP_HI).is_finite());
+        assert_eq!(exp(EXP_HI + 1e-9), f64::INFINITY);
+        assert_eq!(exp(710.0), f64::INFINITY);
+        // Underflow cutoff: positive at EXP_LO, flushed to zero below.
+        assert!(exp(EXP_LO) > 0.0);
+        assert_eq!(exp(EXP_LO - 1e-9), 0.0);
+        assert_eq!(exp(-1000.0), 0.0);
+    }
+
+    #[test]
+    fn exp_extremes_stay_within_2_ulp() {
+        for &x in &[
+            EXP_HI,
+            EXP_HI - 1e-6,
+            EXP_LO,
+            EXP_LO + 1e-6,
+            708.0,
+            -708.0,
+            0.5 * std::f64::consts::LN_2,
+            -0.5 * std::f64::consts::LN_2,
+            1.0,
+            -1.0,
+            1e-300,
+            -1e-300,
+        ] {
+            let got = exp(x);
+            let want = x.exp();
+            assert!(ulp_diff(got, want) <= 2, "x={x}: got {got:e} want {want:e}");
+        }
+    }
+
+    #[test]
+    fn helpers_bitwise_match_portable_on_every_backend() {
+        // Lane-boundary lengths around the 4-lane (AVX2/portable) and
+        // 2-lane (NEON) schedules.
+        let lengths = [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 100];
+        for &n in &lengths {
+            let z: Vec<f64> = (0..n).map(|i| -70.0 + i as f64 * 1.37).collect();
+            let shift = 2.25;
+            let want_sum = exp_shifted_sum_portable(&z, shift);
+            let mut want_out = vec![0.0f64; n];
+            exp_shifted_into_portable(&z, shift, &mut want_out);
+            for b in [Backend::Scalar, Backend::Avx2, Backend::Neon] {
+                if !b.available() {
+                    continue;
+                }
+                let got_sum = exp_shifted_sum(b, &z, shift);
+                assert_eq!(
+                    got_sum.to_bits(),
+                    want_sum.to_bits(),
+                    "sum mismatch on {} at n={n}",
+                    b.name()
+                );
+                let mut got_out = vec![0.0f64; n];
+                exp_shifted_into(b, &z, shift, &mut got_out);
+                for j in 0..n {
+                    assert_eq!(
+                        got_out[j].to_bits(),
+                        want_out[j].to_bits(),
+                        "into mismatch on {} at n={n}, j={j}",
+                        b.name()
+                    );
+                }
+                let mut want_acc: Vec<f64> = (0..n).map(|i| i as f64 * 0.5).collect();
+                exp_accumulate_portable(&z, &mut want_acc);
+                let mut got_acc: Vec<f64> = (0..n).map(|i| i as f64 * 0.5).collect();
+                exp_accumulate(b, &z, &mut got_acc);
+                for j in 0..n {
+                    assert_eq!(
+                        got_acc[j].to_bits(),
+                        want_acc[j].to_bits(),
+                        "accumulate mismatch on {} at n={n}, j={j}",
+                        b.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn helpers_handle_infinite_shifts_and_entries() {
+        // g = −∞ entries appear in the log-domain Sinkhorn scratch; the
+        // helpers must map them to exact 0 on every backend.
+        let z = [f64::NEG_INFINITY, 0.0, -3.0, f64::NEG_INFINITY, 1.0];
+        for b in [Backend::Scalar, Backend::Avx2, Backend::Neon] {
+            if !b.available() {
+                continue;
+            }
+            let mut out = [0.0f64; 5];
+            exp_shifted_into(b, &z, 1.0, &mut out);
+            assert_eq!(out[0], 0.0);
+            assert_eq!(out[3], 0.0);
+            assert!(out[1] > 0.0 && out[2] > 0.0 && out[4] > 0.0);
+            let s = exp_shifted_sum(b, &z, 1.0);
+            assert_eq!(s.to_bits(), exp_shifted_sum_portable(&z, 1.0).to_bits());
+        }
+    }
+}

@@ -41,6 +41,23 @@
 //! closures** (see `dense::matmul_into` et al.). A kernel body must
 //! never call [`current`] from inside a chunk.
 //!
+//! ## Numerics policy
+//!
+//! Orthogonal to the backend, [`NumericsPolicy`] selects between the
+//! default `strict` tier (the bit-exact lane schedules above — no FMA,
+//! the determinism contract) and the opt-in `fast` tier, which fuses
+//! multiply–add pairs with correctly-rounded FMA (`mul_add` /
+//! `_mm256_fmadd_pd` / `vfmaq_f64`) and routes the entropic-OT `exp`
+//! sweeps through [`fastmath`]. Fast mode keeps its *own* determinism
+//! contract: because `mul_add` is correctly rounded on every platform
+//! and the fast bodies reuse the strict lane↔accumulator schedules,
+//! fast results are bit-identical across backends, widths and thread
+//! counts — they are just different (slightly more accurate) bits than
+//! strict. Resolution mirrors the backend: [`configure_numerics`]
+//! (`--numerics`) beats `SPARGW_NUMERICS` beats the `strict` default,
+//! and [`current_numerics`] / [`with_numerics_override`] follow the
+//! same capture-at-submit rule.
+//!
 //! ## Safety
 //!
 //! The arch modules are `unsafe` (intrinsics + `target_feature`); every
@@ -50,6 +67,7 @@
 //! back to [`portable`] on any violation — malformed sparse structure
 //! panics via the portable bounds checks instead of becoming UB.
 
+pub mod fastmath;
 #[cfg(target_arch = "aarch64")]
 pub mod neon;
 pub mod portable;
@@ -230,6 +248,119 @@ pub fn with_backend_override<T>(backend: Backend, f: impl FnOnce() -> T) -> T {
     let _restore = Restore(prev);
     OVERRIDE.with(|o| o.set(Some(backend)));
     f()
+}
+
+/// The crate-wide numerics tier. `Copy` so kernel entry points can
+/// capture it into pool chunk closures alongside the [`Backend`]
+/// (the capture-at-submit rule applies identically).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NumericsPolicy {
+    /// The default: every kernel reproduces the canonical scalar lane
+    /// schedule bit-for-bit — no FMA, no reassociation, no fast `exp`.
+    Strict,
+    /// Opt-in relaxed tier: fused multiply–add kernel bodies and the
+    /// polynomial [`fastmath`] `exp`. Still deterministic (bit-identical
+    /// across backends, widths and threads *within* fast mode), but its
+    /// bits differ from strict by ≤ a few ulp per kernel.
+    Fast,
+}
+
+impl NumericsPolicy {
+    /// Canonical spelling (CLI/env/metrics/sink-header token).
+    pub fn name(self) -> &'static str {
+        match self {
+            NumericsPolicy::Strict => "strict",
+            NumericsPolicy::Fast => "fast",
+        }
+    }
+
+    /// Parse a CLI/env spelling; errors name the valid values.
+    pub fn parse(s: &str) -> Result<NumericsPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "strict" => Ok(NumericsPolicy::Strict),
+            "fast" => Ok(NumericsPolicy::Fast),
+            _ => Err(format_err!(
+                "unknown numerics policy {s:?} (valid values: strict, fast)"
+            )),
+        }
+    }
+}
+
+/// CLI-configured numerics request: 0 = unset, 1 = strict, 2 = fast.
+static NUMERICS_CONFIGURED: AtomicU8 = AtomicU8::new(0);
+static NUMERICS_RESOLVED: OnceLock<NumericsPolicy> = OnceLock::new();
+
+/// Set the numerics policy from the CLI (`--numerics NAME`). Both
+/// policies are available on every CPU (fast falls back to the fused
+/// portable bodies where no FMA unit exists, with identical bits), so
+/// unlike [`configure`] this cannot fail. Takes effect only if called
+/// before the first kernel dispatch.
+pub fn configure_numerics(policy: NumericsPolicy) {
+    let code = match policy {
+        NumericsPolicy::Strict => 1,
+        NumericsPolicy::Fast => 2,
+    };
+    NUMERICS_CONFIGURED.store(code, Ordering::SeqCst);
+}
+
+fn resolve_numerics() -> NumericsPolicy {
+    match NUMERICS_CONFIGURED.load(Ordering::SeqCst) {
+        1 => return NumericsPolicy::Strict,
+        2 => return NumericsPolicy::Fast,
+        _ => {}
+    }
+    if let Ok(v) = std::env::var("SPARGW_NUMERICS") {
+        return NumericsPolicy::parse(&v)
+            .unwrap_or_else(|e| panic!("SPARGW_NUMERICS={v:?}: {e}"));
+    }
+    NumericsPolicy::Strict
+}
+
+/// The process-wide resolved numerics policy (resolution happens on
+/// first call, in `--numerics` > `SPARGW_NUMERICS` > `strict` order).
+pub fn resolved_numerics() -> NumericsPolicy {
+    *NUMERICS_RESOLVED.get_or_init(resolve_numerics)
+}
+
+thread_local! {
+    /// Per-thread numerics override (the testing/benching knob — the
+    /// `strict_vs_fast` bench matrix and `tests/numerics.rs` sweep
+    /// policies inside one process with this).
+    static NUMERICS_OVERRIDE: std::cell::Cell<Option<NumericsPolicy>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// The numerics policy kernel entry points should use **on this thread,
+/// right now**: the thread-local override if installed, else the
+/// process-wide resolved policy. Like [`current`], entry points call
+/// this once and capture the value before submitting pool chunks.
+#[inline]
+pub fn current_numerics() -> NumericsPolicy {
+    NUMERICS_OVERRIDE.with(|o| o.get()).unwrap_or_else(resolved_numerics)
+}
+
+/// Run `f` with this thread's numerics policy forced to `policy`.
+/// Nests and restores on unwind, like [`with_backend_override`].
+pub fn with_numerics_override<T>(policy: NumericsPolicy, f: impl FnOnce() -> T) -> T {
+    struct Restore(Option<NumericsPolicy>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            NUMERICS_OVERRIDE.with(|o| o.set(self.0));
+        }
+    }
+    let prev = NUMERICS_OVERRIDE.with(|o| o.get());
+    let _restore = Restore(prev);
+    NUMERICS_OVERRIDE.with(|o| o.set(Some(policy)));
+    f()
+}
+
+/// Whether the FMA unit backing the AVX2 fast bodies is present. The
+/// fused portable bodies produce the same bits (Rust's `mul_add` is
+/// correctly rounded), so a missing FMA unit only costs speed.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn fma_ok() -> bool {
+    std::arch::is_x86_feature_detected!("fma")
 }
 
 // ---------------------------------------------------------------------
@@ -458,6 +589,77 @@ mod avx2 {
         // epi32 gather round-trip.
         portable::spmv_t_gather_dot(es, rows_e, vals, x)
     }
+
+    // Fast-tier bridges: routed only for `Backend::Avx2` *and* a
+    // detected FMA unit (see `fma_ok`), so the `avx2,fma`
+    // target-feature twins are sound to call.
+
+    #[inline]
+    pub(super) fn dot_fast<S: Scalar>(a: &[S], b: &[S]) -> S::Accum {
+        if let (Some(a64), Some(b64)) = (as_f64(a), as_f64(b)) {
+            // SAFETY: AVX2 and FMA were runtime-detected (module
+            // contract above).
+            return S::accum_from_f64(unsafe { x86::dot_f64_fast(a64, b64) });
+        }
+        if let (Some(a32), Some(b32)) = (as_f32(a), as_f32(b)) {
+            // SAFETY: AVX2 and FMA were runtime-detected (module
+            // contract above).
+            return S::accum_from_f64(unsafe { x86::dot_f32_fast(a32, b32) });
+        }
+        portable::dot_fast(a, b)
+    }
+
+    #[inline]
+    pub(super) fn gathered_dot_f64_fast(row: &[f32], t: &[f64]) -> f64 {
+        // SAFETY: AVX2 and FMA were runtime-detected (module contract
+        // above).
+        unsafe { x86::gathered_dot_f64_fast(row, t) }
+    }
+
+    #[inline]
+    pub(super) fn gathered_dot_f32_fast(row: &[f32], t: &[f32]) -> f64 {
+        // SAFETY: AVX2 and FMA were runtime-detected (module contract
+        // above).
+        unsafe { x86::gathered_dot_f32_fast(row, t) }
+    }
+
+    #[inline]
+    pub(super) fn axpy_fast<S: Scalar>(alpha: S, x: &[S], y: &mut [S]) {
+        if let Some(x64) = as_f64(x) {
+            if let Some(y64) = as_f64_mut(y) {
+                // SAFETY: AVX2 and FMA were runtime-detected (module
+                // contract above).
+                unsafe { x86::axpy_f64_fast(alpha.to_f64(), x64, y64) };
+                return;
+            }
+        }
+        if let Some(x32) = as_f32(x) {
+            if let Some(y32) = as_f32_mut(y) {
+                // SAFETY: AVX2 and FMA were runtime-detected (module
+                // contract above).
+                unsafe { x86::axpy_f32_fast(alpha.to_f64() as f32, x32, y32) };
+                return;
+            }
+        }
+        portable::axpy_fast(alpha, x, y);
+    }
+
+    #[inline]
+    pub(super) fn axpy_wide_fast<S: Scalar>(alpha: S, x: &[S], y: &mut [f64]) {
+        if let Some(x64) = as_f64(x) {
+            // SAFETY: AVX2 and FMA were runtime-detected (module
+            // contract above).
+            unsafe { x86::axpy_f64_fast(alpha.to_f64(), x64, y) };
+            return;
+        }
+        if let Some(x32) = as_f32(x) {
+            // SAFETY: AVX2 and FMA were runtime-detected (module
+            // contract above).
+            unsafe { x86::axpy_wide_f32_fast(alpha.to_f64() as f32, x32, y) };
+            return;
+        }
+        portable::axpy_wide_fast(alpha, x, y);
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -528,21 +730,95 @@ mod neon_bridge {
         }
         portable::axpy_wide(alpha, x, y);
     }
+
+    // Fast-tier bridges (FMA is baseline on aarch64 — `vfmaq` needs no
+    // extra feature beyond NEON itself).
+
+    #[inline]
+    pub(super) fn dot_fast<S: Scalar>(a: &[S], b: &[S]) -> S::Accum {
+        if let (Some(a64), Some(b64)) = (as_f64(a), as_f64(b)) {
+            // SAFETY: NEON was runtime-detected (module contract above).
+            return S::accum_from_f64(unsafe { neon::dot_f64_fast(a64, b64) });
+        }
+        if let (Some(a32), Some(b32)) = (as_f32(a), as_f32(b)) {
+            // SAFETY: NEON was runtime-detected (module contract above).
+            return S::accum_from_f64(unsafe { neon::dot_f32_fast(a32, b32) });
+        }
+        portable::dot_fast(a, b)
+    }
+
+    #[inline]
+    pub(super) fn gathered_dot_f64_fast(row: &[f32], t: &[f64]) -> f64 {
+        // SAFETY: NEON was runtime-detected (module contract above).
+        unsafe { neon::gathered_dot_f64_fast(row, t) }
+    }
+
+    #[inline]
+    pub(super) fn gathered_dot_f32_fast(row: &[f32], t: &[f32]) -> f64 {
+        // SAFETY: NEON was runtime-detected (module contract above).
+        unsafe { neon::gathered_dot_f32_fast(row, t) }
+    }
+
+    #[inline]
+    pub(super) fn axpy_fast<S: Scalar>(alpha: S, x: &[S], y: &mut [S]) {
+        if let Some(x64) = as_f64(x) {
+            if let Some(y64) = as_f64_mut(y) {
+                // SAFETY: NEON was runtime-detected (module contract above).
+                unsafe { neon::axpy_f64_fast(alpha.to_f64(), x64, y64) };
+                return;
+            }
+        }
+        if let Some(x32) = as_f32(x) {
+            if let Some(y32) = as_f32_mut(y) {
+                // SAFETY: NEON was runtime-detected (module contract above).
+                unsafe { neon::axpy_f32_fast(alpha.to_f64() as f32, x32, y32) };
+                return;
+            }
+        }
+        portable::axpy_fast(alpha, x, y);
+    }
+
+    #[inline]
+    pub(super) fn axpy_wide_fast<S: Scalar>(alpha: S, x: &[S], y: &mut [f64]) {
+        if let Some(x64) = as_f64(x) {
+            // SAFETY: NEON was runtime-detected (module contract above).
+            unsafe { neon::axpy_f64_fast(alpha.to_f64(), x64, y) };
+            return;
+        }
+        if let Some(x32) = as_f32(x) {
+            // SAFETY: NEON was runtime-detected (module contract above).
+            unsafe { neon::axpy_wide_f32_fast(alpha.to_f64() as f32, x32, y) };
+            return;
+        }
+        portable::axpy_wide_fast(alpha, x, y);
+    }
 }
 
 // ---------------------------------------------------------------------
 // Dispatched kernel entry points.
 //
-// Each takes the backend explicitly (capture-at-submit: the kernel
-// layer resolves `current()` once on the submitting thread). Arms for
-// other architectures are compiled out; anything unmatched — including
-// a `Backend` value for a foreign arch, which `configure`/`resolve`
-// never produce — takes the portable body.
+// Each takes the backend — and, for the FMA-capable kernels, the
+// numerics policy — explicitly (capture-at-submit: the kernel layer
+// resolves `current()` / `current_numerics()` once on the submitting
+// thread). Arms for other architectures are compiled out; anything
+// unmatched — including a `Backend` value for a foreign arch, which
+// `configure`/`resolve` never produce — takes the portable body. In
+// fast mode the AVX2 arm additionally requires a detected FMA unit,
+// falling back to the fused portable body (identical bits) without one.
 // ---------------------------------------------------------------------
 
-/// Dispatched [`portable::dot`].
+/// Dispatched [`portable::dot`] / [`portable::dot_fast`].
 #[inline]
-pub fn dot<S: Scalar>(backend: Backend, a: &[S], b: &[S]) -> S::Accum {
+pub fn dot<S: Scalar>(backend: Backend, policy: NumericsPolicy, a: &[S], b: &[S]) -> S::Accum {
+    if policy == NumericsPolicy::Fast {
+        return match backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if fma_ok() => avx2::dot_fast(a, b),
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => neon_bridge::dot_fast(a, b),
+            _ => portable::dot_fast(a, b),
+        };
+    }
     match backend {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => avx2::dot(a, b),
@@ -552,9 +828,24 @@ pub fn dot<S: Scalar>(backend: Backend, a: &[S], b: &[S]) -> S::Accum {
     }
 }
 
-/// Dispatched [`portable::gathered_dot_f64`].
+/// Dispatched [`portable::gathered_dot_f64`] /
+/// [`portable::gathered_dot_f64_fast`].
 #[inline]
-pub fn gathered_dot_f64(backend: Backend, row: &[f32], t: &[f64]) -> f64 {
+pub fn gathered_dot_f64(
+    backend: Backend,
+    policy: NumericsPolicy,
+    row: &[f32],
+    t: &[f64],
+) -> f64 {
+    if policy == NumericsPolicy::Fast {
+        return match backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if fma_ok() => avx2::gathered_dot_f64_fast(row, t),
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => neon_bridge::gathered_dot_f64_fast(row, t),
+            _ => portable::gathered_dot_f64_fast(row, t),
+        };
+    }
     match backend {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => avx2::gathered_dot_f64(row, t),
@@ -564,9 +855,24 @@ pub fn gathered_dot_f64(backend: Backend, row: &[f32], t: &[f64]) -> f64 {
     }
 }
 
-/// Dispatched [`portable::gathered_dot_f32`].
+/// Dispatched [`portable::gathered_dot_f32`] /
+/// [`portable::gathered_dot_f32_fast`].
 #[inline]
-pub fn gathered_dot_f32(backend: Backend, row: &[f32], t: &[f32]) -> f64 {
+pub fn gathered_dot_f32(
+    backend: Backend,
+    policy: NumericsPolicy,
+    row: &[f32],
+    t: &[f32],
+) -> f64 {
+    if policy == NumericsPolicy::Fast {
+        return match backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if fma_ok() => avx2::gathered_dot_f32_fast(row, t),
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => neon_bridge::gathered_dot_f32_fast(row, t),
+            _ => portable::gathered_dot_f32_fast(row, t),
+        };
+    }
     match backend {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => avx2::gathered_dot_f32(row, t),
@@ -576,9 +882,19 @@ pub fn gathered_dot_f32(backend: Backend, row: &[f32], t: &[f32]) -> f64 {
     }
 }
 
-/// Dispatched [`portable::axpy`] — the blocked-matmul micro-kernel.
+/// Dispatched [`portable::axpy`] / [`portable::axpy_fast`] — the
+/// blocked-matmul micro-kernel.
 #[inline]
-pub fn axpy<S: Scalar>(backend: Backend, alpha: S, x: &[S], y: &mut [S]) {
+pub fn axpy<S: Scalar>(backend: Backend, policy: NumericsPolicy, alpha: S, x: &[S], y: &mut [S]) {
+    if policy == NumericsPolicy::Fast {
+        return match backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if fma_ok() => avx2::axpy_fast(alpha, x, y),
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => neon_bridge::axpy_fast(alpha, x, y),
+            _ => portable::axpy_fast(alpha, x, y),
+        };
+    }
     match backend {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => avx2::axpy(alpha, x, y),
@@ -588,9 +904,24 @@ pub fn axpy<S: Scalar>(backend: Backend, alpha: S, x: &[S], y: &mut [S]) {
     }
 }
 
-/// Dispatched [`portable::axpy_wide`].
+/// Dispatched [`portable::axpy_wide`] / [`portable::axpy_wide_fast`].
 #[inline]
-pub fn axpy_wide<S: Scalar>(backend: Backend, alpha: S, x: &[S], y: &mut [f64]) {
+pub fn axpy_wide<S: Scalar>(
+    backend: Backend,
+    policy: NumericsPolicy,
+    alpha: S,
+    x: &[S],
+    y: &mut [f64],
+) {
+    if policy == NumericsPolicy::Fast {
+        return match backend {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if fma_ok() => avx2::axpy_wide_fast(alpha, x, y),
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => neon_bridge::axpy_wide_fast(alpha, x, y),
+            _ => portable::axpy_wide_fast(alpha, x, y),
+        };
+    }
     match backend {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => avx2::axpy_wide(alpha, x, y),
@@ -620,15 +951,23 @@ pub fn pow_update<S: Scalar>(backend: Backend, target: &[S], denom: &[S], expo: 
     }
 }
 
-/// Dispatched [`portable::spmv_gather_dot`] (one CSR row of `A·x`).
+/// Dispatched [`portable::spmv_gather_dot`] /
+/// [`portable::spmv_gather_dot_fast`] (one CSR row of `A·x`). The fast
+/// body is the sequential fused-scalar loop on *every* backend — the
+/// adds must stay sequential, so there is no vector twin to dispatch to;
+/// the FMA fusion itself is the win.
 #[inline]
 pub fn spmv_gather_dot<S: Scalar>(
     backend: Backend,
+    policy: NumericsPolicy,
     cols: &[u32],
     srcs: &[u32],
     vals: &[S],
     x: &[S],
 ) -> S::Accum {
+    if policy == NumericsPolicy::Fast {
+        return portable::spmv_gather_dot_fast(cols, srcs, vals, x);
+    }
     match backend {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => avx2::spmv_gather_dot(cols, srcs, vals, x),
@@ -636,16 +975,21 @@ pub fn spmv_gather_dot<S: Scalar>(
     }
 }
 
-/// Dispatched [`portable::spmv_t_gather_dot`] (one CSC column of
-/// `Aᵀ·x`).
+/// Dispatched [`portable::spmv_t_gather_dot`] /
+/// [`portable::spmv_t_gather_dot_fast`] (one CSC column of `Aᵀ·x`).
+/// Like [`spmv_gather_dot`], fast mode is backend-independent.
 #[inline]
 pub fn spmv_t_gather_dot<S: Scalar>(
     backend: Backend,
+    policy: NumericsPolicy,
     es: &[u32],
     rows_e: &[u32],
     vals: &[S],
     x: &[S],
 ) -> S {
+    if policy == NumericsPolicy::Fast {
+        return portable::spmv_t_gather_dot_fast(es, rows_e, vals, x);
+    }
     match backend {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => avx2::spmv_t_gather_dot(es, rows_e, vals, x),
@@ -706,12 +1050,40 @@ mod tests {
     }
 
     #[test]
+    fn numerics_parse_roundtrip() {
+        for p in [NumericsPolicy::Strict, NumericsPolicy::Fast] {
+            assert_eq!(NumericsPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(NumericsPolicy::parse("FAST").unwrap(), NumericsPolicy::Fast);
+        let msg = format!("{}", NumericsPolicy::parse("loose").unwrap_err());
+        assert!(msg.contains("strict"), "{msg}");
+        assert!(msg.contains("fast"), "{msg}");
+    }
+
+    #[test]
+    fn numerics_override_nests_and_restores() {
+        let base = current_numerics();
+        with_numerics_override(NumericsPolicy::Fast, || {
+            assert_eq!(current_numerics(), NumericsPolicy::Fast);
+            with_numerics_override(NumericsPolicy::Strict, || {
+                assert_eq!(current_numerics(), NumericsPolicy::Strict);
+            });
+            assert_eq!(current_numerics(), NumericsPolicy::Fast);
+        });
+        assert_eq!(current_numerics(), base);
+    }
+
+    #[test]
     fn dispatch_at_scalar_is_the_portable_body() {
         let a = data_f64(100, 1);
         let b = data_f64(100, 2);
         assert_eq!(
-            dot::<f64>(Backend::Scalar, &a, &b).to_bits(),
+            dot::<f64>(Backend::Scalar, NumericsPolicy::Strict, &a, &b).to_bits(),
             portable::dot(&a, &b).to_bits()
+        );
+        assert_eq!(
+            dot::<f64>(Backend::Scalar, NumericsPolicy::Fast, &a, &b).to_bits(),
+            portable::dot_fast(&a, &b).to_bits()
         );
     }
 
@@ -720,16 +1092,28 @@ mod tests {
         let best = detect();
         for &n in &LENGTHS {
             let (a, b) = (data_f64(n, 1), data_f64(n, 2));
+            let (a32, b32) = (data_f32(n, 3), data_f32(n, 4));
             assert_eq!(
-                dot::<f64>(best, &a, &b).to_bits(),
+                dot::<f64>(best, NumericsPolicy::Strict, &a, &b).to_bits(),
                 portable::dot(&a, &b).to_bits(),
                 "dot f64 n={n}"
             );
-            let (a32, b32) = (data_f32(n, 3), data_f32(n, 4));
             assert_eq!(
-                dot::<f32>(best, &a32, &b32).to_bits(),
+                dot::<f32>(best, NumericsPolicy::Strict, &a32, &b32).to_bits(),
                 portable::dot(&a32, &b32).to_bits(),
                 "dot f32 n={n}"
+            );
+            // Fast tier: the vector FMA twin must reproduce the fused
+            // portable body bit-for-bit (fast's own determinism contract).
+            assert_eq!(
+                dot::<f64>(best, NumericsPolicy::Fast, &a, &b).to_bits(),
+                portable::dot_fast(&a, &b).to_bits(),
+                "dot_fast f64 n={n}"
+            );
+            assert_eq!(
+                dot::<f32>(best, NumericsPolicy::Fast, &a32, &b32).to_bits(),
+                portable::dot_fast(&a32, &b32).to_bits(),
+                "dot_fast f32 n={n}"
             );
         }
     }
@@ -740,16 +1124,26 @@ mod tests {
         for &n in &LENGTHS {
             let row = data_f32(n, 5);
             let t64 = data_f64(n, 6);
+            let t32 = data_f32(n, 7);
             assert_eq!(
-                gathered_dot_f64(best, &row, &t64).to_bits(),
+                gathered_dot_f64(best, NumericsPolicy::Strict, &row, &t64).to_bits(),
                 portable::gathered_dot_f64(&row, &t64).to_bits(),
                 "gathered f64 n={n}"
             );
-            let t32 = data_f32(n, 7);
             assert_eq!(
-                gathered_dot_f32(best, &row, &t32).to_bits(),
+                gathered_dot_f32(best, NumericsPolicy::Strict, &row, &t32).to_bits(),
                 portable::gathered_dot_f32(&row, &t32).to_bits(),
                 "gathered f32 n={n}"
+            );
+            assert_eq!(
+                gathered_dot_f64(best, NumericsPolicy::Fast, &row, &t64).to_bits(),
+                portable::gathered_dot_f64_fast(&row, &t64).to_bits(),
+                "gathered_fast f64 n={n}"
+            );
+            assert_eq!(
+                gathered_dot_f32(best, NumericsPolicy::Fast, &row, &t32).to_bits(),
+                portable::gathered_dot_f32_fast(&row, &t32).to_bits(),
+                "gathered_fast f32 n={n}"
             );
         }
     }
@@ -757,29 +1151,40 @@ mod tests {
     #[test]
     fn axpy_bitwise_equivalence() {
         let best = detect();
-        for &n in &LENGTHS {
-            let x = data_f64(n, 8);
-            let mut ya = data_f64(n, 9);
-            let mut yb = ya.clone();
-            axpy::<f64>(best, 0.37, &x, &mut ya);
-            portable::axpy(0.37, &x, &mut yb);
-            for (a, b) in ya.iter().zip(&yb) {
-                assert_eq!(a.to_bits(), b.to_bits(), "axpy f64 n={n}");
-            }
-            let x32 = data_f32(n, 10);
-            let mut ya32 = data_f32(n, 11);
-            let mut yb32 = ya32.clone();
-            axpy::<f32>(best, 0.37, &x32, &mut ya32);
-            portable::axpy(0.37, &x32, &mut yb32);
-            for (a, b) in ya32.iter().zip(&yb32) {
-                assert_eq!(a.to_bits(), b.to_bits(), "axpy f32 n={n}");
-            }
-            let mut wa = data_f64(n, 12);
-            let mut wb = wa.clone();
-            axpy_wide::<f32>(best, -1.83, &x32, &mut wa);
-            portable::axpy_wide(-1.83f32, &x32, &mut wb);
-            for (a, b) in wa.iter().zip(&wb) {
-                assert_eq!(a.to_bits(), b.to_bits(), "axpy_wide f32 n={n}");
+        for policy in [NumericsPolicy::Strict, NumericsPolicy::Fast] {
+            for &n in &LENGTHS {
+                let x = data_f64(n, 8);
+                let mut ya = data_f64(n, 9);
+                let mut yb = ya.clone();
+                axpy::<f64>(best, policy, 0.37, &x, &mut ya);
+                match policy {
+                    NumericsPolicy::Strict => portable::axpy(0.37, &x, &mut yb),
+                    NumericsPolicy::Fast => portable::axpy_fast(0.37, &x, &mut yb),
+                }
+                for (a, b) in ya.iter().zip(&yb) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "axpy f64 {policy:?} n={n}");
+                }
+                let x32 = data_f32(n, 10);
+                let mut ya32 = data_f32(n, 11);
+                let mut yb32 = ya32.clone();
+                axpy::<f32>(best, policy, 0.37, &x32, &mut ya32);
+                match policy {
+                    NumericsPolicy::Strict => portable::axpy(0.37, &x32, &mut yb32),
+                    NumericsPolicy::Fast => portable::axpy_fast(0.37, &x32, &mut yb32),
+                }
+                for (a, b) in ya32.iter().zip(&yb32) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "axpy f32 {policy:?} n={n}");
+                }
+                let mut wa = data_f64(n, 12);
+                let mut wb = wa.clone();
+                axpy_wide::<f32>(best, policy, -1.83, &x32, &mut wa);
+                match policy {
+                    NumericsPolicy::Strict => portable::axpy_wide(-1.83f32, &x32, &mut wb),
+                    NumericsPolicy::Fast => portable::axpy_wide_fast(-1.83f32, &x32, &mut wb),
+                }
+                for (a, b) in wa.iter().zip(&wb) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "axpy_wide f32 {policy:?} n={n}");
+                }
             }
         }
     }
@@ -850,25 +1255,56 @@ mod tests {
             let srcs: Vec<u32> = (0..slots).map(|k| ((k * 7 + 2) % nvals) as u32).collect();
             let vals = data_f64(nvals, 13);
             let x = data_f64(nx, 14);
+            let strict = NumericsPolicy::Strict;
             assert_eq!(
-                spmv_gather_dot::<f64>(best, &cols, &srcs, &vals, &x).to_bits(),
+                spmv_gather_dot::<f64>(best, strict, &cols, &srcs, &vals, &x).to_bits(),
                 portable::spmv_gather_dot(&cols, &srcs, &vals, &x).to_bits(),
                 "spmv f64 slots={slots}"
             );
             let vals32 = data_f32(nvals, 15);
             let x32 = data_f32(nx, 16);
             assert_eq!(
-                spmv_gather_dot::<f32>(best, &cols, &srcs, &vals32, &x32).to_bits(),
+                spmv_gather_dot::<f32>(best, strict, &cols, &srcs, &vals32, &x32).to_bits(),
                 portable::spmv_gather_dot(&cols, &srcs, &vals32, &x32).to_bits(),
                 "spmv f32 slots={slots}"
+            );
+            // Fast tier routes to the fused sequential body on every
+            // backend.
+            let fast = NumericsPolicy::Fast;
+            assert_eq!(
+                spmv_gather_dot::<f64>(best, fast, &cols, &srcs, &vals, &x).to_bits(),
+                portable::spmv_gather_dot_fast(&cols, &srcs, &vals, &x).to_bits(),
+                "spmv_fast f64 slots={slots}"
             );
             // Transposed form: es indexes (vals, rows_e) pairs.
             let es: Vec<u32> = (0..slots).map(|k| ((k * 11 + 1) % nvals) as u32).collect();
             let rows_e: Vec<u32> = (0..nvals).map(|e| ((e * 17 + 3) % nx) as u32).collect();
             assert_eq!(
-                spmv_t_gather_dot::<f64>(best, &es, &rows_e, &vals, &x).to_bits(),
+                spmv_t_gather_dot::<f64>(best, strict, &es, &rows_e, &vals, &x).to_bits(),
                 portable::spmv_t_gather_dot(&es, &rows_e, &vals, &x).to_bits(),
                 "spmv_t f64 slots={slots}"
+            );
+            assert_eq!(
+                spmv_t_gather_dot::<f64>(best, fast, &es, &rows_e, &vals, &x).to_bits(),
+                portable::spmv_t_gather_dot_fast(&es, &rows_e, &vals, &x).to_bits(),
+                "spmv_t_fast f64 slots={slots}"
+            );
+        }
+    }
+
+    /// The fast bodies differ from strict by at most a few ulp on
+    /// well-conditioned data (the FMA removes one rounding per element),
+    /// and never *less* accurate than strict against an exact reference.
+    #[test]
+    fn fast_dot_stays_close_to_strict() {
+        for &n in &[64usize, 257, 4096] {
+            let (a, b) = (data_f64(n, 21), data_f64(n, 22));
+            let strict = portable::dot::<f64>(&a, &b);
+            let fast = portable::dot_fast::<f64>(&a, &b);
+            let scale = strict.abs().max(1e-300);
+            assert!(
+                ((strict - fast) / scale).abs() < 1e-12,
+                "n={n}: strict={strict} fast={fast}"
             );
         }
     }

@@ -1,8 +1,14 @@
 //! NEON kernel bodies (aarch64).
 //!
-//! Same bit-identity rules as [`super::x86`]: no fused multiply-add
-//! (`vaddq`/`vmulq` pairs, never `vfmaq`), lane ↔ accumulator
-//! correspondence preserved, folds in the scalar order, scalar tails.
+//! Same bit-identity rules as [`super::x86`]: in the **strict** tier no
+//! fused multiply-add (`vaddq`/`vmulq` pairs, never `vfmaq`), lane ↔
+//! accumulator correspondence preserved, folds in the scalar order,
+//! scalar tails. The `*_fast` twins at the bottom of the module are the
+//! `NumericsPolicy::Fast` bodies: identical lane schedules but with the
+//! multiply/add pairs contracted to `vfmaq_f64`/`vfmaq_f32`, matching
+//! [`super::portable`]'s `mul_add`-based fast bodies bit-for-bit (FMA is
+//! IEEE correctly rounded). FMA is baseline on aarch64 — `vfmaq` needs
+//! no extra feature beyond NEON itself.
 //! NEON registers are 128-bit, so the 4-lane f64 schedules use **two**
 //! `float64x2_t` accumulators — `acc01` carrying scalar partial sums
 //! (s0, s1) and `acc23` carrying (s2, s3) — and the 8-lane f32 schedule
@@ -243,5 +249,237 @@ pub unsafe fn axpy_wide_f32(alpha: f32, x: &[f32], y: &mut [f64]) {
     }
     for i in chunks * 4..n {
         y[i] += (alpha * x[i]) as f64;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fast-tier twins (NumericsPolicy::Fast).
+//
+// Same lane schedules as the strict bodies above with the `vmulq` /
+// `vaddq` pairs contracted to `vfmaq` — bit-identical to
+// `portable::*_fast`'s `mul_add` bodies (FMA is correctly rounded).
+// Scalar tails fuse through `mul_add` to match.
+// ---------------------------------------------------------------------
+
+/// Fast [`dot_f64`]: same two-register 4-lane schedule, `vfmaq_f64`
+/// accumulate, fused scalar tail.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON. Panics if the slices have
+/// different lengths.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_f64_fast(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for k in 0..chunks {
+        let i = k * 4;
+        acc01 = vfmaq_f64(acc01, vld1q_f64(a.as_ptr().add(i)), vld1q_f64(b.as_ptr().add(i)));
+        acc23 = vfmaq_f64(
+            acc23,
+            vld1q_f64(a.as_ptr().add(i + 2)),
+            vld1q_f64(b.as_ptr().add(i + 2)),
+        );
+    }
+    let mut s = vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01);
+    s += vgetq_lane_f64::<0>(acc23);
+    s += vgetq_lane_f64::<1>(acc23);
+    for i in chunks * 4..n {
+        s = a[i].mul_add(b[i], s);
+    }
+    s
+}
+
+/// Fast [`dot_f32`]: both operands widened exactly to f64 *before* the
+/// fused multiply (the fast f32 reductions trade the strict tier's
+/// f32-width product for a more accurate widened FMA), same 4-lane
+/// f64 partial-sum tree.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON. Panics if the slices have
+/// different lengths.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_f32_fast(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for k in 0..chunks {
+        let i = k * 4;
+        let va = vld1q_f32(a.as_ptr().add(i));
+        let vb = vld1q_f32(b.as_ptr().add(i));
+        acc01 = vfmaq_f64(
+            acc01,
+            vcvt_f64_f32(vget_low_f32(va)),
+            vcvt_f64_f32(vget_low_f32(vb)),
+        );
+        acc23 = vfmaq_f64(acc23, vcvt_high_f64_f32(va), vcvt_high_f64_f32(vb));
+    }
+    let mut s = vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01);
+    s += vgetq_lane_f64::<0>(acc23);
+    s += vgetq_lane_f64::<1>(acc23);
+    for i in chunks * 4..n {
+        s = (a[i] as f64).mul_add(b[i] as f64, s);
+    }
+    s
+}
+
+/// Fast [`gathered_dot_f64`]: widened row lanes fused against the f64
+/// transport values, fused scalar tail, same ascending-lane fold.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON. Panics if the slices have
+/// different lengths.
+#[target_feature(enable = "neon")]
+pub unsafe fn gathered_dot_f64_fast(row: &[f32], t: &[f64]) -> f64 {
+    assert_eq!(row.len(), t.len());
+    let s = row.len();
+    let chunks = s / 4;
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for c in 0..chunks {
+        let base = c * 4;
+        let vr = vld1q_f32(row.as_ptr().add(base));
+        let t01 = vld1q_f64(t.as_ptr().add(base));
+        let t23 = vld1q_f64(t.as_ptr().add(base + 2));
+        acc01 = vfmaq_f64(acc01, vcvt_f64_f32(vget_low_f32(vr)), t01);
+        acc23 = vfmaq_f64(acc23, vcvt_high_f64_f32(vr), t23);
+    }
+    let lanes = [
+        vgetq_lane_f64::<0>(acc01),
+        vgetq_lane_f64::<1>(acc01),
+        vgetq_lane_f64::<0>(acc23),
+        vgetq_lane_f64::<1>(acc23),
+    ];
+    let mut tail = 0.0;
+    for lp in chunks * 4..s {
+        tail = (row[lp] as f64).mul_add(t[lp], tail);
+    }
+    lanes[0] + lanes[1] + lanes[2] + lanes[3] + tail
+}
+
+/// Fast [`gathered_dot_f32`]: same two-register 8-lane f32 schedule with
+/// `vfmaq_f32` (storage-width FMA ≡ `f32::mul_add`), fused f64 tail per
+/// block.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON. Panics if the slices have
+/// different lengths.
+#[target_feature(enable = "neon")]
+pub unsafe fn gathered_dot_f32_fast(row: &[f32], t: &[f32]) -> f64 {
+    assert_eq!(row.len(), t.len());
+    let n = row.len();
+    let mut total = 0.0f64;
+    let mut start = 0;
+    while start < n {
+        let end = (start + F32_BLOCK).min(n);
+        let len = end - start;
+        let chunks = len / F32_LANES;
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let b = start + c * F32_LANES;
+            acc_lo = vfmaq_f32(acc_lo, vld1q_f32(row.as_ptr().add(b)), vld1q_f32(t.as_ptr().add(b)));
+            acc_hi = vfmaq_f32(
+                acc_hi,
+                vld1q_f32(row.as_ptr().add(b + 4)),
+                vld1q_f32(t.as_ptr().add(b + 4)),
+            );
+        }
+        let lanes = [
+            vgetq_lane_f32::<0>(acc_lo),
+            vgetq_lane_f32::<1>(acc_lo),
+            vgetq_lane_f32::<2>(acc_lo),
+            vgetq_lane_f32::<3>(acc_lo),
+            vgetq_lane_f32::<0>(acc_hi),
+            vgetq_lane_f32::<1>(acc_hi),
+            vgetq_lane_f32::<2>(acc_hi),
+            vgetq_lane_f32::<3>(acc_hi),
+        ];
+        let mut block = 0.0f64;
+        for av in lanes {
+            block += av as f64;
+        }
+        for k in start + chunks * F32_LANES..end {
+            block = (row[k] as f64).mul_add(t[k] as f64, block);
+        }
+        total += block;
+        start = end;
+    }
+    total
+}
+
+/// Fast [`axpy_f64`]: `vfmaq_f64` per pair, fused scalar tail.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON.
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_f64_fast(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 2;
+    let va = vdupq_n_f64(alpha);
+    for k in 0..chunks {
+        let i = k * 2;
+        let vx = vld1q_f64(x.as_ptr().add(i));
+        let vy = vld1q_f64(y.as_ptr().add(i));
+        vst1q_f64(y.as_mut_ptr().add(i), vfmaq_f64(vy, va, vx));
+    }
+    for i in chunks * 2..n {
+        y[i] = alpha.mul_add(x[i], y[i]);
+    }
+}
+
+/// Fast [`axpy_f32`]: `vfmaq_f32` (storage-width FMA ≡ `f32::mul_add`),
+/// fused scalar tail.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON.
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_f32_fast(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let va = vdupq_n_f32(alpha);
+    for k in 0..chunks {
+        let i = k * 4;
+        let vx = vld1q_f32(x.as_ptr().add(i));
+        let vy = vld1q_f32(y.as_ptr().add(i));
+        vst1q_f32(y.as_mut_ptr().add(i), vfmaq_f32(vy, va, vx));
+    }
+    for i in chunks * 4..n {
+        y[i] = alpha.mul_add(x[i], y[i]);
+    }
+}
+
+/// Fast [`axpy_wide_f32`]: alpha and x widened exactly to f64 *before*
+/// the fused multiply into the f64 accumulator (more accurate than the
+/// strict tier's f32-width product), fused scalar tail.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON.
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_wide_f32_fast(alpha: f32, x: &[f32], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let va = vdupq_n_f64(alpha as f64);
+    for k in 0..chunks {
+        let i = k * 4;
+        let vx = vld1q_f32(x.as_ptr().add(i));
+        let y01 = vld1q_f64(y.as_ptr().add(i));
+        let y23 = vld1q_f64(y.as_ptr().add(i + 2));
+        vst1q_f64(
+            y.as_mut_ptr().add(i),
+            vfmaq_f64(y01, va, vcvt_f64_f32(vget_low_f32(vx))),
+        );
+        vst1q_f64(
+            y.as_mut_ptr().add(i + 2),
+            vfmaq_f64(y23, va, vcvt_high_f64_f32(vx)),
+        );
+    }
+    let af = alpha as f64;
+    for i in chunks * 4..n {
+        y[i] = af.mul_add(x[i] as f64, y[i]);
     }
 }

@@ -185,3 +185,147 @@ pub fn spmv_t_gather_dot<S: Scalar>(es: &[u32], rows_e: &[u32], vals: &[S], x: &
     }
     acc
 }
+
+// ---------------------------------------------------------------------
+// Fast-tier bodies (NumericsPolicy::Fast).
+//
+// Same lane↔accumulator schedules as the strict bodies above, with the
+// multiply–add pairs fused through `mul_add`. Rust's `f64::mul_add` /
+// `f32::mul_add` are correctly rounded on every platform (hardware FMA
+// or libm's software fma), so these bodies are the *canonical fast
+// bits*: the AVX2/NEON FMA twins reproduce them exactly, and fast mode
+// stays bit-identical across backends, widths and thread counts.
+// For f32 storage the reduction kernels widen the operands to f64
+// *before* the fused multiply (matching `_mm256_cvtps_pd` +
+// `_mm256_fmadd_pd`), so the fast f32 paths are both faster and more
+// accurate than strict; the pure-f32 8-lane block kernel and `axpy`
+// fuse at storage width (`_mm256_fmadd_ps`).
+// ---------------------------------------------------------------------
+
+/// Fast [`dot`]: 4 f64 lanes, operands widened per element, fused
+/// multiply–add, same left-associative fold and scalar tail.
+#[inline]
+pub fn dot_fast<S: Scalar>(a: &[S], b: &[S]) -> S::Accum {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for k in 0..chunks {
+        let i = k * 4;
+        s0 = a[i].to_f64().mul_add(b[i].to_f64(), s0);
+        s1 = a[i + 1].to_f64().mul_add(b[i + 1].to_f64(), s1);
+        s2 = a[i + 2].to_f64().mul_add(b[i + 2].to_f64(), s2);
+        s3 = a[i + 3].to_f64().mul_add(b[i + 3].to_f64(), s3);
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s = a[i].to_f64().mul_add(b[i].to_f64(), s);
+    }
+    S::accum_from_f64(s)
+}
+
+/// Fast [`gathered_dot_f64`]: same 4 f64 lanes, row widened per element,
+/// fused multiply–add.
+#[inline]
+pub fn gathered_dot_f64_fast(row: &[f32], t: &[f64]) -> f64 {
+    debug_assert_eq!(row.len(), t.len());
+    let s = row.len();
+    let mut acc = [0.0f64; 4];
+    let chunks = s / 4;
+    for c in 0..chunks {
+        let base = c * 4;
+        acc[0] = (row[base] as f64).mul_add(t[base], acc[0]);
+        acc[1] = (row[base + 1] as f64).mul_add(t[base + 1], acc[1]);
+        acc[2] = (row[base + 2] as f64).mul_add(t[base + 2], acc[2]);
+        acc[3] = (row[base + 3] as f64).mul_add(t[base + 3], acc[3]);
+    }
+    let mut tail = 0.0;
+    for lp in chunks * 4..s {
+        tail = (row[lp] as f64).mul_add(t[lp], tail);
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Fast [`gathered_dot_f32`]: same [`F32_LANES`]-lane / [`F32_BLOCK`]
+/// fold cadence, products fused at f32 storage width
+/// (`f32::mul_add` ≡ `_mm256_fmadd_ps`).
+#[inline]
+pub fn gathered_dot_f32_fast(row: &[f32], t: &[f32]) -> f64 {
+    debug_assert_eq!(row.len(), t.len());
+    let mut total = 0.0f64;
+    let mut start = 0;
+    let n = row.len();
+    while start < n {
+        let end = (start + F32_BLOCK).min(n);
+        let r = &row[start..end];
+        let tv = &t[start..end];
+        let len = r.len();
+        let mut acc = [0.0f32; F32_LANES];
+        let chunks = len / F32_LANES;
+        for c in 0..chunks {
+            let b = c * F32_LANES;
+            for (lane, av) in acc.iter_mut().enumerate() {
+                *av = r[b + lane].mul_add(tv[b + lane], *av);
+            }
+        }
+        let mut block = 0.0f64;
+        for av in acc {
+            block += av as f64;
+        }
+        for k in chunks * F32_LANES..len {
+            block = (r[k] as f64).mul_add(tv[k] as f64, block);
+        }
+        total += block;
+        start = end;
+    }
+    total
+}
+
+/// Fast [`axpy`]: per-element fused multiply–add at storage width.
+#[inline]
+pub fn axpy_fast<S: Scalar>(alpha: S, x: &[S], y: &mut [S]) {
+    for (o, &xv) in y.iter_mut().zip(x) {
+        *o = alpha.mul_add(xv, *o);
+    }
+}
+
+/// Fast [`axpy_wide`]: operands widened, fused f64 multiply–add.
+#[inline]
+pub fn axpy_wide_fast<S: Scalar>(alpha: S, x: &[S], y: &mut [f64]) {
+    let af = alpha.to_f64();
+    for (o, &xv) in y.iter_mut().zip(x) {
+        *o = af.mul_add(xv.to_f64(), *o);
+    }
+}
+
+/// Fast [`spmv_gather_dot`]: the same strictly sequential ascending
+/// reduction, each step fused (operands widened to the accumulator).
+#[inline]
+pub fn spmv_gather_dot_fast<S: Scalar>(
+    cols: &[u32],
+    srcs: &[u32],
+    vals: &[S],
+    x: &[S],
+) -> S::Accum {
+    debug_assert_eq!(cols.len(), srcs.len());
+    let mut acc = 0.0f64;
+    for k in 0..cols.len() {
+        acc = vals[srcs[k] as usize]
+            .to_f64()
+            .mul_add(x[cols[k] as usize].to_f64(), acc);
+    }
+    S::accum_from_f64(acc)
+}
+
+/// Fast [`spmv_t_gather_dot`]: sequential ascending entry order, fused
+/// at storage width (the column reduction keeps its storage-width
+/// accumulator contract).
+#[inline]
+pub fn spmv_t_gather_dot_fast<S: Scalar>(es: &[u32], rows_e: &[u32], vals: &[S], x: &[S]) -> S {
+    let mut acc = S::ZERO;
+    for &e in es {
+        let e = e as usize;
+        acc = vals[e].mul_add(x[rows_e[e] as usize], acc);
+    }
+    acc
+}

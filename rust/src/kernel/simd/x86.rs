@@ -3,10 +3,15 @@
 //! Every function here reproduces the matching [`super::portable`]
 //! schedule **bit-for-bit**. The rules that make that possible:
 //!
-//! * **No FMA.** A fused multiply-add rounds once where the scalar
-//!   schedule rounds twice (`mul` then `add`), so every accumulation is
-//!   an explicit `_mm256_mul_*` followed by `_mm256_add_*` even though
-//!   the dispatch layer only selects this module when FMA is present.
+//! * **No FMA in the strict tier.** A fused multiply-add rounds once
+//!   where the scalar schedule rounds twice (`mul` then `add`), so every
+//!   strict accumulation is an explicit `_mm256_mul_*` followed by
+//!   `_mm256_add_*` even when FMA is present. The `*_fast` twins at the
+//!   bottom of this file are the `NumericsPolicy::Fast` bodies: same
+//!   lane schedules, `_mm256_fmadd_*` fusion, bit-identical to the
+//!   fused portable bodies (`mul_add` is correctly rounded), compiled
+//!   with `target_feature(enable = "avx2,fma")` and only dispatched
+//!   after `is_x86_feature_detected!("fma")` succeeded.
 //! * **Lane ↔ accumulator correspondence.** The scalar schedules keep 4
 //!   independent f64 (8 independent f32) partial sums with element
 //!   `i*LANES + j` feeding sum `j`; one 256-bit accumulator register
@@ -494,4 +499,198 @@ pub unsafe fn spmv_t_dot_f64(es: &[u32], rows_e: &[u32], vals: &[f64], x: &[f64]
         acc += vals[e] * x[rows_e[e] as usize];
     }
     acc
+}
+
+// ---------------------------------------------------------------------
+// Fast-tier twins (`NumericsPolicy::Fast`): the schedules above with
+// the multiply–add pairs fused through `_mm256_fmadd_*`. Each must
+// reproduce the matching `portable::*_fast` body bit-for-bit — FMA is
+// correctly rounded, so lane-for-lane identical operations give
+// identical bits.
+// ---------------------------------------------------------------------
+
+/// Fast [`dot_f64`]: 4 lanes, `_mm256_fmadd_pd`, same fold and tail
+/// (tail fused via `f64::mul_add`).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 *and* FMA. Panics if the
+/// slices have different lengths.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_f64_fast(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..chunks {
+        let i = k * 4;
+        let va = _mm256_loadu_pd(a.as_ptr().add(i));
+        let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+        acc = _mm256_fmadd_pd(va, vb, acc);
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut s = lanes[0] + lanes[1];
+    s += lanes[2];
+    s += lanes[3];
+    for i in chunks * 4..n {
+        s = a[i].mul_add(b[i], s);
+    }
+    s
+}
+
+/// Fast [`dot_f32`]: both operands widened (`_mm256_cvtps_pd`, exact)
+/// *before* the fused f64 multiply–add — one rounding per element where
+/// strict rounds the f32 product first.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 *and* FMA. Panics if the
+/// slices have different lengths.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_f32_fast(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..chunks {
+        let i = k * 4;
+        let va = _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(i)));
+        let vb = _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr().add(i)));
+        acc = _mm256_fmadd_pd(va, vb, acc);
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut s = lanes[0] + lanes[1];
+    s += lanes[2];
+    s += lanes[3];
+    for i in chunks * 4..n {
+        s = (a[i] as f64).mul_add(b[i] as f64, s);
+    }
+    s
+}
+
+/// Fast [`gathered_dot_f64`]: widen the cost row, `_mm256_fmadd_pd`.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 *and* FMA. Panics if the
+/// slices have different lengths.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn gathered_dot_f64_fast(row: &[f32], t: &[f64]) -> f64 {
+    assert_eq!(row.len(), t.len());
+    let s = row.len();
+    let chunks = s / 4;
+    let mut acc = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let base = c * 4;
+        let vr = _mm256_cvtps_pd(_mm_loadu_ps(row.as_ptr().add(base)));
+        let vt = _mm256_loadu_pd(t.as_ptr().add(base));
+        acc = _mm256_fmadd_pd(vr, vt, acc);
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut tail = 0.0;
+    for lp in chunks * 4..s {
+        tail = (row[lp] as f64).mul_add(t[lp], tail);
+    }
+    lanes[0] + lanes[1] + lanes[2] + lanes[3] + tail
+}
+
+/// Fast [`gathered_dot_f32`]: 8-lane `_mm256_fmadd_ps` per
+/// [`F32_BLOCK`] block, same fold cadence, fused f64 tail.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 *and* FMA. Panics if the
+/// slices have different lengths.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn gathered_dot_f32_fast(row: &[f32], t: &[f32]) -> f64 {
+    assert_eq!(row.len(), t.len());
+    let n = row.len();
+    let mut total = 0.0f64;
+    let mut start = 0;
+    while start < n {
+        let end = (start + F32_BLOCK).min(n);
+        let len = end - start;
+        let chunks = len / F32_LANES;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let b = start + c * F32_LANES;
+            let vr = _mm256_loadu_ps(row.as_ptr().add(b));
+            let vt = _mm256_loadu_ps(t.as_ptr().add(b));
+            acc = _mm256_fmadd_ps(vr, vt, acc);
+        }
+        let mut lanes = [0.0f32; F32_LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut block = 0.0f64;
+        for av in lanes {
+            block += av as f64;
+        }
+        for k in start + chunks * F32_LANES..end {
+            block = (row[k] as f64).mul_add(t[k] as f64, block);
+        }
+        total += block;
+        start = end;
+    }
+    total
+}
+
+/// Fast [`axpy_f64`]: `_mm256_fmadd_pd`, fused scalar tail.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 *and* FMA.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn axpy_f64_fast(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let va = _mm256_set1_pd(alpha);
+    for k in 0..chunks {
+        let i = k * 4;
+        let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+        let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+        _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_fmadd_pd(va, vx, vy));
+    }
+    for i in chunks * 4..n {
+        y[i] = alpha.mul_add(x[i], y[i]);
+    }
+}
+
+/// Fast [`axpy_f32`]: `_mm256_fmadd_ps` (single-rounded f32 fma), fused
+/// scalar tail.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 *and* FMA.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn axpy_f32_fast(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 8;
+    let va = _mm256_set1_ps(alpha);
+    for k in 0..chunks {
+        let i = k * 8;
+        let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+        let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_fmadd_ps(va, vx, vy));
+    }
+    for i in chunks * 8..n {
+        y[i] = alpha.mul_add(x[i], y[i]);
+    }
+}
+
+/// Fast [`axpy_wide_f32`]: operands widened (`_mm256_cvtps_pd`), fused
+/// f64 multiply–add into the wide accumulator.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 *and* FMA.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn axpy_wide_f32_fast(alpha: f32, x: &[f32], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let af = alpha as f64;
+    let va = _mm256_set1_pd(af);
+    for k in 0..chunks {
+        let i = k * 4;
+        let vx = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i)));
+        let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+        _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_fmadd_pd(va, vx, vy));
+    }
+    for i in chunks * 4..n {
+        y[i] = af.mul_add(x[i] as f64, y[i]);
+    }
 }

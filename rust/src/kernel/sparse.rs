@@ -29,7 +29,8 @@
 //! The per-row/per-column reductions of [`spmv`] and [`spmv_t_csc`]
 //! dispatch through [`super::simd`] (vectorized index/value gathers; the
 //! adds stay strictly sequential per the contract above), with the
-//! backend captured before the pool call per the capture-at-submit rule.
+//! backend and numerics policy captured before the pool call per the
+//! capture-at-submit rule.
 
 use super::scalar::Scalar;
 use super::simd;
@@ -62,12 +63,14 @@ pub fn spmv<S: Scalar>(
     debug_assert_eq!(y.len(), nrows);
     let min_rows = min_rows_for(nrows, slot_col.len());
     let backend = simd::current();
+    let policy = simd::current_numerics();
     pool().for_each_chunk_mut(y, min_rows, |ychunk, range, _| {
         for (o, i) in ychunk.iter_mut().zip(range) {
             let lo = row_ptr[i] as usize;
             let hi = row_ptr[i + 1] as usize;
             *o = S::narrow(simd::spmv_gather_dot(
                 backend,
+                policy,
                 &slot_col[lo..hi],
                 &slot_src[lo..hi],
                 vals,
@@ -105,11 +108,12 @@ pub fn spmv_t_csc<S: Scalar>(
     debug_assert_eq!(y.len(), ncols);
     let min_cols = min_rows_for(ncols, cslot_src.len());
     let backend = simd::current();
+    let policy = simd::current_numerics();
     pool().for_each_chunk_mut(y, min_cols, |ychunk, range, _| {
         for (o, j) in ychunk.iter_mut().zip(range) {
             let lo = col_ptr[j] as usize;
             let hi = col_ptr[j + 1] as usize;
-            *o = simd::spmv_t_gather_dot(backend, &cslot_src[lo..hi], rows_e, vals, x);
+            *o = simd::spmv_t_gather_dot(backend, policy, &cslot_src[lo..hi], rows_e, vals, x);
         }
     });
 }
@@ -162,6 +166,173 @@ pub fn spmv_t_wide_csc<S: Scalar>(
                 acc += (vals[e] * x[rows_e[e] as usize]).to_f64();
             }
             *o = S::from_f64(acc);
+        }
+    });
+}
+
+/// One guarded balanced scaling element: `target ⊘ denom` with
+/// `0 ⊘ x := 0` and non-finite ratios zeroed — exactly the per-element
+/// body of [`simd::scaling_update`] (whose vector branches are proven
+/// bit-identical to it), so the fused sweeps below produce the same
+/// bits as the two-pass spmv + elementwise-update form.
+#[inline]
+fn scale_one<S: Scalar>(t: S, d: S) -> S {
+    let q = if t == S::ZERO { S::ZERO } else { t / d };
+    if q.is_finite() {
+        q
+    } else {
+        S::ZERO
+    }
+}
+
+/// One guarded unbalanced power element: `(target ⊘ denom)^expo` with
+/// non-positive / non-finite denominators zeroed — the per-element body
+/// of [`simd::pow_update`].
+#[inline]
+fn pow_one<S: Scalar>(t: S, d: S, expo: S) -> S {
+    if t == S::ZERO || d <= S::ZERO || !d.is_finite() {
+        S::ZERO
+    } else {
+        (t / d).powf(expo)
+    }
+}
+
+/// Fast-tier fused Sinkhorn row sweep: per output row, the CSR gather
+/// dot `(K·x)_i` flows straight into the guarded scaling update
+/// `out[i] = target[i] ⊘ (K·x)_i` without touching an intermediate
+/// `kv` buffer — the denominator lives in a register between the two
+/// fused stages, eliminating one full store + reload + second pool
+/// dispatch per sweep. The arithmetic is **exactly** the two-pass
+/// [`spmv`] + [`simd::scaling_update`] sequence under the same policy
+/// (fusion changes memory traffic, not values), so COO/CSR bit-identity
+/// holds under fast too. Parallel over output-row chunks.
+pub fn spmv_scale_fused<S: Scalar>(
+    row_ptr: &[u32],
+    slot_col: &[u32],
+    slot_src: &[u32],
+    vals: &[S],
+    x: &[S],
+    target: &[S],
+    out: &mut [S],
+) {
+    let nrows = row_ptr.len() - 1;
+    debug_assert_eq!(out.len(), nrows);
+    debug_assert_eq!(target.len(), nrows);
+    let min_rows = min_rows_for(nrows, slot_col.len());
+    let backend = simd::current();
+    let policy = simd::current_numerics();
+    pool().for_each_chunk_mut(out, min_rows, |ochunk, range, _| {
+        for (o, i) in ochunk.iter_mut().zip(range) {
+            let lo = row_ptr[i] as usize;
+            let hi = row_ptr[i + 1] as usize;
+            let d = S::narrow(simd::spmv_gather_dot(
+                backend,
+                policy,
+                &slot_col[lo..hi],
+                &slot_src[lo..hi],
+                vals,
+                x,
+            ));
+            *o = scale_one(target[i], d);
+        }
+    });
+}
+
+/// [`spmv_scale_fused`] with the unbalanced power update
+/// `out[i] = (target[i] ⊘ (K·x)_i)^expo` as the fused second stage.
+#[allow(clippy::too_many_arguments)]
+pub fn spmv_pow_fused<S: Scalar>(
+    row_ptr: &[u32],
+    slot_col: &[u32],
+    slot_src: &[u32],
+    vals: &[S],
+    x: &[S],
+    target: &[S],
+    expo: S,
+    out: &mut [S],
+) {
+    let nrows = row_ptr.len() - 1;
+    debug_assert_eq!(out.len(), nrows);
+    debug_assert_eq!(target.len(), nrows);
+    let min_rows = min_rows_for(nrows, slot_col.len());
+    let backend = simd::current();
+    let policy = simd::current_numerics();
+    pool().for_each_chunk_mut(out, min_rows, |ochunk, range, _| {
+        for (o, i) in ochunk.iter_mut().zip(range) {
+            let lo = row_ptr[i] as usize;
+            let hi = row_ptr[i + 1] as usize;
+            let d = S::narrow(simd::spmv_gather_dot(
+                backend,
+                policy,
+                &slot_col[lo..hi],
+                &slot_src[lo..hi],
+                vals,
+                x,
+            ));
+            *o = pow_one(target[i], d, expo);
+        }
+    });
+}
+
+/// Fast-tier fused transposed sweep: per output column, the wide CSC
+/// gather `(Kᵀ·x)_j` (f64 accumulator, ascending entry order — the
+/// exact [`spmv_t_wide_csc`] loop) flows straight into the guarded
+/// scaling update, skipping the `ktu` buffer. Value-identical to the
+/// two-pass form; parallel over output-column chunks.
+pub fn spmv_t_wide_scale_fused<S: Scalar>(
+    col_ptr: &[u32],
+    cslot_src: &[u32],
+    rows_e: &[u32],
+    vals: &[S],
+    x: &[S],
+    target: &[S],
+    out: &mut [S],
+) {
+    let ncols = col_ptr.len() - 1;
+    debug_assert_eq!(out.len(), ncols);
+    debug_assert_eq!(target.len(), ncols);
+    let min_cols = min_rows_for(ncols, cslot_src.len());
+    pool().for_each_chunk_mut(out, min_cols, |ochunk, range, _| {
+        for (o, j) in ochunk.iter_mut().zip(range) {
+            let lo = col_ptr[j] as usize;
+            let hi = col_ptr[j + 1] as usize;
+            let mut acc = 0.0f64;
+            for slot in lo..hi {
+                let e = cslot_src[slot] as usize;
+                acc += (vals[e] * x[rows_e[e] as usize]).to_f64();
+            }
+            *o = scale_one(target[j], S::from_f64(acc));
+        }
+    });
+}
+
+/// [`spmv_t_wide_scale_fused`] with the unbalanced power update as the
+/// fused second stage.
+#[allow(clippy::too_many_arguments)]
+pub fn spmv_t_wide_pow_fused<S: Scalar>(
+    col_ptr: &[u32],
+    cslot_src: &[u32],
+    rows_e: &[u32],
+    vals: &[S],
+    x: &[S],
+    target: &[S],
+    expo: S,
+    out: &mut [S],
+) {
+    let ncols = col_ptr.len() - 1;
+    debug_assert_eq!(out.len(), ncols);
+    debug_assert_eq!(target.len(), ncols);
+    let min_cols = min_rows_for(ncols, cslot_src.len());
+    pool().for_each_chunk_mut(out, min_cols, |ochunk, range, _| {
+        for (o, j) in ochunk.iter_mut().zip(range) {
+            let lo = col_ptr[j] as usize;
+            let hi = col_ptr[j + 1] as usize;
+            let mut acc = 0.0f64;
+            for slot in lo..hi {
+                let e = cslot_src[slot] as usize;
+                acc += (vals[e] * x[rows_e[e] as usize]).to_f64();
+            }
+            *o = pow_one(target[j], S::from_f64(acc), expo);
         }
     });
 }
@@ -467,6 +638,84 @@ mod tests {
         spmm(&rp, &sc, &ss, &vals, &b, 2, &mut out);
         // A·b = [[3, 4], [17, 22]]
         assert_eq!(out, [3.0, 4.0, 17.0, 22.0]);
+    }
+
+    #[test]
+    fn fused_sweeps_bitwise_match_two_pass_forms() {
+        // The fused spmv→scale / spmv→pow sweeps must reproduce the
+        // two-pass (spmv into a buffer, then elementwise update) results
+        // bit for bit under BOTH numerics policies — fusion is a memory
+        // optimization, not an arithmetic change.
+        use crate::kernel::simd::{with_numerics_override, NumericsPolicy};
+        let (m, n, nnz) = (23usize, 19usize, 300usize);
+        let rows_e: Vec<u32> = (0..nnz).map(|k| ((k * 5 + 2) % m) as u32).collect();
+        let cols_e: Vec<u32> = (0..nnz).map(|k| ((k * 11 + 7) % n) as u32).collect();
+        let vals: Vec<f64> =
+            (0..nnz).map(|k| ((k as f64) * 0.43).sin().abs() + 0.01).collect();
+        // CSR structure via the same stable counting sort Csr uses.
+        let mut row_ptr = vec![0u32; m + 1];
+        for &r in &rows_e {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..m {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut cursor: Vec<u32> = row_ptr[..m].to_vec();
+        let mut slot_col = vec![0u32; nnz];
+        let mut slot_src = vec![0u32; nnz];
+        for k in 0..nnz {
+            let r = rows_e[k] as usize;
+            slot_col[cursor[r] as usize] = cols_e[k];
+            slot_src[cursor[r] as usize] = k as u32;
+            cursor[r] += 1;
+        }
+        let (col_ptr, cslot_src) = csc_of(n, &cols_e);
+        let x_col: Vec<f64> = (0..n).map(|j| ((j as f64) * 0.29).cos() + 1.2).collect();
+        let x_row: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.31).sin() + 1.1).collect();
+        // Targets include zeros to exercise the 0 ⊘ x guard.
+        let ta: Vec<f64> = (0..m).map(|i| if i % 7 == 0 { 0.0 } else { 0.1 + i as f64 }).collect();
+        let tb: Vec<f64> = (0..n).map(|j| if j % 5 == 0 { 0.0 } else { 0.2 + j as f64 }).collect();
+        let expo = 0.7f64;
+        for policy in [NumericsPolicy::Strict, NumericsPolicy::Fast] {
+            with_numerics_override(policy, || {
+                // Row direction.
+                let mut kv = vec![0.0f64; m];
+                spmv(&row_ptr, &slot_col, &slot_src, &vals, &x_col, &mut kv);
+                let mut two_pass = vec![0.0f64; m];
+                crate::kernel::ops::scaling_update_into(&ta, &kv, &mut two_pass);
+                let mut fused = vec![0.0f64; m];
+                spmv_scale_fused(&row_ptr, &slot_col, &slot_src, &vals, &x_col, &ta, &mut fused);
+                for i in 0..m {
+                    assert_eq!(two_pass[i].to_bits(), fused[i].to_bits(), "scale row {i}");
+                }
+                crate::kernel::ops::pow_update_into(&ta, &kv, expo, &mut two_pass);
+                spmv_pow_fused(
+                    &row_ptr, &slot_col, &slot_src, &vals, &x_col, &ta, expo, &mut fused,
+                );
+                for i in 0..m {
+                    assert_eq!(two_pass[i].to_bits(), fused[i].to_bits(), "pow row {i}");
+                }
+                // Transposed direction.
+                let mut ktu = vec![0.0f64; n];
+                spmv_t_wide_csc(&col_ptr, &cslot_src, &rows_e, &vals, &x_row, &mut ktu);
+                let mut two_t = vec![0.0f64; n];
+                crate::kernel::ops::scaling_update_into(&tb, &ktu, &mut two_t);
+                let mut fused_t = vec![0.0f64; n];
+                spmv_t_wide_scale_fused(
+                    &col_ptr, &cslot_src, &rows_e, &vals, &x_row, &tb, &mut fused_t,
+                );
+                for j in 0..n {
+                    assert_eq!(two_t[j].to_bits(), fused_t[j].to_bits(), "scale col {j}");
+                }
+                crate::kernel::ops::pow_update_into(&tb, &ktu, expo, &mut two_t);
+                spmv_t_wide_pow_fused(
+                    &col_ptr, &cslot_src, &rows_e, &vals, &x_row, &tb, expo, &mut fused_t,
+                );
+                for j in 0..n {
+                    assert_eq!(two_t[j].to_bits(), fused_t[j].to_bits(), "pow col {j}");
+                }
+            });
+        }
     }
 
     #[test]

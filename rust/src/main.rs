@@ -44,24 +44,24 @@ USAGE:
                   [--solver NAME] [--solver-opt k=v]...   # registry dispatch
                   [--solver-opt precision=f32|f64]        # Spar-* mixed precision
                   [--cost l1|l2|kl] [--eps 0.01] [--s 0] [--seed 0] [--threads N]
-                  [--simd auto|avx2|neon|scalar]
+                  [--simd auto|avx2|neon|scalar] [--numerics strict|fast]
   spargw pairwise [--dataset synthetic|bzr|cox2|cuneiform|firstmm_db|imdb-b]
                   [--solver NAME] [--solver-opt k=v]...   # engine per request
                   [--cost l1|l2] [--workers 4] [--threads N] [--seed 0]
-                  [--simd auto|avx2|neon|scalar]
+                  [--simd auto|avx2|neon|scalar] [--numerics strict|fast]
                   [--shard I/OF | --shards N]             # deterministic sharding
                   [--out FILE] [--resume]                 # streaming sink + resume
                   [--artifacts DIR | --pjrt]              # enable the PJRT path
   spargw serve    [--socket PATH]                         # default stdin/stdout
                   [--solver NAME] [--solver-opt k=v]... [--cost l1|l2]
                   [--workers 4] [--seed 0] [--threads N]
-                  [--simd auto|avx2|neon|scalar]
+                  [--simd auto|avx2|neon|scalar] [--numerics strict|fast]
                   [--queue 64]             # admission capacity (busy beyond)
                   [--cache-structures 512] # warm LRU cache capacity
                   [--summary-every 16] [--retry-after-ms 50]
   spargw cluster  [--dataset ...] [--solver NAME] [--solver-opt k=v]...
                   [--cost l1|l2] [--gamma 1.0] [--seed 0] [--threads N]
-                  [--simd auto|avx2|neon|scalar]
+                  [--simd auto|avx2|neon|scalar] [--numerics strict|fast]
   spargw solvers
   spargw datasets [--seed 0]
   spargw artifacts [--dir artifacts]
@@ -82,6 +82,16 @@ SIMD
   the backend never changes results: every vector kernel reproduces the
   scalar lane schedule bit-for-bit. `spargw solvers` prints the
   resolved backend.
+
+NUMERICS
+  --numerics selects the kernel numerics tier (default strict); the
+  SPARGW_NUMERICS environment variable is the fallback. strict keeps
+  every kernel bit-identical to the historical scalar loops. fast
+  enables FMA-fused kernel bodies, a vectorized exp, and fused Sinkhorn
+  sweeps: results drift from strict at the last-ulp level (<= 1e-10
+  relative on GW objectives) but stay bit-identical across backends and
+  thread counts within the tier. RNG streams, sampling and chunk
+  schedules never change. The sink header and metrics record the tier.
 
 SERVE MODE
   spargw serve answers newline-framed requests — `solve <ds> <i> <j>`,
@@ -509,23 +519,31 @@ fn cmd_cluster(args: &Args) {
 
 fn cmd_solvers() {
     println!("registered solvers:");
-    println!("  {:<12} precision", "name");
+    println!("  {:<12} {:<10} numerics", "name", "precision");
     for &name in SolverRegistry::names() {
-        println!("  {:<12} {}", name, SolverRegistry::precisions(name));
+        println!(
+            "  {:<12} {:<10} {}",
+            name,
+            SolverRegistry::precisions(name),
+            SolverRegistry::numerics(name)
+        );
     }
     println!("\n{}", backend_summary());
     println!("\nselect with --solver NAME; pass options as --solver-opt k=v");
     println!("mixed precision: --solver-opt precision=f32 (Spar-* engines; default f64)");
+    println!("numerics tier: --numerics fast (FMA-fused kernels; default strict)");
 }
 
 /// One-line description of the active execution backend: resolved SIMD
-/// dispatch (with what detection found), pool width, default precision.
+/// dispatch (with what detection found), pool width, numerics tier,
+/// default precision.
 fn backend_summary() -> String {
     format!(
-        "backend: simd={} (detected {}) threads={} precision=f64 (default)",
+        "backend: simd={} (detected {}) threads={} numerics={} precision=f64 (default)",
         spargw::kernel::simd::current().name(),
         spargw::kernel::simd::detect().name(),
         spargw::runtime::pool::pool().threads(),
+        spargw::kernel::simd::current_numerics().name(),
     )
 }
 
@@ -587,6 +605,12 @@ fn main() {
     if let Some(spec) = args.opt_str("simd") {
         let req = ok_or_exit(spargw::kernel::simd::Backend::parse(spec));
         ok_or_exit(spargw::kernel::simd::configure(req));
+    }
+    // Pin the numerics policy before any kernel resolves it
+    // (`--numerics` beats SPARGW_NUMERICS beats the strict default).
+    if let Some(spec) = args.opt_str("numerics") {
+        let policy = ok_or_exit(spargw::kernel::simd::NumericsPolicy::parse(spec));
+        spargw::kernel::simd::configure_numerics(policy);
     }
     match args.positional(0) {
         Some("solve") => cmd_solve(&args),

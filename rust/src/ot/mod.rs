@@ -16,7 +16,7 @@ pub mod sparse_sinkhorn;
 pub mod unbalanced;
 
 pub use emd::emd;
-pub use sinkhorn::{sinkhorn, sinkhorn_log, SinkhornResult};
+pub use sinkhorn::{sinkhorn, sinkhorn_log, sinkhorn_log_into, SinkhornLogScratch, SinkhornResult};
 pub use sparse_sinkhorn::{sparse_sinkhorn, sparse_sinkhorn_fixed};
 pub use unbalanced::{
     sparse_unbalanced_sinkhorn, sparse_unbalanced_sinkhorn_fixed, unbalanced_sinkhorn,

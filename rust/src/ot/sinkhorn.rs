@@ -8,7 +8,31 @@
 //! [`sinkhorn_log`] (the log-domain stabilized path) intentionally stays
 //! f64-only: it exists for numerical head-room at tiny ε, which narrow
 //! storage would defeat.
+//!
+//! ## Numerics policy in the log-domain path
+//!
+//! [`sinkhorn_log`] is the one place in `ot/` where the crate-wide
+//! [`NumericsPolicy`](crate::kernel::simd::NumericsPolicy) changes the
+//! loop *structure*, not just the kernel bodies. Per-loop form:
+//!
+//! * **strict** keeps the historical `(·) / eps` division in every
+//!   sweep. The divisor `eps` is already loop-invariant (hoisting a
+//!   *divisor* is trivially bit-identical — the division executes
+//!   unchanged), but rewriting the division as `(·) * (1/eps)` would
+//!   round differently, so strict never does; `exp` is `f64::exp`.
+//! * **fast** hoists `1/eps` into a reciprocal multiply, fuses the
+//!   subtract-max / scale sweeps into single traversals
+//!   ([`ops::fused_scaled_diff_max`]) that leave the shifted exponents
+//!   in contiguous scratch, and evaluates `exp` through the vectorized
+//!   [`fastmath`](crate::kernel::simd::fastmath) kernel. Fast is
+//!   bit-identical across backends and thread counts (the fastmath
+//!   contract), just not to strict.
+//!
+//! The policy is resolved once per call via
+//! [`simd::current_numerics`](crate::kernel::simd::current_numerics) —
+//! the capture-at-submit rule, same as the SIMD backend.
 
+use crate::kernel::simd::{self, fastmath, NumericsPolicy};
 use crate::kernel::{ops, Scalar};
 use crate::linalg::Mat;
 
@@ -71,9 +95,58 @@ pub fn sinkhorn<S: Scalar>(
     SinkhornResult { plan, u, v, iters }
 }
 
+/// Reusable scratch for [`sinkhorn_log_into`]: the potentials, log
+/// marginals, column-LSE accumulators and the fused-sweep row buffer.
+/// All per-call allocations of the log-domain path live here, so a
+/// caller that keeps one of these (plus the plan and `u`/`v` vectors)
+/// runs the whole solve — plan recovery included — allocation-free
+/// after warm-up (audited by `perf_micro`).
+#[derive(Default)]
+pub struct SinkhornLogScratch {
+    f: Vec<f64>,
+    g: Vec<f64>,
+    log_a: Vec<f64>,
+    log_b: Vec<f64>,
+    col_mx: Vec<f64>,
+    col_s: Vec<f64>,
+    z: Vec<f64>,
+}
+
+impl SinkhornLogScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Strict-tier row LSE: `logΣ_j exp((g_j − C_ij)/ε)`. Two passes over
+/// `(g, row)`, both in the historical `/ eps` division form (see the
+/// module docs for the per-loop numerics-policy table).
+fn lse_row_strict(cost: &Mat, g: &[f64], i: usize, eps: f64) -> f64 {
+    let row = cost.row(i);
+    let n = g.len();
+    let mut mx = f64::NEG_INFINITY;
+    for j in 0..n {
+        let z = (g[j] - row[j]) / eps;
+        if z > mx {
+            mx = z;
+        }
+    }
+    if mx == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    let mut s = 0.0;
+    for j in 0..n {
+        s += (((g[j] - row[j]) / eps) - mx).exp();
+    }
+    mx + s.ln()
+}
+
 /// Log-domain stabilized Sinkhorn for very small ε: works on the cost
 /// matrix directly (`K = exp(-C/ε)` never materialized), using
 /// log-sum-exp reductions. Slower per iteration but immune to under/overflow.
+///
+/// Allocating wrapper over [`sinkhorn_log_into`]; hot-loop callers keep
+/// a [`SinkhornLogScratch`] and call the `_into` form directly.
 pub fn sinkhorn_log(
     a: &[f64],
     b: &[f64],
@@ -83,66 +156,135 @@ pub fn sinkhorn_log(
     tol: f64,
 ) -> SinkhornResult {
     let (m, n) = cost.shape();
+    let mut scratch = SinkhornLogScratch::new();
+    let mut plan = Mat::zeros(m, n);
+    let mut u = Vec::new();
+    let mut v = Vec::new();
+    let iters =
+        sinkhorn_log_into(a, b, cost, eps, max_iter, tol, &mut scratch, &mut plan, &mut u, &mut v);
+    SinkhornResult { plan, u, v, iters }
+}
+
+/// [`sinkhorn_log`] with every output and buffer caller-provided:
+/// `plan` must already have the cost's shape (it is zero-filled here);
+/// `u`/`v` are cleared and refilled. Returns the iteration count.
+/// Allocation-free once the scratch and outputs are warm.
+///
+/// Respects the crate-wide numerics policy: under
+/// [`NumericsPolicy::Fast`] the subtract-max / exp / accumulate sweeps
+/// run fused with a hoisted `1/ε` reciprocal and the vectorized
+/// [`fastmath`] exp; under strict the historical division-form loops run
+/// unchanged, bit-identical to the pre-policy implementation.
+#[allow(clippy::too_many_arguments)]
+pub fn sinkhorn_log_into(
+    a: &[f64],
+    b: &[f64],
+    cost: &Mat,
+    eps: f64,
+    max_iter: usize,
+    tol: f64,
+    scratch: &mut SinkhornLogScratch,
+    plan: &mut Mat,
+    u: &mut Vec<f64>,
+    v: &mut Vec<f64>,
+) -> usize {
+    let (m, n) = cost.shape();
     assert_eq!(a.len(), m);
     assert_eq!(b.len(), n);
-    // Potentials f, g with T = exp((f_i + g_j - C_ij)/ε).
-    let mut f = vec![0.0; m];
-    let mut g = vec![0.0; n];
-    let log_a: Vec<f64> = a.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
-    let log_b: Vec<f64> = b.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }).collect();
+    assert_eq!(plan.shape(), (m, n), "sinkhorn_log_into: plan/cost shape mismatch");
+    let backend = simd::current();
+    let fast = simd::current_numerics() == NumericsPolicy::Fast;
+    // Loop-invariant reciprocal — fast tier only. Strict keeps dividing
+    // by the (already hoisted) divisor `eps`: that is bit-identical to
+    // the historical loops, while a reciprocal multiply is not.
+    let inv_eps = 1.0 / eps;
 
-    let lse_row = |_f: &[f64], g: &[f64], i: usize| -> f64 {
-        // logΣ_j exp((g_j - C_ij)/ε)
-        let row = cost.row(i);
-        let mut mx = f64::NEG_INFINITY;
-        for j in 0..n {
-            let z = (g[j] - row[j]) / eps;
-            if z > mx {
-                mx = z;
-            }
-        }
-        if mx == f64::NEG_INFINITY {
-            return f64::NEG_INFINITY;
-        }
-        let mut s = 0.0;
-        for j in 0..n {
-            s += (((g[j] - row[j]) / eps) - mx).exp();
-        }
-        mx + s.ln()
-    };
+    let SinkhornLogScratch { f, g, log_a, log_b, col_mx, col_s, z } = scratch;
+    f.clear();
+    f.resize(m, 0.0);
+    g.clear();
+    g.resize(n, 0.0);
+    log_a.clear();
+    log_a.extend(a.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }));
+    log_b.clear();
+    log_b.extend(b.iter().map(|&x| if x > 0.0 { x.ln() } else { f64::NEG_INFINITY }));
+    col_mx.clear();
+    col_mx.resize(n, 0.0);
+    col_s.clear();
+    col_s.resize(n, 0.0);
+    z.clear();
+    z.resize(n, 0.0);
+
     let mut iters = 0;
     for _ in 0..max_iter {
         // f_i = ε(log a_i − logΣ_j exp((g_j − C_ij)/ε))
         for i in 0..m {
             f[i] = if log_a[i] == f64::NEG_INFINITY {
                 f64::NEG_INFINITY
+            } else if fast {
+                // Fused pass 1 scales-and-maxes in one traversal; pass 2
+                // is one vectorized exp-accumulate over contiguous z.
+                let mx = ops::fused_scaled_diff_max(g, cost.row(i), inv_eps, z);
+                if mx == f64::NEG_INFINITY {
+                    f64::NEG_INFINITY
+                } else {
+                    eps * (log_a[i] - (mx + fastmath::exp_shifted_sum(backend, z, mx).ln()))
+                }
             } else {
-                eps * (log_a[i] - lse_row(&f, &g, i))
+                eps * (log_a[i] - lse_row_strict(cost, g, i, eps))
             };
         }
-        // g_j update needs column LSE.
-        let mut col_mx = vec![f64::NEG_INFINITY; n];
+        // g_j update needs column LSE: max pass, then exp-sum pass.
+        for v in col_mx.iter_mut() {
+            *v = f64::NEG_INFINITY;
+        }
         for i in 0..m {
             if f[i] == f64::NEG_INFINITY {
                 continue;
             }
             let row = cost.row(i);
-            for j in 0..n {
-                let z = (f[i] - row[j]) / eps;
-                if z > col_mx[j] {
-                    col_mx[j] = z;
+            if fast {
+                for j in 0..n {
+                    let zv = (f[i] - row[j]) * inv_eps;
+                    if zv > col_mx[j] {
+                        col_mx[j] = zv;
+                    }
+                }
+            } else {
+                // Strict: division form (see module docs).
+                for j in 0..n {
+                    let zv = (f[i] - row[j]) / eps;
+                    if zv > col_mx[j] {
+                        col_mx[j] = zv;
+                    }
                 }
             }
         }
-        let mut col_s = vec![0.0f64; n];
+        for v in col_s.iter_mut() {
+            *v = 0.0;
+        }
         for i in 0..m {
             if f[i] == f64::NEG_INFINITY {
                 continue;
             }
             let row = cost.row(i);
-            for j in 0..n {
-                if col_mx[j] > f64::NEG_INFINITY {
-                    col_s[j] += (((f[i] - row[j]) / eps) - col_mx[j]).exp();
+            if fast {
+                // Once any row reaches here, col_mx[j] is finite for all
+                // j (it majorizes this row's own finite z-values), so the
+                // strict `> −∞` guard is vacuous on this path. Fused
+                // traversal, then one vectorized exp-accumulate; col_s
+                // still gains rows in ascending i — the combine order is
+                // policy-independent.
+                for j in 0..n {
+                    z[j] = (f[i] - row[j]).mul_add(inv_eps, -col_mx[j]);
+                }
+                fastmath::exp_accumulate(backend, z, col_s);
+            } else {
+                // Strict: division form (see module docs).
+                for j in 0..n {
+                    if col_mx[j] > f64::NEG_INFINITY {
+                        col_s[j] += (((f[i] - row[j]) / eps) - col_mx[j]).exp();
+                    }
                 }
             }
         }
@@ -162,12 +304,22 @@ pub fn sinkhorn_log(
                     continue;
                 }
                 let row = cost.row(i);
-                let mut ri = 0.0;
-                for j in 0..n {
-                    if g[j] > f64::NEG_INFINITY {
-                        ri += ((f[i] + g[j] - row[j]) / eps).exp();
+                let ri = if fast {
+                    // exp(−∞) = 0 absorbs the strict `g_j > −∞` guard.
+                    for j in 0..n {
+                        z[j] = (f[i] + g[j] - row[j]) * inv_eps;
                     }
-                }
+                    fastmath::exp_shifted_sum(backend, z, 0.0)
+                } else {
+                    let mut ri = 0.0;
+                    for j in 0..n {
+                        if g[j] > f64::NEG_INFINITY {
+                            // Strict: division form (see module docs).
+                            ri += ((f[i] + g[j] - row[j]) / eps).exp();
+                        }
+                    }
+                    ri
+                };
                 err = err.max((ri - a[i]).abs());
             }
             if err < tol {
@@ -175,23 +327,47 @@ pub fn sinkhorn_log(
             }
         }
     }
-    // Recover plan and u, v (may under/overflow individually; plan is safe).
-    let mut plan = Mat::zeros(m, n);
+    // Recover plan and u, v (may under/overflow individually; plan is
+    // safe). Rows write into the caller's plan — no fresh Mat, no
+    // per-row buffer.
     for i in 0..m {
+        let prow = plan.row_mut(i);
+        prow.fill(0.0);
         if f[i] == f64::NEG_INFINITY {
             continue;
         }
         let row = cost.row(i);
-        let prow = plan.row_mut(i);
-        for j in 0..n {
-            if g[j] > f64::NEG_INFINITY {
-                prow[j] = ((f[i] + g[j] - row[j]) / eps).exp();
+        if fast {
+            // exp(−∞) = 0 absorbs the strict `g_j > −∞` guard.
+            for j in 0..n {
+                z[j] = (f[i] + g[j] - row[j]) * inv_eps;
+            }
+            fastmath::exp_shifted_into(backend, z, 0.0, prow);
+        } else {
+            for j in 0..n {
+                if g[j] > f64::NEG_INFINITY {
+                    // Strict: division form (see module docs).
+                    prow[j] = ((f[i] + g[j] - row[j]) / eps).exp();
+                }
             }
         }
     }
-    let u: Vec<f64> = f.iter().map(|&fi| (fi / eps).exp()).collect();
-    let v: Vec<f64> = g.iter().map(|&gj| (gj / eps).exp()).collect();
-    SinkhornResult { plan, u, v, iters }
+    u.clear();
+    v.clear();
+    if fast {
+        z.clear();
+        z.extend(f.iter().map(|&fi| fi * inv_eps));
+        u.resize(m, 0.0);
+        fastmath::exp_shifted_into(backend, z, 0.0, u);
+        z.clear();
+        z.extend(g.iter().map(|&gj| gj * inv_eps));
+        v.resize(n, 0.0);
+        fastmath::exp_shifted_into(backend, z, 0.0, v);
+    } else {
+        u.extend(f.iter().map(|&fi| (fi / eps).exp()));
+        v.extend(g.iter().map(|&gj| (gj / eps).exp()));
+    }
+    iters
 }
 
 #[cfg(test)]
@@ -291,6 +467,85 @@ mod tests {
         for i in 0..n {
             assert!((r.plan[(i, i)] - 0.25).abs() < 1e-6, "diag {}", r.plan[(i, i)]);
         }
+    }
+
+    #[test]
+    fn log_domain_into_form_bit_identical_to_allocating_form() {
+        // The workspace form with a reused scratch must reproduce the
+        // allocating wrapper exactly — including on the second call with
+        // a warm (differently-sized-before) scratch.
+        let a = uniform(6);
+        let b = uniform(4);
+        let cost = Mat::from_fn(6, 4, |i, j| ((i as f64) * 0.7 - (j as f64)).abs());
+        let mut scratch = SinkhornLogScratch::new();
+        let mut plan = Mat::zeros(3, 3);
+        let mut u = Vec::new();
+        let mut v = Vec::new();
+        // Warm the scratch on a smaller problem first.
+        let a0 = uniform(3);
+        let b0 = uniform(3);
+        let cost0 = Mat::from_fn(3, 3, |i, j| (i + 2 * j) as f64 * 0.3);
+        sinkhorn_log_into(&a0, &b0, &cost0, 0.2, 50, 0.0, &mut scratch, &mut plan, &mut u, &mut v);
+        let mut plan2 = Mat::zeros(6, 4);
+        let iters =
+            sinkhorn_log_into(&a, &b, &cost, 0.1, 300, 1e-12, &mut scratch, &mut plan2, &mut u, &mut v);
+        let reference = sinkhorn_log(&a, &b, &cost, 0.1, 300, 1e-12);
+        assert_eq!(iters, reference.iters);
+        for i in 0..6 {
+            for j in 0..4 {
+                assert_eq!(plan2[(i, j)].to_bits(), reference.plan[(i, j)].to_bits(), "({i},{j})");
+            }
+        }
+        for (x, y) in u.iter().zip(&reference.u) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in v.iter().zip(&reference.v) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn fast_policy_tracks_strict_and_is_self_consistent() {
+        // The fast tier (fused sweeps, reciprocal-multiply, vectorized
+        // exp) must stay within tight relative error of strict, and be
+        // bit-stable under repetition (one policy, one answer).
+        use crate::kernel::simd::{with_numerics_override, NumericsPolicy};
+        let m = 9;
+        let n = 7;
+        let a = uniform(m);
+        let b = uniform(n);
+        let cost = Mat::from_fn(m, n, |i, j| ((i as f64) - 1.3 * (j as f64)).powi(2) * 0.21);
+        let strict = with_numerics_override(NumericsPolicy::Strict, || {
+            sinkhorn_log(&a, &b, &cost, 0.05, 400, 0.0)
+        });
+        let fast = with_numerics_override(NumericsPolicy::Fast, || {
+            sinkhorn_log(&a, &b, &cost, 0.05, 400, 0.0)
+        });
+        let fast2 = with_numerics_override(NumericsPolicy::Fast, || {
+            sinkhorn_log(&a, &b, &cost, 0.05, 400, 0.0)
+        });
+        let mut max_rel = 0.0f64;
+        for i in 0..m {
+            for j in 0..n {
+                let s = strict.plan[(i, j)];
+                let f = fast.plan[(i, j)];
+                assert_eq!(f.to_bits(), fast2.plan[(i, j)].to_bits(), "fast unstable ({i},{j})");
+                let rel = (f - s).abs() / s.abs().max(1e-300);
+                if rel > max_rel {
+                    max_rel = rel;
+                }
+            }
+        }
+        assert!(max_rel < 1e-10, "fast vs strict plan rel error {max_rel}");
+        // Zero-mass rows stay exactly zero under fast too.
+        let a0 = vec![0.5, 0.5, 0.0];
+        let b0 = vec![0.25, 0.75];
+        let c0 = Mat::from_fn(3, 2, |i, j| (i + j) as f64 * 0.4);
+        let rf = with_numerics_override(NumericsPolicy::Fast, || {
+            sinkhorn_log(&a0, &b0, &c0, 0.1, 200, 1e-12)
+        });
+        assert_eq!(rf.plan[(2, 0)], 0.0);
+        assert_eq!(rf.plan[(2, 1)], 0.0);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! recovery) runs on the crate-wide worker pool above the per-kernel
 //! grain — bit-identical at any `SPARGW_THREADS`.
 
+use crate::kernel::simd::{self, NumericsPolicy};
 use crate::kernel::{ops, Scalar};
 use crate::sparse::{Coo, Csr};
 
@@ -48,11 +49,21 @@ pub fn sparse_sinkhorn_fixed<S: Scalar>(
     for x in v.iter_mut() {
         *x = S::ONE;
     }
+    // Fast tier fuses each spmv with its guarded scaling update (the
+    // kv/ktu buffers are skipped entirely — the denominators live in
+    // registers). Value-identical to the two-pass form under the same
+    // policy; captured once per call per the capture-at-submit rule.
+    let fast = simd::current_numerics() == NumericsPolicy::Fast;
     for _ in 0..iters {
-        csr.matvec_into(k_vals, v, kv);
-        ops::scaling_update_into(a, kv, u);
-        csr.matvec_t_wide(k_vals, u, ktu);
-        ops::scaling_update_into(b, ktu, v);
+        if fast {
+            csr.matvec_scale_fused(k_vals, v, a, u);
+            csr.matvec_t_wide_scale_fused(k_vals, u, b, v);
+        } else {
+            csr.matvec_into(k_vals, v, kv);
+            ops::scaling_update_into(a, kv, u);
+            csr.matvec_t_wide(k_vals, u, ktu);
+            ops::scaling_update_into(b, ktu, v);
+        }
     }
     scale_plan_into(csr, k_vals, u, v, plan_vals);
 }

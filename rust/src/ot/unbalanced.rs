@@ -6,6 +6,7 @@
 //!   u = (a ⊘ K v)^{λ̄/(λ̄+ε̄)},   v = (b ⊘ Kᵀ u)^{λ̄/(λ̄+ε̄)} .
 //! With exponent → 1 (λ̄ → ∞) this degenerates to balanced Sinkhorn.
 
+use crate::kernel::simd::{self, NumericsPolicy};
 use crate::kernel::{ops, Scalar};
 use crate::linalg::Mat;
 use crate::sparse::{Coo, Csr};
@@ -49,11 +50,20 @@ pub fn sparse_unbalanced_sinkhorn_fixed<S: Scalar>(
     for x in v.iter_mut() {
         *x = S::ONE;
     }
+    // Fast tier fuses each spmv with its guarded power update (kv/ktu
+    // buffers skipped — see `sparse_sinkhorn_fixed`). Value-identical to
+    // the two-pass form under the same policy.
+    let fast = simd::current_numerics() == NumericsPolicy::Fast;
     for _ in 0..iters {
-        csr.matvec_into(k_vals, v, kv);
-        ops::pow_update_into(a, kv, expo, u);
-        csr.matvec_t_wide(k_vals, u, ktu);
-        ops::pow_update_into(b, ktu, expo, v);
+        if fast {
+            csr.matvec_pow_fused(k_vals, v, a, expo, u);
+            csr.matvec_t_wide_pow_fused(k_vals, u, b, expo, v);
+        } else {
+            csr.matvec_into(k_vals, v, kv);
+            ops::pow_update_into(a, kv, expo, u);
+            csr.matvec_t_wide(k_vals, u, ktu);
+            ops::pow_update_into(b, ktu, expo, v);
+        }
     }
     super::sparse_sinkhorn::scale_plan_into(csr, k_vals, u, v, plan_vals);
 }

@@ -269,6 +269,7 @@ where
     let mut metrics = MetricsRecorder::new();
     metrics.set_solver(solver.name());
     metrics.set_simd(crate::kernel::simd::current().name());
+    metrics.set_numerics(crate::kernel::simd::current_numerics().name());
     let mut drained_in_flight = 0usize;
     loop {
         if signal::shutdown_requested() && !state.is_draining() {

@@ -209,6 +209,93 @@ impl Csr {
         kern::spmv_t_wide_csc(&self.col_ptr, &self.cslot_src, &self.rows_e, vals, x, y);
     }
 
+    /// Fused Sinkhorn row sweep: `u[i] = target[i] ⊘ (A·x)_i` with the
+    /// guarded scaling applied in the same traversal as the gather (no
+    /// intermediate `kv` buffer — the fast-tier path of
+    /// [`sparse_sinkhorn_fixed`](crate::ot::sparse_sinkhorn_fixed)).
+    /// Value-identical to `matvec_into` + `scaling_update_into` under
+    /// the same numerics policy.
+    pub fn matvec_scale_fused<S: Scalar>(&self, vals: &[S], x: &[S], target: &[S], u: &mut [S]) {
+        self.check_vals(vals, "matvec_scale_fused");
+        assert_eq!(x.len(), self.ncols, "Csr::matvec_scale_fused: x length {} != ncols {}", x.len(), self.ncols);
+        assert_eq!(u.len(), self.nrows, "Csr::matvec_scale_fused: u length {} != nrows {}", u.len(), self.nrows);
+        kern::spmv_scale_fused(&self.row_ptr, &self.slot_col, &self.slot_src, vals, x, target, u);
+    }
+
+    /// Fused unbalanced row sweep: `u[i] = (target[i] ⊘ (A·x)_i)^expo`.
+    pub fn matvec_pow_fused<S: Scalar>(
+        &self,
+        vals: &[S],
+        x: &[S],
+        target: &[S],
+        expo: S,
+        u: &mut [S],
+    ) {
+        self.check_vals(vals, "matvec_pow_fused");
+        assert_eq!(x.len(), self.ncols, "Csr::matvec_pow_fused: x length {} != ncols {}", x.len(), self.ncols);
+        assert_eq!(u.len(), self.nrows, "Csr::matvec_pow_fused: u length {} != nrows {}", u.len(), self.nrows);
+        kern::spmv_pow_fused(
+            &self.row_ptr,
+            &self.slot_col,
+            &self.slot_src,
+            vals,
+            x,
+            target,
+            expo,
+            u,
+        );
+    }
+
+    /// Fused transposed Sinkhorn sweep: `v[j] = target[j] ⊘ (Aᵀ·x)_j`
+    /// with the wide (f64-accumulating) CSC gather and the guarded
+    /// scaling in one traversal (no `ktu` buffer). Value-identical to
+    /// `matvec_t_wide` + `scaling_update_into`.
+    pub fn matvec_t_wide_scale_fused<S: Scalar>(
+        &self,
+        vals: &[S],
+        x: &[S],
+        target: &[S],
+        v: &mut [S],
+    ) {
+        self.check_vals(vals, "matvec_t_wide_scale_fused");
+        assert_eq!(x.len(), self.nrows, "Csr::matvec_t_wide_scale_fused: x length {} != nrows {}", x.len(), self.nrows);
+        assert_eq!(v.len(), self.ncols, "Csr::matvec_t_wide_scale_fused: v length {} != ncols {}", v.len(), self.ncols);
+        kern::spmv_t_wide_scale_fused(
+            &self.col_ptr,
+            &self.cslot_src,
+            &self.rows_e,
+            vals,
+            x,
+            target,
+            v,
+        );
+    }
+
+    /// Fused transposed unbalanced sweep:
+    /// `v[j] = (target[j] ⊘ (Aᵀ·x)_j)^expo`.
+    pub fn matvec_t_wide_pow_fused<S: Scalar>(
+        &self,
+        vals: &[S],
+        x: &[S],
+        target: &[S],
+        expo: S,
+        v: &mut [S],
+    ) {
+        self.check_vals(vals, "matvec_t_wide_pow_fused");
+        assert_eq!(x.len(), self.nrows, "Csr::matvec_t_wide_pow_fused: x length {} != nrows {}", x.len(), self.nrows);
+        assert_eq!(v.len(), self.ncols, "Csr::matvec_t_wide_pow_fused: v length {} != ncols {}", v.len(), self.ncols);
+        kern::spmv_t_wide_pow_fused(
+            &self.col_ptr,
+            &self.cslot_src,
+            &self.rows_e,
+            vals,
+            x,
+            target,
+            expo,
+            v,
+        );
+    }
+
     /// Row sums (marginal `T 1`) into `y`. Per-row gather in ascending
     /// entry order (bit-identical to the scatter), parallel.
     pub fn row_sums_into<S: Scalar>(&self, vals: &[S], y: &mut [S]) {

@@ -1,0 +1,191 @@
+//! Numerics-policy suite: the crate-wide `strict|fast` tier.
+//!
+//! Three contracts, in order of strictness:
+//!
+//! 1. **Strict default** — with no `SPARGW_NUMERICS` in the
+//!    environment the resolved policy is strict, and an explicit
+//!    strict override is bit-identical to the default path for every
+//!    registered solver (same value bits, same plan mass bits, same
+//!    iteration counts under identical RNG streams).
+//! 2. **Fast tolerance** — under the fast tier (FMA contraction,
+//!    polynomial exp, fused Sinkhorn sweeps) the GW objective of every
+//!    registered solver lands within 1e-10 relative of its strict
+//!    value, with identical iteration schedules (`tol = 0` pins them;
+//!    fast never changes RNG streams, sampling, or chunk boundaries).
+//! 3. **Fast determinism** — within the fast tier results are
+//!    bit-identical across pool widths and across repeated runs: the
+//!    tier relaxes per-element rounding only, never the reduction
+//!    schedule.
+//!
+//! Run standalone in CI: `cargo test --release --test numerics`.
+
+use std::collections::BTreeMap;
+
+use spargw::datasets;
+use spargw::gw::core::Workspace;
+use spargw::gw::solver::{SolverBase, SolverRegistry};
+use spargw::kernel::simd::{self, NumericsPolicy};
+use spargw::rng::Xoshiro256;
+use spargw::runtime::pool::with_thread_limit;
+
+fn opts(kv: &[(&str, &str)]) -> BTreeMap<String, String> {
+    kv.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+/// `tol = 0` disables outer early-stopping so the iteration schedule is
+/// identical under both tiers and the values are directly comparable.
+fn smoke_base() -> SolverBase {
+    SolverBase { outer_iters: 6, inner_iters: 60, tol: 0.0, ..Default::default() }
+}
+
+/// Per-solver overrides mirroring the precision suite (LR-GW keeps its
+/// own mirror-descent schedule unless pinned).
+fn extra_opts(name: &str) -> Vec<(&'static str, &'static str)> {
+    if name == "lr_gw" {
+        vec![("outer", "6")]
+    } else {
+        Vec::new()
+    }
+}
+
+/// One deterministic solve of `name` under `policy`: fresh RNG stream,
+/// fresh workspace, shared gaussian instance.
+fn solve_under(
+    name: &str,
+    policy: NumericsPolicy,
+    p: &spargw::gw::GwProblem,
+) -> spargw::gw::solver::SolveReport {
+    let solver =
+        SolverRegistry::build_with_base(name, &opts(&extra_opts(name)), &smoke_base()).unwrap();
+    simd::with_numerics_override(policy, || {
+        let mut rng = Xoshiro256::new(7);
+        let mut ws = Workspace::new();
+        solver
+            .solve(p, &mut rng, &mut ws)
+            .unwrap_or_else(|e| panic!("{name} under {}: solve failed: {e}", policy.name()))
+    })
+}
+
+#[test]
+fn default_policy_is_strict_and_bit_identical_to_explicit_strict() {
+    // The resolved default consults SPARGW_NUMERICS, so this contract
+    // only holds in a clean environment (the CI numerics matrix sets
+    // the variable deliberately; there the fast tolerance test below
+    // carries the load).
+    if std::env::var_os("SPARGW_NUMERICS").is_some() {
+        return;
+    }
+    assert_eq!(simd::current_numerics(), NumericsPolicy::Strict);
+
+    let n = 12;
+    let mut rng0 = Xoshiro256::new(0xF0);
+    let inst = datasets::gaussian::gaussian(n, &mut rng0);
+    let p = inst.problem();
+    for &name in SolverRegistry::names() {
+        let solver =
+            SolverRegistry::build_with_base(name, &opts(&extra_opts(name)), &smoke_base())
+                .unwrap();
+        let mut rng1 = Xoshiro256::new(7);
+        let mut ws1 = Workspace::new();
+        let r_default = solver.solve(&p, &mut rng1, &mut ws1).unwrap();
+        let r_strict = solve_under(name, NumericsPolicy::Strict, &p);
+        assert_eq!(
+            r_default.value.to_bits(),
+            r_strict.value.to_bits(),
+            "{name}: explicit strict changed the value ({} vs {})",
+            r_default.value,
+            r_strict.value
+        );
+        assert_eq!(r_default.outer_iters, r_strict.outer_iters, "{name}: outer iters changed");
+        assert_eq!(
+            r_default.plan.sum().to_bits(),
+            r_strict.plan.sum().to_bits(),
+            "{name}: plan mass changed"
+        );
+    }
+}
+
+/// The acceptance criterion: fast tracks strict to 1e-10 relative on
+/// the GW objective for *every* registered solver, with the iteration
+/// schedule unchanged.
+#[test]
+fn fast_objective_tracks_strict_within_1e10_for_every_solver() {
+    let n = 12;
+    let mut rng0 = Xoshiro256::new(0xF0);
+    let inst = datasets::gaussian::gaussian(n, &mut rng0);
+    let p = inst.problem();
+    for &name in SolverRegistry::names() {
+        let rs = solve_under(name, NumericsPolicy::Strict, &p);
+        let rf = solve_under(name, NumericsPolicy::Fast, &p);
+        assert!(rs.value.is_finite(), "{name}: strict value not finite");
+        assert!(rf.value.is_finite(), "{name}: fast value not finite");
+        assert_eq!(
+            rs.outer_iters, rf.outer_iters,
+            "{name}: fast changed the iteration schedule"
+        );
+        let rel = (rf.value - rs.value).abs() / rs.value.abs().max(1e-6);
+        assert!(
+            rel <= 1e-10,
+            "{name}: fast {} vs strict {} (rel {rel:e} > 1e-10)",
+            rf.value,
+            rs.value
+        );
+        let mass_rel =
+            (rf.plan.sum() - rs.plan.sum()).abs() / rs.plan.sum().abs().max(1e-6);
+        assert!(
+            mass_rel <= 1e-10,
+            "{name}: fast plan mass {} vs strict {} (rel {mass_rel:e})",
+            rf.plan.sum(),
+            rs.plan.sum()
+        );
+    }
+}
+
+/// Within the fast tier: bit-identical across pool widths (the policy
+/// is captured at submit time, chunk boundaries and combine order never
+/// change) and across repeated runs.
+#[test]
+fn fast_is_bit_stable_across_thread_widths_and_reruns() {
+    let n = 12;
+    let mut rng0 = Xoshiro256::new(0xF0);
+    let inst = datasets::gaussian::gaussian(n, &mut rng0);
+    let p = inst.problem();
+    for &name in SolverRegistry::names() {
+        let r1 = with_thread_limit(1, || solve_under(name, NumericsPolicy::Fast, &p));
+        let r8 = with_thread_limit(8, || solve_under(name, NumericsPolicy::Fast, &p));
+        let r8b = with_thread_limit(8, || solve_under(name, NumericsPolicy::Fast, &p));
+        assert_eq!(
+            r1.value.to_bits(),
+            r8.value.to_bits(),
+            "{name}: fast value changed across widths ({} vs {})",
+            r1.value,
+            r8.value
+        );
+        assert_eq!(
+            r1.plan.sum().to_bits(),
+            r8.plan.sum().to_bits(),
+            "{name}: fast plan mass changed across widths"
+        );
+        assert_eq!(
+            r8.value.to_bits(),
+            r8b.value.to_bits(),
+            "{name}: fast value changed across reruns at the same width"
+        );
+    }
+}
+
+/// The registry names both tiers for every solver; the SparCore family
+/// additionally advertises the fused sweeps.
+#[test]
+fn registry_reports_numerics_tiers() {
+    for &name in SolverRegistry::names() {
+        let tiers = SolverRegistry::numerics(name);
+        assert!(tiers.contains("strict"), "{name}: {tiers}");
+        assert!(tiers.contains("fast"), "{name}: {tiers}");
+        assert_eq!(
+            tiers.contains("fused sweeps"),
+            SolverRegistry::supports_f32(name),
+            "{name}: fused-sweep note must track the SparCore family: {tiers}"
+        );
+    }
+}
