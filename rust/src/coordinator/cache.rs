@@ -21,7 +21,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use super::scheduler::run_jobs;
 use crate::datasets::graphsets::GraphDataset;
@@ -140,12 +140,14 @@ impl LruInner {
     /// Evict least-recently-used entries until at most `capacity` remain.
     fn evict_to(&mut self, capacity: usize) {
         while self.entries.len() > capacity {
-            let oldest = self
+            let Some(oldest) = self
                 .entries
                 .iter()
                 .min_by_key(|(_, (_, used))| *used)
                 .map(|(k, _)| *k)
-                .expect("non-empty map has a minimum");
+            else {
+                break;
+            };
             self.entries.remove(&oldest);
             self.stats.evicted += 1;
         }
@@ -186,9 +188,20 @@ impl LruStructureCache {
         self.capacity
     }
 
+    /// Lock the inner state, recovering from poisoning. The server
+    /// isolates request panics with `catch_unwind`, so a panic may
+    /// unwind past a thread holding this lock; the guarded state is
+    /// valid at every await-free step (entries are immutable Arcs and
+    /// the counters are plain integers), so taking over a poisoned
+    /// lock can never observe torn data — while propagating the poison
+    /// would brick the warm cache for every later request.
+    fn lock(&self) -> MutexGuard<'_, LruInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Currently resident structures.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().entries.len()
+        self.lock().entries.len()
     }
 
     /// True when nothing is resident.
@@ -198,7 +211,7 @@ impl LruStructureCache {
 
     /// Lifetime counters (across every `acquire` since construction).
     pub fn stats(&self) -> CacheStats {
-        self.inner.lock().unwrap().stats
+        self.lock().stats
     }
 
     /// Fetch-or-build the prepared structures of `dataset` for the
@@ -227,7 +240,7 @@ impl LruStructureCache {
         let mut delta = CacheStats::default();
         let mut missing: Vec<usize> = Vec::new();
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.lock();
             for (slot, &i) in indices.iter().enumerate() {
                 match inner.touch((fingerprint, i)) {
                     Some(arc) => {
@@ -249,7 +262,7 @@ impl LruStructureCache {
                 Arc::new(PreparedStructure::new(dataset.graphs[i].marginal()))
             });
         if !missing.is_empty() {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.lock();
             for (slot, arc) in missing.iter().zip(built) {
                 let key = (fingerprint, indices[*slot]);
                 // A racing acquire may have inserted meanwhile; keep the
@@ -271,13 +284,13 @@ impl LruStructureCache {
             inner.stats.built += delta.built;
         }
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.lock();
             inner.stats.hits += delta.hits;
             inner.stats.misses += delta.misses;
         }
         let entries = out
             .into_iter()
-            .map(|o| o.expect("every requested structure resolved"))
+            .map(|o| o.expect("acquire resolved every requested structure (hit or built)"))
             .collect();
         (entries, delta)
     }
@@ -394,6 +407,29 @@ mod tests {
         for (p, b) in pinned.iter().zip(&before) {
             assert_eq!(&p.marginal, b);
         }
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_instead_of_bricking_the_cache() {
+        // The server catches request panics; if one unwinds while a
+        // thread holds the cache lock, later requests must still be
+        // served warm rather than hitting a poisoned-lock panic.
+        let mut ds = imdb_b(8);
+        ds.graphs.truncate(2);
+        let cache = Arc::new(LruStructureCache::new(4));
+        let (_, d) = cache.acquire(&ds, 3, None);
+        assert_eq!(d.built, 2);
+        let poisoner = Arc::clone(&cache);
+        let joined = std::thread::spawn(move || {
+            let _guard = poisoner.inner.lock().unwrap();
+            panic!("poisoning the cache lock");
+        })
+        .join();
+        assert!(joined.is_err(), "the poisoner thread must have panicked");
+        assert!(cache.inner.is_poisoned());
+        assert_eq!(cache.len(), 2);
+        let (_, warm) = cache.acquire(&ds, 3, None);
+        assert_eq!(warm, CacheStats { built: 0, hits: 2, misses: 0, evicted: 0 });
     }
 
     #[test]

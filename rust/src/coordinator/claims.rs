@@ -1,0 +1,946 @@
+//! Lease-based chunk claiming: N workers cooperate on one Gram matrix.
+//!
+//! The static `--shard i/of` split assigns work up front, so a crashed
+//! worker silently orphans its shard. This module replaces the static
+//! split with *dynamic claims* over a shared `--claim-dir` (one
+//! directory per Gram run, typically on a shared filesystem):
+//!
+//! ```text
+//! <claim-dir>/
+//!   meta                      # normalized sink header + chunk layout
+//!   claims/chunk-<k>.claim    # held leases: "worker=<w> pid=<p> ..."
+//!   done/chunk-<k>            # commit markers (tmp + rename)
+//!   parts/part-<w>.sink       # per-worker spargw-sink v1 part files
+//! ```
+//!
+//! The pair list is cut into fixed-size chunks. A worker claims a chunk
+//! by *atomically creating* `claims/chunk-<k>.claim` with the holder
+//! line already inside it (write a private tmp, then `link(2)` it into
+//! place — `EEXIST` means held, and a reader never observes a
+//! half-written holder). While computing, a heartbeat thread rewrites
+//! the claim file so its mtime acts as the lease clock; a claim whose
+//! mtime is older than `--lease-ms` is *expired* and any worker may
+//! reclaim it by renaming it aside (rename is atomic, so exactly one
+//! reclaimer wins). Finished chunks are committed by rewriting the
+//! worker's own part file (tmp + rename), then publishing the done
+//! marker, then releasing the claim — strictly in that order, so a
+//! crash at any instant leaves either an unclaimed/expired chunk
+//! (recomputed) or a fully committed one, never a done marker pointing
+//! at missing rows.
+//!
+//! Correctness leans on the determinism contract: every pair's value is
+//! derived from `derive_seed(seed, i*n+j)` and is bit-identical across
+//! workers, threads, and SIMD backends. Duplicated computation — two
+//! workers racing a chunk whose lease flickered — therefore produces
+//! bit-identical rows, and the first-part-wins merge dedupe is
+//! cosmetic. Claims are an *efficiency* protocol; correctness comes
+//! from determinism plus atomic publication.
+//!
+//! All claim-protocol IO runs through the fault points in
+//! [`crate::util::fault`] (`claim.create`, `claim.heartbeat`,
+//! `claim.reclaim`, `claim.release`, `chunk.done`, `part.write`,
+//! `part.publish`, `merge.write`, `merge.publish`) and transient
+//! failures on publish paths are absorbed by bounded deterministic
+//! retry ([`crate::util::fault::retry_io`]).
+
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, SystemTime};
+
+use super::engine::{header_without_simd, parse_sink, SinkRow};
+use crate::util::error::{Error, Result};
+use crate::util::fault;
+use crate::{bail, ensure, format_err};
+
+/// Auto chunk sizing targets at most this many chunks, so claim-file
+/// traffic stays O(64) even for huge Gram matrices while small runs
+/// still get per-pair granularity.
+const MAX_AUTO_CHUNKS: usize = 64;
+
+/// Configuration for a cooperative claim-mode run (`--claim-dir`).
+#[derive(Debug, Clone)]
+pub struct ClaimConfig {
+    /// Shared directory coordinating the run.
+    pub dir: PathBuf,
+    /// Worker identity; names this worker's claim tmp and part files.
+    /// Restricted to `[A-Za-z0-9._-]` so it is filesystem-safe.
+    pub worker: String,
+    /// Lease duration: a claim untouched for longer is expired and may
+    /// be reclaimed by any worker.
+    pub lease_ms: u64,
+    /// Pairs per chunk; 0 picks automatically (≤ 64 chunks).
+    pub chunk_pairs: usize,
+}
+
+impl ClaimConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> ClaimConfig {
+        ClaimConfig {
+            dir: dir.into(),
+            worker: format!("w{}", std::process::id()),
+            lease_ms: 5000,
+            chunk_pairs: 0,
+        }
+    }
+}
+
+/// Counters surfaced through `MetricsRecorder` and the run summary.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClaimStats {
+    /// Chunks this worker claimed (and computed).
+    pub claimed: u64,
+    /// Expired claims this worker successfully reclaimed.
+    pub reclaimed: u64,
+    /// Expired leases observed (each reclaim attempt, won or lost).
+    pub lease_expired: u64,
+    /// Transient IO failures absorbed by bounded retry.
+    pub retried: u64,
+}
+
+impl ClaimStats {
+    /// Space-separated `key=value` tokens for the run summary.
+    pub fn tokens(&self) -> String {
+        format!(
+            "claimed={} reclaimed={} lease_expired={} retried={}",
+            self.claimed, self.reclaimed, self.lease_expired, self.retried
+        )
+    }
+}
+
+/// Resolve the chunk layout: `(chunk_pairs, n_chunks)`. A requested
+/// size of 0 selects automatic sizing (at most [`MAX_AUTO_CHUNKS`]
+/// chunks, at least one pair each).
+pub fn chunk_layout(n_pairs: usize, requested_chunk_pairs: usize) -> (usize, usize) {
+    let chunk_pairs = if requested_chunk_pairs == 0 {
+        n_pairs.div_ceil(MAX_AUTO_CHUNKS).max(1)
+    } else {
+        requested_chunk_pairs
+    };
+    (chunk_pairs, n_pairs.div_ceil(chunk_pairs))
+}
+
+/// Contiguous range of pair indices owned by `chunk`.
+pub fn chunk_range(chunk: usize, n_pairs: usize, chunk_pairs: usize) -> Range<usize> {
+    let start = chunk * chunk_pairs;
+    start..(start + chunk_pairs).min(n_pairs)
+}
+
+fn validate_worker_id(worker: &str) -> Result<()> {
+    ensure!(!worker.is_empty(), "worker id must not be empty");
+    ensure!(
+        worker
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')),
+        "worker id {worker:?} may only contain [A-Za-z0-9._-] (it names claim and part files)"
+    );
+    Ok(())
+}
+
+/// Handle on an open claim directory; owns this worker's view of the
+/// protocol (committed lines, counters) but no claims — those live in
+/// [`ClaimGuard`]s.
+pub struct ClaimDir {
+    root: PathBuf,
+    worker: String,
+    lease: Duration,
+    n_pairs: usize,
+    chunk_pairs: usize,
+    n_chunks: usize,
+    /// Full sink header (with simd/numerics tokens) written to parts.
+    header: String,
+    /// Lines committed by *this* worker, in commit order.
+    committed: Vec<String>,
+    reclaim_seq: u64,
+    pub stats: ClaimStats,
+}
+
+/// Chunks recovered from every committed part file.
+pub struct MergedChunks {
+    /// Trusted rows across all parts: `(chunk, i, j, value)`.
+    pub rows: Vec<(usize, usize, usize, f64)>,
+    /// Verbatim part-file lines per chunk (pair rows, then `done`).
+    blocks: BTreeMap<usize, Vec<String>>,
+}
+
+impl MergedChunks {
+    pub fn has_chunk(&self, chunk: usize) -> bool {
+        self.blocks.contains_key(&chunk)
+    }
+}
+
+impl ClaimDir {
+    /// Open (creating if needed) a claim directory for a run described
+    /// by `header` over `n_pairs` pairs. Refuses a directory that was
+    /// initialized for a different run (solver, dataset, seed, options,
+    /// or chunk layout).
+    pub fn open(cfg: &ClaimConfig, header: &str, n_pairs: usize) -> Result<ClaimDir> {
+        validate_worker_id(&cfg.worker)?;
+        let (chunk_pairs, n_chunks) = chunk_layout(n_pairs, cfg.chunk_pairs);
+        for sub in ["claims", "done", "parts"] {
+            let dir = cfg.dir.join(sub);
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| Error::from(e).wrap(format!("creating claim dir {}", dir.display())))?;
+        }
+        let mut dir = ClaimDir {
+            root: cfg.dir.clone(),
+            worker: cfg.worker.clone(),
+            lease: Duration::from_millis(cfg.lease_ms),
+            n_pairs,
+            chunk_pairs,
+            n_chunks,
+            header: header.to_string(),
+            committed: Vec::new(),
+            reclaim_seq: 0,
+            stats: ClaimStats::default(),
+        };
+        dir.init_meta()?;
+        Ok(dir)
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.n_chunks
+    }
+
+    /// Pair indices owned by `chunk`.
+    pub fn chunk_jobs(&self, chunk: usize) -> Range<usize> {
+        chunk_range(chunk, self.n_pairs, self.chunk_pairs)
+    }
+
+    pub fn worker(&self) -> &str {
+        &self.worker
+    }
+
+    /// How long to sleep between claim scans when every open chunk is
+    /// leased to someone else: a quarter lease, clamped to [10ms,
+    /// 250ms] so tests with tiny leases do not busy-spin and huge
+    /// leases do not stall the scan.
+    pub fn poll_interval(&self) -> Duration {
+        (self.lease / 4).clamp(Duration::from_millis(10), Duration::from_millis(250))
+    }
+
+    fn claim_path(&self, chunk: usize) -> PathBuf {
+        self.root.join("claims").join(format!("chunk-{chunk}.claim"))
+    }
+
+    fn done_path(&self, chunk: usize) -> PathBuf {
+        self.root.join("done").join(format!("chunk-{chunk}"))
+    }
+
+    fn part_path(&self) -> PathBuf {
+        self.root.join("parts").join(format!("part-{}.sink", self.worker))
+    }
+
+    pub fn is_done(&self, chunk: usize) -> bool {
+        self.done_path(chunk).exists()
+    }
+
+    pub fn all_done(&self) -> bool {
+        (0..self.n_chunks).all(|k| self.is_done(k))
+    }
+
+    /// Write the `meta` file on first contact (tmp + rename) and verify
+    /// it matches this run's header and layout. The header is
+    /// normalized like resume does (simd/numerics tokens stripped), so
+    /// workers with different SIMD backends may cooperate — the
+    /// determinism contract makes their rows bit-identical.
+    fn init_meta(&mut self) -> Result<()> {
+        let meta = self.root.join("meta");
+        let expected = format!(
+            "{}\n# layout chunk_pairs={} chunks={}\n",
+            header_without_simd(&self.header),
+            self.chunk_pairs,
+            self.n_chunks
+        );
+        if !meta.exists() {
+            let tmp = self.root.join(format!(".meta.tmp-{}", self.worker));
+            let mut retried = 0;
+            fault::retry_io("writing claim-dir meta", &mut retried, || {
+                std::fs::write(&tmp, expected.as_bytes())
+            })?;
+            fault::retry_io("publishing claim-dir meta", &mut retried, || {
+                std::fs::rename(&tmp, &meta)
+            })?;
+            self.stats.retried += retried;
+        }
+        let found = std::fs::read_to_string(&meta)
+            .map_err(|e| Error::from(e).wrap(format!("reading claim-dir meta {}", meta.display())))?;
+        ensure!(
+            found == expected,
+            "claim dir {} was initialized for a different run:\n  found    {:?}\n  expected {:?}\n\
+             (different solver, dataset, seed, options, or chunk layout — use a fresh --claim-dir)",
+            self.root.display(),
+            found.trim_end(),
+            expected.trim_end()
+        );
+        Ok(())
+    }
+
+    /// Try to claim `chunk`. `Ok(None)` means the chunk is already done
+    /// or live-leased by another worker — move on and re-scan later.
+    pub fn try_claim(&mut self, chunk: usize) -> Result<Option<ClaimGuard>> {
+        let path = self.claim_path(chunk);
+        loop {
+            if self.is_done(chunk) {
+                return Ok(None);
+            }
+            if self.create_claim(chunk, &path)? {
+                self.stats.claimed += 1;
+                let guard = ClaimGuard::start(path, self.worker.clone(), self.lease);
+                // A peer may have committed between our done check and
+                // the claim landing; never recompute a finished chunk.
+                if self.is_done(chunk) {
+                    self.stats.claimed -= 1;
+                    return Ok(None); // guard drop releases the claim
+                }
+                return Ok(Some(guard));
+            }
+            // Held. Expired? The claim file's mtime is the lease clock.
+            let age = match std::fs::metadata(&path) {
+                Ok(md) => md
+                    .modified()
+                    .ok()
+                    .and_then(|t| SystemTime::now().duration_since(t).ok()),
+                // Released or committed in the meantime (or the stat
+                // failed): let the next scan sort it out.
+                Err(_) => return Ok(None),
+            };
+            match age {
+                Some(age) if age >= self.lease => {
+                    self.stats.lease_expired += 1;
+                    if self.reclaim(chunk, &path)? {
+                        self.stats.reclaimed += 1;
+                        continue; // race the freed slot
+                    }
+                    return Ok(None); // another reclaimer won
+                }
+                // Live lease — or unreadable mtime, which we treat as
+                // live to err on the side of not stealing work.
+                _ => return Ok(None),
+            }
+        }
+    }
+
+    /// Atomically create the claim file with the holder line already in
+    /// it: write a private tmp, `link(2)` it into place (`EEXIST` ⇒
+    /// held), then drop the tmp. Readers can never observe a claim
+    /// without its holder metadata.
+    fn create_claim(&mut self, chunk: usize, path: &Path) -> Result<bool> {
+        let tmp = self.root.join("claims").join(format!(".claim-{}.tmp", self.worker));
+        let content = format!(
+            "worker={} pid={} chunk={chunk} beat=0\n",
+            self.worker,
+            std::process::id()
+        );
+        let mut retried = 0;
+        let write_tmp = fault::retry_io("writing claim tmp", &mut retried, || {
+            let mut f = std::fs::File::create(&tmp)?;
+            fault::write_all("claim.create", &mut f, content.as_bytes())?;
+            f.flush()
+        });
+        if let Err(e) = write_tmp {
+            let _ = std::fs::remove_file(&tmp);
+            self.stats.retried += retried;
+            return Err(e);
+        }
+        let mut attempts = 0u32;
+        let created = loop {
+            match std::fs::hard_link(&tmp, path) {
+                Ok(()) => break true,
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => break false,
+                Err(_) if attempts + 1 < fault::RETRY_ATTEMPTS => {
+                    attempts += 1;
+                    retried += 1;
+                    std::thread::sleep(Duration::from_millis(2 * u64::from(attempts)));
+                }
+                Err(e) => {
+                    let _ = std::fs::remove_file(&tmp);
+                    self.stats.retried += retried;
+                    return Err(Error::from(e)
+                        .wrap(format!("linking claim {} into place", path.display())));
+                }
+            }
+        };
+        let _ = std::fs::remove_file(&tmp);
+        self.stats.retried += retried;
+        Ok(created)
+    }
+
+    /// Reclaim an expired claim by renaming it aside — rename is
+    /// atomic, so exactly one reclaimer wins; the loser sees `ENOENT`.
+    /// Note the usurped holder (if merely slow, not dead) keeps
+    /// computing and may still commit its chunk: that is safe, because
+    /// rows are bit-identical by the determinism contract and each
+    /// worker writes only its own part file.
+    fn reclaim(&mut self, chunk: usize, path: &Path) -> Result<bool> {
+        self.reclaim_seq += 1;
+        let aside = self
+            .root
+            .join("claims")
+            .join(format!(".expired-{chunk}-{}-{}", self.worker, self.reclaim_seq));
+        let mut attempts = 0u32;
+        loop {
+            let res = fault::hit("claim.reclaim").and_then(|()| std::fs::rename(path, &aside));
+            match res {
+                Ok(()) => {
+                    let _ = std::fs::remove_file(&aside);
+                    return Ok(true);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(false),
+                Err(_) if attempts + 1 < fault::RETRY_ATTEMPTS => {
+                    attempts += 1;
+                    self.stats.retried += 1;
+                    std::thread::sleep(Duration::from_millis(2 * u64::from(attempts)));
+                }
+                Err(e) => {
+                    return Err(Error::from(e).wrap(format!(
+                        "reclaiming expired claim {} (chunk {chunk})",
+                        path.display()
+                    )));
+                }
+            }
+        }
+    }
+
+    /// Commit a computed chunk: append its rows and `done` line to this
+    /// worker's committed set, republish the part file (tmp + rename),
+    /// publish the done marker, then release the claim — strictly in
+    /// that order (see the module docs for the crash analysis).
+    pub fn commit_chunk(&mut self, guard: ClaimGuard, chunk: usize, rows: &[SinkRow]) -> Result<()> {
+        for r in rows {
+            self.committed.push(r.line());
+        }
+        self.committed.push(format!("done {chunk}"));
+        self.publish_part()
+            .map_err(|e| e.wrap(format!("committing chunk {chunk} (worker {})", self.worker)))?;
+        let tmp = self
+            .root
+            .join("done")
+            .join(format!(".chunk-{chunk}.tmp-{}", self.worker));
+        let content = format!("worker={}\n", self.worker);
+        let mut retried = 0;
+        fault::retry_io("writing done marker", &mut retried, || {
+            let mut f = std::fs::File::create(&tmp)?;
+            fault::write_all("chunk.done", &mut f, content.as_bytes())?;
+            f.flush()
+        })?;
+        fault::retry_io("publishing done marker", &mut retried, || {
+            std::fs::rename(&tmp, self.done_path(chunk))
+        })?;
+        self.stats.retried += retried;
+        drop(guard); // stop the heartbeat, release the claim
+        Ok(())
+    }
+
+    /// Rewrite this worker's part file from its full committed set and
+    /// atomically publish it. Full rewrite (not append) keeps the part
+    /// a valid `spargw-sink v1` stream at every published instant.
+    fn publish_part(&mut self) -> Result<()> {
+        let tmp = self.root.join("parts").join(format!(".part-{}.tmp", self.worker));
+        let path = self.part_path();
+        let mut text = String::with_capacity(
+            self.header.len() + 1 + self.committed.iter().map(|l| l.len() + 1).sum::<usize>(),
+        );
+        text.push_str(&self.header);
+        text.push('\n');
+        for line in &self.committed {
+            text.push_str(line);
+            text.push('\n');
+        }
+        let mut retried = 0;
+        fault::retry_io("writing part file", &mut retried, || {
+            let mut f = std::fs::File::create(&tmp)?;
+            fault::write_all("part.write", &mut f, text.as_bytes())?;
+            f.flush()?;
+            f.sync_all() // the rename must publish durable bytes
+        })?;
+        fault::retry_io("publishing part file", &mut retried, || {
+            fault::hit("part.publish").and_then(|()| std::fs::rename(&tmp, &path))
+        })?;
+        self.stats.retried += retried;
+        Ok(())
+    }
+
+    /// Read every published part file and collect the trusted (done-
+    /// marked) chunks. Parts are visited in sorted filename order and
+    /// the first part committing a chunk wins; later duplicates are
+    /// dropped (their rows are bit-identical — only the latency column
+    /// can differ, and the winner's is kept verbatim).
+    pub fn collect(&self) -> Result<MergedChunks> {
+        let parts_dir = self.root.join("parts");
+        let mut parts: Vec<PathBuf> = std::fs::read_dir(&parts_dir)
+            .map_err(|e| Error::from(e).wrap(format!("listing {}", parts_dir.display())))?
+            .filter_map(|entry| entry.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("part-") && n.ends_with(".sink"))
+            })
+            .collect();
+        parts.sort();
+        let mut merged = MergedChunks { rows: Vec::new(), blocks: BTreeMap::new() };
+        for part in &parts {
+            let state = parse_sink(part, &self.header)
+                .map_err(|e| e.wrap(format!("reading part {}", part.display())))?;
+            // parse_sink emits trusted lines block-by-block: a chunk's
+            // pair rows, then its `done` line. Regroup them by chunk.
+            let mut cur_lines: Vec<String> = Vec::new();
+            let mut cur_rows: Vec<(usize, usize, usize, f64)> = Vec::new();
+            for line in &state.raw {
+                let fields: Vec<&str> = line.split_ascii_whitespace().collect();
+                match fields.as_slice() {
+                    ["pair", c, i, j, bits, ..] => {
+                        let parsed = (|| -> Option<(usize, usize, usize, u64)> {
+                            Some((
+                                c.parse().ok()?,
+                                i.parse().ok()?,
+                                j.parse().ok()?,
+                                u64::from_str_radix(bits, 16).ok()?,
+                            ))
+                        })();
+                        let Some((c, i, j, bits)) = parsed else {
+                            bail!("part {}: corrupt trusted line {line:?}", part.display());
+                        };
+                        cur_lines.push(line.clone());
+                        cur_rows.push((c, i, j, f64::from_bits(bits)));
+                    }
+                    ["done", c] => {
+                        let c: usize = c.parse().map_err(|_| {
+                            format_err!("part {}: corrupt done marker {line:?}", part.display())
+                        })?;
+                        cur_lines.push(line.clone());
+                        ensure!(
+                            c < self.n_chunks,
+                            "part {} marks chunk {c} done but the layout has {} chunks",
+                            part.display(),
+                            self.n_chunks
+                        );
+                        ensure!(
+                            cur_rows.iter().all(|&(rc, ..)| rc == c),
+                            "part {}: chunk {c}'s block contains rows of another chunk",
+                            part.display()
+                        );
+                        let expect = self.chunk_jobs(c).len();
+                        ensure!(
+                            cur_rows.len() == expect,
+                            "part {}: chunk {c} committed {} rows, layout expects {expect}",
+                            part.display(),
+                            cur_rows.len()
+                        );
+                        if let Entry::Vacant(v) = merged.blocks.entry(c) {
+                            v.insert(std::mem::take(&mut cur_lines));
+                            merged.rows.append(&mut cur_rows);
+                        } else {
+                            cur_lines.clear();
+                            cur_rows.clear();
+                        }
+                    }
+                    _ => bail!("part {}: unrecognized trusted line {line:?}", part.display()),
+                }
+            }
+        }
+        Ok(merged)
+    }
+
+    /// Write the merged single-file sink (header, then every chunk's
+    /// block in chunk order) via tmp + atomic rename. Requires every
+    /// chunk to be committed. Concurrent finishers each publish a
+    /// complete, bit-identical file (worker-suffixed tmps; last rename
+    /// wins), so no lock is needed.
+    pub fn merge_to(&mut self, out: &Path, merged: &MergedChunks) -> Result<()> {
+        let missing: Vec<usize> =
+            (0..self.n_chunks).filter(|k| !merged.blocks.contains_key(k)).collect();
+        ensure!(
+            missing.is_empty(),
+            "cannot merge {}: chunks {missing:?} have no committed part",
+            out.display()
+        );
+        let mut text = String::new();
+        text.push_str(&self.header);
+        text.push('\n');
+        for lines in merged.blocks.values() {
+            for line in lines {
+                text.push_str(line);
+                text.push('\n');
+            }
+        }
+        let name = out
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "merged.sink".to_string());
+        let tmp = out.with_file_name(format!(".{name}.tmp-{}", self.worker));
+        let mut retried = 0;
+        fault::retry_io("writing merged sink", &mut retried, || {
+            let mut f = std::fs::File::create(&tmp)?;
+            fault::write_all("merge.write", &mut f, text.as_bytes())?;
+            f.flush()?;
+            f.sync_all()
+        })?;
+        fault::retry_io("publishing merged sink", &mut retried, || {
+            fault::hit("merge.publish").and_then(|()| std::fs::rename(&tmp, out))
+        })?;
+        self.stats.retried += retried;
+        Ok(())
+    }
+}
+
+/// A held claim. A background heartbeat rewrites the claim file every
+/// quarter lease to renew it; dropping the guard stops the heartbeat
+/// and releases (removes) the claim file.
+pub struct ClaimGuard {
+    path: PathBuf,
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    beats: Arc<AtomicU64>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ClaimGuard {
+    fn start(path: PathBuf, worker: String, lease: Duration) -> ClaimGuard {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let beats = Arc::new(AtomicU64::new(0));
+        let interval = (lease / 4).max(Duration::from_millis(10));
+        let thread = {
+            let stop = Arc::clone(&stop);
+            let beats = Arc::clone(&beats);
+            let path = path.clone();
+            std::thread::spawn(move || {
+                let (flag, cv) = &*stop;
+                let mut n: u64 = 0;
+                loop {
+                    let guard = flag.lock().unwrap_or_else(PoisonError::into_inner);
+                    let (guard, _timeout) = cv
+                        .wait_timeout_while(guard, interval, |stopped| !*stopped)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    if *guard {
+                        return; // released
+                    }
+                    drop(guard);
+                    n += 1;
+                    // Renew the lease by rewriting the claim in place —
+                    // the file's mtime is the lease clock.
+                    let renew = (|| -> std::io::Result<()> {
+                        fault::hit("claim.heartbeat")?;
+                        let mut f = std::fs::OpenOptions::new()
+                            .write(true)
+                            .truncate(true)
+                            .open(&path)?;
+                        f.write_all(
+                            format!("worker={worker} pid={} beat={n}\n", std::process::id())
+                                .as_bytes(),
+                        )?;
+                        f.flush()
+                    })();
+                    match renew {
+                        Ok(()) => {
+                            beats.fetch_add(1, Ordering::Relaxed);
+                        }
+                        // Claim vanished: usurped by a reclaimer (or
+                        // already released). Stop renewing; the commit
+                        // still goes through and stays safe because
+                        // duplicate rows are bit-identical.
+                        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return,
+                        // A failed renewal is tolerated: worst case the
+                        // lease expires and the chunk is duplicated,
+                        // which determinism makes harmless.
+                        Err(_) => {}
+                    }
+                }
+            })
+        };
+        ClaimGuard { path, stop, beats, thread: Some(thread) }
+    }
+
+    /// Lease renewals successfully written so far.
+    pub fn beats(&self) -> u64 {
+        self.beats.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ClaimGuard {
+    fn drop(&mut self) {
+        {
+            let (flag, cv) = &*self.stop;
+            *flag.lock().unwrap_or_else(PoisonError::into_inner) = true;
+            cv.notify_all();
+        }
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        // Best-effort release: a leftover claim file simply ages out,
+        // and done markers are checked before claims, so a stale claim
+        // on a finished chunk is never even examined.
+        let _ = fault::hit("claim.release").and_then(|()| std::fs::remove_file(&self.path));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_claim_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("spargw-claims-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn test_header(n_chunks: usize) -> String {
+        format!("# spargw-sink v1 solver=test n=4 shards={n_chunks} config=00000000deadbeef simd=scalar numerics=exact")
+    }
+
+    fn row(chunk: usize, i: usize, j: usize) -> SinkRow {
+        SinkRow { shard: chunk, i, j, value: (i * 10 + j) as f64 * 0.25, latency: 0.001 }
+    }
+
+    fn cfg(dir: &Path, worker: &str) -> ClaimConfig {
+        ClaimConfig {
+            dir: dir.to_path_buf(),
+            worker: worker.to_string(),
+            lease_ms: 5000,
+            chunk_pairs: 2,
+        }
+    }
+
+    #[test]
+    fn chunk_layout_covers_every_pair_exactly_once() {
+        for n_pairs in [0usize, 1, 2, 5, 63, 64, 65, 1000] {
+            for req in [0usize, 1, 2, 7] {
+                let (cp, n_chunks) = chunk_layout(n_pairs, req);
+                let mut seen = vec![0u32; n_pairs];
+                for k in 0..n_chunks {
+                    let r = chunk_range(k, n_pairs, cp);
+                    assert!(!r.is_empty(), "chunk {k} empty for n_pairs={n_pairs} req={req}");
+                    for p in r {
+                        seen[p] += 1;
+                    }
+                }
+                assert!(seen.iter().all(|&c| c == 1), "n_pairs={n_pairs} req={req}: {seen:?}");
+                if req == 0 {
+                    assert!(n_chunks <= MAX_AUTO_CHUNKS.max(1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_ids_are_filesystem_safe() {
+        assert!(validate_worker_id("w42.node-3_a").is_ok());
+        for bad in ["", "a/b", "a b", "é"] {
+            let err = validate_worker_id(bad).unwrap_err().to_string();
+            assert!(err.contains("worker id"), "{err}");
+        }
+    }
+
+    #[test]
+    fn claim_commit_merge_round_trip() {
+        let root = temp_claim_dir("roundtrip");
+        let header = test_header(3);
+        // 5 pairs, 2 per chunk → 3 chunks.
+        let mut dir = ClaimDir::open(&cfg(&root, "alpha"), &header, 5).unwrap();
+        assert_eq!(dir.n_chunks(), 3);
+        let pairs = [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3)];
+        for k in 0..3 {
+            let guard = dir.try_claim(k).unwrap().expect("uncontended claim");
+            let rows: Vec<SinkRow> =
+                dir.chunk_jobs(k).map(|p| row(k, pairs[p].0, pairs[p].1)).collect();
+            dir.commit_chunk(guard, k, &rows).unwrap();
+            assert!(dir.is_done(k));
+        }
+        assert!(dir.all_done());
+        assert_eq!(dir.stats.claimed, 3);
+        assert_eq!(dir.stats.reclaimed, 0);
+
+        let merged = dir.collect().unwrap();
+        assert_eq!(merged.rows.len(), 5);
+        let out = root.join("merged.sink");
+        dir.merge_to(&out, &merged).unwrap();
+        // The merged file is itself a valid sink with every chunk done.
+        let state = parse_sink(&out, &header).unwrap();
+        assert_eq!(state.done.len(), 3);
+        assert_eq!(state.rows.len(), 5);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn done_chunks_are_not_reclaimable_and_peers_see_them() {
+        let root = temp_claim_dir("peers");
+        let header = test_header(2);
+        let mut a = ClaimDir::open(&cfg(&root, "alpha"), &header, 4).unwrap();
+        let guard = a.try_claim(0).unwrap().expect("claim chunk 0");
+        a.commit_chunk(guard, 0, &[row(0, 0, 1), row(0, 0, 2)]).unwrap();
+
+        let mut b = ClaimDir::open(&cfg(&root, "beta"), &header, 4).unwrap();
+        assert!(b.try_claim(0).unwrap().is_none(), "done chunk must not be claimable");
+        let guard = b.try_claim(1).unwrap().expect("open chunk claimable");
+        b.commit_chunk(guard, 1, &[row(1, 0, 3), row(1, 1, 2)]).unwrap();
+        assert!(a.all_done() && b.all_done());
+
+        // Both workers' merges agree bit for bit.
+        let out_a = root.join("a.sink");
+        let out_b = root.join("b.sink");
+        let ma = a.collect().unwrap();
+        let mb = b.collect().unwrap();
+        a.merge_to(&out_a, &ma).unwrap();
+        b.merge_to(&out_b, &mb).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&out_a).unwrap(),
+            std::fs::read_to_string(&out_b).unwrap()
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn live_lease_blocks_claiming() {
+        let root = temp_claim_dir("live");
+        let header = test_header(1);
+        let mut a = ClaimDir::open(&cfg(&root, "alpha"), &header, 1).unwrap();
+        let guard = a.try_claim(0).unwrap().expect("claim");
+        let mut b = ClaimDir::open(&cfg(&root, "beta"), &header, 1).unwrap();
+        assert!(b.try_claim(0).unwrap().is_none(), "live lease must block");
+        assert_eq!(b.stats.lease_expired, 0);
+        drop(guard);
+        // Released (not expired): now claimable.
+        assert!(b.try_claim(0).unwrap().is_some());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn expired_lease_is_reclaimed() {
+        let root = temp_claim_dir("expired");
+        let header = test_header(1);
+        // Fabricate a dead worker's claim: a bare file nobody renews.
+        std::fs::create_dir_all(root.join("claims")).unwrap();
+        std::fs::write(root.join("claims/chunk-0.claim"), "worker=ghost pid=0 chunk=0 beat=0\n")
+            .unwrap();
+        let mut c = cfg(&root, "alpha");
+        c.lease_ms = 0; // every lease is instantly expired
+        let mut dir = ClaimDir::open(&c, &header, 1).unwrap();
+        let guard = dir.try_claim(0).unwrap().expect("reclaim then claim");
+        assert_eq!(dir.stats.lease_expired, 1);
+        assert_eq!(dir.stats.reclaimed, 1);
+        assert_eq!(dir.stats.claimed, 1);
+        dir.commit_chunk(guard, 0, &[row(0, 0, 1)]).unwrap();
+        assert!(dir.all_done());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn heartbeat_renews_the_lease_and_release_removes_the_claim() {
+        let root = temp_claim_dir("heartbeat");
+        let header = test_header(1);
+        let mut c = cfg(&root, "alpha");
+        c.lease_ms = 40; // heartbeat every 10ms
+        let mut dir = ClaimDir::open(&c, &header, 1).unwrap();
+        let guard = dir.try_claim(0).unwrap().expect("claim");
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while guard.beats() < 2 {
+            assert!(std::time::Instant::now() < deadline, "heartbeat never fired");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Poll for the renewed holder line: the in-place rewrite is
+        // truncate-then-write, so a single read may catch it torn (the
+        // protocol never reads claim content — mtime is the lease
+        // clock — but this test does).
+        let claim = root.join("claims/chunk-0.claim");
+        loop {
+            assert!(std::time::Instant::now() < deadline, "renewed holder line never appeared");
+            let content = std::fs::read_to_string(&claim).unwrap();
+            if content.contains("worker=alpha") && content.contains("beat=") {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        drop(guard);
+        assert!(!claim.exists(), "drop must release the claim");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn usurped_claim_stops_the_heartbeat_quietly() {
+        let root = temp_claim_dir("usurped");
+        let header = test_header(1);
+        let mut c = cfg(&root, "alpha");
+        c.lease_ms = 40;
+        let mut dir = ClaimDir::open(&c, &header, 1).unwrap();
+        let guard = dir.try_claim(0).unwrap().expect("claim");
+        let claim = root.join("claims/chunk-0.claim");
+        std::fs::remove_file(&claim).unwrap(); // simulate a reclaimer
+        drop(guard); // must not panic or recreate the file
+        assert!(!claim.exists());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn meta_mismatch_is_refused() {
+        let root = temp_claim_dir("meta");
+        let _a = ClaimDir::open(&cfg(&root, "alpha"), &test_header(2), 4).unwrap();
+        // Same run (even with different simd/numerics tokens) → fine.
+        let resumed = test_header(2).replace("simd=scalar", "simd=avx2");
+        assert!(ClaimDir::open(&cfg(&root, "beta"), &resumed, 4).is_ok());
+        // Different solver/config → refused descriptively.
+        let other = "# spargw-sink v1 solver=other n=4 shards=2 config=0000000000000001";
+        let err = ClaimDir::open(&cfg(&root, "gamma"), other, 4).unwrap_err().to_string();
+        assert!(err.contains("different run"), "{err}");
+        // Different chunk layout on the same run → also refused.
+        let mut c1 = cfg(&root, "delta");
+        c1.chunk_pairs = 3;
+        let err = ClaimDir::open(&c1, &test_header(2), 4).unwrap_err().to_string();
+        assert!(err.contains("different run"), "{err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn collect_rejects_corrupt_parts_descriptively() {
+        let root = temp_claim_dir("corrupt");
+        let header = test_header(2);
+        let mut dir = ClaimDir::open(&cfg(&root, "alpha"), &header, 4).unwrap();
+        let guard = dir.try_claim(0).unwrap().expect("claim");
+        dir.commit_chunk(guard, 0, &[row(0, 0, 1), row(0, 0, 2)]).unwrap();
+        // A foreign part with a mismatched header must be refused.
+        std::fs::write(
+            root.join("parts/part-evil.sink"),
+            "# spargw-sink v1 solver=evil n=9 shards=1 config=ffffffffffffffff\n",
+        )
+        .unwrap();
+        let err = dir.collect().unwrap_err().to_string();
+        assert!(err.contains("part-evil"), "{err}");
+        assert!(err.contains("header"), "{err}");
+        // Torn tmp files are ignored (dotfiles never match part-*.sink).
+        std::fs::remove_file(root.join("parts/part-evil.sink")).unwrap();
+        std::fs::write(root.join("parts/.part-evil.tmp"), "garbage").unwrap();
+        let merged = dir.collect().unwrap();
+        assert!(merged.has_chunk(0));
+        assert!(!merged.has_chunk(1));
+        let err = dir.merge_to(&root.join("out.sink"), &merged).unwrap_err().to_string();
+        assert!(err.contains("no committed part"), "{err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn injected_faults_on_claim_paths_are_absorbed_or_surfaced() {
+        let root = temp_claim_dir("faults");
+        let header = test_header(1);
+        let mut dir = ClaimDir::open(&cfg(&root, "alpha"), &header, 1).unwrap();
+        // A single transient on the claim tmp write is retried away.
+        let guard = fault::with_fault("claim.create:1", || dir.try_claim(0))
+            .unwrap()
+            .expect("transient absorbed");
+        assert!(dir.stats.retried >= 1, "retry counter must record the absorbed fault");
+        // A persistent fault on part.publish surfaces descriptively.
+        let err = fault::with_fault("part.publish:1+", || {
+            dir.commit_chunk(guard, 0, &[row(0, 0, 1)])
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("part.publish"), "{err}");
+        assert!(err.contains("committing chunk 0"), "{err}");
+        // Recovery: the chunk is still open; a clean commit succeeds.
+        assert!(!dir.is_done(0));
+        let guard = dir.try_claim(0).unwrap().expect("reclaim after failed commit");
+        dir.commit_chunk(guard, 0, &[row(0, 0, 1)]).unwrap();
+        assert!(dir.all_done());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

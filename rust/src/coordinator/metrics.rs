@@ -1,5 +1,6 @@
 //! Latency/throughput metrics for the pairwise service.
 
+use super::claims::ClaimStats;
 use crate::gw::PhaseTimings;
 
 /// Collects per-job latencies and summarizes them, tagged with the name
@@ -22,6 +23,8 @@ pub struct MetricsRecorder {
     /// Accumulated named solve-phase seconds (insertion order preserved:
     /// the order the first report named its phases in).
     phases: Vec<(&'static str, f64)>,
+    /// Claim-protocol counters when the engine ran in claim mode.
+    claims: Option<ClaimStats>,
 }
 
 impl MetricsRecorder {
@@ -48,6 +51,18 @@ impl MetricsRecorder {
     /// `(shards executed, total shards)` when tagged by the engine.
     pub fn shards(&self) -> Option<(usize, usize)> {
         self.shards
+    }
+
+    /// Tag this recorder with the claim protocol's counters (claim-mode
+    /// Gram runs): chunks claimed/reclaimed, leases seen expired, and
+    /// transient IO failures absorbed by retry.
+    pub fn set_claims(&mut self, stats: ClaimStats) {
+        self.claims = Some(stats);
+    }
+
+    /// Claim-protocol counters when the engine ran in claim mode.
+    pub fn claims(&self) -> Option<ClaimStats> {
+        self.claims
     }
 
     /// Tag this recorder with the resolved SIMD kernel backend, so run
@@ -163,6 +178,10 @@ impl MetricsRecorder {
             Some(name) => format!("numerics={name} "),
             None => String::new(),
         };
+        let claims = match &self.claims {
+            Some(c) => format!("{} ", c.tokens()),
+            None => String::new(),
+        };
         let phases = if self.phases.is_empty() {
             String::new()
         } else {
@@ -189,7 +208,7 @@ impl MetricsRecorder {
             )
         };
         format!(
-            "{solver}{shards}{simd}{numerics}jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s{queue}{phases}",
+            "{solver}{shards}{claims}{simd}{numerics}jobs={} mean={:.4}s p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2}/s{queue}{phases}",
             self.count(),
             self.mean(),
             percentile_of_sorted(&sorted, 0.5),
@@ -363,6 +382,23 @@ mod tests {
             m.summary().contains("shards=2/3 "),
             "{}",
             m.summary()
+        );
+    }
+
+    #[test]
+    fn claim_counters_appear_in_summary() {
+        let mut m = MetricsRecorder::new();
+        m.set_solver("spar_gw");
+        m.set_shards(3, 8);
+        m.record(0.1);
+        assert_eq!(m.claims(), None);
+        assert!(!m.summary().contains("claimed="), "{}", m.summary());
+        m.set_claims(ClaimStats { claimed: 3, reclaimed: 1, lease_expired: 2, retried: 4 });
+        assert_eq!(m.claims().unwrap().reclaimed, 1);
+        let s = m.summary();
+        assert!(
+            s.contains("shards=3/8 claimed=3 reclaimed=1 lease_expired=2 retried=4 "),
+            "{s}"
         );
     }
 }

@@ -21,6 +21,10 @@
 //!   cached structures + deterministic shards + a streaming result sink
 //!   with checkpoint/resume. The native path of the service delegates
 //!   here;
+//! * [`claims`] — lease-based dynamic work claiming over a shared
+//!   `--claim-dir`: N workers cooperate on one Gram matrix, crashed
+//!   workers' chunks are reclaimed after lease expiry, and the merged
+//!   sink is bit-identical to a single-process run;
 //! * [`service`] — [`service::PairwiseGw`]: dataset in, distance matrix +
 //!   latency/throughput metrics out. The engine is selected per request
 //!   by registry name (`PairwiseConfig::solver`, any
@@ -31,6 +35,7 @@
 
 pub mod bucket;
 pub mod cache;
+pub mod claims;
 pub mod engine;
 pub mod metrics;
 pub mod scheduler;
@@ -38,6 +43,7 @@ pub mod service;
 
 pub use bucket::pad_relation;
 pub use cache::{CacheStats, LruStructureCache, StructureCache};
+pub use claims::{ClaimConfig, ClaimStats};
 pub use engine::{EngineConfig, GramResult, PairwiseEngine, SinkLock, SinkRow};
 pub use metrics::MetricsRecorder;
 pub use scheduler::{run_jobs, run_jobs_with, shard_partition};

@@ -24,6 +24,7 @@ use std::path::PathBuf;
 
 use spargw::bench::{Method, RunSettings};
 use spargw::cli::Args;
+use spargw::coordinator::claims::ClaimConfig;
 use spargw::coordinator::engine::{EngineConfig, PairwiseEngine};
 use spargw::coordinator::service::{similarity_from_distances, PairwiseConfig, PairwiseGw};
 use spargw::datasets::{self, graphsets};
@@ -51,6 +52,8 @@ USAGE:
                   [--simd auto|avx2|neon|scalar] [--numerics strict|fast]
                   [--shard I/OF | --shards N]             # deterministic sharding
                   [--out FILE] [--resume]                 # streaming sink + resume
+                  [--claim-dir DIR] [--worker-id ID]      # cooperative claiming
+                  [--lease-ms 5000] [--claim-chunk N]     # lease + chunk size
                   [--artifacts DIR | --pjrt]              # enable the PJRT path
   spargw serve    [--socket PATH]                         # default stdin/stdout
                   [--solver NAME] [--solver-opt k=v]... [--cost l1|l2]
@@ -105,6 +108,23 @@ SERVE MODE
   valid for --dataset. SIGTERM/SIGINT (or `drain`) drain gracefully:
   admission stops, in-flight requests finish, the drained counts go to
   stderr, and the process exits 0.
+
+FAULT TOLERANCE
+  --claim-dir DIR replaces static --shard/--shards with dynamic work
+  claiming: any number of spargw pairwise processes pointed at one DIR
+  (a shared filesystem works) cooperatively compute one Gram matrix.
+  Chunks of the pair set are claimed via atomic claim files, renewed by
+  a heartbeat lease (--lease-ms, default 5000), and committed to
+  per-worker part files; a crashed worker's chunks are reclaimed by the
+  survivors once its lease expires, and a restarted worker resumes from
+  the committed chunks automatically. --out then names the merged sink,
+  bit-identical to a single-process run. --worker-id defaults to
+  w<pid>; --claim-chunk sets pairs per chunk (default: automatic).
+  A sink lock left by a kill -9'd writer is detected by holder-pid
+  liveness and broken with a takeover notice. The SPARGW_FAULT
+  environment variable (point:nth[:kind], comma-separated; kinds
+  io-error, partial-write, delay, abort) deterministically injects
+  faults into the sink/lock/claim IO paths for testing.
 
 Registered solvers (spargw solvers): spar_gw spar_fgw spar_ugw egw pga_gw
 emd_gw sagrow lr_gw sgwl anchor qgw
@@ -361,18 +381,43 @@ fn parse_shard(spec: &str) -> (usize, usize) {
 }
 
 /// Engine-level options from the CLI (`--shard`, `--shards`, `--out`,
-/// `--resume`); `None` when none were given (plain service path).
+/// `--resume`, `--claim-dir` and friends); `None` when none were given
+/// (plain service path).
 fn engine_opts(args: &Args) -> Option<EngineConfig> {
     let shard = args.opt_str("shard").map(parse_shard);
     let shards = ok_or_exit(args.usize_or("shards", 0));
     let out = args.opt_str("out").map(PathBuf::from);
     let resume = args.flag("resume");
-    if shard.is_none() && shards == 0 && out.is_none() && !resume {
+    let claim_dir = args.opt_str("claim-dir").map(PathBuf::from);
+    if shard.is_none() && shards == 0 && out.is_none() && !resume && claim_dir.is_none() {
         return None;
     }
     if let (Some((_, of)), true) = (shard, shards > 0) {
         if of != shards {
             eprintln!("error: --shard I/{of} conflicts with --shards {shards}");
+            std::process::exit(2);
+        }
+    }
+    let claim = claim_dir.map(|dir| {
+        let mut c = ClaimConfig::new(dir);
+        if let Some(w) = args.opt_str("worker-id") {
+            c.worker = w.to_string();
+        }
+        c.lease_ms = ok_or_exit(args.u64_or("lease-ms", c.lease_ms));
+        c.chunk_pairs = ok_or_exit(args.usize_or("claim-chunk", c.chunk_pairs));
+        c
+    });
+    if claim.is_some() {
+        if shard.is_some() || shards > 0 {
+            eprintln!(
+                "error: --claim-dir replaces --shard/--shards (chunks are claimed dynamically)"
+            );
+            std::process::exit(2);
+        }
+        if resume {
+            eprintln!(
+                "error: --resume is implicit with --claim-dir (committed chunks always resume)"
+            );
             std::process::exit(2);
         }
     }
@@ -382,6 +427,7 @@ fn engine_opts(args: &Args) -> Option<EngineConfig> {
         sink: out,
         resume,
         use_cache: true,
+        claim,
     })
 }
 
@@ -399,9 +445,13 @@ fn cmd_pairwise(args: &Args) {
         // Sharded/checkpointed runs go straight to the Gram engine (the
         // PJRT artifact path has no shard/sink semantics).
         if artifact_dir.is_some() {
-            eprintln!("error: --shard/--shards/--out/--resume cannot be combined with the PJRT path");
+            eprintln!(
+                "error: --shard/--shards/--out/--resume/--claim-dir cannot be combined \
+                 with the PJRT path"
+            );
             std::process::exit(2);
         }
+        let is_claim = opts.claim.is_some();
         let total_shards = opts.shards;
         let engine = PairwiseEngine::new(cfg, opts);
         let g = ok_or_exit(engine.gram(&ds));
@@ -412,10 +462,16 @@ fn cmd_pairwise(args: &Args) {
             ds.mean_nodes(),
             g.solver
         );
+        // In claim mode "shards" are chunks and the total is the chunk
+        // count the claim dir was laid out with.
+        let total = if is_claim { g.shards_run + g.shards_skipped } else { total_shards };
         println!(
             "shards: run={} skipped={} of={}  pairs: computed={} resumed={}",
-            g.shards_run, g.shards_skipped, total_shards, g.computed_pairs, g.resumed_pairs
+            g.shards_run, g.shards_skipped, total, g.computed_pairs, g.resumed_pairs
         );
+        if let Some(c) = &g.claims {
+            println!("claims: {}", c.tokens());
+        }
         println!(
             "cache: structures={} hits={}  {}",
             g.cache.built,

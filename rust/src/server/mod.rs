@@ -21,6 +21,9 @@
 //!   scheduler stack as batch runs. Responses are `spargw-sink v1`
 //!   blocks: serve-mode rows are **bit-identical** to what a batch
 //!   `spargw pairwise` run writes to its sink at the same config/seed.
+//!   A panicking request is caught (`catch_unwind`), answered with an
+//!   `err` line, and the server keeps serving — one poisoned request
+//!   cannot take the process down.
 //! * **Graceful drain** ([`signal`]) — SIGTERM/SIGINT (or the `drain`
 //!   verb) stops admission, finishes everything already queued, reports
 //!   the drained counts on stderr and exits 0. No in-flight request is
@@ -35,6 +38,7 @@ pub mod protocol;
 pub mod signal;
 
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -47,7 +51,8 @@ use crate::datasets::graphsets;
 use crate::gw::core::Workspace;
 use crate::gw::solver::GwSolver;
 use crate::util::error::{Error, Result};
-use crate::{bail, ensure};
+use crate::util::fault;
+use crate::{bail, ensure, format_err};
 
 use self::admission::{AdmissionQueue, Popped, PushError};
 use self::protocol::Request;
@@ -135,7 +140,8 @@ pub struct ServeOutcome {
     pub served: usize,
     /// Requests refused at admission (`busy` or `draining`).
     pub refused: usize,
-    /// Requests that failed (unparseable or erroring execution).
+    /// Requests that failed (unparseable, erroring, or panicking
+    /// execution — a panic is isolated to its request).
     pub errors: usize,
     /// Requests that were already admitted when the drain began and were
     /// finished anyway (the no-drop guarantee, observable).
@@ -285,21 +291,33 @@ where
                 }
                 let queued = job.admitted.elapsed().as_secs_f64();
                 let wall = Instant::now();
-                let block = match execute(
-                    state,
-                    solver.as_ref(),
-                    &queue,
-                    &metrics,
-                    &job.request,
-                    &mut ws,
-                ) {
-                    Ok(payload) => {
+                // A panicking solve is isolated to its request: it
+                // becomes an `err` response and the server keeps
+                // serving. The cache lock recovers from the poisoning
+                // this can cause (see `LruStructureCache::lock`).
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    execute(state, solver.as_ref(), &queue, &metrics, &job.request, &mut ws)
+                }));
+                let block = match outcome {
+                    Ok(Ok(payload)) => {
                         state.served.fetch_add(1, Ordering::Relaxed);
                         protocol::ok_block(job.id, &payload)
                     }
-                    Err(e) => {
+                    Ok(Err(e)) => {
                         state.errors.fetch_add(1, Ordering::Relaxed);
                         protocol::err_line(job.id, &e)
+                    }
+                    Err(payload) => {
+                        state.errors.fetch_add(1, Ordering::Relaxed);
+                        // The unwound workspace may hold partial solve
+                        // state; replace it so the bit-identity contract
+                        // holds for every later request.
+                        ws = Workspace::new();
+                        let msg = panic_message(payload.as_ref());
+                        protocol::err_line(
+                            job.id,
+                            &format_err!("request panicked: {msg}"),
+                        )
                     }
                 };
                 metrics.record(wall.elapsed().as_secs_f64());
@@ -342,6 +360,17 @@ where
     })
 }
 
+/// Best-effort text of a caught panic payload (`&str` / `String`
+/// payloads cover every `panic!` with a message; anything else is
+/// opaque and reported as such).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
 /// Execute one admitted request and return its payload lines. Compute
 /// payloads are `spargw-sink v1` blocks plus a trailing `# cache` line —
 /// `parse_sink` trusts only done-marked blocks and stops at the first
@@ -354,6 +383,10 @@ fn execute(
     request: &Request,
     ws: &mut Workspace,
 ) -> Result<Vec<String>> {
+    // Fault point for the executor's unwind isolation: `io-error` makes
+    // this request fail cleanly, `panic` exercises the catch_unwind
+    // path above.
+    fault::hit("serve.execute").map_err(|e| Error::from(e).wrap("serve executor"))?;
     match request {
         Request::Status => Ok(vec![
             format!(

@@ -1,0 +1,514 @@
+//! **Deterministic fault injection** for the engine's IO paths.
+//!
+//! Fault tolerance that is never exercised is a hope, not a property.
+//! This module compiles *named fault points* into the sink / lock /
+//! claim / lease IO paths (the full registry is [`POINTS`]) and lets a
+//! test or an operator arm exactly one deterministic failure:
+//!
+//! ```text
+//! SPARGW_FAULT=<point>:<nth>[+][:kind]
+//! ```
+//!
+//! fires at the `nth` time that point is *hit* (1-based; `nth+` keeps
+//! firing from the nth hit onward — the "permanently broken" shape that
+//! exercises retry exhaustion, while plain `nth` is a single transient
+//! blip that bounded retry must absorb). Kinds:
+//!
+//! * `io-error` (default) — the operation returns an injected
+//!   [`std::io::Error`];
+//! * `partial-write` — [`write_all`] writes a prefix of the buffer,
+//!   flushes it to disk, then fails: the torn-write shape that
+//!   checkpoint healing and tmp-then-rename commits must survive;
+//! * `delay` — a short sleep, for shaking out ordering assumptions;
+//! * `abort` — [`std::process::abort`], the kill -9 shape (for
+//!   `partial-write`-style points the prefix is flushed first, so the
+//!   surviving file is torn exactly as a real mid-write death leaves it);
+//! * `panic` — an injected panic, for exercising unwind isolation
+//!   (e.g. the serve executor's `catch_unwind`).
+//!
+//! Arming is process-global (the env var, or [`arm_global`] from tests)
+//! with a thread-local override stack ([`with_fault`]) taking
+//! precedence, so concurrent tests in one binary can each poison their
+//! own thread without cross-talk. Hit counting is per armed spec and
+//! per point — fully deterministic, no wall clock, no randomness. When
+//! nothing is armed every fault point is two relaxed atomic loads.
+//!
+//! The module also owns [`retry_io`], the bounded deterministic
+//! retry/backoff used on the claim/lease/commit paths. Retry may mask
+//! only *transient raw IO errors on idempotent operations* (exclusive
+//! creates, whole-file tmp writes, renames); it must never mask
+//! semantic validation (header/fingerprint mismatches — those are
+//! `util::error` results, and the closure deliberately only produces
+//! `std::io::Result`) and must never wrap non-idempotent in-place
+//! appends, where a blind retry after a partial write would duplicate
+//! half-written lines (the sink append path instead relies on
+//! resume-time healing of the trusted prefix).
+
+use std::cell::RefCell;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, Once, PoisonError};
+use std::time::Duration;
+
+use crate::util::error::{Error, Result};
+use crate::{bail, format_err};
+
+/// Every fault point compiled into the crate. Arming an unknown point
+/// is an error (a typo would otherwise silently test nothing), and the
+/// fault-tolerance suite iterates this registry so a new point cannot
+/// be added without coverage.
+pub const POINTS: &[&str] = &[
+    // Sharded sink path (engine.rs).
+    "sink.base",       // rewrite of the sink's trusted base
+    "sink.append",     // in-place append of a completed shard (NOT retried)
+    "lock.acquire",    // exclusive sink-lock creation
+    // Claim protocol (claims.rs).
+    "claim.create",    // atomic claim-file creation
+    "claim.heartbeat", // lease renewal rewrite (failure tolerated)
+    "claim.reclaim",   // rename of an expired claim aside
+    "claim.release",   // removal of our own claim file
+    "chunk.done",      // publish of a chunk's done marker
+    "part.write",      // write of a worker part file's tmp
+    "part.publish",    // tmp → part rename
+    "merge.write",     // write of the merged sink's tmp
+    "merge.publish",   // tmp → merged sink rename
+    // Server path (server/mod.rs).
+    "serve.execute",   // per-request solve in the serve executor
+];
+
+/// Injected failure mode. See the module docs for semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    IoError,
+    PartialWrite,
+    Delay,
+    Abort,
+    Panic,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Result<FaultKind> {
+        Ok(match s {
+            "io-error" => FaultKind::IoError,
+            "partial-write" => FaultKind::PartialWrite,
+            "delay" => FaultKind::Delay,
+            "abort" => FaultKind::Abort,
+            "panic" => FaultKind::Panic,
+            other => bail!(
+                "unknown fault kind {other:?} (valid: io-error, partial-write, \
+                 delay, abort, panic)"
+            ),
+        })
+    }
+}
+
+/// One parsed `<point>:<nth>[+][:kind]` spec.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    pub point: &'static str,
+    /// 1-based hit index at which the fault fires.
+    pub nth: u64,
+    /// `true` (`nth+`): keep firing from the nth hit onward.
+    pub persistent: bool,
+    pub kind: FaultKind,
+}
+
+impl FaultSpec {
+    /// Parse `<point>:<nth>[+][:kind]`; the point must be registered in
+    /// [`POINTS`] and `nth` must be ≥ 1.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut it = s.split(':');
+        let point_raw = it.next().unwrap_or_default();
+        let point = POINTS
+            .iter()
+            .copied()
+            .find(|p| *p == point_raw)
+            .ok_or_else(|| {
+                format_err!(
+                    "unknown fault point {point_raw:?} (registered points: {})",
+                    POINTS.join(", ")
+                )
+            })?;
+        let nth_raw = it
+            .next()
+            .ok_or_else(|| format_err!("fault spec {s:?}: missing `:<nth>`"))?;
+        let (nth_digits, persistent) = match nth_raw.strip_suffix('+') {
+            Some(d) => (d, true),
+            None => (nth_raw, false),
+        };
+        let nth: u64 = nth_digits
+            .parse()
+            .map_err(|_| format_err!("fault spec {s:?}: bad hit index {nth_raw:?}"))?;
+        if nth == 0 {
+            bail!("fault spec {s:?}: hit index is 1-based, must be ≥ 1");
+        }
+        let kind = match it.next() {
+            Some(k) => FaultKind::parse(k)?,
+            None => FaultKind::IoError,
+        };
+        if it.next().is_some() {
+            bail!("fault spec {s:?}: trailing fields (expected <point>:<nth>[+][:kind])");
+        }
+        Ok(FaultSpec { point, nth, persistent, kind })
+    }
+}
+
+/// An armed spec with its deterministic hit counter.
+struct Armed {
+    spec: FaultSpec,
+    hits: u64,
+}
+
+impl Armed {
+    /// Count one hit; report whether the fault fires on it.
+    fn strike(&mut self) -> Option<(FaultKind, u64)> {
+        self.hits += 1;
+        let fires = if self.spec.persistent {
+            self.hits >= self.spec.nth
+        } else {
+            self.hits == self.spec.nth
+        };
+        fires.then_some((self.spec.kind, self.hits))
+    }
+}
+
+static GLOBAL: Mutex<Vec<Armed>> = Mutex::new(Vec::new());
+static GLOBAL_ARMED: AtomicBool = AtomicBool::new(false);
+static LOCAL_ARMS: AtomicUsize = AtomicUsize::new(0);
+static ENV_INIT: Once = Once::new();
+
+thread_local! {
+    static LOCAL: RefCell<Vec<Armed>> = const { RefCell::new(Vec::new()) };
+}
+
+fn load_env() {
+    ENV_INIT.call_once(|| {
+        let Ok(raw) = std::env::var("SPARGW_FAULT") else { return };
+        let mut armed = Vec::new();
+        for part in raw.split(',').filter(|p| !p.trim().is_empty()) {
+            match FaultSpec::parse(part.trim()) {
+                Ok(spec) => armed.push(Armed { spec, hits: 0 }),
+                // A typoed env spec must fail loudly, not silently test
+                // nothing — but this is library code on every IO path,
+                // so scream and abort rather than unwinding from deep
+                // inside a write.
+                Err(e) => {
+                    eprintln!("spargw: invalid SPARGW_FAULT: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        if !armed.is_empty() {
+            *GLOBAL.lock().unwrap_or_else(PoisonError::into_inner) = armed;
+            GLOBAL_ARMED.store(true, Ordering::Release);
+        }
+    });
+}
+
+/// Arm a process-global fault (tests; the env var is the operator's
+/// route). Replaces any previously armed global specs and resets their
+/// hit counters.
+pub fn arm_global(spec: &str) -> Result<()> {
+    load_env();
+    let spec = FaultSpec::parse(spec)?;
+    *GLOBAL.lock().unwrap_or_else(PoisonError::into_inner) =
+        vec![Armed { spec, hits: 0 }];
+    GLOBAL_ARMED.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Disarm every process-global fault.
+pub fn disarm_global() {
+    load_env();
+    GLOBAL.lock().unwrap_or_else(PoisonError::into_inner).clear();
+    GLOBAL_ARMED.store(false, Ordering::Release);
+}
+
+/// Run `f` with a thread-local fault armed; the spec is popped when `f`
+/// returns (or unwinds). Thread-local specs shadow global ones for
+/// their point, innermost first, so parallel tests in one binary can
+/// each inject faults without cross-talk — but note the spec is only
+/// visible to *this* thread (worker-pool threads and heartbeat threads
+/// consult their own, empty, stacks; use [`arm_global`] or the env var
+/// to reach those).
+pub fn with_fault<T>(spec: &str, f: impl FnOnce() -> T) -> T {
+    let spec = FaultSpec::parse(spec).expect("with_fault: invalid spec");
+    LOCAL.with(|l| l.borrow_mut().push(Armed { spec, hits: 0 }));
+    LOCAL_ARMS.fetch_add(1, Ordering::Release);
+    struct Pop;
+    impl Drop for Pop {
+        fn drop(&mut self) {
+            LOCAL.with(|l| l.borrow_mut().pop());
+            LOCAL_ARMS.fetch_sub(1, Ordering::Release);
+        }
+    }
+    let _pop = Pop;
+    f()
+}
+
+/// Consult the armed specs for `point`: the innermost thread-local spec
+/// naming the point owns it; otherwise the global spec does. Returns
+/// the firing kind (and the hit ordinal) when the fault fires now.
+fn consult(point: &str) -> Option<(FaultKind, u64)> {
+    if LOCAL_ARMS.load(Ordering::Acquire) != 0 {
+        let local = LOCAL.with(|l| {
+            let mut l = l.borrow_mut();
+            l.iter_mut()
+                .rev()
+                .find(|a| a.spec.point == point)
+                .map(Armed::strike)
+        });
+        if let Some(outcome) = local {
+            return outcome;
+        }
+    }
+    if GLOBAL_ARMED.load(Ordering::Acquire) {
+        let mut g = GLOBAL.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(a) = g.iter_mut().find(|a| a.spec.point == point) {
+            return a.strike();
+        }
+    }
+    None
+}
+
+fn injected_error(point: &str, hit: u64, what: &str) -> std::io::Error {
+    std::io::Error::other(format!("injected fault `{point}` ({what}, hit {hit})"))
+}
+
+/// A named fault point with no buffer to tear: fires `io-error` /
+/// `delay` / `abort` / `panic` (a `partial-write` kind degrades to
+/// `io-error` here). Near-free when nothing is armed.
+pub fn hit(point: &'static str) -> std::io::Result<()> {
+    load_env();
+    match consult(point) {
+        None => Ok(()),
+        Some((FaultKind::IoError | FaultKind::PartialWrite, n)) => {
+            Err(injected_error(point, n, "io-error"))
+        }
+        Some((FaultKind::Delay, _)) => {
+            std::thread::sleep(Duration::from_millis(25));
+            Ok(())
+        }
+        Some((FaultKind::Abort, n)) => {
+            eprintln!("spargw: injected fault `{point}` (abort, hit {n})");
+            std::process::abort();
+        }
+        Some((FaultKind::Panic, n)) => {
+            panic!("injected fault `{point}` (panic, hit {n})")
+        }
+    }
+}
+
+/// A named fault point wrapping a buffer write: `partial-write` writes
+/// (and flushes) a prefix before failing — the torn-write shape — and
+/// `abort` flushes the prefix before dying, so the surviving file looks
+/// exactly as a mid-write kill leaves it. Other kinds behave as in
+/// [`hit`]. With nothing armed this is `w.write_all(buf)`.
+pub fn write_all(
+    point: &'static str,
+    w: &mut impl Write,
+    buf: &[u8],
+) -> std::io::Result<()> {
+    load_env();
+    match consult(point) {
+        None => w.write_all(buf),
+        Some((FaultKind::IoError, n)) => Err(injected_error(point, n, "io-error")),
+        Some((FaultKind::PartialWrite, n)) => {
+            w.write_all(&buf[..buf.len() / 2])?;
+            w.flush()?;
+            Err(injected_error(point, n, "partial-write"))
+        }
+        Some((FaultKind::Delay, _)) => {
+            std::thread::sleep(Duration::from_millis(25));
+            w.write_all(buf)
+        }
+        Some((FaultKind::Abort, n)) => {
+            let _ = w.write_all(&buf[..buf.len() / 2]);
+            let _ = w.flush();
+            eprintln!("spargw: injected fault `{point}` (abort, hit {n})");
+            std::process::abort();
+        }
+        Some((FaultKind::Panic, n)) => {
+            panic!("injected fault `{point}` (panic, hit {n})")
+        }
+    }
+}
+
+/// Bounded deterministic retry for *idempotent* raw-IO operations on
+/// the claim/lease/commit paths: up to [`RETRY_ATTEMPTS`] attempts with
+/// a fixed `2ms × attempt` backoff (no jitter, no wall-clock reads —
+/// behavior is a pure function of the error sequence). Every absorbed
+/// failure increments `retried`, which the engine surfaces through
+/// `MetricsRecorder`. The closure returns `std::io::Result` by design:
+/// semantic validation (header or fingerprint mismatches) lives in
+/// `util::error` results and *cannot* be routed through here, so retry
+/// can never mask a wrong-config merge.
+pub fn retry_io<T>(
+    what: &str,
+    retried: &mut u64,
+    mut op: impl FnMut() -> std::io::Result<T>,
+) -> Result<T> {
+    let mut attempt: u32 = 1;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(_) if attempt < RETRY_ATTEMPTS => {
+                *retried += 1;
+                std::thread::sleep(Duration::from_millis(2 * attempt as u64));
+                attempt += 1;
+            }
+            Err(e) => {
+                return Err(Error::from(e)
+                    .wrap(format!("{what} (failed after {RETRY_ATTEMPTS} attempts)")))
+            }
+        }
+    }
+}
+
+/// Attempts [`retry_io`] makes before giving up.
+pub const RETRY_ATTEMPTS: u32 = 3;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing() {
+        let s = FaultSpec::parse("claim.create:3").unwrap();
+        assert_eq!(s.point, "claim.create");
+        assert_eq!(s.nth, 3);
+        assert!(!s.persistent);
+        assert_eq!(s.kind, FaultKind::IoError);
+
+        let s = FaultSpec::parse("part.write:2+:partial-write").unwrap();
+        assert!(s.persistent);
+        assert_eq!(s.kind, FaultKind::PartialWrite);
+
+        for bad in [
+            "nonsense.point:1",
+            "claim.create",
+            "claim.create:0",
+            "claim.create:x",
+            "claim.create:1:weird",
+            "claim.create:1:abort:extra",
+        ] {
+            let msg = format!("{}", FaultSpec::parse(bad).unwrap_err());
+            assert!(!msg.is_empty(), "{bad}");
+        }
+        // The registry is what parsing validates against.
+        for p in POINTS {
+            FaultSpec::parse(&format!("{p}:1")).unwrap();
+        }
+    }
+
+    #[test]
+    fn transient_fault_fires_exactly_on_nth_hit() {
+        with_fault("claim.create:2", || {
+            assert!(hit("claim.create").is_ok(), "hit 1 must pass");
+            let e = hit("claim.create").unwrap_err();
+            assert!(e.to_string().contains("injected fault `claim.create`"), "{e}");
+            assert!(hit("claim.create").is_ok(), "transient: hit 3 must pass");
+            // Other points are untouched.
+            assert!(hit("claim.release").is_ok());
+        });
+        // Disarmed once the closure returns.
+        assert!(hit("claim.create").is_ok());
+    }
+
+    #[test]
+    fn persistent_fault_fires_from_nth_onward() {
+        with_fault("chunk.done:2+", || {
+            assert!(hit("chunk.done").is_ok());
+            assert!(hit("chunk.done").is_err());
+            assert!(hit("chunk.done").is_err());
+        });
+    }
+
+    #[test]
+    fn inner_local_spec_shadows_outer_for_its_point() {
+        with_fault("claim.create:1", || {
+            with_fault("claim.create:99", || {
+                // Inner spec owns the point: hit 1 of 99 → no fire, and
+                // the outer spec's counter never moves.
+                assert!(hit("claim.create").is_ok());
+            });
+            assert!(hit("claim.create").is_err(), "outer spec still at hit 1");
+        });
+    }
+
+    #[test]
+    fn partial_write_flushes_a_prefix_then_fails() {
+        let mut buf: Vec<u8> = Vec::new();
+        with_fault("part.write:1:partial-write", || {
+            let e = write_all("part.write", &mut buf, b"0123456789").unwrap_err();
+            assert!(e.to_string().contains("partial-write"), "{e}");
+        });
+        assert_eq!(buf, b"01234", "exactly the prefix must have been written");
+        // Unarmed, write_all is a plain write.
+        write_all("part.write", &mut buf, b"ab").unwrap();
+        assert_eq!(buf, b"01234ab");
+    }
+
+    #[test]
+    fn delay_kind_still_succeeds() {
+        with_fault("claim.heartbeat:1:delay", || {
+            assert!(hit("claim.heartbeat").is_ok());
+        });
+    }
+
+    #[test]
+    fn retry_absorbs_transients_and_reports_exhaustion() {
+        // One transient blip: absorbed, retried counter records it.
+        let mut retried = 0u64;
+        let v = with_fault("claim.create:1", || {
+            retry_io("creating claim", &mut retried, || {
+                hit("claim.create").map(|_| 7)
+            })
+        })
+        .unwrap();
+        assert_eq!(v, 7);
+        assert_eq!(retried, 1);
+
+        // A persistent failure exhausts the attempts with a descriptive
+        // error naming the operation.
+        let mut retried = 0u64;
+        let err = with_fault("claim.create:1+", || {
+            retry_io("creating claim", &mut retried, || {
+                hit("claim.create").map(|_| ())
+            })
+        })
+        .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("creating claim"), "{msg}");
+        assert!(msg.contains("after 3 attempts"), "{msg}");
+        assert_eq!(retried, RETRY_ATTEMPTS as u64 - 1);
+    }
+
+    #[test]
+    fn global_arming_reaches_other_threads_and_disarms() {
+        // Uses the serve.execute point, which no other lib test hits
+        // concurrently — global specs are process-wide by design.
+        arm_global("serve.execute:1:io-error").unwrap();
+        let res = std::thread::spawn(|| hit("serve.execute"))
+            .join()
+            .unwrap();
+        assert!(res.is_err(), "global spec must reach spawned threads");
+        disarm_global();
+        assert!(hit("serve.execute").is_ok());
+    }
+
+    #[test]
+    fn injected_panic_kind_unwinds_with_point_name() {
+        let payload = std::panic::catch_unwind(|| {
+            with_fault("serve.execute:1:panic", || {
+                let _ = hit("serve.execute");
+            })
+        })
+        .unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("serve.execute"), "{msg}");
+    }
+}

@@ -1,8 +1,10 @@
 //! Small shared utilities: vector helpers, simplex/normalization helpers,
-//! error plumbing, CSV emission, and wall-clock timing.
+//! error plumbing, CSV emission, deterministic fault injection, and
+//! wall-clock timing.
 
 pub mod csv;
 pub mod error;
+pub mod fault;
 pub mod timer;
 
 /// Normalize a non-negative vector to the probability simplex.

@@ -172,6 +172,59 @@ fn serve_rounds_are_bit_identical_to_batch_and_second_round_is_warm() {
 }
 
 #[test]
+fn panicking_request_is_isolated_and_the_server_keeps_serving() {
+    let cfg = config();
+    let state = Arc::new(ServerState::new(cfg.clone(), ServeOptions::default()));
+    let (client, server_io) = UnixStream::pair().expect("socketpair");
+    let read_half = server_io.try_clone().expect("clone server stream");
+    let handle = {
+        let state = Arc::clone(&state);
+        std::thread::spawn(move || {
+            // The executor runs on the serve_connection caller's thread,
+            // so a thread-local fault armed here reaches it: the first
+            // request panics mid-execution.
+            spargw::util::fault::with_fault("serve.execute:1:panic", || {
+                serve_connection(&state, read_half, server_io).expect("serve connection")
+            })
+        })
+    };
+    let mut resp = BufReader::new(client.try_clone().expect("clone client"));
+
+    // Request 1 hits the injected panic: an `err` response naming the
+    // panic, not a dead connection.
+    send(&client, "pairwise synthetic:4");
+    let (head1, _) = read_block(&mut resp);
+    assert!(head1.starts_with("err 1 "), "{head1}");
+    assert!(head1.contains("panicked"), "{head1}");
+    assert!(head1.contains("serve.execute"), "{head1}");
+
+    // Request 2 is served normally on the same connection.
+    send(&client, "pairwise synthetic:4");
+    let (head2, block2) = read_block(&mut resp);
+    assert!(head2.starts_with("ok 2 lines="), "{head2}");
+    client.shutdown(Shutdown::Write).expect("shutdown write");
+    let outcome = handle.join().expect("serve thread");
+    assert_eq!(outcome.served, 1);
+    assert_eq!(outcome.errors, 1);
+    assert_eq!(outcome.refused, 0);
+
+    // The post-panic response is bit-identical to a batch Gram run: the
+    // replaced workspace and recovered cache leak nothing into results.
+    let ds = graphsets::by_name("synthetic:4", SEED).expect("dataset");
+    let eng = PairwiseEngine::new(cfg, EngineConfig::default());
+    let g = eng.gram(&ds).expect("batch gram");
+    let rows = pair_rows(&block2);
+    assert_eq!(rows.len(), 6, "4 graphs give 6 upper-triangular pairs");
+    for (i, j, bits) in rows {
+        assert_eq!(
+            bits,
+            g.distances[(i, j)].to_bits(),
+            "post-panic row ({i},{j}) diverged from batch"
+        );
+    }
+}
+
+#[test]
 fn drain_finishes_in_flight_and_refuses_new_requests() {
     let state = Arc::new(ServerState::new(config(), ServeOptions::default()));
     let (client, handle) = spawn_serve(&state);
